@@ -1,0 +1,53 @@
+//! Design-space exploration: the paper stresses that array size, head
+//! parallelism, and clock are design-time tunables (§III-D); this
+//! example sweeps them and prints the latency/area/power Pareto table
+//! for RoBERTa-base — the study an adopter would run before taping out.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use swifttron::model::Geometry;
+use swifttron::sim::{simulate_encoder, HwConfig};
+use swifttron::synthesis::synthesis_report;
+use swifttron::util::bench::Table;
+
+fn main() {
+    let geo = Geometry::preset("roberta_base").unwrap();
+    let mut table = Table::new(&[
+        "array", "heads", "latency ms", "area mm^2", "power W", "lat*area (norm)",
+    ]);
+    let paper = HwConfig::paper();
+    let base_cost = {
+        let r = simulate_encoder(&paper, &geo);
+        let s = synthesis_report(&paper, &geo);
+        r.ms(&paper) * s.area_mm2
+    };
+
+    for (rows, cols) in [(64, 256), (128, 384), (128, 768), (256, 768), (256, 1536)] {
+        for ph in [4, 12] {
+            let cfg = HwConfig {
+                array_rows: rows,
+                array_cols: cols,
+                parallel_heads: ph,
+                softmax_units: rows,
+                layernorm_lanes: cols,
+                ..paper
+            };
+            if cfg.validate(&geo).is_err() {
+                continue;
+            }
+            let sim = simulate_encoder(&cfg, &geo);
+            let synth = synthesis_report(&cfg, &geo);
+            let ms = sim.ms(&cfg);
+            table.row(&[
+                format!("{rows}x{cols}"),
+                format!("{ph}"),
+                format!("{ms:.2}"),
+                format!("{:.0}", synth.area_mm2),
+                format!("{:.1}", synth.power_w),
+                format!("{:.2}", ms * synth.area_mm2 / base_cost),
+            ]);
+        }
+    }
+    table.print("SwiftTron design space — RoBERTa-base (paper config = 256x768/12)");
+    println!("\nnote: the paper's §IV-B instance is the 256x768, 12-head row.");
+}

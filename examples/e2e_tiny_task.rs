@@ -1,0 +1,78 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Replays the full pipeline on the real (synthetic-corpus) tiny task:
+//! the build step trained the model and logged the loss curve; this
+//! binary loads the AOT artifacts, classifies the 512-sequence held-out
+//! test set along BOTH datapaths (integer-only SwiftTron path via the
+//! Pallas artifact + float twin), and reports:
+//!   * training loss curve summary (from the build),
+//!   * float vs quantized accuracy (the paper's Table II accuracy claim),
+//!   * per-request PJRT wallclock and simulated accelerator latency.
+//!
+//! Run: `cargo run --release --example e2e_tiny_task`
+
+use std::time::Instant;
+use swifttron::coordinator::InferenceEngine;
+use swifttron::model::{Blob, Manifest};
+use swifttron::runtime::Engine;
+use swifttron::sim::HwConfig;
+use swifttron::util::stats::Series;
+
+fn main() -> Result<(), String> {
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let engine = Engine::cpu()?;
+    let eng = InferenceEngine::load(&manifest.dir, &engine, HwConfig::paper())?;
+    let blob = Blob::load(&manifest.blob_prefix("tiny")?)?;
+
+    // --- training loss curve (recorded at build time) ---
+    let curve = blob.f32("loss_curve")?;
+    println!("== training (build-time, {} steps) ==", curve.len());
+    for (i, w) in curve.chunks(curve.len() / 8).enumerate() {
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        println!("  steps {:>3}..{:>3}  mean loss {:.4}", i * w.len(), (i + 1) * w.len(), mean);
+    }
+
+    // --- test set, both datapaths ---
+    let toks = blob.i32("test_toks")?;
+    let labels = blob.i32("test_labels")?;
+    let m = eng.geo.m;
+    let n = labels.len();
+    let (mut correct_q, mut correct_f) = (0usize, 0usize);
+    let mut agree = 0usize;
+    let mut exec = Series::new();
+    for i in 0..n {
+        let t = &toks[i * m..(i + 1) * m];
+        let t0 = Instant::now();
+        let pred = eng.predict(t)?;
+        exec.push(t0.elapsed().as_secs_f64());
+        let f_label = eng.predict_f32(t)?;
+        correct_q += (pred.label == labels[i] as usize) as usize;
+        correct_f += (f_label == labels[i] as usize) as usize;
+        agree += (pred.label == f_label) as usize;
+    }
+    let acc_q = 100.0 * correct_q as f64 / n as f64;
+    let acc_f = 100.0 * correct_f as f64 / n as f64;
+    println!("\n== accuracy ({n} held-out sequences) ==");
+    println!("  float twin          {acc_f:.2} %");
+    println!("  integer-only (ours) {acc_q:.2} %   (delta {:+.2} pts)", acc_q - acc_f);
+    println!("  prediction agreement {:.2} %", 100.0 * agree as f64 / n as f64);
+    println!(
+        "  build-time python float accuracy: {:.2} % (cross-check)",
+        100.0 * manifest.preset("tiny")?.float_test_accuracy.unwrap_or(f64::NAN)
+    );
+
+    // --- latency ---
+    let sim_ms = eng
+        .predict(&toks[0..m])?
+        .accel_ms;
+    println!("\n== latency ==");
+    println!("  PJRT (host CPU) exec: {}", exec.summary("s"));
+    println!("  simulated SwiftTron accelerator: {sim_ms:.4} ms per inference");
+
+    // paper-shape assertion: quantization must not cost accuracy
+    if acc_q + 1.0 < acc_f {
+        return Err(format!("quantized accuracy dropped too far: {acc_q} vs {acc_f}"));
+    }
+    println!("\nE2E OK");
+    Ok(())
+}

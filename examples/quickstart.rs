@@ -1,0 +1,48 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. load the AOT-compiled integer encoder artifact (Pallas kernels,
+//!    lowered once at build time) onto the PJRT CPU client,
+//! 2. run one inference end to end (tokens -> label),
+//! 3. ask the cycle-accurate simulator + 65 nm synthesis model what the
+//!    same inference costs on the SwiftTron ASIC.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (needs `make artifacts` first)
+
+use swifttron::coordinator::InferenceEngine;
+use swifttron::model::{Geometry, Manifest};
+use swifttron::runtime::Engine;
+use swifttron::sim::{simulate_encoder, HwConfig};
+use swifttron::synthesis::synthesis_report;
+use swifttron::util::rng::Rng;
+
+fn main() -> Result<(), String> {
+    // --- numerics: PJRT execution of the integer model ---
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform()?);
+    let eng = InferenceEngine::load(&Manifest::default_dir(), &engine, HwConfig::paper())?;
+
+    let mut rng = Rng::new(42);
+    let tokens: Vec<i32> = (0..eng.geo.m).map(|_| rng.below(63) as i32).collect();
+    let pred = eng.predict(&tokens)?;
+    println!(
+        "tiny-task inference: label={} logits={:?}",
+        pred.label, pred.logits
+    );
+
+    // --- timing: the cycle-accurate SwiftTron simulator ---
+    let cfg = HwConfig::paper();
+    let geo = Geometry::preset("roberta_base").unwrap();
+    let sim = simulate_encoder(&cfg, &geo);
+    println!(
+        "\nRoBERTa-base on SwiftTron: {} cycles @ {:.0} MHz = {:.3} ms  (paper: 1.83 ms)",
+        sim.total_cycles,
+        cfg.clock_mhz(),
+        sim.ms(&cfg)
+    );
+
+    // --- cost: the 65 nm synthesis model ---
+    let synth = synthesis_report(&cfg, &geo);
+    println!("\n{}", synth.table1());
+    Ok(())
+}

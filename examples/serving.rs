@@ -1,0 +1,59 @@
+//! Serving demo: Poisson open-loop workload against the router +
+//! dynamic batcher + engine replicas; reports throughput and the
+//! latency distribution (the coordinator story of DESIGN.md §2).
+//!
+//! Run: `cargo run --release --example serving -- [requests] [rate_hz]`
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use swifttron::coordinator::{BatchPolicy, InferenceEngine, Metrics, Router};
+use swifttron::model::Manifest;
+use swifttron::runtime::Engine;
+use swifttron::sim::HwConfig;
+use swifttron::util::rng::Rng;
+
+fn main() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let rate_hz: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300.0);
+    let replicas = 3;
+
+    let dir = Manifest::default_dir();
+    let engine = Engine::cpu()?;
+    let engines: Result<Vec<_>, String> = (0..replicas)
+        .map(|_| InferenceEngine::load(&dir, &engine, HwConfig::paper()).map(Arc::new))
+        .collect();
+    let engines = engines?;
+    let m = engines[0].geo.m;
+    let metrics = Arc::new(Metrics::new());
+    let router = Arc::new(Router::start(
+        engines,
+        BatchPolicy::default(),
+        Arc::clone(&metrics),
+    ));
+
+    println!("open-loop Poisson workload: {n_requests} requests at {rate_hz} req/s, {replicas} replicas");
+    let mut rng = Rng::new(2024);
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let tokens: Vec<i32> = (0..m).map(|_| rng.below(63) as i32).collect();
+        let (tx, rx) = channel();
+        router.submit(tokens, tx);
+        receivers.push(rx);
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate_hz)));
+    }
+    let mut errors = 0;
+    for rx in receivers {
+        if rx.recv().map(|r| r.error.is_some()).unwrap_or(true) {
+            errors += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\ncompleted in {wall:.2}s  ({:.1} req/s sustained, {errors} errors)", n_requests as f64 / wall);
+    println!("{}", metrics.report());
+
+    let r = Arc::try_unwrap(router).ok().expect("router still shared");
+    r.shutdown();
+    Ok(())
+}

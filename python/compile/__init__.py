@@ -1,0 +1,10 @@
+"""SwiftTron compile path (build-time only; never on the request path).
+
+Enables 64-bit mode globally: the integer spec uses INT64 full-width
+products (hardware multiplier outputs) which jax silently truncates to 32
+bits otherwise.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,319 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + weight/scale blobs.
+
+Runs ONCE at build time (``make artifacts``).  Outputs, all under
+``artifacts/``:
+
+  tiny_int8.hlo.txt       integer encoder, trained tiny-task weights BAKED
+  tiny_f32.hlo.txt        float twin of the same trained model (baseline)
+  roberta_base_int8_layer.hlo.txt
+                          one integer encoder layer, weights as ARGUMENTS
+                          (unified design-time constants; the rust runtime
+                          loops it 12x with per-layer weight buffers)
+  tiny_task.{bin,json}    embeddings, head, test set for the e2e example
+  roberta_base_weights.{bin,json}   stacked per-layer integer weights
+  golden.{bin,json}       cross-language golden vectors for rust `quant`
+  manifest.json           geometry + every design-time constant
+
+Interchange is HLO *text* (never .serialize(): jax>=0.5 emits 64-bit ids
+the crate's xla_extension 0.5.1 rejects; the text parser reassigns them).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import pipeline as P
+from . import train_tiny as T
+from .blobs import BlobWriter
+from .intops import Dyadic, GeluConsts, LayerNormConsts, SoftmaxConsts
+from .model import GEOMETRIES, Geometry
+from .quantize import int8_scale, quantize_bias, quantize_tensor
+
+WEIGHT_KEYS = [
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "w1", "b1", "w2", "b2", "gamma1", "beta1", "gamma2", "beta2",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # "{...}", which the 0.5.1-era text parser silently zero-fills —
+    # baked weights then execute as garbage (found the hard way).
+    return comp.as_hlo_text(True)
+
+
+def lower_tiny(qm: P.QuantModel, geo: Geometry, out_dir: str,
+               tiny_model: T.TinyModel, log=print) -> dict:
+    """Baked-weights artifacts for the trained tiny model (int8 + f32)."""
+    layers = qm.layers
+
+    def int_fwd(q_x):
+        return (M.quant_encoder(q_x, layers, geo, use_pallas=True),)
+
+    spec = jax.ShapeDtypeStruct((geo.m, geo.d), jnp.int32)
+    t0 = time.time()
+    hlo = to_hlo_text(jax.jit(int_fwd).lower(spec))
+    path_i8 = os.path.join(out_dir, "tiny_int8.hlo.txt")
+    with open(path_i8, "w") as f:
+        f.write(hlo)
+    log(f"  tiny_int8.hlo.txt        {len(hlo)/1e6:6.2f} MB  ({time.time()-t0:.1f}s)")
+
+    fweights = [{k: jnp.asarray(v) for k, v in w.items()} for w in tiny_model.encoder]
+
+    def f32_fwd(x):
+        h = x
+        for w in fweights:
+            # tanh-GELU: the exact-erf opcode postdates xla_extension 0.5.1
+            h = M.float_encoder_layer(h, w, geo, gelu=M.f_gelu_tanh)
+        return (h.astype(jnp.float32),)
+
+    fspec = jax.ShapeDtypeStruct((geo.m, geo.d), jnp.float32)
+    t0 = time.time()
+    hlo = to_hlo_text(jax.jit(f32_fwd).lower(fspec))
+    path_f32 = os.path.join(out_dir, "tiny_f32.hlo.txt")
+    with open(path_f32, "w") as f:
+        f.write(hlo)
+    log(f"  tiny_f32.hlo.txt         {len(hlo)/1e6:6.2f} MB  ({time.time()-t0:.1f}s)")
+    return {"int8": "tiny_int8.hlo.txt", "f32": "tiny_f32.hlo.txt"}
+
+
+def lower_shaped_layer(qm: P.QuantModel, geo: Geometry, name: str,
+                       out_dir: str, log=print) -> str:
+    """One encoder layer with weights as arguments (unified constants)."""
+    p0 = qm.layers[0]
+
+    def layer_fwd(q_x, *ws):
+        named = dict(zip(WEIGHT_KEYS, ws))
+        p = dataclasses.replace(p0, **named)
+        return (M.quant_encoder_layer(q_x, p, geo, use_pallas=True),)
+
+    specs = [jax.ShapeDtypeStruct((geo.m, geo.d), jnp.int32)]
+    for k in WEIGHT_KEYS:
+        specs.append(jax.ShapeDtypeStruct(np.asarray(getattr(p0, k)).shape, jnp.int32))
+    t0 = time.time()
+    hlo = to_hlo_text(jax.jit(layer_fwd).lower(*specs))
+    fname = f"{name}_int8_layer.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(hlo)
+    log(f"  {fname:24s} {len(hlo)/1e6:6.2f} MB  ({time.time()-t0:.1f}s)")
+    return fname
+
+
+# --- manifest helpers -----------------------------------------------------------
+
+def dy_json(dy: Dyadic) -> dict:
+    return {"b": dy.b, "c": dy.c}
+
+
+def layer_json(p) -> dict:
+    return {
+        "dy_q": dy_json(p.dy_q), "dy_k": dy_json(p.dy_k), "dy_v": dy_json(p.dy_v),
+        "dy_scale": dy_json(p.dy_scale), "dy_ctx": dy_json(p.dy_ctx),
+        "dy_res1": dy_json(p.dy_res1), "dy_ln1": dy_json(p.dy_ln1),
+        "dy_gelu": dy_json(p.dy_gelu), "dy_res2": dy_json(p.dy_res2),
+        "dy_ln2": dy_json(p.dy_ln2),
+        "softmax": {"s_in": p.sm.s_in, "q_ln2": p.sm.q_ln2,
+                    "q_b": p.sm.q_b, "q_c": p.sm.q_c},
+        "gelu": {"s_in": p.gelu.s_in, "q_b": p.gelu.q_b,
+                 "q_c": p.gelu.q_c, "q_one": p.gelu.q_one},
+        "ln1": {"s_in": p.ln1.s_in, "s_gamma": p.ln1.s_gamma, "d": p.ln1.d},
+        "ln2": {"s_in": p.ln2.s_in, "s_gamma": p.ln2.s_gamma, "d": p.ln2.d},
+        "scales": {
+            "s_x": p.cal.attn.s_x, "s_q8": p.cal.attn.s_q8,
+            "s_k8": p.cal.attn.s_k8, "s_v8": p.cal.attn.s_v8,
+            "s_ctx": p.cal.attn.s_ctx, "s_x2": p.cal.ffn.s_x2,
+            "s_h": p.cal.ffn.s_h, "s_out": p.cal.ffn.s_out,
+        },
+    }
+
+
+def geo_json(geo: Geometry) -> dict:
+    return {"d": geo.d, "heads": geo.heads, "m": geo.m,
+            "d_ff": geo.d_ff, "layers": geo.layers}
+
+
+# --- golden vectors for the rust quant module ------------------------------------
+
+def write_golden(out_dir: str, log=print) -> None:
+    """Cross-language contract: random inputs + oracle outputs for every
+    integer primitive.  The rust `quant` tests replay these bit-exactly."""
+    from .kernels import ref
+    from . import intops
+
+    rng = np.random.default_rng(2024)
+    w = BlobWriter()
+    meta: dict = {}
+
+    # requantize
+    dy = Dyadic.approximate(0.01711)
+    q = rng.integers(-(2**26), 2**26, (64,)).astype(np.int64)
+    w.add("requant_in", q, "i64")
+    w.add("requant_out", ref.np_requantize(q, dy.b, dy.c).astype(np.int32), "i32")
+    meta["requant"] = dy_json(dy)
+
+    # softmax
+    sm = SoftmaxConsts.design(0.0121)
+    qs = rng.integers(-400, 400, (16, 32)).astype(np.int32)
+    w.add("softmax_in", qs, "i32")
+    w.add("softmax_out", ref.np_i_softmax(qs, sm), "i32")
+    meta["softmax"] = {"s_in": sm.s_in, "q_ln2": sm.q_ln2, "q_b": sm.q_b, "q_c": sm.q_c}
+
+    # gelu
+    gc = GeluConsts.design(0.0177)
+    qg = rng.integers(-500, 500, (128,)).astype(np.int32)
+    w.add("gelu_in", qg, "i32")
+    w.add("gelu_out", ref.np_i_gelu(qg, gc).astype(np.int64), "i64")
+    meta["gelu"] = {"s_in": gc.s_in, "q_b": gc.q_b, "q_c": gc.q_c, "q_one": gc.q_one}
+
+    # layernorm
+    d = 48
+    lc = LayerNormConsts(s_in=0.013, s_gamma=0.009, d=d)
+    ql = rng.integers(-3000, 3000, (8, d)).astype(np.int32)
+    g = rng.integers(-127, 128, (d,)).astype(np.int32)
+    b = rng.integers(-4000, 4000, (d,)).astype(np.int32)
+    w.add("ln_in", ql, "i32")
+    w.add("ln_gamma", g, "i32")
+    w.add("ln_beta", b, "i32")
+    w.add("ln_out", ref.np_i_layernorm(ql, g, b, lc), "i32")
+    meta["layernorm"] = {"s_in": lc.s_in, "s_gamma": lc.s_gamma, "d": d}
+
+    # isqrt (+ iteration counts: the simulator's timing contract)
+    ns = np.concatenate([
+        np.array([0, 1, 2, 3, 4, 255, 256, (1 << 31) - 1], dtype=np.int64),
+        rng.integers(0, 1 << 50, 56).astype(np.int64),
+    ])
+    vals, iters = zip(*[ref.np_i_sqrt_scalar(int(n)) for n in ns])
+    w.add("isqrt_in", ns, "i64")
+    w.add("isqrt_out", np.asarray(vals, dtype=np.int64), "i64")
+    w.add("isqrt_iters", np.asarray(iters, dtype=np.int32), "i32")
+
+    # i_exp
+    qe = -rng.integers(0, 3000, (64,)).astype(np.int64)
+    w.add("iexp_in", qe, "i64")
+    w.add("iexp_out", np.asarray(
+        [ref.np_i_exp_scalar(int(x), sm) for x in qe], dtype=np.int64), "i64")
+
+    w.write(os.path.join(out_dir, "golden"))
+    with open(os.path.join(out_dir, "golden_consts.json"), "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    log("  golden.{bin,json}        written")
+
+
+# --- main build -------------------------------------------------------------------
+
+def build(out_dir: str, train_steps: int = 500, log=print) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"presets": {}}
+
+    # ---------- tiny: trained, baked, end-to-end ----------
+    geo = GEOMETRIES["tiny"]
+    log(f"[aot] training tiny model ({train_steps} steps) ...")
+    tiny, losses = T.train(geo, steps=train_steps, lr=1e-3, log_every=100, log=log)
+
+    rng = np.random.default_rng(5)
+    ctoks, _ = T.make_dataset(rng, 32, geo.m)
+    calib = np.stack([tiny.emb[t] + tiny.pos for t in ctoks])
+    qm = P.calibrate_and_design(tiny.encoder, geo, calib)
+
+    log("[aot] lowering tiny artifacts ...")
+    paths = lower_tiny(qm, geo, out_dir, tiny, log=log)
+
+    # head + embeddings + test set blob
+    s_wh = int8_scale(np.abs(tiny.w_head).max())
+    q_wh = quantize_tensor(tiny.w_head, s_wh)
+    q_bh = quantize_bias(tiny.b_head, qm.s_out * s_wh)
+    test_toks, test_labels = T.make_dataset(np.random.default_rng(99), 512, geo.m)
+
+    bw = BlobWriter()
+    bw.add("emb", tiny.emb.astype(np.float32), "f32")
+    bw.add("pos", tiny.pos.astype(np.float32), "f32")
+    bw.add("q_w_head", q_wh, "i32")
+    bw.add("q_b_head", q_bh, "i32")
+    bw.add("f_w_head", tiny.w_head.astype(np.float32), "f32")
+    bw.add("f_b_head", tiny.b_head.astype(np.float32), "f32")
+    bw.add("test_toks", test_toks, "i32")
+    bw.add("test_labels", test_labels, "i32")
+    bw.add("loss_curve", np.asarray(losses, dtype=np.float32), "f32")
+    bw.write(os.path.join(out_dir, "tiny_task"))
+    log("  tiny_task.{bin,json}     written")
+
+    manifest["presets"]["tiny"] = {
+        "geometry": geo_json(geo),
+        "artifacts": paths,
+        "weights_blob": "tiny_task",
+        "s_in": qm.s_in,
+        "s_out": qm.s_out,
+        "s_w_head": s_wh,
+        "vocab": T.VOCAB,
+        "key_token": T.KEY_TOKEN,
+        "layers": [layer_json(p) for p in qm.layers],
+        "float_test_accuracy": T.accuracy(tiny, test_toks, test_labels),
+    }
+
+    # ---------- roberta_base-shaped: unified layer artifact ----------
+    geo_rb = GEOMETRIES["roberta_base"]
+    log("[aot] building roberta_base-shaped layer (random weights, unified scales) ...")
+    weights_rb = M.init_encoder_weights(11, geo_rb)
+    rngc = np.random.default_rng(13)
+    calib_rb = rngc.normal(0, 1.0, (2, geo_rb.m, geo_rb.d))
+    qm_rb = P.calibrate_and_design(weights_rb, geo_rb, calib_rb, unify=True)
+    fname = lower_shaped_layer(qm_rb, geo_rb, "roberta_base", out_dir, log=log)
+
+    bw = BlobWriter()
+    for i, p in enumerate(qm_rb.layers):
+        for k in WEIGHT_KEYS:
+            arr = np.asarray(getattr(p, k))
+            # INT8-valued tensors (weights, gamma) store as i8; INT32
+            # accumulator-scale tensors (biases, beta) stay i32.
+            dt = "i8" if arr.min() >= -128 and arr.max() <= 127 and k[0] in "wg" else "i32"
+            bw.add(f"L{i}.{k}", arr.astype(np.int32), dt)
+    bw.write(os.path.join(out_dir, "roberta_base_weights"))
+    log("  roberta_base_weights.{bin,json} written")
+
+    manifest["presets"]["roberta_base"] = {
+        "geometry": geo_json(geo_rb),
+        "artifacts": {"int8_layer": fname},
+        "weights_blob": "roberta_base_weights",
+        "s_in": qm_rb.s_in,
+        "s_out": qm_rb.s_out,
+        "layers": [layer_json(qm_rb.layers[0])],  # unified: all identical
+        "weight_keys": WEIGHT_KEYS,
+    }
+
+    # ---------- simulator-only geometries (Table II) ----------
+    for name in ("roberta_large", "deit_s", "small"):
+        manifest["presets"][name] = {"geometry": geo_json(GEOMETRIES[name])}
+
+    # ---------- golden vectors ----------
+    write_golden(out_dir, log=log)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    log("[aot] manifest.json written — artifacts complete")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--train-steps", type=int, default=500)
+    args = ap.parse_args()
+    build(args.out, train_steps=args.train_steps)
+
+
+if __name__ == "__main__":
+    main()

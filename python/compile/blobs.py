@@ -1,0 +1,67 @@
+"""Flat binary tensor container (build-time writer; rust reads it).
+
+No serde/npz on the rust side (offline crate set), so artifacts use the
+simplest possible layout: one ``.bin`` file holding raw little-endian
+tensor data back-to-back, plus a JSON index mapping
+``name -> {dtype, shape, offset, nbytes}``.  dtypes: i8, i32, i64, f32.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+_DTYPES = {
+    "i8": np.int8,
+    "i32": np.int32,
+    "i64": np.int64,
+    "f32": np.float32,
+}
+_NAMES = {v: k for k, v in _DTYPES.items()}
+
+
+class BlobWriter:
+    def __init__(self) -> None:
+        self._entries: dict[str, dict] = {}
+        self._chunks: list[bytes] = []
+        self._offset = 0
+
+    def add(self, name: str, arr: np.ndarray, dtype: str | None = None) -> None:
+        if name in self._entries:
+            raise KeyError(f"duplicate tensor {name!r}")
+        a = np.asarray(arr)
+        if dtype is None:
+            dtype = _NAMES[a.dtype.type]
+        a = np.ascontiguousarray(a.astype(_DTYPES[dtype]))
+        raw = a.tobytes()
+        self._entries[name] = {
+            "dtype": dtype,
+            "shape": list(a.shape),
+            "offset": self._offset,
+            "nbytes": len(raw),
+        }
+        self._chunks.append(raw)
+        self._offset += len(raw)
+
+    def write(self, path_prefix: str) -> None:
+        os.makedirs(os.path.dirname(path_prefix) or ".", exist_ok=True)
+        with open(path_prefix + ".bin", "wb") as f:
+            for c in self._chunks:
+                f.write(c)
+        with open(path_prefix + ".json", "w") as f:
+            json.dump({"tensors": self._entries}, f, indent=1, sort_keys=True)
+
+
+def read_blob(path_prefix: str) -> dict[str, np.ndarray]:
+    """Python-side reader (used by tests to round-trip what rust reads)."""
+    with open(path_prefix + ".json") as f:
+        index = json.load(f)["tensors"]
+    with open(path_prefix + ".bin", "rb") as f:
+        raw = f.read()
+    out = {}
+    for name, e in index.items():
+        buf = raw[e["offset"] : e["offset"] + e["nbytes"]]
+        out[name] = np.frombuffer(buf, dtype=_DTYPES[e["dtype"]]).reshape(e["shape"])
+    return out

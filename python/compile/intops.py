@@ -1,0 +1,331 @@
+"""Integer-only arithmetic spec for SwiftTron (I-BERT-style approximations).
+
+This module is the *bit-exact specification* of every integer operation the
+SwiftTron datapath performs.  Three implementations exist in the repo and
+must agree exactly:
+
+  1. this module (vectorized jnp, used by the L2 model graph),
+  2. the Pallas kernels in ``kernels/`` (the L1 hot-path tiles),
+  3. the rust ``quant`` module (the simulator's functional model).
+
+All quantities follow the paper's convention ``a = q_a * S_a`` with
+symmetric scales.  Linear ops run INT8xINT8 -> INT32; nonlinear ops run on
+INT32.  Products inside requantization and the polynomial evaluations are
+held in INT64, modelling the hardware multiplier's full-width product
+before the shifter (the paper's Fig. 7 "INT32 multiplication + shift").
+
+Rounding convention: *floor* everywhere (arithmetic right shift, floor
+division), matching a shift-based hardware implementation.
+
+Paper-faithful constants (from I-BERT [7], used by SwiftTron Figs. 11/14):
+
+  exp  poly on [-ln2, 0]:  a=0.3585,  b=1.353,  c=0.344   (a(x+b)^2 + c)
+  erf  poly on [0, -b]:    a=-0.2888, b=-1.769, c=1.0     (sign handled)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+from jax import lax
+
+# --- polynomial coefficients (design-time constants) -----------------------
+
+EXP_A, EXP_B, EXP_C = 0.3585, 1.353, 0.344
+ERF_A, ERF_B, ERF_C = -0.2888, -1.769, 1.0
+LN2 = math.log(2.0)
+
+INT8_MIN, INT8_MAX = -128, 127
+# Fixed-point precision of the normalized LayerNorm output (scale = 2^-LN_P).
+LN_P = 7
+# Softmax output scale = 1 / SM_UNIT (int8 => 127).
+SM_UNIT = 127
+
+
+# --- dyadic numbers ---------------------------------------------------------
+
+@dataclass(frozen=True)
+class Dyadic:
+    """A rational b / 2^c approximating a positive real (paper Eq. (2))."""
+
+    b: int
+    c: int
+
+    def value(self) -> float:
+        return self.b / (1 << self.c)
+
+    @staticmethod
+    def approximate(x: float, bits: int = 16, max_shift: int = 30) -> "Dyadic":
+        """Best b/2^c with b in [1, 2^bits) for a positive real ``x``.
+
+        The hardware multiplies by ``b`` (one INT32 multiplier input) and
+        shifts right by ``c``, so ``b`` must stay narrow; 16 bits gives a
+        relative error < 2^-15, far below INT8 quantization noise.
+        """
+        if x <= 0:
+            raise ValueError(f"dyadic approximation needs x > 0, got {x}")
+        c = 0
+        while x * (1 << c) < (1 << (bits - 1)) and c < max_shift:
+            c += 1
+        c = max(0, c - 1)
+        b = round(x * (1 << c))
+        if b < 1:
+            b = 1
+        return Dyadic(b=int(b), c=int(c))
+
+
+def requantize(q, dy: Dyadic, lo: int = INT8_MIN, hi: int = INT8_MAX):
+    """INT32 -> INT8 requantization: ``clamp((q * b) >> c)`` (paper Fig. 7).
+
+    The product is taken in INT64 (hardware full-width product), the shift
+    is arithmetic (floor), and the result saturates to the output range.
+    """
+    prod = q.astype(jnp.int64) * jnp.int64(dy.b)
+    shifted = prod >> jnp.int64(dy.c)
+    return jnp.clip(shifted, lo, hi).astype(jnp.int32)
+
+
+def rescale(q, dy: Dyadic):
+    """Dyadic rescale *without* saturation narrowing (residual-connection
+    scale alignment, paper §III-I); stays INT32."""
+    prod = q.astype(jnp.int64) * jnp.int64(dy.b)
+    return (prod >> jnp.int64(dy.c)).astype(jnp.int32)
+
+
+# --- integer exp / softmax (paper Figs. 11-12) ------------------------------
+
+@dataclass(frozen=True)
+class SoftmaxConsts:
+    """Design-time constants for one Softmax unit instance.
+
+    ``s_in`` is the scale of the INT32 input (after the Scale block).
+    q_ln2 = floor(ln2 / s_in)           -- the paper's q3
+    q_b   = floor(b / s_in)             -- the paper's q1
+    q_c   = floor(c / (a * s_in^2))     -- the paper's q2
+    """
+
+    s_in: float
+    q_ln2: int
+    q_b: int
+    q_c: int
+
+    @staticmethod
+    def design(s_in: float) -> "SoftmaxConsts":
+        if s_in <= 0:
+            raise ValueError("softmax input scale must be positive")
+        q_ln2 = max(1, math.floor(LN2 / s_in))
+        q_b = math.floor(EXP_B / s_in)
+        q_c = math.floor(EXP_C / (EXP_A * s_in * s_in))
+        return SoftmaxConsts(s_in=s_in, q_ln2=q_ln2, q_b=q_b, q_c=q_c)
+
+    @property
+    def s_exp(self) -> float:
+        """Scale of the integer exponential output: a * s_in^2."""
+        return EXP_A * self.s_in * self.s_in
+
+
+def i_exp(q, consts: SoftmaxConsts):
+    """Integer exp for non-positive ``q`` (INT32, scale ``s_in``).
+
+    Decomposition (paper Fig. 12):  x = -z*ln2 + r with r in (-ln2, 0],
+    exp(x) = 2^-z * exp(r); exp(r) by the 2nd-order polynomial.
+    Returns INT64 values with scale ``consts.s_exp``.
+    """
+    q = q.astype(jnp.int64)
+    z = (-q) // jnp.int64(consts.q_ln2)
+    r = q + z * jnp.int64(consts.q_ln2)  # in (-q_ln2, 0]
+    t = r + jnp.int64(consts.q_b)
+    poly = t * t + jnp.int64(consts.q_c)  # scale a*s_in^2, >= 0
+    z = jnp.clip(z, 0, 62)
+    return poly >> z
+
+
+def i_softmax(q, consts: SoftmaxConsts, axis: int = -1):
+    """Integer softmax along ``axis`` (paper Fig. 11, three phases).
+
+    Phase 1: running-max search.  Phase 2: integer exp of (q - max).
+    Phase 3: divider -> INT8 output with scale 1/SM_UNIT.  The divider
+    rounds to nearest (one extra adder on the ASIC): plain flooring loses
+    up to n/(2*SM_UNIT) of probability mass per row, which is material at
+    the paper's m=256 sequence length.
+    """
+    q = q.astype(jnp.int32)
+    qmax = jnp.max(q, axis=axis, keepdims=True)
+    e = i_exp(q - qmax, consts)  # int64, scale s_exp
+    denom = jnp.sum(e, axis=axis, keepdims=True)
+    denom = jnp.maximum(denom, 1)
+    out = (e * jnp.int64(SM_UNIT) + (denom >> 1)) // denom
+    return jnp.clip(out, 0, SM_UNIT).astype(jnp.int32)
+
+
+# --- integer erf / GELU (paper Fig. 14) --------------------------------------
+
+@dataclass(frozen=True)
+class GeluConsts:
+    """Design-time constants for the GELU unit.
+
+    ``s_in`` is the scale of the INT32 GELU input; the erf polynomial is
+    evaluated at scale ``s_er = s_in / sqrt(2)``:
+    q_b   = floor(b / s_er)             -- the paper's q5/q6 (b < 0)
+    q_c   = floor(c / (a * s_er^2))     -- the paper's q7
+    q_one = floor(1 / s_erf)            -- the paper's q8
+    """
+
+    s_in: float
+    q_b: int
+    q_c: int
+    q_one: int
+
+    @staticmethod
+    def design(s_in: float) -> "GeluConsts":
+        if s_in <= 0:
+            raise ValueError("gelu input scale must be positive")
+        s_er = s_in / math.sqrt(2.0)
+        q_b = math.floor(ERF_B / s_er)  # negative
+        q_c = math.floor(ERF_C / (ERF_A * s_er * s_er))  # negative
+        s_erf = ERF_A * s_er * s_er  # negative
+        q_one = math.floor(1.0 / s_erf)  # negative
+        return GeluConsts(s_in=s_in, q_b=q_b, q_c=q_c, q_one=q_one)
+
+    @property
+    def s_erf(self) -> float:
+        s_er = self.s_in / math.sqrt(2.0)
+        return ERF_A * s_er * s_er
+
+    @property
+    def s_out(self) -> float:
+        """Scale of the INT GELU output: s_in * s_erf / 2."""
+        return self.s_in * self.s_erf / 2.0
+
+
+def i_erf_core(q, consts: GeluConsts):
+    """Signed 2nd-order polynomial erf estimate (INT64, scale ``s_erf``).
+
+    erf(x) ~ sign(x) * [a(min(|x|,-b) + b)^2 + c]; with the negative ``a``
+    folded into the scale, the integer value is sign * (t^2 + q_c).
+    """
+    q = q.astype(jnp.int64)
+    sgn = jnp.sign(q)
+    qabs = jnp.minimum(jnp.abs(q), jnp.int64(-consts.q_b))
+    t = qabs + jnp.int64(consts.q_b)  # in [q_b, 0]
+    return sgn * (t * t + jnp.int64(consts.q_c))
+
+
+def i_gelu(q, consts: GeluConsts):
+    """Integer GELU: ``q * (erf_int + q_one)`` (INT64, scale ``s_out``)."""
+    q64 = q.astype(jnp.int64)
+    erf = i_erf_core(q64, consts)
+    return q64 * (erf + jnp.int64(consts.q_one))
+
+
+# --- integer sqrt / LayerNorm (paper Fig. 15) --------------------------------
+
+ISQRT_MAX_ITERS = 32  # Babylonian from 2^ceil(bits/2) converges well within
+
+
+def _bit_length(n):
+    """Integer bit length of non-negative INT64 ``n`` (0 -> 0)."""
+    n = n.astype(jnp.int64)
+    bl = jnp.zeros_like(n)
+    for shift in (32, 16, 8, 4, 2, 1):
+        big = n >= (jnp.int64(1) << shift)
+        bl = jnp.where(big, bl + shift, bl)
+        n = jnp.where(big, n >> shift, n)
+    return bl + jnp.where(n > 0, 1, 0)
+
+
+def i_sqrt(n):
+    """Iterative integer sqrt (paper §III-I / ref [29], Babylonian method).
+
+    x_0 = 2^ceil(bits/2); x_{i+1} = (x_i + n // x_i) >> 1, stop when
+    x_{i+1} >= x_i, answer is x_i.  (The paper's "(x_i + x_i/n)/2" is a
+    typo for the Babylonian update; the cited algorithm and the I-BERT
+    implementation both use (x_i + n/x_i)/2.)  Input 0 short-circuits to 0.
+
+    Implemented as a fixed-trip-count loop with a "frozen" lane per element
+    so it lowers to static HLO; the rust simulator counts the true
+    data-dependent iteration count for timing.
+    """
+    n = n.astype(jnp.int64)
+    x0 = jnp.int64(1) << ((_bit_length(n) + 1) >> 1)
+    x0 = jnp.maximum(x0, 1)
+
+    def body(_, state):
+        x, done = state
+        x1 = (x + n // x) >> 1
+        stop = x1 >= x
+        new_x = jnp.where(done | stop, x, x1)
+        return new_x, done | stop
+
+    x, _ = lax.fori_loop(
+        0, ISQRT_MAX_ITERS, body, (x0, jnp.zeros_like(n, dtype=bool))
+    )
+    return jnp.where(n == 0, jnp.int64(0), x)
+
+
+@dataclass(frozen=True)
+class LayerNormConsts:
+    """Design-time constants for one LayerNorm unit.
+
+    Input: INT32 ``q`` with scale ``s_in`` (post residual alignment).
+    Output: qn * q_gamma + q_beta at scale ``s_out = 2^-LN_P * s_gamma``
+    where qn = floor(y * 2^LN_P / std) is the normalized value.
+    """
+
+    s_in: float
+    s_gamma: float
+    d: int
+
+    @property
+    def s_out(self) -> float:
+        return self.s_gamma / (1 << LN_P)
+
+
+def i_layernorm(q, q_gamma, q_beta, consts: LayerNormConsts, axis: int = -1):
+    """Integer LayerNorm (paper Fig. 15, three phases).
+
+    Phase 1: integer mean.  Phase 2: integer variance + iterative sqrt.
+    Phase 3: divider + affine.  ``q_gamma`` INT8 (scale s_gamma), ``q_beta``
+    INT32 (scale s_out).  Returns INT32 at scale ``consts.s_out``.
+    """
+    q = q.astype(jnp.int64)
+    d = q.shape[axis]
+    mean = jnp.sum(q, axis=axis, keepdims=True) // jnp.int64(d)
+    y = q - mean
+    var = jnp.sum(y * y, axis=axis, keepdims=True) // jnp.int64(d)
+    std = jnp.maximum(i_sqrt(var), 1)
+    qn = (y << LN_P) // std
+    out = qn * q_gamma.astype(jnp.int64) + q_beta.astype(jnp.int64)
+    return jnp.clip(out, -(2**31), 2**31 - 1).astype(jnp.int32)
+
+
+# --- linear ------------------------------------------------------------------
+
+def i_matmul(q_x, q_w, q_bias=None):
+    """INT8 x INT8 -> INT32 matmul with INT32 bias (paper Fig. 6).
+
+    ``q_x``: (m, k) INT8 activations; ``q_w``: (k, n) INT8 weights;
+    ``q_bias``: (n,) INT32 at scale s_x * s_w.  Output INT32, scale
+    s_x * s_w.
+    """
+    acc = jnp.dot(
+        q_x.astype(jnp.int32),
+        q_w.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    if q_bias is not None:
+        acc = acc + q_bias.astype(jnp.int32)
+    return acc
+
+
+def quantize(x, scale: float, lo: int = INT8_MIN, hi: int = INT8_MAX):
+    """Float -> integer quantization (build-time only; never on the ASIC)."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, lo, hi).astype(jnp.int32)
+
+
+def dequantize(q, scale: float):
+    """Integer -> float (build-time / validation only)."""
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,14 @@
+"""L1: Pallas kernels for every SwiftTron hardware block.
+
+All kernels run with ``interpret=True`` (the CPU PJRT client cannot run
+Mosaic custom-calls); block shapes are still MXU/VMEM-shaped so the same
+code targets real TPUs.  Correctness oracles live in ``ref``.
+"""
+
+from .gelu import i_gelu
+from .int_matmul import int_matmul
+from .layernorm import i_layernorm
+from .requant import requantize
+from .softmax import i_softmax
+
+__all__ = ["i_gelu", "int_matmul", "i_layernorm", "requantize", "i_softmax"]

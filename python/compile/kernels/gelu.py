@@ -1,0 +1,53 @@
+"""Pallas integer GELU kernel (paper Fig. 14).
+
+gelu(x) = x * (erf(x/sqrt(2)) + 1) / 2; the erf is a clipped 2nd-order
+polynomial with sign handling.  Elementwise over VMEM tiles; q5..q8 are
+design-time constants.  Output is INT32 at scale s_in * s_erf / 2 —
+callers follow with a Requantization block, as in the FFN (paper Fig. 13).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..intops import GeluConsts
+
+
+def _gelu_kernel(q_ref, o_ref, *, q_b: int, q_c: int, q_one: int):
+    q = q_ref[...].astype(jnp.int64)
+    sgn = jnp.sign(q)
+    qabs = jnp.minimum(jnp.abs(q), jnp.int64(-q_b))
+    t = qabs + jnp.int64(q_b)
+    erf = sgn * (t * t + jnp.int64(q_c))
+    out = q * (erf + jnp.int64(q_one))
+    o_ref[...] = out
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("consts", "bm", "bn"))
+def i_gelu(q, consts: GeluConsts, *, bm: int = 256, bn: int = 512):
+    """Integer GELU of an INT32 (m, n) tensor; returns INT64 (full product)."""
+    m, n = q.shape
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(
+            _gelu_kernel, q_b=consts.q_b, q_c=consts.q_c, q_one=consts.q_one
+        ),
+        grid=(m // bm, n // bn),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int64),
+        interpret=True,
+    )(q)

@@ -1,0 +1,103 @@
+"""Pallas INT8 x INT8 -> INT32 tiled matmul (the MatMul block, paper Fig. 6).
+
+TPU mapping of the ASIC's output-stationary MAC array: the grid walks
+(M, N) output tiles — each grid point *is* one "MAC array load" — and an
+inner K dimension streams row/column operand panels through the tile,
+exactly as the ASIC scans inputs before the column-by-column readout.
+Blocks are VMEM-resident (BlockSpec); the INT32 accumulator lives in the
+output tile like the MAC accumulator registers.
+
+Block shapes default to MXU-friendly multiples of 128 but shrink to the
+problem size so tiny test geometries stay exact.  Defaults (256, 768,
+768) come from the EXPERIMENTS.md SPerf sweep: ~2.8x over the initial
+(128,128,128) tiling on the d_ff panels, with a ~1.6 MB VMEM footprint
+(x-tile i8 + w-tile i8 + i32 accumulator tile) — well inside a TPU
+core's ~16 MB VMEM, so the same schedule maps to real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K minor."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.int32)
+
+
+def _mm_bias_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.int32)
+
+    # Bias is folded in at readout time (paper: "added when reading the
+    # output matrix"), i.e. on the last K panel.
+    @pl.when(k == n_k - 1)
+    def _bias():
+        o_ref[...] += b_ref[...].astype(jnp.int32)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (keeps tiles exact)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def int_matmul(q_x, q_w, q_bias=None, *, bm: int = 256, bn: int = 768, bk: int = 768):
+    """(m, k) INT8/INT32 x (k, n) INT8/INT32 -> (m, n) INT32 (+ bias).
+
+    ``q_bias`` is an INT32 row vector at the accumulator scale s_x * s_w.
+    """
+    m, k = q_x.shape
+    k2, n = q_w.shape
+    assert k == k2, f"contraction mismatch: {q_x.shape} @ {q_w.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    if q_bias is None:
+        return pl.pallas_call(
+            functools.partial(_mm_kernel, n_k=n_k),
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+            interpret=True,
+        )(q_x.astype(jnp.int8), q_w.astype(jnp.int8))
+
+    b_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+    return pl.pallas_call(
+        functools.partial(_mm_bias_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[x_spec, w_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(q_x.astype(jnp.int8), q_w.astype(jnp.int8), q_bias.reshape(1, n).astype(jnp.int32))

@@ -1,0 +1,80 @@
+"""Pallas integer LayerNorm kernel (paper Fig. 15).
+
+Three phases per row: integer mean, integer variance + iterative square
+root (Babylonian, fixed trip count with frozen lanes so it lowers to
+static HLO), divider + affine.  Row-panel blocking like the Softmax unit;
+gamma/beta stream in as INT8/INT32 operands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..intops import ISQRT_MAX_ITERS, LN_P, LayerNormConsts
+
+
+def _bit_length(n):
+    bl = jnp.zeros_like(n)
+    for shift in (32, 16, 8, 4, 2, 1):
+        big = n >= (jnp.int64(1) << shift)
+        bl = jnp.where(big, bl + shift, bl)
+        n = jnp.where(big, n >> shift, n)
+    return bl + jnp.where(n > 0, 1, 0)
+
+
+def _i_sqrt(n):
+    x0 = jnp.int64(1) << ((_bit_length(n) + 1) >> 1)
+    x0 = jnp.maximum(x0, 1)
+
+    def body(_, state):
+        x, done = state
+        x1 = (x + n // x) >> 1
+        stop = x1 >= x
+        return jnp.where(done | stop, x, x1), done | stop
+
+    x, _ = lax.fori_loop(0, ISQRT_MAX_ITERS, body, (x0, jnp.zeros_like(n, dtype=bool)))
+    return jnp.where(n == 0, jnp.int64(0), x)
+
+
+def _layernorm_kernel(q_ref, g_ref, b_ref, o_ref, *, d: int):
+    q = q_ref[...].astype(jnp.int64)
+    # Phase 1: mean.
+    mean = jnp.sum(q, axis=-1, keepdims=True) // jnp.int64(d)
+    y = q - mean
+    # Phase 2: variance + iterative sqrt.
+    var = jnp.sum(y * y, axis=-1, keepdims=True) // jnp.int64(d)
+    std = jnp.maximum(_i_sqrt(var), 1)
+    # Phase 3: divider + affine.
+    qn = (y << LN_P) // std
+    out = qn * g_ref[...].astype(jnp.int64) + b_ref[...].astype(jnp.int64)
+    o_ref[...] = jnp.clip(out, -(2**31), 2**31 - 1).astype(jnp.int32)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("consts", "bm"))
+def i_layernorm(q, q_gamma, q_beta, consts: LayerNormConsts, *, bm: int = 128):
+    """Integer LayerNorm over the last axis of an INT32 (m, d) tensor."""
+    m, d = q.shape
+    assert d == consts.d
+    bm = _pick_block(m, bm)
+    row_spec = pl.BlockSpec((bm, d), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((1, d), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, d=d),
+        grid=(m // bm,),
+        in_specs=[row_spec, vec_spec, vec_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.int32),
+        interpret=True,
+    )(q, q_gamma.reshape(1, d).astype(jnp.int32), q_beta.reshape(1, d).astype(jnp.int32))

@@ -1,0 +1,145 @@
+"""Correctness oracles for the L1 kernels.
+
+Two kinds of reference live here:
+
+* ``np_*`` — *independent* pure-numpy reimplementations of the integer
+  spec, written scalar-at-a-time with Python bignum arithmetic so an
+  overflow or rounding bug in the jnp/Pallas versions cannot hide in a
+  shared code path.  Kernel outputs must match these **bit-exactly**.
+* ``f32_*`` — the true floating-point functions (softmax, gelu,
+  layernorm).  Kernel outputs, dequantized, must match these within the
+  approximation error budget the paper inherits from I-BERT.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..intops import (
+    LN_P,
+    SM_UNIT,
+    GeluConsts,
+    LayerNormConsts,
+    SoftmaxConsts,
+)
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def _floor_div(a: int, n: int) -> int:
+    return a // n  # Python ints: true floor division, arbitrary precision
+
+
+# --- integer oracles (bit-exact, scalar Python ints) -------------------------
+
+def np_requantize(q, b: int, c: int, lo: int = INT8_MIN, hi: int = INT8_MAX):
+    out = np.empty_like(q, dtype=np.int64)
+    flat_in, flat_out = q.reshape(-1), out.reshape(-1)
+    for i, v in enumerate(flat_in.tolist()):
+        s = (v * b) >> c
+        flat_out[i] = min(max(s, lo), hi)
+    return out.reshape(q.shape).astype(np.int32)
+
+
+def np_i_exp_scalar(x: int, c: SoftmaxConsts) -> int:
+    assert x <= 0
+    z = _floor_div(-x, c.q_ln2)
+    r = x + z * c.q_ln2
+    t = r + c.q_b
+    poly = t * t + c.q_c
+    return poly >> min(z, 62)
+
+
+def np_i_softmax(q, c: SoftmaxConsts):
+    q = np.asarray(q)
+    out = np.empty(q.shape, dtype=np.int64)
+    for idx in np.ndindex(q.shape[:-1]):
+        row = [int(v) for v in q[idx]]
+        mx = max(row)
+        es = [np_i_exp_scalar(v - mx, c) for v in row]
+        denom = max(sum(es), 1)
+        out[idx] = [
+            min(max((e * SM_UNIT + (denom >> 1)) // denom, 0), SM_UNIT) for e in es
+        ]
+    return out.astype(np.int32)
+
+
+def np_i_erf_scalar(x: int, c: GeluConsts) -> int:
+    sgn = (x > 0) - (x < 0)
+    qabs = min(abs(x), -c.q_b)
+    t = qabs + c.q_b
+    return sgn * (t * t + c.q_c)
+
+
+def np_i_gelu(q, c: GeluConsts):
+    q = np.asarray(q)
+    out = np.empty(q.shape, dtype=np.int64)
+    flat_in, flat_out = q.reshape(-1), out.reshape(-1)
+    for i, v in enumerate(flat_in.tolist()):
+        flat_out[i] = v * (np_i_erf_scalar(v, c) + c.q_one)
+    return out.reshape(q.shape)
+
+
+def np_i_sqrt_scalar(n: int) -> tuple[int, int]:
+    """Returns (isqrt, iterations) — the iteration count feeds the
+    cycle-accurate simulator's LayerNorm timing."""
+    if n == 0:
+        return 0, 0
+    x = 1 << ((n.bit_length() + 1) // 2)
+    iters = 0
+    while True:
+        x1 = (x + n // x) >> 1
+        iters += 1
+        if x1 >= x:
+            return x, iters
+        x = x1
+
+
+def np_i_layernorm(q, q_gamma, q_beta, c: LayerNormConsts):
+    q = np.asarray(q)
+    d = q.shape[-1]
+    out = np.empty(q.shape, dtype=np.int64)
+    g = [int(v) for v in np.asarray(q_gamma).reshape(-1)]
+    b = [int(v) for v in np.asarray(q_beta).reshape(-1)]
+    for idx in np.ndindex(q.shape[:-1]):
+        row = [int(v) for v in q[idx]]
+        mean = _floor_div(sum(row), d)
+        y = [v - mean for v in row]
+        var = _floor_div(sum(v * v for v in y), d)
+        std = max(np_i_sqrt_scalar(var)[0], 1)
+        out[idx] = [
+            min(max((yv << LN_P) // std * g[j] + b[j], -(2**31)), 2**31 - 1)
+            for j, yv in enumerate(y)
+        ]
+    return out.astype(np.int32)
+
+
+def np_i_matmul(q_x, q_w, q_bias=None):
+    acc = q_x.astype(np.int64) @ q_w.astype(np.int64)
+    if q_bias is not None:
+        acc = acc + q_bias.astype(np.int64)
+    assert np.all(acc <= 2**31 - 1) and np.all(acc >= -(2**31)), "acc overflow"
+    return acc.astype(np.int32)
+
+
+# --- float references (the functions being approximated) ---------------------
+
+def f32_softmax(x, axis=-1):
+    x = np.asarray(x, dtype=np.float64)
+    x = x - x.max(axis=axis, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def f32_gelu(x):
+    x = np.asarray(x, dtype=np.float64)
+    return x * 0.5 * (1.0 + np.vectorize(math.erf)(x / math.sqrt(2.0)))
+
+
+def f32_layernorm(x, gamma, beta, eps=0.0):
+    x = np.asarray(x, dtype=np.float64)
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / np.sqrt(var + eps) * gamma + beta

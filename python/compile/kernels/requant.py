@@ -1,0 +1,48 @@
+"""Pallas Requantization kernel (paper Fig. 7).
+
+INT32 -> INT8 via a dyadic multiply + arithmetic right shift + saturation.
+Elementwise over VMEM tiles; the dyadic constants (b, c) are design-time
+constants baked into the lowered HLO, exactly as the ASIC hard-wires them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..intops import Dyadic, INT8_MAX, INT8_MIN
+
+
+def _requant_kernel(q_ref, o_ref, *, b: int, c: int, lo: int, hi: int):
+    q = q_ref[...].astype(jnp.int64)
+    shifted = (q * jnp.int64(b)) >> jnp.int64(c)
+    o_ref[...] = jnp.clip(shifted, lo, hi).astype(jnp.int32)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("dy", "lo", "hi", "bm", "bn"))
+def requantize(q, dy: Dyadic, lo: int = INT8_MIN, hi: int = INT8_MAX,
+               *, bm: int = 256, bn: int = 512):
+    """Requantize an INT32 (m, n) tensor to the INT8 range (stored INT32)."""
+    m, n = q.shape
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_requant_kernel, b=dy.b, c=dy.c, lo=lo, hi=hi),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(q)

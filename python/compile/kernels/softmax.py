@@ -1,0 +1,60 @@
+"""Pallas integer Softmax kernel (paper Figs. 11-12).
+
+The ASIC instantiates one Softmax unit per row of Q·K^T and runs three
+phases (max search, integer exp, divider).  The TPU mapping blocks over
+rows: each grid step owns a (bm, n) row panel in VMEM and performs all
+three phases on the VPU; the design-time constants q1..q3 (q_b, q_c,
+q_ln2) are baked in.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..intops import SM_UNIT, SoftmaxConsts
+
+
+def _softmax_kernel(q_ref, o_ref, *, q_ln2: int, q_b: int, q_c: int):
+    q = q_ref[...].astype(jnp.int64)
+    # Phase 1: per-row maximum search.
+    qmax = jnp.max(q, axis=-1, keepdims=True)
+    x = q - qmax  # <= 0
+    # Phase 2: integer exp via ln2 decomposition + 2nd-order polynomial.
+    z = (-x) // jnp.int64(q_ln2)
+    r = x + z * jnp.int64(q_ln2)
+    t = r + jnp.int64(q_b)
+    poly = t * t + jnp.int64(q_c)
+    e = poly >> jnp.clip(z, 0, 62)
+    # Phase 3: rounding divider, output at scale 1/SM_UNIT.
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1)
+    out = (e * jnp.int64(SM_UNIT) + (denom >> 1)) // denom
+    o_ref[...] = jnp.clip(out, 0, SM_UNIT).astype(jnp.int32)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("consts", "bm"))
+def i_softmax(q, consts: SoftmaxConsts, *, bm: int = 128):
+    """Integer softmax along the last axis of an INT32 (m, n) tensor."""
+    m, n = q.shape
+    bm = _pick_block(m, bm)
+    spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(
+            _softmax_kernel, q_ln2=consts.q_ln2, q_b=consts.q_b, q_c=consts.q_c
+        ),
+        grid=(m // bm,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(q)

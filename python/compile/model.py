@@ -1,0 +1,252 @@
+"""L2: the Transformer encoder — float reference and integer-only twin.
+
+The float model is the calibration source and the accuracy baseline; the
+quantized model is built *exclusively* from the L1 integer operations and
+follows the paper's Fig. 1b flow: INT8 MatMuls with INT32 accumulators,
+INT32 nonlinearities, dyadic Requantization between blocks — never a
+dequantize on the datapath.
+
+``use_pallas=True`` routes every block through the Pallas kernels (the
+configuration that gets AOT-lowered); ``use_pallas=False`` uses the
+vectorized jnp spec in ``intops`` — the two are bit-identical (tested).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import intops
+from .intops import SM_UNIT, Dyadic
+from .quantize import Calibrator, QuantLayerParams
+
+
+@dataclass(frozen=True)
+class Geometry:
+    """Transformer geometry (the paper's d, k, m, d_ff)."""
+
+    d: int
+    heads: int
+    m: int
+    d_ff: int
+    layers: int
+
+    @property
+    def dh(self) -> int:
+        return self.d // self.heads
+
+
+# Presets used across the repo (paper §IV-B and Table II).
+GEOMETRIES = {
+    "tiny": Geometry(d=64, heads=4, m=32, d_ff=128, layers=2),
+    "small": Geometry(d=128, heads=4, m=64, d_ff=512, layers=4),
+    "roberta_base": Geometry(d=768, heads=12, m=256, d_ff=3072, layers=12),
+    "roberta_large": Geometry(d=1024, heads=16, m=256, d_ff=4096, layers=24),
+    "deit_s": Geometry(d=384, heads=6, m=197, d_ff=1536, layers=12),
+}
+
+
+# --- float reference model ----------------------------------------------------
+
+def f_gelu(x):
+    return x * 0.5 * (1.0 + jax.scipy.special.erf(x / math.sqrt(2.0)))
+
+
+def f_gelu_tanh(x):
+    """tanh-approximation GELU (BERT's formulation).  Used when lowering
+    the float twin to HLO: xla_extension 0.5.1's parser predates the
+    dedicated `erf` opcode; max deviation from exact GELU < 1e-3."""
+    c = math.sqrt(2.0 / math.pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def f_layernorm(x, gamma, beta, eps=1e-12):
+    mean = x.mean(-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def float_encoder_layer(x, w, geo: Geometry, cal: Calibrator | None = None,
+                        tag: str = "", gelu=f_gelu):
+    """Float encoder layer (post-LN, BERT-style). ``w`` holds float arrays
+    with the keys of ``quantize.design_layer``.  When ``cal`` is given,
+    records max-abs statistics at every hardware requantization tap."""
+    m, d = x.shape
+    dh = geo.dh
+
+    def obs(name, v):
+        if cal is not None:
+            cal.observe(f"{tag}.{name}", v)
+
+    obs("x", x)
+    q = x @ w["wq"] + w["bq"]
+    k = x @ w["wk"] + w["bk"]
+    v = x @ w["wv"] + w["bv"]
+    obs("q", q); obs("k", k); obs("v", v)
+
+    qh = q.reshape(m, geo.heads, dh).transpose(1, 0, 2)
+    kh = k.reshape(m, geo.heads, dh).transpose(1, 0, 2)
+    vh = v.reshape(m, geo.heads, dh).transpose(1, 0, 2)
+    att = (qh @ kh.transpose(0, 2, 1)) / math.sqrt(dh)
+    probs = jax.nn.softmax(att, axis=-1)
+    ctx = (probs @ vh).transpose(1, 0, 2).reshape(m, d)
+    obs("ctx", ctx)
+
+    attn_out = ctx @ w["wo"] + w["bo"]
+    res1 = x + attn_out
+    ln1 = f_layernorm(res1, w["gamma1"], w["beta1"])
+    obs("x2", ln1)
+    obs("gamma1", w["gamma1"])
+
+    h = gelu(ln1 @ w["w1"] + w["b1"])
+    obs("h", h)
+    ffn_out = h @ w["w2"] + w["b2"]
+    res2 = ln1 + ffn_out
+    out = f_layernorm(res2, w["gamma2"], w["beta2"])
+    obs("out", out)
+    obs("gamma2", w["gamma2"])
+    return out
+
+
+# --- integer-only model ---------------------------------------------------------
+
+def _i_matmul(qx, qw, qb, use_pallas: bool):
+    if use_pallas:
+        from . import kernels
+
+        return kernels.int_matmul(qx, qw, qb)
+    return intops.i_matmul(qx, qw, qb)
+
+
+def _i_requant(q, dy: Dyadic, use_pallas: bool):
+    if use_pallas:
+        from . import kernels
+
+        return kernels.requantize(q, dy)
+    return intops.requantize(q, dy)
+
+
+def _i_softmax(q, consts, use_pallas: bool):
+    if use_pallas:
+        from . import kernels
+
+        return kernels.i_softmax(q, consts)
+    return intops.i_softmax(q, consts)
+
+
+def _i_gelu(q, consts, use_pallas: bool):
+    if use_pallas:
+        from . import kernels
+
+        return kernels.i_gelu(q, consts)
+    return intops.i_gelu(q, consts)
+
+
+def _i_layernorm(q, g, b, consts, use_pallas: bool):
+    if use_pallas:
+        from . import kernels
+
+        return kernels.i_layernorm(q, g, b, consts)
+    return intops.i_layernorm(q, g, b, consts)
+
+
+def quant_encoder_layer(q_x, p: QuantLayerParams, geo: Geometry,
+                        use_pallas: bool = True):
+    """Integer-only encoder layer: INT8 input (stored INT32) -> INT8 output.
+
+    Mirrors the SwiftTron block diagram (Figs. 5, 8-15): every arrow in the
+    hardware is one call here, every Req block one ``requantize``.
+    """
+    m, d = q_x.shape
+    dh = geo.dh
+
+    # --- MHSA: Q/K/V projections (MatMul blocks + Req units) ---
+    q8 = _i_requant(_i_matmul(q_x, p.wq, p.bq, use_pallas), p.dy_q, use_pallas)
+    k8 = _i_requant(_i_matmul(q_x, p.wk, p.bk, use_pallas), p.dy_k, use_pallas)
+    v8 = _i_requant(_i_matmul(q_x, p.wv, p.bv, use_pallas), p.dy_v, use_pallas)
+
+    # --- Attention per head (Fig. 10): MatMul -> Scale -> Softmax -> Req -> MatMul
+    ctx_heads = []
+    for h in range(geo.heads):
+        sl = slice(h * dh, (h + 1) * dh)
+        qh, kh, vh = q8[:, sl], k8[:, sl], v8[:, sl]
+        scores = _i_matmul(qh, kh.T, None, use_pallas)          # INT32
+        scaled = intops.rescale(scores, p.dy_scale)             # Scale block
+        probs = _i_softmax(scaled, p.sm, use_pallas)            # INT8 @ 1/127
+        ctx_heads.append(_i_matmul(probs, vh, None, use_pallas))
+    ctx_acc = jnp.concatenate(ctx_heads, axis=-1)               # INT32
+    ctx8 = _i_requant(ctx_acc, p.dy_ctx, use_pallas)
+
+    # --- output projection + residual align (Dyadic) + LayerNorm 1 ---
+    attn_acc = _i_matmul(ctx8, p.wo, p.bo, use_pallas)
+    res1 = q_x + intops.rescale(attn_acc, p.dy_res1)            # both @ s_x
+    ln1 = _i_layernorm(res1, p.gamma1, p.beta1, p.ln1, use_pallas)
+    x2 = _i_requant(ln1, p.dy_ln1, use_pallas)                  # INT8 @ s_x2
+
+    # --- FFN (Fig. 13): MatMul -> GELU -> Req -> MatMul ---
+    h_acc = _i_matmul(x2, p.w1, p.b1, use_pallas)
+    g = _i_gelu(h_acc, p.gelu, use_pallas)                      # INT64
+    # GELU's integer output scale s_in*s_erf/2 is *negative* (the erf
+    # polynomial's leading coefficient a < 0 is folded into the scale), so
+    # the requantization multiplier is the signed constant -b.
+    h8 = _i_requant_wide(g, p.dy_gelu, sign=-1)
+    ffn_acc = _i_matmul(h8, p.w2, p.b2, use_pallas)
+
+    # --- residual align + LayerNorm 2 + output Req ---
+    res2 = x2 + intops.rescale(ffn_acc, p.dy_res2)              # both @ s_x2
+    ln2 = _i_layernorm(res2, p.gamma2, p.beta2, p.ln2, use_pallas)
+    return _i_requant(ln2, p.dy_ln2, use_pallas)                # INT8 @ s_out
+
+
+def _i_requant_wide(q64, dy: Dyadic, sign: int = 1):
+    """Requantize an INT64 GELU product (vectorized jnp; the Pallas requant
+    kernel tiles INT32 — the wide product is a single multiply+shift and
+    XLA fuses it with the kernel output).  ``sign=-1`` multiplies by the
+    signed hardware constant -b (negative-scale inputs)."""
+    shifted = (q64 * jnp.int64(sign * dy.b)) >> jnp.int64(dy.c)
+    return jnp.clip(shifted, -128, 127).astype(jnp.int32)
+
+
+def quant_encoder(q_x, layers: list[QuantLayerParams], geo: Geometry,
+                  use_pallas: bool = True):
+    """Full integer encoder stack: INT8 in, INT8 out."""
+    h = q_x
+    for p in layers:
+        h = quant_encoder_layer(h, p, geo, use_pallas=use_pallas)
+    return h
+
+
+def float_encoder(x, weights: list[dict], geo: Geometry,
+                  cal: Calibrator | None = None):
+    h = x
+    for i, w in enumerate(weights):
+        h = float_encoder_layer(h, w, geo, cal=cal, tag=f"L{i}")
+    return h
+
+
+# --- weight initialization (random, layer-scale-realistic) ----------------------
+
+def init_layer_weights(rng: np.random.Generator, geo: Geometry) -> dict:
+    """Random float weights with transformer-realistic magnitudes."""
+    d, dff = geo.d, geo.d_ff
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": rng.normal(0, s, (d, d)), "bq": rng.normal(0, 0.02, (d,)),
+        "wk": rng.normal(0, s, (d, d)), "bk": rng.normal(0, 0.02, (d,)),
+        "wv": rng.normal(0, s, (d, d)), "bv": rng.normal(0, 0.02, (d,)),
+        "wo": rng.normal(0, s, (d, d)), "bo": rng.normal(0, 0.02, (d,)),
+        "w1": rng.normal(0, s, (d, dff)), "b1": rng.normal(0, 0.02, (dff,)),
+        "w2": rng.normal(0, 1.0 / math.sqrt(dff), (dff, d)),
+        "b2": rng.normal(0, 0.02, (d,)),
+        "gamma1": rng.normal(1.0, 0.05, (d,)), "beta1": rng.normal(0, 0.05, (d,)),
+        "gamma2": rng.normal(1.0, 0.05, (d,)), "beta2": rng.normal(0, 0.05, (d,)),
+    }
+
+
+def init_encoder_weights(seed: int, geo: Geometry) -> list[dict]:
+    rng = np.random.default_rng(seed)
+    return [init_layer_weights(rng, geo) for _ in range(geo.layers)]

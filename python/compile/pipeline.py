@@ -1,0 +1,117 @@
+"""End-to-end build pipeline: float model -> calibration -> integer model.
+
+This is the paper's Fig. 17 flow with the simulation substitutions from
+DESIGN.md §5: float weights (trained or random) stand in for the
+HuggingFace checkpoints, the calibrator stands in for the I-BERT
+quantization pass, and the output bundle feeds both the AOT lowering and
+the rust simulator/coordinator (via the artifact manifest).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import model as M
+from .model import Geometry
+from .quantize import (
+    Calibrator,
+    QuantLayerParams,
+    calibration_from_taps,
+    design_layer,
+    int8_scale,
+    quantize_tensor,
+)
+
+
+@dataclass
+class QuantModel:
+    """A fully designed integer model: per-layer params + I/O scales."""
+
+    geo: Geometry
+    layers: list[QuantLayerParams]
+    s_in: float    # INT8 scale of the encoder input
+    s_out: float   # INT8 scale of the encoder output
+
+    def quantize_input(self, x: np.ndarray) -> np.ndarray:
+        return quantize_tensor(x, self.s_in)
+
+    def dequantize_output(self, q: np.ndarray) -> np.ndarray:
+        return np.asarray(q, dtype=np.float64) * self.s_out
+
+
+def calibrate_and_design(
+    weights: list[dict],
+    geo: Geometry,
+    calib_inputs: np.ndarray,
+    unify: bool = False,
+) -> QuantModel:
+    """Run calibration batches through the float encoder, then fix every
+    design-time constant (paper §III-A: scales are frozen per layer).
+
+    ``unify=True`` makes every layer share one set of activation/weight
+    scales (max over layers) so all layers use identical design-time
+    constants — required when one HLO executable serves every layer of a
+    shaped model.
+    """
+    cal = Calibrator()
+    for x in calib_inputs:
+        M.float_encoder(np.asarray(x, dtype=np.float64), weights, geo, cal=cal)
+
+    if unify:
+        # fold per-layer taps into layer-0 names by max
+        merged: dict[str, float] = {}
+        for name, v in cal.taps.items():
+            key = "L0." + name.split(".", 1)[1]
+            merged[key] = max(merged.get(key, 0.0), v)
+        cal.taps = merged
+        lc = calibration_from_taps(cal, 0)
+        wscales = {
+            name: max(int8_scale(np.abs(w[name]).max()) for w in weights)
+            for name in ("wq", "wk", "wv", "wo", "w1", "w2")
+        }
+        layers = [
+            design_layer(w, lc, geo.d, geo.heads, weight_scales=wscales)
+            for w in weights
+        ]
+    else:
+        layers = []
+        for i, w in enumerate(weights):
+            lc = calibration_from_taps(cal, i)
+            layers.append(design_layer(w, lc, geo.d, geo.heads))
+
+    s_in = layers[0].cal.attn.s_x
+    s_out = layers[-1].cal.ffn.s_out
+    return QuantModel(geo=geo, layers=layers, s_in=s_in, s_out=s_out)
+
+
+def run_quant(qm: QuantModel, x: np.ndarray, use_pallas: bool = True) -> np.ndarray:
+    """Quantize a float input, run the integer encoder, return INT8 codes."""
+    q_x = qm.quantize_input(x)
+    return np.asarray(M.quant_encoder(q_x, qm.layers, qm.geo, use_pallas=use_pallas))
+
+
+def run_float(weights: list[dict], geo: Geometry, x: np.ndarray) -> np.ndarray:
+    return np.asarray(M.float_encoder(np.asarray(x, dtype=np.float64), weights, geo))
+
+
+def quantization_error(
+    qm: QuantModel, weights: list[dict], geo: Geometry, x: np.ndarray,
+    use_pallas: bool = False,
+):
+    """Float-vs-integer encoder divergence on one input (validation metric:
+    the paper's Table II accuracy deltas trace back to exactly this)."""
+    f = run_float(weights, geo, x)
+    q = qm.dequantize_output(run_quant(qm, x, use_pallas=use_pallas))
+    err = np.abs(f - q)
+    denom = max(float(np.abs(f).max()), 1e-9)
+    return {
+        "max_abs": float(err.max()),
+        "mean_abs": float(err.mean()),
+        "rel": float(err.max() / denom),
+        "cos": float(
+            np.dot(f.ravel(), q.ravel())
+            / (np.linalg.norm(f) * np.linalg.norm(q) + 1e-30)
+        ),
+    }

@@ -1,0 +1,235 @@
+"""Calibration + design-time constant generation (paper §III-A).
+
+The paper fixes every scaling factor at design time; this module is the
+"design time".  Calibration runs the float model over a sample batch,
+records max-abs statistics at every tap the hardware requantizes at, and
+turns them into:
+
+  * symmetric INT8 scales for activations and weights,
+  * dyadic (b, 2^c) constants for every Requantization / residual-align /
+    Scale block,
+  * the q1..q8-style polynomial constants for Softmax / GELU / LayerNorm.
+
+Everything downstream (the L2 quantized graph, the AOT artifacts, and the
+rust simulator via ``manifest.json``) consumes the output of this module.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .intops import (
+    LN_P,
+    SM_UNIT,
+    Dyadic,
+    GeluConsts,
+    LayerNormConsts,
+    SoftmaxConsts,
+)
+
+
+def int8_scale(max_abs: float, margin: float = 1.0) -> float:
+    """Symmetric INT8 scale for a tensor with the given max-abs statistic."""
+    m = max(float(max_abs), 1e-8) * margin
+    return m / 127.0
+
+
+def quantize_tensor(x: np.ndarray, scale: float) -> np.ndarray:
+    """Round-to-nearest symmetric quantization to INT8 range (build-time)."""
+    q = np.rint(np.asarray(x, dtype=np.float64) / scale)
+    return np.clip(q, -128, 127).astype(np.int32)
+
+
+def quantize_bias(bias: np.ndarray, acc_scale: float) -> np.ndarray:
+    """Bias folds into the INT32 accumulator, so it quantizes at the
+    accumulator scale s_x * s_w (paper Fig. 6's readout-time addition)."""
+    q = np.rint(np.asarray(bias, dtype=np.float64) / acc_scale)
+    lo, hi = -(2**31), 2**31 - 1
+    return np.clip(q, lo, hi).astype(np.int32)
+
+
+@dataclass(frozen=True)
+class AttnScales:
+    """Per-layer activation scales picked by calibration (MHSA path)."""
+
+    s_x: float      # INT8 input to the encoder layer
+    s_q8: float     # INT8 Q after requant
+    s_k8: float     # INT8 K after requant
+    s_v8: float     # INT8 V after requant
+    s_ctx: float    # INT8 attention context (after P.V requant)
+
+
+@dataclass(frozen=True)
+class FfnScales:
+    s_x2: float     # INT8 input to FFN (after LN1 requant)
+    s_h: float      # INT8 hidden after GELU requant
+    s_out: float    # INT8 layer output (after LN2 requant) == next s_x
+
+
+@dataclass(frozen=True)
+class LayerCalibration:
+    """All calibration statistics for one encoder layer."""
+
+    attn: AttnScales
+    ffn: FfnScales
+    s_gamma1: float
+    s_gamma2: float
+
+
+@dataclass
+class Calibrator:
+    """Accumulates max-abs statistics over calibration batches."""
+
+    taps: dict = field(default_factory=dict)
+
+    def observe(self, name: str, x) -> None:
+        m = float(np.max(np.abs(np.asarray(x)))) if np.asarray(x).size else 0.0
+        self.taps[name] = max(self.taps.get(name, 0.0), m)
+
+    def scale(self, name: str) -> float:
+        return int8_scale(self.taps[name])
+
+
+# --- per-layer integer parameter bundle --------------------------------------
+
+@dataclass(frozen=True)
+class QuantLayerParams:
+    """Everything one encoder layer's hardware needs, all integers.
+
+    Weight layout (d = model dim, k heads, dh = d/k, dff = FFN dim):
+      wq/wk/wv: (d, d) INT8   bq/bk/bv: (d,) INT32 at s_x*s_w
+      wo: (d, d) INT8         bo: (d,) INT32
+      w1: (d, dff) INT8       b1: (dff,) INT32
+      w2: (dff, d) INT8       b2: (d,) INT32
+      gamma1/gamma2: (d,) INT8 at s_gamma; beta1/beta2: (d,) INT32 at s_ln_out
+    """
+
+    # quantized weights
+    wq: np.ndarray; wk: np.ndarray; wv: np.ndarray; wo: np.ndarray
+    bq: np.ndarray; bk: np.ndarray; bv: np.ndarray; bo: np.ndarray
+    w1: np.ndarray; w2: np.ndarray
+    b1: np.ndarray; b2: np.ndarray
+    gamma1: np.ndarray; beta1: np.ndarray
+    gamma2: np.ndarray; beta2: np.ndarray
+    # requantization dyadics
+    dy_q: Dyadic; dy_k: Dyadic; dy_v: Dyadic      # QKV acc -> INT8
+    dy_scale: Dyadic                              # attention Scale (1/sqrt(dh))
+    dy_ctx: Dyadic                                # P.V acc -> INT8 context
+    dy_res1: Dyadic                               # attn-out acc -> s_x align
+    dy_ln1: Dyadic                                # LN1 out -> INT8 s_x2
+    dy_gelu: Dyadic                               # GELU out -> INT8 s_h
+    dy_res2: Dyadic                               # FFN-out acc -> s_x2 align
+    dy_ln2: Dyadic                                # LN2 out -> INT8 s_out
+    # nonlinear design-time constants
+    sm: SoftmaxConsts
+    gelu: GeluConsts
+    ln1: LayerNormConsts
+    ln2: LayerNormConsts
+    # the calibrated scales (kept for validation / manifest)
+    cal: LayerCalibration
+
+
+def design_layer(
+    float_weights: dict, cal: LayerCalibration, d: int, heads: int,
+    weight_scales: dict | None = None,
+) -> QuantLayerParams:
+    """Turn one layer's float weights + calibration into integer params.
+
+    ``float_weights`` keys: wq wk wv wo bq bk bv bo w1 b1 w2 b2
+    gamma1 beta1 gamma2 beta2 (numpy arrays, float).  ``weight_scales``
+    optionally overrides the per-tensor weight scales (used by the unified
+    shaped-model artifacts, where every layer must share one set of
+    design-time constants so a single HLO executable serves all layers).
+    """
+    fw = float_weights
+    a = cal.attn
+    f = cal.ffn
+    dh = d // heads
+
+    ws = weight_scales or {}
+
+    def wscale(name):
+        return ws.get(name) or int8_scale(np.abs(fw[name]).max())
+
+    s_wq = wscale("wq")
+    s_wk = wscale("wk")
+    s_wv = wscale("wv")
+    s_wo = wscale("wo")
+    s_w1 = wscale("w1")
+    s_w2 = wscale("w2")
+
+    # ----- MHSA path -----
+    # QKV projections accumulate at s_x*s_w, requantize to the INT8 scales.
+    dy_q = Dyadic.approximate(a.s_x * s_wq / a.s_q8)
+    dy_k = Dyadic.approximate(a.s_x * s_wk / a.s_k8)
+    dy_v = Dyadic.approximate(a.s_x * s_wv / a.s_v8)
+
+    # Attention Scale block: value-scale by 1/sqrt(dh).  The paper notes
+    # this is a pure shift when the factor is a power of two — dh = 64
+    # (RoBERTa and DeiT-S both) gives exactly >> 3.
+    inv = 1.0 / math.sqrt(dh)
+    if (1.0 / inv).is_integer() and (int(1.0 / inv) & (int(1.0 / inv) - 1)) == 0:
+        dy_scale = Dyadic(b=1, c=int(math.log2(1.0 / inv)))
+    else:
+        dy_scale = Dyadic.approximate(inv)
+
+    s_pe = a.s_q8 * a.s_k8  # scale of the Scale-block output (value shrunk)
+    sm = SoftmaxConsts.design(s_pe)
+    # probs are INT8 at 1/SM_UNIT; context acc at s_v8/SM_UNIT -> s_ctx
+    dy_ctx = Dyadic.approximate(a.s_v8 / SM_UNIT / a.s_ctx)
+    # output projection acc (s_ctx*s_wo) aligns to the residual scale s_x
+    dy_res1 = Dyadic.approximate(a.s_ctx * s_wo / a.s_x)
+
+    # ----- LayerNorm 1 -----
+    ln1 = LayerNormConsts(s_in=a.s_x, s_gamma=cal.s_gamma1, d=d)
+    dy_ln1 = Dyadic.approximate(ln1.s_out / f.s_x2)
+
+    # ----- FFN path -----
+    gelu = GeluConsts.design(f.s_x2 * s_w1)
+    # GELU output scale is tiny (s_in * s_erf / 2): allow deep shifts.
+    dy_gelu = Dyadic.approximate(abs(gelu.s_out) / f.s_h, bits=14, max_shift=52)
+    dy_res2 = Dyadic.approximate(f.s_h * s_w2 / f.s_x2)
+    ln2 = LayerNormConsts(s_in=f.s_x2, s_gamma=cal.s_gamma2, d=d)
+    dy_ln2 = Dyadic.approximate(ln2.s_out / f.s_out)
+
+    def w8(name, s):
+        return quantize_tensor(fw[name], s)
+
+    return QuantLayerParams(
+        wq=w8("wq", s_wq), wk=w8("wk", s_wk), wv=w8("wv", s_wv), wo=w8("wo", s_wo),
+        bq=quantize_bias(fw["bq"], a.s_x * s_wq),
+        bk=quantize_bias(fw["bk"], a.s_x * s_wk),
+        bv=quantize_bias(fw["bv"], a.s_x * s_wv),
+        bo=quantize_bias(fw["bo"], a.s_ctx * s_wo),
+        w1=w8("w1", s_w1), w2=w8("w2", s_w2),
+        b1=quantize_bias(fw["b1"], f.s_x2 * s_w1),
+        b2=quantize_bias(fw["b2"], f.s_h * s_w2),
+        gamma1=quantize_tensor(fw["gamma1"], cal.s_gamma1),
+        beta1=quantize_bias(fw["beta1"], ln1.s_out),
+        gamma2=quantize_tensor(fw["gamma2"], cal.s_gamma2),
+        beta2=quantize_bias(fw["beta2"], ln2.s_out),
+        dy_q=dy_q, dy_k=dy_k, dy_v=dy_v, dy_scale=dy_scale, dy_ctx=dy_ctx,
+        dy_res1=dy_res1, dy_ln1=dy_ln1, dy_gelu=dy_gelu, dy_res2=dy_res2,
+        dy_ln2=dy_ln2,
+        sm=sm, gelu=gelu, ln1=ln1, ln2=ln2, cal=cal,
+    )
+
+
+def calibration_from_taps(cal: Calibrator, layer: int) -> LayerCalibration:
+    """Assemble one layer's calibration from tap statistics recorded by the
+    float model (tap names are ``L{i}.<tap>``)."""
+
+    def s(tap: str) -> float:
+        return cal.scale(f"L{layer}.{tap}")
+
+    return LayerCalibration(
+        attn=AttnScales(
+            s_x=s("x"), s_q8=s("q"), s_k8=s("k"), s_v8=s("v"), s_ctx=s("ctx")
+        ),
+        ffn=FfnScales(s_x2=s("x2"), s_h=s("h"), s_out=s("out")),
+        s_gamma1=int8_scale(cal.taps[f"L{layer}.gamma1"]),
+        s_gamma2=int8_scale(cal.taps[f"L{layer}.gamma2"]),
+    )

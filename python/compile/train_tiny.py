@@ -1,0 +1,182 @@
+"""Train the tiny-task model (DESIGN.md §5 accuracy substitution).
+
+The paper reports RoBERTa accuracy on GLUE SST-2 — a sentence-level binary
+classification task.  Without the pre-trained checkpoints, we train a
+small encoder from scratch on a *synthetic* classification task that
+needs the same machinery (attention, LayerNorm, GELU FFN) and then
+measure the float-vs-integer accuracy delta the same way the paper's
+Table II does.
+
+Task ("keyed sentiment"): the vocabulary splits into a class-0 half and a
+class-1 half.  A sequence's tokens are drawn with probability ``BIAS``
+from its label's half (the distributional signal a sentiment task has),
+and one KEY token is followed by a payload token drawn from the label's
+half with certainty (a routing signal attention can sharpen).  A
+bag-of-embeddings model tops out near the Bayes rate of the biased
+mixture; attention over the KEY pushes past it.
+
+The model: token+position embeddings -> ``layers``-layer encoder
+(model.float_encoder) -> mean pool -> linear head.  Trained with plain
+Adam, implemented here (no optax in the offline environment).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .model import Geometry
+
+VOCAB = 64
+KEY_TOKEN = VOCAB - 1
+N_CLASSES = 2
+
+
+BIAS = 0.65  # probability a token comes from the label's vocabulary half
+HALF = (VOCAB - 1) // 2  # class-0 tokens: [0, HALF); class-1: [HALF, VOCAB-1)
+
+
+def make_dataset(rng: np.random.Generator, n: int, m: int):
+    """Generate ``n`` sequences of length ``m`` with labels."""
+    labels = rng.integers(0, 2, n).astype(np.int32)
+    own = rng.random((n, m)) < BIAS
+    lo = rng.integers(0, HALF, (n, m))
+    hi = rng.integers(HALF, VOCAB - 1, (n, m))
+    own_tok = np.where(labels[:, None] == 1, hi, lo)
+    other_tok = np.where(labels[:, None] == 1, lo, hi)
+    toks = np.where(own, own_tok, other_tok)
+    # keyed payload: deterministic routing signal
+    pos = rng.integers(0, m - 1, n)
+    payload = np.where(
+        labels == 1, rng.integers(HALF, VOCAB - 1, n), rng.integers(0, HALF, n)
+    )
+    toks[np.arange(n), pos] = KEY_TOKEN
+    toks[np.arange(n), pos + 1] = payload
+    return toks.astype(np.int32), labels
+
+
+@dataclass
+class TinyModel:
+    emb: np.ndarray      # (VOCAB, d) f32
+    pos: np.ndarray      # (m, d) f32
+    encoder: list[dict]  # float layer weights
+    w_head: np.ndarray   # (d, 2) f32
+    b_head: np.ndarray   # (2,) f32
+    geo: Geometry
+
+
+def _params_to_pytree(model: TinyModel):
+    return {
+        "emb": jnp.asarray(model.emb),
+        "pos": jnp.asarray(model.pos),
+        "enc": [{k: jnp.asarray(v) for k, v in w.items()} for w in model.encoder],
+        "w_head": jnp.asarray(model.w_head),
+        "b_head": jnp.asarray(model.b_head),
+    }
+
+
+def embed(params, toks):
+    return params["emb"][toks] + params["pos"]
+
+
+def forward_logits(params, toks, geo: Geometry):
+    x = embed(params, toks)
+    for w in params["enc"]:
+        x = M.float_encoder_layer(x, w, geo)
+    pooled = x.mean(axis=0)
+    return pooled @ params["w_head"] + params["b_head"]
+
+
+def init_model(seed: int, geo: Geometry) -> TinyModel:
+    rng = np.random.default_rng(seed)
+    encoder = M.init_encoder_weights(seed + 1, geo)
+    # Post-LN transformers need identity-leaning init to train from scratch:
+    # exact gamma=1/beta=0 and down-scaled residual-branch projections.
+    for w in encoder:
+        w["gamma1"] = np.ones(geo.d)
+        w["beta1"] = np.zeros(geo.d)
+        w["gamma2"] = np.ones(geo.d)
+        w["beta2"] = np.zeros(geo.d)
+        w["wo"] = w["wo"] * 0.3
+        w["w2"] = w["w2"] * 0.3
+    return TinyModel(
+        emb=rng.normal(0, 0.5, (VOCAB, geo.d)).astype(np.float32),
+        pos=rng.normal(0, 0.1, (geo.m, geo.d)).astype(np.float32),
+        encoder=encoder,
+        w_head=rng.normal(0, 0.1, (geo.d, N_CLASSES)).astype(np.float32),
+        b_head=np.zeros(N_CLASSES, dtype=np.float32),
+        geo=geo,
+    )
+
+
+def train(
+    geo: Geometry,
+    seed: int = 0,
+    steps: int = 400,
+    batch: int = 64,
+    lr: float = 3e-4,
+    log_every: int = 50,
+    log=print,
+) -> tuple[TinyModel, list[float]]:
+    """Adam training loop; returns the trained model and the loss curve."""
+    rng = np.random.default_rng(seed)
+    model = init_model(seed, geo)
+    params = _params_to_pytree(model)
+
+    def loss_fn(p, toks, labels):
+        logits = jax.vmap(lambda t: forward_logits(p, t, geo))(toks)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+        return nll
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    # --- hand-rolled Adam (optax is not in the offline environment) ---
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    mu = jax.tree.map(jnp.zeros_like, params)
+    nu = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def adam_step(p, mu, nu, g, t):
+        mu = jax.tree.map(lambda m, gg: b1 * m + (1 - b1) * gg, mu, g)
+        nu = jax.tree.map(lambda v, gg: b2 * v + (1 - b2) * gg * gg, nu, g)
+        def upd(pp, m, v):
+            mhat = m / (1 - b1**t)
+            vhat = v / (1 - b2**t)
+            return pp - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return jax.tree.map(upd, p, mu, nu), mu, nu
+
+    warmup = max(1, steps // 10)
+    losses = []
+    for step in range(1, steps + 1):
+        toks, labels = make_dataset(rng, batch, geo.m)
+        loss, g = grad_fn(params, jnp.asarray(toks), jnp.asarray(labels))
+        # linear lr warmup (post-LN models diverge or stall without it)
+        scale = min(1.0, step / warmup)
+        g = jax.tree.map(lambda x: x * scale, g)
+        params, mu, nu = adam_step(params, mu, nu, g, jnp.float32(step))
+        losses.append(float(loss))
+        if step % log_every == 0:
+            log(f"  step {step:4d}  loss {float(loss):.4f}")
+
+    model = TinyModel(
+        emb=np.asarray(params["emb"]),
+        pos=np.asarray(params["pos"]),
+        encoder=[{k: np.asarray(v, dtype=np.float64) for k, v in w.items()}
+                 for w in params["enc"]],
+        w_head=np.asarray(params["w_head"]),
+        b_head=np.asarray(params["b_head"]),
+        geo=geo,
+    )
+    return model, losses
+
+
+def accuracy(model: TinyModel, toks: np.ndarray, labels: np.ndarray) -> float:
+    params = _params_to_pytree(model)
+    fwd = jax.jit(jax.vmap(lambda t: forward_logits(params, t, model.geo)))
+    preds = np.asarray(jnp.argmax(fwd(jnp.asarray(toks)), axis=-1))
+    return float((preds == labels).mean())

@@ -1,0 +1,245 @@
+"""Bit-exact kernel tests: Pallas kernels vs independent numpy oracles.
+
+This is the CORE correctness signal of the L1 layer: every SwiftTron
+hardware block's Pallas kernel must agree *bit-for-bit* with the
+scalar-bignum oracle in ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import pytest
+
+from compile import intops
+from compile import kernels as K
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+# --- MatMul block (Fig. 6) ----------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 1, 1), (4, 4, 4), (7, 5, 3), (16, 64, 8), (48, 96, 32), (128, 256, 64)],
+)
+def test_int_matmul_matches_oracle(m, k, n):
+    x = RNG.integers(-128, 128, (m, k)).astype(np.int8)
+    w = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    got = np.asarray(K.int_matmul(x, w))
+    assert np.array_equal(got, ref.np_i_matmul(x, w))
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (33, 17, 9), (64, 128, 48)])
+def test_int_matmul_with_bias(m, k, n):
+    x = RNG.integers(-128, 128, (m, k)).astype(np.int8)
+    w = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    b = RNG.integers(-(2**20), 2**20, (n,)).astype(np.int32)
+    got = np.asarray(K.int_matmul(x, w, b))
+    assert np.array_equal(got, ref.np_i_matmul(x, w, b))
+
+
+def test_int_matmul_block_shape_invariance():
+    """Tiling is an implementation detail: any legal block split must give
+    the identical INT32 accumulator (integer addition is associative)."""
+    x = RNG.integers(-128, 128, (64, 96)).astype(np.int8)
+    w = RNG.integers(-128, 128, (96, 64)).astype(np.int8)
+    want = ref.np_i_matmul(x, w)
+    for bm, bn, bk in [(64, 64, 96), (32, 32, 32), (16, 64, 48), (8, 8, 8)]:
+        got = np.asarray(K.int_matmul(x, w, bm=bm, bn=bn, bk=bk))
+        assert np.array_equal(got, want), (bm, bn, bk)
+
+
+def test_int_matmul_extremes():
+    """Worst-case INT8 operands must not overflow the INT32 accumulator for
+    paper-scale contractions (k up to d_ff=3072: 3072*128*128 < 2^31)."""
+    k = 512
+    x = np.full((4, k), -128, dtype=np.int8)
+    w = np.full((k, 4), -128, dtype=np.int8)
+    got = np.asarray(K.int_matmul(x, w))
+    assert np.all(got == k * 128 * 128)
+
+
+def test_int_matmul_identity():
+    eye = np.eye(32, dtype=np.int8)
+    x = RNG.integers(-128, 128, (16, 32)).astype(np.int8)
+    assert np.array_equal(np.asarray(K.int_matmul(x, eye)), x.astype(np.int32))
+
+
+# --- Requantization unit (Fig. 7) ---------------------------------------------
+
+@pytest.mark.parametrize("scale_ratio", [0.5, 0.01, 0.0003, 1.7, 123.4])
+def test_requantize_matches_oracle(scale_ratio):
+    dy = intops.Dyadic.approximate(scale_ratio)
+    q = RNG.integers(-(2**26), 2**26, (32, 48)).astype(np.int32)
+    got = np.asarray(K.requantize(q, dy))
+    assert np.array_equal(got, ref.np_requantize(q, dy.b, dy.c))
+
+
+def test_requantize_saturates():
+    dy = intops.Dyadic.approximate(1.0)
+    q = np.array([[2**30, -(2**30), 0, 127, -128, 128, -129]], dtype=np.int32)
+    got = np.asarray(K.requantize(q, dy))
+    assert got.max() == 127 and got.min() == -128
+
+
+def test_requantize_negative_floor():
+    """Arithmetic shift floors toward -inf; the oracle must agree on
+    negative inputs (a classic trunc-vs-floor divergence spot)."""
+    dy = intops.Dyadic(b=3, c=2)  # * 0.75
+    q = np.array([[-1, -2, -3, -5, 1, 2, 3, 5]], dtype=np.int32)
+    got = np.asarray(K.requantize(q, dy))
+    assert np.array_equal(got, ref.np_requantize(q, dy.b, dy.c))
+    assert got[0, 0] == -1  # (-1*3)>>2 == -1, not 0
+
+
+def test_dyadic_approximation_error():
+    for x in [1e-4, 0.01, 0.3, 1.0, 7.7, 999.0]:
+        dy = intops.Dyadic.approximate(x)
+        assert abs(dy.value() - x) / x < 2 ** -14, (x, dy)
+
+
+# --- Softmax unit (Figs. 11-12) -------------------------------------------------
+
+@pytest.mark.parametrize("s_in", [0.1, 0.05, 0.01, 0.002])
+@pytest.mark.parametrize("m,n", [(1, 8), (8, 24), (32, 256)])
+def test_i_softmax_matches_oracle(s_in, m, n):
+    c = intops.SoftmaxConsts.design(s_in)
+    lim = min(int(8.0 / s_in), 2**20)  # keep inputs in a plausible logit range
+    q = RNG.integers(-lim, lim, (m, n)).astype(np.int32)
+    got = np.asarray(K.i_softmax(q, c))
+    assert np.array_equal(got, ref.np_i_softmax(q, c))
+
+
+def test_i_softmax_float_error_budget():
+    """Paper claim (via I-BERT): polynomial softmax is accurate enough to
+    preserve accuracy. Dequantized outputs must be within 3/127 of the
+    true softmax elementwise and sum to ~1."""
+    c = intops.SoftmaxConsts.design(0.02)
+    q = RNG.integers(-300, 300, (64, 128)).astype(np.int32)
+    got = np.asarray(K.i_softmax(q, c)) / intops.SM_UNIT
+    want = ref.f32_softmax(q * 0.02)
+    assert np.abs(got - want).max() < 3.0 / 127.0
+    assert np.abs(got.sum(-1) - 1.0).max() < 0.1
+
+
+def test_i_softmax_constant_row():
+    c = intops.SoftmaxConsts.design(0.05)
+    q = np.full((4, 16), 37, dtype=np.int32)
+    got = np.asarray(K.i_softmax(q, c))
+    assert np.all(got == got[0, 0])  # uniform distribution
+
+
+def test_i_softmax_one_hot_row():
+    c = intops.SoftmaxConsts.design(0.05)
+    q = np.full((1, 16), -(2**15), dtype=np.int32)
+    q[0, 3] = 2**15
+    got = np.asarray(K.i_softmax(q, c))
+    assert got[0, 3] == intops.SM_UNIT and np.all(np.delete(got[0], 3) == 0)
+
+
+def test_i_exp_monotone_nonincreasing_as_input_drops():
+    c = intops.SoftmaxConsts.design(0.05)
+    xs = np.arange(0, -2000, -7, dtype=np.int64)
+    es = [ref.np_i_exp_scalar(int(x), c) for x in xs]
+    jnp_es = np.asarray(intops.i_exp(xs, c))
+    assert np.array_equal(np.asarray(es), jnp_es)
+    assert all(a >= b for a, b in zip(es, es[1:]))
+
+
+# --- GELU unit (Fig. 14) --------------------------------------------------------
+
+@pytest.mark.parametrize("s_in", [0.1, 0.03, 0.005])
+@pytest.mark.parametrize("m,n", [(1, 4), (16, 32), (64, 128)])
+def test_i_gelu_matches_oracle(s_in, m, n):
+    c = intops.GeluConsts.design(s_in)
+    lim = min(int(6.0 / s_in), 2**18)
+    q = RNG.integers(-lim, lim, (m, n)).astype(np.int32)
+    got = np.asarray(K.i_gelu(q, c))
+    assert np.array_equal(got, ref.np_i_gelu(q, c))
+
+
+def test_i_gelu_float_error_budget():
+    c = intops.GeluConsts.design(0.02)
+    q = RNG.integers(-300, 300, (64, 64)).astype(np.int32)
+    got = np.asarray(K.i_gelu(q, c)) * c.s_out
+    want = ref.f32_gelu(q * 0.02)
+    assert np.abs(got - want).max() < 0.05
+
+
+def test_i_gelu_asymptotes():
+    """GELU(x) -> x for large x, -> 0 for very negative x."""
+    c = intops.GeluConsts.design(0.05)
+    big, neg = 4000, -4000  # +-200 in real units... clipped erf => +-1
+    got_big = float(ref.np_i_gelu(np.array([big]), c)[0] * c.s_out)
+    got_neg = float(ref.np_i_gelu(np.array([neg]), c)[0] * c.s_out)
+    assert abs(got_big - big * 0.05) < 0.5
+    assert abs(got_neg) < 0.5
+
+
+def test_i_gelu_zero():
+    c = intops.GeluConsts.design(0.02)
+    assert int(ref.np_i_gelu(np.array([0]), c)[0]) == 0
+
+
+# --- LayerNorm unit (Fig. 15) ----------------------------------------------------
+
+@pytest.mark.parametrize("d", [8, 32, 96, 768])
+def test_i_layernorm_matches_oracle(d):
+    c = intops.LayerNormConsts(s_in=0.01, s_gamma=0.01, d=d)
+    q = RNG.integers(-1000, 1000, (8, d)).astype(np.int32)
+    g = RNG.integers(-127, 128, (d,)).astype(np.int32)
+    b = RNG.integers(-5000, 5000, (d,)).astype(np.int32)
+    got = np.asarray(K.i_layernorm(q, g, b, c))
+    assert np.array_equal(got, ref.np_i_layernorm(q, g, b, c))
+
+
+def test_i_layernorm_float_error_budget():
+    d = 128
+    c = intops.LayerNormConsts(s_in=0.01, s_gamma=0.01, d=d)
+    q = RNG.integers(-2000, 2000, (16, d)).astype(np.int32)
+    g = RNG.integers(1, 128, (d,)).astype(np.int32)
+    b = RNG.integers(-5000, 5000, (d,)).astype(np.int32)
+    got = np.asarray(K.i_layernorm(q, g, b, c)) * c.s_out
+    want = ref.f32_layernorm(q * 0.01, g * 0.01, b * c.s_out)
+    assert np.abs(got - want).max() < 0.08
+
+
+def test_i_layernorm_constant_row_is_beta():
+    """A constant row has zero variance: output must collapse to beta."""
+    d = 16
+    c = intops.LayerNormConsts(s_in=0.01, s_gamma=0.01, d=d)
+    q = np.full((2, d), 123, dtype=np.int32)
+    g = np.full((d,), 64, dtype=np.int32)
+    b = RNG.integers(-100, 100, (d,)).astype(np.int32)
+    got = np.asarray(K.i_layernorm(q, g, b, c))
+    assert np.array_equal(got, np.broadcast_to(b, (2, d)))
+
+
+# --- iterative integer sqrt (paper §III-I) ---------------------------------------
+
+@pytest.mark.parametrize(
+    "n", [0, 1, 2, 3, 4, 15, 16, 17, 255, 256, 1 << 20, (1 << 31) - 1, 1 << 40]
+)
+def test_i_sqrt_exact(n):
+    got, iters = ref.np_i_sqrt_scalar(n)
+    want = int(np.sqrt(np.float64(n)))
+    # Babylonian isqrt == floor(sqrt(n)), possibly off by float rounding
+    assert got * got <= n < (got + 1) * (got + 1)
+    assert iters <= intops.ISQRT_MAX_ITERS
+
+
+def test_i_sqrt_jnp_matches_scalar():
+    ns = np.array(
+        [0, 1, 2, 5, 99, 1024, 123456, 10**9, 10**12, (1 << 31) - 1], dtype=np.int64
+    )
+    got = np.asarray(intops.i_sqrt(ns))
+    want = np.array([ref.np_i_sqrt_scalar(int(n))[0] for n in ns])
+    assert np.array_equal(got, want)
+
+
+def test_i_sqrt_iterations_bounded_paper_worst_case():
+    """The simulator charges worst-case sqrt cycles (paper footnote 3);
+    verify the true iteration count never exceeds the model's bound."""
+    worst = 0
+    for n in [int(x) for x in RNG.integers(0, 1 << 62, 2000)]:
+        worst = max(worst, ref.np_i_sqrt_scalar(n)[1])
+    assert worst <= intops.ISQRT_MAX_ITERS

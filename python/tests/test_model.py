@@ -1,0 +1,115 @@
+"""L2 tests: quantized encoder vs float reference, pallas/intops
+equivalence, calibration pipeline, blob round-trips, tiny-task data."""
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import pipeline as P
+from compile import train_tiny as T
+from compile.blobs import BlobWriter, read_blob
+from compile.quantize import int8_scale, quantize_tensor
+
+GEO = M.GEOMETRIES["tiny"]
+
+
+@pytest.fixture(scope="module")
+def quant_setup():
+    rng = np.random.default_rng(7)
+    weights = M.init_encoder_weights(3, GEO)
+    calib = rng.normal(0, 1.0, (8, GEO.m, GEO.d))
+    qm = P.calibrate_and_design(weights, GEO, calib)
+    x = rng.normal(0, 1.0, (GEO.m, GEO.d))
+    return weights, qm, x
+
+
+def test_quant_model_tracks_float(quant_setup):
+    weights, qm, x = quant_setup
+    err = P.quantization_error(qm, weights, GEO, x, use_pallas=False)
+    assert err["cos"] > 0.99, err
+    assert err["rel"] < 0.15, err
+
+
+def test_pallas_and_intops_bit_identical(quant_setup):
+    _, qm, x = quant_setup
+    a = P.run_quant(qm, x, use_pallas=False)
+    b = P.run_quant(qm, x, use_pallas=True)
+    assert np.array_equal(a, b)
+
+
+def test_output_is_int8_coded(quant_setup):
+    _, qm, x = quant_setup
+    q = P.run_quant(qm, x, use_pallas=False)
+    assert q.min() >= -128 and q.max() <= 127
+
+
+def test_unified_calibration_shares_constants():
+    rng = np.random.default_rng(11)
+    weights = M.init_encoder_weights(5, GEO)
+    calib = rng.normal(0, 1.0, (4, GEO.m, GEO.d))
+    qm = P.calibrate_and_design(weights, GEO, calib, unify=True)
+    l0, l1 = qm.layers[0], qm.layers[1]
+    assert l0.dy_q == l1.dy_q
+    assert l0.sm == l1.sm
+    assert l0.gelu == l1.gelu
+
+
+def test_scale_block_is_pure_shift_for_dh64():
+    """dh = 64 -> 1/sqrt(dh) = 1/8: the paper's claim that the Scale
+    block degenerates to a shift must hold in the design output."""
+    geo = M.GEOMETRIES["roberta_base"]
+    rng = np.random.default_rng(1)
+    weights = [M.init_layer_weights(rng, geo)]
+    geo1 = M.Geometry(d=geo.d, heads=geo.heads, m=8, d_ff=geo.d_ff, layers=1)
+    calib = rng.normal(0, 1.0, (1, geo1.m, geo1.d))
+    qm = P.calibrate_and_design(weights, geo1, calib)
+    dy = qm.layers[0].dy_scale
+    assert dy.b == 1 and dy.c == 3  # >> 3 == / 8 == / sqrt(64)
+
+
+def test_blob_roundtrip(tmp_path):
+    w = BlobWriter()
+    a = np.arange(12, dtype=np.int32).reshape(3, 4)
+    b = np.linspace(0, 1, 5, dtype=np.float32)
+    c = (np.arange(6) - 3).astype(np.int32)
+    w.add("a", a, "i32")
+    w.add("b", b, "f32")
+    w.add("c", c, "i8")
+    w.write(str(tmp_path / "t"))
+    out = read_blob(str(tmp_path / "t"))
+    assert np.array_equal(out["a"], a)
+    assert np.allclose(out["b"], b)
+    assert np.array_equal(out["c"], c)
+
+
+def test_blob_rejects_duplicates():
+    w = BlobWriter()
+    w.add("x", np.zeros(1, dtype=np.int32))
+    with pytest.raises(KeyError):
+        w.add("x", np.zeros(1, dtype=np.int32))
+
+
+def test_tiny_task_dataset_properties():
+    toks, labels = T.make_dataset(np.random.default_rng(0), 64, GEO.m)
+    assert toks.shape == (64, GEO.m)
+    assert set(np.unique(labels)) <= {0, 1}
+    # every sequence contains the KEY token
+    assert all((row == T.KEY_TOKEN).any() for row in toks)
+    # class-conditional token distributions differ (the learnable signal)
+    m0 = toks[labels == 0].mean()
+    m1 = toks[labels == 1].mean()
+    assert abs(m0 - m1) > 2.0
+
+
+def test_quantize_tensor_saturates_and_rounds():
+    q = quantize_tensor(np.array([0.0, 1.0, -1.0, 100.0]), 0.01)
+    assert list(q) == [0, 100, -100, 127]
+    assert int8_scale(12.7) == pytest.approx(0.1)
+
+
+def test_geometry_presets_match_rust():
+    # the same table lives in rust/src/model/geometry.rs
+    g = M.GEOMETRIES["roberta_base"]
+    assert (g.d, g.heads, g.m, g.d_ff, g.layers) == (768, 12, 256, 3072, 12)
+    g = M.GEOMETRIES["deit_s"]
+    assert (g.d, g.heads, g.m, g.d_ff, g.layers) == (384, 6, 197, 1536, 12)

@@ -1,0 +1,111 @@
+"""Hypothesis property sweeps over shapes, dtypes, scales, and block sizes.
+
+These complement the fixed-case tests: the kernel/oracle agreement and the
+spec's algebraic invariants must hold for *arbitrary* legal inputs.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import intops
+from compile import kernels as K
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def matmul_case(draw):
+    m = draw(st.integers(1, 24))
+    k = draw(st.integers(1, 48))
+    n = draw(st.integers(1, 24))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    bias = None
+    if draw(st.booleans()):
+        bias = rng.integers(-(2**16), 2**16, (n,)).astype(np.int32)
+    return x, w, bias
+
+
+@given(matmul_case())
+@settings(**SETTINGS)
+def test_matmul_any_shape(case):
+    x, w, bias = case
+    got = np.asarray(K.int_matmul(x, w, bias))
+    assert np.array_equal(got, ref.np_i_matmul(x, w, bias))
+
+
+@given(
+    st.floats(1e-4, 10.0),
+    st.integers(1, 16),
+    st.integers(2, 64),
+    st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_softmax_any_scale_shape(s_in, m, n, seed):
+    c = intops.SoftmaxConsts.design(s_in)
+    rng = np.random.default_rng(seed)
+    lim = max(2, min(int(8.0 / s_in), 2**20))
+    q = rng.integers(-lim, lim, (m, n)).astype(np.int32)
+    got = np.asarray(K.i_softmax(q, c))
+    want = ref.np_i_softmax(q, c)
+    assert np.array_equal(got, want)
+    # invariants: range, near-normalization, order preservation per row
+    assert got.min() >= 0 and got.max() <= intops.SM_UNIT
+    for r in range(m):
+        order = np.argsort(q[r], kind="stable")
+        sorted_out = got[r][order]
+        assert np.all(np.diff(sorted_out) >= 0), "softmax must be monotone"
+
+
+@given(st.floats(1e-3, 1.0), st.integers(1, 16), st.integers(1, 64), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_gelu_any_scale_shape(s_in, m, n, seed):
+    c = intops.GeluConsts.design(s_in)
+    rng = np.random.default_rng(seed)
+    lim = max(2, min(int(6.0 / s_in), 2**18))
+    q = rng.integers(-lim, lim, (m, n)).astype(np.int32)
+    got = np.asarray(K.i_gelu(q, c))
+    assert np.array_equal(got, ref.np_i_gelu(q, c))
+
+
+@given(st.integers(2, 256), st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_layernorm_any_shape(d, m, seed):
+    c = intops.LayerNormConsts(s_in=0.01, s_gamma=0.01, d=d)
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-3000, 3000, (m, d)).astype(np.int32)
+    g = rng.integers(-127, 128, (d,)).astype(np.int32)
+    b = rng.integers(-5000, 5000, (d,)).astype(np.int32)
+    got = np.asarray(K.i_layernorm(q, g, b, c))
+    assert np.array_equal(got, ref.np_i_layernorm(q, g, b, c))
+
+
+@given(st.integers(0, 2**62), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_isqrt_floor_contract(n, _seed):
+    got, iters = ref.np_i_sqrt_scalar(n)
+    assert got >= 0 and got * got <= n < (got + 1) * (got + 1)
+    assert iters <= intops.ISQRT_MAX_ITERS
+
+
+@given(st.floats(1e-5, 1e4), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_dyadic_always_close(x, seed):
+    dy = intops.Dyadic.approximate(x)
+    assert dy.b >= 1 and 0 <= dy.c <= 30
+    assert abs(dy.value() - x) / x < 2**-13
+
+
+@given(st.integers(-(2**26), 2**26), st.floats(1e-3, 100.0))
+@settings(**SETTINGS)
+def test_requant_scalar_consistency(v, ratio):
+    """requantize == floor(v * DN(ratio)) clamped, for any single value."""
+    dy = intops.Dyadic.approximate(ratio)
+    q = np.array([[v]], dtype=np.int32)
+    got = int(np.asarray(K.requantize(q, dy))[0, 0])
+    want = min(max((v * dy.b) >> dy.c, -128), 127)
+    assert got == want

@@ -1,0 +1,69 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   1. FP32-datapath twin (why integer-only wins — Fig. 1a vs 1b),
+//!   2. worst-case vs data-dependent LayerNorm sqrt timing (footnote 3),
+//!   3. head-parallelism waves (Fig. 9's "choice of number of heads"),
+//!   4. dyadic multiplier width (requantization precision/cost knob).
+
+use swifttron::baselines::fp32_asic_report;
+use swifttron::model::Geometry;
+use swifttron::quant::Dyadic;
+use swifttron::sim::{simulate_encoder, HwConfig};
+use swifttron::util::bench::Table;
+
+fn main() {
+    let geo = Geometry::preset("roberta_base").unwrap();
+    let paper = HwConfig::paper();
+
+    // 1. FP32 twin
+    let fp = fp32_asic_report(&paper, &geo);
+    let mut t = Table::new(&["design", "area", "power", "latency"]);
+    t.row(&["INT8 SwiftTron (ours)".into(), "1.00x".into(), "1.00x".into(), "1.00x".into()]);
+    t.row(&[
+        "FP32-datapath twin".into(),
+        format!("{:.1}x", fp.area_ratio),
+        format!("{:.1}x", fp.power_ratio),
+        format!("{:.1}x", fp.latency_ratio),
+    ]);
+    t.print("ablation 1 — arithmetic choice (Fig. 1a vs 1b at system level)");
+
+    // 2. sqrt timing policy: worst-case (32 iters, paper fn.3) vs the
+    // typical data-dependent count observed in co-simulation (~12).
+    let wc = simulate_encoder(&paper, &geo);
+    let dd_cfg = HwConfig { worst_case_sqrt: false, ..paper };
+    let typical_iters = vec![12u32; geo.m];
+    let mut dd = swifttron::sim::encoder::LatencyReport::default();
+    let mut t_cycles = 0;
+    for _ in 0..geo.layers {
+        t_cycles = swifttron::sim::simulate_layer(
+            &dd_cfg, &geo, t_cycles, &mut dd.trace, &mut dd.per_block, Some(&typical_iters),
+        );
+    }
+    dd.total_cycles = t_cycles;
+    let mut t = Table::new(&["sqrt policy", "cycles", "ms"]);
+    t.row(&["worst-case (paper fn.3)".into(), format!("{}", wc.total_cycles), format!("{:.3}", wc.ms(&paper))]);
+    t.row(&["data-dependent (typ. 12 iters)".into(), format!("{}", dd.total_cycles), format!("{:.3}", dd.ms(&dd_cfg))]);
+    t.print("ablation 2 — LayerNorm iterative-sqrt timing policy");
+
+    // 3. head parallelism
+    let mut t = Table::new(&["parallel heads", "cycles", "ms"]);
+    for ph in [1, 2, 4, 6, 12] {
+        let cfg = HwConfig { parallel_heads: ph, ..paper };
+        let r = simulate_encoder(&cfg, &geo);
+        t.row(&[format!("{ph}"), format!("{}", r.total_cycles), format!("{:.3}", r.ms(&cfg))]);
+    }
+    t.print("ablation 3 — attention-head parallelism (Fig. 9)");
+
+    // 4. dyadic width: approximation error of the requantization ratio
+    let mut t = Table::new(&["dyadic bits", "max rel error over 1e-4..1e2"]);
+    for bits in [8u32, 12, 16, 20] {
+        let mut worst: f64 = 0.0;
+        let mut x = 1e-4;
+        while x < 100.0 {
+            let dy = Dyadic::approximate(x, bits, 40);
+            worst = worst.max(((dy.value() - x) / x).abs());
+            x *= 1.37;
+        }
+        t.row(&[format!("{bits}"), format!("{worst:.2e}")]);
+    }
+    t.print("ablation 4 — requantization multiplier width (Eq. 2)");
+}

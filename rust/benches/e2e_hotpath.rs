@@ -1,0 +1,76 @@
+//! Hot-path wallclock benches (the §Perf instrumentation): simulator,
+//! functional layer model, PJRT tiny/roberta executions, softmax and
+//! layernorm functional kernels.  Used for the before/after log in
+//! EXPERIMENTS.md §Perf.
+
+use swifttron::model::{Blob, Geometry, Manifest};
+use swifttron::quant::{i_softmax, SoftmaxConsts};
+use swifttron::runtime::{Engine, Tensor};
+use swifttron::sim::functional::{layer_forward, LayerWeights};
+use swifttron::sim::{simulate_encoder, HwConfig};
+use swifttron::util::bench::Bench;
+use swifttron::util::rng::Rng;
+
+fn main() {
+    let cfg = HwConfig::paper();
+    let geo = Geometry::preset("roberta_base").unwrap();
+
+    // simulator itself (pure timing model)
+    Bench::new("sim: roberta_base full stack").iters(50).run(|| simulate_encoder(&cfg, &geo));
+
+    // functional softmax rows (m=256 row of 256)
+    let sm = SoftmaxConsts::design(0.001);
+    let mut rng = Rng::new(1);
+    let row: Vec<i64> = (0..256).map(|_| rng.range_i64(-4000, 4000)).collect();
+    let mut out = vec![0i32; 256];
+    Bench::new("quant: i_softmax 256-row").iters(200).run(|| {
+        for _ in 0..256 {
+            i_softmax(&row, &sm, &mut out);
+        }
+    });
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifact benches skipped: run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+
+    // rust functional full roberta layer (the co-sim reference)
+    let blob = Blob::load(&manifest.blob_prefix("roberta_base").unwrap()).unwrap();
+    let w = LayerWeights::from_blob(&blob, 0).unwrap();
+    let consts = manifest.preset("roberta_base").unwrap().layers[0].clone();
+    let q_x: Vec<i32> = (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+    Bench::new("functional: roberta_base layer (rust)")
+        .warmup(1)
+        .iters(3)
+        .run(|| layer_forward(&q_x, &w, &consts, &geo));
+
+    // PJRT executions
+    let engine = Engine::cpu().unwrap();
+    let exe_tiny = engine.load(&manifest.artifact_path("tiny", "int8").unwrap()).unwrap();
+    let tg = manifest.preset("tiny").unwrap().geometry;
+    let tiny_x: Vec<i32> = (0..tg.m * tg.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+    Bench::new("pjrt: tiny 2-layer encoder").iters(50).run(|| {
+        exe_tiny
+            .run_i32(&[Tensor::i32(&[tg.m, tg.d], tiny_x.clone())], &[tg.m, tg.d])
+            .unwrap()
+    });
+
+    let exe_rb = engine
+        .load(&manifest.artifact_path("roberta_base", "int8_layer").unwrap())
+        .unwrap();
+    let mut inputs = vec![Tensor::i32(&[geo.m, geo.d], q_x.clone())];
+    for key in [
+        "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo", "w1", "b1", "w2", "b2", "gamma1",
+        "beta1", "gamma2", "beta2",
+    ] {
+        let data = blob.i32(&format!("L0.{key}")).unwrap();
+        let shape = blob.shape(&format!("L0.{key}")).unwrap().to_vec();
+        inputs.push(Tensor::i32(&shape, data));
+    }
+    Bench::new("pjrt: roberta_base layer (pallas int8)")
+        .warmup(1)
+        .iters(5)
+        .run(|| exe_rb.run_i32(&inputs, &[geo.m, geo.d]).unwrap());
+}

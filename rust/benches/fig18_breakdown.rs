@@ -1,0 +1,50 @@
+//! Fig. 18 — area and power breakdown per component.
+//!
+//! Paper (RoBERTa-base config): area MatMul 55%, LayerNorm 25%,
+//! Softmax 17%, GELU 3%; power MatMul dominant (~79%), Softmax 14%,
+//! LayerNorm 6%, GELU 1%.  Shape targets: same ranking, LN area-heavy /
+//! power-light, GELU negligible.
+
+use swifttron::model::Geometry;
+use swifttron::sim::HwConfig;
+use swifttron::synthesis::synthesis_report;
+use swifttron::util::bench::Table;
+
+fn main() {
+    let r = synthesis_report(&HwConfig::paper(), &Geometry::preset("roberta_base").unwrap());
+
+    let paper_area = [("MatMul", 55.0), ("LayerNorm", 25.0), ("Softmax", 17.0), ("GELU", 3.0)];
+    let paper_power = [("MatMul", 79.0), ("Softmax", 14.0), ("LayerNorm", 6.0), ("GELU", 1.0)];
+
+    let mut t = Table::new(&["component", "paper area %", "model area %", "paper power %", "model power %"]);
+    for (name, pa) in paper_area {
+        let pp = paper_power.iter().find(|(n, _)| *n == name).map(|(_, v)| *v).unwrap();
+        t.row(&[
+            name.to_string(),
+            format!("{pa:.0}%"),
+            format!("{:.1}%", r.area_pct.get(name).copied().unwrap_or(0.0)),
+            format!("{pp:.0}%"),
+            format!("{:.1}%", r.power_pct.get(name).copied().unwrap_or(0.0)),
+        ]);
+    }
+    for extra in ["Requant", "Control"] {
+        t.row(&[
+            format!("{extra} (not broken out in paper)"),
+            "-".into(),
+            format!("{:.1}%", r.area_pct.get(extra).copied().unwrap_or(0.0)),
+            "-".into(),
+            format!("{:.1}%", r.power_pct.get(extra).copied().unwrap_or(0.0)),
+        ]);
+    }
+    t.print("Fig. 18 — area & power breakdown (RoBERTa-base configuration)");
+
+    // shape assertions, printed so regressions are visible in bench logs
+    let a = &r.area_pct;
+    let p = &r.power_pct;
+    println!("\nshape checks:");
+    println!("  MatMul largest area:            {}", a["MatMul"] > a["LayerNorm"]);
+    println!("  LayerNorm > Softmax area:       {}", a["LayerNorm"] > a["Softmax"]);
+    println!("  GELU smallest of the four:      {}", a["GELU"] < a["Softmax"]);
+    println!("  LayerNorm area-heavy/power-light: {}", a["LayerNorm"] > p["LayerNorm"]);
+    println!("  MatMul power-dominant:          {}", p["MatMul"] > 50.0);
+}

@@ -1,0 +1,51 @@
+//! Fig. 2 — latency/power/area overhead of FP32 operators vs INT8.
+//!
+//! The paper synthesized single adders/multipliers in both arithmetics at
+//! 65 nm and reported ~one order of magnitude overheads; this bench
+//! regenerates the figure's bars from the gate-level cost model.
+
+use swifttron::synthesis::{OperatorCost, Operators, Tech65};
+use swifttron::util::bench::Table;
+
+fn row(t: &Tech65, name: &str, fp: OperatorCost, int8: OperatorCost, out: &mut Table) {
+    let freq = 143e6;
+    out.row(&[
+        name.to_string(),
+        format!("{:.2}x", fp.delay_ns(t) / int8.delay_ns(t)),
+        format!("{:.2}x", fp.power_w(t, freq) / int8.power_w(t, freq)),
+        format!("{:.2}x", fp.area_mm2(t) / int8.area_mm2(t)),
+    ]);
+}
+
+fn main() {
+    let t = Tech65::new();
+    let mut table = Table::new(&["operator", "latency overhead", "power overhead", "area overhead"]);
+    row(&t, "adder FP32 vs INT8", Operators::fp32_adder(), Operators::int_adder(8), &mut table);
+    row(
+        &t,
+        "multiplier FP32 vs INT8",
+        Operators::fp32_multiplier(),
+        Operators::int_multiplier(8, 8),
+        &mut table,
+    );
+    table.print("Fig. 2 — FP32 vs INT8 single-operator overheads (65 nm model)");
+    println!("\npaper claim: \"potential savings are about one order of magnitude\"");
+
+    let mut detail = Table::new(&["operator", "gates (GE)", "delay ns", "energy pJ/op"]);
+    for (name, op) in [
+        ("INT8 adder", Operators::int_adder(8)),
+        ("INT8 multiplier", Operators::int_multiplier(8, 8)),
+        ("INT32 adder", Operators::int_adder(32)),
+        ("INT32 multiplier", Operators::int_multiplier(32, 32)),
+        ("FP32 adder", Operators::fp32_adder()),
+        ("FP32 multiplier", Operators::fp32_multiplier()),
+    ] {
+        detail.row(&[
+            name.to_string(),
+            format!("{:.0}", op.ge),
+            format!("{:.3}", op.delay_ns(&t)),
+            format!("{:.3}", op.energy_pj(&t)),
+        ]);
+    }
+    detail.print("operator catalog");
+}

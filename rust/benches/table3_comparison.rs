@@ -1,0 +1,41 @@
+//! Table III — feature comparison between SwiftTron and the related
+//! works, regenerated verbatim from the encoded matrix.
+
+use swifttron::baselines::comparison_table;
+use swifttron::util::bench::Table;
+
+fn main() {
+    let mut t = Table::new(&[
+        "work", "HW implementation", "bit-width", "complete arch", "nonlinear computation",
+    ]);
+    for w in comparison_table() {
+        let hw = match w.hw {
+            swifttron::baselines::comparison::HwTarget::Asic(n) => format!("ASIC {n}"),
+            swifttron::baselines::comparison::HwTarget::Fpga(n) => format!("FPGA {n}"),
+            swifttron::baselines::comparison::HwTarget::Gpu(n) => format!("GPU {n} (x)"),
+        };
+        let nl = match w.nonlinear {
+            swifttron::baselines::comparison::NonlinearImpl::IntegerApprox => "integers (approx) [ok]",
+            swifttron::baselines::comparison::NonlinearImpl::Lut => "LUT (x)",
+            swifttron::baselines::comparison::NonlinearImpl::Fft => "integers w/ FFT (x)",
+            swifttron::baselines::comparison::NonlinearImpl::Fp16 => "FP16/FP32 (x)",
+            swifttron::baselines::comparison::NonlinearImpl::Fp32 => "FP32 (x)",
+            swifttron::baselines::comparison::NonlinearImpl::NotApplicable => "N/A (x)",
+        };
+        t.row(&[
+            w.name.to_string(),
+            hw,
+            format!("{}{}", w.bitwidth, if w.bitwidth_ok { " [ok]" } else { " (x)" }),
+            if w.complete_architecture { "yes [ok]".into() } else { "no (x)".to_string() },
+            nl.to_string(),
+        ]);
+    }
+    t.print("Table III — related-work feature comparison");
+
+    let winners: Vec<&str> = comparison_table()
+        .iter()
+        .filter(|w| w.all_features())
+        .map(|w| w.name)
+        .collect();
+    println!("\ndesigns with every feature: {winners:?} (paper claim: only SwiftTron)");
+}

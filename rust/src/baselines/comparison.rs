@@ -1,0 +1,95 @@
+//! Table III: qualitative feature comparison with the related works.
+//!
+//! The paper's claim is that SwiftTron is the only design satisfying all
+//! four requirements simultaneously; this module encodes the table and a
+//! checker for that claim so the bench regenerates it verbatim.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HwTarget {
+    Asic(&'static str),
+    Fpga(&'static str),
+    Gpu(&'static str),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NonlinearImpl {
+    IntegerApprox,
+    Lut,
+    Fft,
+    Fp16, // FP16 and/or FP32
+    Fp32,
+    NotApplicable,
+}
+
+#[derive(Clone, Debug)]
+pub struct RelatedWork {
+    pub name: &'static str,
+    pub hw: HwTarget,
+    pub bitwidth: &'static str,
+    /// bit-width counts as "efficient" (INT8 or narrower)
+    pub bitwidth_ok: bool,
+    pub complete_architecture: bool,
+    pub nonlinear: NonlinearImpl,
+}
+
+impl RelatedWork {
+    /// Specialized hardware (not a GPU deployment).
+    pub fn hw_ok(&self) -> bool {
+        !matches!(self.hw, HwTarget::Gpu(_))
+    }
+
+    /// Efficient nonlinear functions = integer approximations.
+    pub fn nonlinear_ok(&self) -> bool {
+        self.nonlinear == NonlinearImpl::IntegerApprox
+    }
+
+    pub fn all_features(&self) -> bool {
+        self.hw_ok() && self.bitwidth_ok && self.complete_architecture && self.nonlinear_ok()
+    }
+}
+
+/// The rows of the paper's Table III, in order.
+pub fn comparison_table() -> Vec<RelatedWork> {
+    use HwTarget::*;
+    use NonlinearImpl::*;
+    vec![
+        RelatedWork { name: "OPTIMUS [2]", hw: Asic("28 nm"), bitwidth: "INT16", bitwidth_ok: false, complete_architecture: false, nonlinear: NotApplicable },
+        RelatedWork { name: "A^3 [3]", hw: Asic("40 nm"), bitwidth: "INT8", bitwidth_ok: true, complete_architecture: false, nonlinear: IntegerApprox },
+        RelatedWork { name: "FTRANS [27]", hw: Fpga("Xilinx"), bitwidth: "INT16", bitwidth_ok: false, complete_architecture: true, nonlinear: Fft },
+        RelatedWork { name: "Lu et al. [20]", hw: Fpga("Xilinx"), bitwidth: "INT8", bitwidth_ok: true, complete_architecture: false, nonlinear: IntegerApprox },
+        RelatedWork { name: "EFA-Trans [25]", hw: Fpga("Xilinx"), bitwidth: "INT8", bitwidth_ok: true, complete_architecture: true, nonlinear: Lut },
+        RelatedWork { name: "FQ-BERT [26]", hw: Fpga("Xilinx"), bitwidth: "INT8", bitwidth_ok: true, complete_architecture: true, nonlinear: Lut },
+        RelatedWork { name: "Lin et al. [4]", hw: Gpu("TITAN V"), bitwidth: "INT8", bitwidth_ok: true, complete_architecture: true, nonlinear: Fp32 },
+        RelatedWork { name: "I-BERT [7]", hw: Gpu("Tesla T4"), bitwidth: "INT8", bitwidth_ok: true, complete_architecture: true, nonlinear: IntegerApprox },
+        RelatedWork { name: "I-ViT [17]", hw: Gpu("RTX 2080 Ti"), bitwidth: "INT8", bitwidth_ok: true, complete_architecture: true, nonlinear: IntegerApprox },
+        RelatedWork { name: "Transformer Engine [5]", hw: Asic("4 nm (H100)"), bitwidth: "FP8", bitwidth_ok: true, complete_architecture: true, nonlinear: Fp16 },
+        RelatedWork { name: "SwiftTron (ours)", hw: Asic("65 nm"), bitwidth: "INT8", bitwidth_ok: true, complete_architecture: true, nonlinear: IntegerApprox },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn only_swifttron_has_all_features() {
+        let rows = comparison_table();
+        let winners: Vec<&str> =
+            rows.iter().filter(|r| r.all_features()).map(|r| r.name).collect();
+        assert_eq!(winners, vec!["SwiftTron (ours)"]);
+    }
+
+    #[test]
+    fn every_related_work_misses_something() {
+        for r in comparison_table() {
+            if r.name != "SwiftTron (ours)" {
+                assert!(!r.all_features(), "{} should miss a feature", r.name);
+            }
+        }
+    }
+
+    #[test]
+    fn table_has_eleven_rows_like_the_paper() {
+        assert_eq!(comparison_table().len(), 11);
+    }
+}

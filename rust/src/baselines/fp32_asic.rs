@@ -1,0 +1,93 @@
+//! A hypothetical FP32-datapath SwiftTron (the Fig. 1a design point):
+//! identical architecture and schedule, but every MAC is an FP32
+//! multiply-add and the nonlinear units keep FP32 operators.  This is the
+//! ablation that quantifies *why* the paper's integer-only design wins.
+
+use crate::model::Geometry;
+use crate::sim::{simulate_encoder, HwConfig};
+use crate::synthesis::operators::Operators;
+use crate::synthesis::tech::Tech65;
+
+#[derive(Clone, Debug)]
+pub struct Fp32AsicReport {
+    pub area_mm2: f64,
+    pub power_w: f64,
+    /// achievable clock (ns) limited by the FP32 MAC path
+    pub clock_ns: f64,
+    /// latency of one roberta_base-class inference at that clock (ms)
+    pub latency_ms: f64,
+    /// ratios vs the INT8 design (area, power, latency)
+    pub area_ratio: f64,
+    pub power_ratio: f64,
+    pub latency_ratio: f64,
+}
+
+/// Build the FP32 twin of `cfg` and compare it with the integer design.
+pub fn fp32_asic_report(cfg: &HwConfig, geo: &Geometry) -> Fp32AsicReport {
+    let t = Tech65::new();
+    let int_report = crate::synthesis::synthesis_report(cfg, geo);
+
+    // FP32 MAC: fp multiplier + fp adder + fp32 accumulator register.
+    let fp_mac_ge =
+        Operators::fp32_multiplier().ge + Operators::fp32_adder().ge + Operators::register(32).ge;
+    let int_mac_ge = Operators::int8_mac().ge;
+    let mac_scale = fp_mac_ge / int_mac_ge;
+
+    // Scale the MatMul component; nonlinear units grow by the FP/INT
+    // operator ratio of their dominant operator (the 32b multiplier).
+    let nl_scale = Operators::fp32_multiplier().ge / Operators::int_multiplier(32, 32).ge;
+    let mut area = 0.0;
+    let mut power = 0.0;
+    for c in &int_report.components {
+        let s = match c.name {
+            "MatMul" => mac_scale,
+            "Control" => 1.0,
+            _ => nl_scale.max(1.0),
+        };
+        area += c.area_mm2 * s;
+        power += c.power_w * s;
+    }
+
+    // FP32 MAC critical path sets the clock.
+    let fp_path_ns = t.delay_ns(
+        Operators::fp32_multiplier().delay_gates + Operators::fp32_adder().delay_gates,
+    );
+    let clock_ns = fp_path_ns.max(cfg.clock_ns);
+    let fp_cfg = HwConfig { clock_ns, ..*cfg };
+    let cycles = simulate_encoder(&fp_cfg, geo).total_cycles;
+    let latency_ms = fp_cfg.cycles_to_ms(cycles);
+    let int_latency_ms = {
+        let r = simulate_encoder(cfg, geo);
+        r.ms(cfg)
+    };
+
+    Fp32AsicReport {
+        area_mm2: area,
+        power_w: power,
+        clock_ns,
+        latency_ms,
+        area_ratio: area / int_report.area_mm2,
+        power_ratio: power / int_report.power_w,
+        latency_ratio: latency_ms / int_latency_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_design_is_order_of_magnitude_worse() {
+        let r = fp32_asic_report(&HwConfig::paper(), &Geometry::preset("roberta_base").unwrap());
+        // the Fig. 2 story at system level: heavy area/power penalty
+        assert!(r.area_ratio > 4.0, "area ratio {}", r.area_ratio);
+        assert!(r.power_ratio > 4.0, "power ratio {}", r.power_ratio);
+        assert!(r.latency_ratio >= 1.0, "latency ratio {}", r.latency_ratio);
+    }
+
+    #[test]
+    fn fp32_clock_no_faster_than_int() {
+        let r = fp32_asic_report(&HwConfig::paper(), &Geometry::preset("roberta_base").unwrap());
+        assert!(r.clock_ns >= HwConfig::paper().clock_ns);
+    }
+}

@@ -1,0 +1,14 @@
+//! Comparison points of the paper's evaluation:
+//! * [`gpu`] — an RTX 2080 Ti roofline cost model (Table II's "Speedup
+//!   w.r.t. GPU" column; DESIGN.md §5 documents the substitution),
+//! * [`fp32_asic`] — a hypothetical FP32-datapath SwiftTron, quantifying
+//!   Fig. 1a/Fig. 2's point that FP arithmetic forfeits the efficiency,
+//! * [`comparison`] — the qualitative feature matrix of Table III.
+
+pub mod comparison;
+pub mod fp32_asic;
+pub mod gpu;
+
+pub use comparison::{comparison_table, RelatedWork};
+pub use fp32_asic::fp32_asic_report;
+pub use gpu::{gpu_inference_ms, GpuModel};

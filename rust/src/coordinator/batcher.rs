@@ -1,0 +1,112 @@
+//! Dynamic batcher: groups queued requests so the worker pool stays busy
+//! without letting early arrivals wait unboundedly.
+//!
+//! SwiftTron processes one sequence at a time (the array is loaded per
+//! sentence), so a "batch" here is a *dispatch group*: up to
+//! `max_batch` requests released together to the engine replicas, or
+//! whatever has queued when `max_wait` elapses — the standard
+//! size-or-deadline policy of serving systems.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<(T, Instant)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push_back((item, Instant::now()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether a batch should be released now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some((_, t)) => now.duration_since(*t) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop up to `max_batch` items (oldest first).
+    pub fn take_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).map(|(t, _)| t).collect()
+    }
+
+    /// Deadline of the oldest item (for poll sleeping).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|(_, t)| *t + self.policy.max_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_on_size() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(60) });
+        b.push(1);
+        b.push(2);
+        assert!(!b.ready(Instant::now()));
+        b.push(3);
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::ZERO });
+        b.push("x");
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec!["x"]);
+    }
+
+    #[test]
+    fn batch_is_fifo_and_bounded() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1]);
+        assert_eq!(b.take_batch(), vec![2, 3]);
+        assert_eq!(b.take_batch(), vec![4]);
+    }
+
+    #[test]
+    fn empty_queue_not_ready() {
+        let b: Batcher<i32> = Batcher::new(BatchPolicy::default());
+        assert!(!b.ready(Instant::now()));
+        assert!(b.next_deadline().is_none());
+    }
+}

@@ -1,0 +1,157 @@
+//! Inference engine for the tiny-task model: the end-to-end request path.
+//!
+//! Request path (all integer once quantized, paper Fig. 1b):
+//!   tokens -> embedding + positional add (host f32, outside the
+//!   accelerator per Fig. 4's "inputs taken after positional encoding")
+//!   -> symmetric INT8 quantization at the calibrated `s_in`
+//!   -> PJRT execution of the AOT integer encoder artifact
+//!   -> integer mean-pool + INT8 classifier head (rust `quant::i_matmul`)
+//!   -> argmax label.
+//!
+//! Each prediction also carries the cycle-accurate SwiftTron latency for
+//! the same computation (the coordinator's virtual-time accounting).
+
+use crate::model::{Blob, Geometry, Manifest};
+use crate::quant::i_matmul;
+use crate::runtime::{Engine, Executable, Tensor};
+use crate::sim::{simulate_encoder, HwConfig};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub label: usize,
+    pub logits: Vec<i64>,
+    /// simulated accelerator latency for this inference
+    pub accel_cycles: u64,
+    pub accel_ms: f64,
+}
+
+pub struct InferenceEngine {
+    pub geo: Geometry,
+    exe_int8: Executable,
+    exe_f32: Option<Executable>,
+    emb: Vec<f32>,    // (vocab, d)
+    pos: Vec<f32>,    // (m, d)
+    q_w_head: Vec<i32>, // (d, 2)
+    q_b_head: Vec<i32>,
+    f_w_head: Vec<f32>,
+    f_b_head: Vec<f32>,
+    s_in: f64,
+    vocab: usize,
+    hw: HwConfig,
+    accel_cycles: u64,
+}
+
+impl InferenceEngine {
+    /// Build from the artifacts directory (tiny preset).
+    pub fn load(artifacts: &Path, engine: &Engine, hw: HwConfig) -> Result<InferenceEngine, String> {
+        let manifest = Manifest::load(artifacts)?;
+        let preset = manifest.preset("tiny")?;
+        let geo = preset.geometry;
+        let blob = Blob::load(&manifest.blob_prefix("tiny")?)?;
+        let exe_int8 = engine.load(&manifest.artifact_path("tiny", "int8")?)?;
+        let exe_f32 = manifest
+            .artifact_path("tiny", "f32")
+            .ok()
+            .and_then(|p| engine.load(&p).ok());
+        let sim = simulate_encoder(&hw, &geo);
+        Ok(InferenceEngine {
+            geo,
+            exe_int8,
+            exe_f32,
+            emb: blob.f32("emb")?,
+            pos: blob.f32("pos")?,
+            q_w_head: blob.i32("q_w_head")?,
+            q_b_head: blob.i32("q_b_head")?,
+            f_w_head: blob.f32("f_w_head")?,
+            f_b_head: blob.f32("f_b_head")?,
+            s_in: preset.s_in.ok_or("tiny preset missing s_in")?,
+            vocab: blob.shape("emb")?[0],
+            hw,
+            accel_cycles: sim.total_cycles,
+        })
+    }
+
+    /// Embedding + positional add + INT8 quantization (host side).
+    pub fn embed_quantize(&self, tokens: &[i32]) -> Result<Vec<i32>, String> {
+        let (m, d) = (self.geo.m, self.geo.d);
+        if tokens.len() != m {
+            return Err(format!("expected {m} tokens, got {}", tokens.len()));
+        }
+        let mut q = vec![0i32; m * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= self.vocab {
+                return Err(format!("token {t} out of vocab {}", self.vocab));
+            }
+            for j in 0..d {
+                let x = self.emb[t * d + j] as f64 + self.pos[i * d + j] as f64;
+                q[i * d + j] = (x / self.s_in).round().clamp(-128.0, 127.0) as i32;
+            }
+        }
+        Ok(q)
+    }
+
+    /// Integer mean-pool (shift when m is a power of two) + INT8 head.
+    fn head(&self, q_out: &[i32]) -> (usize, Vec<i64>) {
+        let (m, d) = (self.geo.m, self.geo.d);
+        let mut pooled = vec![0i32; d];
+        for j in 0..d {
+            let mut s: i64 = 0;
+            for i in 0..m {
+                s += q_out[i * d + j] as i64;
+            }
+            pooled[j] = crate::quant::div_floor(s, m as i64) as i32;
+        }
+        let n_cls = self.q_b_head.len();
+        let mut logits32 = vec![0i32; n_cls];
+        i_matmul(&pooled, &self.q_w_head, Some(&self.q_b_head), 1, d, n_cls, &mut logits32);
+        let logits: Vec<i64> = logits32.iter().map(|&v| v as i64).collect();
+        let label = (0..n_cls).max_by_key(|&i| logits[i]).unwrap_or(0);
+        (label, logits)
+    }
+
+    /// Full integer-path prediction via the PJRT artifact.
+    pub fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+        let (m, d) = (self.geo.m, self.geo.d);
+        let q_x = self.embed_quantize(tokens)?;
+        let out = self.exe_int8.run_i32(&[Tensor::i32(&[m, d], q_x)], &[m, d])?;
+        let (label, logits) = self.head(out.as_i32().unwrap());
+        Ok(Prediction {
+            label,
+            logits,
+            accel_cycles: self.accel_cycles,
+            accel_ms: self.hw.cycles_to_ms(self.accel_cycles),
+        })
+    }
+
+    /// Float-twin prediction (accuracy baseline).
+    pub fn predict_f32(&self, tokens: &[i32]) -> Result<usize, String> {
+        let exe = self.exe_f32.as_ref().ok_or("no f32 artifact")?;
+        let (m, d) = (self.geo.m, self.geo.d);
+        let mut x = vec![0f32; m * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            for j in 0..d {
+                x[i * d + j] = self.emb[t * d + j] + self.pos[i * d + j];
+            }
+        }
+        let out = exe.run_f32(&[Tensor::f32(&[m, d], x)], &[m, d])?;
+        let h = out.as_f32().unwrap();
+        let n_cls = self.f_b_head.len();
+        let mut pooled = vec![0f64; d];
+        for j in 0..d {
+            pooled[j] = (0..m).map(|i| h[i * d + j] as f64).sum::<f64>() / m as f64;
+        }
+        let mut logits = vec![0f64; n_cls];
+        for (c, l) in logits.iter_mut().enumerate() {
+            *l = self.f_b_head[c] as f64
+                + (0..d).map(|j| pooled[j] * self.f_w_head[j * n_cls + c] as f64).sum::<f64>();
+        }
+        Ok((0..n_cls).max_by_key(|&i| (logits[i] * 1e9) as i64).unwrap_or(0))
+    }
+
+    pub fn hw(&self) -> &HwConfig {
+        &self.hw
+    }
+}

@@ -1,0 +1,73 @@
+//! Serving metrics: counters + latency series, shared across workers.
+
+use crate::util::stats::Series;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    /// end-to-end wallclock latency (seconds)
+    pub e2e_s: Mutex<Series>,
+    /// time spent queued before dispatch (seconds)
+    pub queue_s: Mutex<Series>,
+    /// PJRT execution wallclock (seconds)
+    pub exec_s: Mutex<Series>,
+    /// simulated accelerator time (milliseconds of virtual time)
+    pub accel_ms: Mutex<Series>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, e2e: f64, queued: f64, exec: f64, accel_ms: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.e2e_s.lock().unwrap().push(e2e);
+        self.queue_s.lock().unwrap().push(queued);
+        self.exec_s.lock().unwrap().push(exec);
+        self.accel_ms.lock().unwrap().push(accel_ms);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn report(&self) -> String {
+        let done = self.completed.load(Ordering::Relaxed);
+        let req = self.requests.load(Ordering::Relaxed);
+        let err = self.errors.load(Ordering::Relaxed);
+        format!(
+            "requests={req} completed={done} errors={err}\n  e2e   {}\n  queue {}\n  exec  {}\n  accel {}",
+            self.e2e_s.lock().unwrap().summary("s"),
+            self.queue_s.lock().unwrap().summary("s"),
+            self.exec_s.lock().unwrap().summary("s"),
+            self.accel_ms.lock().unwrap().summary("ms"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_series_accumulate() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_completion(0.01, 0.001, 0.008, 0.03);
+        m.record_error();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+        assert!(m.report().contains("completed=1"));
+    }
+}

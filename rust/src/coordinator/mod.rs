@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: the deployable serving system around the
+//! accelerator model.
+//!
+//! * [`engine`] — the inference engine: embedding lookup + PJRT-executed
+//!   integer encoder + integer classifier head, co-reported with the
+//!   cycle-accurate accelerator timing for every request.
+//! * [`batcher`] — dynamic batcher (size/deadline policy).
+//! * [`router`] — request router dispatching batches onto a worker pool
+//!   of engine replicas (one SwiftTron instance each).
+//! * [`server`] — a line-protocol TCP front-end.
+//! * [`metrics`] — latency/throughput accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use engine::{InferenceEngine, Prediction};
+pub use metrics::Metrics;
+pub use router::{Request, Response, Router};

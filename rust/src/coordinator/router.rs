@@ -1,0 +1,149 @@
+//! Request router: accepts requests, batches them, and dispatches batches
+//! onto a pool of engine replicas (each replica modeling one SwiftTron
+//! accelerator attached to the host).
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::InferenceEngine;
+use super::metrics::Metrics;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub submitted: Instant,
+    pub reply: Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub label: usize,
+    pub accel_ms: f64,
+    pub e2e_s: f64,
+    pub error: Option<String>,
+}
+
+struct Shared {
+    batcher: Mutex<Batcher<Request>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+pub struct Router {
+    shared: Arc<Shared>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: Mutex<u64>,
+}
+
+impl Router {
+    /// Spawn `replicas` worker threads, each owning one engine replica.
+    pub fn start(
+        engines: Vec<Arc<InferenceEngine>>,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+    ) -> Router {
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(policy)),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let sh = Arc::clone(&shared);
+                let mt = Arc::clone(&metrics);
+                std::thread::Builder::new()
+                    .name(format!("swifttron-replica-{i}"))
+                    .spawn(move || worker_loop(sh, engine, mt))
+                    .expect("spawn replica")
+            })
+            .collect();
+        Router { shared, metrics, workers, next_id: Mutex::new(0) }
+    }
+
+    /// Submit a request; the response arrives on `reply`.
+    pub fn submit(&self, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
+        let id = {
+            let mut n = self.next_id.lock().unwrap();
+            *n += 1;
+            *n
+        };
+        self.metrics.record_request();
+        {
+            let mut b = self.shared.batcher.lock().unwrap();
+            b.push(Request { id, tokens, submitted: Instant::now(), reply });
+        }
+        self.shared.available.notify_one();
+        id
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.shared.batcher.lock().unwrap().len()
+    }
+
+    pub fn shutdown(mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, engine: Arc<InferenceEngine>, metrics: Arc<Metrics>) {
+    loop {
+        // wait for work or shutdown
+        let batch = {
+            let mut b = sh.batcher.lock().unwrap();
+            loop {
+                if *sh.shutdown.lock().unwrap() && b.is_empty() {
+                    return;
+                }
+                if b.ready(Instant::now()) || (!b.is_empty() && *sh.shutdown.lock().unwrap()) {
+                    break b.take_batch();
+                }
+                let timeout = b
+                    .next_deadline()
+                    .map(|d| d.saturating_duration_since(Instant::now()))
+                    .unwrap_or(std::time::Duration::from_millis(50));
+                let (guard, _) = sh.available.wait_timeout(b, timeout).unwrap();
+                b = guard;
+            }
+        };
+
+        for req in batch {
+            let queued = req.submitted.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            match engine.predict(&req.tokens) {
+                Ok(pred) => {
+                    let exec = t0.elapsed().as_secs_f64();
+                    let e2e = req.submitted.elapsed().as_secs_f64();
+                    metrics.record_completion(e2e, queued, exec, pred.accel_ms);
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        label: pred.label,
+                        accel_ms: pred.accel_ms,
+                        e2e_s: e2e,
+                        error: None,
+                    });
+                }
+                Err(e) => {
+                    metrics.record_error();
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        label: usize::MAX,
+                        accel_ms: 0.0,
+                        e2e_s: req.submitted.elapsed().as_secs_f64(),
+                        error: Some(e),
+                    });
+                }
+            }
+        }
+    }
+}

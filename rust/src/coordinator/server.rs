@@ -1,0 +1,97 @@
+//! TCP front-end: newline-delimited requests of comma-separated token
+//! ids; responses are single JSON lines.  One thread per connection
+//! (connections are few; the router pool does the real work).
+
+use super::router::{Response, Router};
+use crate::util::json::{obj, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+/// Serve until the listener errors or the process exits.
+pub fn serve(router: Arc<Router>, addr: &str) -> Result<(), String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    eprintln!("swifttron serving on {addr}");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let r = Arc::clone(&router);
+                std::thread::spawn(move || {
+                    let _ = handle(r, s);
+                });
+            }
+            Err(e) => eprintln!("accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn response_json(resp: &Response) -> String {
+    let mut fields = vec![
+        ("id", Json::from(resp.id as i64)),
+        ("accel_ms", Json::from(resp.accel_ms)),
+        ("e2e_us", Json::from(resp.e2e_s * 1e6)),
+    ];
+    match &resp.error {
+        Some(e) => fields.push(("error", Json::from(e.as_str()))),
+        None => fields.push(("label", Json::from(resp.label as i64))),
+    }
+    obj(fields).to_string()
+}
+
+fn handle(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "quit" {
+            break;
+        }
+        match parse_tokens(line) {
+            Ok(tokens) => {
+                let (tx, rx) = channel();
+                router.submit(tokens, tx);
+                match rx.recv() {
+                    Ok(resp) => writeln!(writer, "{}", response_json(&resp))?,
+                    Err(_) => writeln!(writer, "{{\"error\":\"router gone\"}}")?,
+                }
+            }
+            Err(e) => writeln!(writer, "{}", obj([("error", Json::from(e.as_str()))]))?,
+        }
+    }
+    eprintln!("connection {peer} closed");
+    Ok(())
+}
+
+/// Parse "3,17,42,..." into token ids.
+pub fn parse_tokens(line: &str) -> Result<Vec<i32>, String> {
+    line.split(',')
+        .map(|t| t.trim().parse::<i32>().map_err(|_| format!("bad token {t:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tokens_ok_and_err() {
+        assert_eq!(parse_tokens("1, 2,3").unwrap(), vec![1, 2, 3]);
+        assert!(parse_tokens("1,x").is_err());
+    }
+
+    #[test]
+    fn response_json_shapes() {
+        let ok = Response { id: 1, label: 0, accel_ms: 0.5, e2e_s: 0.001, error: None };
+        let s = response_json(&ok);
+        assert!(s.contains("\"label\":0") && s.contains("\"accel_ms\":0.5"));
+        let err = Response { id: 2, label: usize::MAX, accel_ms: 0.0, e2e_s: 0.0, error: Some("bad".into()) };
+        assert!(response_json(&err).contains("\"error\":\"bad\""));
+    }
+}

@@ -1,0 +1,33 @@
+//! # SwiftTron — integer-only Transformer accelerator, reproduced in software
+//!
+//! This crate is the Layer-3 coordinator of the three-layer reproduction of
+//! *SwiftTron: An Efficient Hardware Accelerator for Quantized Transformers*
+//! (Marchisio et al., 2023):
+//!
+//! * [`quant`] — the bit-exact integer arithmetic the ASIC datapath performs
+//!   (dyadic requantization, polynomial exp/erf, iterative integer sqrt,
+//!   integer softmax/GELU/LayerNorm).  Functional model of every block.
+//! * [`sim`] — a cycle-accurate simulator of the SwiftTron architecture:
+//!   MAC-array MatMul, the three-phase Softmax and LayerNorm units, the
+//!   MHSA/FFN/LayerNorm FSMs and their handshakes.
+//! * [`synthesis`] — a 65 nm gate-level area/power/timing cost model that
+//!   stands in for the paper's Synopsys DC flow (DESIGN.md §5).
+//! * [`baselines`] — the GPU roofline model and FP32-datapath comparison
+//!   points used by the paper's Table II / Table III / Fig. 2.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); python never runs on the request path.
+//! * [`model`] — geometry, weights, and scale metadata shared by all of the
+//!   above (read from the artifact manifest).
+//! * [`coordinator`] — request router, dynamic batcher, and inference engine
+//!   that pair numeric execution (PJRT) with simulated accelerator timing.
+//! * [`util`] — in-repo substrates (RNG, JSON, CLI, thread pool, property
+//!   testing, stats): the offline crate set has no tokio/clap/serde/etc.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod synthesis;
+pub mod util;

@@ -1,0 +1,179 @@
+//! SwiftTron CLI: simulate | synth | compare | infer | serve | report.
+
+use std::process::exit;
+use std::sync::Arc;
+use swifttron::baselines::{comparison_table, fp32_asic_report, gpu_inference_ms, GpuModel};
+use swifttron::coordinator::{BatchPolicy, InferenceEngine, Metrics, Router};
+use swifttron::model::{Geometry, Manifest};
+use swifttron::runtime::Engine;
+use swifttron::sim::{simulate_encoder, HwConfig};
+use swifttron::synthesis::synthesis_report;
+use swifttron::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            exit(2);
+        }
+    };
+    let result = match cmd {
+        "simulate" => cmd_simulate(&rest),
+        "synth" => cmd_synth(&rest),
+        "compare" => cmd_compare(&rest),
+        "infer" => cmd_infer(&rest),
+        "serve" => cmd_serve(&rest),
+        "report" => cmd_report(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{}", usage())),
+    };
+    if let Err(e) = result {
+        eprintln!("{e}");
+        exit(1);
+    }
+}
+
+fn usage() -> String {
+    "swifttron — integer-only Transformer accelerator (paper reproduction)\n\n\
+     commands:\n\
+     \x20 simulate --model <preset>        cycle-accurate latency\n\
+     \x20 synth    --model <preset>        65 nm synthesis report (Table I / Fig 18)\n\
+     \x20 compare                          Table III feature matrix + GPU/FP32 baselines\n\
+     \x20 infer    --tokens 1,2,3,...      one tiny-task inference via PJRT\n\
+     \x20 serve    --addr 127.0.0.1:7077   TCP serving front-end\n\
+     \x20 report                           full paper reproduction summary\n"
+        .into()
+}
+
+fn geometry(name: &str) -> Result<Geometry, String> {
+    Geometry::preset(name).ok_or_else(|| format!("unknown preset {name:?}"))
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<(), String> {
+    let p = Args::new("swifttron simulate", "cycle-accurate latency")
+        .opt("model", "roberta_base", "geometry preset")
+        .parse(rest)?;
+    let geo = geometry(p.get("model"))?;
+    let cfg = HwConfig::paper();
+    cfg.validate(&geo)?;
+    let r = simulate_encoder(&cfg, &geo);
+    println!(
+        "{}: {} cycles at {:.0} MHz = {:.3} ms",
+        p.get("model"),
+        r.total_cycles,
+        cfg.clock_mhz(),
+        r.ms(&cfg)
+    );
+    for (k, v) in &r.per_block {
+        println!("  {k:12} {v:>12} busy unit-cycles");
+    }
+    Ok(())
+}
+
+fn cmd_synth(rest: &[String]) -> Result<(), String> {
+    let p = Args::new("swifttron synth", "synthesis report")
+        .opt("model", "roberta_base", "geometry preset")
+        .parse(rest)?;
+    let geo = geometry(p.get("model"))?;
+    let r = synthesis_report(&HwConfig::paper(), &geo);
+    println!("{}", r.table1());
+    println!(
+        "\n{:12} {:>10} {:>8} {:>10} {:>8}",
+        "component", "area mm^2", "area %", "power W", "power %"
+    );
+    for c in &r.components {
+        println!(
+            "{:12} {:>10.2} {:>7.1}% {:>10.3} {:>7.1}%",
+            c.name, c.area_mm2, r.area_pct[c.name], c.power_w, r.power_pct[c.name]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compare(_rest: &[String]) -> Result<(), String> {
+    println!("Table III — feature comparison:");
+    for w in comparison_table() {
+        println!(
+            "  {:24} hw_ok={} int8={} complete={} nonlinear_ok={}  => all={}",
+            w.name,
+            w.hw_ok(),
+            w.bitwidth_ok,
+            w.complete_architecture,
+            w.nonlinear_ok(),
+            w.all_features()
+        );
+    }
+    let cfg = HwConfig::paper();
+    let gpu = GpuModel::rtx_2080_ti();
+    println!("\nGPU baseline (RTX 2080 Ti roofline model):");
+    for name in ["roberta_base", "roberta_large", "deit_s"] {
+        let geo = geometry(name)?;
+        let acc = simulate_encoder(&cfg, &geo).ms(&cfg);
+        let g = gpu_inference_ms(&gpu, &geo);
+        println!(
+            "  {name:15} accel {acc:8.3} ms   gpu {g:8.3} ms   speedup {:.2}x",
+            g / acc
+        );
+    }
+    let fp = fp32_asic_report(&cfg, &geometry("roberta_base")?);
+    println!(
+        "\nFP32-datapath twin: area x{:.1}, power x{:.1}, latency x{:.1} (Fig. 2 at system level)",
+        fp.area_ratio, fp.power_ratio, fp.latency_ratio
+    );
+    Ok(())
+}
+
+fn engine_from_artifacts() -> Result<InferenceEngine, String> {
+    let dir = Manifest::default_dir();
+    let engine = Engine::cpu()?;
+    InferenceEngine::load(&dir, &engine, HwConfig::paper())
+}
+
+fn cmd_infer(rest: &[String]) -> Result<(), String> {
+    let p = Args::new("swifttron infer", "single tiny-task inference")
+        .opt("tokens", "", "comma-separated token ids (default: random)")
+        .opt("seed", "7", "rng seed for random tokens")
+        .parse(rest)?;
+    let eng = engine_from_artifacts()?;
+    let tokens: Vec<i32> = if p.get("tokens").is_empty() {
+        let mut rng = swifttron::util::rng::Rng::new(p.get_u64("seed")?);
+        (0..eng.geo.m).map(|_| rng.below(63) as i32).collect()
+    } else {
+        swifttron::coordinator::server::parse_tokens(p.get("tokens"))?
+    };
+    let pred = eng.predict(&tokens)?;
+    println!(
+        "label={} logits={:?} accel={:.3} ms ({} cycles)",
+        pred.label, pred.logits, pred.accel_ms, pred.accel_cycles
+    );
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<(), String> {
+    let p = Args::new("swifttron serve", "TCP serving front-end")
+        .opt("addr", "127.0.0.1:7077", "listen address")
+        .opt("replicas", "2", "engine replicas (simulated accelerators)")
+        .opt("max-batch", "8", "dispatch group size")
+        .parse(rest)?;
+    let replicas = p.get_usize("replicas")?;
+    let dir = Manifest::default_dir();
+    let engine = Engine::cpu()?;
+    let engines: Result<Vec<_>, String> = (0..replicas)
+        .map(|_| InferenceEngine::load(&dir, &engine, HwConfig::paper()).map(Arc::new))
+        .collect();
+    let metrics = Arc::new(Metrics::new());
+    let policy = BatchPolicy { max_batch: p.get_usize("max-batch")?, ..Default::default() };
+    let router = Arc::new(Router::start(engines?, policy, Arc::clone(&metrics)));
+    swifttron::coordinator::server::serve(router, p.get("addr"))
+}
+
+fn cmd_report(_rest: &[String]) -> Result<(), String> {
+    cmd_synth(&[])?;
+    println!();
+    cmd_compare(&[])
+}

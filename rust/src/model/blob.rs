@@ -1,0 +1,148 @@
+//! Reader for the flat binary tensor container the compile path writes
+//! (`python/compile/blobs.py`): `<name>.bin` raw little-endian data plus
+//! `<name>.json` index of `{dtype, shape, offset, nbytes}` entries.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+pub struct Blob {
+    raw: Vec<u8>,
+    index: BTreeMap<String, TensorMeta>,
+}
+
+impl Blob {
+    /// Load `<prefix>.bin` + `<prefix>.json`.
+    pub fn load(prefix: &Path) -> Result<Blob, String> {
+        let json_path = prefix.with_extension("json");
+        let bin_path = prefix.with_extension("bin");
+        let idx_src = std::fs::read_to_string(&json_path)
+            .map_err(|e| format!("read {}: {e}", json_path.display()))?;
+        let raw = std::fs::read(&bin_path)
+            .map_err(|e| format!("read {}: {e}", bin_path.display()))?;
+        let parsed = Json::parse(&idx_src)?;
+        let tensors = parsed.req("tensors")?.as_obj().ok_or("tensors not an object")?;
+        let mut index = BTreeMap::new();
+        for (name, e) in tensors {
+            let meta = TensorMeta {
+                dtype: e.req("dtype")?.as_str().ok_or("dtype")?.to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or("shape")?
+                    .iter()
+                    .map(|v| v.as_i64().unwrap_or(0) as usize)
+                    .collect(),
+                offset: e.req("offset")?.as_i64().ok_or("offset")? as usize,
+                nbytes: e.req("nbytes")?.as_i64().ok_or("nbytes")? as usize,
+            };
+            if meta.offset + meta.nbytes > raw.len() {
+                return Err(format!("tensor {name} overruns blob"));
+            }
+            index.insert(name.clone(), meta);
+        }
+        Ok(Blob { raw, index })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.index.keys()
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&TensorMeta, String> {
+        self.index.get(name).ok_or_else(|| format!("no tensor {name:?} in blob"))
+    }
+
+    fn bytes(&self, name: &str) -> Result<(&TensorMeta, &[u8]), String> {
+        let m = self.meta(name)?;
+        Ok((m, &self.raw[m.offset..m.offset + m.nbytes]))
+    }
+
+    /// Read any integer tensor (i8 or i32 storage) widened to i32.
+    pub fn i32(&self, name: &str) -> Result<Vec<i32>, String> {
+        let (m, b) = self.bytes(name)?;
+        match m.dtype.as_str() {
+            "i8" => Ok(b.iter().map(|&v| v as i8 as i32).collect()),
+            "i32" => Ok(b
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            other => Err(format!("tensor {name}: dtype {other} is not integer<=32")),
+        }
+    }
+
+    pub fn i64(&self, name: &str) -> Result<Vec<i64>, String> {
+        let (m, b) = self.bytes(name)?;
+        match m.dtype.as_str() {
+            "i64" => Ok(b
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                .collect()),
+            _ => self.i32(name).map(|v| v.into_iter().map(|x| x as i64).collect()),
+        }
+    }
+
+    pub fn f32(&self, name: &str) -> Result<Vec<f32>, String> {
+        let (m, b) = self.bytes(name)?;
+        if m.dtype != "f32" {
+            return Err(format!("tensor {name}: dtype {} is not f32", m.dtype));
+        }
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize], String> {
+        Ok(&self.meta(name)?.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(dir: &Path, name: &str, json: &str, bin: &[u8]) {
+        let mut f = std::fs::File::create(dir.join(format!("{name}.json"))).unwrap();
+        f.write_all(json.as_bytes()).unwrap();
+        let mut f = std::fs::File::create(dir.join(format!("{name}.bin"))).unwrap();
+        f.write_all(bin).unwrap();
+    }
+
+    #[test]
+    fn reads_i8_i32_f32() {
+        let dir = std::env::temp_dir().join("swifttron_blob_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut bin = Vec::new();
+        bin.extend_from_slice(&[0xFFu8, 1, 2]); // i8: [-1, 1, 2]
+        bin.extend_from_slice(&7i32.to_le_bytes());
+        bin.extend_from_slice(&1.5f32.to_le_bytes());
+        let json = r#"{"tensors":{
+            "a":{"dtype":"i8","shape":[3],"offset":0,"nbytes":3},
+            "b":{"dtype":"i32","shape":[1],"offset":3,"nbytes":4},
+            "c":{"dtype":"f32","shape":[1],"offset":7,"nbytes":4}}}"#;
+        write_tmp(&dir, "t", json, &bin);
+        let blob = Blob::load(&dir.join("t")).unwrap();
+        assert_eq!(blob.i32("a").unwrap(), vec![-1, 1, 2]);
+        assert_eq!(blob.i32("b").unwrap(), vec![7]);
+        assert_eq!(blob.f32("c").unwrap(), vec![1.5]);
+        assert_eq!(blob.shape("a").unwrap(), &[3]);
+        assert!(blob.i32("zzz").is_err());
+    }
+
+    #[test]
+    fn overrun_rejected() {
+        let dir = std::env::temp_dir().join("swifttron_blob_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{"tensors":{"a":{"dtype":"i8","shape":[9],"offset":0,"nbytes":9}}}"#;
+        write_tmp(&dir, "t", json, &[0u8; 4]);
+        assert!(Blob::load(&dir.join("t")).is_err());
+    }
+}

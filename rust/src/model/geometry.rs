@@ -1,0 +1,99 @@
+//! Transformer geometry (the paper's d, k, m, d_ff) and the presets the
+//! evaluation uses (paper §IV-B, Table II).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    /// model dimension d
+    pub d: usize,
+    /// number of attention heads k
+    pub heads: usize,
+    /// sentence length m
+    pub m: usize,
+    /// feed-forward dimension
+    pub d_ff: usize,
+    /// encoder layer count
+    pub layers: usize,
+}
+
+impl Geometry {
+    pub const fn new(d: usize, heads: usize, m: usize, d_ff: usize, layers: usize) -> Self {
+        Geometry { d, heads, m, d_ff, layers }
+    }
+
+    /// Head dimension d/k.
+    pub fn dh(&self) -> usize {
+        self.d / self.heads
+    }
+
+    /// Total parameter count of the encoder stack (weights + biases +
+    /// layernorm affines), the standard 12·d² + 13·d per layer identity
+    /// for d_ff = 4d, computed exactly from the fields.
+    pub fn param_count(&self) -> u64 {
+        let d = self.d as u64;
+        let dff = self.d_ff as u64;
+        let per_layer = 4 * d * d + 4 * d      // QKV+O weights & biases
+            + d * dff + dff                    // FFN in
+            + dff * d + d                      // FFN out
+            + 4 * d; // two layernorm affine pairs
+        per_layer * self.layers as u64
+    }
+
+    /// MAC count of one full encoder forward pass (the roofline input).
+    pub fn macs_per_inference(&self) -> u64 {
+        let d = self.d as u64;
+        let m = self.m as u64;
+        let dff = self.d_ff as u64;
+        let dh = self.dh() as u64;
+        let heads = self.heads as u64;
+        let qkv = 3 * m * d * d;
+        let scores = heads * m * m * dh;
+        let ctx = heads * m * m * dh;
+        let proj = m * d * d;
+        let ffn = m * d * dff + m * dff * d;
+        (qkv + scores + ctx + proj + ffn) * self.layers as u64
+    }
+
+    /// Named presets matching `python/compile/model.py::GEOMETRIES`.
+    pub fn preset(name: &str) -> Option<Geometry> {
+        Some(match name {
+            "tiny" => Geometry::new(64, 4, 32, 128, 2),
+            "small" => Geometry::new(128, 4, 64, 512, 4),
+            "roberta_base" => Geometry::new(768, 12, 256, 3072, 12),
+            "roberta_large" => Geometry::new(1024, 16, 256, 4096, 24),
+            "deit_s" => Geometry::new(384, 6, 197, 1536, 12),
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roberta_base_params_near_85m_encoder() {
+        let g = Geometry::preset("roberta_base").unwrap();
+        let p = g.param_count();
+        // encoder-only parameter count of RoBERTa-base is ~85.0M
+        assert!((84_000_000..87_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn head_dim_is_64_for_paper_models() {
+        assert_eq!(Geometry::preset("roberta_base").unwrap().dh(), 64);
+        assert_eq!(Geometry::preset("deit_s").unwrap().dh(), 64);
+        assert_eq!(Geometry::preset("roberta_large").unwrap().dh(), 64);
+    }
+
+    #[test]
+    fn macs_scale_superlinearly_with_d() {
+        let base = Geometry::preset("roberta_base").unwrap().macs_per_inference();
+        let large = Geometry::preset("roberta_large").unwrap().macs_per_inference();
+        assert!(large > 2 * base);
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(Geometry::preset("gpt5").is_none());
+    }
+}

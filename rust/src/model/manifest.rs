@@ -1,0 +1,201 @@
+//! `artifacts/manifest.json` reader: geometry + every design-time constant
+//! the compile path fixed (paper §III-A: scales are frozen per layer).
+
+use super::Geometry;
+use crate::quant::{Dyadic, GeluConsts, LayerNormConsts, SoftmaxConsts};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One encoder layer's complete integer design (mirrors
+/// `python/compile/aot.py::layer_json`).
+#[derive(Clone, Debug)]
+pub struct LayerConsts {
+    pub dy_q: Dyadic,
+    pub dy_k: Dyadic,
+    pub dy_v: Dyadic,
+    pub dy_scale: Dyadic,
+    pub dy_ctx: Dyadic,
+    pub dy_res1: Dyadic,
+    pub dy_ln1: Dyadic,
+    pub dy_gelu: Dyadic,
+    pub dy_res2: Dyadic,
+    pub dy_ln2: Dyadic,
+    pub softmax: SoftmaxConsts,
+    pub gelu: GeluConsts,
+    pub ln1: LayerNormConsts,
+    pub ln2: LayerNormConsts,
+    pub scales: BTreeMap<String, f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Preset {
+    pub name: String,
+    pub geometry: Geometry,
+    /// artifact kind -> file name, e.g. "int8" -> "tiny_int8.hlo.txt"
+    pub artifacts: BTreeMap<String, String>,
+    pub weights_blob: Option<String>,
+    pub s_in: Option<f64>,
+    pub s_out: Option<f64>,
+    pub s_w_head: Option<f64>,
+    pub float_test_accuracy: Option<f64>,
+    pub layers: Vec<LayerConsts>,
+}
+
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub presets: BTreeMap<String, Preset>,
+}
+
+fn dy(v: &Json) -> Result<Dyadic, String> {
+    Ok(Dyadic {
+        b: v.req("b")?.as_i64().ok_or("dyadic b")?,
+        c: v.req("c")?.as_i64().ok_or("dyadic c")? as u32,
+    })
+}
+
+fn layer(v: &Json) -> Result<LayerConsts, String> {
+    let sm = v.req("softmax")?;
+    let ge = v.req("gelu")?;
+    let ln1 = v.req("ln1")?;
+    let ln2 = v.req("ln2")?;
+    let f = |j: &Json, k: &str| -> Result<f64, String> {
+        j.req(k)?.as_f64().ok_or_else(|| format!("{k} not a number"))
+    };
+    let i = |j: &Json, k: &str| -> Result<i64, String> {
+        j.req(k)?.as_i64().ok_or_else(|| format!("{k} not an int"))
+    };
+    let mut scales = BTreeMap::new();
+    if let Some(obj) = v.get("scales").and_then(|s| s.as_obj()) {
+        for (k, val) in obj {
+            scales.insert(k.clone(), val.as_f64().unwrap_or(f64::NAN));
+        }
+    }
+    Ok(LayerConsts {
+        dy_q: dy(v.req("dy_q")?)?,
+        dy_k: dy(v.req("dy_k")?)?,
+        dy_v: dy(v.req("dy_v")?)?,
+        dy_scale: dy(v.req("dy_scale")?)?,
+        dy_ctx: dy(v.req("dy_ctx")?)?,
+        dy_res1: dy(v.req("dy_res1")?)?,
+        dy_ln1: dy(v.req("dy_ln1")?)?,
+        dy_gelu: dy(v.req("dy_gelu")?)?,
+        dy_res2: dy(v.req("dy_res2")?)?,
+        dy_ln2: dy(v.req("dy_ln2")?)?,
+        softmax: SoftmaxConsts {
+            s_in: f(sm, "s_in")?,
+            q_ln2: i(sm, "q_ln2")?,
+            q_b: i(sm, "q_b")?,
+            q_c: i(sm, "q_c")?,
+        },
+        gelu: GeluConsts {
+            s_in: f(ge, "s_in")?,
+            q_b: i(ge, "q_b")?,
+            q_c: i(ge, "q_c")?,
+            q_one: i(ge, "q_one")?,
+        },
+        ln1: LayerNormConsts {
+            s_in: f(ln1, "s_in")?,
+            s_gamma: f(ln1, "s_gamma")?,
+            d: i(ln1, "d")? as usize,
+        },
+        ln2: LayerNormConsts {
+            s_in: f(ln2, "s_in")?,
+            s_gamma: f(ln2, "s_gamma")?,
+            d: i(ln2, "d")? as usize,
+        },
+        scales,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} — run `make artifacts` first", path.display()))?;
+        let root = Json::parse(&src)?;
+        let mut presets = BTreeMap::new();
+        for (name, p) in root.req("presets")?.as_obj().ok_or("presets")? {
+            let g = p.req("geometry")?;
+            let gi = |k: &str| -> Result<usize, String> {
+                Ok(g.req(k)?.as_i64().ok_or("geom int")? as usize)
+            };
+            let geometry = Geometry::new(
+                gi("d")?,
+                gi("heads")?,
+                gi("m")?,
+                gi("d_ff")?,
+                gi("layers")?,
+            );
+            let mut artifacts = BTreeMap::new();
+            if let Some(a) = p.get("artifacts").and_then(|a| a.as_obj()) {
+                for (k, v) in a {
+                    artifacts.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+                }
+            }
+            let layers = match p.get("layers").and_then(|l| l.as_arr()) {
+                Some(ls) => ls.iter().map(layer).collect::<Result<Vec<_>, _>>()?,
+                None => vec![],
+            };
+            presets.insert(
+                name.clone(),
+                Preset {
+                    name: name.clone(),
+                    geometry,
+                    artifacts,
+                    weights_blob: p
+                        .get("weights_blob")
+                        .and_then(|v| v.as_str())
+                        .map(String::from),
+                    s_in: p.get("s_in").and_then(|v| v.as_f64()),
+                    s_out: p.get("s_out").and_then(|v| v.as_f64()),
+                    s_w_head: p.get("s_w_head").and_then(|v| v.as_f64()),
+                    float_test_accuracy: p
+                        .get("float_test_accuracy")
+                        .and_then(|v| v.as_f64()),
+                    layers,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), presets })
+    }
+
+    /// Default artifacts directory: `$SWIFTTRON_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("SWIFTTRON_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        // workspace root = two levels above this crate's src at build time;
+        // at run time prefer the current directory.
+        let cwd = PathBuf::from("artifacts");
+        if cwd.exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&Preset, String> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| format!("preset {name:?} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, preset: &str, kind: &str) -> Result<PathBuf, String> {
+        let p = self.preset(preset)?;
+        let f = p
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| format!("preset {preset}: no {kind:?} artifact"))?;
+        Ok(self.dir.join(f))
+    }
+
+    pub fn blob_prefix(&self, preset: &str) -> Result<PathBuf, String> {
+        let p = self.preset(preset)?;
+        let b = p
+            .weights_blob
+            .as_ref()
+            .ok_or_else(|| format!("preset {preset}: no weights blob"))?;
+        Ok(self.dir.join(b))
+    }
+}

@@ -1,0 +1,12 @@
+//! Model metadata shared by the simulator, runtime, and coordinator:
+//! geometry presets, per-layer design-time constants (parsed from
+//! `artifacts/manifest.json`), and the flat binary tensor blobs the
+//! compile path writes.
+
+pub mod blob;
+pub mod geometry;
+pub mod manifest;
+
+pub use blob::Blob;
+pub use geometry::Geometry;
+pub use manifest::{LayerConsts, Manifest, Preset};

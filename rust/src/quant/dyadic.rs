@@ -1,0 +1,104 @@
+//! Dyadic numbers and the Requantization unit (paper §III-C, Fig. 7).
+
+use super::{INT8_MAX, INT8_MIN};
+
+/// A rational `b / 2^c` approximating a positive real (paper Eq. (2)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dyadic {
+    pub b: i64,
+    pub c: u32,
+}
+
+impl Dyadic {
+    /// Best `b/2^c` with `b` in `[1, 2^bits)` — identical to the python
+    /// designer (`intops.Dyadic.approximate`).
+    pub fn approximate(x: f64, bits: u32, max_shift: u32) -> Dyadic {
+        assert!(x > 0.0, "dyadic approximation needs x > 0, got {x}");
+        let mut c = 0u32;
+        while x * ((1u64 << c) as f64) < (1u64 << (bits - 1)) as f64 && c < max_shift {
+            c += 1;
+        }
+        c = c.saturating_sub(1);
+        let b = (x * (1u64 << c) as f64).round() as i64;
+        Dyadic { b: b.max(1), c }
+    }
+
+    pub fn approx16(x: f64) -> Dyadic {
+        Dyadic::approximate(x, 16, 30)
+    }
+
+    pub fn value(&self) -> f64 {
+        self.b as f64 / (1u64 << self.c) as f64
+    }
+}
+
+/// INT32 -> INT8 requantization: `clamp((q * b) >> c)` (paper Fig. 7).
+#[inline]
+pub fn requantize(q: i64, dy: Dyadic) -> i32 {
+    requantize_signed(q, dy, 1)
+}
+
+/// Requantization with a signed multiplier `sign*b` (negative-scale
+/// inputs, e.g. the GELU output whose scale carries erf's `a < 0`).
+#[inline]
+pub fn requantize_signed(q: i64, dy: Dyadic, sign: i64) -> i32 {
+    let prod = q * (sign * dy.b);
+    let shifted = prod >> dy.c;
+    shifted.clamp(INT8_MIN, INT8_MAX) as i32
+}
+
+/// Dyadic rescale *without* saturation (residual-connection alignment,
+/// paper §III-I): stays INT32-range by design-time scale choice.
+#[inline]
+pub fn rescale(q: i64, dy: Dyadic) -> i64 {
+    (q * dy.b) >> dy.c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approximation_close_for_wide_range() {
+        for x in [1e-4, 0.01, 0.3, 1.0, 7.7, 999.0] {
+            let dy = Dyadic::approx16(x);
+            assert!((dy.value() - x).abs() / x < 2f64.powi(-14), "{x} -> {dy:?}");
+        }
+    }
+
+    #[test]
+    fn requantize_saturates() {
+        let dy = Dyadic::approx16(1.0);
+        assert_eq!(requantize(1 << 30, dy), 127);
+        assert_eq!(requantize(-(1 << 30), dy), -128);
+        assert_eq!(requantize(0, dy), 0);
+    }
+
+    #[test]
+    fn negative_inputs_floor_not_truncate() {
+        let dy = Dyadic { b: 3, c: 2 }; // * 0.75
+        assert_eq!(requantize(-1, dy), -1); // (-3)>>2 == -1
+        assert_eq!(requantize(-2, dy), -2);
+        assert_eq!(requantize(1, dy), 0);
+    }
+
+    #[test]
+    fn signed_multiplier_negates() {
+        let dy = Dyadic { b: 4, c: 2 };
+        assert_eq!(requantize_signed(5, dy, -1), -5);
+        assert_eq!(requantize_signed(-5, dy, -1), 5);
+    }
+
+    #[test]
+    fn rescale_no_saturation() {
+        let dy = Dyadic { b: 1, c: 0 };
+        assert_eq!(rescale(1 << 40, dy), 1 << 40);
+    }
+
+    #[test]
+    fn matches_python_designer_examples() {
+        // values cross-checked against intops.Dyadic.approximate
+        let dy = Dyadic::approx16(0.004123251145568775);
+        assert_eq!((dy.b, dy.c), (17294, 22));
+    }
+}

@@ -1,0 +1,118 @@
+//! Integer GELU unit (paper §III-H, Fig. 14): clipped second-order
+//! polynomial erf with sign handling, then `q * (erf + q_one)`.
+
+/// I-BERT erf polynomial coefficients on [0, -b]: a(x+b)^2 + c.
+pub const ERF_A: f64 = -0.2888;
+pub const ERF_B: f64 = -1.769;
+pub const ERF_C: f64 = 1.0;
+
+/// Design-time constants of the GELU unit (the paper's q5..q8).
+#[derive(Clone, Copy, Debug)]
+pub struct GeluConsts {
+    pub s_in: f64,
+    pub q_b: i64,
+    pub q_c: i64,
+    pub q_one: i64,
+}
+
+impl GeluConsts {
+    pub fn design(s_in: f64) -> GeluConsts {
+        assert!(s_in > 0.0, "gelu input scale must be positive");
+        let s_er = s_in / std::f64::consts::SQRT_2;
+        let s_erf = ERF_A * s_er * s_er; // negative
+        GeluConsts {
+            s_in,
+            q_b: (ERF_B / s_er).floor() as i64,           // negative
+            q_c: (ERF_C / (ERF_A * s_er * s_er)).floor() as i64, // negative
+            q_one: (1.0 / s_erf).floor() as i64,          // negative
+        }
+    }
+
+    /// Scale of the erf estimate (negative: erf's `a` folds into it).
+    pub fn s_erf(&self) -> f64 {
+        let s_er = self.s_in / std::f64::consts::SQRT_2;
+        ERF_A * s_er * s_er
+    }
+
+    /// Scale of the integer GELU output: s_in * s_erf / 2 (negative).
+    pub fn s_out(&self) -> f64 {
+        self.s_in * self.s_erf() / 2.0
+    }
+}
+
+/// Signed polynomial erf estimate (INT64, scale `s_erf`).
+#[inline]
+pub fn i_erf(q: i64, c: &GeluConsts) -> i64 {
+    let sgn = q.signum();
+    let qabs = q.abs().min(-c.q_b);
+    let t = qabs + c.q_b; // in [q_b, 0]
+    sgn * (t * t + c.q_c)
+}
+
+/// Integer GELU: full-width product at scale `c.s_out()` (negative scale;
+/// the downstream Requantization multiplies by the signed constant -b).
+#[inline]
+pub fn i_gelu(q: i64, c: &GeluConsts) -> i64 {
+    q * (i_erf(q, c) + c.q_one)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn erf64(x: f64) -> f64 {
+        // Abramowitz–Stegun 7.1.26 (|err| < 1.5e-7) for test reference
+        let sign = x.signum();
+        let x = x.abs();
+        let t = 1.0 / (1.0 + 0.3275911 * x);
+        let y = 1.0
+            - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+                * t
+                + 0.254829592)
+                * t
+                * (-x * x).exp();
+        sign * y
+    }
+
+    #[test]
+    fn gelu_zero_is_zero() {
+        let c = GeluConsts::design(0.02);
+        assert_eq!(i_gelu(0, &c), 0);
+    }
+
+    #[test]
+    fn gelu_tracks_float_reference() {
+        let c = GeluConsts::design(0.02);
+        for q in (-300..=300).step_by(7) {
+            let x = q as f64 * 0.02;
+            let want = x * 0.5 * (1.0 + erf64(x / std::f64::consts::SQRT_2));
+            let got = i_gelu(q, &c) as f64 * c.s_out();
+            assert!((got - want).abs() < 0.05, "q={q}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn gelu_asymptotes() {
+        let c = GeluConsts::design(0.05);
+        let big = i_gelu(4000, &c) as f64 * c.s_out();
+        let neg = i_gelu(-4000, &c) as f64 * c.s_out();
+        assert!((big - 200.0).abs() < 0.5, "{big}");
+        assert!(neg.abs() < 0.5, "{neg}");
+    }
+
+    #[test]
+    fn erf_is_odd_and_clipped() {
+        let c = GeluConsts::design(0.02);
+        for q in [1, 5, 100, 10_000] {
+            assert_eq!(i_erf(q, &c), -i_erf(-q, &c));
+        }
+        // saturates past the clip point
+        assert_eq!(i_erf(100_000, &c), i_erf(200_000, &c));
+    }
+
+    #[test]
+    fn design_constants_negative() {
+        let c = GeluConsts::design(0.0177);
+        assert!(c.q_b < 0 && c.q_c < 0 && c.q_one < 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Integer LayerNorm unit (paper §III-I, Fig. 15): integer mean and
+//! variance, the iterative (Babylonian) integer square root, divider +
+//! affine output.
+
+use super::div_floor;
+
+/// Fixed-point precision of the normalized output (scale = 2^-LN_P).
+pub const LN_P: u32 = 7;
+
+/// Upper bound on sqrt iterations; the cycle-accurate simulator charges
+/// this worst case (paper footnote 3 does the same).
+pub const ISQRT_MAX_ITERS: u32 = 32;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LayerNormConsts {
+    pub s_in: f64,
+    pub s_gamma: f64,
+    pub d: usize,
+}
+
+impl LayerNormConsts {
+    pub fn s_out(&self) -> f64 {
+        self.s_gamma / (1u64 << LN_P) as f64
+    }
+}
+
+/// Iterative integer sqrt.  Returns `(floor(sqrt(n)), iterations)`; the
+/// iteration count drives the simulator's LayerNorm timing.
+///
+/// x0 = 2^ceil(bits/2); x_{i+1} = (x_i + n/x_i) >> 1; stop when
+/// x_{i+1} >= x_i.  (The paper prints "(x_i + x_i/n)/2" — a typo for the
+/// Babylonian update of its own reference [29]; see DESIGN.md.)
+pub fn i_sqrt(n: i64) -> (i64, u32) {
+    debug_assert!(n >= 0);
+    if n == 0 {
+        return (0, 0);
+    }
+    let bits = 64 - (n as u64).leading_zeros();
+    let mut x = 1i64 << bits.div_ceil(2);
+    let mut iters = 0;
+    loop {
+        let x1 = (x + n / x) >> 1;
+        iters += 1;
+        if x1 >= x {
+            return (x, iters);
+        }
+        x = x1;
+    }
+}
+
+/// Integer LayerNorm over one row (three phases).  `gamma` is INT8 at
+/// `s_gamma`, `beta` INT32 at `s_out`; output INT32 at `s_out`.
+/// Returns the sqrt iteration count (for the simulator's timing model).
+pub fn i_layernorm(
+    q: &[i64],
+    gamma: &[i64],
+    beta: &[i64],
+    _c: &LayerNormConsts,
+    out: &mut [i32],
+) -> u32 {
+    let d = q.len() as i64;
+    assert!(d > 0);
+    assert_eq!(gamma.len(), q.len());
+    assert_eq!(beta.len(), q.len());
+    assert_eq!(out.len(), q.len());
+
+    // Phase 1: integer mean.
+    let sum: i64 = q.iter().sum();
+    let mean = div_floor(sum, d);
+
+    // Phase 2: integer variance + iterative sqrt.
+    let mut var_sum: i64 = 0;
+    for &v in q {
+        let y = v - mean;
+        var_sum += y * y;
+    }
+    let var = div_floor(var_sum, d);
+    let (std, iters) = i_sqrt(var);
+    let std = std.max(1);
+
+    // Phase 3: divider + affine.
+    for ((o, &v), (&g, &b)) in out.iter_mut().zip(q).zip(gamma.iter().zip(beta)) {
+        let y = v - mean;
+        let qn = div_floor(y << LN_P, std);
+        let val = qn * g + b;
+        *o = val.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+    }
+    iters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isqrt_is_floor_sqrt() {
+        for n in [0i64, 1, 2, 3, 4, 15, 16, 17, 255, 256, 1 << 20, (1 << 31) - 1, 1 << 40] {
+            let (s, it) = i_sqrt(n);
+            assert!(s * s <= n && n < (s + 1) * (s + 1), "n={n} s={s}");
+            assert!(it <= ISQRT_MAX_ITERS);
+        }
+    }
+
+    #[test]
+    fn isqrt_zero_shortcircuits() {
+        assert_eq!(i_sqrt(0), (0, 0));
+    }
+
+    #[test]
+    fn layernorm_constant_row_collapses_to_beta() {
+        let d = 16;
+        let c = LayerNormConsts { s_in: 0.01, s_gamma: 0.01, d };
+        let q = vec![123i64; d];
+        let gamma = vec![64i64; d];
+        let beta: Vec<i64> = (0..d as i64).collect();
+        let mut out = vec![0i32; d];
+        i_layernorm(&q, &gamma, &beta, &c, &mut out);
+        assert_eq!(out, (0..d as i32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn layernorm_tracks_float_reference() {
+        let d = 64;
+        let c = LayerNormConsts { s_in: 0.01, s_gamma: 0.01, d };
+        let q: Vec<i64> = (0..d as i64).map(|i| (i * 37 % 501) - 250).collect();
+        let gamma = vec![100i64; d];
+        let beta = vec![0i64; d];
+        let mut out = vec![0i32; d];
+        i_layernorm(&q, &gamma, &beta, &c, &mut out);
+
+        let xs: Vec<f64> = q.iter().map(|&v| v as f64 * c.s_in).collect();
+        let mean = xs.iter().sum::<f64>() / d as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / d as f64;
+        for (i, &o) in out.iter().enumerate() {
+            let want = (xs[i] - mean) / var.sqrt();
+            let got = o as f64 * c.s_out();
+            assert!((got - want).abs() < 0.05, "i={i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sqrt_iteration_count_is_data_dependent() {
+        let (_, small) = i_sqrt(4);
+        let (_, large) = i_sqrt((1 << 45) + 12345);
+        assert!(large > small);
+    }
+}

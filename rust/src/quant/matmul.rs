@@ -1,0 +1,130 @@
+//! INT8 x INT8 -> INT32 matrix multiplication (the MatMul block,
+//! paper §III-B, Fig. 6) — the functional model the simulator and the
+//! integer classifier head use.  Row-major `(m,k) @ (k,n) -> (m,n)`.
+
+/// `out[m][n] = sum_k x[m][k]*w[k][n] (+ bias[n])`, INT32 accumulators.
+/// Panics in debug builds if an accumulator leaves the INT32 range (the
+/// hardware's accumulator width; paper-scale contractions cannot).
+pub fn i_matmul(
+    x: &[i32],
+    w: &[i32],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(x.len(), m * k, "x shape");
+    assert_eq!(w.len(), k * n, "w shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "bias shape");
+    }
+    // INT8-range operands cannot overflow the INT32 accumulator for the
+    // paper's contractions (|x*w| <= 128*128, k <= 3072 => |acc| < 2^26
+    // before bias) — same argument the hardware's accumulator width
+    // rests on.  Debug builds verify the operand contract.
+    debug_assert!(
+        x.iter().all(|&v| (-128..=127).contains(&v)),
+        "i_matmul operand outside INT8 range"
+    );
+    debug_assert!(k <= (i32::MAX as usize) / (128 * 128), "contraction too deep for INT32");
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        // bias folds in at readout (paper: added when reading the output)
+        match bias {
+            Some(b) => orow.copy_from_slice(b),
+            None => orow.fill(0),
+        }
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            // plain i32 multiply-accumulate: autovectorizes (an i64
+            // widening here blocks SIMD); a row-blocked variant was tried
+            // and reverted — W panels already hit in LLC at these sizes
+            // (EXPERIMENTS.md §Perf).
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// Transposed-B variant: `(m,k) @ (n,k)^T -> (m,n)` — the Attention
+/// unit's Q.K^T, where K streams in row-major like Q.
+pub fn i_matmul_bt(x: &[i32], w_t: &[i32], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w_t.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        for j in 0..n {
+            let wrow = &w_t[j * k..(j + 1) * k];
+            let mut acc: i32 = 0;
+            for (xv, wv) in xrow.iter().zip(wrow) {
+                acc += *xv * *wv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity() {
+        let m = 3;
+        let x: Vec<i32> = (0..9).map(|v| v - 4).collect();
+        let mut eye = vec![0i32; 9];
+        for i in 0..m {
+            eye[i * m + i] = 1;
+        }
+        let mut out = vec![0i32; 9];
+        i_matmul(&x, &eye, None, m, m, m, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn bias_added_per_column() {
+        let x = vec![1, 0, 0, 1]; // I2
+        let w = vec![5, 6, 7, 8];
+        let bias = vec![100, 200];
+        let mut out = vec![0i32; 4];
+        i_matmul(&x, &w, Some(&bias), 2, 2, 2, &mut out);
+        assert_eq!(out, vec![105, 206, 107, 208]);
+    }
+
+    #[test]
+    fn bt_matches_plain_with_transpose() {
+        let (m, k, n) = (4, 5, 3);
+        let x: Vec<i32> = (0..m * k).map(|v| (v as i32 * 7 % 13) - 6).collect();
+        let w: Vec<i32> = (0..k * n).map(|v| (v as i32 * 11 % 17) - 8).collect();
+        let mut wt = vec![0i32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                wt[j * k + kk] = w[kk * n + j];
+            }
+        }
+        let mut a = vec![0i32; m * n];
+        let mut b = vec![0i32; m * n];
+        i_matmul(&x, &w, None, m, k, n, &mut a);
+        i_matmul_bt(&x, &wt, m, k, n, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worst_case_int8_no_overflow_at_dff() {
+        // k = 3072 (RoBERTa d_ff) at extreme INT8 operands stays in INT32
+        let k = 3072;
+        let x = vec![-128i32; k];
+        let w = vec![-128i32; k];
+        let mut out = vec![0i32; 1];
+        i_matmul(&x, &w, None, 1, k, 1, &mut out);
+        assert_eq!(out[0], (k as i32) * 128 * 128);
+    }
+}

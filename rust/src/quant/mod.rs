@@ -1,0 +1,62 @@
+//! Bit-exact integer arithmetic of the SwiftTron datapath (paper §III).
+//!
+//! This is the third implementation of the integer spec (after
+//! `python/compile/intops.py` and the Pallas kernels) and the functional
+//! model the cycle-accurate simulator executes.  Agreement with the
+//! python oracle is enforced by golden-vector tests
+//! (`artifacts/golden.{bin,json}`, see `rust/tests/integration_golden.rs`).
+//!
+//! Conventions (identical across all three implementations):
+//! * floor rounding everywhere: arithmetic right shifts and
+//!   floor-division (`div_floor`), never truncation;
+//! * INT64 holds every full-width product before a shifter narrows it,
+//!   as the hardware multiplier does;
+//! * saturation to `[-128, 127]` only inside Requantization blocks.
+
+pub mod dyadic;
+pub mod gelu;
+pub mod layernorm;
+pub mod matmul;
+pub mod softmax;
+
+pub use dyadic::{requantize, requantize_signed, rescale, Dyadic};
+pub use gelu::{i_gelu, GeluConsts};
+pub use layernorm::{i_layernorm, i_sqrt, LayerNormConsts, LN_P};
+pub use matmul::{i_matmul, i_matmul_bt};
+pub use softmax::{i_exp, i_softmax, SoftmaxConsts, SM_UNIT};
+
+pub const INT8_MIN: i64 = -128;
+pub const INT8_MAX: i64 = 127;
+
+/// Floor division (Python `//` / jnp semantics; Rust `/` truncates).
+#[inline]
+pub fn div_floor(a: i64, b: i64) -> i64 {
+    let q = a / b;
+    if (a % b != 0) && ((a < 0) != (b < 0)) {
+        q - 1
+    } else {
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_floor_matches_python() {
+        // (a, b, python a//b)
+        for (a, b, want) in [
+            (7, 2, 3),
+            (-7, 2, -4),
+            (7, -2, -4),
+            (-7, -2, 3),
+            (6, 3, 2),
+            (-6, 3, -2),
+            (0, 5, 0),
+            (-1, 1000, -1),
+        ] {
+            assert_eq!(div_floor(a, b), want, "{a}//{b}");
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Integer Softmax unit (paper §III-F, Figs. 11-12): three phases —
+//! maximum search, polynomial integer exponential, rounding divider.
+
+use super::div_floor;
+
+/// Output unit: probabilities quantize to `[0, SM_UNIT]` at scale 1/SM_UNIT.
+pub const SM_UNIT: i64 = 127;
+
+/// I-BERT exp polynomial coefficients on [-ln2, 0]: a(x+b)^2 + c.
+pub const EXP_A: f64 = 0.3585;
+pub const EXP_B: f64 = 1.353;
+pub const EXP_C: f64 = 0.344;
+
+/// Design-time constants of one Softmax unit (the paper's q1..q3).
+#[derive(Clone, Copy, Debug)]
+pub struct SoftmaxConsts {
+    pub s_in: f64,
+    pub q_ln2: i64,
+    pub q_b: i64,
+    pub q_c: i64,
+}
+
+impl SoftmaxConsts {
+    pub fn design(s_in: f64) -> SoftmaxConsts {
+        assert!(s_in > 0.0, "softmax input scale must be positive");
+        SoftmaxConsts {
+            s_in,
+            q_ln2: ((std::f64::consts::LN_2 / s_in).floor() as i64).max(1),
+            q_b: (EXP_B / s_in).floor() as i64,
+            q_c: (EXP_C / (EXP_A * s_in * s_in)).floor() as i64,
+        }
+    }
+
+    /// Scale of the integer exponential output: a * s_in^2.
+    pub fn s_exp(&self) -> f64 {
+        EXP_A * self.s_in * self.s_in
+    }
+}
+
+/// Integer exp of a non-positive value (paper Fig. 12 decomposition).
+#[inline]
+pub fn i_exp(q: i64, c: &SoftmaxConsts) -> i64 {
+    debug_assert!(q <= 0);
+    let z = div_floor(-q, c.q_ln2);
+    let r = q + z * c.q_ln2; // in (-q_ln2, 0]
+    let t = r + c.q_b;
+    let poly = t * t + c.q_c;
+    poly >> z.clamp(0, 62)
+}
+
+/// Integer softmax over one row: INT32 inputs at `c.s_in`, INT8 outputs
+/// at scale 1/SM_UNIT.  Returns outputs in `out`.
+pub fn i_softmax(q: &[i64], c: &SoftmaxConsts, out: &mut [i32]) {
+    assert_eq!(q.len(), out.len());
+    if q.is_empty() {
+        return;
+    }
+    // Phase 1: maximum search.
+    let qmax = *q.iter().max().unwrap();
+    // Phase 2: integer exponential (denominator accumulation).
+    let mut denom: i64 = 0;
+    for &v in q {
+        denom += i_exp(v - qmax, c);
+    }
+    let denom = denom.max(1);
+    // Phase 3: rounding divider.  i_exp is recomputed per element — it is
+    // a handful of integer ops, cheaper than staging a wide temporary
+    // (and exactly what the hardware's second pass does).
+    for (o, &v) in out.iter_mut().zip(q) {
+        let e = i_exp(v - qmax, c);
+        *o = ((e * SM_UNIT + (denom >> 1)) / denom).clamp(0, SM_UNIT) as i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> SoftmaxConsts {
+        SoftmaxConsts::design(0.05)
+    }
+
+    #[test]
+    fn design_constants_match_python() {
+        // cross-checked against intops.SoftmaxConsts.design(0.05)
+        let c = c();
+        assert_eq!(c.q_ln2, 13);
+        assert_eq!(c.q_b, 27);
+        assert_eq!(c.q_c, 383);
+    }
+
+    #[test]
+    fn iexp_monotone_nonincreasing() {
+        let c = c();
+        let mut prev = i64::MAX;
+        for i in 0..500 {
+            let e = i_exp(-7 * i, &c);
+            assert!(e <= prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn iexp_tracks_float_exp() {
+        let c = SoftmaxConsts::design(0.01);
+        for x in (-600..=0).step_by(13) {
+            let approx = i_exp(x, &c) as f64 * c.s_exp();
+            let exact = (x as f64 * 0.01).exp();
+            assert!((approx - exact).abs() < 0.03, "x={x}: {approx} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn softmax_uniform_row() {
+        let c = c();
+        let q = vec![37i64; 16];
+        let mut out = vec![0i32; 16];
+        i_softmax(&q, &c, &mut out);
+        assert!(out.iter().all(|&o| o == out[0]));
+        let sum: i64 = out.iter().map(|&o| o as i64).sum();
+        assert!((sum - SM_UNIT).abs() <= 16, "sum {sum}");
+    }
+
+    #[test]
+    fn softmax_one_hot() {
+        let c = c();
+        let mut q = vec![-(1i64 << 15); 16];
+        q[3] = 1 << 15;
+        let mut out = vec![0i32; 16];
+        i_softmax(&q, &c, &mut out);
+        assert_eq!(out[3], SM_UNIT as i32);
+        assert!(out.iter().enumerate().all(|(i, &o)| i == 3 || o == 0));
+    }
+
+    #[test]
+    fn softmax_monotone_in_input() {
+        let c = c();
+        let q: Vec<i64> = (0..32).map(|i| (i * 17) as i64 - 200).collect();
+        let mut out = vec![0i32; 32];
+        i_softmax(&q, &c, &mut out);
+        for w in out.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn softmax_empty_row_is_noop() {
+        i_softmax(&[], &c(), &mut []);
+    }
+}

@@ -1,0 +1,177 @@
+//! PJRT client + compiled-executable cache, behind a dedicated runtime
+//! thread.
+//!
+//! The `xla` crate's handles are not `Send` (internal `Rc` + raw
+//! pointers), so one OS thread *owns* the PJRT client and every compiled
+//! executable; the rest of the coordinator talks to it over a command
+//! channel.  This also matches the hardware story: one host thread feeds
+//! one accelerator.  Multiple [`Engine`]s can be created for replica
+//! parallelism (each owns an independent PJRT client).
+
+use super::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+enum Cmd {
+    Load { path: PathBuf, reply: Sender<Result<usize, String>> },
+    Run { exe: usize, inputs: Vec<Tensor>, out: OutKind, shape: Vec<usize>, reply: Sender<Result<Tensor, String>> },
+    Platform { reply: Sender<String> },
+    Shutdown,
+}
+
+#[derive(Clone, Copy)]
+enum OutKind {
+    I32,
+    F32,
+}
+
+/// Handle to the runtime thread (cheaply cloneable, `Send + Sync`).
+#[derive(Clone)]
+pub struct Engine {
+    tx: Arc<Mutex<Sender<Cmd>>>,
+}
+
+/// Handle to one compiled artifact on a specific engine.
+#[derive(Clone)]
+pub struct Executable {
+    engine: Engine,
+    id: usize,
+    pub path: PathBuf,
+}
+
+impl Engine {
+    /// Spawn the runtime thread and create its PJRT CPU client.
+    pub fn cpu() -> Result<Engine, String> {
+        let (tx, rx) = channel::<Cmd>();
+        let (ready_tx, ready_rx) = channel();
+        std::thread::Builder::new()
+            .name("swifttron-pjrt".into())
+            .spawn(move || runtime_thread(rx, ready_tx))
+            .map_err(|e| format!("spawn runtime thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| "runtime thread died during init".to_string())??;
+        Ok(Engine { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    fn send(&self, cmd: Cmd) -> Result<(), String> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(cmd)
+            .map_err(|_| "runtime thread gone".to_string())
+    }
+
+    pub fn platform(&self) -> Result<String, String> {
+        let (tx, rx) = channel();
+        self.send(Cmd::Platform { reply: tx })?;
+        rx.recv().map_err(|_| "runtime thread gone".to_string())
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path on the thread).
+    pub fn load(&self, path: &Path) -> Result<Executable, String> {
+        let (tx, rx) = channel();
+        self.send(Cmd::Load { path: path.to_path_buf(), reply: tx })?;
+        let id = rx.recv().map_err(|_| "runtime thread gone".to_string())??;
+        Ok(Executable { engine: self.clone(), id, path: path.to_path_buf() })
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.send(Cmd::Shutdown);
+    }
+}
+
+impl Executable {
+    fn run(&self, inputs: &[Tensor], out: OutKind, shape: &[usize]) -> Result<Tensor, String> {
+        let (tx, rx) = channel();
+        self.engine.send(Cmd::Run {
+            exe: self.id,
+            inputs: inputs.to_vec(),
+            out,
+            shape: shape.to_vec(),
+            reply: tx,
+        })?;
+        rx.recv().map_err(|_| "runtime thread gone".to_string())?
+    }
+
+    /// Execute; read the single tuple output as i32 with `shape`.
+    pub fn run_i32(&self, inputs: &[Tensor], shape: &[usize]) -> Result<Tensor, String> {
+        self.run(inputs, OutKind::I32, shape)
+    }
+
+    /// Execute; read the single tuple output as f32 with `shape`.
+    pub fn run_f32(&self, inputs: &[Tensor], shape: &[usize]) -> Result<Tensor, String> {
+        self.run(inputs, OutKind::F32, shape)
+    }
+}
+
+fn runtime_thread(rx: std::sync::mpsc::Receiver<Cmd>, ready: Sender<Result<(), String>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+    let mut exes: Vec<xla::PjRtLoadedExecutable> = Vec::new();
+    let mut by_path: BTreeMap<PathBuf, usize> = BTreeMap::new();
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Platform { reply } => {
+                let _ = reply.send(client.platform_name());
+            }
+            Cmd::Load { path, reply } => {
+                if let Some(&id) = by_path.get(&path) {
+                    let _ = reply.send(Ok(id));
+                    continue;
+                }
+                let result = (|| -> Result<usize, String> {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or("non-utf8 path")?,
+                    )
+                    .map_err(|e| format!("parse {}: {e}", path.display()))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| format!("compile {}: {e}", path.display()))?;
+                    exes.push(exe);
+                    let id = exes.len() - 1;
+                    by_path.insert(path.clone(), id);
+                    Ok(id)
+                })();
+                let _ = reply.send(result);
+            }
+            Cmd::Run { exe, inputs, out, shape, reply } => {
+                let result = (|| -> Result<Tensor, String> {
+                    let e = exes.get(exe).ok_or("bad executable id")?;
+                    let literals: Vec<xla::Literal> =
+                        inputs.iter().map(|t| t.to_literal()).collect::<Result<_, _>>()?;
+                    let result = e
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|er| format!("execute: {er}"))?;
+                    let first = result
+                        .into_iter()
+                        .next()
+                        .and_then(|d| d.into_iter().next())
+                        .ok_or("no output buffer")?;
+                    let lit =
+                        first.to_literal_sync().map_err(|er| format!("to_literal: {er}"))?;
+                    let outs = lit.to_tuple().map_err(|er| format!("to_tuple: {er}"))?;
+                    let first = outs.first().ok_or("empty tuple")?;
+                    match out {
+                        OutKind::I32 => Tensor::from_literal_i32(first, &shape),
+                        OutKind::F32 => Tensor::from_literal_f32(first, &shape),
+                    }
+                })();
+                let _ = reply.send(result);
+            }
+            Cmd::Shutdown => break,
+        }
+    }
+}

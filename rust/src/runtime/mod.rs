@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute
+//! them on the request path.  Python never runs here — the artifacts were
+//! lowered once at build time (`make artifacts`, see `python/compile/`).
+//!
+//! Wrapping the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod executable;
+pub mod tensor;
+
+pub use executable::{Engine, Executable};
+pub use tensor::Tensor;

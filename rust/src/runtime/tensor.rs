@@ -1,0 +1,98 @@
+//! Minimal host-side tensor: shape + flat storage, convertible to/from
+//! `xla::Literal` at the PJRT boundary.  INT8-coded values travel as i32
+//! (the `xla` crate's `NativeType` set has no i8).
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+}
+
+impl Tensor {
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::I32 { shape, .. } | Tensor::F32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::I32 { data, .. } => data.len(),
+            Tensor::F32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// Build the device literal (reshaped to this tensor's shape).
+    pub fn to_literal(&self) -> Result<xla::Literal, String> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims).map_err(|e| format!("reshape: {e}"))
+    }
+
+    /// Read back a literal of known element type.
+    pub fn from_literal_i32(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor, String> {
+        let data = lit.to_vec::<i32>().map_err(|e| format!("to_vec<i32>: {e}"))?;
+        Ok(Tensor::i32(shape, data))
+    }
+
+    pub fn from_literal_f32(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor, String> {
+        let data = lit.to_vec::<f32>().map_err(|e| format!("to_vec<f32>: {e}"))?;
+        Ok(Tensor::f32(shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_product_enforced() {
+        let t = Tensor::i32(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn mismatch_panics() {
+        Tensor::f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn accessors_typed() {
+        let t = Tensor::i32(&[1], vec![7]);
+        assert!(t.as_i32().is_some());
+        assert!(t.as_f32().is_none());
+    }
+}

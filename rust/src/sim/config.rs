@@ -1,0 +1,118 @@
+//! Hardware configuration of a SwiftTron instance.
+//!
+//! The paper fixes one configuration for its evaluation (§IV-B: d=768,
+//! k=12, m=256, d_ff=3072, 7 ns clock) but stresses that array size and
+//! head parallelism are design-time tunables (§III-D).  [`HwConfig`]
+//! captures those knobs; [`HwConfig::paper`] is the §IV-B instance.
+
+use crate::model::Geometry;
+
+#[derive(Clone, Copy, Debug)]
+pub struct HwConfig {
+    /// MAC array rows (output-stationary; matches sentence length m in
+    /// the paper's configuration).
+    pub array_rows: usize,
+    /// MAC array columns (matches model dimension d in the paper's
+    /// configuration).
+    pub array_cols: usize,
+    /// Attention-head units instantiated in parallel (paper Fig. 9).
+    pub parallel_heads: usize,
+    /// Row-parallel Softmax units (paper §III-F: m instances).
+    pub softmax_units: usize,
+    /// Element-parallel LayerNorm lanes (paper §III-I: d instances).
+    pub layernorm_lanes: usize,
+    /// Clock period in nanoseconds (paper: 7 ns -> ~143 MHz).
+    pub clock_ns: f64,
+    /// Pipeline depth of the Softmax / LayerNorm units (paper §IV-B:
+    /// partitioned into three pipeline stages to meet timing).
+    pub pipeline_stages: u64,
+    /// Charge the LayerNorm sqrt its worst-case iteration count (paper
+    /// footnote 3).  `false` uses the co-simulated data-dependent count.
+    pub worst_case_sqrt: bool,
+}
+
+impl HwConfig {
+    /// The paper's synthesized configuration (§IV-B, Table I).
+    pub fn paper() -> HwConfig {
+        HwConfig {
+            array_rows: 256,
+            array_cols: 768,
+            parallel_heads: 12,
+            softmax_units: 256,
+            layernorm_lanes: 768,
+            clock_ns: 7.0,
+            pipeline_stages: 3,
+            worst_case_sqrt: true,
+        }
+    }
+
+    /// A smaller edge-class instance (used by the design-space example).
+    pub fn edge() -> HwConfig {
+        HwConfig {
+            array_rows: 64,
+            array_cols: 256,
+            parallel_heads: 4,
+            softmax_units: 64,
+            layernorm_lanes: 256,
+            clock_ns: 7.0,
+            pipeline_stages: 3,
+            worst_case_sqrt: true,
+        }
+    }
+
+    /// Clock frequency in MHz.
+    pub fn clock_mhz(&self) -> f64 {
+        1000.0 / self.clock_ns
+    }
+
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.clock_ns * 1e-6
+    }
+
+    /// Sanity-check a configuration against a workload geometry.
+    pub fn validate(&self, geo: &Geometry) -> Result<(), String> {
+        if self.array_rows == 0 || self.array_cols == 0 {
+            return Err("MAC array must be non-empty".into());
+        }
+        if self.parallel_heads == 0 || self.parallel_heads > geo.heads.max(1) * 4 {
+            return Err(format!(
+                "parallel_heads {} unreasonable for {} heads",
+                self.parallel_heads, geo.heads
+            ));
+        }
+        if self.clock_ns <= 0.0 {
+            return Err("clock period must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Total MAC elements (for the synthesis area model).
+    pub fn mac_count(&self) -> u64 {
+        self.array_rows as u64 * self.array_cols as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_143mhz() {
+        let c = HwConfig::paper();
+        assert!((c.clock_mhz() - 142.857).abs() < 0.01);
+    }
+
+    #[test]
+    fn cycles_to_ms() {
+        let c = HwConfig::paper();
+        // 1 M cycles at 7 ns = 7 ms
+        assert!((c.cycles_to_ms(1_000_000) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_rejects_zero_array() {
+        let mut c = HwConfig::paper();
+        c.array_rows = 0;
+        assert!(c.validate(&Geometry::preset("tiny").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Control unit: the paper's cooperating FSMs (Fig. 16).
+//!
+//! Three dedicated finite state machines (MHSA, LayerNorm, FFN) sequence
+//! the hardware blocks with Start/Done/Valid handshakes.  The simulator
+//! models each FSM as an explicit state walker that advances a shared
+//! cycle counter and records a handshake trace — the trace is what the
+//! paper's QuestaSim waveforms would show, and the tests assert its
+//! well-formedness (every Start matched by a Done, monotonic time).
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsmKind {
+    Mhsa,
+    LayerNorm,
+    Ffn,
+}
+
+impl fmt::Display for FsmKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FsmKind::Mhsa => "MHSA",
+            FsmKind::LayerNorm => "LN",
+            FsmKind::Ffn => "FFN",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// FSM asserted Start for a named block at `cycle`.
+    Start { fsm: FsmKind, block: &'static str, cycle: u64 },
+    /// Block raised Done/Valid at `cycle`.
+    Done { fsm: FsmKind, block: &'static str, cycle: u64 },
+}
+
+impl Event {
+    pub fn cycle(&self) -> u64 {
+        match self {
+            Event::Start { cycle, .. } | Event::Done { cycle, .. } => *cycle,
+        }
+    }
+}
+
+/// Handshake trace of one simulation.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    pub fn check_well_formed(&self) -> Result<(), String> {
+        let mut open: Vec<(&FsmKind, &&'static str)> = Vec::new();
+        let mut last = 0u64;
+        for e in &self.events {
+            if e.cycle() < last {
+                return Err(format!("time went backwards at {e:?}"));
+            }
+            last = e.cycle();
+            match e {
+                Event::Start { fsm, block, .. } => open.push((fsm, block)),
+                Event::Done { fsm, block, .. } => {
+                    let pos = open
+                        .iter()
+                        .position(|(f, b)| *f == fsm && *b == block)
+                        .ok_or_else(|| format!("Done without Start: {e:?}"))?;
+                    open.remove(pos);
+                }
+            }
+        }
+        if open.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unmatched Starts: {open:?}"))
+        }
+    }
+}
+
+/// One FSM walking through its block sequence, advancing a shared clock.
+pub struct Fsm<'a> {
+    pub kind: FsmKind,
+    trace: &'a mut Trace,
+    /// The FSM's own notion of "now" (cycles since inference start).
+    pub now: u64,
+}
+
+impl<'a> Fsm<'a> {
+    pub fn new(kind: FsmKind, trace: &'a mut Trace, start_cycle: u64) -> Self {
+        Fsm { kind, trace, now: start_cycle }
+    }
+
+    /// Run one block: Start handshake, occupy `cycles`, Done handshake.
+    /// Returns the completion cycle.
+    pub fn run_block(&mut self, block: &'static str, cycles: u64) -> u64 {
+        self.trace.events.push(Event::Start { fsm: self.kind, block, cycle: self.now });
+        self.now += cycles;
+        self.trace.events.push(Event::Done { fsm: self.kind, block, cycle: self.now });
+        self.now
+    }
+
+    /// Wait for another FSM's completion (handshake join).
+    pub fn join(&mut self, other_done_at: u64) {
+        self.now = self.now.max(other_done_at);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsm_records_matched_handshakes() {
+        let mut t = Trace::default();
+        {
+            let mut fsm = Fsm::new(FsmKind::Mhsa, &mut t, 0);
+            fsm.run_block("qkv", 100);
+            fsm.run_block("attention", 50);
+        }
+        assert_eq!(t.events.len(), 4);
+        t.check_well_formed().unwrap();
+        assert_eq!(t.events.last().unwrap().cycle(), 150);
+    }
+
+    #[test]
+    fn join_advances_to_latest() {
+        let mut t = Trace::default();
+        let mut fsm = Fsm::new(FsmKind::Ffn, &mut t, 10);
+        fsm.join(500);
+        assert_eq!(fsm.now, 500);
+        fsm.join(100); // joining an earlier event must not move time back
+        assert_eq!(fsm.now, 500);
+    }
+
+    #[test]
+    fn malformed_trace_detected() {
+        let mut t = Trace::default();
+        t.events.push(Event::Done { fsm: FsmKind::Mhsa, block: "x", cycle: 5 });
+        assert!(t.check_well_formed().is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Full encoder schedule: the paper's control flow (Fig. 16) over one
+//! layer — MHSA FSM, LayerNorm FSM, FFN FSM, LayerNorm FSM — repeated
+//! per layer, with a handshake trace and a per-block cycle breakdown.
+//!
+//! Head-level dataflow (Figs. 8-10): the Q/K/V/output projections and the
+//! FFN matmuls run on the central R x C MAC array; each head unit owns
+//! (m x dh)-shaped attention MatMuls (Q.K^T and P.V) plus Scale, Softmax
+//! and Requantization operators.  `parallel_heads` head units work
+//! concurrently; extra heads serialize in waves.
+
+use super::control::{Fsm, FsmKind, Trace};
+use super::units;
+use super::HwConfig;
+use crate::model::Geometry;
+use std::collections::BTreeMap;
+
+/// Cycle breakdown of one simulated inference.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyReport {
+    /// total cycles from first Start to last Done
+    pub total_cycles: u64,
+    /// busy cycles per component class (feeds the power duty model)
+    pub per_block: BTreeMap<&'static str, u64>,
+    pub trace: Trace,
+}
+
+impl LatencyReport {
+    pub fn ms(&self, cfg: &HwConfig) -> f64 {
+        cfg.cycles_to_ms(self.total_cycles)
+    }
+}
+
+/// Simulate one encoder layer starting at `start_cycle`; returns the
+/// completion cycle and accumulates into the trace + per-block map
+/// (split borrows of [`LatencyReport`]'s fields).
+pub fn simulate_layer(
+    cfg: &HwConfig,
+    geo: &Geometry,
+    start_cycle: u64,
+    trace: &mut Trace,
+    blocks: &mut BTreeMap<&'static str, u64>,
+    sqrt_iters: Option<&[u32]>,
+) -> u64 {
+    fn add(blocks: &mut BTreeMap<&'static str, u64>, k: &'static str, v: u64) {
+        *blocks.entry(k).or_insert(0) += v;
+    }
+    let (m, d, dff, dh) = (geo.m, geo.d, geo.d_ff, geo.dh());
+    let default_iters = vec![crate::quant::layernorm::ISQRT_MAX_ITERS; m];
+    let iters = sqrt_iters.unwrap_or(&default_iters);
+
+    // ---- MHSA FSM ----
+    let mhsa_done = {
+        let mut fsm = Fsm::new(FsmKind::Mhsa, trace, start_cycle);
+        // Q, K, V projections on the central array (requant overlapped).
+        let qkv = 3 * units::matmul_cycles(cfg, m, d, d) + units::requant_cycles(cfg);
+        fsm.run_block("qkv_proj", qkv);
+        add(blocks, "matmul", 3 * units::matmul_cycles(cfg, m, d, d));
+        add(blocks, "requant", units::requant_cycles(cfg));
+
+        // Attention heads in waves of `parallel_heads` (Fig. 9).
+        let waves = geo.heads.div_ceil(cfg.parallel_heads) as u64;
+        // per head (Fig. 10): Q.K^T -> Scale -> Softmax -> Req -> P.V
+        let head_cfg = HwConfig { array_rows: m, array_cols: dh, ..*cfg };
+        let qkt = units::matmul_cycles(&head_cfg, m, dh, m);
+        let softmax = units::softmax_cycles(cfg, m, m);
+        let pv = units::matmul_cycles(&head_cfg, m, m, dh);
+        let per_head = qkt + softmax + pv + 2 * units::requant_cycles(cfg);
+        fsm.run_block("attention_heads", waves * per_head);
+        add(blocks, "matmul", waves * (qkt + pv) * geo.heads.min(cfg.parallel_heads) as u64);
+        add(blocks, "softmax", waves * softmax * geo.heads.min(cfg.parallel_heads) as u64);
+        add(blocks, "requant", waves * 2 * units::requant_cycles(cfg));
+
+        // Output projection (the extra MatMul of Fig. 9) + residual align.
+        let proj = units::matmul_cycles(cfg, m, d, d) + units::residual_cycles(cfg);
+        fsm.run_block("out_proj", proj);
+        add(blocks, "matmul", units::matmul_cycles(cfg, m, d, d));
+        add(blocks, "residual", units::residual_cycles(cfg));
+        fsm.now
+    };
+
+    // ---- LayerNorm FSM (post-MHSA) ----
+    let ln1_done = {
+        let mut fsm = Fsm::new(FsmKind::LayerNorm, trace, 0);
+        fsm.join(mhsa_done);
+        let ln = units::layernorm_cycles(cfg, m, d, iters) + units::requant_cycles(cfg);
+        fsm.run_block("layernorm1", ln);
+        add(blocks, "layernorm", units::layernorm_cycles(cfg, m, d, iters));
+        add(blocks, "requant", units::requant_cycles(cfg));
+        fsm.now
+    };
+
+    // ---- FFN FSM ----
+    let ffn_done = {
+        let mut fsm = Fsm::new(FsmKind::Ffn, trace, 0);
+        fsm.join(ln1_done);
+        let mm1 = units::matmul_cycles(cfg, m, d, dff);
+        let gelu = units::gelu_cycles(cfg) + units::requant_cycles(cfg);
+        let mm2 = units::matmul_cycles(cfg, m, dff, d);
+        fsm.run_block("ffn_mm1", mm1);
+        fsm.run_block("gelu", gelu);
+        fsm.run_block("ffn_mm2", mm2 + units::residual_cycles(cfg));
+        add(blocks, "matmul", mm1 + mm2);
+        add(blocks, "gelu", units::gelu_cycles(cfg));
+        add(blocks, "requant", units::requant_cycles(cfg));
+        add(blocks, "residual", units::residual_cycles(cfg));
+        fsm.now
+    };
+
+    // ---- LayerNorm FSM (post-FFN) ----
+    let mut fsm = Fsm::new(FsmKind::LayerNorm, trace, 0);
+    fsm.join(ffn_done);
+    let ln = units::layernorm_cycles(cfg, m, d, iters) + units::requant_cycles(cfg);
+    fsm.run_block("layernorm2", ln);
+    add(blocks, "layernorm", units::layernorm_cycles(cfg, m, d, iters));
+    add(blocks, "requant", units::requant_cycles(cfg));
+    fsm.now
+}
+
+/// Simulate the full encoder stack of `geo`.
+pub fn simulate_encoder(cfg: &HwConfig, geo: &Geometry) -> LatencyReport {
+    let mut report = LatencyReport::default();
+    let mut t = 0;
+    for _ in 0..geo.layers {
+        t = simulate_layer(cfg, geo, t, &mut report.trace, &mut report.per_block, None);
+    }
+    report.total_cycles = t;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_well_formed() {
+        let r = simulate_encoder(&HwConfig::paper(), &Geometry::preset("roberta_base").unwrap());
+        r.trace.check_well_formed().unwrap();
+    }
+
+    #[test]
+    fn roberta_base_latency_in_paper_band() {
+        // Paper Table II: 1.83 ms.  Shape target: same order, within 2x.
+        let cfg = HwConfig::paper();
+        let r = simulate_encoder(&cfg, &Geometry::preset("roberta_base").unwrap());
+        let ms = r.ms(&cfg);
+        assert!((0.9..=3.7).contains(&ms), "latency {ms} ms");
+    }
+
+    #[test]
+    fn model_ranking_matches_table2() {
+        // deit_s < roberta_base < roberta_large (Table II ordering)
+        let cfg = HwConfig::paper();
+        let base = simulate_encoder(&cfg, &Geometry::preset("roberta_base").unwrap());
+        let large = simulate_encoder(&cfg, &Geometry::preset("roberta_large").unwrap());
+        let deit = simulate_encoder(&cfg, &Geometry::preset("deit_s").unwrap());
+        assert!(deit.total_cycles < base.total_cycles);
+        assert!(base.total_cycles < large.total_cycles);
+    }
+
+    #[test]
+    fn layers_scale_linearly() {
+        let cfg = HwConfig::paper();
+        let mut g = Geometry::preset("roberta_base").unwrap();
+        let r12 = simulate_encoder(&cfg, &g);
+        g.layers = 6;
+        let r6 = simulate_encoder(&cfg, &g);
+        assert_eq!(r12.total_cycles, 2 * r6.total_cycles);
+    }
+
+    #[test]
+    fn matmul_dominates_busy_cycles() {
+        let cfg = HwConfig::paper();
+        let r = simulate_encoder(&cfg, &Geometry::preset("roberta_base").unwrap());
+        let mm = r.per_block["matmul"];
+        let total: u64 = r.per_block.values().sum();
+        assert!(mm * 2 > total, "matmul {mm} of {total}");
+    }
+
+    #[test]
+    fn smaller_array_is_slower() {
+        let geo = Geometry::preset("roberta_base").unwrap();
+        let paper = simulate_encoder(&HwConfig::paper(), &geo);
+        let edge = simulate_encoder(&HwConfig::edge(), &geo);
+        assert!(edge.total_cycles > paper.total_cycles);
+    }
+}

@@ -1,0 +1,274 @@
+//! Functional (bit-exact) model of one SwiftTron encoder layer.
+//!
+//! Mirrors `python/compile/model.py::quant_encoder_layer` operation for
+//! operation using the `quant` primitives; the integration tests check it
+//! against the PJRT-executed Pallas artifact bit-for-bit (the same
+//! software-vs-RTL triangle the paper validates with QuestaSim).
+//!
+//! Besides numerics it returns the data-dependent LayerNorm sqrt
+//! iteration counts, which the cycle-accurate simulator can consume when
+//! `worst_case_sqrt = false`.
+
+use crate::model::{Geometry, LayerConsts};
+use crate::quant::{
+    self, i_layernorm, i_matmul, i_matmul_bt, i_softmax, requantize, requantize_signed,
+    rescale,
+};
+
+/// One layer's integer weights, row-major (see aot.py WEIGHT_KEYS).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: Vec<i32>,
+    pub bq: Vec<i32>,
+    pub wk: Vec<i32>,
+    pub bk: Vec<i32>,
+    pub wv: Vec<i32>,
+    pub bv: Vec<i32>,
+    pub wo: Vec<i32>,
+    pub bo: Vec<i32>,
+    pub w1: Vec<i32>,
+    pub b1: Vec<i32>,
+    pub w2: Vec<i32>,
+    pub b2: Vec<i32>,
+    pub gamma1: Vec<i32>,
+    pub beta1: Vec<i32>,
+    pub gamma2: Vec<i32>,
+    pub beta2: Vec<i32>,
+}
+
+impl LayerWeights {
+    pub fn from_blob(
+        blob: &crate::model::Blob,
+        layer: usize,
+    ) -> Result<LayerWeights, String> {
+        let g = |k: &str| blob.i32(&format!("L{layer}.{k}"));
+        Ok(LayerWeights {
+            wq: g("wq")?, bq: g("bq")?, wk: g("wk")?, bk: g("bk")?,
+            wv: g("wv")?, bv: g("bv")?, wo: g("wo")?, bo: g("bo")?,
+            w1: g("w1")?, b1: g("b1")?, w2: g("w2")?, b2: g("b2")?,
+            gamma1: g("gamma1")?, beta1: g("beta1")?,
+            gamma2: g("gamma2")?, beta2: g("beta2")?,
+        })
+    }
+}
+
+/// Output of one functional layer evaluation.
+pub struct LayerOutput {
+    /// INT8-coded activations (stored i32), length m*d, scale `s_out`.
+    pub q_out: Vec<i32>,
+    /// sqrt iteration counts: ln1 rows then ln2 rows (2*m entries).
+    pub sqrt_iters: Vec<u32>,
+}
+
+fn requant_all(acc: &[i32], dy: quant::Dyadic) -> Vec<i32> {
+    acc.iter().map(|&v| requantize(v as i64, dy)).collect()
+}
+
+/// Extract head `h` (columns h*dh..(h+1)*dh) into a contiguous matrix.
+fn head_cols(x: &[i32], m: usize, d: usize, h: usize, dh: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * dh];
+    for r in 0..m {
+        out[r * dh..(r + 1) * dh].copy_from_slice(&x[r * d + h * dh..r * d + (h + 1) * dh]);
+    }
+    out
+}
+
+/// Bit-exact integer encoder layer (paper Figs. 5, 8-15).
+pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geometry) -> LayerOutput {
+    let (m, d, dff, dh, heads) = (geo.m, geo.d, geo.d_ff, geo.dh(), geo.heads);
+    assert_eq!(q_x.len(), m * d);
+
+    // --- Q/K/V projections + Requantization ---
+    let mut acc = vec![0i32; m * d];
+    i_matmul(q_x, &w.wq, Some(&w.bq), m, d, d, &mut acc);
+    let q8 = requant_all(&acc, c.dy_q);
+    i_matmul(q_x, &w.wk, Some(&w.bk), m, d, d, &mut acc);
+    let k8 = requant_all(&acc, c.dy_k);
+    i_matmul(q_x, &w.wv, Some(&w.bv), m, d, d, &mut acc);
+    let v8 = requant_all(&acc, c.dy_v);
+
+    // --- Attention per head: MatMul -> Scale -> Softmax -> Req -> MatMul ---
+    let mut ctx_acc = vec![0i32; m * d];
+    let mut scores = vec![0i32; m * m];
+    let mut probs = vec![0i32; m * m];
+    for h in 0..heads {
+        let qh = head_cols(&q8, m, d, h, dh);
+        let kh = head_cols(&k8, m, d, h, dh);
+        let vh = head_cols(&v8, m, d, h, dh);
+        i_matmul_bt(&qh, &kh, m, dh, m, &mut scores);
+        // Scale block + Softmax rows
+        let mut row64 = vec![0i64; m];
+        for r in 0..m {
+            for (dst, &s) in row64.iter_mut().zip(&scores[r * m..(r + 1) * m]) {
+                *dst = rescale(s as i64, c.dy_scale);
+            }
+            i_softmax(&row64, &c.softmax, &mut probs[r * m..(r + 1) * m]);
+        }
+        // P.V into the head's slice of the context accumulator
+        let mut ctx_h = vec![0i32; m * dh];
+        i_matmul(&probs, &vh, None, m, m, dh, &mut ctx_h);
+        for r in 0..m {
+            ctx_acc[r * d + h * dh..r * d + (h + 1) * dh]
+                .copy_from_slice(&ctx_h[r * dh..(r + 1) * dh]);
+        }
+    }
+    let ctx8 = requant_all(&ctx_acc, c.dy_ctx);
+
+    // --- output projection + residual align + LayerNorm 1 ---
+    let mut attn_acc = vec![0i32; m * d];
+    i_matmul(&ctx8, &w.wo, Some(&w.bo), m, d, d, &mut attn_acc);
+    let res1: Vec<i64> = q_x
+        .iter()
+        .zip(&attn_acc)
+        .map(|(&x, &a)| x as i64 + rescale(a as i64, c.dy_res1) as i32 as i64)
+        .collect();
+    let g1: Vec<i64> = w.gamma1.iter().map(|&v| v as i64).collect();
+    let b1v: Vec<i64> = w.beta1.iter().map(|&v| v as i64).collect();
+    let mut ln1 = vec![0i32; m * d];
+    let mut sqrt_iters = Vec::with_capacity(2 * m);
+    for r in 0..m {
+        let it = i_layernorm(&res1[r * d..(r + 1) * d], &g1, &b1v, &c.ln1, &mut ln1[r * d..(r + 1) * d]);
+        sqrt_iters.push(it);
+    }
+    let x2 = requant_all(&ln1, c.dy_ln1);
+
+    // --- FFN: MatMul -> GELU -> Req -> MatMul ---
+    let mut h_acc = vec![0i32; m * dff];
+    i_matmul(&x2, &w.w1, Some(&w.b1), m, d, dff, &mut h_acc);
+    let h8: Vec<i32> = h_acc
+        .iter()
+        .map(|&v| requantize_signed(quant::i_gelu(v as i64, &c.gelu), c.dy_gelu, -1))
+        .collect();
+    let mut ffn_acc = vec![0i32; m * d];
+    i_matmul(&h8, &w.w2, Some(&w.b2), m, dff, d, &mut ffn_acc);
+
+    // --- residual align + LayerNorm 2 + output requant ---
+    let res2: Vec<i64> = x2
+        .iter()
+        .zip(&ffn_acc)
+        .map(|(&x, &a)| x as i64 + rescale(a as i64, c.dy_res2) as i32 as i64)
+        .collect();
+    let g2: Vec<i64> = w.gamma2.iter().map(|&v| v as i64).collect();
+    let b2v: Vec<i64> = w.beta2.iter().map(|&v| v as i64).collect();
+    let mut ln2 = vec![0i32; m * d];
+    for r in 0..m {
+        let it = i_layernorm(&res2[r * d..(r + 1) * d], &g2, &b2v, &c.ln2, &mut ln2[r * d..(r + 1) * d]);
+        sqrt_iters.push(it);
+    }
+    LayerOutput { q_out: requant_all(&ln2, c.dy_ln2), sqrt_iters }
+}
+
+/// Full integer encoder stack.
+pub fn encoder_forward(
+    q_x: &[i32],
+    layers: &[(LayerWeights, LayerConsts)],
+    geo: &Geometry,
+) -> (Vec<i32>, Vec<u32>) {
+    let mut h = q_x.to_vec();
+    let mut iters = Vec::new();
+    for (w, c) in layers {
+        let out = layer_forward(&h, w, c, geo);
+        h = out.q_out;
+        iters.extend(out.sqrt_iters);
+    }
+    (h, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Dyadic, GeluConsts, LayerNormConsts, SoftmaxConsts};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn tiny_geo() -> Geometry {
+        Geometry::new(16, 2, 8, 32, 1)
+    }
+
+    fn rand_w(rng: &mut Rng, n: usize, lim: i64) -> Vec<i32> {
+        (0..n).map(|_| rng.range_i64(-lim, lim) as i32).collect()
+    }
+
+    fn consts(geo: &Geometry) -> LayerConsts {
+        let dy = |x: f64| Dyadic::approx16(x);
+        LayerConsts {
+            dy_q: dy(0.004), dy_k: dy(0.004), dy_v: dy(0.004),
+            dy_scale: Dyadic { b: 1, c: 2 },
+            dy_ctx: dy(0.3), dy_res1: dy(0.08),
+            dy_ln1: dy(0.005), dy_gelu: Dyadic::approximate(2.0e-7, 14, 52),
+            dy_res2: dy(0.08), dy_ln2: dy(0.005),
+            softmax: SoftmaxConsts::design(0.0009),
+            gelu: GeluConsts::design(0.0004),
+            ln1: LayerNormConsts { s_in: 0.02, s_gamma: 0.008, d: geo.d },
+            ln2: LayerNormConsts { s_in: 0.02, s_gamma: 0.008, d: geo.d },
+            scales: BTreeMap::new(),
+        }
+    }
+
+    fn weights(rng: &mut Rng, geo: &Geometry) -> LayerWeights {
+        let (d, dff) = (geo.d, geo.d_ff);
+        LayerWeights {
+            wq: rand_w(rng, d * d, 127), bq: rand_w(rng, d, 1000),
+            wk: rand_w(rng, d * d, 127), bk: rand_w(rng, d, 1000),
+            wv: rand_w(rng, d * d, 127), bv: rand_w(rng, d, 1000),
+            wo: rand_w(rng, d * d, 127), bo: rand_w(rng, d, 1000),
+            w1: rand_w(rng, d * dff, 127), b1: rand_w(rng, dff, 1000),
+            w2: rand_w(rng, dff * d, 127), b2: rand_w(rng, d, 1000),
+            gamma1: rand_w(rng, d, 127), beta1: rand_w(rng, d, 500),
+            gamma2: rand_w(rng, d, 127), beta2: rand_w(rng, d, 500),
+        }
+    }
+
+    #[test]
+    fn output_is_int8_coded() {
+        let geo = tiny_geo();
+        let mut rng = Rng::new(3);
+        let w = weights(&mut rng, &geo);
+        let c = consts(&geo);
+        let x = rand_w(&mut rng, geo.m * geo.d, 127);
+        let out = layer_forward(&x, &w, &c, &geo);
+        assert!(out.q_out.iter().all(|&v| (-128..=127).contains(&v)));
+        assert_eq!(out.sqrt_iters.len(), 2 * geo.m);
+    }
+
+    #[test]
+    fn deterministic() {
+        let geo = tiny_geo();
+        let mut rng = Rng::new(3);
+        let w = weights(&mut rng, &geo);
+        let c = consts(&geo);
+        let x = rand_w(&mut rng, geo.m * geo.d, 127);
+        let a = layer_forward(&x, &w, &c, &geo).q_out;
+        let b = layer_forward(&x, &w, &c, &geo).q_out;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn input_sensitivity() {
+        let geo = tiny_geo();
+        let mut rng = Rng::new(4);
+        let w = weights(&mut rng, &geo);
+        let c = consts(&geo);
+        let x = rand_w(&mut rng, geo.m * geo.d, 127);
+        let mut x2 = x.clone();
+        for v in x2.iter_mut().take(geo.d) {
+            *v = (*v + 40).min(127);
+        }
+        let a = layer_forward(&x, &w, &c, &geo).q_out;
+        let b = layer_forward(&x2, &w, &c, &geo).q_out;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn encoder_stacks_layers() {
+        let geo = Geometry::new(16, 2, 8, 32, 2);
+        let mut rng = Rng::new(5);
+        let layers: Vec<_> = (0..2)
+            .map(|_| (weights(&mut rng, &geo), consts(&geo)))
+            .collect();
+        let x = rand_w(&mut rng, geo.m * geo.d, 127);
+        let (out, iters) = encoder_forward(&x, &layers, &geo);
+        assert_eq!(out.len(), geo.m * geo.d);
+        assert_eq!(iters.len(), 2 * 2 * geo.m);
+    }
+}

@@ -1,0 +1,31 @@
+//! Cycle-accurate simulator of the SwiftTron architecture (paper §III).
+//!
+//! Stands in for the paper's QuestaSim gate-level simulation (DESIGN.md
+//! §5): it counts the clock cycles the RTL would take, block by block,
+//! driven by the same FSM structure the paper's control unit uses
+//! (Fig. 16), and optionally executes the *functional* integer datapath
+//! ([`functional`]) so data-dependent timings (the LayerNorm sqrt) and
+//! numerics can be co-simulated.
+//!
+//! Timing model summary (per block, documented in each unit):
+//! * MatMul: output-stationary R x C MAC array; an (M,N,K) product takes
+//!   `ceil(M/R) * ceil(N/C)` tile passes of `K` feed cycles plus
+//!   `min(N, C)` column-readout cycles (paper Fig. 6's dataflow).
+//! * Softmax: m row-parallel units, three phases over an n-element row
+//!   (max search, exp, divider), 3-stage pipelined (paper §IV-B).
+//! * LayerNorm: d element-parallel lanes, rows streamed; per row a mean
+//!   phase, a variance + iterative-sqrt phase (worst-case cycles by
+//!   default, footnote 3), and an output/divider phase.
+//! * GELU / Requant: combinational lanes matching the producer's readout
+//!   width — they overlap with the feeding MatMul's column readout and
+//!   charge only pipeline-fill cycles.
+
+pub mod config;
+pub mod control;
+pub mod encoder;
+pub mod functional;
+pub mod units;
+
+pub use config::HwConfig;
+pub use control::{Event, FsmKind, Trace};
+pub use encoder::{simulate_encoder, simulate_layer, LatencyReport};

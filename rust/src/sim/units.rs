@@ -1,0 +1,150 @@
+//! Per-block timing models (cycles), one function per hardware unit.
+//!
+//! Each formula states its dataflow assumption next to the paper figure
+//! it models.  All counts are in clock cycles of the unit's own schedule;
+//! the encoder-level FSMs (`control`/`encoder`) sequence them.
+
+use super::HwConfig;
+use crate::quant::layernorm::ISQRT_MAX_ITERS;
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// MatMul block (Fig. 6): output-stationary R x C MAC array computing an
+/// (M,K) x (K,N) product.  Each (R,C) output tile is loaded by streaming
+/// the K operand panels (one cycle per k step) and drained column-by-
+/// column through the output multiplexer (one cycle per occupied column).
+pub fn matmul_cycles(cfg: &HwConfig, m: usize, k: usize, n: usize) -> u64 {
+    let tiles_r = ceil_div(m, cfg.array_rows);
+    let tiles_c = ceil_div(n, cfg.array_cols);
+    let readout = n.min(cfg.array_cols) as u64;
+    (tiles_r as u64) * (tiles_c as u64) * (k as u64 + readout)
+}
+
+/// Utilization of the MAC array for an (M,K)x(K,N) product: useful MACs
+/// over MACs offered during the feed phase (readout excluded).
+pub fn matmul_utilization(cfg: &HwConfig, m: usize, k: usize, n: usize) -> f64 {
+    let useful = (m * k * n) as f64;
+    let tiles_r = ceil_div(m, cfg.array_rows);
+    let tiles_c = ceil_div(n, cfg.array_cols);
+    let offered = (tiles_r * cfg.array_rows * tiles_c * cfg.array_cols * k) as f64;
+    useful / offered
+}
+
+/// Softmax unit (Figs. 11-12): one unit per matrix row (m instances work
+/// concurrently, §III-F); each unit scans its n-element row three times
+/// (max search, exp + sum, divider) with `pipeline_stages` fill cycles.
+/// Rows beyond the instantiated unit count serialize in waves.
+pub fn softmax_cycles(cfg: &HwConfig, rows: usize, n: usize) -> u64 {
+    let waves = ceil_div(rows, cfg.softmax_units) as u64;
+    let per_row = 3 * n as u64 + cfg.pipeline_stages;
+    waves * per_row
+}
+
+/// LayerNorm unit (Fig. 15): d element-parallel lanes hold one row;
+/// mean and variance are lane-tree reductions (log2 d levels), the sqrt
+/// iterates (worst case by default, footnote 3), then every lane applies
+/// divider + affine.  Rows stream through the 3-stage pipeline.
+pub fn layernorm_row_cycles(cfg: &HwConfig, d: usize, sqrt_iters: u32) -> u64 {
+    let lanes = cfg.layernorm_lanes.min(d).max(1);
+    let chunks = ceil_div(d, lanes) as u64;
+    let tree = (usize::BITS - (lanes - 1).leading_zeros()) as u64; // ceil(log2)
+    let mean = chunks + tree;
+    let iters = if cfg.worst_case_sqrt { ISQRT_MAX_ITERS } else { sqrt_iters } as u64;
+    // variance needs the subtract+square pass plus the same reduction
+    let var = chunks + tree + 1;
+    let output = chunks + 1; // divider + affine per lane, chunked
+    mean + var + iters + output + cfg.pipeline_stages
+}
+
+/// Full LayerNorm over (rows x d): rows stream through the pipeline —
+/// after the first row fills the pipe, one row completes per stage time;
+/// we charge the conservative non-overlapped bound divided by stages.
+pub fn layernorm_cycles(cfg: &HwConfig, rows: usize, d: usize, sqrt_iters: &[u32]) -> u64 {
+    let default_iters = ISQRT_MAX_ITERS;
+    (0..rows)
+        .map(|r| {
+            let it = sqrt_iters.get(r).copied().unwrap_or(default_iters);
+            layernorm_row_cycles(cfg, d, it)
+        })
+        .sum::<u64>()
+        / cfg.pipeline_stages
+}
+
+/// GELU unit (Fig. 14): combinational polynomial lanes sized to the
+/// producing MatMul's readout width; it consumes columns as they drain,
+/// so only the pipeline fill is charged.
+pub fn gelu_cycles(cfg: &HwConfig) -> u64 {
+    cfg.pipeline_stages
+}
+
+/// Requantization unit (Fig. 7): one multiplier+shifter per readout lane,
+/// fully overlapped with the producer; pipeline fill only.
+pub fn requant_cycles(cfg: &HwConfig) -> u64 {
+    cfg.pipeline_stages
+}
+
+/// Residual-alignment Dyadic unit (§III-I): replicated per row, consumes
+/// one column per cycle — overlapped, pipeline fill only.
+pub fn residual_cycles(cfg: &HwConfig) -> u64 {
+    cfg.pipeline_stages
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HwConfig {
+        HwConfig::paper()
+    }
+
+    #[test]
+    fn matmul_single_tile() {
+        // 256x768 array, (256,768)x(768,768): one row tile, one col tile
+        assert_eq!(matmul_cycles(&cfg(), 256, 768, 768), 768 + 768);
+    }
+
+    #[test]
+    fn matmul_tiling_multiplies() {
+        // N = 3072 -> 4 column tiles
+        let one = matmul_cycles(&cfg(), 256, 768, 768);
+        let four = matmul_cycles(&cfg(), 256, 768, 3072);
+        assert_eq!(four, 4 * one);
+    }
+
+    #[test]
+    fn matmul_small_problem_underutilizes() {
+        let u_full = matmul_utilization(&cfg(), 256, 768, 768);
+        let u_half = matmul_utilization(&cfg(), 197, 384, 384);
+        assert!((u_full - 1.0).abs() < 1e-12);
+        assert!(u_half < 0.5);
+    }
+
+    #[test]
+    fn softmax_row_waves() {
+        let c = cfg();
+        let one_wave = softmax_cycles(&c, 256, 256);
+        let two_waves = softmax_cycles(&c, 512, 256);
+        assert_eq!(two_waves, 2 * one_wave);
+        assert_eq!(one_wave, 3 * 256 + c.pipeline_stages);
+    }
+
+    #[test]
+    fn layernorm_worst_case_ge_data_dependent() {
+        let mut c = cfg();
+        c.worst_case_sqrt = true;
+        let wc = layernorm_cycles(&c, 256, 768, &vec![5; 256]);
+        c.worst_case_sqrt = false;
+        let dd = layernorm_cycles(&c, 256, 768, &vec![5; 256]);
+        assert!(wc > dd);
+    }
+
+    #[test]
+    fn overlapped_units_charge_fill_only() {
+        let c = cfg();
+        assert_eq!(gelu_cycles(&c), c.pipeline_stages);
+        assert_eq!(requant_cycles(&c), c.pipeline_stages);
+        assert_eq!(residual_cycles(&c), c.pipeline_stages);
+    }
+}

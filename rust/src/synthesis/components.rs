@@ -1,0 +1,200 @@
+//! SwiftTron block-level area rollup (Fig. 5's component list) and the
+//! activity-weighted power model behind the paper's Fig. 18 breakdowns.
+
+use super::operators::Operators;
+use super::tech::Tech65;
+use crate::model::Geometry;
+use crate::sim::{encoder::LatencyReport, HwConfig};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ComponentCost {
+    pub name: &'static str,
+    pub ge: f64,
+    pub area_mm2: f64,
+    /// duty-cycle (busy fraction) during an inference, from the simulator
+    pub duty: f64,
+    pub power_w: f64,
+}
+
+/// Gate count of one Softmax unit (Fig. 11): max comparator, the
+/// polynomial datapath (adders + one 32b squarer), the z-shifter, the
+/// exponent accumulator, the output divider, a row buffer holding the
+/// m exp values awaiting the denominator, and 3-stage pipeline registers.
+fn softmax_unit_ge(m: usize) -> f64 {
+    let cmp = Operators::comparator(32).ge;
+    let poly = 2.0 * Operators::int_adder(32).ge + Operators::int_multiplier(32, 32).ge;
+    let shift = Operators::barrel_shifter(32).ge;
+    // the denominator is an INT64 accumulation (spec: full-width exp sums)
+    let acc = Operators::int_adder(64).ge + Operators::register(64).ge;
+    // one division per element per cycle: 64-bit array divider
+    let divider = Operators::array_divider(64).ge;
+    let row_buffer = m as f64 * Operators::register(32).ge;
+    let pipeline = 3.0 * 4.0 * Operators::register(32).ge;
+    cmp + poly + shift + acc + divider + row_buffer + pipeline + 200.0
+}
+
+/// Gate count of one LayerNorm lane (Fig. 15): subtract, 32b squarer,
+/// the per-lane divider + affine MAC, three phase registers, plus an
+/// amortized share of the reduction tree and the iterative sqrt unit.
+fn layernorm_lane_ge() -> f64 {
+    let sub = Operators::int_adder(32).ge;
+    // variance squares are 64-bit full-width products (spec)
+    let square = Operators::int_multiplier(32, 32).ge;
+    // normalized output needs one (y<<7)/std division per element per
+    // cycle: 64-bit array divider per lane (see Fig. 18 discussion)
+    let divider = Operators::array_divider(64).ge;
+    let affine = Operators::int_multiplier(32, 8).ge + Operators::int_adder(32).ge;
+    let phase_regs = 3.0 * Operators::register(64).ge;
+    // reduction tree: one 64b adder per lane amortizes the binary tree;
+    // sqrt unit (adder+shifter+2 regs) is shared across the row
+    let tree = Operators::int_adder(64).ge;
+    let sqrt_share = (Operators::int_adder(64).ge
+        + Operators::barrel_shifter(64).ge
+        + 2.0 * Operators::register(64).ge)
+        / 64.0;
+    sub + square + divider + affine + phase_regs + tree + sqrt_share + 100.0
+}
+
+/// Gate count of one GELU lane (Fig. 14): the erf polynomial (adders +
+/// squarer) and the output multiplier, with sign handling.
+fn gelu_lane_ge() -> f64 {
+    let poly = 2.0 * Operators::int_adder(32).ge + Operators::int_multiplier(32, 32).ge;
+    let out_mul = Operators::int_multiplier(32, 32).ge;
+    let sign = 80.0;
+    poly + out_mul + sign + 3.0 * Operators::register(32).ge
+}
+
+/// Gate count of one Requantization lane (Fig. 7): INT32 multiplier +
+/// shifter + saturation.
+fn requant_lane_ge() -> f64 {
+    Operators::int_multiplier(32, 16).ge + Operators::barrel_shifter(32).ge + 60.0
+}
+
+/// Area/power of every component of a SwiftTron instance executing
+/// `geo`, with duty factors from the simulated `report`.
+pub fn component_breakdown(
+    t: &Tech65,
+    cfg: &HwConfig,
+    geo: &Geometry,
+    report: &LatencyReport,
+) -> Vec<ComponentCost> {
+    let freq = 1e9 / cfg.clock_ns;
+    let total_cycles = report.total_cycles.max(1) as f64;
+    // busy cycles per block class from the simulator; the MatMul busy
+    // count aggregates central-array and head-unit activity
+    let busy = |k: &str| report.per_block.get(k).copied().unwrap_or(0) as f64;
+
+    // --- MatMul: the central R x C MAC array.  The attention heads map
+    // onto per-head column slices (array_cols = heads * dh in the paper
+    // configuration), so the array is counted once (§III-D: components
+    // "can be shared and/or reused").
+    let mac = Operators::int8_mac();
+    let matmul_ge = cfg.mac_count() as f64 * mac.ge
+        // operand staging registers along both edges
+        + (cfg.array_rows + cfg.array_cols) as f64 * Operators::register(8).ge
+        // output column mux (one 32b 2:1 mux-equivalent per row per level)
+        + cfg.array_rows as f64 * 32.0 * 3.0;
+
+    let softmax_ge = cfg.softmax_units as f64 * softmax_unit_ge(geo.m);
+    let layernorm_ge = cfg.layernorm_lanes as f64 * layernorm_lane_ge();
+    // GELU/Requant lanes match the array's column readout width (one
+    // column of `array_rows` values drains per cycle).
+    let gelu_ge = cfg.array_rows as f64 * gelu_lane_ge();
+    let requant_ge = cfg.array_rows as f64 * requant_lane_ge();
+    // control unit: three FSMs + handshake glue (small, fixed)
+    let control_ge = 30_000.0;
+
+    let duty_matmul = (busy("matmul") / total_cycles).min(1.0);
+    let duty_softmax = (busy("softmax") / total_cycles).min(1.0);
+    let duty_ln = (busy("layernorm") / total_cycles).min(1.0);
+    // overlapped lanes are busy whenever a matmul drains outputs
+    let duty_gelu = (busy("gelu").max(busy("matmul") * 0.08) / total_cycles).min(1.0);
+    let duty_req = (busy("requant").max(busy("matmul") * 0.2) / total_cycles).min(1.0);
+
+    let mk = |name, ge: f64, duty: f64, activity: f64| ComponentCost {
+        name,
+        ge,
+        area_mm2: t.area_mm2(ge),
+        duty,
+        power_w: t.dyn_power_w(ge, activity * duty, freq) + t.leak_power_w(ge),
+    };
+
+    vec![
+        mk("MatMul", matmul_ge, duty_matmul, mac.activity),
+        mk("Softmax", softmax_ge, duty_softmax, 0.22),
+        mk("LayerNorm", layernorm_ge, duty_ln, 0.18),
+        mk("GELU", gelu_ge, duty_gelu, 0.25),
+        mk("Requant", requant_ge, duty_req, 0.25),
+        mk("Control", control_ge, 1.0, 0.1),
+    ]
+}
+
+/// Totals across a breakdown.
+pub fn totals(parts: &[ComponentCost]) -> (f64, f64) {
+    (
+        parts.iter().map(|p| p.area_mm2).sum(),
+        parts.iter().map(|p| p.power_w).sum(),
+    )
+}
+
+/// Percentage maps (area, power) keyed by component name — Fig. 18.
+pub fn percentages(parts: &[ComponentCost]) -> (BTreeMap<&'static str, f64>, BTreeMap<&'static str, f64>) {
+    let (a_tot, p_tot) = totals(parts);
+    let mut a = BTreeMap::new();
+    let mut p = BTreeMap::new();
+    for c in parts {
+        a.insert(c.name, 100.0 * c.area_mm2 / a_tot);
+        p.insert(c.name, 100.0 * c.power_w / p_tot);
+    }
+    (a, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::simulate_encoder;
+
+    fn setup() -> (Tech65, HwConfig, Geometry, LatencyReport) {
+        let t = Tech65::new();
+        let cfg = HwConfig::paper();
+        let geo = Geometry::preset("roberta_base").unwrap();
+        let r = simulate_encoder(&cfg, &geo);
+        (t, cfg, geo, r)
+    }
+
+    #[test]
+    fn matmul_dominates_area_and_power() {
+        let (t, cfg, geo, r) = setup();
+        let parts = component_breakdown(&t, &cfg, &geo, &r);
+        let (a, p) = percentages(&parts);
+        assert!(a["MatMul"] > 45.0, "area% {:?}", a);
+        assert!(p["MatMul"] > 50.0, "power% {:?}", p);
+    }
+
+    #[test]
+    fn layernorm_area_heavy_power_light() {
+        // the paper's Fig. 18 signature: LN 25% area but only 6% power
+        let (t, cfg, geo, r) = setup();
+        let parts = component_breakdown(&t, &cfg, &geo, &r);
+        let (a, p) = percentages(&parts);
+        assert!(a["LayerNorm"] > p["LayerNorm"], "{a:?} vs {p:?}");
+    }
+
+    #[test]
+    fn gelu_is_small() {
+        let (t, cfg, geo, r) = setup();
+        let parts = component_breakdown(&t, &cfg, &geo, &r);
+        let (a, p) = percentages(&parts);
+        assert!(a["GELU"] < 10.0 && p["GELU"] < 10.0);
+    }
+
+    #[test]
+    fn total_area_paper_order_of_magnitude() {
+        // paper Table I: 273 mm^2 — we require the same order (100..600)
+        let (t, cfg, geo, r) = setup();
+        let parts = component_breakdown(&t, &cfg, &geo, &r);
+        let (area, _) = totals(&parts);
+        assert!((100.0..600.0).contains(&area), "area {area} mm^2");
+    }
+}

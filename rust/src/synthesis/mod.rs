@@ -1,0 +1,26 @@
+//! Gate-level synthesis cost model — the stand-in for the paper's
+//! Synopsys DC 65 nm flow (DESIGN.md §5).
+//!
+//! Structure: [`tech`] holds the 65 nm node constants, [`operators`]
+//! builds gate-count/delay/energy models of the arithmetic operators
+//! (INT8/INT32/FP32 adders and multipliers, dividers, shifters,
+//! registers), [`components`] rolls them up into the SwiftTron blocks of
+//! Fig. 5, and [`report`] produces the paper's Table I summary and
+//! Fig. 18 breakdowns (power uses activity factors derived from the
+//! cycle-accurate simulator's busy counts).
+//!
+//! Fidelity note: gate counts come from standard implementations
+//! (carry-save MAC arrays, array multipliers, restoring dividers); they
+//! reproduce *ratios and rankings* (FP32 >> INT8, MatMul dominance), not
+//! a sign-off quality absolute area.  EXPERIMENTS.md reports
+//! paper-vs-model side by side.
+
+pub mod components;
+pub mod operators;
+pub mod report;
+pub mod tech;
+
+pub use components::{component_breakdown, ComponentCost};
+pub use operators::{OperatorCost, Operators};
+pub use report::{synthesis_report, SynthesisReport};
+pub use tech::Tech65;

@@ -1,0 +1,99 @@
+//! Synthesis report: the paper's Table I summary plus the Fig. 18
+//! area/power breakdown, generated from the cost model + simulator.
+
+use super::components::{component_breakdown, percentages, totals, ComponentCost};
+use super::operators::Operators;
+use super::tech::Tech65;
+use crate::model::Geometry;
+use crate::sim::{simulate_encoder, HwConfig};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct SynthesisReport {
+    pub clock_mhz: f64,
+    pub tech_node: &'static str,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    pub components: Vec<ComponentCost>,
+    pub area_pct: BTreeMap<&'static str, f64>,
+    pub power_pct: BTreeMap<&'static str, f64>,
+    /// achievable clock period from the slowest operator path (ns)
+    pub critical_path_ns: f64,
+}
+
+/// Run the full "synthesis" of a SwiftTron instance for a workload
+/// geometry (Table I is the paper configuration + roberta_base).
+pub fn synthesis_report(cfg: &HwConfig, geo: &Geometry) -> SynthesisReport {
+    let t = Tech65::new();
+    let sim = simulate_encoder(cfg, geo);
+    let components = component_breakdown(&t, cfg, geo, &sim);
+    let (area, power) = totals(&components);
+    let (area_pct, power_pct) = percentages(&components);
+
+    // critical path: the MAC (multiply + accumulate) or the LayerNorm
+    // divider stage, whichever is slower — the paper pipelines Softmax
+    // and LayerNorm into 3 stages to meet 7 ns (§IV-B); we model the
+    // pipelined stage as 1/3 of the un-pipelined nonlinear path.
+    let mac_path = Operators::int8_mac().delay_ns(&t);
+    let nonlinear_path = Operators::array_divider(64)
+        .delay_ns(&t)
+        .max(Operators::int_multiplier(32, 32).delay_ns(&t));
+    let critical = mac_path.max(nonlinear_path);
+
+    SynthesisReport {
+        clock_mhz: cfg.clock_mhz(),
+        tech_node: "65 nm",
+        area_mm2: area,
+        power_w: power,
+        components,
+        area_pct,
+        power_pct,
+        critical_path_ns: critical,
+    }
+}
+
+impl SynthesisReport {
+    /// Render the paper's Table I.
+    pub fn table1(&self) -> String {
+        format!(
+            "Clock Frequency  {:.0} MHz | Technology Node {} \n\
+             Power Consumption {:.2} W | Area {:.1} mm^2\n\
+             (critical path {:.2} ns)",
+            self.clock_mhz, self.tech_node, self.power_w, self.area_mm2, self.critical_path_ns
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_meets_its_own_clock() {
+        let r = synthesis_report(&HwConfig::paper(), &Geometry::preset("roberta_base").unwrap());
+        assert!(
+            r.critical_path_ns <= 7.0,
+            "critical path {} ns exceeds the 7 ns clock",
+            r.critical_path_ns
+        );
+    }
+
+    #[test]
+    fn report_is_self_consistent() {
+        let r = synthesis_report(&HwConfig::paper(), &Geometry::preset("roberta_base").unwrap());
+        let sum: f64 = r.area_pct.values().sum();
+        assert!((sum - 100.0).abs() < 1e-6);
+        let sum: f64 = r.power_pct.values().sum();
+        assert!((sum - 100.0).abs() < 1e-6);
+        assert!(r.power_w > 0.0 && r.area_mm2 > 0.0);
+    }
+
+    #[test]
+    fn edge_config_is_smaller_and_cooler() {
+        let geo = Geometry::preset("roberta_base").unwrap();
+        let paper = synthesis_report(&HwConfig::paper(), &geo);
+        let edge = synthesis_report(&HwConfig::edge(), &geo);
+        assert!(edge.area_mm2 < paper.area_mm2);
+        assert!(edge.power_w < paper.power_w);
+    }
+}

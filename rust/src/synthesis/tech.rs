@@ -1,0 +1,75 @@
+//! 65 nm CMOS technology constants.
+//!
+//! Values are textbook/industry-typical figures for a 65 nm low-power
+//! standard-cell library (the paper does not name its library):
+//! * NAND2-equivalent gate area ~1.44 um^2 (=> ~0.7 Mgate/mm^2),
+//! * FO4 inverter delay ~25 ps (gate-delay unit for timing),
+//! * dynamic energy ~1.5 fJ per gate-equivalent toggle at 1.2 V,
+//! * leakage ~2 nW per gate-equivalent.
+
+#[derive(Clone, Copy, Debug)]
+pub struct Tech65 {
+    /// area of one NAND2-equivalent gate, in um^2
+    pub ge_area_um2: f64,
+    /// FO4 delay in picoseconds (one "gate delay")
+    pub fo4_ps: f64,
+    /// dynamic energy per GE toggle, femtojoules
+    pub e_dyn_fj: f64,
+    /// leakage power per GE, nanowatts
+    pub p_leak_nw: f64,
+    /// supply voltage (volts), recorded for the report header
+    pub vdd: f64,
+}
+
+impl Tech65 {
+    pub fn new() -> Tech65 {
+        Tech65 { ge_area_um2: 1.44, fo4_ps: 25.0, e_dyn_fj: 1.5, p_leak_nw: 2.0, vdd: 1.2 }
+    }
+
+    /// Area in mm^2 of `ge` gate equivalents.
+    pub fn area_mm2(&self, ge: f64) -> f64 {
+        ge * self.ge_area_um2 * 1e-6
+    }
+
+    /// Dynamic power in watts of `ge` gates toggling with `activity`
+    /// (0..1) at `freq_hz`.
+    pub fn dyn_power_w(&self, ge: f64, activity: f64, freq_hz: f64) -> f64 {
+        ge * activity * self.e_dyn_fj * 1e-15 * freq_hz
+    }
+
+    /// Leakage power in watts of `ge` gates.
+    pub fn leak_power_w(&self, ge: f64) -> f64 {
+        ge * self.p_leak_nw * 1e-9
+    }
+
+    /// Critical-path delay in ns of a path of `gates` gate delays.
+    pub fn delay_ns(&self, gates: f64) -> f64 {
+        gates * self.fo4_ps * 1e-3
+    }
+}
+
+impl Default for Tech65 {
+    fn default() -> Self {
+        Tech65::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_near_700k_ge_per_mm2() {
+        let t = Tech65::new();
+        let ge_per_mm2 = 1.0 / (t.ge_area_um2 * 1e-6);
+        assert!((600_000.0..800_000.0).contains(&ge_per_mm2));
+    }
+
+    #[test]
+    fn power_scales_linearly() {
+        let t = Tech65::new();
+        let p1 = t.dyn_power_w(1000.0, 0.2, 143e6);
+        let p2 = t.dyn_power_w(2000.0, 0.2, 143e6);
+        assert!((p2 / p1 - 2.0).abs() < 1e-12);
+    }
+}

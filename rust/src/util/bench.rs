@@ -1,0 +1,143 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`Bench`] for warmup + timed repetitions and prints aligned tables —
+//! one bench target per paper table/figure (DESIGN.md §4).
+
+use super::stats::Series;
+use std::time::Instant;
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // volatile read of the value's address: a stable-Rust black box without asm
+    unsafe {
+        let ptr = &x as *const T;
+        std::ptr::read_volatile(&ptr);
+    }
+    x
+}
+
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench { name: name.to_string(), warmup_iters: 3, iters: 10 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n;
+        self
+    }
+
+    /// Time `f` and report per-iteration stats (seconds).
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Series {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut s = Series::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            s.push(t0.elapsed().as_secs_f64());
+        }
+        println!(
+            "bench {:40} mean {:>10} p50 {:>10} min {:>10}  (n={})",
+            self.name,
+            fmt_time(s.mean()),
+            fmt_time(s.p50()),
+            fmt_time(s.min()),
+            s.len()
+        );
+        s
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs.is_nan() {
+        "-".into()
+    } else if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Simple aligned-table printer used by the per-figure bench binaries.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("\n== {title} ==");
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_iters_samples() {
+        let s = Bench::new("noop").warmup(1).iters(5).run(|| 1 + 1);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test");
+    }
+}

@@ -1,0 +1,193 @@
+//! Tiny declarative CLI argument parser (no clap in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument set for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<Spec>,
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Args { program: program.to_string(), about, ..Default::default() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, takes_value: true, default: Some(default.into()) });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Parse; returns Err with a usage string on bad input or `--help`.
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, String> {
+        for s in &self.specs {
+            if s.takes_value {
+                self.values.insert(s.name, s.default.clone().unwrap_or_default());
+            } else {
+                self.flags.insert(s.name, false);
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.usage()))?
+                    .clone();
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} needs a value"))?
+                            .clone(),
+                    };
+                    self.values.insert(spec.name, v);
+                } else {
+                    self.flags.insert(spec.name, true);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+        }
+        Ok(Parsed { values: self.values, flags: self.flags, positional: self.positional })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let left = if spec.takes_value {
+                format!("--{} <v>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let def = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:22} {}{def}\n", spec.help));
+        }
+        s
+    }
+}
+
+/// Parsed argument values with typed accessors.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected number, got {:?}", self.get(name)))
+    }
+
+    pub fn is_set(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Args::new("t", "test")
+            .opt("count", "4", "how many")
+            .flag("verbose", "talk")
+            .parse(&argv(&["--count", "9"]))
+            .unwrap();
+        assert_eq!(p.get_usize("count").unwrap(), 9);
+        assert!(!p.is_set("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = Args::new("t", "test")
+            .opt("name", "x", "")
+            .flag("fast", "")
+            .parse(&argv(&["--name=abc", "--fast", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get("name"), "abc");
+        assert!(p.is_set("fast"));
+        assert_eq!(p.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::new("t", "").parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let e = Args::new("t", "about")
+            .opt("x", "1", "the x")
+            .parse(&argv(&["--help"]))
+            .unwrap_err();
+        assert!(e.contains("about") && e.contains("--x"));
+    }
+
+    #[test]
+    fn bad_number_reports_option() {
+        let p = Args::new("t", "").opt("n", "1", "").parse(&argv(&["--n", "zz"])).unwrap();
+        assert!(p.get_usize("n").unwrap_err().contains("--n"));
+    }
+}

@@ -1,0 +1,15 @@
+//! In-repo substrates.
+//!
+//! The offline build environment only carries the `xla` crate's dependency
+//! closure, so the conveniences a production service would pull from
+//! crates.io (tokio, clap, serde, rand, proptest, criterion) are
+//! implemented here from scratch — deliberately small, tested, and
+//! sufficient for this system.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,150 @@
+//! Miniature property-testing harness (no proptest offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it performs greedy shrinking via the generator's
+//! [`Shrink`] implementation and panics with the minimal counterexample.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate smaller values, roughly ordered most-aggressive first.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            if *self < 0 {
+                out.push(-self);
+            }
+            if self.abs() > 1 {
+                out.push(self - self.signum());
+            }
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        // shrink one element
+        for (i, x) in self.iter().enumerate() {
+            for smaller in x.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; shrink + panic on failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop);
+            panic!(
+                "property failed (seed {seed}, case {case});\n  minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink + Debug, P: Fn(&T) -> bool>(mut worst: T, prop: &P) -> T {
+    // greedy descent, bounded to avoid pathological generators
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in worst.shrink() {
+            if !prop(&cand) {
+                worst = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, |r| r.range_i64(-100, 100), |x| x * x >= 0);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let caught = std::panic::catch_unwind(|| {
+            check(2, 500, |r| r.range_i64(0, 1000), |&x| x < 500);
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink must land on exactly 500 (the boundary)
+        assert!(msg.contains("500"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v = vec![5i64, 6, 7, 8];
+        assert!(v.shrink().iter().any(|s| s.len() < v.len()));
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (4i64, 9i64);
+        let shrunk = t.shrink();
+        assert!(shrunk.iter().any(|(a, _)| *a != 4));
+        assert!(shrunk.iter().any(|(_, b)| *b != 9));
+    }
+}

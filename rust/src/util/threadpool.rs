@@ -1,0 +1,181 @@
+//! Fixed-size thread pool (no tokio offline): the coordinator's execution
+//! substrate.  Work items are boxed closures on an MPMC channel built from
+//! `std::sync::mpsc` + a mutex-guarded receiver; `scope`-style joining is
+//! provided by [`ThreadPool::run_batch`].
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads executing boxed jobs.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+struct Shared {
+    rx: Mutex<Receiver<Msg>>,
+    in_flight: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+    panics: AtomicUsize,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel();
+        let shared = Arc::new(Shared {
+            rx: Mutex::new(rx),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("swifttron-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, shared, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Block until every queued job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    /// Run a batch of jobs producing values, preserving input order.
+    pub fn run_batch<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let slots: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, job) in jobs.into_iter().enumerate() {
+            let slots = Arc::clone(&slots);
+            self.execute(move || {
+                let v = job();
+                slots.lock().unwrap()[i] = Some(v);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(slots)
+            .unwrap_or_else(|_| panic!("batch slots still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job panicked — see panics()"))
+            .collect()
+    }
+
+    /// Number of jobs that panicked since pool creation.
+    pub fn panics(&self) -> usize {
+        self.shared.panics.load(Ordering::SeqCst)
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let msg = {
+            let rx = sh.rx.lock().unwrap();
+            rx.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    sh.panics.fetch_add(1, Ordering::SeqCst);
+                }
+                if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = sh.done_lock.lock().unwrap();
+                    sh.done.notify_all();
+                }
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn batch_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let jobs: Vec<_> = (0..50).map(|i| move || i * 2).collect();
+        let out = pool.run_batch(jobs);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_job_is_counted_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.wait_idle();
+        assert_eq!(pool.panics(), 1);
+        let out = pool.run_batch(vec![|| 7]);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn wait_idle_with_no_jobs_returns() {
+        ThreadPool::new(1).wait_idle();
+    }
+}

@@ -1,0 +1,80 @@
+//! Co-simulation: the rust functional model of the SwiftTron datapath
+//! must agree **bit-for-bit** with the PJRT-executed Pallas artifact for
+//! the roberta_base-shaped encoder layer — the same software-vs-RTL
+//! validation triangle the paper runs with QuestaSim (§IV-B), closed
+//! across three implementations (jnp spec == Pallas kernels == rust).
+
+use swifttron::model::{Blob, Manifest};
+use swifttron::runtime::{Engine, Tensor};
+use swifttron::sim::functional::{layer_forward, LayerWeights};
+use swifttron::util::rng::Rng;
+
+#[test]
+fn pjrt_layer_matches_rust_functional_model_bit_exact() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping co-sim: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let preset = manifest.preset("roberta_base").unwrap();
+    let geo = preset.geometry;
+    let consts = &preset.layers[0]; // unified: every layer shares these
+
+    let blob = Blob::load(&manifest.blob_prefix("roberta_base").unwrap()).unwrap();
+    let w = LayerWeights::from_blob(&blob, 0).unwrap();
+
+    // random INT8 input
+    let mut rng = Rng::new(99);
+    let q_x: Vec<i32> = (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+
+    // rust functional model
+    let rust_out = layer_forward(&q_x, &w, consts, &geo);
+
+    // PJRT execution of the Pallas artifact (weights as arguments)
+    let engine = Engine::cpu().unwrap();
+    let exe = engine
+        .load(&manifest.artifact_path("roberta_base", "int8_layer").unwrap())
+        .unwrap();
+    let mut inputs = vec![Tensor::i32(&[geo.m, geo.d], q_x)];
+    for key in [
+        "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo", "w1", "b1", "w2", "b2", "gamma1",
+        "beta1", "gamma2", "beta2",
+    ] {
+        let data = blob.i32(&format!("L0.{key}")).unwrap();
+        let shape = blob.shape(&format!("L0.{key}")).unwrap().to_vec();
+        inputs.push(Tensor::i32(&shape, data));
+    }
+    let pjrt_out = exe.run_i32(&inputs, &[geo.m, geo.d]).unwrap();
+
+    assert_eq!(
+        pjrt_out.as_i32().unwrap(),
+        &rust_out.q_out[..],
+        "PJRT artifact and rust functional model diverged"
+    );
+}
+
+#[test]
+fn multi_layer_stack_runs_and_stays_int8() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let preset = manifest.preset("roberta_base").unwrap();
+    let geo = preset.geometry;
+    let consts = preset.layers[0].clone();
+    let blob = Blob::load(&manifest.blob_prefix("roberta_base").unwrap()).unwrap();
+
+    let mut rng = Rng::new(5);
+    let mut h: Vec<i32> = (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+    // two layers through the rust functional model (full 12 reserved for
+    // the example binary; tests stay fast)
+    for layer in 0..2 {
+        let w = LayerWeights::from_blob(&blob, layer).unwrap();
+        let out = layer_forward(&h, &w, &consts, &geo);
+        assert!(out.q_out.iter().all(|&v| (-128..=127).contains(&v)));
+        assert!(out.sqrt_iters.iter().all(|&it| it <= 32));
+        h = out.q_out;
+    }
+}

@@ -1,0 +1,122 @@
+//! Cross-language golden-vector tests: the rust `quant` primitives must
+//! reproduce the python oracle outputs (artifacts/golden.{bin,json})
+//! bit-for-bit.  This is the contract that makes the rust functional
+//! model, the Pallas kernels, and the jnp spec one arithmetic.
+
+use swifttron::model::Blob;
+use swifttron::quant::{
+    i_exp, i_gelu, i_layernorm, i_softmax, i_sqrt, requantize, Dyadic, GeluConsts,
+    LayerNormConsts, SoftmaxConsts,
+};
+use swifttron::util::json::Json;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = swifttron::model::Manifest::default_dir();
+    if dir.join("golden.bin").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        None
+    }
+}
+
+fn load(dir: &std::path::Path) -> (Blob, Json) {
+    let blob = Blob::load(&dir.join("golden")).expect("golden blob");
+    let consts =
+        Json::parse(&std::fs::read_to_string(dir.join("golden_consts.json")).unwrap()).unwrap();
+    (blob, consts)
+}
+
+#[test]
+fn golden_requantize() {
+    let Some(dir) = artifacts() else { return };
+    let (blob, consts) = load(&dir);
+    let dy = Dyadic {
+        b: consts["requant"]["b"].as_i64().unwrap(),
+        c: consts["requant"]["c"].as_i64().unwrap() as u32,
+    };
+    let input = blob.i64("requant_in").unwrap();
+    let want = blob.i32("requant_out").unwrap();
+    let got: Vec<i32> = input.iter().map(|&q| requantize(q, dy)).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn golden_softmax_and_exp() {
+    let Some(dir) = artifacts() else { return };
+    let (blob, consts) = load(&dir);
+    let c = SoftmaxConsts {
+        s_in: consts["softmax"]["s_in"].as_f64().unwrap(),
+        q_ln2: consts["softmax"]["q_ln2"].as_i64().unwrap(),
+        q_b: consts["softmax"]["q_b"].as_i64().unwrap(),
+        q_c: consts["softmax"]["q_c"].as_i64().unwrap(),
+    };
+    // i_exp
+    let xin = blob.i64("iexp_in").unwrap();
+    let want = blob.i64("iexp_out").unwrap();
+    let got: Vec<i64> = xin.iter().map(|&x| i_exp(x, &c)).collect();
+    assert_eq!(got, want, "i_exp mismatch");
+    // softmax rows
+    let rows = blob.shape("softmax_in").unwrap()[0];
+    let n = blob.shape("softmax_in").unwrap()[1];
+    let qin = blob.i32("softmax_in").unwrap();
+    let want = blob.i32("softmax_out").unwrap();
+    let mut got = vec![0i32; rows * n];
+    for r in 0..rows {
+        let row: Vec<i64> = qin[r * n..(r + 1) * n].iter().map(|&v| v as i64).collect();
+        i_softmax(&row, &c, &mut got[r * n..(r + 1) * n]);
+    }
+    assert_eq!(got, want, "softmax mismatch");
+}
+
+#[test]
+fn golden_gelu() {
+    let Some(dir) = artifacts() else { return };
+    let (blob, consts) = load(&dir);
+    let c = GeluConsts {
+        s_in: consts["gelu"]["s_in"].as_f64().unwrap(),
+        q_b: consts["gelu"]["q_b"].as_i64().unwrap(),
+        q_c: consts["gelu"]["q_c"].as_i64().unwrap(),
+        q_one: consts["gelu"]["q_one"].as_i64().unwrap(),
+    };
+    let qin = blob.i32("gelu_in").unwrap();
+    let want = blob.i64("gelu_out").unwrap();
+    let got: Vec<i64> = qin.iter().map(|&q| i_gelu(q as i64, &c)).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn golden_layernorm() {
+    let Some(dir) = artifacts() else { return };
+    let (blob, consts) = load(&dir);
+    let d = consts["layernorm"]["d"].as_i64().unwrap() as usize;
+    let c = LayerNormConsts {
+        s_in: consts["layernorm"]["s_in"].as_f64().unwrap(),
+        s_gamma: consts["layernorm"]["s_gamma"].as_f64().unwrap(),
+        d,
+    };
+    let rows = blob.shape("ln_in").unwrap()[0];
+    let qin = blob.i64("ln_in").unwrap();
+    let gamma = blob.i64("ln_gamma").unwrap();
+    let beta = blob.i64("ln_beta").unwrap();
+    let want = blob.i32("ln_out").unwrap();
+    let mut got = vec![0i32; rows * d];
+    for r in 0..rows {
+        i_layernorm(&qin[r * d..(r + 1) * d], &gamma, &beta, &c, &mut got[r * d..(r + 1) * d]);
+    }
+    assert_eq!(got, want);
+}
+
+#[test]
+fn golden_isqrt_values_and_iteration_counts() {
+    let Some(dir) = artifacts() else { return };
+    let (blob, _) = load(&dir);
+    let ns = blob.i64("isqrt_in").unwrap();
+    let want_v = blob.i64("isqrt_out").unwrap();
+    let want_it = blob.i32("isqrt_iters").unwrap();
+    for (i, &n) in ns.iter().enumerate() {
+        let (v, it) = i_sqrt(n);
+        assert_eq!(v, want_v[i], "isqrt({n})");
+        assert_eq!(it as i32, want_it[i], "isqrt iters({n}) — simulator timing contract");
+    }
+}

@@ -1,0 +1,90 @@
+//! End-to-end serving tests: engine accuracy on the held-out tiny-task
+//! test set (the Table II accuracy experiment, DESIGN.md §5) and the
+//! router/batcher under concurrent load.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use swifttron::coordinator::{BatchPolicy, InferenceEngine, Metrics, Router};
+use swifttron::model::{Blob, Manifest};
+use swifttron::runtime::Engine;
+use swifttron::sim::HwConfig;
+
+fn setup() -> Option<(Manifest, Engine)> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping serving tests: run `make artifacts` first");
+        return None;
+    }
+    Some((Manifest::load(&dir).unwrap(), Engine::cpu().unwrap()))
+}
+
+#[test]
+fn quantized_accuracy_matches_float_within_one_point() {
+    let Some((manifest, engine)) = setup() else { return };
+    let eng = InferenceEngine::load(&manifest.dir, &engine, HwConfig::paper()).unwrap();
+    let blob = Blob::load(&manifest.blob_prefix("tiny").unwrap()).unwrap();
+    let toks = blob.i32("test_toks").unwrap();
+    let labels = blob.i32("test_labels").unwrap();
+    let m = eng.geo.m;
+    let n = 128.min(labels.len()); // fast subset; the example runs all 512
+
+    let mut correct_q = 0;
+    let mut correct_f = 0;
+    for i in 0..n {
+        let t = &toks[i * m..(i + 1) * m];
+        let pred = eng.predict(t).unwrap();
+        if pred.label == labels[i] as usize {
+            correct_q += 1;
+        }
+        if eng.predict_f32(t).unwrap() == labels[i] as usize {
+            correct_f += 1;
+        }
+    }
+    let acc_q = correct_q as f64 / n as f64;
+    let acc_f = correct_f as f64 / n as f64;
+    // the paper's Table II claim shape: quantization costs ~nothing
+    assert!(acc_f > 0.9, "float accuracy {acc_f}");
+    assert!(acc_q > acc_f - 0.05, "quantized {acc_q} vs float {acc_f}");
+}
+
+#[test]
+fn router_serves_concurrent_requests() {
+    let Some((manifest, engine)) = setup() else { return };
+    let eng = Arc::new(InferenceEngine::load(&manifest.dir, &engine, HwConfig::paper()).unwrap());
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::start(
+        vec![Arc::clone(&eng), eng],
+        BatchPolicy::default(),
+        Arc::clone(&metrics),
+    );
+
+    let m = 32;
+    let mut receivers = vec![];
+    for i in 0..24 {
+        let (tx, rx) = channel();
+        let tokens: Vec<i32> = (0..m).map(|j| ((i * 7 + j * 3) % 62) as i32).collect();
+        router.submit(tokens, tx);
+        receivers.push(rx);
+    }
+    for rx in receivers {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.label < 2);
+        assert!(resp.accel_ms > 0.0);
+    }
+    assert_eq!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 24);
+    router.shutdown();
+}
+
+#[test]
+fn router_reports_errors_for_bad_requests() {
+    let Some((manifest, engine)) = setup() else { return };
+    let eng = Arc::new(InferenceEngine::load(&manifest.dir, &engine, HwConfig::paper()).unwrap());
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::start(vec![eng], BatchPolicy::default(), Arc::clone(&metrics));
+    let (tx, rx) = channel();
+    router.submit(vec![1, 2, 3], tx); // wrong length
+    let resp = rx.recv().unwrap();
+    assert!(resp.error.is_some());
+    router.shutdown();
+}

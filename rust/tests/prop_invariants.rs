@@ -1,0 +1,205 @@
+//! Property-based tests (in-repo `util::prop` framework) on coordinator
+//! and datapath invariants: batching (no loss, FIFO, bounds), routing
+//! state, and the integer-arithmetic laws the hardware relies on.
+
+use std::time::Duration;
+use swifttron::coordinator::batcher::{BatchPolicy, Batcher};
+use swifttron::quant::{
+    i_layernorm, i_softmax, requantize, Dyadic, LayerNormConsts, SoftmaxConsts, SM_UNIT,
+};
+use swifttron::util::prop::check;
+use swifttron::util::rng::Rng;
+
+// --- batcher invariants -------------------------------------------------
+
+#[test]
+fn prop_batcher_loses_nothing_and_preserves_fifo() {
+    check(
+        11,
+        200,
+        |r| {
+            let n = r.below(60) as usize;
+            let max_batch = 1 + r.below(10) as usize;
+            (n as i64, max_batch as i64)
+        },
+        |&(n, max_batch)| {
+            let mut b = Batcher::new(BatchPolicy {
+                max_batch: max_batch as usize,
+                max_wait: Duration::ZERO,
+            });
+            for i in 0..n {
+                b.push(i);
+            }
+            let mut drained = Vec::new();
+            while !b.is_empty() {
+                let batch = b.take_batch();
+                if batch.is_empty() || batch.len() > max_batch as usize {
+                    return false; // bounds violated
+                }
+                drained.extend(batch);
+            }
+            drained == (0..n).collect::<Vec<_>>() // no loss + FIFO
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_ready_iff_size_or_deadline() {
+    check(
+        12,
+        200,
+        |r| (r.below(20) as i64, 1 + r.below(8) as i64),
+        |&(n, max_batch)| {
+            let mut b = Batcher::new(BatchPolicy {
+                max_batch: max_batch as usize,
+                max_wait: Duration::from_secs(3600), // deadline never fires
+            });
+            for i in 0..n {
+                b.push(i);
+            }
+            let ready = b.ready(std::time::Instant::now());
+            ready == (n >= max_batch)
+        },
+    );
+}
+
+// --- integer-arithmetic laws the blocks depend on ------------------------
+
+#[test]
+fn prop_requantize_monotone() {
+    // the Requantization unit must preserve ordering (it feeds argmax
+    // heads and attention comparisons downstream)
+    check(
+        21,
+        300,
+        |r| {
+            let a = r.range_i64(-(1 << 26), 1 << 26);
+            let b = r.range_i64(-(1 << 26), 1 << 26);
+            (a, b)
+        },
+        |&(a, b)| {
+            let dy = Dyadic::approx16(0.0173);
+            let (qa, qb) = (requantize(a, dy), requantize(b, dy));
+            if a <= b {
+                qa <= qb
+            } else {
+                qa >= qb
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_shift_invariance() {
+    // softmax(x + c) == softmax(x): the max-subtraction must make the
+    // unit exactly shift-invariant (paper Eq. 3)
+    check(
+        22,
+        100,
+        |r| {
+            let n = 2 + r.below(24) as usize;
+            let shift = r.range_i64(-500, 500);
+            let mut v: Vec<i64> = (0..n).map(|_| r.range_i64(-2000, 2000)).collect();
+            v.push(shift); // smuggle the shift in the last slot
+            v
+        },
+        |v| {
+            let (row, shift) = v.split_at(v.len() - 1);
+            let shift = shift[0];
+            let c = SoftmaxConsts::design(0.01);
+            let shifted: Vec<i64> = row.iter().map(|&x| x + shift).collect();
+            let mut a = vec![0i32; row.len()];
+            let mut b = vec![0i32; row.len()];
+            i_softmax(row, &c, &mut a);
+            i_softmax(&shifted, &c, &mut b);
+            a == b
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_normalized_and_bounded() {
+    check(
+        23,
+        150,
+        |r| {
+            let n = 1 + r.below(64) as usize;
+            (0..n).map(|_| r.range_i64(-3000, 3000)).collect::<Vec<i64>>()
+        },
+        |row| {
+            let c = SoftmaxConsts::design(0.02);
+            let mut out = vec![0i32; row.len()];
+            i_softmax(row, &c, &mut out);
+            let sum: i64 = out.iter().map(|&v| v as i64).sum();
+            out.iter().all(|&v| (0..=SM_UNIT as i32).contains(&v))
+                && (sum - SM_UNIT).abs() <= row.len() as i64
+        },
+    );
+}
+
+#[test]
+fn prop_layernorm_shift_invariance() {
+    // LayerNorm(x + c) == LayerNorm(x) (mean removal) — exact in the
+    // integer unit up to the floor of the shared mean
+    check(
+        24,
+        100,
+        |r| {
+            let d = 4 + r.below(60) as usize;
+            let shift = r.range_i64(-1000, 1000) * d as i64; // multiple of d => exact
+            let mut v: Vec<i64> = (0..d).map(|_| r.range_i64(-2000, 2000)).collect();
+            v.push(shift);
+            v
+        },
+        |v| {
+            let (row, shift) = v.split_at(v.len() - 1);
+            let shift = shift[0];
+            let d = row.len();
+            let c = LayerNormConsts { s_in: 0.01, s_gamma: 0.01, d };
+            let gamma = vec![64i64; d];
+            let beta = vec![0i64; d];
+            let shifted: Vec<i64> = row.iter().map(|&x| x + shift).collect();
+            let mut a = vec![0i32; d];
+            let mut b = vec![0i32; d];
+            i_layernorm(row, &gamma, &beta, &c, &mut a);
+            i_layernorm(&shifted, &gamma, &beta, &c, &mut b);
+            a == b
+        },
+    );
+}
+
+#[test]
+fn prop_rng_shuffle_is_permutation() {
+    check(
+        25,
+        100,
+        |r| {
+            let n = r.below(40) as usize;
+            (0..n as i64).map(|i| i * 3).collect::<Vec<i64>>()
+        },
+        |v| {
+            let mut rng = Rng::new(7);
+            let mut shuffled = v.clone();
+            rng.shuffle(&mut shuffled);
+            let mut a = v.clone();
+            let mut b = shuffled;
+            a.sort();
+            b.sort();
+            a == b
+        },
+    );
+}
+
+#[test]
+fn prop_json_number_roundtrip() {
+    use swifttron::util::json::Json;
+    check(
+        26,
+        300,
+        |r| r.range_i64(-(1 << 52), 1 << 52),
+        |&n| {
+            let s = Json::from(n).to_string();
+            Json::parse(&s).map(|v| v.as_i64() == Some(n)).unwrap_or(false)
+        },
+    );
+}
