@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 gate: release build, tests, and rustdoc with warnings denied —
+# the doc pass makes dangling references (e.g. to DESIGN.md sections
+# that were renamed away) fail fast instead of rotting.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+echo "ci.sh: all green"

@@ -6,7 +6,9 @@
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
-use swifttron::coordinator::{BatchPolicy, InferenceEngine, Metrics, Router};
+use swifttron::coordinator::{
+    BatchPolicy, EngineReplica, FunctionalEngine, InferenceEngine, Metrics, Router,
+};
 use swifttron::model::Manifest;
 use swifttron::runtime::Engine;
 use swifttron::sim::HwConfig;
@@ -19,12 +21,24 @@ fn main() -> Result<(), String> {
     let replicas = 3;
 
     let dir = Manifest::default_dir();
-    let engine = Engine::cpu()?;
-    let engines: Result<Vec<_>, String> = (0..replicas)
-        .map(|_| InferenceEngine::load(&dir, &engine, HwConfig::paper()).map(Arc::new))
-        .collect();
-    let engines = engines?;
-    let m = engines[0].geo.m;
+    let engines: Vec<Arc<dyn EngineReplica>> = if dir.join("manifest.json").exists() {
+        let engine = Engine::cpu()?;
+        (0..replicas)
+            .map(|_| {
+                InferenceEngine::load(&dir, &engine, HwConfig::paper())
+                    .map(|e| Arc::new(e) as Arc<dyn EngineReplica>)
+            })
+            .collect::<Result<_, _>>()?
+    } else {
+        eprintln!("(artifacts missing: serving synthetic functional replicas instead)");
+        (0..replicas)
+            .map(|_| {
+                FunctionalEngine::synthetic("tiny", 7, HwConfig::paper())
+                    .map(|e| Arc::new(e) as Arc<dyn EngineReplica>)
+            })
+            .collect::<Result<_, _>>()?
+    };
+    let m = engines[0].seq_len();
     let metrics = Arc::new(Metrics::new());
     let router = Arc::new(Router::start(
         engines,

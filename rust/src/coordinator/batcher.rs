@@ -109,4 +109,39 @@ mod tests {
         assert!(!b.ready(Instant::now()));
         assert!(b.next_deadline().is_none());
     }
+
+    #[test]
+    fn releases_when_max_wait_expires() {
+        // below max_batch, the group is held until the oldest request's
+        // deadline passes — then released even though the batch is short
+        let wait = Duration::from_millis(15);
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: wait });
+        b.push(1);
+        b.push(2);
+        let t0 = Instant::now();
+        assert!(!b.ready(t0), "not ready before the deadline");
+        assert!(!b.ready(t0 + wait / 2), "still inside the wait window");
+        assert!(b.ready(t0 + wait + Duration::from_millis(1)), "deadline expired");
+        // and with real elapsed time, not just a synthetic clock
+        std::thread::sleep(wait + Duration::from_millis(2));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec![1, 2]);
+    }
+
+    #[test]
+    fn next_deadline_is_oldest_push_plus_max_wait() {
+        let wait = Duration::from_millis(20);
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: wait });
+        let before = Instant::now();
+        b.push("old");
+        let after = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        b.push("new"); // must not move the deadline: oldest item governs
+        let d = b.next_deadline().unwrap();
+        assert!(d >= before + wait && d <= after + wait, "deadline follows the oldest item");
+        // draining the oldest moves the deadline later
+        let first = b.take_batch();
+        assert_eq!(first, vec!["old", "new"]);
+        assert!(b.next_deadline().is_none());
+    }
 }

@@ -1,21 +1,48 @@
-//! Inference engine for the tiny-task model: the end-to-end request path.
+//! Engine replicas: the per-accelerator end of the parallel serving
+//! pipeline (DESIGN.md §2).
 //!
-//! Request path (all integer once quantized, paper Fig. 1b):
+//! A *replica* models one SwiftTron accelerator attached to the host.
+//! The [`Router`](super::Router) batches incoming requests into dispatch
+//! groups and the [`ReplicaPool`](super::ReplicaPool) fans each group
+//! out across N replicas on the in-repo `util` thread pool; every
+//! replica executes its share of the group serially, exactly as the
+//! hardware would (the array is loaded per sentence).  Anything that
+//! implements [`EngineReplica`] can sit in the pool; two
+//! implementations ship:
+//!
+//! * [`InferenceEngine`] — the artifact-backed path (paper Fig. 1b):
 //!   tokens -> embedding + positional add (host f32, outside the
 //!   accelerator per Fig. 4's "inputs taken after positional encoding")
-//!   -> symmetric INT8 quantization at the calibrated `s_in`
-//!   -> PJRT execution of the AOT integer encoder artifact
-//!   -> integer mean-pool + INT8 classifier head (rust `quant::i_matmul`)
-//!   -> argmax label.
+//!   -> symmetric INT8 quantization at the calibrated `s_in` -> PJRT
+//!   execution of the AOT integer encoder artifact -> integer mean-pool
+//!   + INT8 classifier head (`quant::i_matmul`) -> argmax label.
+//! * [`FunctionalEngine`] — the same integer request path executed by
+//!   the in-crate functional model (`sim::functional`) on synthetic
+//!   weights: no artifacts, no PJRT, no external dependencies.  It
+//!   drives the serving tests and the replica-scaling bench offline.
 //!
-//! Each prediction also carries the cycle-accurate SwiftTron latency for
-//! the same computation (the coordinator's virtual-time accounting).
+//! Each prediction carries the cycle-accurate SwiftTron latency for the
+//! same computation; the pool aggregates it per replica as virtual time
+//! next to wall-clock throughput (`coordinator::metrics`).
 
 use crate::model::{Blob, Geometry, Manifest};
 use crate::quant::i_matmul;
 use crate::runtime::{Engine, Executable, Tensor};
+use crate::sim::functional::{encoder_forward, synthetic_consts, LayerWeights};
 use crate::sim::{simulate_encoder, HwConfig};
+use crate::util::rng::Rng;
 use std::path::Path;
+
+/// One engine replica: the unit of parallelism of the serving layer.
+/// A replica owns everything needed to serve a request end to end and
+/// is driven from one pool thread at a time.
+pub trait EngineReplica: Send + Sync {
+    /// Run one request end to end (numerics + simulated accelerator time).
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, String>;
+
+    /// Sequence length `m` this replica's model expects.
+    fn seq_len(&self) -> usize;
+}
 
 #[derive(Clone, Debug)]
 pub struct Prediction {
@@ -94,21 +121,7 @@ impl InferenceEngine {
 
     /// Integer mean-pool (shift when m is a power of two) + INT8 head.
     fn head(&self, q_out: &[i32]) -> (usize, Vec<i64>) {
-        let (m, d) = (self.geo.m, self.geo.d);
-        let mut pooled = vec![0i32; d];
-        for j in 0..d {
-            let mut s: i64 = 0;
-            for i in 0..m {
-                s += q_out[i * d + j] as i64;
-            }
-            pooled[j] = crate::quant::div_floor(s, m as i64) as i32;
-        }
-        let n_cls = self.q_b_head.len();
-        let mut logits32 = vec![0i32; n_cls];
-        i_matmul(&pooled, &self.q_w_head, Some(&self.q_b_head), 1, d, n_cls, &mut logits32);
-        let logits: Vec<i64> = logits32.iter().map(|&v| v as i64).collect();
-        let label = (0..n_cls).max_by_key(|&i| logits[i]).unwrap_or(0);
-        (label, logits)
+        integer_head(q_out, &self.q_w_head, &self.q_b_head, self.geo.m, self.geo.d)
     }
 
     /// Full integer-path prediction via the PJRT artifact.
@@ -153,5 +166,154 @@ impl InferenceEngine {
 
     pub fn hw(&self) -> &HwConfig {
         &self.hw
+    }
+}
+
+impl EngineReplica for InferenceEngine {
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+        InferenceEngine::predict(self, tokens)
+    }
+
+    fn seq_len(&self) -> usize {
+        self.geo.m
+    }
+}
+
+/// Shared integer readout: mean-pool over rows + INT8 classifier head.
+fn integer_head(
+    q_out: &[i32],
+    w_head: &[i32],
+    b_head: &[i32],
+    m: usize,
+    d: usize,
+) -> (usize, Vec<i64>) {
+    let mut pooled = vec![0i32; d];
+    for j in 0..d {
+        let mut s: i64 = 0;
+        for i in 0..m {
+            s += q_out[i * d + j] as i64;
+        }
+        pooled[j] = crate::quant::div_floor(s, m as i64) as i32;
+    }
+    let n_cls = b_head.len();
+    let mut logits32 = vec![0i32; n_cls];
+    i_matmul(&pooled, w_head, Some(b_head), 1, d, n_cls, &mut logits32);
+    let logits: Vec<i64> = logits32.iter().map(|&v| v as i64).collect();
+    let label = (0..n_cls).max_by_key(|&i| logits[i]).unwrap_or(0);
+    (label, logits)
+}
+
+/// Artifact-free engine replica: the bit-exact functional model
+/// (`sim::functional`) over synthetic weights, with the same integer
+/// request path and virtual-time accounting as [`InferenceEngine`].
+///
+/// Every replica built from the same `(preset, seed)` is an identical
+/// model, so a pool of them is a true replica set.  Above the
+/// [`crate::quant::PAR_MIN_MACS`] threshold its contractions take the
+/// row-tiled parallel `i_matmul`; the tiny preset stays below it, so
+/// replica-level parallelism is the only concurrency in play there (no
+/// nested oversubscription in the scaling bench).
+pub struct FunctionalEngine {
+    pub geo: Geometry,
+    layers: Vec<(LayerWeights, crate::model::LayerConsts)>,
+    emb: Vec<i32>, // (vocab, d), INT8-coded
+    pos: Vec<i32>, // (m, d), small ints
+    w_head: Vec<i32>, // (d, 2)
+    b_head: Vec<i32>,
+    vocab: usize,
+    hw: HwConfig,
+    accel_cycles: u64,
+}
+
+impl FunctionalEngine {
+    /// Build a synthetic replica for a geometry preset.  Same seed =>
+    /// identical replica (weights, embedding, head).
+    pub fn synthetic(preset: &str, seed: u64, hw: HwConfig) -> Result<FunctionalEngine, String> {
+        let geo =
+            Geometry::preset(preset).ok_or_else(|| format!("unknown preset {preset:?}"))?;
+        let mut rng = Rng::new(seed);
+        let vocab = 64;
+        let emb: Vec<i32> =
+            (0..vocab * geo.d).map(|_| rng.range_i64(-100, 100) as i32).collect();
+        let pos: Vec<i32> =
+            (0..geo.m * geo.d).map(|_| rng.range_i64(-27, 27) as i32).collect();
+        let layers = (0..geo.layers)
+            .map(|_| (LayerWeights::synthetic(&mut rng, &geo), synthetic_consts(&geo)))
+            .collect();
+        let w_head: Vec<i32> =
+            (0..geo.d * 2).map(|_| rng.range_i64(-127, 127) as i32).collect();
+        let b_head: Vec<i32> = (0..2).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+        let sim = simulate_encoder(&hw, &geo);
+        Ok(FunctionalEngine {
+            geo,
+            layers,
+            emb,
+            pos,
+            w_head,
+            b_head,
+            vocab,
+            hw,
+            accel_cycles: sim.total_cycles,
+        })
+    }
+}
+
+impl EngineReplica for FunctionalEngine {
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+        let (m, d) = (self.geo.m, self.geo.d);
+        if tokens.len() != m {
+            return Err(format!("expected {m} tokens, got {}", tokens.len()));
+        }
+        // integer embedding + positional add, saturated to INT8
+        let mut q_x = vec![0i32; m * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            if t >= self.vocab {
+                return Err(format!("token {t} out of vocab {}", self.vocab));
+            }
+            for j in 0..d {
+                q_x[i * d + j] =
+                    (self.emb[t * d + j] + self.pos[i * d + j]).clamp(-128, 127);
+            }
+        }
+        let (q_out, _) = encoder_forward(&q_x, &self.layers, &self.geo);
+        let (label, logits) = integer_head(&q_out, &self.w_head, &self.b_head, m, d);
+        Ok(Prediction {
+            label,
+            logits,
+            accel_cycles: self.accel_cycles,
+            accel_ms: self.hw.cycles_to_ms(self.accel_cycles),
+        })
+    }
+
+    fn seq_len(&self) -> usize {
+        self.geo.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn functional_engine_is_deterministic_per_seed() {
+        let a = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+        let b = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+        let tokens: Vec<i32> = (0..a.seq_len()).map(|i| (i % 60) as i32).collect();
+        let pa = EngineReplica::predict(&a, &tokens).unwrap();
+        let pb = EngineReplica::predict(&b, &tokens).unwrap();
+        assert_eq!(pa.label, pb.label);
+        assert_eq!(pa.logits, pb.logits);
+        assert!(pa.accel_cycles > 0);
+        assert!(pa.accel_ms > 0.0);
+    }
+
+    #[test]
+    fn functional_engine_rejects_bad_requests() {
+        let e = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+        assert!(EngineReplica::predict(&e, &[1, 2, 3]).is_err(), "wrong length");
+        let mut tokens: Vec<i32> = vec![0; e.seq_len()];
+        tokens[0] = 9999;
+        assert!(EngineReplica::predict(&e, &tokens).is_err(), "out of vocab");
     }
 }

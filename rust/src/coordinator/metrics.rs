@@ -1,8 +1,40 @@
-//! Serving metrics: counters + latency series, shared across workers.
+//! Serving metrics: aggregate counters + latency series shared across
+//! the pool, plus per-replica accounting that pairs each simulated
+//! accelerator's *virtual* time (cycles at the modeled clock) with the
+//! wall-clock time its host thread actually spent — so both "how fast is
+//! the modeled hardware" and "how fast is this serving process" are
+//! reported side by side (DESIGN.md §2).
 
 use crate::util::stats::Series;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+/// One replica's ledger.  `busy_ns` is host wall-clock execution time;
+/// `accel_cycles`/`accel_ms` are the simulated accelerator's virtual
+/// time for the same requests.
+#[derive(Default)]
+pub struct ReplicaStats {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    /// wall-clock execution time, nanoseconds
+    pub busy_ns: AtomicU64,
+    /// simulated accelerator cycles across served requests
+    pub accel_cycles: AtomicU64,
+    /// simulated accelerator milliseconds (virtual time)
+    accel_ms: Mutex<f64>,
+}
+
+impl ReplicaStats {
+    /// Wall-clock seconds this replica spent executing requests.
+    pub fn busy_s(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Virtual accelerator milliseconds accumulated by this replica.
+    pub fn accel_ms(&self) -> f64 {
+        *self.accel_ms.lock().unwrap()
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -13,15 +45,38 @@ pub struct Metrics {
     pub e2e_s: Mutex<Series>,
     /// time spent queued before dispatch (seconds)
     pub queue_s: Mutex<Series>,
-    /// PJRT execution wallclock (seconds)
+    /// execution wallclock (seconds)
     pub exec_s: Mutex<Series>,
     /// simulated accelerator time (milliseconds of virtual time)
     pub accel_ms: Mutex<Series>,
+    /// per-replica ledgers, sized by the pool at startup
+    replicas: Mutex<Vec<Arc<ReplicaStats>>>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Size the per-replica ledger (idempotent; only ever grows).
+    pub fn ensure_replicas(&self, n: usize) {
+        let mut r = self.replicas.lock().unwrap();
+        while r.len() < n {
+            r.push(Arc::new(ReplicaStats::default()));
+        }
+    }
+
+    /// Ledger of replica `i` (created on demand).
+    pub fn replica(&self, i: usize) -> Arc<ReplicaStats> {
+        let mut r = self.replicas.lock().unwrap();
+        while r.len() <= i {
+            r.push(Arc::new(ReplicaStats::default()));
+        }
+        Arc::clone(&r[i])
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.lock().unwrap().len()
     }
 
     pub fn record_request(&self) {
@@ -40,17 +95,45 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Account one served request against replica `i`'s ledger.
+    pub fn record_replica(&self, i: usize, exec_s: f64, cycles: u64, accel_ms: f64, error: bool) {
+        let r = self.replica(i);
+        r.requests.fetch_add(1, Ordering::Relaxed);
+        if error {
+            r.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        r.busy_ns.fetch_add((exec_s * 1e9) as u64, Ordering::Relaxed);
+        r.accel_cycles.fetch_add(cycles, Ordering::Relaxed);
+        *r.accel_ms.lock().unwrap() += accel_ms;
+    }
+
+    /// Virtual accelerator milliseconds summed over all replicas.
+    pub fn total_accel_ms(&self) -> f64 {
+        self.replicas.lock().unwrap().iter().map(|r| r.accel_ms()).sum()
+    }
+
     pub fn report(&self) -> String {
         let done = self.completed.load(Ordering::Relaxed);
         let req = self.requests.load(Ordering::Relaxed);
         let err = self.errors.load(Ordering::Relaxed);
-        format!(
+        let mut out = format!(
             "requests={req} completed={done} errors={err}\n  e2e   {}\n  queue {}\n  exec  {}\n  accel {}",
             self.e2e_s.lock().unwrap().summary("s"),
             self.queue_s.lock().unwrap().summary("s"),
             self.exec_s.lock().unwrap().summary("s"),
             self.accel_ms.lock().unwrap().summary("ms"),
-        )
+        );
+        for (i, r) in self.replicas.lock().unwrap().iter().enumerate() {
+            out.push_str(&format!(
+                "\n  replica {i}: requests={} errors={} busy={:.3}s virtual={:.3}ms ({} cycles)",
+                r.requests.load(Ordering::Relaxed),
+                r.errors.load(Ordering::Relaxed),
+                r.busy_s(),
+                r.accel_ms(),
+                r.accel_cycles.load(Ordering::Relaxed),
+            ));
+        }
+        out
     }
 }
 
@@ -69,5 +152,33 @@ mod tests {
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
         assert_eq!(m.errors.load(Ordering::Relaxed), 1);
         assert!(m.report().contains("completed=1"));
+    }
+
+    #[test]
+    fn replica_ledgers_track_virtual_and_wall_time() {
+        let m = Metrics::new();
+        m.ensure_replicas(2);
+        assert_eq!(m.replica_count(), 2);
+        m.record_replica(0, 0.002, 1_000, 0.007, false);
+        m.record_replica(0, 0.002, 1_000, 0.007, false);
+        m.record_replica(1, 0.004, 2_000, 0.014, true);
+        let r0 = m.replica(0);
+        assert_eq!(r0.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(r0.accel_cycles.load(Ordering::Relaxed), 2_000);
+        assert!((r0.busy_s() - 0.004).abs() < 1e-9);
+        assert!((r0.accel_ms() - 0.014).abs() < 1e-12);
+        assert_eq!(m.replica(1).errors.load(Ordering::Relaxed), 1);
+        assert!((m.total_accel_ms() - 0.028).abs() < 1e-12);
+        let report = m.report();
+        assert!(report.contains("replica 0:"));
+        assert!(report.contains("replica 1:"));
+    }
+
+    #[test]
+    fn replica_ledger_grows_on_demand() {
+        let m = Metrics::new();
+        m.record_replica(3, 0.001, 10, 0.0, false);
+        assert_eq!(m.replica_count(), 4);
+        assert_eq!(m.replica(3).requests.load(Ordering::Relaxed), 1);
     }
 }

@@ -1,22 +1,31 @@
 //! Layer-3 coordinator: the deployable serving system around the
-//! accelerator model.
+//! accelerator model (DESIGN.md §2).
 //!
-//! * [`engine`] — the inference engine: embedding lookup + PJRT-executed
-//!   integer encoder + integer classifier head, co-reported with the
-//!   cycle-accurate accelerator timing for every request.
+//! Request flow: `server` (TCP) -> `router::submit` -> `batcher`
+//! (size-or-deadline dispatch groups) -> dispatcher thread ->
+//! `pool::ReplicaPool` (fan-out over N engine replicas on the `util`
+//! thread pool, results re-ordered per request) -> reply channels.
+//!
+//! * [`engine`] — the [`EngineReplica`] trait and its implementations:
+//!   the PJRT-backed [`InferenceEngine`] and the artifact-free
+//!   [`FunctionalEngine`].
 //! * [`batcher`] — dynamic batcher (size/deadline policy).
-//! * [`router`] — request router dispatching batches onto a worker pool
-//!   of engine replicas (one SwiftTron instance each).
+//! * [`pool`] — the replica pool: dispatch-group fan-out + per-request
+//!   re-ordering on the in-repo thread pool.
+//! * [`router`] — request intake, the dispatcher thread, shutdown.
 //! * [`server`] — a line-protocol TCP front-end.
-//! * [`metrics`] — latency/throughput accounting.
+//! * [`metrics`] — wall-clock latency/throughput plus per-replica
+//!   virtual-time (simulated accelerator cycle) accounting.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod pool;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatchPolicy};
-pub use engine::{InferenceEngine, Prediction};
-pub use metrics::Metrics;
+pub use engine::{EngineReplica, FunctionalEngine, InferenceEngine, Prediction};
+pub use metrics::{Metrics, ReplicaStats};
+pub use pool::ReplicaPool;
 pub use router::{Request, Response, Router};

@@ -1,0 +1,294 @@
+//! Replica pool: fans the batcher's dispatch groups out across N engine
+//! replicas on the in-repo `util` thread pool and re-orders results per
+//! request (DESIGN.md §2).
+//!
+//! Fan-out policy: requests are assigned round-robin by position within
+//! the group (request `i` goes to replica `(start + i) mod N`, with
+//! `start` rotating per dispatch so short groups spread across replicas
+//! over time instead of pinning replica 0).  Each replica processes its
+//! share serially — one sequence at a time, as the hardware loads the
+//! MAC array per sentence — while the N shares run concurrently on
+//! dedicated pool threads.  Replies go out on each request's channel the
+//! moment its prediction completes; the group-level return value is
+//! re-ordered back to submission (FIFO) order for consumers that want
+//! the whole group (the scaling bench, tests).
+//!
+//! Dispatch is a barrier per group: throughput scales with replicas
+//! once the dispatch-group size reaches the replica count; groups
+//! smaller than N leave replicas idle for that dispatch (the operating
+//! regime is `max_batch >= replicas`; DESIGN.md §2, EXPERIMENTS.md
+//! §Scaling).
+
+use super::engine::EngineReplica;
+use super::metrics::Metrics;
+use super::router::{Request, Response};
+use crate::util::threadpool::ThreadPool;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct ReplicaPool {
+    replicas: Vec<Arc<dyn EngineReplica>>,
+    pool: ThreadPool,
+    metrics: Arc<Metrics>,
+    /// rotating fan-out offset (advances once per dispatch)
+    next_start: AtomicUsize,
+}
+
+impl ReplicaPool {
+    /// One pool thread per replica: a replica is never oversubscribed
+    /// and an idle replica never queues behind a busy one.
+    pub fn new(replicas: Vec<Arc<dyn EngineReplica>>, metrics: Arc<Metrics>) -> ReplicaPool {
+        assert!(!replicas.is_empty(), "replica pool needs at least one engine");
+        metrics.ensure_replicas(replicas.len());
+        let pool = ThreadPool::new(replicas.len());
+        ReplicaPool { replicas, pool, metrics, next_start: AtomicUsize::new(0) }
+    }
+
+    /// Number of replicas (== pool threads).
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Execute one dispatch group: fan out across replicas, reply per
+    /// request as it finishes, and return responses re-ordered to the
+    /// group's submission order.
+    pub fn dispatch(&self, group: Vec<Request>) -> Vec<Response> {
+        let n = self.replicas.len();
+        let total = group.len();
+        let start = self.next_start.fetch_add(1, Ordering::Relaxed) % n;
+        let mut shares: Vec<Vec<(usize, Request)>> = (0..n).map(|_| Vec::new()).collect();
+        for (i, req) in group.into_iter().enumerate() {
+            shares[(start + i) % n].push((i, req));
+        }
+        let jobs: Vec<_> = shares
+            .into_iter()
+            .enumerate()
+            .filter(|(_, share)| !share.is_empty())
+            .map(|(r, share)| {
+                let replica = Arc::clone(&self.replicas[r]);
+                let metrics = Arc::clone(&self.metrics);
+                move || {
+                    share
+                        .into_iter()
+                        .map(|(i, req)| (i, serve_one(r, replica.as_ref(), &metrics, req)))
+                        .collect::<Vec<_>>()
+                }
+            })
+            .collect();
+        let mut indexed: Vec<(usize, Response)> =
+            self.pool.run_batch(jobs).into_iter().flatten().collect();
+        indexed.sort_unstable_by_key(|&(i, _)| i);
+        assert_eq!(indexed.len(), total, "every request yields exactly one response");
+        indexed.into_iter().map(|(_, resp)| resp).collect()
+    }
+}
+
+/// Serve one request on one replica: predict, account (aggregate and
+/// per-replica virtual time), reply.
+fn serve_one(
+    replica_id: usize,
+    engine: &dyn EngineReplica,
+    metrics: &Metrics,
+    req: Request,
+) -> Response {
+    let queued = req.submitted.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    // A panicking replica must cost one request, not the dispatcher
+    // thread: run_batch treats a panicked job as fatal, which would
+    // kill the single dispatcher and hang every later submit.
+    let result = catch_unwind(AssertUnwindSafe(|| engine.predict(&req.tokens)))
+        .unwrap_or_else(|_| Err("replica panicked while serving request".into()));
+    let resp = match result {
+        Ok(pred) => {
+            let exec = t0.elapsed().as_secs_f64();
+            let e2e = req.submitted.elapsed().as_secs_f64();
+            metrics.record_completion(e2e, queued, exec, pred.accel_ms);
+            metrics.record_replica(replica_id, exec, pred.accel_cycles, pred.accel_ms, false);
+            Response {
+                id: req.id,
+                replica: replica_id,
+                label: pred.label,
+                accel_ms: pred.accel_ms,
+                e2e_s: e2e,
+                error: None,
+            }
+        }
+        Err(e) => {
+            let exec = t0.elapsed().as_secs_f64();
+            metrics.record_error();
+            metrics.record_replica(replica_id, exec, 0, 0.0, true);
+            Response {
+                id: req.id,
+                replica: replica_id,
+                label: usize::MAX,
+                accel_ms: 0.0,
+                e2e_s: req.submitted.elapsed().as_secs_f64(),
+                error: Some(e),
+            }
+        }
+    };
+    let _ = req.reply.send(resp.clone());
+    resp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Prediction;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::time::Duration;
+
+    /// Deterministic-latency replica: predicts after a fixed sleep.
+    struct SlowReplica {
+        delay: Duration,
+    }
+
+    impl EngineReplica for SlowReplica {
+        fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+            if tokens.is_empty() {
+                return Err("empty".into());
+            }
+            std::thread::sleep(self.delay);
+            Ok(Prediction {
+                label: tokens[0] as usize % 2,
+                logits: vec![0, 1],
+                accel_cycles: 1000,
+                accel_ms: 0.007,
+            })
+        }
+
+        fn seq_len(&self) -> usize {
+            4
+        }
+    }
+
+    fn pool_of(n: usize, delay_ms: u64) -> (ReplicaPool, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let replicas: Vec<Arc<dyn EngineReplica>> = (0..n)
+            .map(|_| {
+                Arc::new(SlowReplica { delay: Duration::from_millis(delay_ms) })
+                    as Arc<dyn EngineReplica>
+            })
+            .collect();
+        (ReplicaPool::new(replicas, Arc::clone(&metrics)), metrics)
+    }
+
+    fn group_of(n: usize) -> (Vec<Request>, Vec<Receiver<Response>>) {
+        let mut group = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for id in 0..n as u64 {
+            let (tx, rx) = channel();
+            group.push(Request {
+                id,
+                tokens: vec![id as i32; 4],
+                submitted: Instant::now(),
+                reply: tx,
+            });
+            receivers.push(rx);
+        }
+        (group, receivers)
+    }
+
+    #[test]
+    fn dispatch_reorders_to_submission_order_and_replies() {
+        let (pool, _metrics) = pool_of(3, 0);
+        let (group, receivers) = group_of(10);
+        let responses = pool.dispatch(group);
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>(), "submission order restored");
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv().expect("reply sent");
+            assert_eq!(resp.id, i as u64);
+            assert!(resp.error.is_none());
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_across_replicas() {
+        let (pool, metrics) = pool_of(2, 0);
+        let (group, _receivers) = group_of(8);
+        let responses = pool.dispatch(group);
+        // first dispatch starts at offset 0: position i -> replica i mod 2
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.replica, i % 2);
+        }
+        assert_eq!(metrics.replica(0).requests.load(std::sync::atomic::Ordering::Relaxed), 4);
+        assert_eq!(metrics.replica(1).requests.load(std::sync::atomic::Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn singleton_groups_rotate_across_replicas() {
+        // the fan-out offset advances per dispatch, so back-to-back
+        // one-request groups do not pin replica 0
+        let (pool, _metrics) = pool_of(2, 0);
+        let mut served = vec![];
+        for _ in 0..4 {
+            let (group, _receivers) = group_of(1);
+            served.push(pool.dispatch(group)[0].replica);
+        }
+        assert_eq!(served, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn panicking_replica_costs_one_request_not_the_pool() {
+        struct PanickyReplica;
+        impl EngineReplica for PanickyReplica {
+            fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+                if tokens[0] == 13 {
+                    panic!("boom");
+                }
+                Ok(Prediction { label: 0, logits: vec![], accel_cycles: 1, accel_ms: 0.001 })
+            }
+            fn seq_len(&self) -> usize {
+                4
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let replicas: Vec<Arc<dyn EngineReplica>> =
+            vec![Arc::new(PanickyReplica) as Arc<dyn EngineReplica>];
+        let pool = ReplicaPool::new(replicas, Arc::clone(&metrics));
+        let (mut group, _receivers) = group_of(3);
+        group[1].tokens = vec![13; 4]; // triggers the panic
+        let responses = pool.dispatch(group);
+        assert!(responses[0].error.is_none());
+        assert!(responses[1].error.as_deref().unwrap_or("").contains("panicked"));
+        assert!(responses[2].error.is_none());
+        // the pool survives for the next dispatch
+        let (group, _receivers) = group_of(2);
+        assert!(pool.dispatch(group).iter().all(|r| r.error.is_none()));
+    }
+
+    #[test]
+    fn two_replicas_run_a_group_concurrently() {
+        // 8 requests x 20 ms: serial would take ~160 ms; two replicas
+        // should land near 80 ms.  The generous bound still proves the
+        // shares overlapped.
+        let (pool, _metrics) = pool_of(2, 20);
+        let (group, _receivers) = group_of(8);
+        let t0 = Instant::now();
+        let responses = pool.dispatch(group);
+        let wall = t0.elapsed();
+        assert_eq!(responses.len(), 8);
+        assert!(
+            wall < Duration::from_millis(140),
+            "dispatch took {wall:?}, shares did not overlap"
+        );
+    }
+
+    #[test]
+    fn errors_are_per_request_not_per_group() {
+        let (pool, metrics) = pool_of(2, 0);
+        let (mut group, receivers) = group_of(4);
+        group[2].tokens.clear(); // SlowReplica errors on empty tokens
+        let responses = pool.dispatch(group);
+        assert!(responses[2].error.is_some());
+        for (i, resp) in responses.iter().enumerate() {
+            assert_eq!(resp.error.is_some(), i == 2);
+        }
+        drop(receivers);
+        assert_eq!(metrics.errors.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 3);
+    }
+}

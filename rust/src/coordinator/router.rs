@@ -1,10 +1,19 @@
-//! Request router: accepts requests, batches them, and dispatches batches
-//! onto a pool of engine replicas (each replica modeling one SwiftTron
-//! accelerator attached to the host).
+//! Request router: the front half of the parallel serving pipeline
+//! (DESIGN.md §2).
+//!
+//! `submit` enqueues requests into the dynamic [`Batcher`]; a single
+//! dispatcher thread waits for the size-or-deadline policy to release a
+//! dispatch group and hands it to the [`ReplicaPool`], which fans the
+//! group out across N engine replicas on the `util` thread pool.  The
+//! dispatcher blocks until the group completes (the pool's join), then
+//! takes the next group — so groups are pipelined back to back while
+//! requests inside a group run concurrently.
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::engine::InferenceEngine;
+use super::engine::EngineReplica;
 use super::metrics::Metrics;
+use super::pool::ReplicaPool;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -21,6 +30,8 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// which engine replica served this request
+    pub replica: usize,
     pub label: usize,
     pub accel_ms: f64,
     pub e2e_s: f64,
@@ -30,50 +41,42 @@ pub struct Response {
 struct Shared {
     batcher: Mutex<Batcher<Request>>,
     available: Condvar,
-    shutdown: Mutex<bool>,
+    shutdown: AtomicBool,
 }
 
 pub struct Router {
     shared: Arc<Shared>,
     pub metrics: Arc<Metrics>,
-    workers: Vec<JoinHandle<()>>,
-    next_id: Mutex<u64>,
+    dispatcher: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
 }
 
 impl Router {
-    /// Spawn `replicas` worker threads, each owning one engine replica.
+    /// Start the serving pipeline over `replicas` engine replicas (the
+    /// replica pool spins one worker thread per replica, plus one
+    /// dispatcher thread).
     pub fn start(
-        engines: Vec<Arc<InferenceEngine>>,
+        replicas: Vec<Arc<dyn EngineReplica>>,
         policy: BatchPolicy,
         metrics: Arc<Metrics>,
     ) -> Router {
         let shared = Arc::new(Shared {
             batcher: Mutex::new(Batcher::new(policy)),
             available: Condvar::new(),
-            shutdown: Mutex::new(false),
+            shutdown: AtomicBool::new(false),
         });
-        let workers = engines
-            .into_iter()
-            .enumerate()
-            .map(|(i, engine)| {
-                let sh = Arc::clone(&shared);
-                let mt = Arc::clone(&metrics);
-                std::thread::Builder::new()
-                    .name(format!("swifttron-replica-{i}"))
-                    .spawn(move || worker_loop(sh, engine, mt))
-                    .expect("spawn replica")
-            })
-            .collect();
-        Router { shared, metrics, workers, next_id: Mutex::new(0) }
+        let pool = ReplicaPool::new(replicas, Arc::clone(&metrics));
+        let sh = Arc::clone(&shared);
+        let dispatcher = std::thread::Builder::new()
+            .name("swifttron-dispatch".into())
+            .spawn(move || dispatch_loop(sh, pool))
+            .expect("spawn dispatcher");
+        Router { shared, metrics, dispatcher: Some(dispatcher), next_id: AtomicU64::new(0) }
     }
 
     /// Submit a request; the response arrives on `reply`.
     pub fn submit(&self, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
-        let id = {
-            let mut n = self.next_id.lock().unwrap();
-            *n += 1;
-            *n
-        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         self.metrics.record_request();
         {
             let mut b = self.shared.batcher.lock().unwrap();
@@ -87,25 +90,34 @@ impl Router {
         self.shared.batcher.lock().unwrap().len()
     }
 
+    /// Drain the queue and stop the pipeline (joins the dispatcher,
+    /// which in turn joins the replica pool's threads on drop).
     pub fn shutdown(mut self) {
-        *self.shared.shutdown.lock().unwrap() = true;
+        // The flag must flip while holding the mutex the dispatcher's
+        // condvar predicate is checked under, or a store between the
+        // predicate check and wait_timeout loses the wakeup and the
+        // drain stalls for up to max_wait.
+        {
+            let _b = self.shared.batcher.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
         self.shared.available.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
         }
     }
 }
 
-fn worker_loop(sh: Arc<Shared>, engine: Arc<InferenceEngine>, metrics: Arc<Metrics>) {
+fn dispatch_loop(sh: Arc<Shared>, pool: ReplicaPool) {
     loop {
-        // wait for work or shutdown
-        let batch = {
+        let group = {
             let mut b = sh.batcher.lock().unwrap();
             loop {
-                if *sh.shutdown.lock().unwrap() && b.is_empty() {
+                let shutting = sh.shutdown.load(Ordering::SeqCst);
+                if b.is_empty() && shutting {
                     return;
                 }
-                if b.ready(Instant::now()) || (!b.is_empty() && *sh.shutdown.lock().unwrap()) {
+                if b.ready(Instant::now()) || (shutting && !b.is_empty()) {
                     break b.take_batch();
                 }
                 let timeout = b
@@ -116,34 +128,6 @@ fn worker_loop(sh: Arc<Shared>, engine: Arc<InferenceEngine>, metrics: Arc<Metri
                 b = guard;
             }
         };
-
-        for req in batch {
-            let queued = req.submitted.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            match engine.predict(&req.tokens) {
-                Ok(pred) => {
-                    let exec = t0.elapsed().as_secs_f64();
-                    let e2e = req.submitted.elapsed().as_secs_f64();
-                    metrics.record_completion(e2e, queued, exec, pred.accel_ms);
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        label: pred.label,
-                        accel_ms: pred.accel_ms,
-                        e2e_s: e2e,
-                        error: None,
-                    });
-                }
-                Err(e) => {
-                    metrics.record_error();
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        label: usize::MAX,
-                        accel_ms: 0.0,
-                        e2e_s: req.submitted.elapsed().as_secs_f64(),
-                        error: Some(e),
-                    });
-                }
-            }
-        }
+        pool.dispatch(group);
     }
 }

@@ -30,6 +30,7 @@ pub fn serve(router: Arc<Router>, addr: &str) -> Result<(), String> {
 fn response_json(resp: &Response) -> String {
     let mut fields = vec![
         ("id", Json::from(resp.id as i64)),
+        ("replica", Json::from(resp.replica as i64)),
         ("accel_ms", Json::from(resp.accel_ms)),
         ("e2e_us", Json::from(resp.e2e_s * 1e6)),
     ];
@@ -88,10 +89,19 @@ mod tests {
 
     #[test]
     fn response_json_shapes() {
-        let ok = Response { id: 1, label: 0, accel_ms: 0.5, e2e_s: 0.001, error: None };
+        let ok =
+            Response { id: 1, replica: 0, label: 0, accel_ms: 0.5, e2e_s: 0.001, error: None };
         let s = response_json(&ok);
         assert!(s.contains("\"label\":0") && s.contains("\"accel_ms\":0.5"));
-        let err = Response { id: 2, label: usize::MAX, accel_ms: 0.0, e2e_s: 0.0, error: Some("bad".into()) };
+        assert!(s.contains("\"replica\":0"));
+        let err = Response {
+            id: 2,
+            replica: 1,
+            label: usize::MAX,
+            accel_ms: 0.0,
+            e2e_s: 0.0,
+            error: Some("bad".into()),
+        };
         assert!(response_json(&err).contains("\"error\":\"bad\""));
     }
 }

@@ -16,10 +16,16 @@
 //!   points used by the paper's Table II / Table III / Fig. 2.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); python never runs on the request path.
+//!   Compiled against the vendored `xla` crate only under the `pjrt`
+//!   feature; the default build is dependency-free and serves through the
+//!   functional replicas instead.
 //! * [`model`] — geometry, weights, and scale metadata shared by all of the
 //!   above (read from the artifact manifest).
-//! * [`coordinator`] — request router, dynamic batcher, and inference engine
-//!   that pair numeric execution (PJRT) with simulated accelerator timing.
+//! * [`coordinator`] — the parallel serving pipeline (DESIGN.md §2):
+//!   request router + dynamic batcher feeding dispatch groups to a pool of
+//!   N engine replicas on the in-repo thread pool, with per-replica
+//!   virtual-time (simulated cycle) accounting next to wall-clock
+//!   throughput.
 //! * [`util`] — in-repo substrates (RNG, JSON, CLI, thread pool, property
 //!   testing, stats): the offline crate set has no tokio/clap/serde/etc.
 

@@ -3,7 +3,9 @@
 use std::process::exit;
 use std::sync::Arc;
 use swifttron::baselines::{comparison_table, fp32_asic_report, gpu_inference_ms, GpuModel};
-use swifttron::coordinator::{BatchPolicy, InferenceEngine, Metrics, Router};
+use swifttron::coordinator::{
+    BatchPolicy, EngineReplica, FunctionalEngine, InferenceEngine, Metrics, Router,
+};
 use swifttron::model::{Geometry, Manifest};
 use swifttron::runtime::Engine;
 use swifttron::sim::{simulate_encoder, HwConfig};
@@ -46,6 +48,7 @@ fn usage() -> String {
      \x20 compare                          Table III feature matrix + GPU/FP32 baselines\n\
      \x20 infer    --tokens 1,2,3,...      one tiny-task inference via PJRT\n\
      \x20 serve    --addr 127.0.0.1:7077   TCP serving front-end\n\
+     \x20          [--replicas N --max-batch B --engine pjrt|functional]\n\
      \x20 report                           full paper reproduction summary\n"
         .into()
 }
@@ -159,16 +162,32 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         .opt("addr", "127.0.0.1:7077", "listen address")
         .opt("replicas", "2", "engine replicas (simulated accelerators)")
         .opt("max-batch", "8", "dispatch group size")
+        .opt("engine", "pjrt", "replica backend: pjrt | functional")
         .parse(rest)?;
     let replicas = p.get_usize("replicas")?;
-    let dir = Manifest::default_dir();
-    let engine = Engine::cpu()?;
-    let engines: Result<Vec<_>, String> = (0..replicas)
-        .map(|_| InferenceEngine::load(&dir, &engine, HwConfig::paper()).map(Arc::new))
-        .collect();
+    let engines: Vec<Arc<dyn EngineReplica>> = match p.get("engine") {
+        // artifact-free synthetic-weight replicas (no PJRT needed)
+        "functional" => (0..replicas)
+            .map(|_| {
+                FunctionalEngine::synthetic("tiny", 7, HwConfig::paper())
+                    .map(|e| Arc::new(e) as Arc<dyn EngineReplica>)
+            })
+            .collect::<Result<_, _>>()?,
+        "pjrt" => {
+            let dir = Manifest::default_dir();
+            let engine = Engine::cpu()?;
+            (0..replicas)
+                .map(|_| {
+                    InferenceEngine::load(&dir, &engine, HwConfig::paper())
+                        .map(|e| Arc::new(e) as Arc<dyn EngineReplica>)
+                })
+                .collect::<Result<_, _>>()?
+        }
+        other => return Err(format!("unknown engine {other:?} (expected pjrt | functional)")),
+    };
     let metrics = Arc::new(Metrics::new());
     let policy = BatchPolicy { max_batch: p.get_usize("max-batch")?, ..Default::default() };
-    let router = Arc::new(Router::start(engines?, policy, Arc::clone(&metrics)));
+    let router = Arc::new(Router::start(engines, policy, Arc::clone(&metrics)));
     swifttron::coordinator::server::serve(router, p.get("addr"))
 }
 

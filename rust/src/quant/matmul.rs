@@ -1,6 +1,20 @@
 //! INT8 x INT8 -> INT32 matrix multiplication (the MatMul block,
 //! paper §III-B, Fig. 6) — the functional model the simulator and the
 //! integer classifier head use.  Row-major `(m,k) @ (k,n) -> (m,n)`.
+//!
+//! Two execution strategies, bit-identical by construction:
+//! * the serial kernels [`i_matmul`] / [`i_matmul_bt`], and
+//! * row-tiled thread-parallel variants ([`i_matmul_tiled`] /
+//!   [`i_matmul_bt_tiled`]) that split the *output rows* across scoped
+//!   threads — each tile runs the serial kernel on a disjoint row band,
+//!   so no accumulation order changes and the result is exactly the
+//!   serial one (asserted by randomized tests below).
+//!
+//! [`i_matmul_par`] / [`i_matmul_bt_par`] auto-dispatch: contractions at
+//! or above [`PAR_MIN_MACS`] multiply-accumulates go parallel, smaller
+//! ones stay serial (thread spawn would dominate; EXPERIMENTS.md §Perf).
+
+use crate::util::threadpool::{default_parallelism, tile_ranges};
 
 /// `out[m][n] = sum_k x[m][k]*w[k][n] (+ bias[n])`, INT32 accumulators.
 /// Panics in debug builds if an accumulator leaves the INT32 range (the
@@ -72,6 +86,103 @@ pub fn i_matmul_bt(x: &[i32], w_t: &[i32], m: usize, k: usize, n: usize, out: &m
     }
 }
 
+/// Minimum multiply-accumulate count for the parallel path to pay for
+/// its scoped-thread spawns.  Below this (every tiny-preset contraction,
+/// the classifier head) the serial kernel wins; at/above it (the
+/// roberta-scale projections and FFN matmuls, ≥ ~2M MACs) row tiling
+/// wins even on a few cores.  Swept in EXPERIMENTS.md §Perf.
+pub const PAR_MIN_MACS: usize = 1 << 21;
+
+/// Row-tiled parallel [`i_matmul`]: output rows are split into at most
+/// `threads` balanced contiguous bands, each computed by the serial
+/// kernel on its own scoped thread.  Bit-exact with [`i_matmul`] for
+/// every input (the per-row accumulation order is untouched).
+pub fn i_matmul_tiled(
+    threads: usize,
+    x: &[i32],
+    w: &[i32],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(x.len(), m * k, "x shape");
+    assert_eq!(w.len(), k * n, "w shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    let tiles = tile_ranges(m, threads);
+    if tiles.len() <= 1 {
+        return i_matmul(x, w, bias, m, k, n, out);
+    }
+    std::thread::scope(|s| {
+        let mut rem: &mut [i32] = out;
+        for t in tiles {
+            let rows = t.len();
+            let (tile_out, rest) = std::mem::take(&mut rem).split_at_mut(rows * n);
+            rem = rest;
+            let x_tile = &x[t.start * k..t.end * k];
+            s.spawn(move || i_matmul(x_tile, w, bias, rows, k, n, tile_out));
+        }
+    });
+}
+
+/// Row-tiled parallel [`i_matmul_bt`]; same tiling contract as
+/// [`i_matmul_tiled`].
+pub fn i_matmul_bt_tiled(
+    threads: usize,
+    x: &[i32],
+    w_t: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w_t.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    let tiles = tile_ranges(m, threads);
+    if tiles.len() <= 1 {
+        return i_matmul_bt(x, w_t, m, k, n, out);
+    }
+    std::thread::scope(|s| {
+        let mut rem: &mut [i32] = out;
+        for t in tiles {
+            let rows = t.len();
+            let (tile_out, rest) = std::mem::take(&mut rem).split_at_mut(rows * n);
+            rem = rest;
+            let x_tile = &x[t.start * k..t.end * k];
+            s.spawn(move || i_matmul_bt(x_tile, w_t, rows, k, n, tile_out));
+        }
+    });
+}
+
+/// Auto-dispatching [`i_matmul`]: parallel at/above [`PAR_MIN_MACS`]
+/// multiply-accumulates, serial below.
+pub fn i_matmul_par(
+    x: &[i32],
+    w: &[i32],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    if m > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        i_matmul_tiled(default_parallelism(), x, w, bias, m, k, n, out)
+    } else {
+        i_matmul(x, w, bias, m, k, n, out)
+    }
+}
+
+/// Auto-dispatching [`i_matmul_bt`]; see [`i_matmul_par`].
+pub fn i_matmul_bt_par(x: &[i32], w_t: &[i32], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    if m > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        i_matmul_bt_tiled(default_parallelism(), x, w_t, m, k, n, out)
+    } else {
+        i_matmul_bt(x, w_t, m, k, n, out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +226,60 @@ mod tests {
         i_matmul(&x, &w, None, m, k, n, &mut a);
         i_matmul_bt(&x, &wt, m, k, n, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tiled_bit_exact_on_randomized_shapes() {
+        // The acceptance contract of the parallel path: parallel tiled
+        // output == serial output, across random shapes, random INT8
+        // operands, with and without bias, for every thread count
+        // (including counts exceeding the row count).
+        let mut rng = crate::util::rng::Rng::new(0x7117);
+        for case in 0..60 {
+            let m = 1 + rng.below(17) as usize;
+            let k = 1 + rng.below(33) as usize;
+            let n = 1 + rng.below(19) as usize;
+            let threads = 1 + rng.below(6) as usize;
+            let x: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+            let w: Vec<i32> = (0..k * n).map(|_| rng.range_i64(-128, 127) as i32).collect();
+            let bias: Vec<i32> = (0..n).map(|_| rng.range_i64(-5000, 5000) as i32).collect();
+            let b = if case % 2 == 0 { Some(&bias[..]) } else { None };
+
+            let mut serial = vec![0i32; m * n];
+            let mut tiled = vec![0i32; m * n];
+            i_matmul(&x, &w, b, m, k, n, &mut serial);
+            i_matmul_tiled(threads, &x, &w, b, m, k, n, &mut tiled);
+            assert_eq!(serial, tiled, "m={m} k={k} n={n} threads={threads}");
+
+            // transposed-B variant on the same operands
+            let mut wt = vec![0i32; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    wt[j * k + kk] = w[kk * n + j];
+                }
+            }
+            let mut serial_bt = vec![0i32; m * n];
+            let mut tiled_bt = vec![0i32; m * n];
+            i_matmul_bt(&x, &wt, m, k, n, &mut serial_bt);
+            i_matmul_bt_tiled(threads, &x, &wt, m, k, n, &mut tiled_bt);
+            assert_eq!(serial_bt, tiled_bt, "bt m={m} k={k} n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_auto_dispatch_bit_exact_above_threshold() {
+        // 128 * 130 * 128 = 2_129_920 MACs >= PAR_MIN_MACS: the _par entry
+        // point takes the tiled path and must still match the serial kernel.
+        let (m, k, n) = (128, 130, 128);
+        assert!(m * k * n >= PAR_MIN_MACS);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let x: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let mut serial = vec![0i32; m * n];
+        let mut par = vec![0i32; m * n];
+        i_matmul(&x, &w, None, m, k, n, &mut serial);
+        i_matmul_par(&x, &w, None, m, k, n, &mut par);
+        assert_eq!(serial, par);
     }
 
     #[test]

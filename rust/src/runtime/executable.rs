@@ -8,7 +8,12 @@
 //! one accelerator.  Multiple [`Engine`]s can be created for replica
 //! parallelism (each owns an independent PJRT client).
 
+// Without `pjrt` the command-loop side of the channel is compiled out,
+// so the command payload fields are constructed but never read.
+#![cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+
 use super::tensor::Tensor;
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Sender};
@@ -42,7 +47,19 @@ pub struct Executable {
 }
 
 impl Engine {
+    /// Without the `pjrt` feature there is no PJRT client to spawn; the
+    /// constructor fails and callers fall back to the functional path
+    /// (`coordinator::FunctionalEngine`) or skip, exactly as they do when
+    /// the AOT artifacts are absent.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Engine, String> {
+        Err("PJRT runtime unavailable: built without the `pjrt` feature \
+             (see Cargo.toml for how to enable it against a vendored `xla` crate)"
+            .into())
+    }
+
     /// Spawn the runtime thread and create its PJRT CPU client.
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Engine, String> {
         let (tx, rx) = channel::<Cmd>();
         let (ready_tx, ready_rx) = channel();
@@ -107,6 +124,7 @@ impl Executable {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn runtime_thread(rx: std::sync::mpsc::Receiver<Cmd>, ready: Sender<Result<(), String>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {

@@ -7,6 +7,13 @@
 //! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate is vendored, not on crates.io, so this module is
+//! compiled against it only under the `pjrt` cargo feature (see
+//! Cargo.toml).  Without the feature, [`Engine::cpu`] returns an error
+//! and callers use the artifact-free functional serving path
+//! (`coordinator::FunctionalEngine`) instead; the default build has no
+//! external dependencies at all.
 
 pub mod executable;
 pub mod tensor;

@@ -51,6 +51,7 @@ impl Tensor {
     }
 
     /// Build the device literal (reshaped to this tensor's shape).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal, String> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -61,11 +62,13 @@ impl Tensor {
     }
 
     /// Read back a literal of known element type.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal_i32(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor, String> {
         let data = lit.to_vec::<i32>().map_err(|e| format!("to_vec<i32>: {e}"))?;
         Ok(Tensor::i32(shape, data))
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal_f32(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor, String> {
         let data = lit.to_vec::<f32>().map_err(|e| format!("to_vec<f32>: {e}"))?;
         Ok(Tensor::f32(shape, data))

@@ -11,9 +11,11 @@
 
 use crate::model::{Geometry, LayerConsts};
 use crate::quant::{
-    self, i_layernorm, i_matmul, i_matmul_bt, i_softmax, requantize, requantize_signed,
-    rescale,
+    self, i_layernorm, i_matmul_bt_par, i_matmul_par, i_softmax, requantize,
+    requantize_signed, rescale, Dyadic, GeluConsts, LayerNormConsts, SoftmaxConsts,
 };
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
 
 /// One layer's integer weights, row-major (see aot.py WEIGHT_KEYS).
 #[derive(Clone, Debug)]
@@ -50,6 +52,47 @@ impl LayerWeights {
             gamma2: g("gamma2")?, beta2: g("beta2")?,
         })
     }
+
+    /// Synthetic INT8-range weights with the same shapes `from_blob`
+    /// loads, deterministic in `rng` — the artifact-free model used by
+    /// `coordinator::FunctionalEngine`, the serving-scaling bench, and
+    /// the functional tests.
+    pub fn synthetic(rng: &mut Rng, geo: &Geometry) -> LayerWeights {
+        let (d, dff) = (geo.d, geo.d_ff);
+        let mut w = |n: usize, lim: i64| -> Vec<i32> {
+            (0..n).map(|_| rng.range_i64(-lim, lim) as i32).collect()
+        };
+        LayerWeights {
+            wq: w(d * d, 127), bq: w(d, 1000),
+            wk: w(d * d, 127), bk: w(d, 1000),
+            wv: w(d * d, 127), bv: w(d, 1000),
+            wo: w(d * d, 127), bo: w(d, 1000),
+            w1: w(d * dff, 127), b1: w(dff, 1000),
+            w2: w(dff * d, 127), b2: w(d, 1000),
+            gamma1: w(d, 127), beta1: w(d, 500),
+            gamma2: w(d, 127), beta2: w(d, 500),
+        }
+    }
+}
+
+/// A plausible integer design (dyadic scales, softmax/GELU/LayerNorm
+/// constants) for a synthetic layer of geometry `geo` — the values the
+/// AOT calibration pass would produce for weights in the
+/// [`LayerWeights::synthetic`] range.
+pub fn synthetic_consts(geo: &Geometry) -> LayerConsts {
+    let dy = |x: f64| Dyadic::approx16(x);
+    LayerConsts {
+        dy_q: dy(0.004), dy_k: dy(0.004), dy_v: dy(0.004),
+        dy_scale: Dyadic { b: 1, c: 2 },
+        dy_ctx: dy(0.3), dy_res1: dy(0.08),
+        dy_ln1: dy(0.005), dy_gelu: Dyadic::approximate(2.0e-7, 14, 52),
+        dy_res2: dy(0.08), dy_ln2: dy(0.005),
+        softmax: SoftmaxConsts::design(0.0009),
+        gelu: GeluConsts::design(0.0004),
+        ln1: LayerNormConsts { s_in: 0.02, s_gamma: 0.008, d: geo.d },
+        ln2: LayerNormConsts { s_in: 0.02, s_gamma: 0.008, d: geo.d },
+        scales: BTreeMap::new(),
+    }
 }
 
 /// Output of one functional layer evaluation.
@@ -80,11 +123,11 @@ pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geome
 
     // --- Q/K/V projections + Requantization ---
     let mut acc = vec![0i32; m * d];
-    i_matmul(q_x, &w.wq, Some(&w.bq), m, d, d, &mut acc);
+    i_matmul_par(q_x, &w.wq, Some(&w.bq), m, d, d, &mut acc);
     let q8 = requant_all(&acc, c.dy_q);
-    i_matmul(q_x, &w.wk, Some(&w.bk), m, d, d, &mut acc);
+    i_matmul_par(q_x, &w.wk, Some(&w.bk), m, d, d, &mut acc);
     let k8 = requant_all(&acc, c.dy_k);
-    i_matmul(q_x, &w.wv, Some(&w.bv), m, d, d, &mut acc);
+    i_matmul_par(q_x, &w.wv, Some(&w.bv), m, d, d, &mut acc);
     let v8 = requant_all(&acc, c.dy_v);
 
     // --- Attention per head: MatMul -> Scale -> Softmax -> Req -> MatMul ---
@@ -95,7 +138,7 @@ pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geome
         let qh = head_cols(&q8, m, d, h, dh);
         let kh = head_cols(&k8, m, d, h, dh);
         let vh = head_cols(&v8, m, d, h, dh);
-        i_matmul_bt(&qh, &kh, m, dh, m, &mut scores);
+        i_matmul_bt_par(&qh, &kh, m, dh, m, &mut scores);
         // Scale block + Softmax rows
         let mut row64 = vec![0i64; m];
         for r in 0..m {
@@ -106,7 +149,7 @@ pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geome
         }
         // P.V into the head's slice of the context accumulator
         let mut ctx_h = vec![0i32; m * dh];
-        i_matmul(&probs, &vh, None, m, m, dh, &mut ctx_h);
+        i_matmul_par(&probs, &vh, None, m, m, dh, &mut ctx_h);
         for r in 0..m {
             ctx_acc[r * d + h * dh..r * d + (h + 1) * dh]
                 .copy_from_slice(&ctx_h[r * dh..(r + 1) * dh]);
@@ -116,7 +159,7 @@ pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geome
 
     // --- output projection + residual align + LayerNorm 1 ---
     let mut attn_acc = vec![0i32; m * d];
-    i_matmul(&ctx8, &w.wo, Some(&w.bo), m, d, d, &mut attn_acc);
+    i_matmul_par(&ctx8, &w.wo, Some(&w.bo), m, d, d, &mut attn_acc);
     let res1: Vec<i64> = q_x
         .iter()
         .zip(&attn_acc)
@@ -134,13 +177,13 @@ pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geome
 
     // --- FFN: MatMul -> GELU -> Req -> MatMul ---
     let mut h_acc = vec![0i32; m * dff];
-    i_matmul(&x2, &w.w1, Some(&w.b1), m, d, dff, &mut h_acc);
+    i_matmul_par(&x2, &w.w1, Some(&w.b1), m, d, dff, &mut h_acc);
     let h8: Vec<i32> = h_acc
         .iter()
         .map(|&v| requantize_signed(quant::i_gelu(v as i64, &c.gelu), c.dy_gelu, -1))
         .collect();
     let mut ffn_acc = vec![0i32; m * d];
-    i_matmul(&h8, &w.w2, Some(&w.b2), m, dff, d, &mut ffn_acc);
+    i_matmul_par(&h8, &w.w2, Some(&w.b2), m, dff, d, &mut ffn_acc);
 
     // --- residual align + LayerNorm 2 + output requant ---
     let res2: Vec<i64> = x2
@@ -177,9 +220,6 @@ pub fn encoder_forward(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{Dyadic, GeluConsts, LayerNormConsts, SoftmaxConsts};
-    use crate::util::rng::Rng;
-    use std::collections::BTreeMap;
 
     fn tiny_geo() -> Geometry {
         Geometry::new(16, 2, 8, 32, 1)
@@ -190,33 +230,11 @@ mod tests {
     }
 
     fn consts(geo: &Geometry) -> LayerConsts {
-        let dy = |x: f64| Dyadic::approx16(x);
-        LayerConsts {
-            dy_q: dy(0.004), dy_k: dy(0.004), dy_v: dy(0.004),
-            dy_scale: Dyadic { b: 1, c: 2 },
-            dy_ctx: dy(0.3), dy_res1: dy(0.08),
-            dy_ln1: dy(0.005), dy_gelu: Dyadic::approximate(2.0e-7, 14, 52),
-            dy_res2: dy(0.08), dy_ln2: dy(0.005),
-            softmax: SoftmaxConsts::design(0.0009),
-            gelu: GeluConsts::design(0.0004),
-            ln1: LayerNormConsts { s_in: 0.02, s_gamma: 0.008, d: geo.d },
-            ln2: LayerNormConsts { s_in: 0.02, s_gamma: 0.008, d: geo.d },
-            scales: BTreeMap::new(),
-        }
+        synthetic_consts(geo)
     }
 
     fn weights(rng: &mut Rng, geo: &Geometry) -> LayerWeights {
-        let (d, dff) = (geo.d, geo.d_ff);
-        LayerWeights {
-            wq: rand_w(rng, d * d, 127), bq: rand_w(rng, d, 1000),
-            wk: rand_w(rng, d * d, 127), bk: rand_w(rng, d, 1000),
-            wv: rand_w(rng, d * d, 127), bv: rand_w(rng, d, 1000),
-            wo: rand_w(rng, d * d, 127), bo: rand_w(rng, d, 1000),
-            w1: rand_w(rng, d * dff, 127), b1: rand_w(rng, dff, 1000),
-            w2: rand_w(rng, dff * d, 127), b2: rand_w(rng, d, 1000),
-            gamma1: rand_w(rng, d, 127), beta1: rand_w(rng, d, 500),
-            gamma2: rand_w(rng, d, 127), beta2: rand_w(rng, d, 500),
-        }
+        LayerWeights::synthetic(rng, geo)
     }
 
     #[test]

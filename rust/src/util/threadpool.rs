@@ -9,6 +9,34 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// Number of threads to use for data-parallel work when the caller has
+/// no better idea: the machine's available parallelism, capped so a
+/// single kernel never fans out absurdly wide on large hosts.
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Split `0..n` into at most `tiles` contiguous, non-empty, balanced
+/// ranges (sizes differ by at most one).  Returns fewer than `tiles`
+/// ranges when `n < tiles`, and an empty vec when `n == 0` — so every
+/// returned range carries real work.
+pub fn tile_ranges(n: usize, tiles: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let tiles = tiles.max(1).min(n);
+    let base = n / tiles;
+    let extra = n % tiles;
+    let mut out = Vec::with_capacity(tiles);
+    let mut start = 0;
+    for i in 0..tiles {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 enum Msg {
@@ -177,5 +205,34 @@ mod tests {
     #[test]
     fn wait_idle_with_no_jobs_returns() {
         ThreadPool::new(1).wait_idle();
+    }
+
+    #[test]
+    fn tile_ranges_cover_exactly_and_balance() {
+        for n in [0usize, 1, 2, 5, 7, 16, 100] {
+            for tiles in [1usize, 2, 3, 8, 200] {
+                let r = tile_ranges(n, tiles);
+                // contiguous cover of 0..n
+                let mut next = 0;
+                for t in &r {
+                    assert_eq!(t.start, next);
+                    assert!(!t.is_empty(), "empty tile for n={n} tiles={tiles}");
+                    next = t.end;
+                }
+                assert_eq!(next, n);
+                assert!(r.len() <= tiles.max(1));
+                // balanced: sizes differ by at most one
+                if let (Some(min), Some(max)) =
+                    (r.iter().map(|t| t.len()).min(), r.iter().map(|t| t.len()).max())
+                {
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_parallelism_is_positive() {
+        assert!(default_parallelism() >= 1);
     }
 }

@@ -1,10 +1,17 @@
 //! End-to-end serving tests: engine accuracy on the held-out tiny-task
 //! test set (the Table II accuracy experiment, DESIGN.md §5) and the
-//! router/batcher under concurrent load.
+//! router / batcher / replica-pool pipeline under concurrent load.
+//!
+//! The artifact-backed tests skip when `make artifacts` has not run; the
+//! pipeline tests use the artifact-free `FunctionalEngine`, so the
+//! parallel serving path is exercised on every `cargo test`.
 
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
-use swifttron::coordinator::{BatchPolicy, InferenceEngine, Metrics, Router};
+use swifttron::coordinator::{
+    BatchPolicy, EngineReplica, FunctionalEngine, InferenceEngine, Metrics, Router,
+};
 use swifttron::model::{Blob, Manifest};
 use swifttron::runtime::Engine;
 use swifttron::sim::HwConfig;
@@ -16,6 +23,15 @@ fn setup() -> Option<(Manifest, Engine)> {
         return None;
     }
     Some((Manifest::load(&dir).unwrap(), Engine::cpu().unwrap()))
+}
+
+fn functional_replicas(n: usize) -> Vec<Arc<dyn EngineReplica>> {
+    (0..n)
+        .map(|_| {
+            Arc::new(FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap())
+                as Arc<dyn EngineReplica>
+        })
+        .collect()
 }
 
 #[test]
@@ -48,12 +64,12 @@ fn quantized_accuracy_matches_float_within_one_point() {
 }
 
 #[test]
-fn router_serves_concurrent_requests() {
+fn pjrt_router_serves_concurrent_requests() {
     let Some((manifest, engine)) = setup() else { return };
     let eng = Arc::new(InferenceEngine::load(&manifest.dir, &engine, HwConfig::paper()).unwrap());
     let metrics = Arc::new(Metrics::new());
     let router = Router::start(
-        vec![Arc::clone(&eng), eng],
+        vec![Arc::clone(&eng) as Arc<dyn EngineReplica>, eng],
         BatchPolicy::default(),
         Arc::clone(&metrics),
     );
@@ -72,19 +88,82 @@ fn router_serves_concurrent_requests() {
         assert!(resp.label < 2);
         assert!(resp.accel_ms > 0.0);
     }
-    assert_eq!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 24);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 24);
+    router.shutdown();
+}
+
+#[test]
+fn functional_router_serves_concurrent_requests_across_replicas() {
+    // Artifact-free: always runs.  Two synthetic replicas of the same
+    // model must serve every request, agree with a direct reference
+    // prediction, and both appear in the per-replica ledgers.
+    let reference = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+    let m = reference.seq_len();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::start(functional_replicas(2), BatchPolicy::default(), Arc::clone(&metrics));
+
+    let mut expected = vec![];
+    let mut receivers = vec![];
+    for i in 0..24 {
+        let tokens: Vec<i32> = (0..m).map(|j| ((i * 11 + j * 5) % 60) as i32).collect();
+        expected.push(reference.predict(&tokens).unwrap().label);
+        let (tx, rx) = channel();
+        router.submit(tokens, tx);
+        receivers.push(rx);
+    }
+    for (rx, want) in receivers.into_iter().zip(expected) {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.label, want, "replica disagrees with reference model");
+        assert!(resp.replica < 2);
+        assert!(resp.accel_ms > 0.0);
+    }
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 24);
+    // both replicas served part of the load, and their virtual time adds up
+    let (r0, r1) = (metrics.replica(0), metrics.replica(1));
+    assert!(r0.requests.load(Ordering::Relaxed) > 0);
+    assert!(r1.requests.load(Ordering::Relaxed) > 0);
+    assert_eq!(
+        r0.requests.load(Ordering::Relaxed) + r1.requests.load(Ordering::Relaxed),
+        24
+    );
+    assert!(metrics.total_accel_ms() > 0.0);
     router.shutdown();
 }
 
 #[test]
 fn router_reports_errors_for_bad_requests() {
-    let Some((manifest, engine)) = setup() else { return };
-    let eng = Arc::new(InferenceEngine::load(&manifest.dir, &engine, HwConfig::paper()).unwrap());
     let metrics = Arc::new(Metrics::new());
-    let router = Router::start(vec![eng], BatchPolicy::default(), Arc::clone(&metrics));
+    let router = Router::start(functional_replicas(1), BatchPolicy::default(), Arc::clone(&metrics));
     let (tx, rx) = channel();
     router.submit(vec![1, 2, 3], tx); // wrong length
     let resp = rx.recv().unwrap();
     assert!(resp.error.is_some());
+    assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
     router.shutdown();
+}
+
+#[test]
+fn shutdown_drains_queued_requests() {
+    let metrics = Arc::new(Metrics::new());
+    let reference = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+    let m = reference.seq_len();
+    // huge batch + long deadline: requests sit queued until shutdown drains
+    let policy = BatchPolicy {
+        max_batch: 1000,
+        max_wait: std::time::Duration::from_secs(60),
+    };
+    let router = Router::start(functional_replicas(2), policy, Arc::clone(&metrics));
+    let mut receivers = vec![];
+    for i in 0..6 {
+        let (tx, rx) = channel();
+        router.submit(vec![(i % 60) as i32; m], tx);
+        receivers.push(rx);
+    }
+    router.shutdown();
+    for rx in receivers {
+        let resp = rx.recv().expect("drained response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 6);
 }
