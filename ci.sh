@@ -7,5 +7,6 @@ cd "$(dirname "$0")"
 
 cargo build --release
 cargo test -q
+cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 echo "ci.sh: all green"

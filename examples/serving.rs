@@ -21,7 +21,8 @@ fn main() -> Result<(), String> {
     let replicas = 3;
 
     let dir = Manifest::default_dir();
-    let engines: Vec<Arc<dyn EngineReplica>> = if dir.join("manifest.json").exists() {
+    let artifact_backed = dir.join("manifest.json").exists();
+    let engines: Vec<Arc<dyn EngineReplica>> = if artifact_backed {
         let engine = Engine::cpu()?;
         (0..replicas)
             .map(|_| {
@@ -39,19 +40,28 @@ fn main() -> Result<(), String> {
             .collect::<Result<_, _>>()?
     };
     let m = engines[0].seq_len();
+    let min_len = engines[0].min_seq_len();
     let metrics = Arc::new(Metrics::new());
-    let router = Arc::new(Router::start(
-        engines,
-        BatchPolicy::default(),
-        Arc::clone(&metrics),
-    ));
+    // The functional replicas serve any live length, so the demo sends
+    // variable-length traffic through length-bucketed dispatch; the
+    // fixed-shape PJRT artifact path stays at exactly m tokens.
+    let policy = if min_len < m {
+        BatchPolicy { bucket_width: (m / 4).max(1), ..BatchPolicy::default() }
+    } else {
+        BatchPolicy::default()
+    };
+    let router = Arc::new(Router::start(engines, policy, Arc::clone(&metrics)));
 
-    println!("open-loop Poisson workload: {n_requests} requests at {rate_hz} req/s, {replicas} replicas");
+    println!(
+        "open-loop Poisson workload: {n_requests} requests at {rate_hz} req/s, {replicas} replicas, \
+         lengths {min_len}..={m}"
+    );
     let mut rng = Rng::new(2024);
     let t0 = std::time::Instant::now();
     let mut receivers = Vec::with_capacity(n_requests);
     for _ in 0..n_requests {
-        let tokens: Vec<i32> = (0..m).map(|_| rng.below(63) as i32).collect();
+        let len = if min_len < m { min_len + rng.below((m - min_len + 1) as u64) as usize } else { m };
+        let tokens: Vec<i32> = (0..len).map(|_| rng.below(63) as i32).collect();
         let (tx, rx) = channel();
         router.submit(tokens, tx);
         receivers.push(rx);

@@ -30,7 +30,9 @@ fn main() {
     // typical data-dependent count observed in co-simulation (~12).
     let wc = simulate_encoder(&paper, &geo);
     let dd_cfg = HwConfig { worst_case_sqrt: false, ..paper };
-    let typical_iters = vec![12u32; geo.m];
+    // 2*m entries per layer: ln1 rows then ln2 rows (the functional
+    // model's sqrt_iters layout the simulator consumes)
+    let typical_iters = vec![12u32; 2 * geo.m];
     let mut dd = swifttron::sim::encoder::LatencyReport::default();
     let mut t_cycles = 0;
     for _ in 0..geo.layers {

@@ -1,20 +1,25 @@
-//! Serving-scaling sweep (EXPERIMENTS.md §Scaling): closed-loop request
-//! throughput of the parallel serving pipeline over replica count ×
-//! dispatch-group size, on the tiny preset's artifact-free functional
-//! replicas — plus the serial-vs-tiled `i_matmul` kernel comparison that
-//! motivates the `PAR_MIN_MACS` threshold.
+//! Serving-scaling sweep (EXPERIMENTS.md §Scaling, §SeqLen): closed-loop
+//! request throughput of the parallel serving pipeline over replica
+//! count × dispatch-group size and over request sequence length, on the
+//! tiny preset's artifact-free functional replicas — plus the
+//! serial-vs-tiled `i_matmul` kernel comparison that motivates the
+//! `PAR_MIN_MACS` threshold.
 //!
 //! Run: `cargo bench --bench serving_scaling`
 //!
-//! The acceptance claim this bench demonstrates: more than one replica
+//! Acceptance claims this bench demonstrates: more than one replica
 //! yields higher request throughput than the single-replica path on the
-//! same workload (printed as the speedup column; >1.0x from 2 replicas
-//! up on any multi-core host).
+//! same workload (speedup column; >1.0x from 2 replicas up on any
+//! multi-core host), and quarter-length requests yield higher
+//! requests/sec than full-length ones on the variable-length Workspace
+//! path (the sequence-length leg) — shaped compute, not asserted
+//! compute.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use swifttron::coordinator::{BatchPolicy, EngineReplica, FunctionalEngine, Metrics, Router};
+use swifttron::model::Geometry;
 use swifttron::quant::{i_matmul, i_matmul_tiled};
 use swifttron::sim::HwConfig;
 use swifttron::util::bench::{fmt_time, Bench, Table};
@@ -34,7 +39,8 @@ fn run_once(replicas: usize, max_batch: usize) -> (f64, Arc<Metrics>) {
         .collect();
     let m = engines[0].seq_len();
     let metrics = Arc::new(Metrics::new());
-    let policy = BatchPolicy { max_batch, max_wait: Duration::from_micros(500) };
+    let policy =
+        BatchPolicy { max_batch, max_wait: Duration::from_micros(500), bucket_width: 0 };
     let router = Router::start(engines, policy, Arc::clone(&metrics));
 
     let mut rng = Rng::new(1);
@@ -42,6 +48,45 @@ fn run_once(replicas: usize, max_batch: usize) -> (f64, Arc<Metrics>) {
     let receivers: Vec<_> = (0..REQUESTS)
         .map(|_| {
             let tokens: Vec<i32> = (0..m).map(|_| rng.below(60) as i32).collect();
+            let (tx, rx) = channel();
+            router.submit(tokens, tx);
+            rx
+        })
+        .collect();
+    for rx in receivers {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    router.shutdown();
+    (wall, metrics)
+}
+
+/// One closed-loop run of `REQUESTS` requests through the bucketed
+/// pipeline, each request's live length drawn from `sample_len`
+/// (EXPERIMENTS.md §SeqLen).
+fn run_len(
+    mut sample_len: impl FnMut(&mut Rng) -> usize,
+    replicas: usize,
+    max_batch: usize,
+    bucket_width: usize,
+) -> (f64, Arc<Metrics>) {
+    let engines: Vec<Arc<dyn EngineReplica>> = (0..replicas)
+        .map(|_| {
+            Arc::new(FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap())
+                as Arc<dyn EngineReplica>
+        })
+        .collect();
+    let metrics = Arc::new(Metrics::new());
+    let policy = BatchPolicy { max_batch, max_wait: Duration::from_micros(500), bucket_width };
+    let router = Router::start(engines, policy, Arc::clone(&metrics));
+
+    let mut rng = Rng::new(1);
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..REQUESTS)
+        .map(|_| {
+            let m_eff = sample_len(&mut rng);
+            let tokens: Vec<i32> = (0..m_eff).map(|_| rng.below(60) as i32).collect();
             let (tx, rx) = channel();
             router.submit(tokens, tx);
             rx
@@ -98,6 +143,55 @@ fn main() {
          into request throughput.  virtual ms/replica is simulated accelerator\n\
          time and stays constant per request — wall time drops, cycle cost\n\
          does not (the hardware claim the coordinator preserves)."
+    );
+
+    // --- sequence-length leg (EXPERIMENTS.md §SeqLen) ------------------
+    // Same pipeline, requests shaped to m_eff <= m: the Workspace path
+    // runs exactly m_eff rows, so wall time AND simulated accelerator
+    // time drop together — unlike the replica leg, where virtual time
+    // per request is invariant.
+    let m_full = Geometry::preset("tiny").unwrap().m;
+    let (replicas, max_batch) = (2usize, 8usize);
+    let bucket = (m_full / 4).max(1);
+    let lens = [m_full / 4, m_full / 2, m_full];
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new(); // (m_eff, rps, virt ms/req)
+    for &len in &lens {
+        let (wall, metrics) = run_len(|_| len, replicas, max_batch, bucket);
+        let rps = REQUESTS as f64 / wall;
+        let virt = metrics.total_accel_ms() / REQUESTS as f64;
+        rows.push((len, rps, virt));
+    }
+    let full_rps = rows.last().expect("full-length row").1;
+    let mut table = Table::new(&["m_eff", "req/s", "vs full len", "virtual ms/req"]);
+    for &(len, rps, virt) in &rows {
+        table.row(&[
+            len.to_string(),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / full_rps),
+            format!("{virt:.3}"),
+        ]);
+    }
+    table.print(&format!(
+        "sequence-length sweep ({replicas} replicas, max_batch {max_batch}, bucket width {bucket})"
+    ));
+    println!(
+        "\nshort requests run exactly m_eff rows on the resident Workspace\n\
+         (no padded compute): requests/sec rises and simulated accelerator\n\
+         ms/request falls as m_eff shrinks.  At m_eff = m the path is\n\
+         bit-exact with the fixed-geometry pipeline."
+    );
+
+    // mixed-length traffic: bucketed dispatch + the padding-waste metric
+    let (_, metrics) = run_len(
+        |rng| 1 + rng.below(m_full as u64) as usize,
+        replicas,
+        max_batch,
+        bucket,
+    );
+    println!(
+        "\nmixed-length traffic (uniform 1..={m_full}, bucket width {bucket}): \
+         padding waste {:.1}% of bucket-padded tokens",
+        100.0 * metrics.padding_waste()
     );
 
     // --- kernel leg: serial vs row-tiled parallel i_matmul -------------

@@ -6,65 +6,152 @@
 //! `max_batch` requests released together to the engine replicas, or
 //! whatever has queued when `max_wait` elapses — the standard
 //! size-or-deadline policy of serving systems.
+//!
+//! With variable-length requests (DESIGN.md §6) the batcher additionally
+//! buckets by sequence length: requests whose lengths round up to the
+//! same multiple of [`BatchPolicy::bucket_width`] share a dispatch
+//! group, so a group's per-request cost is uniform (no short request
+//! rides behind a full-length straggler at the group barrier) and the
+//! padding a bucket-configured accelerator would waste is bounded by the
+//! bucket width and reported by `coordinator::metrics`.  A width of 0
+//! disables bucketing — every request shares one queue, the seed
+//! behavior.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Sequence-length bucket width for length-bucketed dispatch: a
+    /// request of `len` tokens queues under the bucket boundary
+    /// `ceil(len / bucket_width) * bucket_width`, and a dispatch group
+    /// only ever contains one bucket.  0 disables bucketing.
+    pub bucket_width: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), bucket_width: 0 }
+    }
+}
+
+impl BatchPolicy {
+    /// The bucket boundary a request of `len` tokens pads up to
+    /// (identity when bucketing is disabled).
+    pub fn padded_len(&self, len: usize) -> usize {
+        if self.bucket_width == 0 || len == 0 {
+            len
+        } else {
+            len.div_ceil(self.bucket_width) * self.bucket_width
+        }
+    }
+
+    /// Queue key for a request of `len` tokens: the bucket boundary, or
+    /// the single shared queue when bucketing is off — width 0 must
+    /// never split lengths into separate queues (the seed behavior).
+    fn bucket_key(&self, len: usize) -> usize {
+        if self.bucket_width == 0 {
+            0
+        } else {
+            self.padded_len(len)
+        }
     }
 }
 
 #[derive(Debug)]
 pub struct Batcher<T> {
     policy: BatchPolicy,
-    queue: VecDeque<(T, Instant)>,
+    /// Per-bucket FIFO queues keyed by padded length.  Length-agnostic
+    /// callers ([`Batcher::push`]) share bucket 0.
+    buckets: BTreeMap<usize, VecDeque<(T, Instant)>>,
+    queued: usize,
 }
 
 impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, queue: VecDeque::new() }
+        Batcher { policy, buckets: BTreeMap::new(), queued: 0 }
     }
 
+    /// Enqueue into the single default bucket (length-agnostic callers).
     pub fn push(&mut self, item: T) {
-        self.queue.push_back((item, Instant::now()));
+        self.push_len(item, 0);
+    }
+
+    /// Enqueue a request of sequence length `len`; returns the padded
+    /// bucket boundary (== `len` when bucketing is disabled), which the
+    /// caller can feed to the padding-waste metric.  With bucketing off
+    /// every length shares one queue, so mixed-length groups still form
+    /// exactly as in the unbucketed seed.
+    pub fn push_len(&mut self, item: T, len: usize) -> usize {
+        let key = self.policy.bucket_key(len);
+        self.buckets.entry(key).or_default().push_back((item, Instant::now()));
+        self.queued += 1;
+        self.policy.padded_len(len)
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.queued
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.queued == 0
     }
 
-    /// Whether a batch should be released now.
+    /// The bucket whose front (oldest) request arrived earliest.
+    fn oldest_bucket(&self) -> Option<(usize, Instant)> {
+        self.buckets
+            .iter()
+            .filter_map(|(k, q)| q.front().map(|(_, t)| (*k, *t)))
+            .min_by_key(|&(_, t)| t)
+    }
+
+    /// Whether a batch should be released now: some bucket reached
+    /// `max_batch`, or the oldest queued request's deadline expired.
     pub fn ready(&self, now: Instant) -> bool {
-        if self.queue.len() >= self.policy.max_batch {
+        if self.buckets.values().any(|q| q.len() >= self.policy.max_batch) {
             return true;
         }
-        match self.queue.front() {
-            Some((_, t)) => now.duration_since(*t) >= self.policy.max_wait,
+        match self.oldest_bucket() {
+            Some((_, t)) => now.duration_since(t) >= self.policy.max_wait,
             None => false,
         }
     }
 
-    /// Pop up to `max_batch` items (oldest first).
+    /// Pop one dispatch group (oldest first within its bucket).  A
+    /// deadline-expired oldest request outranks any full bucket — a
+    /// minority-length bucket must never be starved past `max_wait` by
+    /// a hot bucket that keeps refilling to `max_batch`.  Otherwise a
+    /// full bucket goes first (ties broken by oldest front), then the
+    /// bucket holding the oldest request; other buckets stay queued for
+    /// their own group.
     pub fn take_batch(&mut self) -> Vec<T> {
-        let n = self.queue.len().min(self.policy.max_batch);
-        self.queue.drain(..n).map(|(t, _)| t).collect()
+        let now = Instant::now();
+        let key = match self.oldest_bucket() {
+            None => return Vec::new(),
+            Some((k, t)) if now.duration_since(t) >= self.policy.max_wait => k,
+            Some((oldest_key, _)) => self
+                .buckets
+                .iter()
+                .filter(|(_, q)| q.len() >= self.policy.max_batch)
+                .filter_map(|(k, q)| q.front().map(|(_, t)| (*k, *t)))
+                .min_by_key(|&(_, t)| t)
+                .map_or(oldest_key, |(k, _)| k),
+        };
+        let q = self.buckets.get_mut(&key).expect("bucket exists");
+        let n = q.len().min(self.policy.max_batch);
+        let out: Vec<T> = q.drain(..n).map(|(t, _)| t).collect();
+        if q.is_empty() {
+            self.buckets.remove(&key);
+        }
+        self.queued -= out.len();
+        out
     }
 
-    /// Deadline of the oldest item (for poll sleeping).
+    /// Deadline of the oldest queued request (for poll sleeping).
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queue.front().map(|(_, t)| *t + self.policy.max_wait)
+        self.oldest_bucket().map(|(_, t)| t + self.policy.max_wait)
     }
 }
 
@@ -72,9 +159,13 @@ impl<T> Batcher<T> {
 mod tests {
     use super::*;
 
+    fn unbucketed(max_batch: usize, max_wait: Duration) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait, bucket_width: 0 }
+    }
+
     #[test]
     fn releases_on_size() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(60) });
+        let mut b = Batcher::new(unbucketed(3, Duration::from_secs(60)));
         b.push(1);
         b.push(2);
         assert!(!b.ready(Instant::now()));
@@ -86,7 +177,7 @@ mod tests {
 
     #[test]
     fn releases_on_deadline() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::ZERO });
+        let mut b = Batcher::new(unbucketed(100, Duration::ZERO));
         b.push("x");
         assert!(b.ready(Instant::now()));
         assert_eq!(b.take_batch(), vec!["x"]);
@@ -94,7 +185,7 @@ mod tests {
 
     #[test]
     fn batch_is_fifo_and_bounded() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
+        let mut b = Batcher::new(unbucketed(2, Duration::ZERO));
         for i in 0..5 {
             b.push(i);
         }
@@ -108,6 +199,7 @@ mod tests {
         let b: Batcher<i32> = Batcher::new(BatchPolicy::default());
         assert!(!b.ready(Instant::now()));
         assert!(b.next_deadline().is_none());
+        assert!(b.take_batch().is_empty());
     }
 
     #[test]
@@ -115,7 +207,7 @@ mod tests {
         // below max_batch, the group is held until the oldest request's
         // deadline passes — then released even though the batch is short
         let wait = Duration::from_millis(15);
-        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: wait });
+        let mut b = Batcher::new(unbucketed(100, wait));
         b.push(1);
         b.push(2);
         let t0 = Instant::now();
@@ -131,7 +223,7 @@ mod tests {
     #[test]
     fn next_deadline_is_oldest_push_plus_max_wait() {
         let wait = Duration::from_millis(20);
-        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: wait });
+        let mut b = Batcher::new(unbucketed(100, wait));
         let before = Instant::now();
         b.push("old");
         let after = Instant::now();
@@ -143,5 +235,90 @@ mod tests {
         let first = b.take_batch();
         assert_eq!(first, vec!["old", "new"]);
         assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn padded_len_rounds_up_to_bucket_boundary() {
+        let p = BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, bucket_width: 8 };
+        assert_eq!(p.padded_len(1), 8);
+        assert_eq!(p.padded_len(8), 8);
+        assert_eq!(p.padded_len(9), 16);
+        assert_eq!(p.padded_len(0), 0);
+        let off = BatchPolicy { bucket_width: 0, ..p };
+        assert_eq!(off.padded_len(13), 13);
+    }
+
+    #[test]
+    fn width_zero_shares_one_queue_across_lengths() {
+        // bucketing off: mixed lengths form one dispatch group exactly
+        // as in the unbucketed seed, and no padding is charged
+        let mut b = Batcher::new(unbucketed(3, Duration::from_secs(60)));
+        assert_eq!(b.push_len("a", 3), 3);
+        assert_eq!(b.push_len("b", 5), 5);
+        assert!(!b.ready(Instant::now()));
+        assert_eq!(b.push_len("c", 7), 7);
+        assert!(b.ready(Instant::now()), "shared queue reached max_batch");
+        assert_eq!(b.take_batch(), vec!["a", "b", "c"], "cross-length FIFO preserved");
+    }
+
+    #[test]
+    fn buckets_group_compatible_lengths_only() {
+        // widths 8: lengths 3 and 5 share the 8-bucket, 12 goes to 16 —
+        // a dispatch group never mixes buckets
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(60), bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        assert_eq!(b.push_len("len3", 3), 8);
+        assert_eq!(b.push_len("len12", 12), 16);
+        assert!(!b.ready(Instant::now()), "no bucket full yet");
+        assert_eq!(b.push_len("len5", 5), 8);
+        assert!(b.ready(Instant::now()), "the 8-bucket is full");
+        assert_eq!(b.take_batch(), vec!["len3", "len5"], "FIFO within the full bucket");
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.take_batch(), vec!["len12"]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn expired_minority_bucket_is_not_starved_by_a_full_bucket() {
+        // max_wait ZERO: the lone long request's deadline has expired,
+        // so it dispatches ahead of the short bucket even though the
+        // short bucket is full — a hot bucket refilling to max_batch
+        // must not starve minority lengths past their deadline.
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::ZERO, bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.push_len("long", 20);
+        std::thread::sleep(Duration::from_millis(2));
+        b.push_len("short-a", 3);
+        b.push_len("short-b", 5); // the 8-bucket is now full
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec!["long"], "expired request outranks the full bucket");
+        assert_eq!(b.take_batch(), vec!["short-a", "short-b"]);
+    }
+
+    #[test]
+    fn full_bucket_dispatches_before_unexpired_older_request() {
+        // long deadline: nothing has expired, so the full bucket goes
+        // first even though another bucket holds an older request
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(60), bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.push_len("long", 20);
+        b.push_len("short-a", 3);
+        b.push_len("short-b", 5);
+        assert!(b.ready(Instant::now()), "a bucket is full");
+        assert_eq!(b.take_batch(), vec!["short-a", "short-b"]);
+        assert_eq!(b.take_batch(), vec!["long"]);
+    }
+
+    #[test]
+    fn deadline_releases_the_oldest_bucket_first() {
+        let p = BatchPolicy { max_batch: 100, max_wait: Duration::ZERO, bucket_width: 4 };
+        let mut b = Batcher::new(p);
+        b.push_len("first-long", 10);
+        std::thread::sleep(Duration::from_millis(2));
+        b.push_len("second-short", 2);
+        // nothing is full; the oldest request's bucket goes first even
+        // though its key (12) sorts after the short bucket's key (4)
+        assert_eq!(b.take_batch(), vec!["first-long"]);
+        assert_eq!(b.take_batch(), vec!["second-short"]);
     }
 }

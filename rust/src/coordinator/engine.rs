@@ -24,24 +24,89 @@
 //! Each prediction carries the cycle-accurate SwiftTron latency for the
 //! same computation; the pool aggregates it per replica as virtual time
 //! next to wall-clock throughput (`coordinator::metrics`).
+//!
+//! Sequence length is a *per-request* property (DESIGN.md §6): a request
+//! of `m_eff` tokens is validated against the replica's serveable range
+//! (`min_seq_len()..=seq_len()`) with a typed [`RequestError`], and
+//! variable-length backends run exactly `m_eff` rows — numerics over the
+//! resident Workspace arena, simulated cycles via
+//! `sim::simulate_encoder_m` at the live length.
 
 use crate::model::{Blob, Geometry, Manifest};
 use crate::quant::i_matmul;
 use crate::runtime::{Engine, Executable, Tensor};
-use crate::sim::functional::{encoder_forward, synthetic_consts, LayerWeights};
-use crate::sim::{simulate_encoder, HwConfig};
+use crate::sim::functional::{encoder_forward_ws, synthetic_consts, LayerWeights, Workspace};
+use crate::sim::{simulate_encoder_m, HwConfig};
 use crate::util::rng::Rng;
+use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Mutex;
+
+/// Typed request-validation error of the serving path (DESIGN.md §6).
+/// Replicas reject malformed requests with a variant instead of a
+/// formatted string, so callers can branch on the cause; the wire layer
+/// (`Response.error`) renders it via `Display`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// Token count outside the replica's serveable range.  Fixed-shape
+    /// backends (the PJRT artifact) have `min == max`; variable-length
+    /// backends accept `1..=max`.
+    BadLength { got: usize, min: usize, max: usize },
+    /// Token id outside the embedding table.
+    BadToken { token: i32, vocab: usize },
+    /// Backend failure (PJRT runtime, artifact load, replica panic).
+    Backend(String),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::BadLength { got, min, max } => {
+                write!(f, "request length {got} outside serveable range {min}..={max}")
+            }
+            RequestError::BadToken { token, vocab } => {
+                write!(f, "token {token} out of vocab {vocab}")
+            }
+            RequestError::Backend(e) => write!(f, "backend error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+impl From<String> for RequestError {
+    fn from(e: String) -> Self {
+        RequestError::Backend(e)
+    }
+}
+
+/// `?`-compatibility for the `Result<_, String>` CLI/example drivers.
+impl From<RequestError> for String {
+    fn from(e: RequestError) -> String {
+        e.to_string()
+    }
+}
 
 /// One engine replica: the unit of parallelism of the serving layer.
 /// A replica owns everything needed to serve a request end to end and
 /// is driven from one pool thread at a time.
 pub trait EngineReplica: Send + Sync {
-    /// Run one request end to end (numerics + simulated accelerator time).
-    fn predict(&self, tokens: &[i32]) -> Result<Prediction, String>;
+    /// Run one request end to end (numerics + simulated accelerator
+    /// time).  The token count is the request's live sequence length
+    /// `m_eff`; implementations validate it against their serveable
+    /// range and reject with [`RequestError::BadLength`] otherwise.
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError>;
 
-    /// Sequence length `m` this replica's model expects.
+    /// Maximum sequence length `m` this replica's model can serve (the
+    /// geometry the arena / artifact was sized to).
     fn seq_len(&self) -> usize;
+
+    /// Shortest request this replica accepts.  Defaults to
+    /// [`seq_len`](EngineReplica::seq_len) (fixed-shape backends);
+    /// variable-length backends override it to 1.
+    fn min_seq_len(&self) -> usize {
+        self.seq_len()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -81,7 +146,7 @@ impl InferenceEngine {
             .artifact_path("tiny", "f32")
             .ok()
             .and_then(|p| engine.load(&p).ok());
-        let sim = simulate_encoder(&hw, &geo);
+        let sim = simulate_encoder_m(&hw, &geo, geo.m, None);
         Ok(InferenceEngine {
             geo,
             exe_int8,
@@ -99,20 +164,22 @@ impl InferenceEngine {
         })
     }
 
-    /// Embedding + positional add + INT8 quantization (host side).
-    pub fn embed_quantize(&self, tokens: &[i32]) -> Result<Vec<i32>, String> {
+    /// Embedding + positional add + INT8 quantization (host side).  The
+    /// AOT artifact is compiled for exactly `geo.m` rows, so any other
+    /// token count is a typed [`RequestError::BadLength`].
+    pub fn embed_quantize(&self, tokens: &[i32]) -> Result<Vec<i32>, RequestError> {
         let (m, d) = (self.geo.m, self.geo.d);
         if tokens.len() != m {
-            return Err(format!("expected {m} tokens, got {}", tokens.len()));
+            return Err(RequestError::BadLength { got: tokens.len(), min: m, max: m });
         }
         let mut q = vec![0i32; m * d];
         for (i, &t) in tokens.iter().enumerate() {
-            let t = t as usize;
-            if t >= self.vocab {
-                return Err(format!("token {t} out of vocab {}", self.vocab));
+            let ti = t as usize;
+            if t < 0 || ti >= self.vocab {
+                return Err(RequestError::BadToken { token: t, vocab: self.vocab });
             }
             for j in 0..d {
-                let x = self.emb[t * d + j] as f64 + self.pos[i * d + j] as f64;
+                let x = self.emb[ti * d + j] as f64 + self.pos[i * d + j] as f64;
                 q[i * d + j] = (x / self.s_in).round().clamp(-128.0, 127.0) as i32;
             }
         }
@@ -125,10 +192,13 @@ impl InferenceEngine {
     }
 
     /// Full integer-path prediction via the PJRT artifact.
-    pub fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+    pub fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
         let (m, d) = (self.geo.m, self.geo.d);
         let q_x = self.embed_quantize(tokens)?;
-        let out = self.exe_int8.run_i32(&[Tensor::i32(&[m, d], q_x)], &[m, d])?;
+        let out = self
+            .exe_int8
+            .run_i32(&[Tensor::i32(&[m, d], q_x)], &[m, d])
+            .map_err(RequestError::Backend)?;
         let (label, logits) = self.head(out.as_i32().unwrap());
         Ok(Prediction {
             label,
@@ -170,7 +240,7 @@ impl InferenceEngine {
 }
 
 impl EngineReplica for InferenceEngine {
-    fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
         InferenceEngine::predict(self, tokens)
     }
 
@@ -213,6 +283,13 @@ fn integer_head(
 /// row-tiled parallel `i_matmul`; the tiny preset stays below it, so
 /// replica-level parallelism is the only concurrency in play there (no
 /// nested oversubscription in the scaling bench).
+///
+/// Unlike the fixed-shape artifact path, this replica serves any live
+/// sequence length `1..=geo.m` (DESIGN.md §6): the forward pass runs
+/// over a resident [`Workspace`] arena sized once to `geo.m` and sliced
+/// to the request, so short requests cost proportionally fewer host
+/// cycles *and* proportionally fewer simulated accelerator cycles
+/// (`sim::simulate_encoder_m` at the live `m_eff`).
 pub struct FunctionalEngine {
     pub geo: Geometry,
     layers: Vec<(LayerWeights, crate::model::LayerConsts)>,
@@ -222,7 +299,15 @@ pub struct FunctionalEngine {
     b_head: Vec<i32>,
     vocab: usize,
     hw: HwConfig,
-    accel_cycles: u64,
+    /// Resident scratch arena for the allocation-free forward pass.
+    /// Uncontended in the pool's one-thread-per-replica regime; the
+    /// Mutex only matters when one engine object backs several pool
+    /// slots (legal, e.g. the PJRT serving test's shared Arc).
+    ws: Mutex<Workspace>,
+    /// Memoized accelerator cycle totals per live length.  Worst-case
+    /// sqrt timing (the paper default) is data-independent, so one
+    /// simulation per distinct `m_eff` serves every request.
+    cycles_by_len: Mutex<BTreeMap<usize, u64>>,
 }
 
 impl FunctionalEngine {
@@ -243,7 +328,7 @@ impl FunctionalEngine {
         let w_head: Vec<i32> =
             (0..geo.d * 2).map(|_| rng.range_i64(-127, 127) as i32).collect();
         let b_head: Vec<i32> = (0..2).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
-        let sim = simulate_encoder(&hw, &geo);
+        let full = simulate_encoder_m(&hw, &geo, geo.m, None).total_cycles;
         Ok(FunctionalEngine {
             geo,
             layers,
@@ -253,41 +338,79 @@ impl FunctionalEngine {
             b_head,
             vocab,
             hw,
-            accel_cycles: sim.total_cycles,
+            ws: Mutex::new(Workspace::new(&geo)),
+            cycles_by_len: Mutex::new(BTreeMap::from([(geo.m, full)])),
         })
+    }
+
+    /// Simulated accelerator cycles for one request of live length
+    /// `m_eff` whose forward pass produced `sqrt_iters`.
+    fn accel_cycles(&self, m_eff: usize, sqrt_iters: &[u32]) -> u64 {
+        if self.hw.worst_case_sqrt {
+            // data-independent: memoize one simulation per length
+            *self
+                .cycles_by_len
+                .lock()
+                .unwrap()
+                .entry(m_eff)
+                .or_insert_with(|| {
+                    simulate_encoder_m(&self.hw, &self.geo, m_eff, None).total_cycles
+                })
+        } else {
+            simulate_encoder_m(&self.hw, &self.geo, m_eff, Some(sqrt_iters)).total_cycles
+        }
     }
 }
 
 impl EngineReplica for FunctionalEngine {
-    fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
-        let (m, d) = (self.geo.m, self.geo.d);
-        if tokens.len() != m {
-            return Err(format!("expected {m} tokens, got {}", tokens.len()));
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
+        let d = self.geo.d;
+        let m_eff = tokens.len();
+        if m_eff == 0 || m_eff > self.geo.m {
+            return Err(RequestError::BadLength { got: m_eff, min: 1, max: self.geo.m });
         }
         // integer embedding + positional add, saturated to INT8
-        let mut q_x = vec![0i32; m * d];
+        let mut q_x = vec![0i32; m_eff * d];
         for (i, &t) in tokens.iter().enumerate() {
-            let t = t as usize;
-            if t >= self.vocab {
-                return Err(format!("token {t} out of vocab {}", self.vocab));
+            let ti = t as usize;
+            if t < 0 || ti >= self.vocab {
+                return Err(RequestError::BadToken { token: t, vocab: self.vocab });
             }
             for j in 0..d {
                 q_x[i * d + j] =
-                    (self.emb[t * d + j] + self.pos[i * d + j]).clamp(-128, 127);
+                    (self.emb[ti * d + j] + self.pos[i * d + j]).clamp(-128, 127);
             }
         }
-        let (q_out, _) = encoder_forward(&q_x, &self.layers, &self.geo);
-        let (label, logits) = integer_head(&q_out, &self.w_head, &self.b_head, m, d);
+        let mut q_out = vec![0i32; m_eff * d];
+        let mut sqrt_iters = Vec::with_capacity(2 * m_eff * self.layers.len());
+        {
+            let mut ws = self.ws.lock().unwrap();
+            encoder_forward_ws(
+                &q_x,
+                &self.layers,
+                &self.geo,
+                m_eff,
+                &mut ws,
+                &mut q_out,
+                &mut sqrt_iters,
+            );
+        }
+        let (label, logits) = integer_head(&q_out, &self.w_head, &self.b_head, m_eff, d);
+        let cycles = self.accel_cycles(m_eff, &sqrt_iters);
         Ok(Prediction {
             label,
             logits,
-            accel_cycles: self.accel_cycles,
-            accel_ms: self.hw.cycles_to_ms(self.accel_cycles),
+            accel_cycles: cycles,
+            accel_ms: self.hw.cycles_to_ms(cycles),
         })
     }
 
     fn seq_len(&self) -> usize {
         self.geo.m
+    }
+
+    fn min_seq_len(&self) -> usize {
+        1
     }
 }
 
@@ -309,11 +432,50 @@ mod tests {
     }
 
     #[test]
-    fn functional_engine_rejects_bad_requests() {
+    fn functional_engine_rejects_bad_requests_with_typed_errors() {
         let e = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
-        assert!(EngineReplica::predict(&e, &[1, 2, 3]).is_err(), "wrong length");
-        let mut tokens: Vec<i32> = vec![0; e.seq_len()];
+        let max = e.seq_len();
+        assert_eq!(
+            EngineReplica::predict(&e, &[]).unwrap_err(),
+            RequestError::BadLength { got: 0, min: 1, max }
+        );
+        let too_long = vec![0i32; max + 1];
+        assert_eq!(
+            EngineReplica::predict(&e, &too_long).unwrap_err(),
+            RequestError::BadLength { got: max + 1, min: 1, max }
+        );
+        let mut tokens: Vec<i32> = vec![0; max];
         tokens[0] = 9999;
-        assert!(EngineReplica::predict(&e, &tokens).is_err(), "out of vocab");
+        assert_eq!(
+            EngineReplica::predict(&e, &tokens).unwrap_err(),
+            RequestError::BadToken { token: 9999, vocab: 64 }
+        );
+        tokens[0] = -1;
+        assert!(matches!(
+            EngineReplica::predict(&e, &tokens),
+            Err(RequestError::BadToken { token: -1, .. })
+        ));
+    }
+
+    #[test]
+    fn functional_engine_serves_variable_lengths() {
+        // Short requests are legal (min_seq_len == 1), cost fewer
+        // simulated cycles, and stay deterministic over the warm arena.
+        let e = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+        let m = e.seq_len();
+        assert_eq!(e.min_seq_len(), 1);
+        let full: Vec<i32> = (0..m).map(|i| (i % 60) as i32).collect();
+        let p_full = EngineReplica::predict(&e, &full).unwrap();
+        let p_short = EngineReplica::predict(&e, &full[..m / 4]).unwrap();
+        assert!(
+            p_short.accel_cycles < p_full.accel_cycles,
+            "quarter-length request must cost fewer simulated cycles \
+             ({} vs {})",
+            p_short.accel_cycles,
+            p_full.accel_cycles
+        );
+        let again = EngineReplica::predict(&e, &full[..m / 4]).unwrap();
+        assert_eq!(again.logits, p_short.logits);
+        assert_eq!(again.accel_cycles, p_short.accel_cycles);
     }
 }

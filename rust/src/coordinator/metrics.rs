@@ -41,6 +41,11 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub errors: AtomicU64,
+    /// live tokens submitted (the sum of request sequence lengths)
+    pub actual_tokens: AtomicU64,
+    /// tokens after rounding each request up to its dispatch bucket
+    /// boundary — what a bucket-configured accelerator would process
+    pub padded_tokens: AtomicU64,
     /// end-to-end wallclock latency (seconds)
     pub e2e_s: Mutex<Series>,
     /// time spent queued before dispatch (seconds)
@@ -83,6 +88,26 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Account one request's live token count and the padded count its
+    /// dispatch bucket charges (equal when bucketing is off).
+    pub fn record_tokens(&self, actual: usize, padded: usize) {
+        self.actual_tokens.fetch_add(actual as u64, Ordering::Relaxed);
+        self.padded_tokens.fetch_add(padded as u64, Ordering::Relaxed);
+    }
+
+    /// Fraction of bucket-padded tokens that carry no live data:
+    /// `(padded - actual) / padded`.  0 when bucketing is off or
+    /// nothing was submitted.
+    pub fn padding_waste(&self) -> f64 {
+        let actual = self.actual_tokens.load(Ordering::Relaxed);
+        let padded = self.padded_tokens.load(Ordering::Relaxed);
+        if padded == 0 {
+            0.0
+        } else {
+            (padded.saturating_sub(actual)) as f64 / padded as f64
+        }
+    }
+
     pub fn record_completion(&self, e2e: f64, queued: f64, exec: f64, accel_ms: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.e2e_s.lock().unwrap().push(e2e);
@@ -117,11 +142,14 @@ impl Metrics {
         let req = self.requests.load(Ordering::Relaxed);
         let err = self.errors.load(Ordering::Relaxed);
         let mut out = format!(
-            "requests={req} completed={done} errors={err}\n  e2e   {}\n  queue {}\n  exec  {}\n  accel {}",
+            "requests={req} completed={done} errors={err}\n  e2e   {}\n  queue {}\n  exec  {}\n  accel {}\n  tokens actual={} padded={} waste={:.1}%",
             self.e2e_s.lock().unwrap().summary("s"),
             self.queue_s.lock().unwrap().summary("s"),
             self.exec_s.lock().unwrap().summary("s"),
             self.accel_ms.lock().unwrap().summary("ms"),
+            self.actual_tokens.load(Ordering::Relaxed),
+            self.padded_tokens.load(Ordering::Relaxed),
+            100.0 * self.padding_waste(),
         );
         for (i, r) in self.replicas.lock().unwrap().iter().enumerate() {
             out.push_str(&format!(
@@ -172,6 +200,19 @@ mod tests {
         let report = m.report();
         assert!(report.contains("replica 0:"));
         assert!(report.contains("replica 1:"));
+    }
+
+    #[test]
+    fn padding_waste_tracks_bucket_overhead() {
+        let m = Metrics::new();
+        assert_eq!(m.padding_waste(), 0.0, "no traffic, no waste");
+        m.record_tokens(3, 8);
+        m.record_tokens(5, 8);
+        m.record_tokens(16, 16);
+        assert_eq!(m.actual_tokens.load(Ordering::Relaxed), 24);
+        assert_eq!(m.padded_tokens.load(Ordering::Relaxed), 32);
+        assert!((m.padding_waste() - 0.25).abs() < 1e-12);
+        assert!(m.report().contains("waste=25.0%"));
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatchPolicy};
-pub use engine::{EngineReplica, FunctionalEngine, InferenceEngine, Prediction};
+pub use engine::{EngineReplica, FunctionalEngine, InferenceEngine, Prediction, RequestError};
 pub use metrics::{Metrics, ReplicaStats};
 pub use pool::ReplicaPool;
 pub use router::{Request, Response, Router};

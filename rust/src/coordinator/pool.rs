@@ -19,7 +19,7 @@
 //! regime is `max_batch >= replicas`; DESIGN.md §2, EXPERIMENTS.md
 //! §Scaling).
 
-use super::engine::EngineReplica;
+use super::engine::{EngineReplica, RequestError};
 use super::metrics::Metrics;
 use super::router::{Request, Response};
 use crate::util::threadpool::ThreadPool;
@@ -99,7 +99,9 @@ fn serve_one(
     // thread: run_batch treats a panicked job as fatal, which would
     // kill the single dispatcher and hang every later submit.
     let result = catch_unwind(AssertUnwindSafe(|| engine.predict(&req.tokens)))
-        .unwrap_or_else(|_| Err("replica panicked while serving request".into()));
+        .unwrap_or_else(|_| {
+            Err(RequestError::Backend("replica panicked while serving request".into()))
+        });
     let resp = match result {
         Ok(pred) => {
             let exec = t0.elapsed().as_secs_f64();
@@ -125,7 +127,7 @@ fn serve_one(
                 label: usize::MAX,
                 accel_ms: 0.0,
                 e2e_s: req.submitted.elapsed().as_secs_f64(),
-                error: Some(e),
+                error: Some(e.to_string()),
             }
         }
     };
@@ -146,9 +148,9 @@ mod tests {
     }
 
     impl EngineReplica for SlowReplica {
-        fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+        fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
             if tokens.is_empty() {
-                return Err("empty".into());
+                return Err(RequestError::Backend("empty".into()));
             }
             std::thread::sleep(self.delay);
             Ok(Prediction {
@@ -235,7 +237,7 @@ mod tests {
     fn panicking_replica_costs_one_request_not_the_pool() {
         struct PanickyReplica;
         impl EngineReplica for PanickyReplica {
-            fn predict(&self, tokens: &[i32]) -> Result<Prediction, String> {
+            fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
                 if tokens[0] == 13 {
                     panic!("boom");
                 }

@@ -1,10 +1,12 @@
 //! Request router: the front half of the parallel serving pipeline
 //! (DESIGN.md §2).
 //!
-//! `submit` enqueues requests into the dynamic [`Batcher`]; a single
-//! dispatcher thread waits for the size-or-deadline policy to release a
-//! dispatch group and hands it to the [`ReplicaPool`], which fans the
-//! group out across N engine replicas on the `util` thread pool.  The
+//! `submit` enqueues requests into the dynamic [`Batcher`] (length-
+//! bucketed when `BatchPolicy::bucket_width` is set, DESIGN.md §6); a
+//! single dispatcher thread waits for the size-or-deadline policy to
+//! release a dispatch group and hands it to the [`ReplicaPool`], which
+//! fans the group out across N engine replicas on the `util` thread
+//! pool.  The
 //! dispatcher blocks until the group completes (the pool's join), then
 //! takes the next group — so groups are pipelined back to back while
 //! requests inside a group run concurrently.
@@ -49,6 +51,14 @@ pub struct Router {
     pub metrics: Arc<Metrics>,
     dispatcher: Option<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// guaranteed-serveable length range of the pool: the intersection
+    /// of the replicas' ranges (max of `min_seq_len`, min of
+    /// `seq_len`), because dispatch is length-blind round-robin and a
+    /// request outside the intersection may land on a replica that
+    /// rejects it.  Bounds the padding the token metric may charge;
+    /// requests outside it never pollute that metric.
+    min_seq_len: usize,
+    max_seq_len: usize,
 }
 
 impl Router {
@@ -65,22 +75,42 @@ impl Router {
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
+        let min_seq_len = replicas.iter().map(|r| r.min_seq_len()).max().unwrap_or(0);
+        let max_seq_len = replicas.iter().map(|r| r.seq_len()).min().unwrap_or(0);
         let pool = ReplicaPool::new(replicas, Arc::clone(&metrics));
         let sh = Arc::clone(&shared);
         let dispatcher = std::thread::Builder::new()
             .name("swifttron-dispatch".into())
             .spawn(move || dispatch_loop(sh, pool))
             .expect("spawn dispatcher");
-        Router { shared, metrics, dispatcher: Some(dispatcher), next_id: AtomicU64::new(0) }
+        Router {
+            shared,
+            metrics,
+            dispatcher: Some(dispatcher),
+            next_id: AtomicU64::new(0),
+            min_seq_len,
+            max_seq_len,
+        }
     }
 
-    /// Submit a request; the response arrives on `reply`.
+    /// Submit a request; the response arrives on `reply`.  The token
+    /// count is the request's live sequence length: the batcher groups
+    /// it with length-compatible requests (same padded bucket) and the
+    /// padding the bucket charges is accounted in the metrics.
     pub fn submit(&self, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         self.metrics.record_request();
-        {
+        let len = tokens.len();
+        let padded = {
             let mut b = self.shared.batcher.lock().unwrap();
-            b.push(Request { id, tokens, submitted: Instant::now(), reply });
+            b.push_len(Request { id, tokens, submitted: Instant::now(), reply }, len)
+        };
+        // Token accounting only for serveable requests, and never more
+        // padding than the largest geometry a replica actually runs —
+        // rejected requests and bucket boundaries beyond the array must
+        // not inflate the padding-waste metric.
+        if len >= self.min_seq_len.max(1) && len <= self.max_seq_len {
+            self.metrics.record_tokens(len, padded.min(self.max_seq_len));
         }
         self.shared.available.notify_one();
         id

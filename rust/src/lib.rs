@@ -21,11 +21,12 @@
 //!   functional replicas instead.
 //! * [`model`] — geometry, weights, and scale metadata shared by all of the
 //!   above (read from the artifact manifest).
-//! * [`coordinator`] — the parallel serving pipeline (DESIGN.md §2):
-//!   request router + dynamic batcher feeding dispatch groups to a pool of
-//!   N engine replicas on the in-repo thread pool, with per-replica
-//!   virtual-time (simulated cycle) accounting next to wall-clock
-//!   throughput.
+//! * [`coordinator`] — the parallel serving pipeline (DESIGN.md §2, §6):
+//!   request router + dynamic batcher (length-bucketed for
+//!   variable-length requests, padding waste metered) feeding dispatch
+//!   groups to a pool of N engine replicas on the in-repo thread pool,
+//!   with per-replica virtual-time (simulated cycle) accounting next to
+//!   wall-clock throughput.
 //! * [`util`] — in-repo substrates (RNG, JSON, CLI, thread pool, property
 //!   testing, stats): the offline crate set has no tokio/clap/serde/etc.
 

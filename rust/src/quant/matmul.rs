@@ -13,6 +13,11 @@
 //! [`i_matmul_par`] / [`i_matmul_bt_par`] auto-dispatch: contractions at
 //! or above [`PAR_MIN_MACS`] multiply-accumulates go parallel, smaller
 //! ones stay serial (thread spawn would dominate; EXPERIMENTS.md §Perf).
+//!
+//! All kernels are shape-agnostic in `m`: the variable-length forward
+//! pass (DESIGN.md §6) calls them with the request's live row count
+//! `m_eff`, never the padded geometry maximum, so both the work done
+//! and the parallel-dispatch decision scale with the actual sequence.
 
 use crate::util::threadpool::{default_parallelism, tile_ranges};
 

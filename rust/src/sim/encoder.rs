@@ -30,9 +30,9 @@ impl LatencyReport {
     }
 }
 
-/// Simulate one encoder layer starting at `start_cycle`; returns the
-/// completion cycle and accumulates into the trace + per-block map
-/// (split borrows of [`LatencyReport`]'s fields).
+/// Simulate one encoder layer at full length `geo.m`; see
+/// [`simulate_layer_m`] for the sequence-shaped variant and the
+/// `sqrt_iters` layout (2·m entries: ln1 rows then ln2 rows).
 pub fn simulate_layer(
     cfg: &HwConfig,
     geo: &Geometry,
@@ -41,12 +41,51 @@ pub fn simulate_layer(
     blocks: &mut BTreeMap<&'static str, u64>,
     sqrt_iters: Option<&[u32]>,
 ) -> u64 {
+    simulate_layer_m(cfg, geo, geo.m, start_cycle, trace, blocks, sqrt_iters)
+}
+
+/// Simulate one encoder layer over `m_eff <= geo.m` live rows starting
+/// at `start_cycle`; returns the completion cycle and accumulates into
+/// the trace + per-block map (split borrows of [`LatencyReport`]'s
+/// fields).  Every block's cycle count is computed from the actual
+/// `m_eff`, not the padded geometry maximum — latency and energy shape
+/// to the request, as the hardware loads the MAC array per sentence.
+///
+/// `sqrt_iters`, when given, must hold `2 * m_eff` data-dependent sqrt
+/// iteration counts in the functional model's layout: the ln1 rows
+/// first, then the ln2 rows ([`crate::sim::functional::LayerOutput`]).
+/// The two LayerNorm FSMs consume their own halves, so data-dependent
+/// timing differs between them when the data does.  `None` charges the
+/// worst case (paper footnote 3).
+pub fn simulate_layer_m(
+    cfg: &HwConfig,
+    geo: &Geometry,
+    m_eff: usize,
+    start_cycle: u64,
+    trace: &mut Trace,
+    blocks: &mut BTreeMap<&'static str, u64>,
+    sqrt_iters: Option<&[u32]>,
+) -> u64 {
     fn add(blocks: &mut BTreeMap<&'static str, u64>, k: &'static str, v: u64) {
         *blocks.entry(k).or_insert(0) += v;
     }
-    let (m, d, dff, dh) = (geo.m, geo.d, geo.d_ff, geo.dh());
-    let default_iters = vec![crate::quant::layernorm::ISQRT_MAX_ITERS; m];
-    let iters = sqrt_iters.unwrap_or(&default_iters);
+    let (d, dff, dh) = (geo.d, geo.d_ff, geo.dh());
+    let m = m_eff;
+    assert!(m >= 1 && m <= geo.m, "m_eff {m} outside 1..={}", geo.m);
+    // An empty slice makes `units::layernorm_cycles` fall back to the
+    // worst-case count per row — identical to the old padded default
+    // without allocating one.
+    let (ln1_iters, ln2_iters): (&[u32], &[u32]) = match sqrt_iters {
+        Some(it) => {
+            assert_eq!(
+                it.len(),
+                2 * m,
+                "sqrt_iters must hold 2*m_eff entries (ln1 rows then ln2 rows)"
+            );
+            it.split_at(m)
+        }
+        None => (&[], &[]),
+    };
 
     // ---- MHSA FSM ----
     let mhsa_done = {
@@ -78,13 +117,13 @@ pub fn simulate_layer(
         fsm.now
     };
 
-    // ---- LayerNorm FSM (post-MHSA) ----
+    // ---- LayerNorm FSM (post-MHSA): consumes the ln1 half ----
     let ln1_done = {
         let mut fsm = Fsm::new(FsmKind::LayerNorm, trace, 0);
         fsm.join(mhsa_done);
-        let ln = units::layernorm_cycles(cfg, m, d, iters) + units::requant_cycles(cfg);
+        let ln = units::layernorm_cycles(cfg, m, d, ln1_iters) + units::requant_cycles(cfg);
         fsm.run_block("layernorm1", ln);
-        add(blocks, "layernorm", units::layernorm_cycles(cfg, m, d, iters));
+        add(blocks, "layernorm", units::layernorm_cycles(cfg, m, d, ln1_iters));
         add(blocks, "requant", units::requant_cycles(cfg));
         fsm.now
     };
@@ -106,22 +145,55 @@ pub fn simulate_layer(
         fsm.now
     };
 
-    // ---- LayerNorm FSM (post-FFN) ----
+    // ---- LayerNorm FSM (post-FFN): consumes the ln2 half ----
     let mut fsm = Fsm::new(FsmKind::LayerNorm, trace, 0);
     fsm.join(ffn_done);
-    let ln = units::layernorm_cycles(cfg, m, d, iters) + units::requant_cycles(cfg);
+    let ln = units::layernorm_cycles(cfg, m, d, ln2_iters) + units::requant_cycles(cfg);
     fsm.run_block("layernorm2", ln);
-    add(blocks, "layernorm", units::layernorm_cycles(cfg, m, d, iters));
+    add(blocks, "layernorm", units::layernorm_cycles(cfg, m, d, ln2_iters));
     add(blocks, "requant", units::requant_cycles(cfg));
     fsm.now
 }
 
-/// Simulate the full encoder stack of `geo`.
+/// Simulate the full encoder stack of `geo` at full length `geo.m`
+/// (worst-case sqrt timing).
 pub fn simulate_encoder(cfg: &HwConfig, geo: &Geometry) -> LatencyReport {
+    simulate_encoder_m(cfg, geo, geo.m, None)
+}
+
+/// Simulate the full encoder stack over `m_eff <= geo.m` live rows.
+///
+/// `sqrt_iters`, when given, is the functional model's whole-stack
+/// layout ([`crate::sim::functional::encoder_forward_ws`]): `2 * m_eff`
+/// entries per layer (ln1 rows then ln2 rows), layer by layer — i.e.
+/// `2 * m_eff * geo.layers` total.  Identical to [`simulate_encoder`]
+/// when `m_eff == geo.m` and `sqrt_iters` is `None`.
+pub fn simulate_encoder_m(
+    cfg: &HwConfig,
+    geo: &Geometry,
+    m_eff: usize,
+    sqrt_iters: Option<&[u32]>,
+) -> LatencyReport {
+    if let Some(it) = sqrt_iters {
+        assert_eq!(
+            it.len(),
+            2 * m_eff * geo.layers,
+            "sqrt_iters must hold 2*m_eff entries per layer"
+        );
+    }
     let mut report = LatencyReport::default();
     let mut t = 0;
-    for _ in 0..geo.layers {
-        t = simulate_layer(cfg, geo, t, &mut report.trace, &mut report.per_block, None);
+    for l in 0..geo.layers {
+        let layer_iters = sqrt_iters.map(|it| &it[l * 2 * m_eff..(l + 1) * 2 * m_eff]);
+        t = simulate_layer_m(
+            cfg,
+            geo,
+            m_eff,
+            t,
+            &mut report.trace,
+            &mut report.per_block,
+            layer_iters,
+        );
     }
     report.total_cycles = t;
     report
@@ -182,5 +254,80 @@ mod tests {
         let paper = simulate_encoder(&HwConfig::paper(), &geo);
         let edge = simulate_encoder(&HwConfig::edge(), &geo);
         assert!(edge.total_cycles > paper.total_cycles);
+    }
+
+    #[test]
+    fn m_eff_matches_truncated_geometry() {
+        // simulate_encoder_m over a big geometry's live prefix must cost
+        // exactly what a geometry truncated to m = m_eff costs: the
+        // variable-length path never charges the padded maximum.
+        let cfg = HwConfig::paper();
+        let geo = Geometry::preset("roberta_base").unwrap();
+        for m_eff in [1usize, 17, geo.m / 4, geo.m / 2, geo.m] {
+            let var = simulate_encoder_m(&cfg, &geo, m_eff, None);
+            let trunc = simulate_encoder(&cfg, &Geometry { m: m_eff, ..geo });
+            assert_eq!(var.total_cycles, trunc.total_cycles, "m_eff={m_eff}");
+            assert_eq!(var.per_block, trunc.per_block, "m_eff={m_eff}");
+        }
+    }
+
+    #[test]
+    fn short_sequences_cost_fewer_cycles() {
+        // The sequence-shaped blocks (attention heads, softmax waves,
+        // LayerNorm rows) scale with m_eff; the central-array feed
+        // cycles are row-occupancy-independent below the array height,
+        // so the total shrinks strictly but sub-linearly.
+        let cfg = HwConfig::paper();
+        let geo = Geometry::preset("roberta_base").unwrap();
+        let quarter = simulate_encoder_m(&cfg, &geo, geo.m / 4, None);
+        let half = simulate_encoder_m(&cfg, &geo, geo.m / 2, None);
+        let full = simulate_encoder_m(&cfg, &geo, geo.m, None);
+        assert!(quarter.total_cycles < half.total_cycles);
+        assert!(half.total_cycles < full.total_cycles);
+        // the m-shaped blocks themselves scale near-linearly
+        assert!(quarter.per_block["softmax"] * 3 < full.per_block["softmax"]);
+        assert!(quarter.per_block["layernorm"] * 3 < full.per_block["layernorm"]);
+    }
+
+    /// Sum of Start→Done durations of one named block over the trace.
+    fn block_cycles(trace: &Trace, name: &str) -> u64 {
+        use crate::sim::Event;
+        let mut open = None;
+        let mut total = 0;
+        for e in &trace.events {
+            match e {
+                Event::Start { block, cycle, .. } if *block == name => open = Some(*cycle),
+                Event::Done { block, cycle, .. } if *block == name => {
+                    total += cycle - open.take().expect("Done without Start");
+                }
+                _ => {}
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn data_dependent_iters_drive_ln1_and_ln2_independently() {
+        // The functional model emits 2*m iteration counts per layer (ln1
+        // rows then ln2 rows); each LayerNorm FSM must consume its own
+        // half.  Swapping the halves must swap the two blocks' cycle
+        // counts — with the old shared-slice bug both moved together.
+        let cfg = HwConfig { worst_case_sqrt: false, ..HwConfig::paper() };
+        let geo = Geometry::preset("tiny").unwrap();
+        let m = geo.m;
+        let run = |ln1: u32, ln2: u32| {
+            let mut iters = vec![ln1; m];
+            iters.extend(std::iter::repeat(ln2).take(m));
+            let mut trace = Trace::default();
+            let mut blocks = BTreeMap::new();
+            simulate_layer_m(&cfg, &geo, m, 0, &mut trace, &mut blocks, Some(&iters));
+            (block_cycles(&trace, "layernorm1"), block_cycles(&trace, "layernorm2"))
+        };
+        let (a1, a2) = run(30, 2);
+        let (b1, b2) = run(2, 30);
+        assert!(a1 > a2, "ln1 charged its own (heavy) half: {a1} vs {a2}");
+        assert!(b2 > b1, "ln2 charged its own (heavy) half: {b2} vs {b1}");
+        assert_eq!(a1, b2, "swapping halves swaps the block costs");
+        assert_eq!(a2, b1, "swapping halves swaps the block costs");
     }
 }

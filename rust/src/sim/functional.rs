@@ -8,6 +8,18 @@
 //! Besides numerics it returns the data-dependent LayerNorm sqrt
 //! iteration counts, which the cycle-accurate simulator can consume when
 //! `worst_case_sqrt = false`.
+//!
+//! Two entry styles (DESIGN.md §6):
+//!
+//! * the allocating convenience wrappers [`layer_forward`] /
+//!   [`encoder_forward`], which build a fresh [`Workspace`] per call and
+//!   keep the pre-refactor signatures, and
+//! * the workspace path [`layer_forward_ws`] / [`encoder_forward_ws`],
+//!   which runs over a caller-owned [`Workspace`] arena and a live
+//!   sequence length `m_eff <= geo.m` — after warm-up it performs zero
+//!   heap allocations per call (asserted by
+//!   `rust/tests/workspace_alloc.rs`) and both paths are bit-exact with
+//!   each other for every input (`rust/tests/variable_length.rs`).
 
 use crate::model::{Geometry, LayerConsts};
 use crate::quant::{
@@ -103,118 +115,301 @@ pub struct LayerOutput {
     pub sqrt_iters: Vec<u32>,
 }
 
-fn requant_all(acc: &[i32], dy: quant::Dyadic) -> Vec<i32> {
-    acc.iter().map(|&v| requantize(v as i64, dy)).collect()
+/// Per-layer scratch buffers, all sized to the construction geometry's
+/// maximum sequence length and sliced down to the live `m_eff`.
+struct LayerScratch {
+    geo: Geometry,
+    /// INT32 accumulator for the central-array matmuls (QKV / output
+    /// projection / FFN-out — their lifetimes never overlap).
+    acc: Vec<i32>,
+    q8: Vec<i32>,
+    k8: Vec<i32>,
+    v8: Vec<i32>,
+    ctx_acc: Vec<i32>,
+    ctx8: Vec<i32>,
+    x2: Vec<i32>,
+    /// LayerNorm output rows (ln1 is consumed into `x2` before ln2 runs).
+    ln: Vec<i32>,
+    scores: Vec<i32>,
+    probs: Vec<i32>,
+    row64: Vec<i64>,
+    qh: Vec<i32>,
+    kh: Vec<i32>,
+    vh: Vec<i32>,
+    ctx_h: Vec<i32>,
+    /// Residual rows in i64 (res1 is consumed before res2 is built).
+    res: Vec<i64>,
+    g64: Vec<i64>,
+    b64: Vec<i64>,
+    hff: Vec<i32>,
+    h8: Vec<i32>,
 }
 
-/// Extract head `h` (columns h*dh..(h+1)*dh) into a contiguous matrix.
-fn head_cols(x: &[i32], m: usize, d: usize, h: usize, dh: usize) -> Vec<i32> {
-    let mut out = vec![0i32; m * dh];
-    for r in 0..m {
-        out[r * dh..(r + 1) * dh].copy_from_slice(&x[r * d + h * dh..r * d + (h + 1) * dh]);
+/// Reusable scratch arena for the allocation-free forward pass
+/// (DESIGN.md §6).  Every intermediate of [`layer_forward_ws`] and the
+/// ping-pong activations of [`encoder_forward_ws`] live here, sized once
+/// to `geo` (the maximum sequence length) and sliced per request to the
+/// live `m_eff` — a replica keeps one resident and the hot path never
+/// touches the allocator.
+pub struct Workspace {
+    s: LayerScratch,
+    act0: Vec<i32>,
+    act1: Vec<i32>,
+}
+
+impl Workspace {
+    /// Build an arena for geometry `geo`; serves any `m_eff` in
+    /// `1..=geo.m` for layers matching `geo`'s d / d_ff / heads.
+    pub fn new(geo: &Geometry) -> Workspace {
+        let (m, d, dff, dh) = (geo.m, geo.d, geo.d_ff, geo.dh());
+        Workspace {
+            s: LayerScratch {
+                geo: *geo,
+                acc: vec![0i32; m * d],
+                q8: vec![0i32; m * d],
+                k8: vec![0i32; m * d],
+                v8: vec![0i32; m * d],
+                ctx_acc: vec![0i32; m * d],
+                ctx8: vec![0i32; m * d],
+                x2: vec![0i32; m * d],
+                ln: vec![0i32; m * d],
+                scores: vec![0i32; m * m],
+                probs: vec![0i32; m * m],
+                row64: vec![0i64; m],
+                qh: vec![0i32; m * dh],
+                kh: vec![0i32; m * dh],
+                vh: vec![0i32; m * dh],
+                ctx_h: vec![0i32; m * dh],
+                res: vec![0i64; m * d],
+                g64: vec![0i64; d],
+                b64: vec![0i64; d],
+                hff: vec![0i32; m * dff],
+                h8: vec![0i32; m * dff],
+            },
+            act0: vec![0i32; m * d],
+            act1: vec![0i32; m * d],
+        }
     }
-    out
+
+    /// Maximum live sequence length this arena can serve.
+    pub fn max_seq_len(&self) -> usize {
+        self.s.geo.m
+    }
 }
 
-/// Bit-exact integer encoder layer (paper Figs. 5, 8-15).
-pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geometry) -> LayerOutput {
-    let (m, d, dff, dh, heads) = (geo.m, geo.d, geo.d_ff, geo.dh(), geo.heads);
-    assert_eq!(q_x.len(), m * d);
+/// INT32 -> INT8 requantization of a whole buffer into `out`.
+fn requant_into(acc: &[i32], dy: Dyadic, out: &mut [i32]) {
+    for (o, &v) in out.iter_mut().zip(acc) {
+        *o = requantize(v as i64, dy);
+    }
+}
+
+/// Extract head `h` (columns h*dh..(h+1)*dh) into `out` (m x dh).
+fn gather_head(x: &[i32], m: usize, d: usize, h: usize, dh: usize, out: &mut [i32]) {
+    for r in 0..m {
+        out[r * dh..(r + 1) * dh]
+            .copy_from_slice(&x[r * d + h * dh..r * d + (h + 1) * dh]);
+    }
+}
+
+/// Bit-exact integer encoder layer (paper Figs. 5, 8-15) over the
+/// scratch arena.  `m_eff` rows are live; every loop and kernel runs on
+/// exactly those rows, so both numerics and cost shape to the request.
+#[allow(clippy::too_many_arguments)]
+fn layer_forward_scratch(
+    q_x: &[i32],
+    w: &LayerWeights,
+    c: &LayerConsts,
+    geo: &Geometry,
+    m_eff: usize,
+    s: &mut LayerScratch,
+    q_out: &mut [i32],
+    sqrt_iters: &mut Vec<u32>,
+) {
+    let (d, dff, dh, heads) = (geo.d, geo.d_ff, geo.dh(), geo.heads);
+    let m = m_eff;
+    assert!(
+        m >= 1 && m <= s.geo.m && d == s.geo.d && dff == s.geo.d_ff && heads == s.geo.heads,
+        "m_eff {m} / geometry incompatible with workspace built for {:?}",
+        s.geo
+    );
+    assert_eq!(q_x.len(), m * d, "q_x shape");
+    assert_eq!(q_out.len(), m * d, "q_out shape");
+
+    let LayerScratch {
+        acc, q8, k8, v8, ctx_acc, ctx8, x2, ln, scores, probs, row64,
+        qh, kh, vh, ctx_h, res, g64, b64, hff, h8, ..
+    } = s;
+    let acc = &mut acc[..m * d];
+    let q8 = &mut q8[..m * d];
+    let k8 = &mut k8[..m * d];
+    let v8 = &mut v8[..m * d];
+    let ctx_acc = &mut ctx_acc[..m * d];
+    let ctx8 = &mut ctx8[..m * d];
+    let x2 = &mut x2[..m * d];
+    let ln = &mut ln[..m * d];
+    let scores = &mut scores[..m * m];
+    let probs = &mut probs[..m * m];
+    let row64 = &mut row64[..m];
+    let qh = &mut qh[..m * dh];
+    let kh = &mut kh[..m * dh];
+    let vh = &mut vh[..m * dh];
+    let ctx_h = &mut ctx_h[..m * dh];
+    let res = &mut res[..m * d];
+    let g64 = &mut g64[..d];
+    let b64 = &mut b64[..d];
+    let hff = &mut hff[..m * dff];
+    let h8 = &mut h8[..m * dff];
 
     // --- Q/K/V projections + Requantization ---
-    let mut acc = vec![0i32; m * d];
-    i_matmul_par(q_x, &w.wq, Some(&w.bq), m, d, d, &mut acc);
-    let q8 = requant_all(&acc, c.dy_q);
-    i_matmul_par(q_x, &w.wk, Some(&w.bk), m, d, d, &mut acc);
-    let k8 = requant_all(&acc, c.dy_k);
-    i_matmul_par(q_x, &w.wv, Some(&w.bv), m, d, d, &mut acc);
-    let v8 = requant_all(&acc, c.dy_v);
+    i_matmul_par(q_x, &w.wq, Some(&w.bq), m, d, d, acc);
+    requant_into(acc, c.dy_q, q8);
+    i_matmul_par(q_x, &w.wk, Some(&w.bk), m, d, d, acc);
+    requant_into(acc, c.dy_k, k8);
+    i_matmul_par(q_x, &w.wv, Some(&w.bv), m, d, d, acc);
+    requant_into(acc, c.dy_v, v8);
 
     // --- Attention per head: MatMul -> Scale -> Softmax -> Req -> MatMul ---
-    let mut ctx_acc = vec![0i32; m * d];
-    let mut scores = vec![0i32; m * m];
-    let mut probs = vec![0i32; m * m];
+    // (heads * dh may undershoot d; the tail columns must stay zero, as
+    // the freshly allocated accumulator of the wrapper path guarantees)
+    ctx_acc.fill(0);
     for h in 0..heads {
-        let qh = head_cols(&q8, m, d, h, dh);
-        let kh = head_cols(&k8, m, d, h, dh);
-        let vh = head_cols(&v8, m, d, h, dh);
-        i_matmul_bt_par(&qh, &kh, m, dh, m, &mut scores);
+        gather_head(q8, m, d, h, dh, qh);
+        gather_head(k8, m, d, h, dh, kh);
+        gather_head(v8, m, d, h, dh, vh);
+        i_matmul_bt_par(qh, kh, m, dh, m, scores);
         // Scale block + Softmax rows
-        let mut row64 = vec![0i64; m];
         for r in 0..m {
-            for (dst, &s) in row64.iter_mut().zip(&scores[r * m..(r + 1) * m]) {
-                *dst = rescale(s as i64, c.dy_scale);
+            for (dst, &sv) in row64.iter_mut().zip(&scores[r * m..(r + 1) * m]) {
+                *dst = rescale(sv as i64, c.dy_scale);
             }
-            i_softmax(&row64, &c.softmax, &mut probs[r * m..(r + 1) * m]);
+            i_softmax(row64, &c.softmax, &mut probs[r * m..(r + 1) * m]);
         }
         // P.V into the head's slice of the context accumulator
-        let mut ctx_h = vec![0i32; m * dh];
-        i_matmul_par(&probs, &vh, None, m, m, dh, &mut ctx_h);
+        i_matmul_par(probs, vh, None, m, m, dh, ctx_h);
         for r in 0..m {
             ctx_acc[r * d + h * dh..r * d + (h + 1) * dh]
                 .copy_from_slice(&ctx_h[r * dh..(r + 1) * dh]);
         }
     }
-    let ctx8 = requant_all(&ctx_acc, c.dy_ctx);
+    requant_into(ctx_acc, c.dy_ctx, ctx8);
 
     // --- output projection + residual align + LayerNorm 1 ---
-    let mut attn_acc = vec![0i32; m * d];
-    i_matmul_par(&ctx8, &w.wo, Some(&w.bo), m, d, d, &mut attn_acc);
-    let res1: Vec<i64> = q_x
-        .iter()
-        .zip(&attn_acc)
-        .map(|(&x, &a)| x as i64 + rescale(a as i64, c.dy_res1) as i32 as i64)
-        .collect();
-    let g1: Vec<i64> = w.gamma1.iter().map(|&v| v as i64).collect();
-    let b1v: Vec<i64> = w.beta1.iter().map(|&v| v as i64).collect();
-    let mut ln1 = vec![0i32; m * d];
-    let mut sqrt_iters = Vec::with_capacity(2 * m);
+    i_matmul_par(ctx8, &w.wo, Some(&w.bo), m, d, d, acc);
+    for ((dst, &xv), &av) in res.iter_mut().zip(q_x).zip(acc.iter()) {
+        *dst = xv as i64 + rescale(av as i64, c.dy_res1) as i32 as i64;
+    }
+    for (g, &v) in g64.iter_mut().zip(&w.gamma1) {
+        *g = v as i64;
+    }
+    for (b, &v) in b64.iter_mut().zip(&w.beta1) {
+        *b = v as i64;
+    }
     for r in 0..m {
-        let it = i_layernorm(&res1[r * d..(r + 1) * d], &g1, &b1v, &c.ln1, &mut ln1[r * d..(r + 1) * d]);
+        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln1, &mut ln[r * d..(r + 1) * d]);
         sqrt_iters.push(it);
     }
-    let x2 = requant_all(&ln1, c.dy_ln1);
+    requant_into(ln, c.dy_ln1, x2);
 
     // --- FFN: MatMul -> GELU -> Req -> MatMul ---
-    let mut h_acc = vec![0i32; m * dff];
-    i_matmul_par(&x2, &w.w1, Some(&w.b1), m, d, dff, &mut h_acc);
-    let h8: Vec<i32> = h_acc
-        .iter()
-        .map(|&v| requantize_signed(quant::i_gelu(v as i64, &c.gelu), c.dy_gelu, -1))
-        .collect();
-    let mut ffn_acc = vec![0i32; m * d];
-    i_matmul_par(&h8, &w.w2, Some(&w.b2), m, dff, d, &mut ffn_acc);
+    i_matmul_par(x2, &w.w1, Some(&w.b1), m, d, dff, hff);
+    for (o, &v) in h8.iter_mut().zip(hff.iter()) {
+        *o = requantize_signed(quant::i_gelu(v as i64, &c.gelu), c.dy_gelu, -1);
+    }
+    i_matmul_par(h8, &w.w2, Some(&w.b2), m, dff, d, acc);
 
     // --- residual align + LayerNorm 2 + output requant ---
-    let res2: Vec<i64> = x2
-        .iter()
-        .zip(&ffn_acc)
-        .map(|(&x, &a)| x as i64 + rescale(a as i64, c.dy_res2) as i32 as i64)
-        .collect();
-    let g2: Vec<i64> = w.gamma2.iter().map(|&v| v as i64).collect();
-    let b2v: Vec<i64> = w.beta2.iter().map(|&v| v as i64).collect();
-    let mut ln2 = vec![0i32; m * d];
+    for ((dst, &xv), &av) in res.iter_mut().zip(x2.iter()).zip(acc.iter()) {
+        *dst = xv as i64 + rescale(av as i64, c.dy_res2) as i32 as i64;
+    }
+    for (g, &v) in g64.iter_mut().zip(&w.gamma2) {
+        *g = v as i64;
+    }
+    for (b, &v) in b64.iter_mut().zip(&w.beta2) {
+        *b = v as i64;
+    }
     for r in 0..m {
-        let it = i_layernorm(&res2[r * d..(r + 1) * d], &g2, &b2v, &c.ln2, &mut ln2[r * d..(r + 1) * d]);
+        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln2, &mut ln[r * d..(r + 1) * d]);
         sqrt_iters.push(it);
     }
-    LayerOutput { q_out: requant_all(&ln2, c.dy_ln2), sqrt_iters }
+    requant_into(ln, c.dy_ln2, q_out);
 }
 
-/// Full integer encoder stack.
+/// Workspace-based bit-exact encoder layer: runs `m_eff` live rows over
+/// the resident arena, writing the INT8-coded output into `q_out`
+/// (`m_eff * geo.d`) and appending `2 * m_eff` sqrt iteration counts
+/// (ln1 rows then ln2 rows) to `sqrt_iters`.  Allocation-free once
+/// `sqrt_iters` has capacity (DESIGN.md §6).
+#[allow(clippy::too_many_arguments)]
+pub fn layer_forward_ws(
+    q_x: &[i32],
+    w: &LayerWeights,
+    c: &LayerConsts,
+    geo: &Geometry,
+    m_eff: usize,
+    ws: &mut Workspace,
+    q_out: &mut [i32],
+    sqrt_iters: &mut Vec<u32>,
+) {
+    layer_forward_scratch(q_x, w, c, geo, m_eff, &mut ws.s, q_out, sqrt_iters);
+}
+
+/// Bit-exact integer encoder layer (paper Figs. 5, 8-15): allocating
+/// convenience wrapper over [`layer_forward_ws`] at full length
+/// `geo.m`; identical output by construction.
+pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geometry) -> LayerOutput {
+    let mut ws = Workspace::new(geo);
+    let mut q_out = vec![0i32; geo.m * geo.d];
+    let mut sqrt_iters = Vec::with_capacity(2 * geo.m);
+    layer_forward_scratch(q_x, w, c, geo, geo.m, &mut ws.s, &mut q_out, &mut sqrt_iters);
+    LayerOutput { q_out, sqrt_iters }
+}
+
+/// Workspace-based full encoder stack at live length `m_eff`: output
+/// into `out` (`m_eff * geo.d`), `2 * m_eff` sqrt iteration counts per
+/// layer appended to `sqrt_iters` (ln1 rows then ln2 rows, layer by
+/// layer — the layout `sim::simulate_encoder_m` consumes).
+#[allow(clippy::too_many_arguments)]
+pub fn encoder_forward_ws(
+    q_x: &[i32],
+    layers: &[(LayerWeights, LayerConsts)],
+    geo: &Geometry,
+    m_eff: usize,
+    ws: &mut Workspace,
+    out: &mut [i32],
+    sqrt_iters: &mut Vec<u32>,
+) {
+    let n = m_eff * geo.d;
+    assert_eq!(q_x.len(), n, "q_x shape");
+    assert_eq!(out.len(), n, "out shape");
+    let Workspace { s, act0, act1 } = ws;
+    if layers.is_empty() {
+        out.copy_from_slice(q_x);
+        return;
+    }
+    let mut cur: &mut [i32] = &mut act0[..n];
+    let mut nxt: &mut [i32] = &mut act1[..n];
+    let (w0, c0) = &layers[0];
+    layer_forward_scratch(q_x, w0, c0, geo, m_eff, s, cur, sqrt_iters);
+    for (w, c) in &layers[1..] {
+        layer_forward_scratch(cur, w, c, geo, m_eff, s, nxt, sqrt_iters);
+        std::mem::swap(&mut cur, &mut nxt);
+    }
+    out.copy_from_slice(cur);
+}
+
+/// Full integer encoder stack: allocating convenience wrapper over
+/// [`encoder_forward_ws`] at full length `geo.m`.
 pub fn encoder_forward(
     q_x: &[i32],
     layers: &[(LayerWeights, LayerConsts)],
     geo: &Geometry,
 ) -> (Vec<i32>, Vec<u32>) {
-    let mut h = q_x.to_vec();
-    let mut iters = Vec::new();
-    for (w, c) in layers {
-        let out = layer_forward(&h, w, c, geo);
-        h = out.q_out;
-        iters.extend(out.sqrt_iters);
-    }
-    (h, iters)
+    let mut ws = Workspace::new(geo);
+    let mut out = vec![0i32; geo.m * geo.d];
+    let mut iters = Vec::with_capacity(2 * geo.m * layers.len());
+    encoder_forward_ws(q_x, layers, geo, geo.m, &mut ws, &mut out, &mut iters);
+    (out, iters)
 }
 
 #[cfg(test)]
@@ -288,5 +483,90 @@ mod tests {
         let (out, iters) = encoder_forward(&x, &layers, &geo);
         assert_eq!(out.len(), geo.m * geo.d);
         assert_eq!(iters.len(), 2 * 2 * geo.m);
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_workspace() {
+        // A warm arena must not leak state between requests: running the
+        // same inputs through one reused workspace, interleaved with
+        // other shapes, stays bit-identical to fresh evaluations.
+        let geo = tiny_geo();
+        let mut rng = Rng::new(6);
+        let w = weights(&mut rng, &geo);
+        let c = consts(&geo);
+        let x_full = rand_w(&mut rng, geo.m * geo.d, 127);
+        let x_short = rand_w(&mut rng, 3 * geo.d, 127);
+
+        let mut ws = Workspace::new(&geo);
+        let mut out = vec![0i32; geo.m * geo.d];
+        let mut iters = Vec::new();
+        for _ in 0..3 {
+            iters.clear();
+            layer_forward_ws(&x_full, &w, &c, &geo, geo.m, &mut ws, &mut out, &mut iters);
+            let fresh = layer_forward(&x_full, &w, &c, &geo);
+            assert_eq!(out, fresh.q_out);
+            assert_eq!(iters, fresh.sqrt_iters);
+            // pollute the arena with a different live length
+            iters.clear();
+            layer_forward_ws(&x_short, &w, &c, &geo, 3, &mut ws, &mut out[..3 * geo.d], &mut iters);
+        }
+    }
+
+    #[test]
+    fn short_m_eff_matches_truncated_geometry() {
+        // m_eff < geo.m on the big arena == full-length run on a
+        // geometry truncated to m = m_eff (weights are m-independent).
+        let geo = tiny_geo();
+        let mut rng = Rng::new(7);
+        let w = weights(&mut rng, &geo);
+        let c = consts(&geo);
+        for m_eff in [1usize, 3, 5, geo.m] {
+            let x = rand_w(&mut rng, m_eff * geo.d, 127);
+            let mut ws = Workspace::new(&geo);
+            let mut out = vec![0i32; m_eff * geo.d];
+            let mut iters = Vec::new();
+            layer_forward_ws(&x, &w, &c, &geo, m_eff, &mut ws, &mut out, &mut iters);
+
+            let trunc = Geometry { m: m_eff, ..geo };
+            let want = layer_forward(&x, &w, &c, &trunc);
+            assert_eq!(out, want.q_out, "m_eff={m_eff}");
+            assert_eq!(iters, want.sqrt_iters, "m_eff={m_eff}");
+        }
+    }
+
+    #[test]
+    fn encoder_ws_matches_wrapper_and_truncated_geometry() {
+        let geo = Geometry::new(16, 2, 8, 32, 2);
+        let mut rng = Rng::new(8);
+        let layers: Vec<_> = (0..2)
+            .map(|_| (weights(&mut rng, &geo), consts(&geo)))
+            .collect();
+        let x = rand_w(&mut rng, geo.m * geo.d, 127);
+
+        let mut ws = Workspace::new(&geo);
+        let mut out = vec![0i32; geo.m * geo.d];
+        let mut iters = Vec::new();
+        encoder_forward_ws(&x, &layers, &geo, geo.m, &mut ws, &mut out, &mut iters);
+        let (want_out, want_iters) = encoder_forward(&x, &layers, &geo);
+        assert_eq!(out, want_out);
+        assert_eq!(iters, want_iters);
+
+        // short request over the same (warm) arena
+        let m_eff = 5;
+        let xs = rand_w(&mut rng, m_eff * geo.d, 127);
+        let mut out_s = vec![0i32; m_eff * geo.d];
+        iters.clear();
+        encoder_forward_ws(&xs, &layers, &geo, m_eff, &mut ws, &mut out_s, &mut iters);
+        let trunc = Geometry { m: m_eff, ..geo };
+        let (want_s, want_iters_s) = {
+            let mut ws2 = Workspace::new(&trunc);
+            let mut o = vec![0i32; m_eff * trunc.d];
+            let mut it = Vec::new();
+            encoder_forward_ws(&xs, &layers, &trunc, m_eff, &mut ws2, &mut o, &mut it);
+            (o, it)
+        };
+        assert_eq!(out_s, want_s);
+        assert_eq!(iters, want_iters_s);
+        assert_eq!(iters.len(), 2 * 2 * m_eff);
     }
 }

@@ -28,4 +28,6 @@ pub mod units;
 
 pub use config::HwConfig;
 pub use control::{Event, FsmKind, Trace};
-pub use encoder::{simulate_encoder, simulate_layer, LatencyReport};
+pub use encoder::{
+    simulate_encoder, simulate_encoder_m, simulate_layer, simulate_layer_m, LatencyReport,
+};

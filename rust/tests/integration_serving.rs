@@ -133,13 +133,22 @@ fn functional_router_serves_concurrent_requests_across_replicas() {
 
 #[test]
 fn router_reports_errors_for_bad_requests() {
+    // short requests are now legal (variable-length serving), so the
+    // malformed cases are an empty request and an out-of-vocab token
+    let reference = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
     let metrics = Arc::new(Metrics::new());
     let router = Router::start(functional_replicas(1), BatchPolicy::default(), Arc::clone(&metrics));
     let (tx, rx) = channel();
-    router.submit(vec![1, 2, 3], tx); // wrong length
+    router.submit(vec![], tx); // zero-length request
     let resp = rx.recv().unwrap();
-    assert!(resp.error.is_some());
-    assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+    assert!(resp.error.as_deref().unwrap_or("").contains("length"), "{:?}", resp.error);
+    let (tx, rx) = channel();
+    let mut tokens = vec![0i32; reference.seq_len()];
+    tokens[0] = 9999; // out of vocab
+    router.submit(tokens, tx);
+    let resp = rx.recv().unwrap();
+    assert!(resp.error.as_deref().unwrap_or("").contains("vocab"), "{:?}", resp.error);
+    assert_eq!(metrics.errors.load(Ordering::Relaxed), 2);
     router.shutdown();
 }
 
@@ -152,6 +161,7 @@ fn shutdown_drains_queued_requests() {
     let policy = BatchPolicy {
         max_batch: 1000,
         max_wait: std::time::Duration::from_secs(60),
+        bucket_width: 0,
     };
     let router = Router::start(functional_replicas(2), policy, Arc::clone(&metrics));
     let mut receivers = vec![];

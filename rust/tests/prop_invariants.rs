@@ -26,6 +26,7 @@ fn prop_batcher_loses_nothing_and_preserves_fifo() {
             let mut b = Batcher::new(BatchPolicy {
                 max_batch: max_batch as usize,
                 max_wait: Duration::ZERO,
+                bucket_width: 0,
             });
             for i in 0..n {
                 b.push(i);
@@ -53,6 +54,7 @@ fn prop_batcher_ready_iff_size_or_deadline() {
             let mut b = Batcher::new(BatchPolicy {
                 max_batch: max_batch as usize,
                 max_wait: Duration::from_secs(3600), // deadline never fires
+                bucket_width: 0,
             });
             for i in 0..n {
                 b.push(i);

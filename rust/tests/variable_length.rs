@@ -1,0 +1,218 @@
+//! Golden bit-exactness of the variable-length inference path
+//! (DESIGN.md §6): the Workspace arena run at `m_eff` must match the
+//! allocating path on a geometry truncated to `m = m_eff`, on randomized
+//! shapes; the serving stack must deliver the same numerics through
+//! length-bucketed dispatch; and malformed requests must surface typed
+//! errors end to end.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+use swifttron::coordinator::{
+    BatchPolicy, EngineReplica, FunctionalEngine, Metrics, RequestError, Router,
+};
+use swifttron::model::Geometry;
+use swifttron::sim::functional::{
+    encoder_forward, encoder_forward_ws, layer_forward, layer_forward_ws, synthetic_consts,
+    LayerWeights, Workspace,
+};
+use swifttron::sim::{simulate_encoder, simulate_encoder_m, HwConfig};
+use swifttron::util::rng::Rng;
+
+/// Random small geometry with heads dividing d (layers = 1).
+fn random_geo(rng: &mut Rng) -> Geometry {
+    let heads = 1 + rng.below(3) as usize; // 1..=3
+    let dh = 4 * (1 + rng.below(3) as usize); // 4, 8, 12
+    let d = heads * dh;
+    let m = 4 + rng.below(13) as usize; // 4..=16
+    let dff = 8 * (1 + rng.below(4) as usize); // 8..=32
+    Geometry::new(d, heads, m, dff, 1)
+}
+
+#[test]
+fn workspace_matches_allocation_path_on_randomized_shapes() {
+    // The acceptance contract of the refactor: for random shapes and a
+    // random live length, the Workspace path over the big arena equals
+    // the pre-refactor allocating path on a geometry truncated to
+    // m = m_eff — outputs AND data-dependent sqrt iteration counts.
+    let mut rng = Rng::new(0xA11C);
+    for case in 0..20 {
+        let geo = random_geo(&mut rng);
+        let w = LayerWeights::synthetic(&mut rng, &geo);
+        let c = synthetic_consts(&geo);
+        let m_eff = 1 + rng.below(geo.m as u64) as usize;
+        let x: Vec<i32> =
+            (0..m_eff * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+
+        let mut ws = Workspace::new(&geo);
+        let mut out = vec![0i32; m_eff * geo.d];
+        let mut iters = Vec::new();
+        layer_forward_ws(&x, &w, &c, &geo, m_eff, &mut ws, &mut out, &mut iters);
+
+        let trunc = Geometry { m: m_eff, ..geo };
+        let want = layer_forward(&x, &w, &c, &trunc);
+        assert_eq!(out, want.q_out, "case {case}: {geo:?} m_eff={m_eff}");
+        assert_eq!(iters, want.sqrt_iters, "case {case}: {geo:?} m_eff={m_eff}");
+    }
+}
+
+#[test]
+fn encoder_workspace_matches_allocation_path() {
+    let mut rng = Rng::new(0xB22D);
+    for case in 0..6 {
+        let mut geo = random_geo(&mut rng);
+        geo.layers = 1 + rng.below(3) as usize;
+        let layers: Vec<_> = (0..geo.layers)
+            .map(|_| (LayerWeights::synthetic(&mut rng, &geo), synthetic_consts(&geo)))
+            .collect();
+
+        // full length: workspace path == allocating wrapper, bit for bit
+        let x: Vec<i32> =
+            (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+        let mut ws = Workspace::new(&geo);
+        let mut out = vec![0i32; geo.m * geo.d];
+        let mut iters = Vec::new();
+        encoder_forward_ws(&x, &layers, &geo, geo.m, &mut ws, &mut out, &mut iters);
+        let (want_out, want_iters) = encoder_forward(&x, &layers, &geo);
+        assert_eq!(out, want_out, "case {case} full length");
+        assert_eq!(iters, want_iters, "case {case} full length");
+
+        // short request over the SAME warm arena == truncated geometry
+        let m_eff = 1 + rng.below(geo.m as u64) as usize;
+        let xs = &x[..m_eff * geo.d];
+        let mut out_s = vec![0i32; m_eff * geo.d];
+        iters.clear();
+        encoder_forward_ws(xs, &layers, &geo, m_eff, &mut ws, &mut out_s, &mut iters);
+        let trunc = Geometry { m: m_eff, ..geo };
+        let (want_s, want_iters_s) = encoder_forward(xs, &layers, &trunc);
+        assert_eq!(out_s, want_s, "case {case} m_eff={m_eff}");
+        assert_eq!(iters, want_iters_s, "case {case} m_eff={m_eff}");
+    }
+}
+
+#[test]
+fn full_length_requests_match_fixed_geometry_cycles() {
+    // m_eff == geo.m through the variable-length engine must be
+    // indistinguishable from the fixed-geometry pipeline: same cycle
+    // count as simulate_encoder, deterministic logits across replicas.
+    let hw = HwConfig::paper();
+    let a = FunctionalEngine::synthetic("tiny", 7, hw).unwrap();
+    let b = FunctionalEngine::synthetic("tiny", 7, hw).unwrap();
+    let geo = Geometry::preset("tiny").unwrap();
+    let tokens: Vec<i32> = (0..geo.m).map(|i| (i % 60) as i32).collect();
+    let pa = a.predict(&tokens).unwrap();
+    let pb = b.predict(&tokens).unwrap();
+    assert_eq!(pa.logits, pb.logits);
+    assert_eq!(pa.accel_cycles, simulate_encoder(&hw, &geo).total_cycles);
+    assert_eq!(
+        pa.accel_cycles,
+        simulate_encoder_m(&hw, &geo, geo.m, None).total_cycles
+    );
+}
+
+#[test]
+fn short_requests_cost_fewer_cycles() {
+    // Virtual time shapes to the request: strictly monotone in m_eff,
+    // and always exactly what the cycle simulator charges at that
+    // length (the engine never bills the padded maximum).
+    let hw = HwConfig::paper();
+    let e = FunctionalEngine::synthetic("tiny", 7, hw).unwrap();
+    let m = e.seq_len();
+    let tokens: Vec<i32> = (0..m).map(|i| (i % 60) as i32).collect();
+    let mut prev = 0u64;
+    for m_eff in [m / 4, m / 2, m] {
+        let c = e.predict(&tokens[..m_eff]).unwrap().accel_cycles;
+        assert!(c > prev, "cycles grow with m_eff ({prev} -> {c})");
+        assert_eq!(
+            c,
+            simulate_encoder_m(&hw, &Geometry::preset("tiny").unwrap(), m_eff, None)
+                .total_cycles,
+            "m_eff={m_eff}"
+        );
+        prev = c;
+    }
+}
+
+#[test]
+fn typed_errors_surface_through_the_stack() {
+    let e = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+    let max = e.seq_len();
+    assert_eq!(
+        e.predict(&[]).unwrap_err(),
+        RequestError::BadLength { got: 0, min: 1, max }
+    );
+    assert_eq!(
+        e.predict(&vec![0i32; max + 3]).unwrap_err(),
+        RequestError::BadLength { got: max + 3, min: 1, max }
+    );
+    assert!(matches!(
+        e.predict(&[64]).unwrap_err(),
+        RequestError::BadToken { token: 64, .. }
+    ));
+    // Display carries the cause to the wire format
+    let msg = e.predict(&[]).unwrap_err().to_string();
+    assert!(msg.contains("length 0"), "{msg}");
+}
+
+#[test]
+fn bucketed_router_serves_mixed_lengths_bit_exactly() {
+    // End-to-end: mixed-length traffic through length-bucketed dispatch
+    // across two replicas must reproduce the reference model's labels
+    // per request, and the padding-waste metric must see the bucketing.
+    let reference = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+    let m = reference.seq_len();
+    let metrics = Arc::new(Metrics::new());
+    let replicas: Vec<Arc<dyn EngineReplica>> = (0..2)
+        .map(|_| {
+            Arc::new(FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap())
+                as Arc<dyn EngineReplica>
+        })
+        .collect();
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        bucket_width: (m / 4).max(1),
+    };
+    let router = Router::start(replicas, policy, Arc::clone(&metrics));
+
+    let mut rng = Rng::new(99);
+    let mut expected = Vec::new();
+    let mut receivers = Vec::new();
+    for _ in 0..24 {
+        let len = 1 + rng.below(m as u64) as usize;
+        let tokens: Vec<i32> = (0..len).map(|_| rng.below(60) as i32).collect();
+        let want = reference.predict(&tokens).unwrap();
+        expected.push((want.label, want.accel_ms));
+        let (tx, rx) = channel();
+        router.submit(tokens, tx);
+        receivers.push(rx);
+    }
+    for (rx, (label, accel_ms)) in receivers.into_iter().zip(expected) {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.label, label, "replica disagrees with reference");
+        assert!((resp.accel_ms - accel_ms).abs() < 1e-12, "virtual time is per-length");
+    }
+    // a doomed over-length request is rejected with a typed error and
+    // must not pollute the token/padding accounting
+    use std::sync::atomic::Ordering;
+    let actual_before = metrics.actual_tokens.load(Ordering::Relaxed);
+    let padded_before = metrics.padded_tokens.load(Ordering::Relaxed);
+    let (tx, rx) = channel();
+    router.submit(vec![0i32; m + 9], tx);
+    assert!(rx.recv().expect("response").error.is_some());
+    assert_eq!(metrics.actual_tokens.load(Ordering::Relaxed), actual_before);
+    assert_eq!(metrics.padded_tokens.load(Ordering::Relaxed), padded_before);
+    router.shutdown();
+    assert_eq!(
+        metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        24
+    );
+    let actual = metrics.actual_tokens.load(std::sync::atomic::Ordering::Relaxed);
+    let padded = metrics.padded_tokens.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(padded >= actual, "padding never shrinks tokens");
+    assert!(
+        metrics.padding_waste() > 0.0,
+        "random lengths must incur some bucket padding (actual={actual} padded={padded})"
+    );
+}

@@ -1,0 +1,110 @@
+//! Counting-allocator proof of the zero-allocation hot path
+//! (DESIGN.md §6): after Workspace warm-up, `layer_forward_ws` and
+//! `encoder_forward_ws` never touch the heap — the whole per-request
+//! working set lives in the resident arena.
+//!
+//! This test binary installs its own `#[global_allocator]`, so it must
+//! stay a dedicated integration-test target (one allocator per binary).
+//! Allocation events are counted per-thread to stay immune to anything
+//! the test harness does on other threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use swifttron::model::Geometry;
+use swifttron::sim::functional::{
+    encoder_forward_ws, layer_forward_ws, synthetic_consts, LayerWeights, Workspace,
+};
+use swifttron::util::rng::Rng;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn bump() {
+        // try_with: never panic inside the allocator (TLS teardown)
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        CountingAlloc::bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn forward_pass_is_allocation_free_after_warmup() {
+    // tiny shapes stay below PAR_MIN_MACS, so every contraction runs the
+    // serial kernel — no scoped-thread spawns on this path either
+    let geo = Geometry::new(16, 2, 8, 32, 2);
+    let mut rng = Rng::new(0x5EED);
+    let layers: Vec<_> = (0..geo.layers)
+        .map(|_| (LayerWeights::synthetic(&mut rng, &geo), synthetic_consts(&geo)))
+        .collect();
+    let (w, c) = &layers[0];
+    let x: Vec<i32> = (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+
+    let mut ws = Workspace::new(&geo);
+    let mut out = vec![0i32; geo.m * geo.d];
+    let mut iters: Vec<u32> = Vec::with_capacity(2 * geo.m * geo.layers);
+
+    // warm-up: touches every arena buffer and sizes `iters`
+    layer_forward_ws(&x, w, c, &geo, geo.m, &mut ws, &mut out, &mut iters);
+    iters.clear();
+    encoder_forward_ws(&x, &layers, &geo, geo.m, &mut ws, &mut out, &mut iters);
+
+    let before = thread_allocs();
+    for _ in 0..16 {
+        iters.clear();
+        layer_forward_ws(&x, w, c, &geo, geo.m, &mut ws, &mut out, &mut iters);
+    }
+    // short live lengths over the same warm arena
+    for m_eff in [1usize, 3, geo.m / 2] {
+        iters.clear();
+        layer_forward_ws(
+            &x[..m_eff * geo.d],
+            w,
+            c,
+            &geo,
+            m_eff,
+            &mut ws,
+            &mut out[..m_eff * geo.d],
+            &mut iters,
+        );
+    }
+    // and the full multi-layer stack
+    for _ in 0..4 {
+        iters.clear();
+        encoder_forward_ws(&x, &layers, &geo, geo.m, &mut ws, &mut out, &mut iters);
+    }
+    let delta = thread_allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "hot path allocated {delta} times after Workspace warm-up"
+    );
+}
