@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
-# Tier-1 gate: release build, tests, and rustdoc with warnings denied —
-# the doc pass makes dangling references (e.g. to DESIGN.md sections
-# that were renamed away) fail fast instead of rotting.
+# Tier-1 gate: release build, tests, formatting, clippy, and rustdoc
+# with warnings denied — the doc pass makes dangling references (e.g.
+# to DESIGN.md sections that were renamed away) fail fast instead of
+# rotting.  `set -euo pipefail` makes every stage a hard gate: a
+# mid-script failure (or formatting drift at the fmt stage) stops the
+# pipeline instead of scrolling past.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
 cargo test -q
+cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 echo "ci.sh: all green"

@@ -20,6 +20,11 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
+/// Fallback park interval for a dispatcher polling an empty queue (no
+/// deadline to sleep toward): bounds how long a lost wakeup can stall
+/// the drain.  See [`Batcher::park_duration`].
+pub const DEFAULT_PARK: Duration = Duration::from_millis(50);
+
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
@@ -139,7 +144,15 @@ impl<T> Batcher<T> {
                 .min_by_key(|&(_, t)| t)
                 .map_or(oldest_key, |(k, _)| k),
         };
-        let q = self.buckets.get_mut(&key).expect("bucket exists");
+        // `key` was just derived from a live entry, so the bucket
+        // exists today; stay total anyway — an empty batch beats
+        // panicking the dispatcher thread if that invariant ever
+        // drifts (ISSUE 3 hardening; the cross-call races live in
+        // ready()/park_duration()/take_batch() sequencing, covered by
+        // the regression test below).
+        let Some(q) = self.buckets.get_mut(&key) else {
+            return Vec::new();
+        };
         let n = q.len().min(self.policy.max_batch);
         let out: Vec<T> = q.drain(..n).map(|(t, _)| t).collect();
         if q.is_empty() {
@@ -152,6 +165,19 @@ impl<T> Batcher<T> {
     /// Deadline of the oldest queued request (for poll sleeping).
     pub fn next_deadline(&self) -> Option<Instant> {
         self.oldest_bucket().map(|(_, t)| t + self.policy.max_wait)
+    }
+
+    /// How long a dispatcher may park before re-checking: the time
+    /// until the oldest queued request's deadline (zero if already
+    /// expired), or [`DEFAULT_PARK`] when the queue is empty.  Never
+    /// panics — the queue draining between an emptiness check and this
+    /// call just yields the default (ISSUE 3: the dispatcher path must
+    /// not `unwrap()` a deadline it observed one lock ago).
+    pub fn park_duration(&self, now: Instant) -> Duration {
+        match self.next_deadline() {
+            Some(d) => d.saturating_duration_since(now),
+            None => DEFAULT_PARK,
+        }
     }
 }
 
@@ -235,6 +261,78 @@ mod tests {
         let first = b.take_batch();
         assert_eq!(first, vec!["old", "new"]);
         assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn park_duration_defaults_when_empty_and_tracks_the_deadline() {
+        let wait = Duration::from_millis(20);
+        let mut b: Batcher<i32> = Batcher::new(unbucketed(8, wait));
+        assert_eq!(b.park_duration(Instant::now()), DEFAULT_PARK);
+        b.push(1);
+        let after = Instant::now(); // push time <= after, so deadline <= after + wait
+        assert!(b.park_duration(after) <= wait, "parks no longer than the deadline");
+        // an already-expired deadline parks zero — never negative, never a panic
+        assert_eq!(b.park_duration(after + wait + Duration::from_millis(5)), Duration::ZERO);
+        // draining restores the empty-queue default
+        b.take_batch();
+        assert_eq!(b.park_duration(Instant::now()), DEFAULT_PARK);
+    }
+
+    #[test]
+    fn dispatcher_race_between_enqueue_and_expiry_never_panics() {
+        // Regression (ISSUE 3): the dispatcher reads ready() /
+        // park_duration() / take_batch() under a lock it releases and
+        // re-acquires between calls, so the queue can drain or refill
+        // between any two of them.  Hammer that interleaving with
+        // producers racing a consumer under a zero deadline (every item
+        // expires the instant it lands): no call may panic, and every
+        // pushed item must come back exactly once.
+        use std::sync::{Arc, Mutex};
+        const PRODUCERS: usize = 3;
+        const PER_PRODUCER: usize = 200;
+        let b = Arc::new(Mutex::new(Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::ZERO,
+            bucket_width: 4,
+        })));
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        b.lock().unwrap().push_len(p * PER_PRODUCER + i, 1 + (i % 9));
+                        if i % 16 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut seen = Vec::new();
+        let give_up = Instant::now() + Duration::from_secs(30);
+        while seen.len() < PRODUCERS * PER_PRODUCER {
+            assert!(
+                Instant::now() < give_up,
+                "consumer starved at {} of {}",
+                seen.len(),
+                PRODUCERS * PER_PRODUCER
+            );
+            let now = Instant::now();
+            {
+                // the dispatcher's read sequence, with the lock dropped
+                // in between — the drain/refill window under test
+                let q = b.lock().unwrap();
+                let _ = q.ready(now);
+                let _ = q.park_duration(now);
+            }
+            seen.extend(b.lock().unwrap().take_batch());
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), PRODUCERS * PER_PRODUCER, "each request delivered exactly once");
     }
 
     #[test]

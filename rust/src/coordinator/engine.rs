@@ -136,7 +136,11 @@ pub struct InferenceEngine {
 
 impl InferenceEngine {
     /// Build from the artifacts directory (tiny preset).
-    pub fn load(artifacts: &Path, engine: &Engine, hw: HwConfig) -> Result<InferenceEngine, String> {
+    pub fn load(
+        artifacts: &Path,
+        engine: &Engine,
+        hw: HwConfig,
+    ) -> Result<InferenceEngine, String> {
         let manifest = Manifest::load(artifacts)?;
         let preset = manifest.preset("tiny")?;
         let geo = preset.geometry;
@@ -329,6 +333,11 @@ impl FunctionalEngine {
             (0..geo.d * 2).map(|_| rng.range_i64(-127, 127) as i32).collect();
         let b_head: Vec<i32> = (0..2).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
         let full = simulate_encoder_m(&hw, &geo, geo.m, None).total_cycles;
+        // host-execution knob (DESIGN.md §7): head-parallel fused
+        // attention, selectable back to the serial loop via HwConfig —
+        // numerics are bit-exact either way
+        let mut ws = Workspace::new(&geo);
+        ws.set_attn_heads_parallel(hw.attn_heads_parallel);
         Ok(FunctionalEngine {
             geo,
             layers,
@@ -338,7 +347,7 @@ impl FunctionalEngine {
             b_head,
             vocab,
             hw,
-            ws: Mutex::new(Workspace::new(&geo)),
+            ws: Mutex::new(ws),
             cycles_by_len: Mutex::new(BTreeMap::from([(geo.m, full)])),
         })
     }
@@ -429,6 +438,21 @@ mod tests {
         assert_eq!(pa.logits, pb.logits);
         assert!(pa.accel_cycles > 0);
         assert!(pa.accel_ms > 0.0);
+    }
+
+    #[test]
+    fn attn_parallel_knob_is_numerically_invisible() {
+        // the HwConfig host knob selects the serial head loop; labels,
+        // logits and simulated cycles must be bit-identical either way
+        let on = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+        let off_hw = HwConfig { attn_heads_parallel: false, ..HwConfig::paper() };
+        let off = FunctionalEngine::synthetic("tiny", 7, off_hw).unwrap();
+        let tokens: Vec<i32> = (0..on.seq_len()).map(|i| (i % 60) as i32).collect();
+        let a = EngineReplica::predict(&on, &tokens).unwrap();
+        let b = EngineReplica::predict(&off, &tokens).unwrap();
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.accel_cycles, b.accel_cycles);
     }
 
     #[test]

@@ -150,10 +150,12 @@ fn dispatch_loop(sh: Arc<Shared>, pool: ReplicaPool) {
                 if b.ready(Instant::now()) || (shutting && !b.is_empty()) {
                     break b.take_batch();
                 }
-                let timeout = b
-                    .next_deadline()
-                    .map(|d| d.saturating_duration_since(Instant::now()))
-                    .unwrap_or(std::time::Duration::from_millis(50));
+                // park_duration never panics, whatever the queue did
+                // between the predicate check and here (drained by a
+                // racing shutdown flush, refilled by a submit): empty
+                // queues park the bounded default, expired deadlines
+                // park zero.
+                let timeout = b.park_duration(Instant::now());
                 let (guard, _) = sh.available.wait_timeout(b, timeout).unwrap();
                 b = guard;
             }

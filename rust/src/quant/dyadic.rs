@@ -11,15 +11,38 @@ pub struct Dyadic {
 
 impl Dyadic {
     /// Best `b/2^c` with `b` in `[1, 2^bits)` — identical to the python
-    /// designer (`intops.Dyadic.approximate`).
+    /// designer (`intops.Dyadic.approximate`) on the representable band.
+    ///
+    /// The mantissa contract `b < 2^bits` is enforced for *every* input
+    /// (ISSUE 3): `x` at or above `2^bits` is rejected with a panic —
+    /// no non-negative shift can represent it, and silently letting
+    /// `b = x.round()` run past the contract breaks the `q * b` INT64
+    /// no-overflow argument [`requantize`] rests on.  The rounding
+    /// boundary just below `2^bits` (where `x.round()` would land
+    /// exactly *on* `2^bits`) clamps to the largest legal mantissa
+    /// instead, keeping the error under one ulp.
     pub fn approximate(x: f64, bits: u32, max_shift: u32) -> Dyadic {
         assert!(x > 0.0, "dyadic approximation needs x > 0, got {x}");
+        assert!((1..=62).contains(&bits), "dyadic mantissa width {bits} unsupported");
+        assert!(
+            x < (1i64 << bits) as f64,
+            "dyadic approximation: x = {x} needs a mantissa b >= 2^{bits} at c = 0, \
+             outside the documented b < 2^{bits} contract — rescale the input"
+        );
         let mut c = 0u32;
         while x * ((1u64 << c) as f64) < (1u64 << (bits - 1)) as f64 && c < max_shift {
             c += 1;
         }
         c = c.saturating_sub(1);
-        let b = (x * (1u64 << c) as f64).round() as i64;
+        let mut b = (x * (1u64 << c) as f64).round() as i64;
+        if b >= 1i64 << bits {
+            // Only reachable at c == 0 with x in [2^bits - 0.5, 2^bits):
+            // any c > 0 comes out of the shift search with
+            // x * 2^c < 2^(bits-1), so rounding cannot cross the
+            // ceiling there.  Clamp the round-up back into the contract.
+            debug_assert_eq!(c, 0, "mantissa overflow away from the c = 0 boundary");
+            b = (1i64 << bits) - 1;
+        }
         Dyadic { b: b.max(1), c }
     }
 
@@ -93,6 +116,54 @@ mod tests {
     fn rescale_no_saturation() {
         let dy = Dyadic { b: 1, c: 0 };
         assert_eq!(rescale(1 << 40, dy), 1 << 40);
+    }
+
+    #[test]
+    fn approximate_contract_holds_across_magnitudes() {
+        // Property sweep (ISSUE 3): log-uniform x over the representable
+        // band of several mantissa widths — including x >= 2^(bits-1),
+        // where the shift search exits at c = 0 and the old code let
+        // b = x.round() run past the documented contract.  Everywhere:
+        // b in [1, 2^bits), c <= max_shift, and the half-ulp bound
+        // |b - x*2^c| <= 1 with x*2^c >= b/2 gives rel. error <= 1/b.
+        let mut rng = crate::util::rng::Rng::new(0xD7AD1C);
+        for &bits in &[12u32, 16, 21] {
+            let hi: f64 = ((1i64 << bits) as f64 - 1.0).min(1e6);
+            let (lo_ln, hi_ln) = (1e-6f64.ln(), hi.ln());
+            for case in 0..2000 {
+                let x = (lo_ln + rng.f64() * (hi_ln - lo_ln)).exp();
+                let dy = Dyadic::approximate(x, bits, 30);
+                assert!(
+                    dy.b >= 1 && dy.b < 1i64 << bits,
+                    "b contract violated: bits={bits} case={case} x={x} -> {dy:?}"
+                );
+                assert!(dy.c <= 30, "shift contract: x={x} -> {dy:?}");
+                let rel = (dy.value() - x).abs() / x;
+                assert!(
+                    rel <= 1.0 / dy.b as f64,
+                    "relative error: bits={bits} x={x} -> {dy:?} rel={rel}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn approximate_clamps_rounding_boundary_into_contract() {
+        // x just below 2^16: round(x * 2^0) == 65536 == 2^16, one past
+        // the contract — must clamp to the largest legal mantissa
+        let dy = Dyadic::approximate(65535.7, 16, 30);
+        assert_eq!((dy.b, dy.c), (65535, 0));
+        // the rest of the high band (c = 0, no shift) stays exact
+        let dy = Dyadic::approximate(40000.0, 16, 30);
+        assert_eq!((dy.b, dy.c), (40000, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "rescale the input")]
+    fn approximate_rejects_x_beyond_mantissa_ceiling() {
+        // 2^16 <= x: unrepresentable with b < 2^16 and a non-negative
+        // shift — a clear panic, not a silent contract violation
+        Dyadic::approximate(66000.0, 16, 30);
     }
 
     #[test]

@@ -18,8 +18,81 @@
 //! pass (DESIGN.md §6) calls them with the request's live row count
 //! `m_eff`, never the padded geometry maximum, so both the work done
 //! and the parallel-dispatch decision scale with the actual sequence.
+//!
+//! The epilogue-capable variants ([`i_matmul_epilogue`] and friends,
+//! DESIGN.md §7) additionally fuse the INT32 -> INT8 requantization (or
+//! the residual-alignment rescale) into each finished output row's
+//! readout — the structure ITA and the FQ-BERT accelerator use at the
+//! PE array boundary — instead of a separate full-tensor pass after the
+//! kernel.  Both epilogues are elementwise, so the fused result is
+//! bit-exact with kernel-then-pass by construction (and asserted on
+//! randomized shapes below).
 
+use super::dyadic::{requantize, rescale, Dyadic};
 use crate::util::threadpool::{default_parallelism, tile_ranges};
+
+/// One output row of the serial kernel: bias init, then the k-deep
+/// multiply-accumulate sweep.  Shared by [`i_matmul`] and
+/// [`i_matmul_epilogue`], so the fused path accumulates in exactly the
+/// same order as the unfused one.
+#[inline]
+fn mac_row(xrow: &[i32], w: &[i32], bias: Option<&[i32]>, n: usize, orow: &mut [i32]) {
+    // bias folds in at readout (paper: added when reading the output)
+    match bias {
+        Some(b) => orow.copy_from_slice(b),
+        None => orow.fill(0),
+    }
+    for (kk, &xv) in xrow.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let wrow = &w[kk * n..(kk + 1) * n];
+        // plain i32 multiply-accumulate: autovectorizes (an i64
+        // widening here blocks SIMD); a row-blocked variant was tried
+        // and reverted — W panels already hit in LLC at these sizes
+        // (EXPERIMENTS.md §Perf).
+        for (o, &wv) in orow.iter_mut().zip(wrow) {
+            *o += xv * wv;
+        }
+    }
+}
+
+/// Per-row epilogue fused into a matmul's readout: maps each *finished*
+/// INT32 accumulator row in place, as the row completes, instead of a
+/// separate full-tensor pass after the kernel (DESIGN.md §7).  Both
+/// variants are elementwise, so row-by-row application is bit-exact
+/// with kernel-then-pass by construction.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue {
+    /// Saturating INT32 -> INT8 requantization ([`requantize`]) — the
+    /// Q/K/V projection and attention-context readouts.
+    Requant(Dyadic),
+    /// Non-saturating dyadic rescale truncated to i32 ([`rescale`]
+    /// `as i32`) — the residual-alignment readout of the output
+    /// projection and FFN-out matmuls (paper §III-I).
+    Rescale(Dyadic),
+}
+
+impl Epilogue {
+    /// Apply to a finished accumulator slice, in place.  Elementwise,
+    /// so any partitioning of the tensor (rows, tiles, the whole
+    /// buffer) yields identical bits.
+    #[inline]
+    pub fn apply(&self, acc: &mut [i32]) {
+        match *self {
+            Epilogue::Requant(dy) => {
+                for v in acc.iter_mut() {
+                    *v = requantize(*v as i64, dy);
+                }
+            }
+            Epilogue::Rescale(dy) => {
+                for v in acc.iter_mut() {
+                    *v = rescale(*v as i64, dy) as i32;
+                }
+            }
+        }
+    }
+}
 
 /// `out[m][n] = sum_k x[m][k]*w[k][n] (+ bias[n])`, INT32 accumulators.
 /// Panics in debug builds if an accumulator leaves the INT32 range (the
@@ -49,26 +122,40 @@ pub fn i_matmul(
     );
     debug_assert!(k <= (i32::MAX as usize) / (128 * 128), "contraction too deep for INT32");
     for i in 0..m {
-        let xrow = &x[i * k..(i + 1) * k];
+        mac_row(&x[i * k..(i + 1) * k], w, bias, n, &mut out[i * n..(i + 1) * n]);
+    }
+}
+
+/// [`i_matmul`] with `epi` fused at each finished row's readout: `out`
+/// holds the epilogue-mapped values, never the raw INT32 accumulators.
+/// Bit-exact with running [`i_matmul`] and then applying `epi` over the
+/// whole tensor (per-row accumulation order untouched; DESIGN.md §7).
+#[allow(clippy::too_many_arguments)]
+pub fn i_matmul_epilogue(
+    x: &[i32],
+    w: &[i32],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [i32],
+) {
+    assert_eq!(x.len(), m * k, "x shape");
+    assert_eq!(w.len(), k * n, "w shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "bias shape");
+    }
+    debug_assert!(
+        x.iter().all(|&v| (-128..=127).contains(&v)),
+        "i_matmul_epilogue operand outside INT8 range"
+    );
+    debug_assert!(k <= (i32::MAX as usize) / (128 * 128), "contraction too deep for INT32");
+    for i in 0..m {
         let orow = &mut out[i * n..(i + 1) * n];
-        // bias folds in at readout (paper: added when reading the output)
-        match bias {
-            Some(b) => orow.copy_from_slice(b),
-            None => orow.fill(0),
-        }
-        for (kk, &xv) in xrow.iter().enumerate() {
-            if xv == 0 {
-                continue;
-            }
-            let wrow = &w[kk * n..(kk + 1) * n];
-            // plain i32 multiply-accumulate: autovectorizes (an i64
-            // widening here blocks SIMD); a row-blocked variant was tried
-            // and reverted — W panels already hit in LLC at these sizes
-            // (EXPERIMENTS.md §Perf).
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-        }
+        mac_row(&x[i * k..(i + 1) * k], w, bias, n, orow);
+        epi.apply(orow);
     }
 }
 
@@ -78,6 +165,18 @@ pub fn i_matmul_bt(x: &[i32], w_t: &[i32], m: usize, k: usize, n: usize, out: &m
     assert_eq!(x.len(), m * k);
     assert_eq!(w_t.len(), n * k);
     assert_eq!(out.len(), m * n);
+    // Same operand contract as `i_matmul` — and on this kernel both
+    // sides are *activations* (Q and K), so an upstream requantization
+    // bug would silently mis-accumulate here without these checks.
+    debug_assert!(
+        x.iter().all(|&v| (-128..=127).contains(&v)),
+        "i_matmul_bt x operand outside INT8 range"
+    );
+    debug_assert!(
+        w_t.iter().all(|&v| (-128..=127).contains(&v)),
+        "i_matmul_bt w_t operand outside INT8 range"
+    );
+    debug_assert!(k <= (i32::MAX as usize) / (128 * 128), "contraction too deep for INT32");
     for i in 0..m {
         let xrow = &x[i * k..(i + 1) * k];
         for j in 0..n {
@@ -159,6 +258,60 @@ pub fn i_matmul_bt_tiled(
             s.spawn(move || i_matmul_bt(x_tile, w_t, rows, k, n, tile_out));
         }
     });
+}
+
+/// Row-tiled parallel [`i_matmul_epilogue`]; same tiling contract as
+/// [`i_matmul_tiled`].  The epilogue runs inside each tile as its rows
+/// finish, so no thread ever re-reads another tile's output.
+#[allow(clippy::too_many_arguments)]
+pub fn i_matmul_epilogue_tiled(
+    threads: usize,
+    x: &[i32],
+    w: &[i32],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [i32],
+) {
+    assert_eq!(x.len(), m * k, "x shape");
+    assert_eq!(w.len(), k * n, "w shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    let tiles = tile_ranges(m, threads);
+    if tiles.len() <= 1 {
+        return i_matmul_epilogue(x, w, bias, m, k, n, epi, out);
+    }
+    std::thread::scope(|s| {
+        let mut rem: &mut [i32] = out;
+        for t in tiles {
+            let rows = t.len();
+            let (tile_out, rest) = std::mem::take(&mut rem).split_at_mut(rows * n);
+            rem = rest;
+            let x_tile = &x[t.start * k..t.end * k];
+            s.spawn(move || i_matmul_epilogue(x_tile, w, bias, rows, k, n, epi, tile_out));
+        }
+    });
+}
+
+/// Auto-dispatching [`i_matmul_epilogue`]; same [`PAR_MIN_MACS`]
+/// threshold as [`i_matmul_par`].
+#[allow(clippy::too_many_arguments)]
+pub fn i_matmul_epilogue_par(
+    x: &[i32],
+    w: &[i32],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [i32],
+) {
+    if m > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        i_matmul_epilogue_tiled(default_parallelism(), x, w, bias, m, k, n, epi, out)
+    } else {
+        i_matmul_epilogue(x, w, bias, m, k, n, epi, out)
+    }
 }
 
 /// Auto-dispatching [`i_matmul`]: parallel at/above [`PAR_MIN_MACS`]
@@ -285,6 +438,71 @@ mod tests {
         i_matmul(&x, &w, None, m, k, n, &mut serial);
         i_matmul_par(&x, &w, None, m, k, n, &mut par);
         assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn epilogue_fused_matches_kernel_then_pass() {
+        // The acceptance contract of the fused path: for random shapes,
+        // operands, scales, thread counts and both epilogue kinds, the
+        // fused kernel (serial, tiled, auto-dispatching) equals the
+        // unfused kernel followed by a whole-tensor epilogue pass.
+        let mut rng = crate::util::rng::Rng::new(0xF05E);
+        for case in 0..60 {
+            let m = 1 + rng.below(17) as usize;
+            let k = 1 + rng.below(33) as usize;
+            let n = 1 + rng.below(19) as usize;
+            let threads = 1 + rng.below(6) as usize;
+            let x: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+            let w: Vec<i32> = (0..k * n).map(|_| rng.range_i64(-128, 127) as i32).collect();
+            let bias: Vec<i32> = (0..n).map(|_| rng.range_i64(-5000, 5000) as i32).collect();
+            let b = if case % 2 == 0 { Some(&bias[..]) } else { None };
+            let dy = Dyadic::approx16(0.001 + rng.f64());
+            for epi in [Epilogue::Requant(dy), Epilogue::Rescale(dy)] {
+                // reference: kernel, then a separate full-tensor pass
+                let mut want = vec![0i32; m * n];
+                i_matmul(&x, &w, b, m, k, n, &mut want);
+                epi.apply(&mut want);
+
+                let mut fused = vec![0i32; m * n];
+                i_matmul_epilogue(&x, &w, b, m, k, n, epi, &mut fused);
+                assert_eq!(want, fused, "serial m={m} k={k} n={n} {epi:?}");
+
+                let mut tiled = vec![0i32; m * n];
+                i_matmul_epilogue_tiled(threads, &x, &w, b, m, k, n, epi, &mut tiled);
+                assert_eq!(want, tiled, "tiled m={m} k={k} n={n} threads={threads} {epi:?}");
+
+                let mut auto = vec![0i32; m * n];
+                i_matmul_epilogue_par(&x, &w, b, m, k, n, epi, &mut auto);
+                assert_eq!(want, auto, "par m={m} k={k} n={n} {epi:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn epilogue_requant_saturates_and_rescale_does_not() {
+        // one row whose accumulator exceeds INT8 after scaling: Requant
+        // clamps to the INT8 rails, Rescale passes the wide value through
+        let x = vec![127i32; 16];
+        let w = vec![127i32; 16];
+        let dy = Dyadic { b: 1, c: 0 };
+        let mut req = vec![0i32; 1];
+        i_matmul_epilogue(&x, &w, None, 1, 16, 1, Epilogue::Requant(dy), &mut req);
+        assert_eq!(req[0], 127);
+        let mut res = vec![0i32; 1];
+        i_matmul_epilogue(&x, &w, None, 1, 16, 1, Epilogue::Rescale(dy), &mut res);
+        assert_eq!(res[0], 16 * 127 * 127);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "INT8 range")]
+    fn bt_rejects_out_of_range_operands_in_debug() {
+        // regression (ISSUE 3): the Q.K^T kernel must catch out-of-INT8
+        // operands in debug builds instead of silently mis-accumulating
+        let x = vec![300i32; 4];
+        let wt = vec![1i32; 4];
+        let mut out = vec![0i32; 4];
+        i_matmul_bt(&x, &wt, 2, 2, 2, &mut out);
     }
 
     #[test]

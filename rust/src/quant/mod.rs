@@ -23,7 +23,8 @@ pub use dyadic::{requantize, requantize_signed, rescale, Dyadic};
 pub use gelu::{i_gelu, GeluConsts};
 pub use layernorm::{i_layernorm, i_sqrt, LayerNormConsts, LN_P};
 pub use matmul::{
-    i_matmul, i_matmul_bt, i_matmul_bt_par, i_matmul_bt_tiled, i_matmul_par, i_matmul_tiled,
+    i_matmul, i_matmul_bt, i_matmul_bt_par, i_matmul_bt_tiled, i_matmul_epilogue,
+    i_matmul_epilogue_par, i_matmul_epilogue_tiled, i_matmul_par, i_matmul_tiled, Epilogue,
     PAR_MIN_MACS,
 };
 pub use softmax::{i_exp, i_softmax, SoftmaxConsts, SM_UNIT};

@@ -29,6 +29,13 @@ pub struct HwConfig {
     /// Charge the LayerNorm sqrt its worst-case iteration count (paper
     /// footnote 3).  `false` uses the co-simulated data-dependent count.
     pub worst_case_sqrt: bool,
+    /// Execute attention heads concurrently on *host* threads in the
+    /// functional model (DESIGN.md §7).  Purely an execution knob —
+    /// numerics and simulated cycles are identical either way (the
+    /// hardware's own head concurrency is
+    /// [`parallel_heads`](HwConfig::parallel_heads)); off forces the
+    /// serial head loop.
+    pub attn_heads_parallel: bool,
 }
 
 impl HwConfig {
@@ -43,6 +50,7 @@ impl HwConfig {
             clock_ns: 7.0,
             pipeline_stages: 3,
             worst_case_sqrt: true,
+            attn_heads_parallel: true,
         }
     }
 
@@ -57,6 +65,7 @@ impl HwConfig {
             clock_ns: 7.0,
             pipeline_stages: 3,
             worst_case_sqrt: true,
+            attn_heads_parallel: true,
         }
     }
 

@@ -20,13 +20,26 @@
 //!   heap allocations per call (asserted by
 //!   `rust/tests/workspace_alloc.rs`) and both paths are bit-exact with
 //!   each other for every input (`rust/tests/variable_length.rs`).
+//!
+//! The workspace path runs the *fused, head-parallel* attention core
+//! (DESIGN.md §7): the INT32 -> INT8 requantization rides the matmul
+//! readout as an [`Epilogue`] instead of separate full-tensor passes,
+//! and every head owns a disjoint lane of the arena so the head loop is
+//! a scoped parallel-for (gated by [`ATTN_PAR_MIN_MACS`] and the
+//! `attn_heads_parallel` knob, `HwConfig` -> `FunctionalEngine` ->
+//! [`Workspace::set_attn_heads_parallel`]).  The pre-fusion serial
+//! structure survives as [`layer_forward_ws_unfused`] — the golden
+//! reference `rust/tests/attention_fused.rs` asserts the fused path
+//! bit-exact against on randomized shapes.
 
 use crate::model::{Geometry, LayerConsts};
 use crate::quant::{
-    self, i_layernorm, i_matmul_bt_par, i_matmul_par, i_softmax, requantize,
-    requantize_signed, rescale, Dyadic, GeluConsts, LayerNormConsts, SoftmaxConsts,
+    self, i_layernorm, i_matmul_bt, i_matmul_bt_par, i_matmul_epilogue, i_matmul_epilogue_par,
+    i_matmul_par, i_softmax, requantize, requantize_signed, rescale, Dyadic, Epilogue,
+    GeluConsts, LayerNormConsts, SoftmaxConsts,
 };
 use crate::util::rng::Rng;
+use crate::util::threadpool::run_scoped;
 use std::collections::BTreeMap;
 
 /// One layer's integer weights, row-major (see aot.py WEIGHT_KEYS).
@@ -115,24 +128,46 @@ pub struct LayerOutput {
     pub sqrt_iters: Vec<u32>,
 }
 
+/// Minimum per-head attention work (Q·Kᵀ + P·V = `2 * m² * dh` MACs)
+/// for the head-parallel loop to pay for its per-head scoped-thread
+/// spawns; below it the head loop stays serial inside the calling
+/// thread.  One spawn amortizes over a head's whole
+/// MatMul→Scale→Softmax→Requant→MatMul pipeline (softmax included),
+/// so the bar sits far below the per-matmul
+/// [`crate::quant::PAR_MIN_MACS`]: roberta-scale geometry goes parallel
+/// from `m_eff ≈ 32` up, the tiny preset and short requests stay
+/// serial.  Swept in EXPERIMENTS.md §Perf (attention leg).
+pub const ATTN_PAR_MIN_MACS: usize = 1 << 17;
+
 /// Per-layer scratch buffers, all sized to the construction geometry's
-/// maximum sequence length and sliced down to the live `m_eff`.
+/// maximum sequence length and sliced down to the live `m_eff`.  The
+/// attention buffers hold one *lane per head* (`heads × …`), so the
+/// head loop can fan out over disjoint `&mut` chunks.
 struct LayerScratch {
     geo: Geometry,
-    /// INT32 accumulator for the central-array matmuls (QKV / output
-    /// projection / FFN-out — their lifetimes never overlap).
+    /// Head-parallel attention knob (Workspace setters; DESIGN.md §7).
+    attn_heads_parallel: bool,
+    /// Per-head MAC floor gating the parallel head loop (tests force 0).
+    attn_par_min_macs: usize,
+    /// INT32 accumulator for the rescaled output-projection / FFN-out
+    /// readouts (their lifetimes never overlap).
     acc: Vec<i32>,
     q8: Vec<i32>,
     k8: Vec<i32>,
     v8: Vec<i32>,
+    /// Unfused reference path only: whole-tensor context accumulator.
     ctx_acc: Vec<i32>,
     ctx8: Vec<i32>,
     x2: Vec<i32>,
     /// LayerNorm output rows (ln1 is consumed into `x2` before ln2 runs).
     ln: Vec<i32>,
+    /// heads × (m × m) score lanes.
     scores: Vec<i32>,
+    /// heads × (m × m) probability lanes.
     probs: Vec<i32>,
+    /// heads × m rescaled-score rows.
     row64: Vec<i64>,
+    /// heads × (m × dh) gathered Q/K/V head panels and context output.
     qh: Vec<i32>,
     kh: Vec<i32>,
     vh: Vec<i32>,
@@ -159,12 +194,16 @@ pub struct Workspace {
 
 impl Workspace {
     /// Build an arena for geometry `geo`; serves any `m_eff` in
-    /// `1..=geo.m` for layers matching `geo`'s d / d_ff / heads.
+    /// `1..=geo.m` for layers matching `geo`'s d / d_ff / heads.  The
+    /// head-parallel attention core is on by default, gated by
+    /// [`ATTN_PAR_MIN_MACS`] (see the setters).
     pub fn new(geo: &Geometry) -> Workspace {
-        let (m, d, dff, dh) = (geo.m, geo.d, geo.d_ff, geo.dh());
+        let (m, d, dff, dh, heads) = (geo.m, geo.d, geo.d_ff, geo.dh(), geo.heads.max(1));
         Workspace {
             s: LayerScratch {
                 geo: *geo,
+                attn_heads_parallel: true,
+                attn_par_min_macs: ATTN_PAR_MIN_MACS,
                 acc: vec![0i32; m * d],
                 q8: vec![0i32; m * d],
                 k8: vec![0i32; m * d],
@@ -173,13 +212,13 @@ impl Workspace {
                 ctx8: vec![0i32; m * d],
                 x2: vec![0i32; m * d],
                 ln: vec![0i32; m * d],
-                scores: vec![0i32; m * m],
-                probs: vec![0i32; m * m],
-                row64: vec![0i64; m],
-                qh: vec![0i32; m * dh],
-                kh: vec![0i32; m * dh],
-                vh: vec![0i32; m * dh],
-                ctx_h: vec![0i32; m * dh],
+                scores: vec![0i32; heads * m * m],
+                probs: vec![0i32; heads * m * m],
+                row64: vec![0i64; heads * m],
+                qh: vec![0i32; heads * m * dh],
+                kh: vec![0i32; heads * m * dh],
+                vh: vec![0i32; heads * m * dh],
+                ctx_h: vec![0i32; heads * m * dh],
                 res: vec![0i64; m * d],
                 g64: vec![0i64; d],
                 b64: vec![0i64; d],
@@ -194,6 +233,21 @@ impl Workspace {
     /// Maximum live sequence length this arena can serve.
     pub fn max_seq_len(&self) -> usize {
         self.s.geo.m
+    }
+
+    /// Select the head-parallel attention core (default on).  Off
+    /// forces the serial head loop — numerics are bit-exact either way
+    /// (DESIGN.md §7), so this is an execution knob, not a model knob.
+    pub fn set_attn_heads_parallel(&mut self, on: bool) {
+        self.s.attn_heads_parallel = on;
+    }
+
+    /// Override the per-head MAC floor ([`ATTN_PAR_MIN_MACS`]) below
+    /// which the head loop stays serial even when parallelism is
+    /// enabled.  Tests force 0 to exercise the scoped parallel-for at
+    /// tiny shapes.
+    pub fn set_attn_par_min_macs(&mut self, macs: usize) {
+        self.s.attn_par_min_macs = macs;
     }
 }
 
@@ -212,11 +266,224 @@ fn gather_head(x: &[i32], m: usize, d: usize, h: usize, dh: usize, out: &mut [i3
     }
 }
 
+/// One attention head of the fused path: gather the head's Q/K/V
+/// panels, Q·Kᵀ, per-row Scale → Softmax, then P·V with the
+/// INT32 -> INT8 context requantization fused at the matmul readout
+/// (paper Fig. 10's per-head pipeline).  Touches only the head's own
+/// lanes, so heads run concurrently with no shared mutable state.
+/// `par_kernels` selects the auto-dispatching matmuls — off inside
+/// spawned head tasks (head-level concurrency already owns the cores),
+/// on in the serial head loop so large serial runs keep row tiling.
+#[allow(clippy::too_many_arguments)]
+fn attention_head_fused(
+    h: usize,
+    m: usize,
+    d: usize,
+    dh: usize,
+    q8: &[i32],
+    k8: &[i32],
+    v8: &[i32],
+    c: &LayerConsts,
+    par_kernels: bool,
+    qh: &mut [i32],
+    kh: &mut [i32],
+    vh: &mut [i32],
+    scores: &mut [i32],
+    probs: &mut [i32],
+    row64: &mut [i64],
+    ctx_h: &mut [i32],
+) {
+    gather_head(q8, m, d, h, dh, qh);
+    gather_head(k8, m, d, h, dh, kh);
+    gather_head(v8, m, d, h, dh, vh);
+    if par_kernels {
+        i_matmul_bt_par(qh, kh, m, dh, m, scores);
+    } else {
+        i_matmul_bt(qh, kh, m, dh, m, scores);
+    }
+    // Scale block + Softmax rows
+    for r in 0..m {
+        for (dst, &sv) in row64.iter_mut().zip(&scores[r * m..(r + 1) * m]) {
+            *dst = rescale(sv as i64, c.dy_scale);
+        }
+        i_softmax(row64, &c.softmax, &mut probs[r * m..(r + 1) * m]);
+    }
+    // P.V with the context requantization fused at readout — the
+    // per-head fused rescale ITA/FQ-BERT put at the PE boundary
+    let epi = Epilogue::Requant(c.dy_ctx);
+    if par_kernels {
+        i_matmul_epilogue_par(probs, vh, None, m, m, dh, epi, ctx_h);
+    } else {
+        i_matmul_epilogue(probs, vh, None, m, m, dh, epi, ctx_h);
+    }
+}
+
 /// Bit-exact integer encoder layer (paper Figs. 5, 8-15) over the
-/// scratch arena.  `m_eff` rows are live; every loop and kernel runs on
-/// exactly those rows, so both numerics and cost shape to the request.
+/// scratch arena — the fused, head-parallel structure (DESIGN.md §7).
+/// `m_eff` rows are live; every loop and kernel runs on exactly those
+/// rows, so both numerics and cost shape to the request.  Bit-exact
+/// with [`layer_forward_scratch_unfused`] for every input: the fused
+/// epilogues are elementwise and each head's accumulation order is
+/// untouched (asserted in `rust/tests/attention_fused.rs`).
 #[allow(clippy::too_many_arguments)]
 fn layer_forward_scratch(
+    q_x: &[i32],
+    w: &LayerWeights,
+    c: &LayerConsts,
+    geo: &Geometry,
+    m_eff: usize,
+    s: &mut LayerScratch,
+    q_out: &mut [i32],
+    sqrt_iters: &mut Vec<u32>,
+) {
+    let (d, dff, dh, heads) = (geo.d, geo.d_ff, geo.dh(), geo.heads);
+    let m = m_eff;
+    assert!(
+        m >= 1 && m <= s.geo.m && d == s.geo.d && dff == s.geo.d_ff && heads == s.geo.heads,
+        "m_eff {m} / geometry incompatible with workspace built for {:?}",
+        s.geo
+    );
+    assert_eq!(q_x.len(), m * d, "q_x shape");
+    assert_eq!(q_out.len(), m * d, "q_out shape");
+
+    let attn_parallel =
+        s.attn_heads_parallel && heads > 1 && 2 * m * m * dh >= s.attn_par_min_macs;
+
+    let LayerScratch {
+        acc, q8, k8, v8, ctx8, x2, ln, scores, probs, row64,
+        qh, kh, vh, ctx_h, res, g64, b64, hff, h8, ..
+    } = s;
+    let acc = &mut acc[..m * d];
+    let q8 = &mut q8[..m * d];
+    let k8 = &mut k8[..m * d];
+    let v8 = &mut v8[..m * d];
+    let ctx8 = &mut ctx8[..m * d];
+    let x2 = &mut x2[..m * d];
+    let ln = &mut ln[..m * d];
+    let scores = &mut scores[..heads * m * m];
+    let probs = &mut probs[..heads * m * m];
+    let row64 = &mut row64[..heads * m];
+    let qh = &mut qh[..heads * m * dh];
+    let kh = &mut kh[..heads * m * dh];
+    let vh = &mut vh[..heads * m * dh];
+    let ctx_h = &mut ctx_h[..heads * m * dh];
+    let res = &mut res[..m * d];
+    let g64 = &mut g64[..d];
+    let b64 = &mut b64[..d];
+    let hff = &mut hff[..m * dff];
+    let h8 = &mut h8[..m * dff];
+
+    // --- Q/K/V projections, requantization fused at the readout (no
+    // separate full-tensor pass, no shared INT32 accumulator) ---
+    i_matmul_epilogue_par(q_x, &w.wq, Some(&w.bq), m, d, d, Epilogue::Requant(c.dy_q), q8);
+    i_matmul_epilogue_par(q_x, &w.wk, Some(&w.bk), m, d, d, Epilogue::Requant(c.dy_k), k8);
+    i_matmul_epilogue_par(q_x, &w.wv, Some(&w.bv), m, d, d, Epilogue::Requant(c.dy_v), v8);
+
+    // --- Attention: every head owns disjoint per-head lanes, so the
+    // head loop is a scoped parallel-for when the per-head work clears
+    // the spawn cost (serial in-thread otherwise / when disabled) ---
+    // (dh == 0 is a degenerate geometry: no head owns any columns, the
+    // tail fill below zeroes all of ctx8 — and chunks_mut(0) would panic)
+    if dh > 0 {
+        let (q8, k8, v8) = (&*q8, &*k8, &*v8);
+        let lanes = qh
+            .chunks_mut(m * dh)
+            .zip(kh.chunks_mut(m * dh))
+            .zip(vh.chunks_mut(m * dh))
+            .zip(ctx_h.chunks_mut(m * dh))
+            .zip(scores.chunks_mut(m * m))
+            .zip(probs.chunks_mut(m * m))
+            .zip(row64.chunks_mut(m))
+            .enumerate();
+        if attn_parallel {
+            let jobs: Vec<_> = lanes
+                .map(|(h, ((((((qh, kh), vh), ctx_h), scores), probs), row64))| {
+                    move || {
+                        attention_head_fused(
+                            h, m, d, dh, q8, k8, v8, c, false, qh, kh, vh, scores, probs,
+                            row64, ctx_h,
+                        )
+                    }
+                })
+                .collect();
+            run_scoped(jobs);
+        } else {
+            for (h, ((((((qh, kh), vh), ctx_h), scores), probs), row64)) in lanes {
+                attention_head_fused(
+                    h, m, d, dh, q8, k8, v8, c, true, qh, kh, vh, scores, probs, row64,
+                    ctx_h,
+                );
+            }
+        }
+    }
+    // Scatter the INT8 head panels into row-major ctx8.  Tail columns
+    // (heads * dh may undershoot d) stay zero exactly as the unfused
+    // path's zeroed accumulator guarantees — requantize(0) == 0.
+    if heads * dh < d {
+        for r in 0..m {
+            ctx8[r * d + heads * dh..(r + 1) * d].fill(0);
+        }
+    }
+    if dh > 0 {
+        for (h, lane) in ctx_h.chunks(m * dh).enumerate() {
+            for r in 0..m {
+                ctx8[r * d + h * dh..r * d + (h + 1) * dh]
+                    .copy_from_slice(&lane[r * dh..(r + 1) * dh]);
+            }
+        }
+    }
+
+    // --- output projection with the residual-alignment rescale fused
+    // at the readout, then the i64 residual add + LayerNorm 1 ---
+    i_matmul_epilogue_par(ctx8, &w.wo, Some(&w.bo), m, d, d, Epilogue::Rescale(c.dy_res1), acc);
+    for ((dst, &xv), &av) in res.iter_mut().zip(q_x).zip(acc.iter()) {
+        *dst = xv as i64 + av as i64;
+    }
+    for (g, &v) in g64.iter_mut().zip(&w.gamma1) {
+        *g = v as i64;
+    }
+    for (b, &v) in b64.iter_mut().zip(&w.beta1) {
+        *b = v as i64;
+    }
+    for r in 0..m {
+        let row = &mut ln[r * d..(r + 1) * d];
+        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln1, row);
+        sqrt_iters.push(it);
+    }
+    requant_into(ln, c.dy_ln1, x2);
+
+    // --- FFN: MatMul -> GELU -> Req -> MatMul (rescale fused) ---
+    i_matmul_par(x2, &w.w1, Some(&w.b1), m, d, dff, hff);
+    for (o, &v) in h8.iter_mut().zip(hff.iter()) {
+        *o = requantize_signed(quant::i_gelu(v as i64, &c.gelu), c.dy_gelu, -1);
+    }
+    i_matmul_epilogue_par(h8, &w.w2, Some(&w.b2), m, dff, d, Epilogue::Rescale(c.dy_res2), acc);
+
+    // --- residual align + LayerNorm 2 + output requant ---
+    for ((dst, &xv), &av) in res.iter_mut().zip(x2.iter()).zip(acc.iter()) {
+        *dst = xv as i64 + av as i64;
+    }
+    for (g, &v) in g64.iter_mut().zip(&w.gamma2) {
+        *g = v as i64;
+    }
+    for (b, &v) in b64.iter_mut().zip(&w.beta2) {
+        *b = v as i64;
+    }
+    for r in 0..m {
+        let row = &mut ln[r * d..(r + 1) * d];
+        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln2, row);
+        sqrt_iters.push(it);
+    }
+    requant_into(ln, c.dy_ln2, q_out);
+}
+
+/// The pre-fusion reference: serial head loop, separate full-tensor
+/// requantization/rescale passes over a shared INT32 accumulator —
+/// exactly the structure this file shipped before the fused path
+/// (DESIGN.md §7).  Kept as the golden baseline the fused/parallel
+/// path is asserted bit-exact against.
+#[allow(clippy::too_many_arguments)]
+fn layer_forward_scratch_unfused(
     q_x: &[i32],
     w: &LayerWeights,
     c: &LayerConsts,
@@ -248,6 +515,7 @@ fn layer_forward_scratch(
     let ctx8 = &mut ctx8[..m * d];
     let x2 = &mut x2[..m * d];
     let ln = &mut ln[..m * d];
+    // lane 0 of the per-head buffers — this path reuses one head's lane
     let scores = &mut scores[..m * m];
     let probs = &mut probs[..m * m];
     let row64 = &mut row64[..m];
@@ -306,7 +574,8 @@ fn layer_forward_scratch(
         *b = v as i64;
     }
     for r in 0..m {
-        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln1, &mut ln[r * d..(r + 1) * d]);
+        let row = &mut ln[r * d..(r + 1) * d];
+        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln1, row);
         sqrt_iters.push(it);
     }
     requant_into(ln, c.dy_ln1, x2);
@@ -329,7 +598,8 @@ fn layer_forward_scratch(
         *b = v as i64;
     }
     for r in 0..m {
-        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln2, &mut ln[r * d..(r + 1) * d]);
+        let row = &mut ln[r * d..(r + 1) * d];
+        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln2, row);
         sqrt_iters.push(it);
     }
     requant_into(ln, c.dy_ln2, q_out);
@@ -339,7 +609,9 @@ fn layer_forward_scratch(
 /// the resident arena, writing the INT8-coded output into `q_out`
 /// (`m_eff * geo.d`) and appending `2 * m_eff` sqrt iteration counts
 /// (ln1 rows then ln2 rows) to `sqrt_iters`.  Allocation-free once
-/// `sqrt_iters` has capacity (DESIGN.md §6).
+/// `sqrt_iters` has capacity (DESIGN.md §6).  Runs the fused,
+/// head-parallel attention core (DESIGN.md §7; knobs on [`Workspace`])
+/// — bit-exact with [`layer_forward_ws_unfused`] for every input.
 #[allow(clippy::too_many_arguments)]
 pub fn layer_forward_ws(
     q_x: &[i32],
@@ -354,14 +626,40 @@ pub fn layer_forward_ws(
     layer_forward_scratch(q_x, w, c, geo, m_eff, &mut ws.s, q_out, sqrt_iters);
 }
 
+/// The serial, unfused reference layer over a caller-owned arena: the
+/// pre-fusion structure (separate full-tensor requantization passes,
+/// sequential head loop), same signature as [`layer_forward_ws`].  The
+/// golden baseline of `rust/tests/attention_fused.rs` and the
+/// comparison leg of the `serving_scaling` bench (EXPERIMENTS.md
+/// §Perf).
+#[allow(clippy::too_many_arguments)]
+pub fn layer_forward_ws_unfused(
+    q_x: &[i32],
+    w: &LayerWeights,
+    c: &LayerConsts,
+    geo: &Geometry,
+    m_eff: usize,
+    ws: &mut Workspace,
+    q_out: &mut [i32],
+    sqrt_iters: &mut Vec<u32>,
+) {
+    layer_forward_scratch_unfused(q_x, w, c, geo, m_eff, &mut ws.s, q_out, sqrt_iters);
+}
+
 /// Bit-exact integer encoder layer (paper Figs. 5, 8-15): allocating
-/// convenience wrapper over [`layer_forward_ws`] at full length
-/// `geo.m`; identical output by construction.
-pub fn layer_forward(q_x: &[i32], w: &LayerWeights, c: &LayerConsts, geo: &Geometry) -> LayerOutput {
+/// convenience wrapper at full length `geo.m`, running the serial
+/// *unfused* reference structure — the pre-refactor function the golden
+/// tests pin the fused path against; identical output by construction.
+pub fn layer_forward(
+    q_x: &[i32],
+    w: &LayerWeights,
+    c: &LayerConsts,
+    geo: &Geometry,
+) -> LayerOutput {
     let mut ws = Workspace::new(geo);
     let mut q_out = vec![0i32; geo.m * geo.d];
     let mut sqrt_iters = Vec::with_capacity(2 * geo.m);
-    layer_forward_scratch(q_x, w, c, geo, geo.m, &mut ws.s, &mut q_out, &mut sqrt_iters);
+    layer_forward_scratch_unfused(q_x, w, c, geo, geo.m, &mut ws.s, &mut q_out, &mut sqrt_iters);
     LayerOutput { q_out, sqrt_iters }
 }
 
@@ -531,6 +829,46 @@ mod tests {
             let want = layer_forward(&x, &w, &c, &trunc);
             assert_eq!(out, want.q_out, "m_eff={m_eff}");
             assert_eq!(iters, want.sqrt_iters, "m_eff={m_eff}");
+        }
+    }
+
+    #[test]
+    fn fused_head_parallel_matches_unfused_reference() {
+        // All four execution modes — fused parallel (forced), fused
+        // serial, unfused over the arena, unfused allocating wrapper —
+        // must agree bit for bit, outputs and sqrt iteration counts.
+        let geo = tiny_geo();
+        let mut rng = Rng::new(9);
+        let w = weights(&mut rng, &geo);
+        let c = consts(&geo);
+        for m_eff in [1usize, 3, geo.m] {
+            let x = rand_w(&mut rng, m_eff * geo.d, 127);
+
+            let mut ws = Workspace::new(&geo);
+            ws.set_attn_par_min_macs(0); // force the scoped parallel-for
+            let mut out_par = vec![0i32; m_eff * geo.d];
+            let mut it_par = Vec::new();
+            layer_forward_ws(&x, &w, &c, &geo, m_eff, &mut ws, &mut out_par, &mut it_par);
+
+            let mut ws2 = Workspace::new(&geo);
+            ws2.set_attn_heads_parallel(false);
+            let mut out_ser = vec![0i32; m_eff * geo.d];
+            let mut it_ser = Vec::new();
+            layer_forward_ws(&x, &w, &c, &geo, m_eff, &mut ws2, &mut out_ser, &mut it_ser);
+
+            let mut ws3 = Workspace::new(&geo);
+            let mut out_ref = vec![0i32; m_eff * geo.d];
+            let mut it_ref = Vec::new();
+            layer_forward_ws_unfused(&x, &w, &c, &geo, m_eff, &mut ws3, &mut out_ref, &mut it_ref);
+
+            assert_eq!(out_par, out_ref, "parallel fused vs unfused, m_eff={m_eff}");
+            assert_eq!(it_par, it_ref, "sqrt iters, m_eff={m_eff}");
+            assert_eq!(out_ser, out_ref, "serial fused vs unfused, m_eff={m_eff}");
+            assert_eq!(it_ser, it_ref, "sqrt iters serial, m_eff={m_eff}");
+
+            let trunc = Geometry { m: m_eff, ..geo };
+            let want = layer_forward(&x, &w, &c, &trunc);
+            assert_eq!(out_par, want.q_out, "wrapper agreement, m_eff={m_eff}");
         }
     }
 

@@ -37,6 +37,30 @@ pub fn tile_ranges(n: usize, tiles: usize) -> Vec<std::ops::Range<usize>> {
     out
 }
 
+/// Scoped parallel-for: run every job concurrently on scoped threads,
+/// joining before returning.  Unlike [`ThreadPool::execute`] the jobs
+/// may borrow from the caller's stack — which is exactly what the
+/// data-parallel kernels and the head-parallel attention loop want:
+/// disjoint `&mut` tiles of one resident buffer (`quant::matmul`,
+/// `sim::functional`).  Zero or one job runs inline on the calling
+/// thread (no spawn for degenerate fan-outs).
+pub fn run_scoped<F>(jobs: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    if jobs.len() <= 1 {
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for job in jobs {
+            s.spawn(job);
+        }
+    });
+}
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 enum Msg {
@@ -234,5 +258,33 @@ mod tests {
     #[test]
     fn default_parallelism_is_positive() {
         assert!(default_parallelism() >= 1);
+    }
+
+    #[test]
+    fn run_scoped_fills_disjoint_tiles() {
+        // the contract the kernels rely on: every job runs exactly once,
+        // jobs may borrow disjoint &mut tiles, and the call joins them all
+        let mut data = vec![0u64; 64];
+        let jobs: Vec<_> = data
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, tile)| {
+                move || {
+                    for (j, v) in tile.iter_mut().enumerate() {
+                        *v = (i * 16 + j) as u64;
+                    }
+                }
+            })
+            .collect();
+        run_scoped(jobs);
+        assert_eq!(data, (0u64..64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn run_scoped_handles_empty_and_singleton() {
+        run_scoped(Vec::<fn()>::new());
+        let mut hit = false;
+        run_scoped(vec![|| hit = true]);
+        assert!(hit, "singleton job runs inline");
     }
 }

@@ -1,0 +1,139 @@
+//! Golden bit-exactness of the head-parallel, fused-epilogue attention
+//! path (DESIGN.md §7): on randomized shapes — including the
+//! `heads * dh < d` zero-tail case — and live lengths
+//! `m_eff ∈ {1, odd, geo.m}`, the fused forward pass (head loop forced
+//! parallel AND knob-off serial) must equal the serial unfused
+//! reference bit for bit, outputs and sqrt iteration counts alike.
+
+use swifttron::model::Geometry;
+use swifttron::sim::functional::{
+    encoder_forward_ws, layer_forward, layer_forward_ws, layer_forward_ws_unfused,
+    synthetic_consts, LayerWeights, Workspace,
+};
+use swifttron::util::rng::Rng;
+
+/// Random small geometry (layers = 1).  With `with_tail`, `d` exceeds
+/// `heads * dh` by `1..heads` columns — the attention tail the head
+/// loop never touches and must leave zeroed (`Geometry::dh` floors, so
+/// a sub-`heads` tail keeps `dh()` intact).
+fn random_geo(rng: &mut Rng, with_tail: bool) -> Geometry {
+    let heads = 2 + rng.below(3) as usize; // 2..=4
+    let dh = 4 * (1 + rng.below(3) as usize); // 4, 8, 12
+    let tail = if with_tail { 1 + rng.below(heads as u64 - 1) as usize } else { 0 };
+    let d = heads * dh + tail;
+    let m = 4 + rng.below(13) as usize; // 4..=16
+    let dff = 8 * (1 + rng.below(4) as usize); // 8..=32
+    Geometry::new(d, heads, m, dff, 1)
+}
+
+#[test]
+fn head_parallel_fused_matches_serial_unfused_on_randomized_shapes() {
+    let mut rng = Rng::new(0xFACADE);
+    for case in 0..24 {
+        let geo = random_geo(&mut rng, case % 2 == 1);
+        let w = LayerWeights::synthetic(&mut rng, &geo);
+        let c = synthetic_consts(&geo);
+        let odd = 1 + 2 * rng.below(geo.m as u64 / 2) as usize; // odd, < geo.m
+        for m_eff in [1usize, odd, geo.m] {
+            let x: Vec<i32> =
+                (0..m_eff * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+
+            // fused, head loop FORCED parallel (threshold floored so
+            // tiny shapes still exercise the scoped parallel-for)
+            let mut ws = Workspace::new(&geo);
+            ws.set_attn_heads_parallel(true);
+            ws.set_attn_par_min_macs(0);
+            let mut out_par = vec![0i32; m_eff * geo.d];
+            let mut it_par = Vec::new();
+            layer_forward_ws(&x, &w, &c, &geo, m_eff, &mut ws, &mut out_par, &mut it_par);
+
+            // fused, serial head loop (the selectable knob off)
+            let mut ws2 = Workspace::new(&geo);
+            ws2.set_attn_heads_parallel(false);
+            let mut out_ser = vec![0i32; m_eff * geo.d];
+            let mut it_ser = Vec::new();
+            layer_forward_ws(&x, &w, &c, &geo, m_eff, &mut ws2, &mut out_ser, &mut it_ser);
+
+            // serial unfused reference over the same arena geometry
+            let mut ws3 = Workspace::new(&geo);
+            let mut out_ref = vec![0i32; m_eff * geo.d];
+            let mut it_ref = Vec::new();
+            layer_forward_ws_unfused(&x, &w, &c, &geo, m_eff, &mut ws3, &mut out_ref, &mut it_ref);
+
+            let tag = format!("case {case} {geo:?} m_eff={m_eff}");
+            assert_eq!(out_par, out_ref, "{tag}: parallel fused vs unfused");
+            assert_eq!(it_par, it_ref, "{tag}: sqrt iters (parallel)");
+            assert_eq!(out_ser, out_ref, "{tag}: serial fused vs unfused");
+            assert_eq!(it_ser, it_ref, "{tag}: sqrt iters (serial)");
+
+            // and the pre-refactor allocating wrapper agrees on the
+            // truncated geometry (weights are m-independent)
+            let trunc = Geometry { m: m_eff, ..geo };
+            let want = layer_forward(&x, &w, &c, &trunc);
+            assert_eq!(out_par, want.q_out, "{tag}: wrapper agreement");
+            assert_eq!(it_par, want.sqrt_iters, "{tag}: wrapper sqrt iters");
+        }
+    }
+}
+
+#[test]
+fn encoder_stack_fused_matches_layerwise_unfused_reference() {
+    // The multi-layer workspace path (ping-pong activations) with the
+    // parallel head loop forced on must equal chaining the serial
+    // unfused reference layer by layer.
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..6 {
+        let mut geo = random_geo(&mut rng, case % 2 == 0);
+        geo.layers = 1 + rng.below(3) as usize;
+        let layers: Vec<_> = (0..geo.layers)
+            .map(|_| (LayerWeights::synthetic(&mut rng, &geo), synthetic_consts(&geo)))
+            .collect();
+        let m_eff = 1 + rng.below(geo.m as u64) as usize;
+        let x: Vec<i32> =
+            (0..m_eff * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+
+        let mut ws = Workspace::new(&geo);
+        ws.set_attn_par_min_macs(0); // force the parallel head loop
+        let mut out = vec![0i32; m_eff * geo.d];
+        let mut iters = Vec::new();
+        encoder_forward_ws(&x, &layers, &geo, m_eff, &mut ws, &mut out, &mut iters);
+
+        let mut ws_ref = Workspace::new(&geo);
+        let mut cur = x.clone();
+        let mut nxt = vec![0i32; m_eff * geo.d];
+        let mut it_ref = Vec::new();
+        for (w, c) in &layers {
+            layer_forward_ws_unfused(&cur, w, c, &geo, m_eff, &mut ws_ref, &mut nxt, &mut it_ref);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        assert_eq!(out, cur, "case {case} {geo:?} m_eff={m_eff}");
+        assert_eq!(iters, it_ref, "case {case} sqrt iters");
+    }
+}
+
+#[test]
+fn zero_tail_columns_stay_inert_under_both_paths() {
+    // heads * dh < d: flipping an input value in the tail columns must
+    // influence both paths identically (the tail flows through the
+    // projections and residuals, just not through attention) — and the
+    // two paths must stay bit-exact while doing so.
+    let mut rng = Rng::new(0x7A11);
+    let geo = Geometry::new(2 * 8 + 1, 2, 8, 16, 1); // d=17, heads*dh=16
+    assert!(geo.heads * geo.dh() < geo.d);
+    let w = LayerWeights::synthetic(&mut rng, &geo);
+    let c = synthetic_consts(&geo);
+    let x: Vec<i32> = (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+    let mut x_flip = x.clone();
+    x_flip[geo.d - 1] = (x_flip[geo.d - 1] + 40).min(127); // tail column, row 0
+
+    for input in [&x, &x_flip] {
+        let mut ws = Workspace::new(&geo);
+        ws.set_attn_par_min_macs(0);
+        let mut out_fused = vec![0i32; geo.m * geo.d];
+        let mut it_fused = Vec::new();
+        layer_forward_ws(input, &w, &c, &geo, geo.m, &mut ws, &mut out_fused, &mut it_fused);
+        let want = layer_forward(input, &w, &c, &geo);
+        assert_eq!(out_fused, want.q_out, "zero-tail geometry diverged");
+        assert_eq!(it_fused, want.sqrt_iters);
+    }
+}
