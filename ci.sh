@@ -10,6 +10,23 @@ cd "$(dirname "$0")"
 
 cargo build --release
 cargo test -q
+
+# Integration-test timing summary: each [[test]] target re-run on its
+# own (--nocapture streams long-running targets live) with wall seconds
+# per target, so a slow suite is visible before it creeps into minutes.
+echo "-- integration-test timing (cargo test -q --test '*' -- --nocapture) --"
+suite_start=$SECONDS
+for t in $(awk '/^\[\[test\]\]/{grab=1;next} grab&&/^name = /{gsub(/"/,""); print $3; grab=0}' Cargo.toml); do
+  t_start=$SECONDS
+  cargo test -q --test "$t" -- --nocapture
+  echo "  $t: $((SECONDS-t_start))s"
+done
+echo "  total: $((SECONDS-suite_start))s"
+
+# The pjrt feature must keep compiling against the in-repo xla stub
+# (check-only: there is no real PJRT client to run against here).
+cargo check --features pjrt --all-targets
+
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

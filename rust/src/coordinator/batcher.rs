@@ -14,8 +14,18 @@
 //! rides behind a full-length straggler at the group barrier) and the
 //! padding a bucket-configured accelerator would waste is bounded by the
 //! bucket width and reported by `coordinator::metrics`.  A width of 0
-//! disables bucketing — every request shares one queue, the seed
-//! behavior.
+//! disables bucketing — every request of one model shares one queue, the
+//! seed behavior.
+//!
+//! With multiple resident models (DESIGN.md §8) the queue key becomes
+//! `(model, padded_len)`, so a dispatch group is always
+//! model-homogeneous, and model selection among full buckets is
+//! *weighted-fair*: a deficit-round-robin variant over models where each
+//! dispatch charges the model its group's bucket-padded tokens and the
+//! next dispatch goes to the backlogged model with the least normalized
+//! (charge ÷ weight) service.  A flood of cheap-model traffic therefore
+//! cannot starve a heavy model past its share — while a deadline-expired
+//! request still outranks any full bucket, whatever the weights say.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -53,9 +63,10 @@ impl BatchPolicy {
         }
     }
 
-    /// Queue key for a request of `len` tokens: the bucket boundary, or
-    /// the single shared queue when bucketing is off — width 0 must
-    /// never split lengths into separate queues (the seed behavior).
+    /// Length half of the queue key for a request of `len` tokens: the
+    /// bucket boundary, or the single shared queue when bucketing is
+    /// off — width 0 must never split lengths into separate queues (the
+    /// seed behavior).
     fn bucket_key(&self, len: usize) -> usize {
         if self.bucket_width == 0 {
             0
@@ -65,35 +76,125 @@ impl BatchPolicy {
     }
 }
 
+/// One queued entry: the item, its arrival time, and the bucket-padded
+/// token count its dispatch will charge to the owning model.
+type Entry<T> = (T, Instant, u64);
+
 #[derive(Debug)]
 pub struct Batcher<T> {
     policy: BatchPolicy,
-    /// Per-bucket FIFO queues keyed by padded length.  Length-agnostic
-    /// callers ([`Batcher::push`]) share bucket 0.
-    buckets: BTreeMap<usize, VecDeque<(T, Instant)>>,
+    /// Per-bucket FIFO queues keyed by `(model, padded length)`.
+    /// Model- and length-agnostic callers ([`Batcher::push`]) share
+    /// bucket `(0, 0)`.
+    buckets: BTreeMap<(usize, usize), VecDeque<Entry<T>>>,
     queued: usize,
+    /// Fair-share weight per model index (missing / unset => 1).
+    weights: Vec<u64>,
+    /// Cumulative bucket-padded tokens dispatched per model — the
+    /// deficit-round-robin ledger.  The next full-bucket dispatch goes
+    /// to the backlogged model minimizing `charged / weight`.
+    charged: Vec<u64>,
 }
 
 impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, buckets: BTreeMap::new(), queued: 0 }
+        Batcher {
+            policy,
+            buckets: BTreeMap::new(),
+            queued: 0,
+            weights: Vec::new(),
+            charged: Vec::new(),
+        }
     }
 
-    /// Enqueue into the single default bucket (length-agnostic callers).
+    /// Configure per-model fair-share weights (index = model id).
+    /// Models beyond the slice keep weight 1.
+    pub fn set_model_weights(&mut self, weights: &[u64]) {
+        assert!(weights.iter().all(|&w| w > 0), "model weights must be positive");
+        self.weights = weights.to_vec();
+        if self.charged.len() < weights.len() {
+            self.charged.resize(weights.len(), 0);
+        }
+    }
+
+    fn weight(&self, model: usize) -> u64 {
+        self.weights.get(model).copied().unwrap_or(1).max(1)
+    }
+
+    /// Bucket-padded tokens dispatched for `model` so far (the
+    /// weighted-fair ledger; exposed for tests and reporting).
+    pub fn charged_tokens(&self, model: usize) -> u64 {
+        self.charged.get(model).copied().unwrap_or(0)
+    }
+
+    /// `a` has strictly less normalized (charge ÷ weight) service than
+    /// `b`: `charged[a]/w[a] < charged[b]/w[b]`, cross-multiplied so the
+    /// comparison stays exact in integers.
+    fn norm_less(&self, a: usize, b: usize) -> bool {
+        (self.charged_tokens(a) as u128) * self.weight(b) as u128
+            < (self.charged_tokens(b) as u128) * self.weight(a) as u128
+    }
+
+    fn has_backlog(&self, model: usize) -> bool {
+        self.buckets.range((model, 0)..=(model, usize::MAX)).next().is_some()
+    }
+
+    /// Backlogged model with the least normalized service, if any.
+    fn min_norm_backlogged(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        let mut last = usize::MAX;
+        for &(m, _) in self.buckets.keys() {
+            if m == last {
+                continue;
+            }
+            last = m;
+            best = Some(match best {
+                None => m,
+                Some(b) if self.norm_less(m, b) => m,
+                Some(b) => b,
+            });
+        }
+        best
+    }
+
+    /// Enqueue into the single default bucket (model- and
+    /// length-agnostic callers).
     pub fn push(&mut self, item: T) {
-        self.push_len(item, 0);
+        self.push_keyed(item, 0, 0);
     }
 
-    /// Enqueue a request of sequence length `len`; returns the padded
-    /// bucket boundary (== `len` when bucketing is disabled), which the
-    /// caller can feed to the padding-waste metric.  With bucketing off
-    /// every length shares one queue, so mixed-length groups still form
-    /// exactly as in the unbucketed seed.
+    /// Enqueue a request of sequence length `len` under model 0 (the
+    /// single-model path); returns the padded bucket boundary.
     pub fn push_len(&mut self, item: T, len: usize) -> usize {
-        let key = self.policy.bucket_key(len);
-        self.buckets.entry(key).or_default().push_back((item, Instant::now()));
+        self.push_keyed(item, 0, len)
+    }
+
+    /// Enqueue a request of sequence length `len` for `model`; returns
+    /// the padded bucket boundary (== `len` when bucketing is
+    /// disabled), which the caller can feed to the padding-waste
+    /// metric.  A dispatch group never mixes models or buckets.
+    pub fn push_keyed(&mut self, item: T, model: usize, len: usize) -> usize {
+        if self.charged.len() <= model {
+            self.charged.resize(model + 1, 0);
+        }
+        // A model returning from idle re-enters at the backlog's
+        // current normalized service level: it competes fairly from
+        // now on instead of replaying the share it queued no work for.
+        if !self.has_backlog(model) {
+            if let Some(j) = self.min_norm_backlogged() {
+                let floor = (self.charged_tokens(j) as u128) * self.weight(model) as u128
+                    / self.weight(j) as u128;
+                let floor = floor.min(u64::MAX as u128) as u64;
+                if floor > self.charged[model] {
+                    self.charged[model] = floor;
+                }
+            }
+        }
+        let key = (model, self.policy.bucket_key(len));
+        let padded = self.policy.padded_len(len);
+        self.buckets.entry(key).or_default().push_back((item, Instant::now(), padded as u64));
         self.queued += 1;
-        self.policy.padded_len(len)
+        padded
     }
 
     pub fn len(&self) -> usize {
@@ -104,11 +205,19 @@ impl<T> Batcher<T> {
         self.queued == 0
     }
 
+    /// Queued requests of one model (all its buckets).
+    pub fn queued_for(&self, model: usize) -> usize {
+        self.buckets
+            .range((model, 0)..=(model, usize::MAX))
+            .map(|(_, q)| q.len())
+            .sum()
+    }
+
     /// The bucket whose front (oldest) request arrived earliest.
-    fn oldest_bucket(&self) -> Option<(usize, Instant)> {
+    fn oldest_bucket(&self) -> Option<((usize, usize), Instant)> {
         self.buckets
             .iter()
-            .filter_map(|(k, q)| q.front().map(|(_, t)| (*k, *t)))
+            .filter_map(|(k, q)| q.front().map(|&(_, t, _)| (*k, t)))
             .min_by_key(|&(_, t)| t)
     }
 
@@ -124,25 +233,46 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Among full buckets, the one owned by the model with the least
+    /// normalized service (deficit round-robin over models); ties
+    /// broken by oldest front, then key order.  Falls back to `oldest`
+    /// when no bucket is full (the deadline path).
+    fn full_bucket_fair(&self, oldest: (usize, usize)) -> (usize, usize) {
+        let mut best: Option<((usize, usize), Instant)> = None;
+        for (&k, q) in self.buckets.iter() {
+            if q.len() < self.policy.max_batch {
+                continue;
+            }
+            let Some(&(_, t, _)) = q.front() else { continue };
+            best = Some(match best {
+                None => (k, t),
+                Some((bk, bt)) => {
+                    if self.norm_less(k.0, bk.0) || (!self.norm_less(bk.0, k.0) && t < bt) {
+                        (k, t)
+                    } else {
+                        (bk, bt)
+                    }
+                }
+            });
+        }
+        best.map_or(oldest, |(k, _)| k)
+    }
+
     /// Pop one dispatch group (oldest first within its bucket).  A
     /// deadline-expired oldest request outranks any full bucket — a
-    /// minority-length bucket must never be starved past `max_wait` by
-    /// a hot bucket that keeps refilling to `max_batch`.  Otherwise a
-    /// full bucket goes first (ties broken by oldest front), then the
-    /// bucket holding the oldest request; other buckets stay queued for
-    /// their own group.
+    /// minority-length (or minority-model) bucket must never be starved
+    /// past `max_wait` by a hot bucket that keeps refilling to
+    /// `max_batch`.  Otherwise a full bucket goes, chosen by the
+    /// weighted-fair ledger across models (ties by oldest front), then
+    /// the bucket holding the oldest request; other buckets stay queued
+    /// for their own group.  Every dispatch charges its model the
+    /// group's bucket-padded tokens.
     pub fn take_batch(&mut self) -> Vec<T> {
         let now = Instant::now();
         let key = match self.oldest_bucket() {
             None => return Vec::new(),
             Some((k, t)) if now.duration_since(t) >= self.policy.max_wait => k,
-            Some((oldest_key, _)) => self
-                .buckets
-                .iter()
-                .filter(|(_, q)| q.len() >= self.policy.max_batch)
-                .filter_map(|(k, q)| q.front().map(|(_, t)| (*k, *t)))
-                .min_by_key(|&(_, t)| t)
-                .map_or(oldest_key, |(k, _)| k),
+            Some((oldest_key, _)) => self.full_bucket_fair(oldest_key),
         };
         // `key` was just derived from a live entry, so the bucket
         // exists today; stay total anyway — an empty batch beats
@@ -154,11 +284,31 @@ impl<T> Batcher<T> {
             return Vec::new();
         };
         let n = q.len().min(self.policy.max_batch);
-        let out: Vec<T> = q.drain(..n).map(|(t, _)| t).collect();
+        let mut tokens: u64 = 0;
+        let out: Vec<T> = q
+            .drain(..n)
+            .map(|(item, _, padded)| {
+                tokens += padded;
+                item
+            })
+            .collect();
         if q.is_empty() {
             self.buckets.remove(&key);
         }
         self.queued -= out.len();
+        if self.charged.len() <= key.0 {
+            self.charged.resize(key.0 + 1, 0);
+        }
+        self.charged[key.0] = self.charged[key.0].saturating_add(tokens);
+        if self.queued == 0 {
+            // Epoch reset: an idle pool carries no fairness debt
+            // forward.  Without it a model that served alone, drained,
+            // and later resumed would keep a stale surplus against a
+            // tenant that first arrived into the empty queue at charge
+            // zero — the one direction the re-entry floor in
+            // `push_keyed` cannot cover.
+            self.charged.iter_mut().for_each(|c| *c = 0);
+        }
         out
     }
 
@@ -300,7 +450,7 @@ mod tests {
                 let b = Arc::clone(&b);
                 std::thread::spawn(move || {
                     for i in 0..PER_PRODUCER {
-                        b.lock().unwrap().push_len(p * PER_PRODUCER + i, 1 + (i % 9));
+                        b.lock().unwrap().push_keyed(p * PER_PRODUCER + i, p % 2, 1 + (i % 9));
                         if i % 16 == 0 {
                             std::thread::yield_now();
                         }
@@ -418,5 +568,102 @@ mod tests {
         // though its key (12) sorts after the short bucket's key (4)
         assert_eq!(b.take_batch(), vec!["first-long"]);
         assert_eq!(b.take_batch(), vec!["second-short"]);
+    }
+
+    #[test]
+    fn dispatch_groups_never_mix_models_even_unbucketed() {
+        // width 0: lengths share one queue per model, but models stay
+        // separate — a dispatch group is always model-homogeneous
+        let mut b = Batcher::new(unbucketed(4, Duration::from_secs(60)));
+        b.push_keyed("a0", 0, 3);
+        b.push_keyed("b0", 1, 3);
+        b.push_keyed("a1", 0, 5);
+        b.push_keyed("b1", 1, 5);
+        b.push_keyed("a2", 0, 7);
+        b.push_keyed("a3", 0, 2); // model 0's queue reaches max_batch
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec!["a0", "a1", "a2", "a3"]);
+        assert_eq!(b.take_batch(), vec!["b0", "b1"]);
+    }
+
+    #[test]
+    fn weighted_fair_selection_tracks_the_deficit_ledger() {
+        // two models, weight 2 vs 1, both buckets kept full: out of
+        // every three dispatches model 0 gets two (charged tokens stay
+        // within one group of the 2:1 split)
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.set_model_weights(&[2, 1]);
+        for i in 0..24 {
+            b.push_keyed((0usize, i), 0, 8);
+            b.push_keyed((1usize, i), 1, 8);
+        }
+        let mut served = [0usize; 2];
+        for _ in 0..9 {
+            let batch = b.take_batch();
+            assert_eq!(batch.len(), 2);
+            let model = batch[0].0;
+            assert!(batch.iter().all(|&(m, _)| m == model), "mixed-model group");
+            served[model] += batch.len();
+        }
+        assert_eq!(served[0], 12, "weight-2 model takes two of every three groups");
+        assert_eq!(served[1], 6);
+        assert_eq!(b.charged_tokens(0), 12 * 8);
+        assert_eq!(b.charged_tokens(1), 6 * 8);
+    }
+
+    #[test]
+    fn draining_the_pool_resets_the_fairness_epoch() {
+        // a model that served alone and drained must not carry its
+        // charge into the next busy epoch: a tenant that first arrives
+        // into the empty queue starts level, not ahead
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.set_model_weights(&[1, 1]);
+        for i in 0..8 {
+            b.push_keyed((0usize, i), 0, 8);
+        }
+        while !b.is_empty() {
+            b.take_batch();
+        }
+        assert_eq!(b.charged_tokens(0), 0, "idle pool carries no fairness debt");
+        // next epoch: the late tenant and the returning one alternate
+        for i in 0..8 {
+            b.push_keyed((1usize, i), 1, 8);
+            b.push_keyed((0usize, 100 + i), 0, 8);
+        }
+        let mut served = [0usize; 2];
+        for _ in 0..8 {
+            served[b.take_batch()[0].0] += 1;
+        }
+        assert_eq!(served, [4, 4], "fresh epoch splits evenly");
+    }
+
+    #[test]
+    fn model_returning_from_idle_does_not_replay_missed_share() {
+        // model 1 sits idle while model 0 serves; when model 1's work
+        // arrives it re-enters at the current service level instead of
+        // monopolizing dispatches until its ledger catches up
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.set_model_weights(&[1, 1]);
+        for i in 0..16 {
+            b.push_keyed((0usize, i), 0, 8);
+        }
+        for _ in 0..4 {
+            assert_eq!(b.take_batch()[0].0, 0);
+        }
+        assert_eq!(b.charged_tokens(0), 64);
+        // model 1 arrives late while model 0 is still backlogged: its
+        // ledger jumps to model 0's level instead of starting at zero
+        for i in 0..8 {
+            b.push_keyed((1usize, i), 1, 8);
+        }
+        assert_eq!(b.charged_tokens(1), 64, "idle model re-enters at the current level");
+        let mut served = [0usize; 2];
+        for _ in 0..8 {
+            served[b.take_batch()[0].0] += 1;
+        }
+        assert_eq!(served, [4, 4], "equal weights split evenly from the re-entry point");
     }
 }

@@ -40,7 +40,7 @@ use crate::sim::{simulate_encoder_m, HwConfig};
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Typed request-validation error of the serving path (DESIGN.md §6).
 /// Replicas reject malformed requests with a variant instead of a
@@ -277,16 +277,63 @@ fn integer_head(
     (label, logits)
 }
 
+/// Immutable synthetic model bundle: geometry, per-layer weights,
+/// embedding/positional tables, and the classifier head, generated
+/// deterministically from a seed.  Replicas of the same registry entry
+/// are *one model*, so the bundle lives once behind an `Arc` and every
+/// [`FunctionalEngine`] replica owns only its private [`Workspace`]
+/// arena — a RoBERTa-sized weight set is paid once per model, not once
+/// per replica (DESIGN.md §8).
+pub struct SyntheticModel {
+    pub geo: Geometry,
+    layers: Vec<(LayerWeights, crate::model::LayerConsts)>,
+    emb: Vec<i32>, // (vocab, d), INT8-coded
+    pos: Vec<i32>, // (m, d), small ints
+    w_head: Vec<i32>, // (d, 2)
+    b_head: Vec<i32>,
+    vocab: usize,
+}
+
+impl SyntheticModel {
+    /// Build the bundle for a named geometry preset.  Same `(preset,
+    /// seed)` => identical model (weights, embedding, head).
+    pub fn build(preset: &str, seed: u64) -> Result<SyntheticModel, String> {
+        let geo =
+            Geometry::preset(preset).ok_or_else(|| format!("unknown preset {preset:?}"))?;
+        Ok(SyntheticModel::build_geo(&geo, seed))
+    }
+
+    /// Build the bundle for an explicit geometry (tests use this to run
+    /// a preset's `d`/`heads`/`d_ff` numerics at a reduced depth).
+    pub fn build_geo(geo: &Geometry, seed: u64) -> SyntheticModel {
+        let mut rng = Rng::new(seed);
+        let vocab = 64;
+        let emb: Vec<i32> =
+            (0..vocab * geo.d).map(|_| rng.range_i64(-100, 100) as i32).collect();
+        let pos: Vec<i32> =
+            (0..geo.m * geo.d).map(|_| rng.range_i64(-27, 27) as i32).collect();
+        let layers = (0..geo.layers)
+            .map(|_| (LayerWeights::synthetic(&mut rng, geo), synthetic_consts(geo)))
+            .collect();
+        let w_head: Vec<i32> =
+            (0..geo.d * 2).map(|_| rng.range_i64(-127, 127) as i32).collect();
+        let b_head: Vec<i32> = (0..2).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+        SyntheticModel { geo: *geo, layers, emb, pos, w_head, b_head, vocab }
+    }
+}
+
 /// Artifact-free engine replica: the bit-exact functional model
 /// (`sim::functional`) over synthetic weights, with the same integer
 /// request path and virtual-time accounting as [`InferenceEngine`].
 ///
 /// Every replica built from the same `(preset, seed)` is an identical
-/// model, so a pool of them is a true replica set.  Above the
-/// [`crate::quant::PAR_MIN_MACS`] threshold its contractions take the
-/// row-tiled parallel `i_matmul`; the tiny preset stays below it, so
-/// replica-level parallelism is the only concurrency in play there (no
-/// nested oversubscription in the scaling bench).
+/// model, so a pool of them is a true replica set — and replicas built
+/// via [`FunctionalEngine::replica_group`] share one [`SyntheticModel`]
+/// behind an `Arc`.  Above the [`crate::quant::PAR_MIN_MACS`] threshold
+/// its contractions take the row-tiled parallel `i_matmul`; the tiny
+/// preset stays below it, so replica-level parallelism is the only
+/// concurrency in play there (no nested oversubscription in the scaling
+/// bench).
 ///
 /// Unlike the fixed-shape artifact path, this replica serves any live
 /// sequence length `1..=geo.m` (DESIGN.md §6): the forward pass runs
@@ -295,13 +342,7 @@ fn integer_head(
 /// cycles *and* proportionally fewer simulated accelerator cycles
 /// (`sim::simulate_encoder_m` at the live `m_eff`).
 pub struct FunctionalEngine {
-    pub geo: Geometry,
-    layers: Vec<(LayerWeights, crate::model::LayerConsts)>,
-    emb: Vec<i32>, // (vocab, d), INT8-coded
-    pos: Vec<i32>, // (m, d), small ints
-    w_head: Vec<i32>, // (d, 2)
-    b_head: Vec<i32>,
-    vocab: usize,
+    model: Arc<SyntheticModel>,
     hw: HwConfig,
     /// Resident scratch arena for the allocation-free forward pass.
     /// Uncontended in the pool's one-thread-per-replica regime; the
@@ -318,38 +359,48 @@ impl FunctionalEngine {
     /// Build a synthetic replica for a geometry preset.  Same seed =>
     /// identical replica (weights, embedding, head).
     pub fn synthetic(preset: &str, seed: u64, hw: HwConfig) -> Result<FunctionalEngine, String> {
-        let geo =
-            Geometry::preset(preset).ok_or_else(|| format!("unknown preset {preset:?}"))?;
-        let mut rng = Rng::new(seed);
-        let vocab = 64;
-        let emb: Vec<i32> =
-            (0..vocab * geo.d).map(|_| rng.range_i64(-100, 100) as i32).collect();
-        let pos: Vec<i32> =
-            (0..geo.m * geo.d).map(|_| rng.range_i64(-27, 27) as i32).collect();
-        let layers = (0..geo.layers)
-            .map(|_| (LayerWeights::synthetic(&mut rng, &geo), synthetic_consts(&geo)))
-            .collect();
-        let w_head: Vec<i32> =
-            (0..geo.d * 2).map(|_| rng.range_i64(-127, 127) as i32).collect();
-        let b_head: Vec<i32> = (0..2).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+        Ok(FunctionalEngine::from_model(Arc::new(SyntheticModel::build(preset, seed)?), hw))
+    }
+
+    /// Build a replica over an existing (shared) model bundle.
+    pub fn from_model(model: Arc<SyntheticModel>, hw: HwConfig) -> FunctionalEngine {
+        let geo = model.geo;
         let full = simulate_encoder_m(&hw, &geo, geo.m, None).total_cycles;
         // host-execution knob (DESIGN.md §7): head-parallel fused
         // attention, selectable back to the serial loop via HwConfig —
         // numerics are bit-exact either way
         let mut ws = Workspace::new(&geo);
         ws.set_attn_heads_parallel(hw.attn_heads_parallel);
-        Ok(FunctionalEngine {
-            geo,
-            layers,
-            emb,
-            pos,
-            w_head,
-            b_head,
-            vocab,
+        FunctionalEngine {
+            model,
             hw,
             ws: Mutex::new(ws),
             cycles_by_len: Mutex::new(BTreeMap::from([(geo.m, full)])),
-        })
+        }
+    }
+
+    /// Build `n` identical replicas of one synthetic model — the
+    /// weights are generated once and shared, each replica gets its own
+    /// arena.  This is what [`super::registry::ModelRegistry`] hosts
+    /// per model id.
+    pub fn replica_group(
+        preset: &str,
+        seed: u64,
+        hw: HwConfig,
+        n: usize,
+    ) -> Result<Vec<Arc<dyn EngineReplica>>, String> {
+        let model = Arc::new(SyntheticModel::build(preset, seed)?);
+        Ok((0..n)
+            .map(|_| {
+                Arc::new(FunctionalEngine::from_model(Arc::clone(&model), hw))
+                    as Arc<dyn EngineReplica>
+            })
+            .collect())
+    }
+
+    /// Geometry of the resident model.
+    pub fn geometry(&self) -> &Geometry {
+        &self.model.geo
     }
 
     /// Simulated accelerator cycles for one request of live length
@@ -363,48 +414,49 @@ impl FunctionalEngine {
                 .unwrap()
                 .entry(m_eff)
                 .or_insert_with(|| {
-                    simulate_encoder_m(&self.hw, &self.geo, m_eff, None).total_cycles
+                    simulate_encoder_m(&self.hw, &self.model.geo, m_eff, None).total_cycles
                 })
         } else {
-            simulate_encoder_m(&self.hw, &self.geo, m_eff, Some(sqrt_iters)).total_cycles
+            simulate_encoder_m(&self.hw, &self.model.geo, m_eff, Some(sqrt_iters)).total_cycles
         }
     }
 }
 
 impl EngineReplica for FunctionalEngine {
     fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
-        let d = self.geo.d;
+        let model = &*self.model;
+        let d = model.geo.d;
         let m_eff = tokens.len();
-        if m_eff == 0 || m_eff > self.geo.m {
-            return Err(RequestError::BadLength { got: m_eff, min: 1, max: self.geo.m });
+        if m_eff == 0 || m_eff > model.geo.m {
+            return Err(RequestError::BadLength { got: m_eff, min: 1, max: model.geo.m });
         }
         // integer embedding + positional add, saturated to INT8
         let mut q_x = vec![0i32; m_eff * d];
         for (i, &t) in tokens.iter().enumerate() {
             let ti = t as usize;
-            if t < 0 || ti >= self.vocab {
-                return Err(RequestError::BadToken { token: t, vocab: self.vocab });
+            if t < 0 || ti >= model.vocab {
+                return Err(RequestError::BadToken { token: t, vocab: model.vocab });
             }
             for j in 0..d {
                 q_x[i * d + j] =
-                    (self.emb[ti * d + j] + self.pos[i * d + j]).clamp(-128, 127);
+                    (model.emb[ti * d + j] + model.pos[i * d + j]).clamp(-128, 127);
             }
         }
         let mut q_out = vec![0i32; m_eff * d];
-        let mut sqrt_iters = Vec::with_capacity(2 * m_eff * self.layers.len());
+        let mut sqrt_iters = Vec::with_capacity(2 * m_eff * model.layers.len());
         {
             let mut ws = self.ws.lock().unwrap();
             encoder_forward_ws(
                 &q_x,
-                &self.layers,
-                &self.geo,
+                &model.layers,
+                &model.geo,
                 m_eff,
                 &mut ws,
                 &mut q_out,
                 &mut sqrt_iters,
             );
         }
-        let (label, logits) = integer_head(&q_out, &self.w_head, &self.b_head, m_eff, d);
+        let (label, logits) = integer_head(&q_out, &model.w_head, &model.b_head, m_eff, d);
         let cycles = self.accel_cycles(m_eff, &sqrt_iters);
         Ok(Prediction {
             label,
@@ -415,7 +467,7 @@ impl EngineReplica for FunctionalEngine {
     }
 
     fn seq_len(&self) -> usize {
-        self.geo.m
+        self.model.geo.m
     }
 
     fn min_seq_len(&self) -> usize {
@@ -479,6 +531,24 @@ mod tests {
             EngineReplica::predict(&e, &tokens),
             Err(RequestError::BadToken { token: -1, .. })
         ));
+    }
+
+    #[test]
+    fn replica_group_shares_one_model_and_stays_identical() {
+        // replicas built as a group share the weight bundle (one Arc)
+        // and agree bit for bit with a standalone engine of the same
+        // (preset, seed)
+        let group = FunctionalEngine::replica_group("tiny", 7, HwConfig::paper(), 3).unwrap();
+        assert_eq!(group.len(), 3);
+        let lone = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
+        let tokens: Vec<i32> = (0..lone.seq_len()).map(|i| (i % 60) as i32).collect();
+        let want = EngineReplica::predict(&lone, &tokens).unwrap();
+        for r in &group {
+            let got = r.predict(&tokens).unwrap();
+            assert_eq!(got.label, want.label);
+            assert_eq!(got.logits, want.logits);
+            assert_eq!(got.accel_cycles, want.accel_cycles);
+        }
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Serving metrics: aggregate counters + latency series shared across
-//! the pool, plus per-replica accounting that pairs each simulated
+//! the pool, per-replica accounting that pairs each simulated
 //! accelerator's *virtual* time (cycles at the modeled clock) with the
-//! wall-clock time its host thread actually spent — so both "how fast is
-//! the modeled hardware" and "how fast is this serving process" are
-//! reported side by side (DESIGN.md §2).
+//! wall-clock time its host thread actually spent, and — with several
+//! resident models (DESIGN.md §8) — a per-model ledger so token volume,
+//! padding waste, and virtual time are never blended across geometries
+//! of very different `m`.
 
 use crate::util::stats::Series;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -36,12 +37,66 @@ impl ReplicaStats {
     }
 }
 
+/// One model's ledger.  Submission-side token counts (`actual_tokens`,
+/// `padded_tokens`) feed the per-model padding-waste metric; the
+/// served-side counts (`served_tokens`, `served_padded_tokens`) are the
+/// weighted-fair scheduler's currency, so their cross-model shares are
+/// what converges to the configured weights under backlog.
+#[derive(Default)]
+pub struct ModelStats {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    /// live tokens submitted (serveable requests only)
+    pub actual_tokens: AtomicU64,
+    /// tokens after rounding each submitted request up to its dispatch
+    /// bucket boundary
+    pub padded_tokens: AtomicU64,
+    /// live tokens of completed requests
+    pub served_tokens: AtomicU64,
+    /// bucket-padded tokens of completed requests (dispatch charge)
+    pub served_padded_tokens: AtomicU64,
+    /// simulated accelerator cycles across this model's requests
+    pub accel_cycles: AtomicU64,
+    /// simulated accelerator milliseconds (virtual time)
+    accel_ms: Mutex<f64>,
+}
+
+impl ModelStats {
+    /// Fraction of this model's bucket-padded submitted tokens that
+    /// carry no live data: `(padded - actual) / padded`.  Counted per
+    /// model — a single global pair would silently blend models of very
+    /// different `m` (the ISSUE 4 regression).
+    pub fn padding_waste(&self) -> f64 {
+        let actual = self.actual_tokens.load(Ordering::Relaxed);
+        let padded = self.padded_tokens.load(Ordering::Relaxed);
+        if padded == 0 {
+            0.0
+        } else {
+            (padded.saturating_sub(actual)) as f64 / padded as f64
+        }
+    }
+
+    /// Virtual accelerator milliseconds accumulated for this model.
+    pub fn accel_ms(&self) -> f64 {
+        *self.accel_ms.lock().unwrap()
+    }
+}
+
+/// Name + fair-share weight + stats of one registered model.
+struct ModelLedger {
+    name: String,
+    weight: u64,
+    stats: Arc<ModelStats>,
+}
+
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub errors: AtomicU64,
-    /// live tokens submitted (the sum of request sequence lengths)
+    /// live tokens submitted across all models (the sum of request
+    /// sequence lengths)
     pub actual_tokens: AtomicU64,
     /// tokens after rounding each request up to its dispatch bucket
     /// boundary — what a bucket-configured accelerator would process
@@ -56,6 +111,8 @@ pub struct Metrics {
     pub accel_ms: Mutex<Series>,
     /// per-replica ledgers, sized by the pool at startup
     replicas: Mutex<Vec<Arc<ReplicaStats>>>,
+    /// per-model ledgers, registered by the router at startup
+    models: Mutex<Vec<ModelLedger>>,
 }
 
 impl Metrics {
@@ -84,20 +141,85 @@ impl Metrics {
         self.replicas.lock().unwrap().len()
     }
 
+    /// Register the model ledger (idempotent; index = model id).  A
+    /// name/weight registered here overrides the on-demand placeholder.
+    pub fn ensure_models(&self, specs: &[(&str, u64)]) {
+        let mut m = self.models.lock().unwrap();
+        for (i, &(name, weight)) in specs.iter().enumerate() {
+            if m.len() <= i {
+                m.push(ModelLedger {
+                    name: name.to_string(),
+                    weight: weight.max(1),
+                    stats: Arc::new(ModelStats::default()),
+                });
+            } else {
+                m[i].name = name.to_string();
+                m[i].weight = weight.max(1);
+            }
+        }
+    }
+
+    /// Ledger of model `i` (created on demand with a placeholder name).
+    pub fn model(&self, i: usize) -> Arc<ModelStats> {
+        let mut m = self.models.lock().unwrap();
+        while m.len() <= i {
+            let name = format!("model{}", m.len());
+            m.push(ModelLedger { name, weight: 1, stats: Arc::new(ModelStats::default()) });
+        }
+        Arc::clone(&m[i].stats)
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.models.lock().unwrap().len()
+    }
+
+    pub fn model_name(&self, i: usize) -> Option<String> {
+        self.models.lock().unwrap().get(i).map(|m| m.name.clone())
+    }
+
+    /// Model `i`'s share of all served bucket-padded tokens — the
+    /// quantity the weighted-fair dispatcher drives toward
+    /// `weight_i / Σ weights` while every model stays backlogged.
+    pub fn model_token_share(&self, i: usize) -> f64 {
+        let m = self.models.lock().unwrap();
+        let total: u64 =
+            m.iter().map(|l| l.stats.served_padded_tokens.load(Ordering::Relaxed)).sum();
+        match m.get(i) {
+            Some(l) if total > 0 => {
+                l.stats.served_padded_tokens.load(Ordering::Relaxed) as f64 / total as f64
+            }
+            _ => 0.0,
+        }
+    }
+
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Account one request's live token count and the padded count its
-    /// dispatch bucket charges (equal when bucketing is off).
-    pub fn record_tokens(&self, actual: usize, padded: usize) {
-        self.actual_tokens.fetch_add(actual as u64, Ordering::Relaxed);
-        self.padded_tokens.fetch_add(padded as u64, Ordering::Relaxed);
+    /// Account one submitted request against model `i`'s ledger as well
+    /// as the aggregate counter.
+    pub fn record_request_for(&self, model: usize) {
+        self.record_request();
+        self.model(model).requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Fraction of bucket-padded tokens that carry no live data:
-    /// `(padded - actual) / padded`.  0 when bucketing is off or
-    /// nothing was submitted.
+    /// Account one request's live token count and the padded count its
+    /// dispatch bucket charges (equal when bucketing is off), per model
+    /// and in aggregate.
+    pub fn record_tokens(&self, model: usize, actual: usize, padded: usize) {
+        self.actual_tokens.fetch_add(actual as u64, Ordering::Relaxed);
+        self.padded_tokens.fetch_add(padded as u64, Ordering::Relaxed);
+        let m = self.model(model);
+        m.actual_tokens.fetch_add(actual as u64, Ordering::Relaxed);
+        m.padded_tokens.fetch_add(padded as u64, Ordering::Relaxed);
+    }
+
+    /// Fraction of bucket-padded tokens that carry no live data across
+    /// *all* models: `(padded - actual) / padded`.  0 when bucketing is
+    /// off or nothing was submitted.  With models of different `m`
+    /// resident this blend is dominated by whichever model moved the
+    /// most tokens — read [`ModelStats::padding_waste`] for the
+    /// per-model truth.
     pub fn padding_waste(&self) -> f64 {
         let actual = self.actual_tokens.load(Ordering::Relaxed);
         let padded = self.padded_tokens.load(Ordering::Relaxed);
@@ -132,6 +254,30 @@ impl Metrics {
         *r.accel_ms.lock().unwrap() += accel_ms;
     }
 
+    /// Account one completed (or failed) request against model `i`'s
+    /// ledger: the live and bucket-padded tokens actually served plus
+    /// the virtual accelerator time they cost.
+    pub fn record_model_served(
+        &self,
+        model: usize,
+        actual: usize,
+        padded: usize,
+        cycles: u64,
+        accel_ms: f64,
+        error: bool,
+    ) {
+        let m = self.model(model);
+        if error {
+            m.errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        m.completed.fetch_add(1, Ordering::Relaxed);
+        m.served_tokens.fetch_add(actual as u64, Ordering::Relaxed);
+        m.served_padded_tokens.fetch_add(padded as u64, Ordering::Relaxed);
+        m.accel_cycles.fetch_add(cycles, Ordering::Relaxed);
+        *m.accel_ms.lock().unwrap() += accel_ms;
+    }
+
     /// Virtual accelerator milliseconds summed over all replicas.
     pub fn total_accel_ms(&self) -> f64 {
         self.replicas.lock().unwrap().iter().map(|r| r.accel_ms()).sum()
@@ -151,6 +297,39 @@ impl Metrics {
             self.padded_tokens.load(Ordering::Relaxed),
             100.0 * self.padding_waste(),
         );
+        {
+            let models = self.models.lock().unwrap();
+            let total_w: u64 = models.iter().map(|l| l.weight).sum();
+            let total_served: u64 =
+                models.iter().map(|l| l.stats.served_padded_tokens.load(Ordering::Relaxed)).sum();
+            for l in models.iter() {
+                let served = l.stats.served_padded_tokens.load(Ordering::Relaxed);
+                let share = if total_served > 0 {
+                    100.0 * served as f64 / total_served as f64
+                } else {
+                    0.0
+                };
+                let weight_pct = if total_w > 0 {
+                    100.0 * l.weight as f64 / total_w as f64
+                } else {
+                    0.0
+                };
+                out.push_str(&format!(
+                    "\n  model {} (w={}): requests={} completed={} errors={} waste={:.1}% \
+                     served tokens={} share={:.1}% (weight {:.1}%) virtual={:.3}ms",
+                    l.name,
+                    l.weight,
+                    l.stats.requests.load(Ordering::Relaxed),
+                    l.stats.completed.load(Ordering::Relaxed),
+                    l.stats.errors.load(Ordering::Relaxed),
+                    100.0 * l.stats.padding_waste(),
+                    served,
+                    share,
+                    weight_pct,
+                    l.stats.accel_ms(),
+                ));
+            }
+        }
         for (i, r) in self.replicas.lock().unwrap().iter().enumerate() {
             out.push_str(&format!(
                 "\n  replica {i}: requests={} errors={} busy={:.3}s virtual={:.3}ms ({} cycles)",
@@ -206,9 +385,9 @@ mod tests {
     fn padding_waste_tracks_bucket_overhead() {
         let m = Metrics::new();
         assert_eq!(m.padding_waste(), 0.0, "no traffic, no waste");
-        m.record_tokens(3, 8);
-        m.record_tokens(5, 8);
-        m.record_tokens(16, 16);
+        m.record_tokens(0, 3, 8);
+        m.record_tokens(0, 5, 8);
+        m.record_tokens(0, 16, 16);
         assert_eq!(m.actual_tokens.load(Ordering::Relaxed), 24);
         assert_eq!(m.padded_tokens.load(Ordering::Relaxed), 32);
         assert!((m.padding_waste() - 0.25).abs() < 1e-12);
@@ -216,10 +395,65 @@ mod tests {
     }
 
     #[test]
-    fn replica_ledger_grows_on_demand() {
+    fn padding_waste_is_counted_per_model_not_blended() {
+        // Regression (ISSUE 4): a short-sequence model at 50% bucket
+        // waste next to a long-sequence model at 0% used to blend into
+        // one global pair dominated by whichever moved more tokens.
+        // The per-model ledgers keep the truth; the global number stays
+        // as the (documented) blend.
+        let m = Metrics::new();
+        m.ensure_models(&[("tiny", 1), ("roberta_base", 1)]);
+        m.record_tokens(0, 3, 8);
+        m.record_tokens(0, 5, 8);
+        m.record_tokens(1, 256, 256);
+        let tiny = m.model(0);
+        let base = m.model(1);
+        assert!((tiny.padding_waste() - 0.5).abs() < 1e-12, "tiny wastes half its buckets");
+        assert_eq!(base.padding_waste(), 0.0, "full-length model pads nothing");
+        // the blended global figure under-reports tiny's waste 16x
+        let blended = m.padding_waste();
+        assert!((blended - 8.0 / 272.0).abs() < 1e-12, "blended={blended}");
+        let report = m.report();
+        assert!(report.contains("model tiny"), "{report}");
+        assert!(report.contains("waste=50.0%"), "{report}");
+    }
+
+    #[test]
+    fn model_ledgers_track_served_shares() {
+        let m = Metrics::new();
+        m.ensure_models(&[("a", 3), ("b", 1)]);
+        m.record_request_for(0);
+        m.record_request_for(1);
+        m.record_model_served(0, 8, 8, 100, 0.7, false);
+        m.record_model_served(0, 8, 8, 100, 0.7, false);
+        m.record_model_served(0, 8, 8, 100, 0.7, false);
+        m.record_model_served(1, 4, 8, 50, 0.3, false);
+        m.record_model_served(1, 2, 0, 0, 0.0, true); // error: no tokens served
+        let a = m.model(0);
+        let b = m.model(1);
+        assert_eq!(a.completed.load(Ordering::Relaxed), 3);
+        assert_eq!(b.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(b.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(a.served_padded_tokens.load(Ordering::Relaxed), 24);
+        assert_eq!(b.served_padded_tokens.load(Ordering::Relaxed), 8);
+        assert!((m.model_token_share(0) - 0.75).abs() < 1e-12);
+        assert!((m.model_token_share(1) - 0.25).abs() < 1e-12);
+        assert!((a.accel_ms() - 2.1).abs() < 1e-12);
+        assert_eq!(m.model_name(0).as_deref(), Some("a"));
+        let report = m.report();
+        assert!(report.contains("model a (w=3)"), "{report}");
+        assert!(report.contains("share=75.0%"), "{report}");
+    }
+
+    #[test]
+    fn replica_and_model_ledgers_grow_on_demand() {
         let m = Metrics::new();
         m.record_replica(3, 0.001, 10, 0.0, false);
         assert_eq!(m.replica_count(), 4);
         assert_eq!(m.replica(3).requests.load(Ordering::Relaxed), 1);
+        m.record_model_served(2, 1, 8, 1, 0.0, false);
+        assert_eq!(m.model_count(), 3);
+        assert_eq!(m.model_name(2).as_deref(), Some("model2"));
+        assert_eq!(m.model(2).completed.load(Ordering::Relaxed), 1);
     }
 }

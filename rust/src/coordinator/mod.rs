@@ -1,31 +1,42 @@
 //! Layer-3 coordinator: the deployable serving system around the
-//! accelerator model (DESIGN.md §2).
+//! accelerator model (DESIGN.md §2, §8).
 //!
-//! Request flow: `server` (TCP) -> `router::submit` -> `batcher`
-//! (size-or-deadline dispatch groups) -> dispatcher thread ->
-//! `pool::ReplicaPool` (fan-out over N engine replicas on the `util`
+//! Request flow: `server` (TCP, optional `model:` prefix) ->
+//! `router::submit_to` -> `batcher` (size-or-deadline dispatch groups
+//! keyed by `(model, padded length)`, weighted-fair across models) ->
+//! dispatcher thread -> `pool::ReplicaPool` (named per-model replica
+//! groups; fan-out over the owning group's replicas on the `util`
 //! thread pool, results re-ordered per request) -> reply channels.
 //!
 //! * [`engine`] — the [`EngineReplica`] trait and its implementations:
-//!   the PJRT-backed [`InferenceEngine`] and the artifact-free
-//!   [`FunctionalEngine`].
-//! * [`batcher`] — dynamic batcher (size/deadline policy).
-//! * [`pool`] — the replica pool: dispatch-group fan-out + per-request
+//!   the PJRT-backed [`InferenceEngine`] (single-model) and the
+//!   artifact-free [`FunctionalEngine`] over a shared
+//!   [`SyntheticModel`] weight bundle.
+//! * [`registry`] — the multi-tenant model registry: model ids ->
+//!   geometry presets + replica groups + fair-share weights.
+//! * [`batcher`] — dynamic batcher (size/deadline policy, model- and
+//!   length-bucketed, deficit-round-robin model selection).
+//! * [`pool`] — the replica pool: per-model group fan-out + per-request
 //!   re-ordering on the in-repo thread pool.
 //! * [`router`] — request intake, the dispatcher thread, shutdown.
 //! * [`server`] — a line-protocol TCP front-end.
-//! * [`metrics`] — wall-clock latency/throughput plus per-replica
-//!   virtual-time (simulated accelerator cycle) accounting.
+//! * [`metrics`] — wall-clock latency/throughput plus per-replica and
+//!   per-model virtual-time (simulated accelerator cycle) accounting,
+//!   token shares, and per-model padding waste.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod pool;
+pub mod registry;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatchPolicy};
-pub use engine::{EngineReplica, FunctionalEngine, InferenceEngine, Prediction, RequestError};
-pub use metrics::{Metrics, ReplicaStats};
+pub use engine::{
+    EngineReplica, FunctionalEngine, InferenceEngine, Prediction, RequestError, SyntheticModel,
+};
+pub use metrics::{Metrics, ModelStats, ReplicaStats};
 pub use pool::ReplicaPool;
+pub use registry::{ModelGroup, ModelRegistry};
 pub use router::{Request, Response, Router};

@@ -1,26 +1,35 @@
-//! Replica pool: fans the batcher's dispatch groups out across N engine
+//! Replica pool: fans the batcher's dispatch groups out across engine
 //! replicas on the in-repo `util` thread pool and re-orders results per
-//! request (DESIGN.md §2).
+//! request (DESIGN.md §2, §8).
 //!
-//! Fan-out policy: requests are assigned round-robin by position within
-//! the group (request `i` goes to replica `(start + i) mod N`, with
+//! With multiple resident models the pool is a *set of named groups*:
+//! each model id owns its own replicas, requests carry their model
+//! index, and a dispatch group (always model-homogeneous, by batcher
+//! construction) fans out only across its model's group.  Replica ids
+//! are global — group `g`'s replicas occupy a contiguous id range — so
+//! the per-replica metrics ledger stays flat.
+//!
+//! Fan-out policy within a group: requests are assigned round-robin by
+//! position (request `i` goes to replica `(start + i) mod N`, with
 //! `start` rotating per dispatch so short groups spread across replicas
-//! over time instead of pinning replica 0).  Each replica processes its
-//! share serially — one sequence at a time, as the hardware loads the
-//! MAC array per sentence — while the N shares run concurrently on
-//! dedicated pool threads.  Replies go out on each request's channel the
-//! moment its prediction completes; the group-level return value is
-//! re-ordered back to submission (FIFO) order for consumers that want
-//! the whole group (the scaling bench, tests).
+//! over time instead of pinning the group's first replica).  Each
+//! replica processes its share serially — one sequence at a time, as
+//! the hardware loads the MAC array per sentence — while the shares run
+//! concurrently on dedicated pool threads.  Replies go out on each
+//! request's channel the moment its prediction completes; the
+//! group-level return value is re-ordered back to submission (FIFO)
+//! order for consumers that want the whole group (the scaling bench,
+//! tests).
 //!
-//! Dispatch is a barrier per group: throughput scales with replicas
-//! once the dispatch-group size reaches the replica count; groups
-//! smaller than N leave replicas idle for that dispatch (the operating
-//! regime is `max_batch >= replicas`; DESIGN.md §2, EXPERIMENTS.md
-//! §Scaling).
+//! Dispatch is a barrier per group: throughput scales with a model's
+//! replicas once its dispatch-group size reaches that group's replica
+//! count; groups smaller than the group leave its replicas idle for
+//! that dispatch (the operating regime is `max_batch >= replicas`;
+//! DESIGN.md §2, EXPERIMENTS.md §Scaling).
 
 use super::engine::{EngineReplica, RequestError};
 use super::metrics::Metrics;
+use super::registry::ModelGroup;
 use super::router::{Request, Response};
 use crate::util::threadpool::ThreadPool;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -28,36 +37,96 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-pub struct ReplicaPool {
+struct Group {
+    model: String,
     replicas: Vec<Arc<dyn EngineReplica>>,
-    pool: ThreadPool,
-    metrics: Arc<Metrics>,
+    /// global id of this group's first replica
+    base: usize,
     /// rotating fan-out offset (advances once per dispatch)
     next_start: AtomicUsize,
 }
 
+pub struct ReplicaPool {
+    groups: Vec<Group>,
+    pool: ThreadPool,
+    metrics: Arc<Metrics>,
+}
+
 impl ReplicaPool {
-    /// One pool thread per replica: a replica is never oversubscribed
-    /// and an idle replica never queues behind a busy one.
+    /// Single-model pool under the default model id (the seed serving
+    /// path): one pool thread per replica, so a replica is never
+    /// oversubscribed and an idle replica never queues behind a busy
+    /// one.
     pub fn new(replicas: Vec<Arc<dyn EngineReplica>>, metrics: Arc<Metrics>) -> ReplicaPool {
-        assert!(!replicas.is_empty(), "replica pool needs at least one engine");
-        metrics.ensure_replicas(replicas.len());
-        let pool = ThreadPool::new(replicas.len());
-        ReplicaPool { replicas, pool, metrics, next_start: AtomicUsize::new(0) }
+        ReplicaPool::new_multi(
+            vec![ModelGroup { model: "default".into(), replicas, weight: 1 }],
+            metrics,
+        )
     }
 
-    /// Number of replicas (== pool threads).
+    /// Multi-model pool: one named replica group per model id, one pool
+    /// thread per replica across all groups.
+    pub fn new_multi(groups: Vec<ModelGroup>, metrics: Arc<Metrics>) -> ReplicaPool {
+        assert!(!groups.is_empty(), "replica pool needs at least one model group");
+        let total: usize = groups.iter().map(|g| g.replicas.len()).sum();
+        assert!(total > 0, "replica pool needs at least one engine");
+        for g in &groups {
+            assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
+        }
+        metrics.ensure_replicas(total);
+        let pool = ThreadPool::new(total);
+        let mut base = 0;
+        let groups = groups
+            .into_iter()
+            .map(|g| {
+                let n = g.replicas.len();
+                let group = Group {
+                    model: g.model,
+                    replicas: g.replicas,
+                    base,
+                    next_start: AtomicUsize::new(0),
+                };
+                base += n;
+                group
+            })
+            .collect();
+        ReplicaPool { groups, pool, metrics }
+    }
+
+    /// Total number of replicas across all groups (== pool threads).
     pub fn replicas(&self) -> usize {
-        self.replicas.len()
+        self.groups.iter().map(|g| g.replicas.len()).sum()
     }
 
-    /// Execute one dispatch group: fan out across replicas, reply per
-    /// request as it finishes, and return responses re-ordered to the
-    /// group's submission order.
+    /// Number of model groups.
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Model id of group `i`.
+    pub fn model_name(&self, i: usize) -> Option<&str> {
+        self.groups.get(i).map(|g| g.model.as_str())
+    }
+
+    /// Execute one dispatch group: fan out across the owning model's
+    /// replicas, reply per request as it finishes, and return responses
+    /// re-ordered to the group's submission order.  Dispatch groups are
+    /// model-homogeneous by batcher construction; the owning group is
+    /// read off the first request.
     pub fn dispatch(&self, group: Vec<Request>) -> Vec<Response> {
-        let n = self.replicas.len();
         let total = group.len();
-        let start = self.next_start.fetch_add(1, Ordering::Relaxed) % n;
+        if total == 0 {
+            return Vec::new();
+        }
+        let gidx = group[0].model;
+        assert!(gidx < self.groups.len(), "request for unknown model group {gidx}");
+        debug_assert!(
+            group.iter().all(|r| r.model == gidx),
+            "dispatch group mixes models — batcher invariant broken"
+        );
+        let g = &self.groups[gidx];
+        let n = g.replicas.len();
+        let start = g.next_start.fetch_add(1, Ordering::Relaxed) % n;
         let mut shares: Vec<Vec<(usize, Request)>> = (0..n).map(|_| Vec::new()).collect();
         for (i, req) in group.into_iter().enumerate() {
             shares[(start + i) % n].push((i, req));
@@ -67,12 +136,16 @@ impl ReplicaPool {
             .enumerate()
             .filter(|(_, share)| !share.is_empty())
             .map(|(r, share)| {
-                let replica = Arc::clone(&self.replicas[r]);
+                let replica = Arc::clone(&g.replicas[r]);
                 let metrics = Arc::clone(&self.metrics);
+                let replica_id = g.base + r;
+                let model = g.model.clone();
                 move || {
                     share
                         .into_iter()
-                        .map(|(i, req)| (i, serve_one(r, replica.as_ref(), &metrics, req)))
+                        .map(|(i, req)| {
+                            (i, serve_one(replica_id, &model, replica.as_ref(), &metrics, req))
+                        })
                         .collect::<Vec<_>>()
                 }
             })
@@ -85,10 +158,11 @@ impl ReplicaPool {
     }
 }
 
-/// Serve one request on one replica: predict, account (aggregate and
-/// per-replica virtual time), reply.
+/// Serve one request on one replica: predict, account (aggregate,
+/// per-replica, and per-model virtual time), reply.
 fn serve_one(
     replica_id: usize,
+    model_name: &str,
     engine: &dyn EngineReplica,
     metrics: &Metrics,
     req: Request,
@@ -108,10 +182,20 @@ fn serve_one(
             let e2e = req.submitted.elapsed().as_secs_f64();
             metrics.record_completion(e2e, queued, exec, pred.accel_ms);
             metrics.record_replica(replica_id, exec, pred.accel_cycles, pred.accel_ms, false);
+            metrics.record_model_served(
+                req.model,
+                req.tokens.len(),
+                req.padded_len,
+                pred.accel_cycles,
+                pred.accel_ms,
+                false,
+            );
             Response {
                 id: req.id,
+                model: model_name.to_string(),
                 replica: replica_id,
                 label: pred.label,
+                logits: pred.logits,
                 accel_ms: pred.accel_ms,
                 e2e_s: e2e,
                 error: None,
@@ -121,10 +205,13 @@ fn serve_one(
             let exec = t0.elapsed().as_secs_f64();
             metrics.record_error();
             metrics.record_replica(replica_id, exec, 0, 0.0, true);
+            metrics.record_model_served(req.model, 0, 0, 0, 0.0, true);
             Response {
                 id: req.id,
+                model: model_name.to_string(),
                 replica: replica_id,
                 label: usize::MAX,
+                logits: Vec::new(),
                 accel_ms: 0.0,
                 e2e_s: req.submitted.elapsed().as_secs_f64(),
                 error: Some(e.to_string()),
@@ -178,13 +265,19 @@ mod tests {
     }
 
     fn group_of(n: usize) -> (Vec<Request>, Vec<Receiver<Response>>) {
+        group_for_model(0, n)
+    }
+
+    fn group_for_model(model: usize, n: usize) -> (Vec<Request>, Vec<Receiver<Response>>) {
         let mut group = Vec::with_capacity(n);
         let mut receivers = Vec::with_capacity(n);
         for id in 0..n as u64 {
             let (tx, rx) = channel();
             group.push(Request {
                 id,
+                model,
                 tokens: vec![id as i32; 4],
+                padded_len: 4,
                 submitted: Instant::now(),
                 reply: tx,
             });
@@ -292,5 +385,47 @@ mod tests {
         drop(receivers);
         assert_eq!(metrics.errors.load(std::sync::atomic::Ordering::Relaxed), 1);
         assert_eq!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn named_groups_route_by_model_with_global_replica_ids() {
+        use std::sync::atomic::Ordering;
+        // group "a": replicas 0..2, group "b": replica 2 — requests of
+        // model 1 must land only on b's replica, with the model name on
+        // the response and the served tokens on model 1's ledger
+        let metrics = Arc::new(Metrics::new());
+        let mk = |n: usize| -> Vec<Arc<dyn EngineReplica>> {
+            (0..n)
+                .map(|_| {
+                    Arc::new(SlowReplica { delay: Duration::ZERO }) as Arc<dyn EngineReplica>
+                })
+                .collect()
+        };
+        let pool = ReplicaPool::new_multi(
+            vec![
+                ModelGroup { model: "a".into(), replicas: mk(2), weight: 1 },
+                ModelGroup { model: "b".into(), replicas: mk(1), weight: 1 },
+            ],
+            Arc::clone(&metrics),
+        );
+        assert_eq!(pool.replicas(), 3);
+        assert_eq!(pool.group_count(), 2);
+        assert_eq!(pool.model_name(1), Some("b"));
+
+        let (group_b, _rx_b) = group_for_model(1, 3);
+        for resp in pool.dispatch(group_b) {
+            assert!(resp.error.is_none());
+            assert_eq!(resp.model, "b");
+            assert_eq!(resp.replica, 2, "model b owns the last global replica id");
+        }
+        let (group_a, _rx_a) = group_for_model(0, 4);
+        for resp in pool.dispatch(group_a) {
+            assert_eq!(resp.model, "a");
+            assert!(resp.replica < 2);
+        }
+        assert_eq!(metrics.model(1).completed.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.model(1).served_padded_tokens.load(Ordering::Relaxed), 12);
+        assert_eq!(metrics.model(0).completed.load(Ordering::Relaxed), 4);
+        assert_eq!(metrics.replica(2).requests.load(Ordering::Relaxed), 3);
     }
 }

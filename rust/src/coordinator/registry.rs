@@ -1,0 +1,220 @@
+//! Model registry: the multi-tenant front door of the serving stack
+//! (DESIGN.md §8).
+//!
+//! A [`ModelRegistry`] maps *model ids* (tenant-facing names) to
+//! [`Geometry`] presets and owns one replica group per model — a set of
+//! identical [`FunctionalEngine`] replicas sharing a single
+//! [`SyntheticModel`](super::engine::SyntheticModel) weight bundle,
+//! each replica sized by its own [`HwConfig::sized_to`] hardware
+//! instance (the paper's §III-D design-time tunables: array rows = m,
+//! columns = d, one head unit per model head).  The finished registry
+//! converts into the [`ModelGroup`] list that
+//! [`Router::start_multi`](super::Router::start_multi) serves, with
+//! each group's fair-share `weight` feeding the batcher's deficit
+//! round-robin dispatcher.
+//!
+//! PJRT-backed [`InferenceEngine`](super::InferenceEngine) replicas
+//! stay single-model (one AOT artifact per process); heterogeneous
+//! custom backends can still join a registry through
+//! [`ModelRegistry::register_group`].
+
+use super::engine::{EngineReplica, FunctionalEngine};
+use crate::model::Geometry;
+use crate::sim::HwConfig;
+use std::sync::Arc;
+
+/// One model's serving group, ready for the router: the tenant-facing
+/// name, its (identical) replicas, and its fair-share weight.
+pub struct ModelGroup {
+    pub model: String,
+    pub replicas: Vec<Arc<dyn EngineReplica>>,
+    pub weight: u64,
+}
+
+struct Entry {
+    name: String,
+    preset: Option<String>,
+    geometry: Option<Geometry>,
+    weight: u64,
+    replicas: Vec<Arc<dyn EngineReplica>>,
+}
+
+/// Registry of resident models, built once at startup and converted
+/// into router groups.  Model ids are unique; registration order is the
+/// model-index order used by the batcher and metrics ledgers.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Vec<Entry>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    fn check(&self, name: &str, replicas: usize, weight: u64) -> Result<(), String> {
+        if name.is_empty() {
+            return Err("model id must be non-empty".into());
+        }
+        if self.entries.iter().any(|e| e.name == name) {
+            return Err(format!("model {name:?} already registered"));
+        }
+        if replicas == 0 {
+            return Err(format!("model {name:?} needs at least one replica"));
+        }
+        if weight == 0 {
+            return Err(format!("model {name:?} needs a positive fair-share weight"));
+        }
+        Ok(())
+    }
+
+    /// Register `replicas` identical synthetic replicas of a geometry
+    /// preset under `name`, with fair-share `weight`.  The hardware
+    /// instance is sized to the preset ([`HwConfig::sized_to`]); the
+    /// weight bundle is generated once from `seed` and shared across
+    /// the group's replicas.
+    pub fn register(
+        &mut self,
+        name: &str,
+        preset: &str,
+        replicas: usize,
+        weight: u64,
+        seed: u64,
+    ) -> Result<&mut Self, String> {
+        let geo = Geometry::preset(preset).ok_or_else(|| {
+            format!("unknown preset {preset:?} (expected one of {:?})", Geometry::PRESET_NAMES)
+        })?;
+        self.register_with_hw(name, preset, replicas, weight, seed, HwConfig::sized_to(&geo))
+    }
+
+    /// [`register`](ModelRegistry::register) with an explicit hardware
+    /// configuration (benchmarks and tests pin the instance).
+    pub fn register_with_hw(
+        &mut self,
+        name: &str,
+        preset: &str,
+        replicas: usize,
+        weight: u64,
+        seed: u64,
+        hw: HwConfig,
+    ) -> Result<&mut Self, String> {
+        self.check(name, replicas, weight)?;
+        let geo = Geometry::preset(preset).ok_or_else(|| {
+            format!("unknown preset {preset:?} (expected one of {:?})", Geometry::PRESET_NAMES)
+        })?;
+        hw.validate(&geo)?;
+        let group = FunctionalEngine::replica_group(preset, seed, hw, replicas)?;
+        self.entries.push(Entry {
+            name: name.to_string(),
+            preset: Some(preset.to_string()),
+            geometry: Some(geo),
+            weight,
+            replicas: group,
+        });
+        Ok(self)
+    }
+
+    /// Register a custom replica group (mock engines, or a single-model
+    /// PJRT group).  All replicas must serve the same model; the
+    /// registry has no preset geometry for such a group.
+    pub fn register_group(
+        &mut self,
+        name: &str,
+        replicas: Vec<Arc<dyn EngineReplica>>,
+        weight: u64,
+    ) -> Result<&mut Self, String> {
+        self.check(name, replicas.len(), weight)?;
+        self.entries.push(Entry {
+            name: name.to_string(),
+            preset: None,
+            geometry: None,
+            weight,
+            replicas,
+        });
+        Ok(self)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Registered model ids, in model-index order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Geometry preset backing `name` (None for custom groups or
+    /// unknown ids).
+    pub fn geometry(&self, name: &str) -> Option<Geometry> {
+        self.entries.iter().find(|e| e.name == name).and_then(|e| e.geometry)
+    }
+
+    /// Preset name backing `name`.
+    pub fn preset(&self, name: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .and_then(|e| e.preset.as_deref())
+    }
+
+    /// Fair-share weight of `name`.
+    pub fn weight(&self, name: &str) -> Option<u64> {
+        self.entries.iter().find(|e| e.name == name).map(|e| e.weight)
+    }
+
+    /// Longest request `name`'s group can serve (the intersection of
+    /// its replicas' ranges).
+    pub fn max_seq_len(&self, name: &str) -> Option<usize> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .and_then(|e| e.replicas.iter().map(|r| r.seq_len()).min())
+    }
+
+    /// Consume the registry into router-ready model groups.
+    pub fn into_groups(self) -> Vec<ModelGroup> {
+        self.entries
+            .into_iter()
+            .map(|e| ModelGroup { model: e.name, replicas: e.replicas, weight: e.weight })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registers_presets_with_shared_groups() {
+        let mut reg = ModelRegistry::new();
+        reg.register("tiny", "tiny", 2, 2, 7).unwrap();
+        reg.register("small", "small", 1, 1, 11).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["tiny", "small"]);
+        assert_eq!(reg.geometry("tiny"), Geometry::preset("tiny"));
+        assert_eq!(reg.preset("small"), Some("small"));
+        assert_eq!(reg.weight("tiny"), Some(2));
+        assert_eq!(reg.max_seq_len("small"), Some(Geometry::preset("small").unwrap().m));
+        assert_eq!(reg.geometry("nope"), None);
+        let groups = reg.into_groups();
+        assert_eq!(groups[0].replicas.len(), 2);
+        assert_eq!(groups[1].model, "small");
+    }
+
+    #[test]
+    fn rejects_bad_configurations() {
+        let mut reg = ModelRegistry::new();
+        reg.register("tiny", "tiny", 1, 1, 7).unwrap();
+        assert!(reg.register("tiny", "small", 1, 1, 7).is_err(), "duplicate id");
+        assert!(reg.register("x", "gpt5", 1, 1, 7).is_err(), "unknown preset");
+        assert!(reg.register("y", "tiny", 0, 1, 7).is_err(), "zero replicas");
+        assert!(reg.register("z", "tiny", 1, 0, 7).is_err(), "zero weight");
+        assert!(reg.register("", "tiny", 1, 1, 7).is_err(), "empty id");
+        assert!(reg.register_group("g", vec![], 1).is_err(), "empty custom group");
+        assert_eq!(reg.len(), 1, "failed registrations leave no residue");
+    }
+}

@@ -1,20 +1,22 @@
 //! Request router: the front half of the parallel serving pipeline
-//! (DESIGN.md §2).
+//! (DESIGN.md §2, §8).
 //!
-//! `submit` enqueues requests into the dynamic [`Batcher`] (length-
-//! bucketed when `BatchPolicy::bucket_width` is set, DESIGN.md §6); a
-//! single dispatcher thread waits for the size-or-deadline policy to
-//! release a dispatch group and hands it to the [`ReplicaPool`], which
-//! fans the group out across N engine replicas on the `util` thread
-//! pool.  The
-//! dispatcher blocks until the group completes (the pool's join), then
-//! takes the next group — so groups are pipelined back to back while
-//! requests inside a group run concurrently.
+//! `submit` / `submit_to` enqueue requests into the dynamic [`Batcher`]
+//! (keyed by `(model, padded length)`; DESIGN.md §6, §8); a single
+//! dispatcher thread waits for the size-or-deadline policy to release a
+//! model-homogeneous dispatch group — chosen across models by the
+//! batcher's weighted-fair ledger — and hands it to the
+//! [`ReplicaPool`], which fans the group out across the owning model's
+//! replicas on the `util` thread pool.  The dispatcher blocks until the
+//! group completes (the pool's join), then takes the next group — so
+//! groups are pipelined back to back while requests inside a group run
+//! concurrently.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::EngineReplica;
 use super::metrics::Metrics;
 use super::pool::ReplicaPool;
+use super::registry::ModelGroup;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
@@ -24,7 +26,13 @@ use std::time::Instant;
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
+    /// model index (position of the model's group in the router)
+    pub model: usize,
     pub tokens: Vec<i32>,
+    /// tokens the dispatch bucket charges for this request
+    /// (== `tokens.len()` when bucketing is off); fed to the per-model
+    /// served-token ledger on completion
+    pub padded_len: usize,
     pub submitted: Instant,
     pub reply: Sender<Response>,
 }
@@ -32,9 +40,14 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    /// which engine replica served this request
+    /// model id that served (or rejected) this request
+    pub model: String,
+    /// which engine replica served this request (global index)
     pub replica: usize,
     pub label: usize,
+    /// classifier logits (empty on error) — lets callers check
+    /// byte-identical outputs across replica counts and backends
+    pub logits: Vec<i64>,
     pub accel_ms: f64,
     pub e2e_s: f64,
     pub error: Option<String>,
@@ -46,38 +59,82 @@ struct Shared {
     shutdown: AtomicBool,
 }
 
+/// Per-model endpoint bookkeeping: the serveable length range of the
+/// model's replica group (max of `min_seq_len`, min of `seq_len`,
+/// because fan-out within the group is length-blind round-robin) plus
+/// the name and fair-share weight.
+struct Endpoint {
+    name: String,
+    weight: u64,
+    min_len: usize,
+    max_len: usize,
+}
+
 pub struct Router {
     shared: Arc<Shared>,
     pub metrics: Arc<Metrics>,
     dispatcher: Option<JoinHandle<()>>,
     next_id: AtomicU64,
-    /// guaranteed-serveable length range of the pool: the intersection
-    /// of the replicas' ranges (max of `min_seq_len`, min of
-    /// `seq_len`), because dispatch is length-blind round-robin and a
-    /// request outside the intersection may land on a replica that
-    /// rejects it.  Bounds the padding the token metric may charge;
-    /// requests outside it never pollute that metric.
-    min_seq_len: usize,
-    max_seq_len: usize,
+    policy: BatchPolicy,
+    endpoints: Vec<Endpoint>,
 }
 
 impl Router {
-    /// Start the serving pipeline over `replicas` engine replicas (the
-    /// replica pool spins one worker thread per replica, plus one
-    /// dispatcher thread).
+    /// Start the single-model serving pipeline over `replicas` engine
+    /// replicas under the default model id (the replica pool spins one
+    /// worker thread per replica, plus one dispatcher thread).
     pub fn start(
         replicas: Vec<Arc<dyn EngineReplica>>,
         policy: BatchPolicy,
         metrics: Arc<Metrics>,
     ) -> Router {
+        Router::start_multi(
+            vec![ModelGroup { model: "default".into(), replicas, weight: 1 }],
+            policy,
+            metrics,
+        )
+    }
+
+    /// Start the multi-tenant serving pipeline: one named replica group
+    /// per model (typically [`super::ModelRegistry::into_groups`]), a
+    /// shared batcher keyed by `(model, padded length)` with the
+    /// groups' fair-share weights, and one dispatcher thread over one
+    /// pool of all replicas.
+    pub fn start_multi(
+        groups: Vec<ModelGroup>,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+    ) -> Router {
+        assert!(!groups.is_empty(), "router needs at least one model group");
+        for (i, g) in groups.iter().enumerate() {
+            assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
+            assert!(
+                !groups[..i].iter().any(|o| o.model == g.model),
+                "duplicate model id {:?}",
+                g.model
+            );
+        }
+        let endpoints: Vec<Endpoint> = groups
+            .iter()
+            .map(|g| Endpoint {
+                name: g.model.clone(),
+                weight: g.weight.max(1),
+                min_len: g.replicas.iter().map(|r| r.min_seq_len()).max().unwrap_or(0),
+                max_len: g.replicas.iter().map(|r| r.seq_len()).min().unwrap_or(0),
+            })
+            .collect();
+        let specs: Vec<(&str, u64)> =
+            endpoints.iter().map(|e| (e.name.as_str(), e.weight)).collect();
+        metrics.ensure_models(&specs);
+        let weights: Vec<u64> = endpoints.iter().map(|e| e.weight).collect();
+        let mut batcher = Batcher::new(policy);
+        batcher.set_model_weights(&weights);
         let shared = Arc::new(Shared {
-            batcher: Mutex::new(Batcher::new(policy)),
+            batcher: Mutex::new(batcher),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
-        let min_seq_len = replicas.iter().map(|r| r.min_seq_len()).max().unwrap_or(0);
-        let max_seq_len = replicas.iter().map(|r| r.seq_len()).min().unwrap_or(0);
-        let pool = ReplicaPool::new(replicas, Arc::clone(&metrics));
+        let pool = ReplicaPool::new_multi(groups, Arc::clone(&metrics));
         let sh = Arc::clone(&shared);
         let dispatcher = std::thread::Builder::new()
             .name("swifttron-dispatch".into())
@@ -88,29 +145,79 @@ impl Router {
             metrics,
             dispatcher: Some(dispatcher),
             next_id: AtomicU64::new(0),
-            min_seq_len,
-            max_seq_len,
+            policy,
+            endpoints,
         }
     }
 
-    /// Submit a request; the response arrives on `reply`.  The token
-    /// count is the request's live sequence length: the batcher groups
-    /// it with length-compatible requests (same padded bucket) and the
-    /// padding the bucket charges is accounted in the metrics.
+    /// Registered model ids, in model-index order.
+    pub fn model_names(&self) -> Vec<&str> {
+        self.endpoints.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Submit a request to the first (default) model; the response
+    /// arrives on `reply`.
     pub fn submit(&self, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
+        self.submit_idx(0, tokens, reply)
+    }
+
+    /// Submit a request to the named model.  An unknown model id is
+    /// answered immediately with an error response (and counted as an
+    /// error) instead of entering the queue.
+    pub fn submit_to(&self, model: &str, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
+        match self.endpoints.iter().position(|e| e.name == model) {
+            Some(idx) => self.submit_idx(idx, tokens, reply),
+            None => {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+                self.metrics.record_request();
+                self.metrics.record_error();
+                let _ = reply.send(Response {
+                    id,
+                    model: model.to_string(),
+                    replica: usize::MAX,
+                    label: usize::MAX,
+                    logits: Vec::new(),
+                    accel_ms: 0.0,
+                    e2e_s: 0.0,
+                    error: Some(format!(
+                        "unknown model {model:?} (resident: {:?})",
+                        self.model_names()
+                    )),
+                });
+                id
+            }
+        }
+    }
+
+    /// Submit to model index `model`.  The token count is the request's
+    /// live sequence length: the batcher groups it with
+    /// length-compatible requests of the same model (same padded
+    /// bucket) and the padding the bucket charges is accounted in the
+    /// per-model metrics.
+    fn submit_idx(&self, model: usize, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
-        self.metrics.record_request();
+        self.metrics.record_request_for(model);
+        let ep = &self.endpoints[model];
         let len = tokens.len();
-        let padded = {
+        // `padded_len` is the request's scheduler charge and must equal
+        // what the batcher's deficit ledger counts (the unclamped
+        // bucket boundary), or the reported served-token shares would
+        // drift from the fairness currency actually being enforced.
+        let padded = self.policy.padded_len(len);
+        {
             let mut b = self.shared.batcher.lock().unwrap();
-            b.push_len(Request { id, tokens, submitted: Instant::now(), reply }, len)
-        };
+            b.push_keyed(
+                Request { id, model, tokens, padded_len: padded, submitted: Instant::now(), reply },
+                model,
+                len,
+            );
+        }
         // Token accounting only for serveable requests, and never more
-        // padding than the largest geometry a replica actually runs —
-        // rejected requests and bucket boundaries beyond the array must
-        // not inflate the padding-waste metric.
-        if len >= self.min_seq_len.max(1) && len <= self.max_seq_len {
-            self.metrics.record_tokens(len, padded.min(self.max_seq_len));
+        // padding than the largest geometry the model's replicas
+        // actually run — rejected requests and bucket boundaries beyond
+        // the array must not inflate the padding-waste metric.
+        if len >= ep.min_len.max(1) && len <= ep.max_len {
+            self.metrics.record_tokens(model, len, padded.min(ep.max_len));
         }
         self.shared.available.notify_one();
         id

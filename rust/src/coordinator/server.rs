@@ -1,6 +1,8 @@
 //! TCP front-end: newline-delimited requests of comma-separated token
-//! ids; responses are single JSON lines.  One thread per connection
-//! (connections are few; the router pool does the real work).
+//! ids, optionally prefixed with a model id (`roberta_base:3,17,42`);
+//! responses are single JSON lines carrying the serving model.  One
+//! thread per connection (connections are few; the router pool does the
+//! real work).
 
 use super::router::{Response, Router};
 use crate::util::json::{obj, Json};
@@ -12,7 +14,7 @@ use std::sync::Arc;
 /// Serve until the listener errors or the process exits.
 pub fn serve(router: Arc<Router>, addr: &str) -> Result<(), String> {
     let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
-    eprintln!("swifttron serving on {addr}");
+    eprintln!("swifttron serving on {addr} (models: {:?})", router.model_names());
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
@@ -30,6 +32,7 @@ pub fn serve(router: Arc<Router>, addr: &str) -> Result<(), String> {
 fn response_json(resp: &Response) -> String {
     let mut fields = vec![
         ("id", Json::from(resp.id as i64)),
+        ("model", Json::from(resp.model.as_str())),
         ("replica", Json::from(resp.replica as i64)),
         ("accel_ms", Json::from(resp.accel_ms)),
         ("e2e_us", Json::from(resp.e2e_s * 1e6)),
@@ -55,9 +58,12 @@ fn handle(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
             break;
         }
         match parse_tokens(line) {
-            Ok(tokens) => {
+            Ok((model, tokens)) => {
                 let (tx, rx) = channel();
-                router.submit(tokens, tx);
+                match model {
+                    Some(m) => router.submit_to(&m, tokens, tx),
+                    None => router.submit(tokens, tx),
+                };
                 match rx.recv() {
                     Ok(resp) => writeln!(writer, "{}", response_json(&resp))?,
                     Err(_) => writeln!(writer, "{{\"error\":\"router gone\"}}")?,
@@ -70,11 +76,33 @@ fn handle(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Parse "3,17,42,..." into token ids.
-pub fn parse_tokens(line: &str) -> Result<Vec<i32>, String> {
-    line.split(',')
+/// Parse one request line into `(model, tokens)`: `"3,17,42"` targets
+/// the default model, `"deit_s:3,17,42"` targets a named one.  A model
+/// id starts with a letter or underscore, so a bare token list (which
+/// has no `:` before a letter) is never misread.
+pub fn parse_tokens(line: &str) -> Result<(Option<String>, Vec<i32>), String> {
+    let (model, rest) = match line.split_once(':') {
+        Some((head, rest))
+            if head
+                .trim()
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_ascii_alphabetic() || c == '_') =>
+        {
+            (Some(head.trim().to_string()), rest)
+        }
+        _ => (None, line),
+    };
+    if rest.trim().is_empty() {
+        // an empty token list is a well-formed (if doomed) request; the
+        // engine rejects it with a typed BadLength
+        return Ok((model, Vec::new()));
+    }
+    let tokens = rest
+        .split(',')
         .map(|t| t.trim().parse::<i32>().map_err(|_| format!("bad token {t:?}")))
-        .collect()
+        .collect::<Result<Vec<i32>, String>>()?;
+    Ok((model, tokens))
 }
 
 #[cfg(test)]
@@ -83,21 +111,48 @@ mod tests {
 
     #[test]
     fn parse_tokens_ok_and_err() {
-        assert_eq!(parse_tokens("1, 2,3").unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_tokens("1, 2,3").unwrap(), (None, vec![1, 2, 3]));
         assert!(parse_tokens("1,x").is_err());
     }
 
     #[test]
+    fn parse_tokens_reads_model_prefix() {
+        assert_eq!(
+            parse_tokens("deit_s:4,5,6").unwrap(),
+            (Some("deit_s".to_string()), vec![4, 5, 6])
+        );
+        assert_eq!(
+            parse_tokens(" tiny : 7 , 8 ").unwrap(),
+            (Some("tiny".to_string()), vec![7, 8])
+        );
+        // empty token list stays parseable; the engine rejects it later
+        assert_eq!(parse_tokens("tiny:").unwrap(), (Some("tiny".to_string()), vec![]));
+        // a leading digit before ':' is not a model id
+        assert!(parse_tokens("12:3,4").is_err(), "digit-led prefix is a bad token");
+    }
+
+    #[test]
     fn response_json_shapes() {
-        let ok =
-            Response { id: 1, replica: 0, label: 0, accel_ms: 0.5, e2e_s: 0.001, error: None };
+        let ok = Response {
+            id: 1,
+            model: "default".into(),
+            replica: 0,
+            label: 0,
+            logits: vec![5, -3],
+            accel_ms: 0.5,
+            e2e_s: 0.001,
+            error: None,
+        };
         let s = response_json(&ok);
         assert!(s.contains("\"label\":0") && s.contains("\"accel_ms\":0.5"));
         assert!(s.contains("\"replica\":0"));
+        assert!(s.contains("\"model\":\"default\""));
         let err = Response {
             id: 2,
+            model: "tiny".into(),
             replica: 1,
             label: usize::MAX,
+            logits: vec![],
             accel_ms: 0.0,
             e2e_s: 0.0,
             error: Some("bad".into()),

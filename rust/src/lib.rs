@@ -21,12 +21,15 @@
 //!   functional replicas instead.
 //! * [`model`] — geometry, weights, and scale metadata shared by all of the
 //!   above (read from the artifact manifest).
-//! * [`coordinator`] — the parallel serving pipeline (DESIGN.md §2, §6):
-//!   request router + dynamic batcher (length-bucketed for
-//!   variable-length requests, padding waste metered) feeding dispatch
-//!   groups to a pool of N engine replicas on the in-repo thread pool,
-//!   with per-replica virtual-time (simulated cycle) accounting next to
-//!   wall-clock throughput.
+//! * [`coordinator`] — the multi-tenant parallel serving pipeline
+//!   (DESIGN.md §2, §6, §8): a model registry (named geometry presets
+//!   with per-model replica groups and fair-share weights) in front of
+//!   a request router + dynamic batcher (dispatch groups keyed by
+//!   `(model, padded length)`, weighted-fair across models, padding
+//!   waste metered per model) feeding a pool of named replica groups on
+//!   the in-repo thread pool, with per-replica and per-model
+//!   virtual-time (simulated cycle) accounting next to wall-clock
+//!   throughput.
 //! * [`util`] — in-repo substrates (RNG, JSON, CLI, thread pool, property
 //!   testing, stats): the offline crate set has no tokio/clap/serde/etc.
 

@@ -4,7 +4,7 @@ use std::process::exit;
 use std::sync::Arc;
 use swifttron::baselines::{comparison_table, fp32_asic_report, gpu_inference_ms, GpuModel};
 use swifttron::coordinator::{
-    BatchPolicy, EngineReplica, FunctionalEngine, InferenceEngine, Metrics, Router,
+    BatchPolicy, EngineReplica, FunctionalEngine, InferenceEngine, Metrics, ModelRegistry, Router,
 };
 use swifttron::model::{Geometry, Manifest};
 use swifttron::runtime::Engine;
@@ -49,6 +49,8 @@ fn usage() -> String {
      \x20 infer    --tokens 1,2,3,...      one tiny-task inference via PJRT\n\
      \x20 serve    --addr 127.0.0.1:7077   TCP serving front-end\n\
      \x20          [--replicas N --max-batch B --engine pjrt|functional]\n\
+     \x20          [--models name=preset[:replicas[:weight]],...]   multi-tenant\n\
+     \x20          (request lines may carry a model prefix: \"tiny:3,17,42\")\n\
      \x20 report                           full paper reproduction summary\n"
         .into()
 }
@@ -147,7 +149,11 @@ fn cmd_infer(rest: &[String]) -> Result<(), String> {
         let mut rng = swifttron::util::rng::Rng::new(p.get_u64("seed")?);
         (0..eng.geo.m).map(|_| rng.below(63) as i32).collect()
     } else {
-        swifttron::coordinator::server::parse_tokens(p.get("tokens"))?
+        let (model, tokens) = swifttron::coordinator::server::parse_tokens(p.get("tokens"))?;
+        if model.is_some() {
+            return Err("infer takes bare token ids; model prefixes are for serve".into());
+        }
+        tokens
     };
     let pred = eng.predict(&tokens)?;
     println!(
@@ -157,13 +163,61 @@ fn cmd_infer(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse one `--models` entry: `name=preset[:replicas[:weight]]`.
+fn parse_model_spec(part: &str) -> Result<(String, String, usize, u64), String> {
+    let bad = || format!("bad model spec {part:?} (want name=preset[:replicas[:weight]])");
+    let (name, rest) = part.split_once('=').ok_or_else(bad)?;
+    let mut it = rest.split(':');
+    let preset = it.next().ok_or_else(bad)?.trim().to_string();
+    let replicas = match it.next() {
+        Some(s) => s.trim().parse::<usize>().map_err(|_| bad())?,
+        None => 1,
+    };
+    let weight = match it.next() {
+        Some(s) => s.trim().parse::<u64>().map_err(|_| bad())?,
+        None => 1,
+    };
+    if it.next().is_some() {
+        return Err(bad());
+    }
+    Ok((name.trim().to_string(), preset, replicas, weight))
+}
+
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
     let p = Args::new("swifttron serve", "TCP serving front-end")
         .opt("addr", "127.0.0.1:7077", "listen address")
         .opt("replicas", "2", "engine replicas (simulated accelerators)")
         .opt("max-batch", "8", "dispatch group size")
         .opt("engine", "pjrt", "replica backend: pjrt | functional")
+        .opt(
+            "models",
+            "",
+            "multi-tenant spec name=preset[:replicas[:weight]],... (functional backend)",
+        )
         .parse(rest)?;
+    let metrics = Arc::new(Metrics::new());
+    let policy = BatchPolicy { max_batch: p.get_usize("max-batch")?, ..Default::default() };
+
+    // Multi-tenant path: a registry of named functional models with
+    // per-model replica groups and fair-share weights (DESIGN.md §8).
+    // PJRT replicas stay single-model (one AOT artifact per process).
+    if !p.get("models").is_empty() {
+        if p.get("engine") == "pjrt" {
+            return Err(
+                "--models drives the functional backend; PJRT replicas stay single-model \
+                 (pass --engine functional)"
+                    .into(),
+            );
+        }
+        let mut reg = ModelRegistry::new();
+        for part in p.get("models").split(',') {
+            let (name, preset, replicas, weight) = parse_model_spec(part.trim())?;
+            reg.register(&name, &preset, replicas, weight, 7)?;
+        }
+        let router = Arc::new(Router::start_multi(reg.into_groups(), policy, metrics));
+        return swifttron::coordinator::server::serve(router, p.get("addr"));
+    }
+
     let replicas = p.get_usize("replicas")?;
     let engines: Vec<Arc<dyn EngineReplica>> = match p.get("engine") {
         // artifact-free synthetic-weight replicas (no PJRT needed)
@@ -185,9 +239,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         }
         other => return Err(format!("unknown engine {other:?} (expected pjrt | functional)")),
     };
-    let metrics = Arc::new(Metrics::new());
-    let policy = BatchPolicy { max_batch: p.get_usize("max-batch")?, ..Default::default() };
-    let router = Arc::new(Router::start(engines, policy, Arc::clone(&metrics)));
+    let router = Arc::new(Router::start(engines, policy, metrics));
     swifttron::coordinator::server::serve(router, p.get("addr"))
 }
 

@@ -53,6 +53,12 @@ impl Geometry {
         (qkv + scores + ctx + proj + ffn) * self.layers as u64
     }
 
+    /// Every name [`Geometry::preset`] accepts, in evaluation order
+    /// (paper Table II) — the id space the multi-tenant registry
+    /// (`coordinator::registry`) exposes.
+    pub const PRESET_NAMES: [&str; 5] =
+        ["tiny", "small", "roberta_base", "roberta_large", "deit_s"];
+
     /// Named presets matching `python/compile/model.py::GEOMETRIES`.
     pub fn preset(name: &str) -> Option<Geometry> {
         Some(match name {
@@ -95,5 +101,13 @@ mod tests {
     #[test]
     fn unknown_preset_is_none() {
         assert!(Geometry::preset("gpt5").is_none());
+    }
+
+    #[test]
+    fn preset_names_round_trip() {
+        for name in Geometry::PRESET_NAMES {
+            assert!(Geometry::preset(name).is_some(), "{name} listed but not resolvable");
+        }
+        assert_eq!(Geometry::PRESET_NAMES.len(), 5);
     }
 }

@@ -13,6 +13,11 @@
 #![cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 
 use super::tensor::Tensor;
+// The vendored `xla` crate is resolved through the in-repo stub so the
+// feature keeps compiling without the checkout (see runtime::xla_stub);
+// swap this alias for the real crate to link PJRT.
+#[cfg(feature = "pjrt")]
+use crate::runtime::xla_stub as xla;
 #[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

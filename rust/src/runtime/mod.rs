@@ -10,13 +10,19 @@
 //!
 //! The `xla` crate is vendored, not on crates.io, so this module is
 //! compiled against it only under the `pjrt` cargo feature (see
-//! Cargo.toml).  Without the feature, [`Engine::cpu`] returns an error
-//! and callers use the artifact-free functional serving path
+//! Cargo.toml).  While the vendored checkout is absent the feature
+//! resolves against the API-compatible in-repo `xla_stub` module (kept
+//! honest by ci.sh's check-only `--features pjrt` build), whose client
+//! constructor fails at runtime.  Either way, without a real PJRT
+//! client [`Engine::cpu`] returns an error and callers use the
+//! artifact-free functional serving path
 //! (`coordinator::FunctionalEngine`) instead; the default build has no
 //! external dependencies at all.
 
 pub mod executable;
 pub mod tensor;
+#[cfg(feature = "pjrt")]
+pub mod xla_stub;
 
 pub use executable::{Engine, Executable};
 pub use tensor::Tensor;

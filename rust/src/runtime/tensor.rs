@@ -2,6 +2,11 @@
 //! `xla::Literal` at the PJRT boundary.  INT8-coded values travel as i32
 //! (the `xla` crate's `NativeType` set has no i8).
 
+// Resolved through the in-repo stub so `--features pjrt` compiles
+// without the vendored checkout (see runtime::xla_stub).
+#[cfg(feature = "pjrt")]
+use crate::runtime::xla_stub as xla;
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
     I32 { shape: Vec<usize>, data: Vec<i32> },

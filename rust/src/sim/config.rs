@@ -54,6 +54,27 @@ impl HwConfig {
         }
     }
 
+    /// An instance sized to a workload geometry (paper §III-D: array
+    /// size and head parallelism are design-time tunables): array rows
+    /// follow the sentence length, columns the model dimension, one
+    /// Softmax unit per row, one LayerNorm lane per column, one head
+    /// unit per model head.  For the roberta_base geometry this is
+    /// exactly [`HwConfig::paper`]; the multi-tenant registry gives
+    /// every resident model its own sized instance.
+    pub fn sized_to(geo: &Geometry) -> HwConfig {
+        HwConfig {
+            array_rows: geo.m.max(1),
+            array_cols: geo.d.max(1),
+            parallel_heads: geo.heads.max(1),
+            softmax_units: geo.m.max(1),
+            layernorm_lanes: geo.d.max(1),
+            clock_ns: 7.0,
+            pipeline_stages: 3,
+            worst_case_sqrt: true,
+            attn_heads_parallel: true,
+        }
+    }
+
     /// A smaller edge-class instance (used by the design-space example).
     pub fn edge() -> HwConfig {
         HwConfig {
@@ -123,5 +144,27 @@ mod tests {
         let mut c = HwConfig::paper();
         c.array_rows = 0;
         assert!(c.validate(&Geometry::preset("tiny").unwrap()).is_err());
+    }
+
+    #[test]
+    fn sized_to_matches_paper_instance_for_roberta_base() {
+        // the paper's §IV-B instance IS the roberta_base-sized one
+        let geo = Geometry::preset("roberta_base").unwrap();
+        let c = HwConfig::sized_to(&geo);
+        let p = HwConfig::paper();
+        assert_eq!(c.array_rows, p.array_rows);
+        assert_eq!(c.array_cols, p.array_cols);
+        assert_eq!(c.parallel_heads, p.parallel_heads);
+        assert_eq!(c.softmax_units, p.softmax_units);
+        assert_eq!(c.layernorm_lanes, p.layernorm_lanes);
+        assert_eq!(c.mac_count(), geo.m as u64 * geo.d as u64);
+    }
+
+    #[test]
+    fn sized_to_validates_for_every_preset() {
+        for name in Geometry::PRESET_NAMES {
+            let geo = Geometry::preset(name).unwrap();
+            HwConfig::sized_to(&geo).validate(&geo).unwrap();
+        }
     }
 }

@@ -4,27 +4,19 @@
 //! `m_eff ∈ {1, odd, geo.m}`, the fused forward pass (head loop forced
 //! parallel AND knob-off serial) must equal the serial unfused
 //! reference bit for bit, outputs and sqrt iteration counts alike.
+//!
+//! Setup (geometry sampling, weight stacks, activation streams) comes
+//! from the shared fixture layer in `tests/common`.
 
+mod common;
+
+use common::{random_acts, random_geo, synthetic_layers};
 use swifttron::model::Geometry;
 use swifttron::sim::functional::{
     encoder_forward_ws, layer_forward, layer_forward_ws, layer_forward_ws_unfused,
     synthetic_consts, LayerWeights, Workspace,
 };
 use swifttron::util::rng::Rng;
-
-/// Random small geometry (layers = 1).  With `with_tail`, `d` exceeds
-/// `heads * dh` by `1..heads` columns — the attention tail the head
-/// loop never touches and must leave zeroed (`Geometry::dh` floors, so
-/// a sub-`heads` tail keeps `dh()` intact).
-fn random_geo(rng: &mut Rng, with_tail: bool) -> Geometry {
-    let heads = 2 + rng.below(3) as usize; // 2..=4
-    let dh = 4 * (1 + rng.below(3) as usize); // 4, 8, 12
-    let tail = if with_tail { 1 + rng.below(heads as u64 - 1) as usize } else { 0 };
-    let d = heads * dh + tail;
-    let m = 4 + rng.below(13) as usize; // 4..=16
-    let dff = 8 * (1 + rng.below(4) as usize); // 8..=32
-    Geometry::new(d, heads, m, dff, 1)
-}
 
 #[test]
 fn head_parallel_fused_matches_serial_unfused_on_randomized_shapes() {
@@ -35,8 +27,7 @@ fn head_parallel_fused_matches_serial_unfused_on_randomized_shapes() {
         let c = synthetic_consts(&geo);
         let odd = 1 + 2 * rng.below(geo.m as u64 / 2) as usize; // odd, < geo.m
         for m_eff in [1usize, odd, geo.m] {
-            let x: Vec<i32> =
-                (0..m_eff * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+            let x = random_acts(&mut rng, m_eff * geo.d);
 
             // fused, head loop FORCED parallel (threshold floored so
             // tiny shapes still exercise the scoped parallel-for)
@@ -85,12 +76,9 @@ fn encoder_stack_fused_matches_layerwise_unfused_reference() {
     for case in 0..6 {
         let mut geo = random_geo(&mut rng, case % 2 == 0);
         geo.layers = 1 + rng.below(3) as usize;
-        let layers: Vec<_> = (0..geo.layers)
-            .map(|_| (LayerWeights::synthetic(&mut rng, &geo), synthetic_consts(&geo)))
-            .collect();
+        let layers = synthetic_layers(&mut rng, &geo);
         let m_eff = 1 + rng.below(geo.m as u64) as usize;
-        let x: Vec<i32> =
-            (0..m_eff * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+        let x = random_acts(&mut rng, m_eff * geo.d);
 
         let mut ws = Workspace::new(&geo);
         ws.set_attn_par_min_macs(0); // force the parallel head loop
@@ -122,7 +110,7 @@ fn zero_tail_columns_stay_inert_under_both_paths() {
     assert!(geo.heads * geo.dh() < geo.d);
     let w = LayerWeights::synthetic(&mut rng, &geo);
     let c = synthetic_consts(&geo);
-    let x: Vec<i32> = (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+    let x = random_acts(&mut rng, geo.m * geo.d);
     let mut x_flip = x.clone();
     x_flip[geo.d - 1] = (x_flip[geo.d - 1] + 40).min(127); // tail column, row 0
 

@@ -1,0 +1,75 @@
+//! Shared integration-test fixtures (ISSUE 4): seeded RNG construction,
+//! randomized small geometries, synthetic weight stacks, canonical
+//! token/activation streams, and functional replica groups — the setup
+//! every serving/datapath test used to copy-paste.
+//!
+//! Each integration-test binary compiles its own copy and uses a
+//! subset, hence the file-level `dead_code` allowance.
+
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use swifttron::coordinator::{EngineReplica, FunctionalEngine};
+use swifttron::model::{Geometry, LayerConsts};
+use swifttron::sim::functional::{synthetic_consts, LayerWeights};
+use swifttron::sim::HwConfig;
+use swifttron::util::rng::Rng;
+
+/// Random small single-layer geometry for head-partitioning tests:
+/// always multi-head (heads 2..=4, dh in {4, 8, 12}) so the parallel
+/// head loop has a real cross-head surface.  With `with_tail`, `d`
+/// exceeds `heads * dh` by `1..heads` columns — the attention tail the
+/// head loop never touches and must leave zeroed (`Geometry::dh`
+/// floors, so a sub-`heads` tail keeps `dh()` intact).
+pub fn random_geo(rng: &mut Rng, with_tail: bool) -> Geometry {
+    let heads = 2 + rng.below(3) as usize; // 2..=4
+    let dh = 4 * (1 + rng.below(3) as usize); // 4, 8, 12
+    let tail = if with_tail { 1 + rng.below(heads as u64 - 1) as usize } else { 0 };
+    let d = heads * dh + tail;
+    let m = 4 + rng.below(13) as usize; // 4..=16
+    let dff = 8 * (1 + rng.below(4) as usize); // 8..=32
+    Geometry::new(d, heads, m, dff, 1)
+}
+
+/// Random small single-layer geometry including single-head cases
+/// (heads 1..=3, `d` an exact multiple of the head count) — the
+/// variable-length suite's sampler, where degenerate head counts are
+/// part of the coverage.
+pub fn random_geo_small(rng: &mut Rng) -> Geometry {
+    let heads = 1 + rng.below(3) as usize; // 1..=3
+    let dh = 4 * (1 + rng.below(3) as usize); // 4, 8, 12
+    let d = heads * dh;
+    let m = 4 + rng.below(13) as usize; // 4..=16
+    let dff = 8 * (1 + rng.below(4) as usize); // 8..=32
+    Geometry::new(d, heads, m, dff, 1)
+}
+
+/// Synthetic per-layer weight/constant stack for `geo.layers` layers.
+pub fn synthetic_layers(rng: &mut Rng, geo: &Geometry) -> Vec<(LayerWeights, LayerConsts)> {
+    (0..geo.layers)
+        .map(|_| (LayerWeights::synthetic(rng, geo), synthetic_consts(geo)))
+        .collect()
+}
+
+/// Random INT8 activations (`n` values in -127..=127).
+pub fn random_acts(rng: &mut Rng, n: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.range_i64(-127, 127) as i32).collect()
+}
+
+/// Random token stream over the synthetic engines' 64-entry vocab.
+pub fn random_tokens(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.below(60) as i32).collect()
+}
+
+/// The canonical deterministic token stream the serving tests compare
+/// across replicas/backends: `i % 60` for `len` positions.
+pub fn canonical_tokens(len: usize) -> Vec<i32> {
+    (0..len).map(|i| (i % 60) as i32).collect()
+}
+
+/// `n` identical functional replicas of a preset on the paper hardware
+/// instance (one shared synthetic weight bundle).
+pub fn functional_replicas(preset: &str, seed: u64, n: usize) -> Vec<Arc<dyn EngineReplica>> {
+    FunctionalEngine::replica_group(preset, seed, HwConfig::paper(), n)
+        .expect("synthetic replica group")
+}

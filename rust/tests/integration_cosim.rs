@@ -3,10 +3,21 @@
 //! the roberta_base-shaped encoder layer — the same software-vs-RTL
 //! validation triangle the paper runs with QuestaSim (§IV-B), closed
 //! across three implementations (jnp spec == Pallas kernels == rust).
+//!
+//! Extended (ISSUE 4) with cross-model golden determinism: for every
+//! geometry preset, the served outputs must be byte-identical across
+//! 1/2/4-replica pools and across serial-vs-head-parallel attention.
 
-use swifttron::model::{Blob, Manifest};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+use swifttron::coordinator::{
+    EngineReplica, FunctionalEngine, Metrics, ReplicaPool, Request, SyntheticModel,
+};
+use swifttron::model::{Blob, Geometry, Manifest};
 use swifttron::runtime::{Engine, Tensor};
 use swifttron::sim::functional::{layer_forward, LayerWeights};
+use swifttron::sim::HwConfig;
 use swifttron::util::rng::Rng;
 
 #[test]
@@ -52,6 +63,78 @@ fn pjrt_layer_matches_rust_functional_model_bit_exact() {
         &rust_out.q_out[..],
         "PJRT artifact and rust functional model diverged"
     );
+}
+
+#[test]
+fn cross_model_outputs_are_deterministic_across_pools_and_attention_modes() {
+    // For every preset: one shared synthetic weight bundle, a serial-
+    // attention reference engine, and 1/2/4-replica pools of head-
+    // parallel engines.  Labels, logits, and virtual time must be
+    // byte-identical for every request regardless of which replica
+    // served it or which attention execution path ran.  Heavy presets
+    // run their exact d/heads/d_ff numerics at a test-sized depth and
+    // sentence length — determinism does not depend on layer count, and
+    // full-depth RoBERTa-large is minutes of host time.
+    for preset in Geometry::PRESET_NAMES {
+        let base = Geometry::preset(preset).unwrap();
+        let geo = Geometry { layers: base.layers.min(2), m: base.m.min(16), ..base };
+        let model = Arc::new(SyntheticModel::build_geo(&geo, 0xC0DE ^ preset.len() as u64));
+        let hw_par = HwConfig::sized_to(&geo);
+        let hw_serial = HwConfig { attn_heads_parallel: false, ..hw_par };
+        let reference = FunctionalEngine::from_model(Arc::clone(&model), hw_serial);
+
+        // duplicate lengths on purpose: identical requests must come
+        // back identical from *different* replicas of one pool too
+        let lens = [geo.m, geo.m, geo.m / 2, geo.m / 2, 1, 3.min(geo.m)];
+        let streams: Vec<Vec<i32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| (0..l).map(|j| ((i * 11 + j * 5) % 60) as i32).collect())
+            .collect();
+        let want: Vec<_> = streams.iter().map(|t| reference.predict(t).unwrap()).collect();
+
+        for replicas in [1usize, 2, 4] {
+            let group: Vec<Arc<dyn EngineReplica>> = (0..replicas)
+                .map(|_| {
+                    Arc::new(FunctionalEngine::from_model(Arc::clone(&model), hw_par))
+                        as Arc<dyn EngineReplica>
+                })
+                .collect();
+            let metrics = Arc::new(Metrics::new());
+            let pool = ReplicaPool::new(group, metrics);
+            let mut receivers = Vec::new();
+            let requests: Vec<Request> = streams
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let (tx, rx) = channel();
+                    receivers.push(rx);
+                    Request {
+                        id: i as u64,
+                        model: 0,
+                        tokens: t.clone(),
+                        padded_len: t.len(),
+                        submitted: Instant::now(),
+                        reply: tx,
+                    }
+                })
+                .collect();
+            let responses = pool.dispatch(requests);
+            for (i, resp) in responses.iter().enumerate() {
+                let tag = format!("{preset} replicas={replicas} req {i}");
+                assert!(resp.error.is_none(), "{tag}: {:?}", resp.error);
+                assert_eq!(resp.label, want[i].label, "{tag}: label");
+                assert_eq!(
+                    resp.logits, want[i].logits,
+                    "{tag}: head-parallel pool diverged from serial reference"
+                );
+                assert!(
+                    (resp.accel_ms - want[i].accel_ms).abs() < 1e-12,
+                    "{tag}: virtual time must not depend on host execution"
+                );
+            }
+        }
+    }
 }
 
 #[test]

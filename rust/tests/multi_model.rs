@@ -1,0 +1,264 @@
+//! Multi-model multi-tenant serving integration tests (ISSUE 4): the
+//! registry's per-model replica groups behind one router, model-keyed
+//! routing with per-model metrics, and the acceptance claim — mixed
+//! `roberta_base` + `deit_s` + `tiny` traffic through one pool whose
+//! served-token shares land within 10% of the configured fair-share
+//! weights (DESIGN.md §8, the configuration `examples/serving.rs`
+//! drives).
+
+mod common;
+
+use common::canonical_tokens;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use swifttron::coordinator::{
+    BatchPolicy, Batcher, EngineReplica, FunctionalEngine, Metrics, ModelRegistry, Prediction,
+    ReplicaPool, Request, RequestError, Router,
+};
+use swifttron::model::Geometry;
+use swifttron::sim::HwConfig;
+
+/// Reference engine for a registry entry: same preset, seed, and
+/// sized-to hardware instance, so labels, logits, and virtual time all
+/// have to match the served responses exactly.
+fn reference(preset: &str, seed: u64) -> FunctionalEngine {
+    let geo = Geometry::preset(preset).unwrap();
+    FunctionalEngine::synthetic(preset, seed, HwConfig::sized_to(&geo)).unwrap()
+}
+
+#[test]
+fn router_routes_models_and_accounts_per_model() {
+    let mut reg = ModelRegistry::new();
+    reg.register("tiny", "tiny", 2, 1, 7).unwrap();
+    reg.register("small", "small", 1, 1, 11).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let wait = Duration::from_millis(1);
+    let policy = BatchPolicy { max_batch: 4, max_wait: wait, bucket_width: 8 };
+    let router = Router::start_multi(reg.into_groups(), policy, Arc::clone(&metrics));
+    assert_eq!(router.model_names(), vec!["tiny", "small"]);
+
+    let ref_tiny = reference("tiny", 7);
+    let ref_small = reference("small", 11);
+    let m_tiny = ref_tiny.seq_len();
+    let m_small = ref_small.seq_len();
+
+    let mut receivers = Vec::new();
+    for i in 0..12 {
+        let t_tiny = canonical_tokens(1 + (i * 7) % m_tiny);
+        let t_small = canonical_tokens(1 + (i * 11) % m_small);
+        let want_tiny = ref_tiny.predict(&t_tiny).unwrap();
+        let want_small = ref_small.predict(&t_small).unwrap();
+        let (tx, rx) = channel();
+        router.submit_to("tiny", t_tiny, tx);
+        receivers.push((rx, "tiny", want_tiny));
+        let (tx, rx) = channel();
+        router.submit_to("small", t_small, tx);
+        receivers.push((rx, "small", want_small));
+    }
+    for (rx, model, want) in receivers {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "{model}: {:?}", resp.error);
+        assert_eq!(resp.model, model, "response carries the serving model id");
+        assert_eq!(resp.label, want.label, "{model} label");
+        assert_eq!(resp.logits, want.logits, "{model} logits diverged from reference");
+        assert!(
+            (resp.accel_ms - want.accel_ms).abs() < 1e-12,
+            "{model} virtual time is per-model, per-length"
+        );
+        match model {
+            "tiny" => assert!(resp.replica < 2, "tiny owns global replicas 0..2"),
+            _ => assert_eq!(resp.replica, 2, "small owns global replica 2"),
+        }
+    }
+
+    // unknown model: immediate typed error, counted, never queued
+    let (tx, rx) = channel();
+    router.submit_to("bert", canonical_tokens(4), tx);
+    let resp = rx.recv().unwrap();
+    assert!(resp.error.as_deref().unwrap_or("").contains("unknown model"), "{:?}", resp.error);
+    assert_eq!(resp.model, "bert");
+
+    router.shutdown();
+
+    assert_eq!(metrics.model_count(), 2);
+    assert_eq!(metrics.model_name(0).as_deref(), Some("tiny"));
+    let tiny = metrics.model(0);
+    let small = metrics.model(1);
+    assert_eq!(tiny.requests.load(Ordering::Relaxed), 12);
+    assert_eq!(tiny.completed.load(Ordering::Relaxed), 12);
+    assert_eq!(small.completed.load(Ordering::Relaxed), 12);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 24);
+    assert_eq!(metrics.errors.load(Ordering::Relaxed), 1, "only the unknown model errored");
+    assert!(tiny.served_tokens.load(Ordering::Relaxed) > 0);
+    assert!(
+        small.served_padded_tokens.load(Ordering::Relaxed)
+            >= small.served_tokens.load(Ordering::Relaxed),
+        "padding never shrinks tokens"
+    );
+    // per-model padding waste is tracked separately (bucket width 8
+    // against mixed lengths pads both models, by different amounts)
+    assert!(tiny.padding_waste() > 0.0);
+    assert!(small.padding_waste() > 0.0);
+    let report = metrics.report();
+    assert!(report.contains("model tiny"), "{report}");
+    assert!(report.contains("model small"), "{report}");
+}
+
+#[test]
+fn mixed_preset_traffic_shares_converge_to_weights() {
+    // The acceptance configuration: tiny (weight 2), deit_s (1), and
+    // roberta_base (1) resident in one pool.  Every model is kept
+    // backlogged with equal-cost (one live token, 8-token bucket)
+    // requests while the weighted-fair scheduler dispatches; after a
+    // fixed number of groups each model's share of served padded
+    // tokens must sit within 10% of its weight share.  The loop drives
+    // the real batcher + registry replica groups + pool + metrics —
+    // only the dispatcher thread is bypassed so the measurement window
+    // is deterministic.
+    let weights: [u64; 3] = [2, 1, 1];
+    let mut reg = ModelRegistry::new();
+    reg.register("tiny", "tiny", 1, weights[0], 7).unwrap();
+    reg.register("deit_s", "deit_s", 1, weights[1], 7).unwrap();
+    reg.register("roberta_base", "roberta_base", 1, weights[2], 7).unwrap();
+    let names = ["tiny", "deit_s", "roberta_base"];
+
+    let metrics = Arc::new(Metrics::new());
+    metrics.ensure_models(&[("tiny", 2), ("deit_s", 1), ("roberta_base", 1)]);
+    let wait = Duration::from_secs(3600);
+    let policy = BatchPolicy { max_batch: 4, max_wait: wait, bucket_width: 8 };
+    let pool = ReplicaPool::new_multi(reg.into_groups(), Arc::clone(&metrics));
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    batcher.set_model_weights(&weights);
+
+    // Prefill interleaved so every model stays backlogged through all
+    // measured dispatches (48 groups x 4 requests; weight shares cap
+    // any one model at 96 requests).
+    let total_batches = 48usize;
+    let per_model = [120usize, 60, 60];
+    let mut receivers = Vec::new();
+    let mut id = 0u64;
+    for i in 0..per_model[0] {
+        for (m, &cap) in per_model.iter().enumerate() {
+            if i >= cap {
+                continue;
+            }
+            let (tx, rx) = channel();
+            id += 1;
+            let tokens = vec![(i % 60) as i32];
+            batcher.push_keyed(
+                Request {
+                    id,
+                    model: m,
+                    tokens,
+                    padded_len: 8,
+                    submitted: Instant::now(),
+                    reply: tx,
+                },
+                m,
+                1,
+            );
+            receivers.push(rx);
+        }
+    }
+
+    for _ in 0..total_batches {
+        let batch = batcher.take_batch();
+        assert_eq!(batch.len(), 4, "every measured group is a full bucket");
+        let model = batch[0].model;
+        assert!(batch.iter().all(|r| r.model == model), "dispatch group crossed models");
+        let responses = pool.dispatch(batch);
+        assert!(responses.iter().all(|r| r.error.is_none()));
+    }
+    drop(receivers); // the unserved backlog is measurement headroom
+
+    let total_w: u64 = weights.iter().sum();
+    let total: u64 =
+        (0..3).map(|m| metrics.model(m).served_padded_tokens.load(Ordering::Relaxed)).sum();
+    assert_eq!(total, total_batches as u64 * 32, "every group charged 4 x 8 padded tokens");
+    for (m, &w) in weights.iter().enumerate() {
+        let served = metrics.model(m).served_padded_tokens.load(Ordering::Relaxed);
+        let share = served as f64 / total as f64;
+        let target = w as f64 / total_w as f64;
+        assert!(
+            (share - target).abs() <= 0.1 * target,
+            "{}: served share {share:.3} vs weight share {target:.3} (served {served} of {total})",
+            names[m]
+        );
+    }
+    // the metrics report carries the share next to the weight
+    let report = metrics.report();
+    assert!(report.contains("model roberta_base"), "{report}");
+    assert!(report.contains("share="), "{report}");
+}
+
+#[test]
+fn heavy_model_is_not_starved_by_a_flood_of_cheap_traffic() {
+    // A tiny-model flood cannot push roberta_large-class work past its
+    // deadline: the expired heavy request dispatches before the full
+    // tiny bucket.  Mock engines keep this instant; the priority logic
+    // under test is the batcher's (the same one the router drives).
+    struct Instant0;
+    impl EngineReplica for Instant0 {
+        fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
+            Ok(Prediction {
+                label: tokens.len() % 2,
+                logits: vec![0, 1],
+                accel_cycles: 1,
+                accel_ms: 0.001,
+            })
+        }
+        fn seq_len(&self) -> usize {
+            256
+        }
+        fn min_seq_len(&self) -> usize {
+            1
+        }
+    }
+    let mut reg = ModelRegistry::new();
+    reg.register_group("tiny", vec![Arc::new(Instant0) as Arc<dyn EngineReplica>], 4).unwrap();
+    reg.register_group("large", vec![Arc::new(Instant0) as Arc<dyn EngineReplica>], 1).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::ZERO, bucket_width: 8 };
+    let pool = ReplicaPool::new_multi(reg.into_groups(), Arc::clone(&metrics));
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    batcher.set_model_weights(&[4, 1]);
+
+    let mk = |model: usize, len: usize| {
+        let (tx, rx) = channel();
+        let req = Request {
+            id: 0,
+            model,
+            tokens: vec![0; len],
+            padded_len: len.div_ceil(8) * 8,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        (req, rx)
+    };
+    let (heavy, _rx_heavy) = mk(1, 200);
+    batcher.push_keyed(heavy, 1, 200);
+    std::thread::sleep(Duration::from_millis(2));
+    let mut rxs = Vec::new();
+    for _ in 0..8 {
+        let (req, rx) = mk(0, 3);
+        batcher.push_keyed(req, 0, 3);
+        rxs.push(rx);
+    }
+    // first dispatch: the expired heavy request, not the full flood
+    let first = batcher.take_batch();
+    assert_eq!(first.len(), 1);
+    assert_eq!(first[0].model, 1, "expired heavy request outranks the tiny flood");
+    let responses = pool.dispatch(first);
+    assert_eq!(responses[0].model, "large");
+    // the flood still drains afterwards
+    let mut tiny_served = 0;
+    while tiny_served < 8 {
+        let batch = batcher.take_batch();
+        assert!(batch.iter().all(|r| r.model == 0));
+        tiny_served += pool.dispatch(batch).len();
+    }
+    assert_eq!(metrics.model(1).completed.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.model(0).completed.load(Ordering::Relaxed), 8);
+}

@@ -4,7 +4,16 @@
 //! shapes; the serving stack must deliver the same numerics through
 //! length-bucketed dispatch; and malformed requests must surface typed
 //! errors end to end.
+//!
+//! Setup (geometry sampling, weight stacks, token streams, replica
+//! groups) comes from the shared fixture layer in `tests/common`.
 
+mod common;
+
+use common::{
+    canonical_tokens, functional_replicas, random_acts, random_geo_small, random_tokens,
+    synthetic_layers,
+};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
@@ -19,16 +28,6 @@ use swifttron::sim::functional::{
 use swifttron::sim::{simulate_encoder, simulate_encoder_m, HwConfig};
 use swifttron::util::rng::Rng;
 
-/// Random small geometry with heads dividing d (layers = 1).
-fn random_geo(rng: &mut Rng) -> Geometry {
-    let heads = 1 + rng.below(3) as usize; // 1..=3
-    let dh = 4 * (1 + rng.below(3) as usize); // 4, 8, 12
-    let d = heads * dh;
-    let m = 4 + rng.below(13) as usize; // 4..=16
-    let dff = 8 * (1 + rng.below(4) as usize); // 8..=32
-    Geometry::new(d, heads, m, dff, 1)
-}
-
 #[test]
 fn workspace_matches_allocation_path_on_randomized_shapes() {
     // The acceptance contract of the refactor: for random shapes and a
@@ -37,12 +36,11 @@ fn workspace_matches_allocation_path_on_randomized_shapes() {
     // m = m_eff — outputs AND data-dependent sqrt iteration counts.
     let mut rng = Rng::new(0xA11C);
     for case in 0..20 {
-        let geo = random_geo(&mut rng);
+        let geo = random_geo_small(&mut rng);
         let w = LayerWeights::synthetic(&mut rng, &geo);
         let c = synthetic_consts(&geo);
         let m_eff = 1 + rng.below(geo.m as u64) as usize;
-        let x: Vec<i32> =
-            (0..m_eff * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+        let x = random_acts(&mut rng, m_eff * geo.d);
 
         let mut ws = Workspace::new(&geo);
         let mut out = vec![0i32; m_eff * geo.d];
@@ -60,15 +58,12 @@ fn workspace_matches_allocation_path_on_randomized_shapes() {
 fn encoder_workspace_matches_allocation_path() {
     let mut rng = Rng::new(0xB22D);
     for case in 0..6 {
-        let mut geo = random_geo(&mut rng);
+        let mut geo = random_geo_small(&mut rng);
         geo.layers = 1 + rng.below(3) as usize;
-        let layers: Vec<_> = (0..geo.layers)
-            .map(|_| (LayerWeights::synthetic(&mut rng, &geo), synthetic_consts(&geo)))
-            .collect();
+        let layers = synthetic_layers(&mut rng, &geo);
 
         // full length: workspace path == allocating wrapper, bit for bit
-        let x: Vec<i32> =
-            (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+        let x = random_acts(&mut rng, geo.m * geo.d);
         let mut ws = Workspace::new(&geo);
         let mut out = vec![0i32; geo.m * geo.d];
         let mut iters = Vec::new();
@@ -99,7 +94,7 @@ fn full_length_requests_match_fixed_geometry_cycles() {
     let a = FunctionalEngine::synthetic("tiny", 7, hw).unwrap();
     let b = FunctionalEngine::synthetic("tiny", 7, hw).unwrap();
     let geo = Geometry::preset("tiny").unwrap();
-    let tokens: Vec<i32> = (0..geo.m).map(|i| (i % 60) as i32).collect();
+    let tokens = canonical_tokens(geo.m);
     let pa = a.predict(&tokens).unwrap();
     let pb = b.predict(&tokens).unwrap();
     assert_eq!(pa.logits, pb.logits);
@@ -118,7 +113,7 @@ fn short_requests_cost_fewer_cycles() {
     let hw = HwConfig::paper();
     let e = FunctionalEngine::synthetic("tiny", 7, hw).unwrap();
     let m = e.seq_len();
-    let tokens: Vec<i32> = (0..m).map(|i| (i % 60) as i32).collect();
+    let tokens = canonical_tokens(m);
     let mut prev = 0u64;
     for m_eff in [m / 4, m / 2, m] {
         let c = e.predict(&tokens[..m_eff]).unwrap().accel_cycles;
@@ -162,25 +157,19 @@ fn bucketed_router_serves_mixed_lengths_bit_exactly() {
     let reference = FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap();
     let m = reference.seq_len();
     let metrics = Arc::new(Metrics::new());
-    let replicas: Vec<Arc<dyn EngineReplica>> = (0..2)
-        .map(|_| {
-            Arc::new(FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap())
-                as Arc<dyn EngineReplica>
-        })
-        .collect();
     let policy = BatchPolicy {
         max_batch: 4,
         max_wait: Duration::from_millis(1),
         bucket_width: (m / 4).max(1),
     };
-    let router = Router::start(replicas, policy, Arc::clone(&metrics));
+    let router = Router::start(functional_replicas("tiny", 7, 2), policy, Arc::clone(&metrics));
 
     let mut rng = Rng::new(99);
     let mut expected = Vec::new();
     let mut receivers = Vec::new();
     for _ in 0..24 {
         let len = 1 + rng.below(m as u64) as usize;
-        let tokens: Vec<i32> = (0..len).map(|_| rng.below(60) as i32).collect();
+        let tokens = random_tokens(&mut rng, len);
         let want = reference.predict(&tokens).unwrap();
         expected.push((want.label, want.accel_ms));
         let (tx, rx) = channel();

@@ -6,14 +6,17 @@
 //! This test binary installs its own `#[global_allocator]`, so it must
 //! stay a dedicated integration-test target (one allocator per binary).
 //! Allocation events are counted per-thread to stay immune to anything
-//! the test harness does on other threads.
+//! the test harness does on other threads.  Setup (weight stacks,
+//! activation streams) comes from the shared fixture layer in
+//! `tests/common` — fixtures run before the measured window.
 
+mod common;
+
+use common::{random_acts, synthetic_layers};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use swifttron::model::Geometry;
-use swifttron::sim::functional::{
-    encoder_forward_ws, layer_forward_ws, synthetic_consts, LayerWeights, Workspace,
-};
+use swifttron::sim::functional::{encoder_forward_ws, layer_forward_ws, Workspace};
 use swifttron::util::rng::Rng;
 
 thread_local! {
@@ -63,11 +66,9 @@ fn forward_pass_is_allocation_free_after_warmup() {
     // serial kernel — no scoped-thread spawns on this path either
     let geo = Geometry::new(16, 2, 8, 32, 2);
     let mut rng = Rng::new(0x5EED);
-    let layers: Vec<_> = (0..geo.layers)
-        .map(|_| (LayerWeights::synthetic(&mut rng, &geo), synthetic_consts(&geo)))
-        .collect();
+    let layers = synthetic_layers(&mut rng, &geo);
     let (w, c) = &layers[0];
-    let x: Vec<i32> = (0..geo.m * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+    let x = random_acts(&mut rng, geo.m * geo.d);
 
     let mut ws = Workspace::new(&geo);
     let mut out = vec![0i32; geo.m * geo.d];
