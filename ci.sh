@@ -13,15 +13,40 @@ cargo test -q
 
 # Integration-test timing summary: each [[test]] target re-run on its
 # own (--nocapture streams long-running targets live) with wall seconds
-# per target, so a slow suite is visible before it creeps into minutes.
+# per target, collected into the per-test summary printed at the end.
 echo "-- integration-test timing (cargo test -q --test '*' -- --nocapture) --"
 suite_start=$SECONDS
+timing_rows=()
 for t in $(awk '/^\[\[test\]\]/{grab=1;next} grab&&/^name = /{gsub(/"/,""); print $3; grab=0}' Cargo.toml); do
   t_start=$SECONDS
   cargo test -q --test "$t" -- --nocapture
-  echo "  $t: $((SECONDS-t_start))s"
+  row="  $t: $((SECONDS-t_start))s"
+  timing_rows+=("$row")
+  echo "$row"
 done
 echo "  total: $((SECONDS-suite_start))s"
+
+# Timing-sensitive suites (the autoscaler control loop, per-model
+# latency/p99 assertions) re-run under --release, where debug-build
+# slowness cannot eat the timing margins.
+echo "-- release leg: timing-sensitive autoscaler/latency tests --"
+for t in autoscale prop_invariants; do
+  t_start=$SECONDS
+  cargo test -q --release --test "$t"
+  row="  $t (release): $((SECONDS-t_start))s"
+  timing_rows+=("$row")
+  echo "$row"
+done
+
+# Smoke-sized serving bench leg: exercises the concurrency-leg
+# acceptance assertions (tiny p99 >= 2x over the serial dispatcher,
+# shares within 10% of weights) and refreshes BENCH_serving.json.
+echo "-- serving bench smoke leg --"
+t_start=$SECONDS
+cargo bench --bench serving_scaling -- --smoke
+row="  serving_scaling --smoke: $((SECONDS-t_start))s"
+timing_rows+=("$row")
+echo "$row"
 
 # The pjrt feature must keep compiling against the in-repo xla stub
 # (check-only: there is no real PJRT client to run against here).
@@ -30,4 +55,6 @@ cargo check --features pjrt --all-targets
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+echo "-- per-test wall time summary --"
+printf '%s\n' "${timing_rows[@]}"
 echo "ci.sh: all green"

@@ -1,12 +1,15 @@
-//! Multi-tenant serving demo (DESIGN.md §8): three resident models —
-//! `tiny` (weight 2, two replicas), `deit_s` (weight 1), and
-//! `roberta_base` (weight 1) — behind one router, flooded with short
-//! variable-length traffic so every model stays backlogged while the
-//! weighted-fair dispatcher works.  A mid-flight metrics snapshot shows
-//! the per-model served-token shares tracking the configured weights
-//! (the ISSUE 4 acceptance claim, asserted deterministically in
-//! `rust/tests/multi_model.rs`); shutdown then drains the tail and the
-//! final report follows.
+//! Multi-tenant serving demo (DESIGN.md §8, §9): three resident models
+//! — `tiny` (weight 2, two replicas), `deit_s` (weight 1), and
+//! `roberta_base` (weight 1, autoscaled 1..=2 replicas under a 50 ms
+//! SLO) — behind one router, flooded with short variable-length
+//! traffic.  Each model group runs its own dispatcher concurrently, so
+//! cheap `tiny` groups never queue behind a `roberta_base` barrier,
+//! and the autoscaler grows the backlogged roberta group toward its
+//! max while the flood lasts.  A mid-flight metrics snapshot shows the
+//! per-model ledgers (backlog, active replicas, p50/p99, shares);
+//! shutdown then drains the tail — submissions are weight-proportional
+//! and everything completes, so the final served-token shares land on
+//! the weight ratios.
 //!
 //! Run: `cargo run --release --example serving -- [requests_per_weight] [max_len]`
 
@@ -31,7 +34,14 @@ fn main() -> Result<(), String> {
     ];
     let mut reg = ModelRegistry::new();
     for &(name, preset, replicas, weight) in &models {
-        reg.register(name, preset, replicas, weight, 7)?;
+        if name == "roberta_base" {
+            // the heavy tenant is SLO-managed: the autoscaler may grow
+            // it to 2 replicas while the flood keeps its backlog over
+            // the 50 ms latency class (DESIGN.md §9)
+            reg.register_scaled(name, preset, replicas, 2, weight, Some(50.0), 7)?;
+        } else {
+            reg.register(name, preset, replicas, weight, 7)?;
+        }
     }
     let max_lens: Vec<usize> =
         models.iter().map(|&(name, ..)| reg.max_seq_len(name).unwrap().min(max_len)).collect();
@@ -70,21 +80,25 @@ fn main() -> Result<(), String> {
         }
     }
 
-    // snapshot while every model is still backlogged: the shares are
-    // the scheduler's doing, not the arrival mix
+    // snapshot mid-flood: per-model backlog, active replicas (watch
+    // roberta_base grown past its min), and per-tenant p50/p99
     let deadline = Instant::now() + Duration::from_secs(120);
     while metrics.completed.load(Ordering::Relaxed) < (total / 2) as u64
         && Instant::now() < deadline
     {
         std::thread::sleep(Duration::from_millis(5));
     }
-    println!("\n-- mid-flight snapshot (~half served, all models backlogged) --");
+    println!("\n-- mid-flight snapshot (~half served) --");
     println!("{}", metrics.report());
     let total_w: u64 = models.iter().map(|&(.., w)| w).sum();
     for (m, &(name, .., weight)) in models.iter().enumerate() {
         let share = 100.0 * metrics.model_token_share(m);
         let target = 100.0 * weight as f64 / total_w as f64;
-        println!("  {name:13} served-token share {share:5.1}% (weight {target:5.1}%)");
+        println!(
+            "  {name:13} served-token share {share:5.1}% (offered {target:5.1}%), \
+             replicas={}",
+            router.active_replicas(name).unwrap_or(0)
+        );
     }
 
     // drain the tail and collect every reply

@@ -1,19 +1,27 @@
-//! Serving-scaling sweep (EXPERIMENTS.md §Scaling, §SeqLen): closed-loop
-//! request throughput of the parallel serving pipeline over replica
-//! count × dispatch-group size and over request sequence length, on the
-//! tiny preset's artifact-free functional replicas — plus the
-//! serial-vs-tiled `i_matmul` kernel comparison that motivates the
-//! `PAR_MIN_MACS` threshold.
+//! Serving-scaling sweep (EXPERIMENTS.md §Scaling, §SeqLen,
+//! §MultiModel, §Autoscale): closed-loop request throughput of the
+//! parallel serving pipeline over replica count × dispatch-group size
+//! and over request sequence length, the serial-vs-tiled `i_matmul`
+//! kernel comparison, the fused-attention leg, the multi-model
+//! weights sweep, and the **concurrency leg** — mixed saturating
+//! `roberta_base` + `tiny` traffic through the serial single-dispatcher
+//! baseline vs the concurrent per-group pipeline (DESIGN.md §9).
 //!
-//! Run: `cargo bench --bench serving_scaling`
+//! Run: `cargo bench --bench serving_scaling` — or
+//! `cargo bench --bench serving_scaling -- --smoke` for the
+//! smoke-sized subset ci.sh runs (reduced scaling + concurrency legs).
+//!
+//! Machine-readable results: every run writes `BENCH_serving.json`
+//! (throughput, p99 latency, and padding waste per leg) so the perf
+//! trajectory is tracked across PRs.
 //!
 //! Acceptance claims this bench demonstrates: more than one replica
-//! yields higher request throughput than the single-replica path on the
-//! same workload (speedup column; >1.0x from 2 replicas up on any
-//! multi-core host), and quarter-length requests yield higher
+//! yields higher request throughput than the single-replica path on
+//! the same workload; quarter-length requests yield higher
 //! requests/sec than full-length ones on the variable-length Workspace
-//! path (the sequence-length leg) — shaped compute, not asserted
-//! compute.
+//! path; and under saturating mixed traffic the `tiny` group's p99
+//! latency improves >= 2x over the serial dispatcher baseline while
+//! served-token shares stay within 10% of the configured weights.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -29,6 +37,7 @@ use swifttron::sim::functional::{
 };
 use swifttron::sim::HwConfig;
 use swifttron::util::bench::{fmt_time, Bench, Table};
+use swifttron::util::json::{obj, Json};
 use swifttron::util::rng::Rng;
 use swifttron::util::threadpool::default_parallelism;
 
@@ -107,30 +116,22 @@ fn run_len(
     (wall, metrics)
 }
 
-fn main() {
-    println!(
-        "serving-scaling sweep: {REQUESTS} closed-loop requests, tiny preset, \
-         functional replicas (host parallelism {})",
-        default_parallelism()
-    );
-
-    // warm up allocators / thread spawning before timing
-    run_once(1, 8);
-
-    let replica_counts = [1usize, 2, 4];
-    let batch_sizes = [1usize, 4, 8, 16];
+/// Replica count × dispatch-group size sweep; returns the JSON rows.
+fn scaling_leg(replica_counts: &[usize], batch_sizes: &[usize]) -> Json {
     let mut table = Table::new(&[
-        "replicas", "max_batch", "wall", "req/s", "speedup", "virtual ms/replica",
+        "replicas", "max_batch", "wall", "req/s", "speedup", "p99 e2e", "virtual ms/replica",
     ]);
+    let mut rows = Vec::new();
     let mut baseline: Vec<f64> = Vec::new(); // req/s at 1 replica, per batch size
-    for &r in &replica_counts {
+    for &r in replica_counts {
         for (bi, &b) in batch_sizes.iter().enumerate() {
             let (wall, metrics) = run_once(r, b);
             let rps = REQUESTS as f64 / wall;
-            if r == 1 {
+            if r == replica_counts[0] {
                 baseline.push(rps);
             }
             let speedup = rps / baseline[bi];
+            let p99_ms = metrics.e2e_s.lock().unwrap().p99() * 1e3;
             let virt_per_replica = metrics.total_accel_ms() / r as f64;
             table.row(&[
                 r.to_string(),
@@ -138,8 +139,18 @@ fn main() {
                 fmt_time(wall),
                 format!("{rps:.0}"),
                 format!("{speedup:.2}x"),
+                format!("{p99_ms:.3}ms"),
                 format!("{virt_per_replica:.2}"),
             ]);
+            rows.push(obj([
+                ("replicas", r.into()),
+                ("max_batch", b.into()),
+                ("wall_s", wall.into()),
+                ("req_per_s", rps.into()),
+                ("speedup_vs_1_replica", speedup.into()),
+                ("p99_e2e_ms", p99_ms.into()),
+                ("virtual_ms_per_replica", virt_per_replica.into()),
+            ]));
         }
     }
     table.print("replica count x dispatch-group size (tiny preset)");
@@ -150,216 +161,478 @@ fn main() {
          time and stays constant per request — wall time drops, cycle cost\n\
          does not (the hardware claim the coordinator preserves)."
     );
+    Json::Arr(rows)
+}
 
-    // --- sequence-length leg (EXPERIMENTS.md §SeqLen) ------------------
-    // Same pipeline, requests shaped to m_eff <= m: the Workspace path
-    // runs exactly m_eff rows, so wall time AND simulated accelerator
-    // time drop together — unlike the replica leg, where virtual time
-    // per request is invariant.
-    let m_full = Geometry::preset("tiny").unwrap().m;
-    let (replicas, max_batch) = (2usize, 8usize);
-    let bucket = (m_full / 4).max(1);
-    let lens = [m_full / 4, m_full / 2, m_full];
-    let mut rows: Vec<(usize, f64, f64)> = Vec::new(); // (m_eff, rps, virt ms/req)
-    for &len in &lens {
-        let (wall, metrics) = run_len(|_| len, replicas, max_batch, bucket);
-        let rps = REQUESTS as f64 / wall;
-        let virt = metrics.total_accel_ms() / REQUESTS as f64;
-        rows.push((len, rps, virt));
-    }
-    let full_rps = rows.last().expect("full-length row").1;
-    let mut table = Table::new(&["m_eff", "req/s", "vs full len", "virtual ms/req"]);
-    for &(len, rps, virt) in &rows {
-        table.row(&[
-            len.to_string(),
-            format!("{rps:.0}"),
-            format!("{:.2}x", rps / full_rps),
-            format!("{virt:.3}"),
-        ]);
-    }
-    table.print(&format!(
-        "sequence-length sweep ({replicas} replicas, max_batch {max_batch}, bucket width {bucket})"
-    ));
-    println!(
-        "\nshort requests run exactly m_eff rows on the resident Workspace\n\
-         (no padded compute): requests/sec rises and simulated accelerator\n\
-         ms/request falls as m_eff shrinks.  At m_eff = m the path is\n\
-         bit-exact with the fixed-geometry pipeline."
-    );
-
-    // mixed-length traffic: bucketed dispatch + the padding-waste metric
-    let (_, metrics) = run_len(
-        |rng| 1 + rng.below(m_full as u64) as usize,
-        replicas,
-        max_batch,
-        bucket,
-    );
-    println!(
-        "\nmixed-length traffic (uniform 1..={m_full}, bucket width {bucket}): \
-         padding waste {:.1}% of bucket-padded tokens",
-        100.0 * metrics.padding_waste()
-    );
-
-    // --- kernel leg: serial vs row-tiled parallel i_matmul -------------
-    let (m, k, n) = (256, 768, 768); // roberta_base projection shape
-    let mut rng = Rng::new(2);
-    let x: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
-    let w: Vec<i32> = (0..k * n).map(|_| rng.range_i64(-128, 127) as i32).collect();
-    let mut out = vec![0i32; m * n];
-    let serial =
-        Bench::new("i_matmul serial 256x768x768").iters(12).run(|| {
-            i_matmul(&x, &w, None, m, k, n, &mut out);
-            out[0]
-        });
-    let threads = default_parallelism();
-    let tiled = Bench::new("i_matmul tiled  256x768x768")
-        .iters(12)
-        .run(|| {
-            i_matmul_tiled(threads, &x, &w, None, m, k, n, &mut out);
-            out[0]
-        });
-    println!(
-        "kernel speedup {:.2}x with {threads} threads (bit-exact; threshold \
-         PAR_MIN_MACS gates the auto path)",
-        serial.p50() / tiled.p50()
-    );
-
-    // --- attention leg: head-parallel fused vs serial unfused ----------
-    // One d=768 encoder layer (roberta_base-scale), heads x m_eff sweep
-    // (EXPERIMENTS.md §Perf).  Both paths are bit-exact (asserted per
-    // cell); the delta is pure wall clock: fused epilogues drop the
-    // full-tensor requantization passes and the scoped parallel-for runs
-    // all heads' MatMul->Softmax->MatMul pipelines concurrently.
-    println!();
-    let mut table = Table::new(&["heads", "m_eff", "unfused p50", "fused p50", "speedup"]);
-    for &heads in &[4usize, 12] {
-        let geo = Geometry::new(768, heads, 256, 3072, 1);
-        let mut rng = Rng::new(3);
-        let w = LayerWeights::synthetic(&mut rng, &geo);
-        let c = synthetic_consts(&geo);
-        let mut ws_u = Workspace::new(&geo);
-        let mut ws_f = Workspace::new(&geo);
-        for &m_eff in &[16usize, 64, 256] {
-            let x: Vec<i32> =
-                (0..m_eff * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
-            let mut out_u = vec![0i32; m_eff * geo.d];
-            let mut out_f = vec![0i32; m_eff * geo.d];
-            let mut iters = Vec::new();
-            let name_u = format!("layer unfused h={heads} m={m_eff}");
-            let unfused = Bench::new(&name_u).warmup(1).iters(4).run(|| {
-                iters.clear();
-                layer_forward_ws_unfused(
-                    &x, &w, &c, &geo, m_eff, &mut ws_u, &mut out_u, &mut iters,
-                );
-                out_u[0]
-            });
-            let name_f = format!("layer fused   h={heads} m={m_eff}");
-            let fused = Bench::new(&name_f).warmup(1).iters(4).run(|| {
-                iters.clear();
-                layer_forward_ws(&x, &w, &c, &geo, m_eff, &mut ws_f, &mut out_f, &mut iters);
-                out_f[0]
-            });
-            assert_eq!(out_u, out_f, "fused attention must stay bit-exact");
-            table.row(&[
-                heads.to_string(),
-                m_eff.to_string(),
-                fmt_time(unfused.p50()),
-                fmt_time(fused.p50()),
-                format!("{:.2}x", unfused.p50() / fused.p50()),
-            ]);
-        }
-    }
-    table.print("attention leg: serial unfused vs head-parallel fused (d=768, 1 layer)");
-    println!(
-        "\nfused runs every head concurrently with the INT32->INT8\n\
-         requantization fused into the matmul readout — identical bits,\n\
-         less wall clock once per-head work clears ATTN_PAR_MIN_MACS\n\
-         (short m_eff rows stay serial by design; the m_eff=16 row\n\
-         documents that gate, not a regression)."
-    );
-
-    // --- multi-model leg (EXPERIMENTS.md §MultiModel) ------------------
-    // Mixed RoBERTa/DeiT/tiny traffic through one pool: per weight
-    // config, every model is kept backlogged with equal-cost (1 live
-    // token, 8-token bucket) requests while the weighted-fair
-    // dispatcher runs a fixed number of groups; the served-token shares
-    // land on the configured weights.  The loop drives the real
-    // batcher + registry groups + pool deterministically (dispatcher
-    // thread bypassed so the measurement window is exact).
-    println!();
-    let weight_configs: [[u64; 3]; 3] = [[1, 1, 1], [2, 1, 1], [4, 2, 1]];
-    let names = ["tiny", "deit_s", "roberta_base"];
-    let mut table = Table::new(&[
-        "weights", "tiny share", "deit_s share", "roberta share", "wall", "waste/model",
-    ]);
-    for weights in &weight_configs {
+/// Concurrency leg (EXPERIMENTS.md §Autoscale, DESIGN.md §9): mixed
+/// saturating `roberta_base` + `tiny` traffic, serial single-dispatcher
+/// baseline vs the concurrent per-group pipeline.  Returns the JSON
+/// summary.
+fn concurrency_leg(smoke: bool) -> Json {
+    // Weights are configured proportional to the offered padded-token
+    // volumes, so in this closed-loop run "served shares within 10% of
+    // weights" is a conservation check — it catches lost, duplicated,
+    // or starved-by-errors requests under concurrent dispatch, not DRR
+    // arbitration (per-group dispatchers over disjoint replicas never
+    // contend at the ledger).  The backlogged-regime DRR convergence
+    // property is asserted where the ledger actually arbitrates:
+    // `multi_model.rs` and `prop_invariants.rs`.
+    let (tiny_n, heavy_n, heavy_len) = if smoke { (24usize, 3usize, 4usize) } else { (48, 6, 6) };
+    let weights: [u64; 2] = [tiny_n as u64, heavy_n as u64];
+    let policy =
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(500), bucket_width: 8 };
+    let build_groups = |tiny_w: u64, heavy_w: u64| {
         let mut reg = ModelRegistry::new();
-        for (m, &name) in names.iter().enumerate() {
-            reg.register(name, name, 1, weights[m], 7).unwrap();
+        reg.register("tiny", "tiny", 2, tiny_w, 7).unwrap();
+        reg.register("roberta_base", "roberta_base", 1, heavy_w, 7).unwrap();
+        reg.into_groups()
+    };
+    let tiny_len = |i: usize| 1 + i % 8;
+
+    // -- serial single-dispatcher baseline ---------------------------
+    let serial_metrics = Arc::new(Metrics::new());
+    serial_metrics.ensure_models(&[("tiny", weights[0]), ("roberta_base", weights[1])]);
+    let pool =
+        ReplicaPool::new_multi(build_groups(weights[0], weights[1]), Arc::clone(&serial_metrics));
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    batcher.set_model_weights(&weights);
+    let mut receivers = Vec::new();
+    let mut id = 0u64;
+    let t0 = Instant::now();
+    for i in 0..tiny_n {
+        if i < heavy_n {
+            let (tx, rx) = channel();
+            id += 1;
+            batcher.push_keyed(
+                Request {
+                    id,
+                    model: 1,
+                    tokens: (0..heavy_len).map(|t| (t % 50) as i32).collect(),
+                    padded_len: policy.padded_len(heavy_len),
+                    submitted: Instant::now(),
+                    reply: tx,
+                },
+                1,
+                heavy_len,
+            );
+            serial_metrics.record_tokens(1, heavy_len, policy.padded_len(heavy_len));
+            receivers.push(rx);
         }
-        let metrics = Arc::new(Metrics::new());
-        metrics.ensure_models(&[
-            (names[0], weights[0]),
-            (names[1], weights[1]),
-            (names[2], weights[2]),
-        ]);
-        let wait = Duration::from_secs(3600);
-        let policy = BatchPolicy { max_batch: 4, max_wait: wait, bucket_width: 8 };
-        let pool = ReplicaPool::new_multi(reg.into_groups(), Arc::clone(&metrics));
-        let mut batcher: Batcher<Request> = Batcher::new(policy);
-        batcher.set_model_weights(weights);
-        let batches = 32usize;
-        let mut rng = Rng::new(9);
-        let mut receivers = Vec::new();
-        for i in 0..batches * 4 {
-            for m in 0..names.len() {
-                let len = 1 + rng.below(6) as usize; // 1..=6 -> 8-token bucket
-                let (tx, rx) = channel();
-                batcher.push_keyed(
-                    Request {
-                        id: i as u64,
-                        model: m,
-                        tokens: (0..len).map(|_| rng.below(60) as i32).collect(),
-                        padded_len: 8,
-                        submitted: Instant::now(),
-                        reply: tx,
-                    },
-                    m,
-                    len,
-                );
-                receivers.push(rx);
-                metrics.record_tokens(m, len, 8);
-            }
-        }
-        let t0 = Instant::now();
-        for _ in 0..batches {
-            let batch = batcher.take_batch();
-            assert!(batch.iter().all(|r| r.model == batch[0].model));
-            for resp in pool.dispatch(batch) {
-                assert!(resp.error.is_none(), "{:?}", resp.error);
-            }
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        drop(receivers); // unserved backlog is measurement headroom
-        let waste: Vec<String> = (0..names.len())
-            .map(|m| format!("{:.0}%", 100.0 * metrics.model(m).padding_waste()))
-            .collect();
-        table.row(&[
-            format!("{}:{}:{}", weights[0], weights[1], weights[2]),
-            format!("{:.1}%", 100.0 * metrics.model_token_share(0)),
-            format!("{:.1}%", 100.0 * metrics.model_token_share(1)),
-            format!("{:.1}%", 100.0 * metrics.model_token_share(2)),
-            fmt_time(wall),
-            waste.join("/"),
-        ]);
+        let len = tiny_len(i);
+        let (tx, rx) = channel();
+        id += 1;
+        batcher.push_keyed(
+            Request {
+                id,
+                model: 0,
+                tokens: (0..len).map(|t| (t % 50) as i32).collect(),
+                padded_len: policy.padded_len(len),
+                submitted: Instant::now(),
+                reply: tx,
+            },
+            0,
+            len,
+        );
+        serial_metrics.record_tokens(0, len, policy.padded_len(len));
+        receivers.push(rx);
     }
-    table.print("multi-model leg: served-token shares vs configured weights (32 groups)");
-    println!(
-        "\nshares are measured over dispatched bucket-padded tokens while\n\
-         every model stays backlogged: the deficit-round-robin ledger\n\
-         drives them onto the weight ratios within one dispatch group.\n\
-         waste/model is each model's own padding ratio — per-model\n\
-         ledgers keep a short-sequence tenant's bucket overhead visible\n\
-         next to a full-length one (ISSUE 4 metrics fix)."
+    while !batcher.is_empty() {
+        let group = batcher.take_batch();
+        for resp in pool.dispatch(group) {
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+    }
+    let serial_wall = t0.elapsed().as_secs_f64();
+    drop(receivers);
+    let (_, serial_tiny_p99) = serial_metrics.model(0).e2e_percentiles_ms();
+    let (_, serial_heavy_p99) = serial_metrics.model(1).e2e_percentiles_ms();
+
+    // -- concurrent per-group pipeline, identical traffic ------------
+    let conc_metrics = Arc::new(Metrics::new());
+    let router = Router::start_multi(
+        build_groups(weights[0], weights[1]),
+        policy,
+        Arc::clone(&conc_metrics),
     );
+    let mut receivers = Vec::new();
+    let t0 = Instant::now();
+    for i in 0..tiny_n {
+        if i < heavy_n {
+            let (tx, rx) = channel();
+            router.submit_to(
+                "roberta_base",
+                (0..heavy_len).map(|t| (t % 50) as i32).collect(),
+                tx,
+            );
+            receivers.push(rx);
+        }
+        let len = tiny_len(i);
+        let (tx, rx) = channel();
+        router.submit_to("tiny", (0..len).map(|t| (t % 50) as i32).collect(), tx);
+        receivers.push(rx);
+    }
+    for rx in receivers {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    let conc_wall = t0.elapsed().as_secs_f64();
+    router.shutdown();
+    let (_, conc_tiny_p99) = conc_metrics.model(0).e2e_percentiles_ms();
+    let (_, conc_heavy_p99) = conc_metrics.model(1).e2e_percentiles_ms();
+
+    let improvement = serial_tiny_p99 / conc_tiny_p99;
+    let total = (tiny_n + heavy_n) as f64;
+    let total_w = (weights[0] + weights[1]) as f64;
+    let mut shares_ok = true;
+    for (m, &w) in weights.iter().enumerate() {
+        let share = conc_metrics.model_token_share(m);
+        let target = w as f64 / total_w;
+        shares_ok &= (share - target).abs() <= 0.1 * target;
+    }
+
+    let mut table = Table::new(&[
+        "pipeline", "wall", "req/s", "tiny p99", "roberta p99", "tiny waste",
+    ]);
+    table.row(&[
+        "serial".into(),
+        fmt_time(serial_wall),
+        format!("{:.0}", total / serial_wall),
+        format!("{serial_tiny_p99:.3}ms"),
+        format!("{serial_heavy_p99:.3}ms"),
+        format!("{:.0}%", 100.0 * serial_metrics.model(0).padding_waste()),
+    ]);
+    table.row(&[
+        "per-group".into(),
+        fmt_time(conc_wall),
+        format!("{:.0}", total / conc_wall),
+        format!("{conc_tiny_p99:.3}ms"),
+        format!("{conc_heavy_p99:.3}ms"),
+        format!("{:.0}%", 100.0 * conc_metrics.model(0).padding_waste()),
+    ]);
+    table.print(
+        "concurrency leg: serial dispatcher vs per-group pipeline (mixed saturating traffic)",
+    );
+    println!(
+        "\ntiny p99 improves {improvement:.1}x with per-group dispatch (acceptance\n\
+         bound: >= 2x): tiny's groups no longer queue behind roberta_base's\n\
+         group barriers.  served-token shares within 10% of the configured\n\
+         (offered-volume-proportional) weights: {shares_ok} — a conservation\n\
+         check under concurrency; backlogged-regime DRR convergence is\n\
+         asserted in multi_model.rs / prop_invariants.rs."
+    );
+    assert!(
+        improvement >= 2.0,
+        "tiny p99 improved only {improvement:.2}x (serial {serial_tiny_p99:.3}ms, \
+         concurrent {conc_tiny_p99:.3}ms)"
+    );
+    assert!(
+        shares_ok,
+        "served-token shares drifted past 10% of configured weights — requests \
+         lost or a tenant starved under concurrent dispatch"
+    );
+
+    obj([
+        ("tiny_requests", tiny_n.into()),
+        ("roberta_requests", heavy_n.into()),
+        (
+            "serial",
+            obj([
+                ("wall_s", serial_wall.into()),
+                ("req_per_s", (total / serial_wall).into()),
+                ("tiny_p99_ms", serial_tiny_p99.into()),
+                ("roberta_p99_ms", serial_heavy_p99.into()),
+                ("tiny_padding_waste", serial_metrics.model(0).padding_waste().into()),
+            ]),
+        ),
+        (
+            "concurrent",
+            obj([
+                ("wall_s", conc_wall.into()),
+                ("req_per_s", (total / conc_wall).into()),
+                ("tiny_p99_ms", conc_tiny_p99.into()),
+                ("roberta_p99_ms", conc_heavy_p99.into()),
+                ("tiny_padding_waste", conc_metrics.model(0).padding_waste().into()),
+            ]),
+        ),
+        ("tiny_p99_improvement", improvement.into()),
+        ("shares_within_10pct_of_weights", shares_ok.into()),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "serving-scaling sweep{}: {REQUESTS} closed-loop requests, tiny preset, \
+         functional replicas (host parallelism {})",
+        if smoke { " [smoke]" } else { "" },
+        default_parallelism()
+    );
+
+    // warm up allocators / thread spawning before timing
+    run_once(1, 8);
+
+    let mut legs: Vec<(&'static str, Json)> = vec![
+        ("schema", "swifttron-serving-bench-v1".into()),
+        ("smoke", smoke.into()),
+        ("host_parallelism", default_parallelism().into()),
+    ];
+
+    let scaling = if smoke {
+        scaling_leg(&[1, 2], &[8])
+    } else {
+        scaling_leg(&[1, 2, 4], &[1, 4, 8, 16])
+    };
+    legs.push(("scaling", scaling));
+
+    if !smoke {
+        // --- sequence-length leg (EXPERIMENTS.md §SeqLen) --------------
+        // Same pipeline, requests shaped to m_eff <= m: the Workspace
+        // path runs exactly m_eff rows, so wall time AND simulated
+        // accelerator time drop together — unlike the replica leg,
+        // where virtual time per request is invariant.
+        let m_full = Geometry::preset("tiny").unwrap().m;
+        let (replicas, max_batch) = (2usize, 8usize);
+        let bucket = (m_full / 4).max(1);
+        let lens = [m_full / 4, m_full / 2, m_full];
+        let mut rows: Vec<(usize, f64, f64, f64)> = Vec::new(); // (m_eff, rps, p99 ms, virt ms/req)
+        for &len in &lens {
+            let (wall, metrics) = run_len(|_| len, replicas, max_batch, bucket);
+            let rps = REQUESTS as f64 / wall;
+            let virt = metrics.total_accel_ms() / REQUESTS as f64;
+            let p99 = metrics.e2e_s.lock().unwrap().p99() * 1e3;
+            rows.push((len, rps, p99, virt));
+        }
+        let full_rps = rows.last().expect("full-length row").1;
+        let mut table = Table::new(&["m_eff", "req/s", "vs full len", "p99 e2e", "virtual ms/req"]);
+        let mut json_rows = Vec::new();
+        for &(len, rps, p99, virt) in &rows {
+            table.row(&[
+                len.to_string(),
+                format!("{rps:.0}"),
+                format!("{:.2}x", rps / full_rps),
+                format!("{p99:.3}ms"),
+                format!("{virt:.3}"),
+            ]);
+            json_rows.push(obj([
+                ("m_eff", len.into()),
+                ("req_per_s", rps.into()),
+                ("p99_e2e_ms", p99.into()),
+                ("virtual_ms_per_req", virt.into()),
+            ]));
+        }
+        table.print(&format!(
+            "sequence-length sweep ({replicas} replicas, max_batch {max_batch}, bucket width {bucket})"
+        ));
+        println!(
+            "\nshort requests run exactly m_eff rows on the resident Workspace\n\
+             (no padded compute): requests/sec rises and simulated accelerator\n\
+             ms/request falls as m_eff shrinks.  At m_eff = m the path is\n\
+             bit-exact with the fixed-geometry pipeline."
+        );
+        legs.push(("seqlen", Json::Arr(json_rows)));
+
+        // mixed-length traffic: bucketed dispatch + the padding-waste metric
+        let (_, metrics) = run_len(
+            |rng| 1 + rng.below(m_full as u64) as usize,
+            replicas,
+            max_batch,
+            bucket,
+        );
+        println!(
+            "\nmixed-length traffic (uniform 1..={m_full}, bucket width {bucket}): \
+             padding waste {:.1}% of bucket-padded tokens",
+            100.0 * metrics.padding_waste()
+        );
+        legs.push(("mixed_length_padding_waste", metrics.padding_waste().into()));
+
+        // --- kernel leg: serial vs row-tiled parallel i_matmul ---------
+        let (m, k, n) = (256, 768, 768); // roberta_base projection shape
+        let mut rng = Rng::new(2);
+        let x: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let mut out = vec![0i32; m * n];
+        let serial =
+            Bench::new("i_matmul serial 256x768x768").iters(12).run(|| {
+                i_matmul(&x, &w, None, m, k, n, &mut out);
+                out[0]
+            });
+        let threads = default_parallelism();
+        let tiled = Bench::new("i_matmul tiled  256x768x768")
+            .iters(12)
+            .run(|| {
+                i_matmul_tiled(threads, &x, &w, None, m, k, n, &mut out);
+                out[0]
+            });
+        println!(
+            "kernel speedup {:.2}x with {threads} threads (bit-exact; threshold \
+             PAR_MIN_MACS gates the auto path)",
+            serial.p50() / tiled.p50()
+        );
+        legs.push(("kernel_speedup", (serial.p50() / tiled.p50()).into()));
+
+        // --- attention leg: head-parallel fused vs serial unfused ------
+        // One d=768 encoder layer (roberta_base-scale), heads x m_eff
+        // sweep (EXPERIMENTS.md §Perf).  Both paths are bit-exact
+        // (asserted per cell); the delta is pure wall clock: fused
+        // epilogues drop the full-tensor requantization passes and the
+        // scoped parallel-for runs all heads' MatMul->Softmax->MatMul
+        // pipelines concurrently.
+        println!();
+        let mut table = Table::new(&["heads", "m_eff", "unfused p50", "fused p50", "speedup"]);
+        for &heads in &[4usize, 12] {
+            let geo = Geometry::new(768, heads, 256, 3072, 1);
+            let mut rng = Rng::new(3);
+            let w = LayerWeights::synthetic(&mut rng, &geo);
+            let c = synthetic_consts(&geo);
+            let mut ws_u = Workspace::new(&geo);
+            let mut ws_f = Workspace::new(&geo);
+            for &m_eff in &[16usize, 64, 256] {
+                let x: Vec<i32> =
+                    (0..m_eff * geo.d).map(|_| rng.range_i64(-127, 127) as i32).collect();
+                let mut out_u = vec![0i32; m_eff * geo.d];
+                let mut out_f = vec![0i32; m_eff * geo.d];
+                let mut iters = Vec::new();
+                let name_u = format!("layer unfused h={heads} m={m_eff}");
+                let unfused = Bench::new(&name_u).warmup(1).iters(4).run(|| {
+                    iters.clear();
+                    layer_forward_ws_unfused(
+                        &x, &w, &c, &geo, m_eff, &mut ws_u, &mut out_u, &mut iters,
+                    );
+                    out_u[0]
+                });
+                let name_f = format!("layer fused   h={heads} m={m_eff}");
+                let fused = Bench::new(&name_f).warmup(1).iters(4).run(|| {
+                    iters.clear();
+                    layer_forward_ws(&x, &w, &c, &geo, m_eff, &mut ws_f, &mut out_f, &mut iters);
+                    out_f[0]
+                });
+                assert_eq!(out_u, out_f, "fused attention must stay bit-exact");
+                table.row(&[
+                    heads.to_string(),
+                    m_eff.to_string(),
+                    fmt_time(unfused.p50()),
+                    fmt_time(fused.p50()),
+                    format!("{:.2}x", unfused.p50() / fused.p50()),
+                ]);
+            }
+        }
+        table.print("attention leg: serial unfused vs head-parallel fused (d=768, 1 layer)");
+        println!(
+            "\nfused runs every head concurrently with the INT32->INT8\n\
+             requantization fused into the matmul readout — identical bits,\n\
+             less wall clock once per-head work clears ATTN_PAR_MIN_MACS\n\
+             (short m_eff rows stay serial by design; the m_eff=16 row\n\
+             documents that gate, not a regression)."
+        );
+
+        // --- multi-model leg (EXPERIMENTS.md §MultiModel) --------------
+        // Mixed RoBERTa/DeiT/tiny traffic through one pool: per weight
+        // config, every model is kept backlogged with equal-cost (1
+        // live token, 8-token bucket) requests while the weighted-fair
+        // dispatcher runs a fixed number of groups; the served-token
+        // shares land on the configured weights.  The loop drives the
+        // real batcher + registry groups + pool deterministically
+        // (dispatcher threads bypassed so the measurement window is
+        // exact).
+        println!();
+        let weight_configs: [[u64; 3]; 3] = [[1, 1, 1], [2, 1, 1], [4, 2, 1]];
+        let names = ["tiny", "deit_s", "roberta_base"];
+        let mut table = Table::new(&[
+            "weights", "tiny share", "deit_s share", "roberta share", "wall", "waste/model",
+        ]);
+        let mut json_rows = Vec::new();
+        for weights in &weight_configs {
+            let mut reg = ModelRegistry::new();
+            for (m, &name) in names.iter().enumerate() {
+                reg.register(name, name, 1, weights[m], 7).unwrap();
+            }
+            let metrics = Arc::new(Metrics::new());
+            metrics.ensure_models(&[
+                (names[0], weights[0]),
+                (names[1], weights[1]),
+                (names[2], weights[2]),
+            ]);
+            let wait = Duration::from_secs(3600);
+            let policy = BatchPolicy { max_batch: 4, max_wait: wait, bucket_width: 8 };
+            let pool = ReplicaPool::new_multi(reg.into_groups(), Arc::clone(&metrics));
+            let mut batcher: Batcher<Request> = Batcher::new(policy);
+            batcher.set_model_weights(weights);
+            let batches = 32usize;
+            let mut rng = Rng::new(9);
+            let mut receivers = Vec::new();
+            for i in 0..batches * 4 {
+                for m in 0..names.len() {
+                    let len = 1 + rng.below(6) as usize; // 1..=6 -> 8-token bucket
+                    let (tx, rx) = channel();
+                    batcher.push_keyed(
+                        Request {
+                            id: i as u64,
+                            model: m,
+                            tokens: (0..len).map(|_| rng.below(60) as i32).collect(),
+                            padded_len: 8,
+                            submitted: Instant::now(),
+                            reply: tx,
+                        },
+                        m,
+                        len,
+                    );
+                    receivers.push(rx);
+                    metrics.record_tokens(m, len, 8);
+                }
+            }
+            let t0 = Instant::now();
+            for _ in 0..batches {
+                let batch = batcher.take_batch();
+                assert!(batch.iter().all(|r| r.model == batch[0].model));
+                for resp in pool.dispatch(batch) {
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            drop(receivers); // unserved backlog is measurement headroom
+            let waste: Vec<String> = (0..names.len())
+                .map(|m| format!("{:.0}%", 100.0 * metrics.model(m).padding_waste()))
+                .collect();
+            table.row(&[
+                format!("{}:{}:{}", weights[0], weights[1], weights[2]),
+                format!("{:.1}%", 100.0 * metrics.model_token_share(0)),
+                format!("{:.1}%", 100.0 * metrics.model_token_share(1)),
+                format!("{:.1}%", 100.0 * metrics.model_token_share(2)),
+                fmt_time(wall),
+                waste.join("/"),
+            ]);
+            json_rows.push(obj([
+                (
+                    "weights",
+                    Json::Arr(weights.iter().map(|&w| (w as i64).into()).collect()),
+                ),
+                (
+                    "shares",
+                    Json::Arr((0..3).map(|m| metrics.model_token_share(m).into()).collect()),
+                ),
+                ("wall_s", wall.into()),
+            ]));
+        }
+        table.print("multi-model leg: served-token shares vs configured weights (32 groups)");
+        println!(
+            "\nshares are measured over dispatched bucket-padded tokens while\n\
+             every model stays backlogged: the deficit-round-robin ledger\n\
+             drives them onto the weight ratios within one dispatch group.\n\
+             waste/model is each model's own padding ratio — per-model\n\
+             ledgers keep a short-sequence tenant's bucket overhead visible\n\
+             next to a full-length one (ISSUE 4 metrics fix)."
+        );
+        legs.push(("multi_model", Json::Arr(json_rows)));
+    }
+
+    // --- concurrency leg (DESIGN.md §9): always runs, smoke-sized in CI
+    println!();
+    legs.push(("concurrency", concurrency_leg(smoke)));
+
+    let json = obj(legs);
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, format!("{json}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

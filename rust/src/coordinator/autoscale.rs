@@ -1,0 +1,211 @@
+//! SLO-aware backlog autoscaler (DESIGN.md §9): a small control loop
+//! that moves each scalable model group's replica count within its
+//! `min..=max` bounds as the group's backlog-vs-SLO ratio crosses
+//! hysteresis thresholds.
+//!
+//! The demand signal per tick is the *estimated drain time* of the
+//! model's live backlog: `backlog_requests × mean_exec_ms ÷
+//! active_replicas` — queued requests still in the batcher plus popped
+//! groups in flight, times the model's own measured per-request
+//! execution wall time (a prior before the first completion), divided
+//! by the replicas currently serving.  Judged against the model's
+//! `slo_ms` latency class:
+//!
+//! ```text
+//!            drain_ms > grow_ratio · slo, below max ──► GROW  (spawn replica
+//!                                                       from the factory,
+//!                                                       shared Arc weights)
+//!   shrink_ratio · slo > drain_ms, above min      ──► SHRINK (drain-then-
+//!                                                       retire one replica)
+//!            otherwise                             ──► HOLD
+//! ```
+//!
+//! Hysteresis is two-fold: the dead band between `shrink_ratio` and
+//! `grow_ratio` (a group sitting near its SLO neither grows nor
+//! shrinks), plus a per-group cooldown of `hold_ticks` ticks after any
+//! applied action so one burst cannot slam the group from min to max
+//! and back within a few control intervals.  The decision function
+//! [`decide`] is pure and unit-tested; the loop in
+//! `coordinator::router` merely samples the signals and applies it.
+
+use super::metrics::Metrics;
+use super::pool::GroupRuntime;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Autoscaler tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscalePolicy {
+    /// Control-loop tick interval.
+    pub interval: Duration,
+    /// Grow when estimated drain time exceeds `grow_ratio · slo_ms`.
+    pub grow_ratio: f64,
+    /// Shrink when estimated drain time falls below
+    /// `shrink_ratio · slo_ms` (must sit well below `grow_ratio` — the
+    /// gap is the hysteresis dead band).
+    pub shrink_ratio: f64,
+    /// Ticks a group holds after an applied grow/shrink before it may
+    /// act again (cooldown half of the hysteresis).
+    pub hold_ticks: u32,
+    /// Service-time prior (ms per request) before a model's first
+    /// completion.
+    pub default_service_ms: f64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            interval: Duration::from_millis(5),
+            grow_ratio: 1.0,
+            shrink_ratio: 0.25,
+            hold_ticks: 2,
+            default_service_ms: 1.0,
+        }
+    }
+}
+
+/// One tick's verdict for one group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Grow,
+    Shrink,
+    Hold,
+}
+
+/// Pure scaling decision for one group at one tick: backlog (queued +
+/// in-flight requests), active replica count and bounds, the model's
+/// per-request service estimate, and its SLO class.
+pub fn decide(
+    backlog: usize,
+    active: usize,
+    min: usize,
+    max: usize,
+    service_ms: f64,
+    slo_ms: f64,
+    policy: &AutoscalePolicy,
+) -> ScaleDecision {
+    let active = active.max(1);
+    let drain_ms = backlog as f64 * service_ms / active as f64;
+    if drain_ms > policy.grow_ratio * slo_ms && active < max {
+        ScaleDecision::Grow
+    } else if drain_ms < policy.shrink_ratio * slo_ms && active > min {
+        ScaleDecision::Shrink
+    } else {
+        ScaleDecision::Hold
+    }
+}
+
+/// Per-group cooldown state for the control loop.
+pub struct GroupScaleState {
+    cooldown: u32,
+}
+
+impl GroupScaleState {
+    pub fn new() -> GroupScaleState {
+        GroupScaleState { cooldown: 0 }
+    }
+}
+
+impl Default for GroupScaleState {
+    fn default() -> Self {
+        GroupScaleState::new()
+    }
+}
+
+/// One autoscaler tick over one group: sample the signals, apply
+/// [`decide`] under the cooldown, execute the action on the runtime.
+/// Returns the decision actually applied (Hold during cooldown or when
+/// the runtime refused).  `queued` is the group's batcher backlog
+/// (queued + in flight), sampled by the caller under the batcher lock.
+pub fn tick_group(
+    rt: &Arc<GroupRuntime>,
+    state: &mut GroupScaleState,
+    queued: usize,
+    metrics: &Metrics,
+    policy: &AutoscalePolicy,
+) -> ScaleDecision {
+    if state.cooldown > 0 {
+        state.cooldown -= 1;
+        return ScaleDecision::Hold;
+    }
+    let Some(slo_ms) = rt.slo_ms() else { return ScaleDecision::Hold };
+    let (min, max) = rt.replica_bounds();
+    let active = rt.active_replicas();
+    let service_ms = metrics.model(rt.model_index()).mean_exec_ms(policy.default_service_ms);
+    let decision = decide(queued, active, min, max, service_ms, slo_ms, policy);
+    let applied = match decision {
+        ScaleDecision::Grow => match rt.grow() {
+            Ok(applied) => applied,
+            Err(e) => {
+                // A failing factory must not fail silently: the group
+                // would sit pinned at its floor blowing its SLO with
+                // nothing explaining why.  Surface it, and take the
+                // normal cooldown before retrying — a persistent
+                // failure must not be re-invoked (and re-logged) at
+                // tick frequency.
+                eprintln!("autoscaler: model {:?} replica spawn failed: {e}", rt.model());
+                state.cooldown = policy.hold_ticks;
+                false
+            }
+        },
+        ScaleDecision::Shrink => rt.shrink(),
+        ScaleDecision::Hold => false,
+    };
+    if applied {
+        state.cooldown = policy.hold_ticks;
+        decision
+    } else {
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AutoscalePolicy {
+        AutoscalePolicy {
+            interval: Duration::from_millis(1),
+            grow_ratio: 1.0,
+            shrink_ratio: 0.25,
+            hold_ticks: 2,
+            default_service_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn grows_when_drain_time_exceeds_slo() {
+        // 100 queued x 2 ms / 1 replica = 200 ms drain vs 20 ms SLO
+        let p = policy();
+        assert_eq!(decide(100, 1, 1, 4, 2.0, 20.0, &p), ScaleDecision::Grow);
+        // at max: hold, never exceed the bound
+        assert_eq!(decide(100, 4, 1, 4, 2.0, 20.0, &p), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn shrinks_only_below_the_dead_band_and_above_min() {
+        let p = policy();
+        // idle: 0 ms drain < 0.25 x 20 ms
+        assert_eq!(decide(0, 4, 1, 4, 2.0, 20.0, &p), ScaleDecision::Shrink);
+        // at min: hold
+        assert_eq!(decide(0, 1, 1, 4, 2.0, 20.0, &p), ScaleDecision::Hold);
+        // inside the dead band (drain 10 ms, band 5..20 ms): hold —
+        // a group near its SLO must not flap
+        assert_eq!(decide(20, 4, 1, 4, 2.0, 20.0, &p), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn capacity_scales_the_drain_estimate() {
+        let p = policy();
+        // the same backlog that overwhelms 1 replica is inside the SLO
+        // for 4: 40 x 2 / 1 = 80 ms vs 40 x 2 / 4 = 20 ms against SLO 30
+        assert_eq!(decide(40, 1, 1, 4, 2.0, 30.0, &p), ScaleDecision::Grow);
+        assert_eq!(decide(40, 4, 1, 4, 2.0, 30.0, &p), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn zero_active_is_treated_as_one_not_a_division_by_zero() {
+        let p = policy();
+        assert_eq!(decide(100, 0, 1, 4, 2.0, 1.0, &p), ScaleDecision::Grow);
+    }
+}

@@ -26,6 +26,23 @@
 //! (charge ÷ weight) service.  A flood of cheap-model traffic therefore
 //! cannot starve a heavy model past its share — while a deadline-expired
 //! request still outranks any full bucket, whatever the weights say.
+//!
+//! With the concurrent per-group dispatch pipeline (DESIGN.md §9) the
+//! batcher is additionally a *per-model work source for concurrent
+//! poppers*: each model group's dispatcher calls
+//! [`Batcher::take_batch_for`] for its own model while other groups'
+//! dispatchers run their pops in parallel (all under the shared lock,
+//! held only for the pop itself).  Fairness is charged **at pop time**,
+//! never at completion time — every pop (including a deadline-expired
+//! jump) immediately charges its model's deficit ledger — and popped
+//! groups are tracked per model as *in flight* until the dispatcher
+//! reports [`Batcher::complete`].  In-flight work counts as backlog for
+//! the idle re-entry floor and blocks the epoch reset, so a model that
+//! momentarily drains its queue while a group is still executing keeps
+//! its fairness position instead of being treated as newly arrived.
+//! The cross-model [`Batcher::take_batch`] survives as the degenerate
+//! serial (single-dispatcher) pop and is bit-equivalent to the
+//! per-model path for a one-model configuration.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -92,8 +109,17 @@ pub struct Batcher<T> {
     weights: Vec<u64>,
     /// Cumulative bucket-padded tokens dispatched per model — the
     /// deficit-round-robin ledger.  The next full-bucket dispatch goes
-    /// to the backlogged model minimizing `charged / weight`.
+    /// to the backlogged model minimizing `charged / weight`.  Charged
+    /// at pop time (every pop path, expired jumps included), never at
+    /// completion time.
     charged: Vec<u64>,
+    /// Requests popped by [`Batcher::take_batch_for`] whose dispatch has
+    /// not yet reported [`Batcher::complete`], per model.  In-flight
+    /// work counts as backlog for the re-entry floor and holds the
+    /// epoch reset open (DESIGN.md §9).  The serial `take_batch` path
+    /// never populates it (pop == completion when one dispatcher blocks
+    /// on every group).
+    in_flight: Vec<usize>,
 }
 
 impl<T> Batcher<T> {
@@ -104,6 +130,7 @@ impl<T> Batcher<T> {
             queued: 0,
             weights: Vec::new(),
             charged: Vec::new(),
+            in_flight: Vec::new(),
         }
     }
 
@@ -135,15 +162,54 @@ impl<T> Batcher<T> {
             < (self.charged_tokens(b) as u128) * self.weight(a) as u128
     }
 
+    /// Requests popped for `model` whose dispatch has not yet completed
+    /// (concurrent per-group pipeline only; the serial path keeps this
+    /// at zero).
+    pub fn in_flight_for(&self, model: usize) -> usize {
+        self.in_flight.get(model).copied().unwrap_or(0)
+    }
+
+    fn total_in_flight(&self) -> usize {
+        self.in_flight.iter().sum()
+    }
+
+    /// Report `n` requests of `model` (one popped dispatch group) as
+    /// completed; called by the group's dispatcher after the replica
+    /// pool's group barrier.
+    pub fn complete(&mut self, model: usize, n: usize) {
+        if let Some(f) = self.in_flight.get_mut(model) {
+            *f = f.saturating_sub(n);
+        }
+        self.maybe_reset_epoch();
+    }
+
+    fn note_in_flight(&mut self, model: usize, n: usize) {
+        if self.in_flight.len() <= model {
+            self.in_flight.resize(model + 1, 0);
+        }
+        self.in_flight[model] += n;
+    }
+
+    /// A model is backlogged when it has queued buckets OR popped work
+    /// still executing — an in-flight group must keep the model's
+    /// fairness position (it is being serviced, not idle).
     fn has_backlog(&self, model: usize) -> bool {
         self.buckets.range((model, 0)..=(model, usize::MAX)).next().is_some()
+            || self.in_flight_for(model) > 0
     }
 
     /// Backlogged model with the least normalized service, if any.
     fn min_norm_backlogged(&self) -> Option<usize> {
         let mut best: Option<usize> = None;
         let mut last = usize::MAX;
-        for &(m, _) in self.buckets.keys() {
+        let queued_models = self.buckets.keys().map(|&(m, _)| m);
+        let in_flight_models = self
+            .in_flight
+            .iter()
+            .enumerate()
+            .filter(|&(_, &f)| f > 0)
+            .map(|(m, _)| m);
+        for m in queued_models.chain(in_flight_models) {
             if m == last {
                 continue;
             }
@@ -274,12 +340,31 @@ impl<T> Batcher<T> {
             Some((k, t)) if now.duration_since(t) >= self.policy.max_wait => k,
             Some((oldest_key, _)) => self.full_bucket_fair(oldest_key),
         };
-        // `key` was just derived from a live entry, so the bucket
-        // exists today; stay total anyway — an empty batch beats
-        // panicking the dispatcher thread if that invariant ever
-        // drifts (ISSUE 3 hardening; the cross-call races live in
-        // ready()/park_duration()/take_batch() sequencing, covered by
-        // the regression test below).
+        let out = self.pop_bucket(key);
+        self.maybe_reset_epoch();
+        out
+    }
+
+    /// Drain one dispatch group from `key`'s bucket and charge the
+    /// owning model — the single pop body shared by the serial
+    /// [`Batcher::take_batch`] and per-model [`Batcher::take_batch_for`]
+    /// paths, so the charge semantics (and their asserted
+    /// bit-equivalence) live in exactly one place.
+    ///
+    /// Totality: `key` is always derived from a live entry one
+    /// statement ago, so the bucket exists today; stay total anyway —
+    /// an empty batch beats panicking a dispatcher thread if that
+    /// invariant ever drifts (ISSUE 3 hardening; the cross-call races
+    /// live in ready()/park_duration()/take_batch() sequencing, covered
+    /// by the regression test below).
+    ///
+    /// Charging: every pop path charges at pop time — the expired-jump
+    /// pop included.  An uncharged expiry dispatch would let a model
+    /// whose deadline keeps firing (short max_wait, trickle arrival)
+    /// consume service the deficit ledger never sees, drifting the
+    /// served shares off the configured weights (ISSUE 5 regression
+    /// test `expired_dispatch_still_charges_its_model`).
+    fn pop_bucket(&mut self, key: (usize, usize)) -> Vec<T> {
         let Some(q) = self.buckets.get_mut(&key) else {
             return Vec::new();
         };
@@ -300,16 +385,83 @@ impl<T> Batcher<T> {
             self.charged.resize(key.0 + 1, 0);
         }
         self.charged[key.0] = self.charged[key.0].saturating_add(tokens);
-        if self.queued == 0 {
-            // Epoch reset: an idle pool carries no fairness debt
-            // forward.  Without it a model that served alone, drained,
-            // and later resumed would keep a stale surplus against a
-            // tenant that first arrived into the empty queue at charge
-            // zero — the one direction the re-entry floor in
-            // `push_keyed` cannot cover.
+        out
+    }
+
+    /// Epoch reset: an idle pool carries no fairness debt forward.
+    /// Without it a model that served alone, drained, and later resumed
+    /// would keep a stale surplus against a tenant that first arrived
+    /// into the empty queue at charge zero — the one direction the
+    /// re-entry floor in `push_keyed` cannot cover.  With concurrent
+    /// poppers the pool is only idle once in-flight groups have also
+    /// completed; resetting while a group executes would erase service
+    /// that model is consuming right now.
+    fn maybe_reset_epoch(&mut self) {
+        if self.queued == 0 && self.total_in_flight() == 0 {
             self.charged.iter_mut().for_each(|c| *c = 0);
         }
+    }
+
+    /// Whether `model` should release a batch now: one of its buckets
+    /// reached `max_batch`, or its oldest queued request's deadline
+    /// expired.  The per-model half of [`Batcher::ready`], used by the
+    /// concurrent per-group dispatchers (DESIGN.md §9).
+    pub fn ready_for(&self, model: usize, now: Instant) -> bool {
+        let mut buckets = self.buckets.range((model, 0)..=(model, usize::MAX));
+        buckets.any(|(_, q)| {
+            q.len() >= self.policy.max_batch
+                || q.front()
+                    .is_some_and(|&(_, t, _)| now.duration_since(t) >= self.policy.max_wait)
+        })
+    }
+
+    /// The bucket of `model` whose front (oldest) request arrived
+    /// earliest.
+    fn oldest_bucket_for(&self, model: usize) -> Option<((usize, usize), Instant)> {
+        self.buckets
+            .range((model, 0)..=(model, usize::MAX))
+            .filter_map(|(k, q)| q.front().map(|&(_, t, _)| (*k, t)))
+            .min_by_key(|&(_, t)| t)
+    }
+
+    /// Pop one dispatch group for `model` — the concurrent per-group
+    /// pipeline's pop contract.  Bucket choice mirrors the cross-model
+    /// [`Batcher::take_batch`] restricted to this model: an expired
+    /// oldest request outranks any full bucket, otherwise a full bucket
+    /// (oldest front first), otherwise (the deadline path) the oldest
+    /// bucket.  The pop charges the model's deficit ledger immediately
+    /// and records the group as in flight until [`Batcher::complete`];
+    /// a single-model configuration pops the exact groups `take_batch`
+    /// would (asserted bit-equivalent in tests).
+    pub fn take_batch_for(&mut self, model: usize) -> Vec<T> {
+        let now = Instant::now();
+        let key = match self.oldest_bucket_for(model) {
+            None => return Vec::new(),
+            Some((k, t)) if now.duration_since(t) >= self.policy.max_wait => k,
+            Some((oldest_key, _)) => {
+                // among this model's full buckets: oldest front first
+                self.buckets
+                    .range((model, 0)..=(model, usize::MAX))
+                    .filter(|(_, q)| q.len() >= self.policy.max_batch)
+                    .filter_map(|(k, q)| q.front().map(|&(_, t, _)| (*k, t)))
+                    .min_by_key(|&(_, t)| t)
+                    .map_or(oldest_key, |(k, _)| k)
+            }
+        };
+        let out = self.pop_bucket(key);
+        self.note_in_flight(model, out.len());
         out
+    }
+
+    /// How long `model`'s dispatcher may park: the time until its own
+    /// oldest request's deadline (zero if expired), or [`DEFAULT_PARK`]
+    /// when the model has nothing queued.  Per-model so a group with an
+    /// empty queue never wakes for another model's deadline.
+    pub fn park_duration_for(&self, model: usize, now: Instant) -> Duration {
+        match self.oldest_bucket_for(model) {
+            Some((_, t)) => (t + self.policy.max_wait).saturating_duration_since(now),
+            None => DEFAULT_PARK,
+        }
     }
 
     /// Deadline of the oldest queued request (for poll sleeping).
@@ -637,6 +789,117 @@ mod tests {
             served[b.take_batch()[0].0] += 1;
         }
         assert_eq!(served, [4, 4], "fresh epoch splits evenly");
+    }
+
+    #[test]
+    fn expired_dispatch_still_charges_its_model() {
+        // Regression (ISSUE 5): a deadline-expired request jumps the
+        // queue ahead of any full bucket — but the jump must still
+        // charge its model's deficit ledger, on BOTH pop paths, or a
+        // trickle-arrival model whose deadline keeps firing would
+        // consume service the weighted-fair ledger never sees.
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::ZERO, bucket_width: 8 };
+        // cross-model serial pop
+        let mut b = Batcher::new(p);
+        b.set_model_weights(&[1, 1]);
+        b.push_keyed("expired", 0, 5);
+        std::thread::sleep(Duration::from_millis(1));
+        b.push_keyed("hot-a", 1, 3);
+        b.push_keyed("hot-b", 1, 3); // model 1's bucket is full
+        assert_eq!(b.take_batch(), vec!["expired"], "expiry outranks the full bucket");
+        assert_eq!(b.charged_tokens(0), 8, "the expired jump was charged at pop time");
+        // per-model concurrent pop
+        let mut b = Batcher::new(p);
+        b.set_model_weights(&[1, 1]);
+        b.push_keyed("expired", 0, 5);
+        assert_eq!(b.take_batch_for(0), vec!["expired"]);
+        assert_eq!(b.charged_tokens(0), 8, "take_batch_for charges expiry pops too");
+    }
+
+    #[test]
+    fn per_model_pop_only_serves_its_own_model() {
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::ZERO, bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.push_keyed("a0", 0, 3);
+        b.push_keyed("b0", 1, 3);
+        b.push_keyed("a1", 0, 4);
+        assert_eq!(b.take_batch_for(1), vec!["b0"], "model 1 pops only its own bucket");
+        assert_eq!(b.queued_for(0), 2, "model 0's backlog untouched");
+        assert_eq!(b.take_batch_for(1), Vec::<&str>::new(), "no work left for model 1");
+        assert_eq!(b.take_batch_for(0), vec!["a0", "a1"]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn per_model_pop_matches_serial_pop_for_one_model() {
+        // Degenerate single-model configuration: take_batch_for(0) pops
+        // the exact same groups, in the same order, as the serial
+        // cross-model take_batch — the bit-equivalence contract the
+        // per-group pipeline relies on (DESIGN.md §9).
+        let p = BatchPolicy { max_batch: 3, max_wait: Duration::ZERO, bucket_width: 8 };
+        let mut serial = Batcher::new(p);
+        let mut concurrent = Batcher::new(p);
+        for (i, &len) in [3usize, 12, 5, 9, 1, 20, 7, 8].iter().enumerate() {
+            serial.push_keyed(i, 0, len);
+            concurrent.push_keyed(i, 0, len);
+        }
+        while !serial.is_empty() {
+            let want = serial.take_batch();
+            let got = concurrent.take_batch_for(0);
+            assert_eq!(got, want, "per-model pop diverged from the serial pop");
+            concurrent.complete(0, got.len());
+        }
+        assert!(concurrent.is_empty());
+        assert_eq!(concurrent.charged_tokens(0), serial.charged_tokens(0));
+    }
+
+    #[test]
+    fn ready_for_and_park_duration_for_are_per_model() {
+        let wait = Duration::from_millis(20);
+        let p = BatchPolicy { max_batch: 2, max_wait: wait, bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.push_keyed("a0", 0, 3);
+        b.push_keyed("a1", 0, 5); // model 0's bucket is full
+        b.push_keyed("b0", 1, 3); // model 1: one unexpired request
+        let now = Instant::now();
+        assert!(b.ready_for(0, now), "model 0 has a full bucket");
+        assert!(!b.ready_for(1, now), "model 1 is neither full nor expired");
+        assert!(b.ready_for(1, now + wait + Duration::from_millis(1)), "deadline fires");
+        assert!(!b.ready_for(2, now), "unknown model is never ready");
+        assert!(b.park_duration_for(1, now) <= wait, "parks toward its own deadline");
+        assert_eq!(b.park_duration_for(2, now), DEFAULT_PARK, "no work parks the default");
+        // model 1's park ignores model 0's (already releasable) bucket
+        assert!(b.park_duration_for(1, now) > Duration::ZERO);
+    }
+
+    #[test]
+    fn in_flight_work_holds_the_epoch_and_the_reentry_floor() {
+        // Concurrent-pipeline fairness semantics: a popped-but-running
+        // group (a) keeps the epoch from resetting even when the queue
+        // drains, and (b) counts as backlog for the idle re-entry
+        // floor, so a model with work in flight keeps its fairness
+        // position.
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.set_model_weights(&[1, 1]);
+        b.push_keyed((0usize, 0), 0, 8);
+        b.push_keyed((0usize, 1), 0, 8);
+        let popped = b.take_batch_for(0);
+        assert_eq!(popped.len(), 2);
+        assert_eq!(b.in_flight_for(0), 2);
+        assert!(b.is_empty(), "queue drained but the group is still executing");
+        assert_eq!(b.charged_tokens(0), 16, "charge landed at pop time, no reset yet");
+        // a tenant arriving while model 0's group is in flight enters
+        // at model 0's service level, not at zero
+        b.push_keyed((1usize, 0), 1, 8);
+        assert_eq!(b.charged_tokens(1), 16, "re-entry floor sees in-flight backlog");
+        let served = b.take_batch_for(1);
+        assert_eq!(served.len(), 1);
+        b.complete(1, 1);
+        assert_eq!(b.charged_tokens(0), 16, "model 0 still in flight: no epoch reset");
+        b.complete(0, 2);
+        assert_eq!(b.charged_tokens(0), 0, "last completion resets the idle epoch");
+        assert_eq!(b.charged_tokens(1), 0);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! resident models (DESIGN.md §8) — a per-model ledger so token volume,
 //! padding waste, and virtual time are never blended across geometries
 //! of very different `m`.
+//!
+//! With the concurrent per-group pipeline and SLO-aware autoscaling
+//! (DESIGN.md §9) each model ledger additionally carries the signals
+//! the autoscaler consumes and the per-tenant truth operators read:
+//! live backlog (submitted minus settled), per-model end-to-end and
+//! execution latency series (p50/p99 per tenant — a blended global p99
+//! hides a heavy model's tail behind a cheap model's volume), the
+//! active-replica gauge, and scale-up/-down counters.
 
 use crate::util::stats::Series;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -60,6 +68,25 @@ pub struct ModelStats {
     pub accel_cycles: AtomicU64,
     /// simulated accelerator milliseconds (virtual time)
     accel_ms: Mutex<f64>,
+    /// live backlog gauge: requests submitted but not yet completed or
+    /// errored (queued + in flight) — the autoscaler's demand signal
+    pub backlog: AtomicU64,
+    /// end-to-end wallclock latency per completed request (seconds) —
+    /// the per-model p50/p99 ledger the SLO is judged against
+    pub e2e_s: Mutex<Series>,
+    /// execution wallclock per completed request (seconds)
+    pub exec_s: Mutex<Series>,
+    /// running sum of execution nanoseconds (with `completed` this
+    /// gives the autoscaler an O(1), lock-free mean — the control loop
+    /// ticks every few ms and must not scan the full latency series
+    /// under the serving path's mutex)
+    exec_ns_total: AtomicU64,
+    /// active replicas currently serving this model (autoscaler gauge)
+    pub replicas: AtomicU64,
+    /// replica grow events applied by the autoscaler
+    pub scale_ups: AtomicU64,
+    /// replica drain-then-retire events applied by the autoscaler
+    pub scale_downs: AtomicU64,
 }
 
 impl ModelStats {
@@ -80,6 +107,26 @@ impl ModelStats {
     /// Virtual accelerator milliseconds accumulated for this model.
     pub fn accel_ms(&self) -> f64 {
         *self.accel_ms.lock().unwrap()
+    }
+
+    /// p50/p99 end-to-end latency in milliseconds (NaN with no
+    /// completions yet).
+    pub fn e2e_percentiles_ms(&self) -> (f64, f64) {
+        let s = self.e2e_s.lock().unwrap();
+        (s.p50() * 1e3, s.p99() * 1e3)
+    }
+
+    /// Mean execution wall milliseconds per completed request, or
+    /// `fallback_ms` before the first completion — the autoscaler's
+    /// service-time estimate.  O(1) off the running counters (no lock,
+    /// no series scan): this runs on every control-loop tick.
+    pub fn mean_exec_ms(&self, fallback_ms: f64) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            fallback_ms
+        } else {
+            self.exec_ns_total.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+        }
     }
 }
 
@@ -197,10 +244,13 @@ impl Metrics {
     }
 
     /// Account one submitted request against model `i`'s ledger as well
-    /// as the aggregate counter.
+    /// as the aggregate counter.  Raises the model's live backlog
+    /// gauge; [`Metrics::record_model_served`] settles it.
     pub fn record_request_for(&self, model: usize) {
         self.record_request();
-        self.model(model).requests.fetch_add(1, Ordering::Relaxed);
+        let m = self.model(model);
+        m.requests.fetch_add(1, Ordering::Relaxed);
+        m.backlog.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Account one request's live token count and the padded count its
@@ -255,8 +305,13 @@ impl Metrics {
     }
 
     /// Account one completed (or failed) request against model `i`'s
-    /// ledger: the live and bucket-padded tokens actually served plus
-    /// the virtual accelerator time they cost.
+    /// ledger: the live and bucket-padded tokens actually served, the
+    /// virtual accelerator time they cost, and the wall-clock
+    /// end-to-end / execution latencies feeding the per-model p50/p99
+    /// ledgers.  Settles the live backlog gauge either way; errors
+    /// skip the latency series (a typed rejection is near-instant and
+    /// would deflate the tail).
+    #[allow(clippy::too_many_arguments)]
     pub fn record_model_served(
         &self,
         model: usize,
@@ -264,9 +319,13 @@ impl Metrics {
         padded: usize,
         cycles: u64,
         accel_ms: f64,
+        e2e_s: f64,
+        exec_s: f64,
         error: bool,
     ) {
         let m = self.model(model);
+        let b = &m.backlog;
+        let _ = b.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
         if error {
             m.errors.fetch_add(1, Ordering::Relaxed);
             return;
@@ -276,6 +335,25 @@ impl Metrics {
         m.served_padded_tokens.fetch_add(padded as u64, Ordering::Relaxed);
         m.accel_cycles.fetch_add(cycles, Ordering::Relaxed);
         *m.accel_ms.lock().unwrap() += accel_ms;
+        m.e2e_s.lock().unwrap().push(e2e_s);
+        m.exec_s.lock().unwrap().push(exec_s);
+        m.exec_ns_total.fetch_add((exec_s * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Update model `i`'s active-replica gauge (the per-group runtime
+    /// calls this at startup and on every autoscaler grow/shrink).
+    pub fn set_model_replicas(&self, model: usize, n: usize) {
+        self.model(model).replicas.store(n as u64, Ordering::Relaxed);
+    }
+
+    /// Count one applied autoscaler action for model `i`.
+    pub fn record_scale(&self, model: usize, up: bool) {
+        let m = self.model(model);
+        if up {
+            m.scale_ups.fetch_add(1, Ordering::Relaxed);
+        } else {
+            m.scale_downs.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Virtual accelerator milliseconds summed over all replicas.
@@ -314,9 +392,12 @@ impl Metrics {
                 } else {
                     0.0
                 };
+                let (p50_ms, p99_ms) = l.stats.e2e_percentiles_ms();
                 out.push_str(&format!(
                     "\n  model {} (w={}): requests={} completed={} errors={} waste={:.1}% \
-                     served tokens={} share={:.1}% (weight {:.1}%) virtual={:.3}ms",
+                     served tokens={} share={:.1}% (weight {:.1}%) virtual={:.3}ms \
+                     backlog={} replicas={} e2e p50={p50_ms:.3}ms p99={p99_ms:.3}ms \
+                     scale +{}/-{}",
                     l.name,
                     l.weight,
                     l.stats.requests.load(Ordering::Relaxed),
@@ -327,6 +408,10 @@ impl Metrics {
                     share,
                     weight_pct,
                     l.stats.accel_ms(),
+                    l.stats.backlog.load(Ordering::Relaxed),
+                    l.stats.replicas.load(Ordering::Relaxed),
+                    l.stats.scale_ups.load(Ordering::Relaxed),
+                    l.stats.scale_downs.load(Ordering::Relaxed),
                 ));
             }
         }
@@ -424,11 +509,11 @@ mod tests {
         m.ensure_models(&[("a", 3), ("b", 1)]);
         m.record_request_for(0);
         m.record_request_for(1);
-        m.record_model_served(0, 8, 8, 100, 0.7, false);
-        m.record_model_served(0, 8, 8, 100, 0.7, false);
-        m.record_model_served(0, 8, 8, 100, 0.7, false);
-        m.record_model_served(1, 4, 8, 50, 0.3, false);
-        m.record_model_served(1, 2, 0, 0, 0.0, true); // error: no tokens served
+        m.record_model_served(0, 8, 8, 100, 0.7, 0.010, 0.004, false);
+        m.record_model_served(0, 8, 8, 100, 0.7, 0.020, 0.005, false);
+        m.record_model_served(0, 8, 8, 100, 0.7, 0.030, 0.006, false);
+        m.record_model_served(1, 4, 8, 50, 0.3, 0.010, 0.002, false);
+        m.record_model_served(1, 2, 0, 0, 0.0, 0.0, 0.0, true); // error: no tokens served
         let a = m.model(0);
         let b = m.model(1);
         assert_eq!(a.completed.load(Ordering::Relaxed), 3);
@@ -440,9 +525,49 @@ mod tests {
         assert!((m.model_token_share(1) - 0.25).abs() < 1e-12);
         assert!((a.accel_ms() - 2.1).abs() < 1e-12);
         assert_eq!(m.model_name(0).as_deref(), Some("a"));
+        // per-model latency ledger: p50/p99 over this model's own
+        // completions only, errors excluded
+        let (p50, p99) = a.e2e_percentiles_ms();
+        assert!((p50 - 20.0).abs() < 1e-9, "p50={p50}");
+        assert!((p99 - 30.0).abs() < 1e-9, "p99={p99}");
+        assert!((a.mean_exec_ms(99.0) - 5.0).abs() < 1e-9);
+        assert_eq!(b.e2e_s.lock().unwrap().len(), 1, "error skipped the latency series");
         let report = m.report();
         assert!(report.contains("model a (w=3)"), "{report}");
         assert!(report.contains("share=75.0%"), "{report}");
+        assert!(report.contains("p99="), "{report}");
+    }
+
+    #[test]
+    fn backlog_gauge_tracks_submitted_minus_settled() {
+        let m = Metrics::new();
+        m.ensure_models(&[("a", 1)]);
+        m.record_request_for(0);
+        m.record_request_for(0);
+        m.record_request_for(0);
+        assert_eq!(m.model(0).backlog.load(Ordering::Relaxed), 3);
+        m.record_model_served(0, 4, 8, 10, 0.1, 0.001, 0.001, false);
+        m.record_model_served(0, 0, 0, 0, 0.0, 0.0, 0.0, true); // errors settle too
+        assert_eq!(m.model(0).backlog.load(Ordering::Relaxed), 1);
+        // a settle without a matching submit saturates at zero instead
+        // of wrapping (mock-driven tests bypass record_request_for)
+        m.record_model_served(0, 4, 8, 10, 0.1, 0.001, 0.001, false);
+        m.record_model_served(0, 4, 8, 10, 0.1, 0.001, 0.001, false);
+        assert_eq!(m.model(0).backlog.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn replica_gauge_and_scale_counters() {
+        let m = Metrics::new();
+        m.ensure_models(&[("a", 1)]);
+        m.set_model_replicas(0, 2);
+        assert_eq!(m.model(0).replicas.load(Ordering::Relaxed), 2);
+        m.record_scale(0, true);
+        m.record_scale(0, true);
+        m.record_scale(0, false);
+        assert_eq!(m.model(0).scale_ups.load(Ordering::Relaxed), 2);
+        assert_eq!(m.model(0).scale_downs.load(Ordering::Relaxed), 1);
+        assert!(m.report().contains("scale +2/-1"), "{}", m.report());
     }
 
     #[test]
@@ -451,7 +576,7 @@ mod tests {
         m.record_replica(3, 0.001, 10, 0.0, false);
         assert_eq!(m.replica_count(), 4);
         assert_eq!(m.replica(3).requests.load(Ordering::Relaxed), 1);
-        m.record_model_served(2, 1, 8, 1, 0.0, false);
+        m.record_model_served(2, 1, 8, 1, 0.0, 0.001, 0.001, false);
         assert_eq!(m.model_count(), 3);
         assert_eq!(m.model_name(2).as_deref(), Some("model2"));
         assert_eq!(m.model(2).completed.load(Ordering::Relaxed), 1);

@@ -1,29 +1,41 @@
 //! Layer-3 coordinator: the deployable serving system around the
-//! accelerator model (DESIGN.md §2, §8).
+//! accelerator model (DESIGN.md §2, §8, §9).
 //!
 //! Request flow: `server` (TCP, optional `model:` prefix) ->
 //! `router::submit_to` -> `batcher` (size-or-deadline dispatch groups
 //! keyed by `(model, padded length)`, weighted-fair across models) ->
-//! dispatcher thread -> `pool::ReplicaPool` (named per-model replica
-//! groups; fan-out over the owning group's replicas on the `util`
-//! thread pool, results re-ordered per request) -> reply channels.
+//! one dispatcher thread *per model group* popping its own model's
+//! groups concurrently -> that group's
+//! [`GroupRuntime`](pool::GroupRuntime) (fan-out over the group's
+//! active replicas on its private executor, results re-ordered per
+//! request) -> reply channels.  An SLO autoscaler thread
+//! ([`autoscale`]) moves each scalable group's replica count with its
+//! backlog.
 //!
 //! * [`engine`] — the [`EngineReplica`] trait and its implementations:
 //!   the PJRT-backed [`InferenceEngine`] (single-model) and the
 //!   artifact-free [`FunctionalEngine`] over a shared
 //!   [`SyntheticModel`] weight bundle.
 //! * [`registry`] — the multi-tenant model registry: model ids ->
-//!   geometry presets + replica groups + fair-share weights.
+//!   geometry presets + replica groups + fair-share weights +
+//!   `min..=max` replica ranges, SLO classes, and replica factories.
 //! * [`batcher`] — dynamic batcher (size/deadline policy, model- and
-//!   length-bucketed, deficit-round-robin model selection).
-//! * [`pool`] — the replica pool: per-model group fan-out + per-request
-//!   re-ordering on the in-repo thread pool.
-//! * [`router`] — request intake, the dispatcher thread, shutdown.
+//!   length-bucketed, deficit-round-robin model selection; per-model
+//!   pop contract with in-flight accounting for concurrent poppers).
+//! * [`pool`] — per-model group runtimes: fan-out + per-request
+//!   re-ordering on a private per-group thread pool, replica slots the
+//!   autoscaler grows and drains.
+//! * [`autoscale`] — the SLO-aware backlog autoscaler policy and
+//!   control loop.
+//! * [`router`] — request intake, the per-group dispatcher threads,
+//!   the autoscaler thread, shutdown.
 //! * [`server`] — a line-protocol TCP front-end.
 //! * [`metrics`] — wall-clock latency/throughput plus per-replica and
 //!   per-model virtual-time (simulated accelerator cycle) accounting,
-//!   token shares, and per-model padding waste.
+//!   token shares, per-model padding waste, per-model p50/p99 latency,
+//!   backlog and replica gauges.
 
+pub mod autoscale;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
@@ -32,11 +44,12 @@ pub mod registry;
 pub mod router;
 pub mod server;
 
+pub use autoscale::{AutoscalePolicy, ScaleDecision};
 pub use batcher::{Batcher, BatchPolicy};
 pub use engine::{
     EngineReplica, FunctionalEngine, InferenceEngine, Prediction, RequestError, SyntheticModel,
 };
 pub use metrics::{Metrics, ModelStats, ReplicaStats};
-pub use pool::ReplicaPool;
-pub use registry::{ModelGroup, ModelRegistry};
+pub use pool::{GroupRuntime, ReplicaPool};
+pub use registry::{ModelGroup, ModelRegistry, ReplicaFactory};
 pub use router::{Request, Response, Router};

@@ -1,132 +1,208 @@
-//! Replica pool: fans the batcher's dispatch groups out across engine
-//! replicas on the in-repo `util` thread pool and re-orders results per
-//! request (DESIGN.md §2, §8).
+//! Replica pool: per-model-group runtimes that fan dispatch groups out
+//! across engine replicas and re-order results per request (DESIGN.md
+//! §2, §8, §9).
 //!
-//! With multiple resident models the pool is a *set of named groups*:
-//! each model id owns its own replicas, requests carry their model
-//! index, and a dispatch group (always model-homogeneous, by batcher
-//! construction) fans out only across its model's group.  Replica ids
-//! are global — group `g`'s replicas occupy a contiguous id range — so
-//! the per-replica metrics ledger stays flat.
+//! With the concurrent per-group dispatch pipeline each model group is
+//! a [`GroupRuntime`]: it owns its replicas, its *own* fixed executor
+//! (one `util::ThreadPool` sized to the group's `max_replicas`), and a
+//! slot table the autoscaler grows and shrinks at runtime.  Ownership
+//! is the point — a group barrier only ever waits on its own model's
+//! work, so a heavy `roberta_base` group mid-flight cannot stall a
+//! `tiny` dispatch (the PR 4 pipeline's shared-pool `run_batch` barrier
+//! would have).  [`ReplicaPool`] is the thin routing facade over the
+//! group runtimes that serial drivers (benches, tests) still use.
+//!
+//! Replica ids are global and *stable under scaling*: group `g`
+//! reserves the contiguous id range `base..base + max_replicas`, one id
+//! per slot, so the per-replica metrics ledger never renumbers when a
+//! replica is retired and a later grow reuses its slot.
 //!
 //! Fan-out policy within a group: requests are assigned round-robin by
-//! position (request `i` goes to replica `(start + i) mod N`, with
-//! `start` rotating per dispatch so short groups spread across replicas
-//! over time instead of pinning the group's first replica).  Each
-//! replica processes its share serially — one sequence at a time, as
-//! the hardware loads the MAC array per sentence — while the shares run
-//! concurrently on dedicated pool threads.  Replies go out on each
-//! request's channel the moment its prediction completes; the
-//! group-level return value is re-ordered back to submission (FIFO)
-//! order for consumers that want the whole group (the scaling bench,
-//! tests).
+//! position over the *active* slots (request `i` goes to active slot
+//! `(start + i) mod A`, with `start` rotating per dispatch so short
+//! groups spread across replicas over time).  Each replica processes
+//! its share serially — one sequence at a time, as the hardware loads
+//! the MAC array per sentence — while the shares run concurrently on
+//! the group's executor threads.  Replies go out on each request's
+//! channel the moment its prediction completes; the group-level return
+//! value is re-ordered back to submission (FIFO) order.
+//!
+//! Autoscaling (DESIGN.md §9): [`GroupRuntime::grow`] spawns one more
+//! replica from the group's factory (sharing the model's `Arc` weight
+//! bundle) into the lowest free slot; [`GroupRuntime::shrink`] is
+//! drain-then-retire — the slot is removed from the active table
+//! immediately, so no *new* dispatch selects it, while any in-flight
+//! dispatch keeps its own `Arc` clone until its share drains, after
+//! which the replica (and its Workspace arena) is dropped.
 //!
 //! Dispatch is a barrier per group: throughput scales with a model's
-//! replicas once its dispatch-group size reaches that group's replica
-//! count; groups smaller than the group leave its replicas idle for
-//! that dispatch (the operating regime is `max_batch >= replicas`;
+//! replicas once its dispatch-group size reaches the group's active
+//! replica count (the operating regime is `max_batch >= replicas`;
 //! DESIGN.md §2, EXPERIMENTS.md §Scaling).
 
 use super::engine::{EngineReplica, RequestError};
 use super::metrics::Metrics;
-use super::registry::ModelGroup;
+use super::registry::{ModelGroup, ReplicaFactory};
 use super::router::{Request, Response};
 use crate::util::threadpool::ThreadPool;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-struct Group {
+/// One model group's runtime: replicas, slot table, and a private
+/// executor, so the group's dispatch barrier is isolated from every
+/// other group (DESIGN.md §9).
+pub struct GroupRuntime {
     model: String,
-    replicas: Vec<Arc<dyn EngineReplica>>,
-    /// global id of this group's first replica
+    /// global id of this group's slot 0 (the group reserves
+    /// `base..base + max` ids)
     base: usize,
+    min: usize,
+    factory: Option<ReplicaFactory>,
+    /// target latency class in milliseconds (autoscaler input)
+    slo_ms: Option<f64>,
+    /// fixed-width slot table (`len == max_replicas`); `Some` slots are
+    /// active.  A Mutex, not RwLock: dispatches snapshot the active set
+    /// in one short lock and scaling actions are rare.
+    slots: Mutex<Vec<Option<Arc<dyn EngineReplica>>>>,
     /// rotating fan-out offset (advances once per dispatch)
     next_start: AtomicUsize,
-}
-
-pub struct ReplicaPool {
-    groups: Vec<Group>,
+    /// private executor, one thread per slot
     pool: ThreadPool,
     metrics: Arc<Metrics>,
+    /// model index in the router/batcher/metrics ledgers
+    gidx: usize,
 }
 
-impl ReplicaPool {
-    /// Single-model pool under the default model id (the seed serving
-    /// path): one pool thread per replica, so a replica is never
-    /// oversubscribed and an idle replica never queues behind a busy
-    /// one.
-    pub fn new(replicas: Vec<Arc<dyn EngineReplica>>, metrics: Arc<Metrics>) -> ReplicaPool {
-        ReplicaPool::new_multi(
-            vec![ModelGroup { model: "default".into(), replicas, weight: 1 }],
-            metrics,
-        )
-    }
-
-    /// Multi-model pool: one named replica group per model id, one pool
-    /// thread per replica across all groups.
-    pub fn new_multi(groups: Vec<ModelGroup>, metrics: Arc<Metrics>) -> ReplicaPool {
-        assert!(!groups.is_empty(), "replica pool needs at least one model group");
-        let total: usize = groups.iter().map(|g| g.replicas.len()).sum();
-        assert!(total > 0, "replica pool needs at least one engine");
-        for g in &groups {
-            assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
+impl GroupRuntime {
+    fn new(g: ModelGroup, gidx: usize, base: usize, metrics: Arc<Metrics>) -> GroupRuntime {
+        assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
+        assert!(
+            g.max_replicas >= g.replicas.len() && g.min_replicas <= g.replicas.len(),
+            "model {:?}: {} initial replicas outside {}..={}",
+            g.model,
+            g.replicas.len(),
+            g.min_replicas,
+            g.max_replicas,
+        );
+        let max = g.max_replicas;
+        let mut slots: Vec<Option<Arc<dyn EngineReplica>>> = vec![None; max];
+        for (slot, r) in g.replicas.into_iter().enumerate() {
+            slots[slot] = Some(r);
         }
-        metrics.ensure_replicas(total);
-        let pool = ThreadPool::new(total);
-        let mut base = 0;
-        let groups = groups
-            .into_iter()
-            .map(|g| {
-                let n = g.replicas.len();
-                let group = Group {
-                    model: g.model,
-                    replicas: g.replicas,
-                    base,
-                    next_start: AtomicUsize::new(0),
-                };
-                base += n;
-                group
-            })
-            .collect();
-        ReplicaPool { groups, pool, metrics }
+        metrics.set_model_replicas(gidx, slots.iter().flatten().count());
+        GroupRuntime {
+            model: g.model,
+            base,
+            min: g.min_replicas.max(1),
+            factory: g.factory,
+            slo_ms: g.slo_ms,
+            slots: Mutex::new(slots),
+            next_start: AtomicUsize::new(0),
+            pool: ThreadPool::new(max),
+            metrics,
+            gidx,
+        }
     }
 
-    /// Total number of replicas across all groups (== pool threads).
-    pub fn replicas(&self) -> usize {
-        self.groups.iter().map(|g| g.replicas.len()).sum()
+    pub fn model(&self) -> &str {
+        &self.model
     }
 
-    /// Number of model groups.
-    pub fn group_count(&self) -> usize {
-        self.groups.len()
+    /// Model index in the router/batcher/metrics ledgers.
+    pub fn model_index(&self) -> usize {
+        self.gidx
     }
 
-    /// Model id of group `i`.
-    pub fn model_name(&self, i: usize) -> Option<&str> {
-        self.groups.get(i).map(|g| g.model.as_str())
+    /// Target latency class, if the group is SLO-managed.
+    pub fn slo_ms(&self) -> Option<f64> {
+        self.slo_ms
     }
 
-    /// Execute one dispatch group: fan out across the owning model's
-    /// replicas, reply per request as it finishes, and return responses
-    /// re-ordered to the group's submission order.  Dispatch groups are
-    /// model-homogeneous by batcher construction; the owning group is
-    /// read off the first request.
+    /// Replicas currently serving (active slots).
+    pub fn active_replicas(&self) -> usize {
+        self.slots.lock().unwrap().iter().flatten().count()
+    }
+
+    /// `min..=max` replica bounds.
+    pub fn replica_bounds(&self) -> (usize, usize) {
+        (self.min, self.slots.lock().unwrap().len())
+    }
+
+    /// Whether the autoscaler can move this group at all.
+    pub fn scalable(&self) -> bool {
+        let (min, max) = self.replica_bounds();
+        max > min && self.factory.is_some() && self.slo_ms.is_some()
+    }
+
+    /// Spawn one more replica into the lowest free slot (up to `max`).
+    /// Returns whether the group grew; `Err` only on factory failure.
+    pub fn grow(&self) -> Result<bool, String> {
+        let Some(factory) = &self.factory else { return Ok(false) };
+        // Build outside the slot lock: a factory spawning a replica
+        // (arena allocation) must not block an in-flight dispatch's
+        // snapshot.
+        let replica = factory()?;
+        let mut slots = self.slots.lock().unwrap();
+        let Some(free) = slots.iter().position(|s| s.is_none()) else {
+            return Ok(false); // already at max
+        };
+        slots[free] = Some(replica);
+        let active = slots.iter().flatten().count();
+        drop(slots);
+        self.metrics.set_model_replicas(self.gidx, active);
+        self.metrics.record_scale(self.gidx, true);
+        Ok(true)
+    }
+
+    /// Drain-then-retire one replica (down to `min`): the
+    /// highest-numbered active slot leaves the table immediately — no
+    /// new dispatch selects it — and the engine object is dropped once
+    /// any in-flight share's `Arc` clone drains.  Returns whether the
+    /// group shrank.
+    pub fn shrink(&self) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        let active: Vec<usize> =
+            (0..slots.len()).filter(|&i| slots[i].is_some()).collect();
+        if active.len() <= self.min {
+            return false;
+        }
+        slots[*active.last().unwrap()] = None;
+        let remaining = active.len() - 1;
+        drop(slots);
+        self.metrics.set_model_replicas(self.gidx, remaining);
+        self.metrics.record_scale(self.gidx, false);
+        true
+    }
+
+    /// Execute one dispatch group: fan out across the active replicas,
+    /// reply per request as it finishes, and return responses
+    /// re-ordered to the group's submission order.  The barrier here is
+    /// the group's own executor — other model groups dispatch
+    /// concurrently.
     pub fn dispatch(&self, group: Vec<Request>) -> Vec<Response> {
         let total = group.len();
         if total == 0 {
             return Vec::new();
         }
-        let gidx = group[0].model;
-        assert!(gidx < self.groups.len(), "request for unknown model group {gidx}");
         debug_assert!(
-            group.iter().all(|r| r.model == gidx),
+            group.iter().all(|r| r.model == self.gidx),
             "dispatch group mixes models — batcher invariant broken"
         );
-        let g = &self.groups[gidx];
-        let n = g.replicas.len();
-        let start = g.next_start.fetch_add(1, Ordering::Relaxed) % n;
+        // Snapshot the active slots: scaling actions after this point
+        // affect the next dispatch, not this one (drain-then-retire).
+        let active: Vec<(usize, Arc<dyn EngineReplica>)> = self
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, r)| r.as_ref().map(|r| (slot, Arc::clone(r))))
+            .collect();
+        let n = active.len();
+        assert!(n > 0, "model {:?} has no active replicas", self.model);
+        let start = self.next_start.fetch_add(1, Ordering::Relaxed) % n;
         let mut shares: Vec<Vec<(usize, Request)>> = (0..n).map(|_| Vec::new()).collect();
         for (i, req) in group.into_iter().enumerate() {
             shares[(start + i) % n].push((i, req));
@@ -135,11 +211,11 @@ impl ReplicaPool {
             .into_iter()
             .enumerate()
             .filter(|(_, share)| !share.is_empty())
-            .map(|(r, share)| {
-                let replica = Arc::clone(&g.replicas[r]);
+            .map(|(a, share)| {
+                let (slot, replica) = (active[a].0, Arc::clone(&active[a].1));
                 let metrics = Arc::clone(&self.metrics);
-                let replica_id = g.base + r;
-                let model = g.model.clone();
+                let replica_id = self.base + slot;
+                let model = self.model.clone();
                 move || {
                     share
                         .into_iter()
@@ -158,8 +234,92 @@ impl ReplicaPool {
     }
 }
 
+/// Routing facade over the per-model [`GroupRuntime`]s for serial
+/// drivers (benches, tests) and the router's construction path.
+pub struct ReplicaPool {
+    groups: Vec<Arc<GroupRuntime>>,
+}
+
+impl ReplicaPool {
+    /// Single-model pool under the default model id (the seed serving
+    /// path): one executor thread per replica, so a replica is never
+    /// oversubscribed and an idle replica never queues behind a busy
+    /// one.
+    pub fn new(replicas: Vec<Arc<dyn EngineReplica>>, metrics: Arc<Metrics>) -> ReplicaPool {
+        ReplicaPool::new_multi(vec![ModelGroup::fixed("default", replicas, 1)], metrics)
+    }
+
+    /// Multi-model pool: one [`GroupRuntime`] per model id, each with a
+    /// private executor sized to its `max_replicas` and a reserved
+    /// global replica-id span of the same width.
+    pub fn new_multi(groups: Vec<ModelGroup>, metrics: Arc<Metrics>) -> ReplicaPool {
+        assert!(!groups.is_empty(), "replica pool needs at least one model group");
+        for (i, g) in groups.iter().enumerate() {
+            assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
+            assert!(
+                !groups[..i].iter().any(|o| o.model == g.model),
+                "duplicate model id {:?}",
+                g.model
+            );
+        }
+        let total_ids: usize = groups.iter().map(|g| g.max_replicas.max(g.replicas.len())).sum();
+        metrics.ensure_replicas(total_ids);
+        let mut base = 0;
+        let groups = groups
+            .into_iter()
+            .enumerate()
+            .map(|(gidx, mut g)| {
+                g.max_replicas = g.max_replicas.max(g.replicas.len());
+                let width = g.max_replicas;
+                let rt = Arc::new(GroupRuntime::new(g, gidx, base, Arc::clone(&metrics)));
+                base += width;
+                rt
+            })
+            .collect();
+        ReplicaPool { groups }
+    }
+
+    /// Active replicas across all groups.
+    pub fn replicas(&self) -> usize {
+        self.groups.iter().map(|g| g.active_replicas()).sum()
+    }
+
+    /// Number of model groups.
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Model id of group `i`.
+    pub fn model_name(&self, i: usize) -> Option<&str> {
+        self.groups.get(i).map(|g| g.model())
+    }
+
+    /// Runtime of group `i` (the per-group dispatchers and the
+    /// autoscaler hold these).
+    pub fn group(&self, i: usize) -> Option<&Arc<GroupRuntime>> {
+        self.groups.get(i)
+    }
+
+    /// All group runtimes, in model-index order.
+    pub fn groups(&self) -> &[Arc<GroupRuntime>] {
+        &self.groups
+    }
+
+    /// Execute one dispatch group on its owning model's runtime
+    /// (model-homogeneous by batcher construction; the owner is read
+    /// off the first request).  Serial drivers call this directly; the
+    /// router's per-group dispatchers call their own
+    /// [`GroupRuntime::dispatch`] concurrently.
+    pub fn dispatch(&self, group: Vec<Request>) -> Vec<Response> {
+        let Some(first) = group.first() else { return Vec::new() };
+        let gidx = first.model;
+        assert!(gidx < self.groups.len(), "request for unknown model group {gidx}");
+        self.groups[gidx].dispatch(group)
+    }
+}
+
 /// Serve one request on one replica: predict, account (aggregate,
-/// per-replica, and per-model virtual time), reply.
+/// per-replica, and per-model virtual time + latency), reply.
 fn serve_one(
     replica_id: usize,
     model_name: &str,
@@ -171,7 +331,7 @@ fn serve_one(
     let t0 = Instant::now();
     // A panicking replica must cost one request, not the dispatcher
     // thread: run_batch treats a panicked job as fatal, which would
-    // kill the single dispatcher and hang every later submit.
+    // kill the group's dispatcher and hang every later submit.
     let result = catch_unwind(AssertUnwindSafe(|| engine.predict(&req.tokens)))
         .unwrap_or_else(|_| {
             Err(RequestError::Backend("replica panicked while serving request".into()))
@@ -188,6 +348,8 @@ fn serve_one(
                 req.padded_len,
                 pred.accel_cycles,
                 pred.accel_ms,
+                e2e,
+                exec,
                 false,
             );
             Response {
@@ -205,7 +367,7 @@ fn serve_one(
             let exec = t0.elapsed().as_secs_f64();
             metrics.record_error();
             metrics.record_replica(replica_id, exec, 0, 0.0, true);
-            metrics.record_model_served(req.model, 0, 0, 0, 0.0, true);
+            metrics.record_model_served(req.model, 0, 0, 0, 0.0, 0.0, 0.0, true);
             Response {
                 id: req.id,
                 model: model_name.to_string(),
@@ -402,10 +564,7 @@ mod tests {
                 .collect()
         };
         let pool = ReplicaPool::new_multi(
-            vec![
-                ModelGroup { model: "a".into(), replicas: mk(2), weight: 1 },
-                ModelGroup { model: "b".into(), replicas: mk(1), weight: 1 },
-            ],
+            vec![ModelGroup::fixed("a", mk(2), 1), ModelGroup::fixed("b", mk(1), 1)],
             Arc::clone(&metrics),
         );
         assert_eq!(pool.replicas(), 3);
@@ -427,5 +586,110 @@ mod tests {
         assert_eq!(metrics.model(1).served_padded_tokens.load(Ordering::Relaxed), 12);
         assert_eq!(metrics.model(0).completed.load(Ordering::Relaxed), 4);
         assert_eq!(metrics.replica(2).requests.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn two_groups_dispatch_concurrently_not_serially() {
+        // The tentpole isolation claim at the runtime layer: a slow
+        // group's dispatch barrier must not gate a fast group's.  Two
+        // single-replica groups, 4 x 20 ms vs 4 x 0 ms, dispatched from
+        // two threads: serial execution would cost ~80 ms for BOTH, the
+        // per-group executors finish the fast group almost immediately.
+        let metrics = Arc::new(Metrics::new());
+        let slow: Vec<Arc<dyn EngineReplica>> =
+            vec![Arc::new(SlowReplica { delay: Duration::from_millis(20) })];
+        let fast: Vec<Arc<dyn EngineReplica>> =
+            vec![Arc::new(SlowReplica { delay: Duration::ZERO })];
+        let pool = Arc::new(ReplicaPool::new_multi(
+            vec![ModelGroup::fixed("slow", slow, 1), ModelGroup::fixed("fast", fast, 1)],
+            metrics,
+        ));
+        let slow_rt = Arc::clone(pool.group(0).unwrap());
+        let slow_thread = std::thread::spawn(move || {
+            let (group, _rx) = group_for_model(0, 4);
+            slow_rt.dispatch(group);
+        });
+        std::thread::sleep(Duration::from_millis(5)); // slow group is mid-flight
+        let t0 = Instant::now();
+        let (group, _rx) = group_for_model(1, 4);
+        let responses = pool.group(1).unwrap().dispatch(group);
+        let fast_wall = t0.elapsed();
+        slow_thread.join().unwrap();
+        assert_eq!(responses.len(), 4);
+        assert!(
+            fast_wall < Duration::from_millis(40),
+            "fast group waited {fast_wall:?} behind the slow group's barrier"
+        );
+    }
+
+    #[test]
+    fn grow_and_shrink_move_between_bounds_with_stable_ids() {
+        let metrics = Arc::new(Metrics::new());
+        let factory: ReplicaFactory = Arc::new(|| {
+            Ok(Arc::new(SlowReplica { delay: Duration::ZERO }) as Arc<dyn EngineReplica>)
+        });
+        let initial: Vec<Arc<dyn EngineReplica>> = vec![factory().unwrap()];
+        let pool = ReplicaPool::new_multi(
+            vec![
+                ModelGroup {
+                    model: "scaled".into(),
+                    replicas: initial,
+                    weight: 1,
+                    min_replicas: 1,
+                    max_replicas: 3,
+                    slo_ms: Some(10.0),
+                    factory: Some(factory),
+                },
+                ModelGroup::fixed(
+                    "fixed",
+                    vec![Arc::new(SlowReplica { delay: Duration::ZERO })],
+                    1,
+                ),
+            ],
+            Arc::clone(&metrics),
+        );
+        let g = pool.group(0).unwrap();
+        assert!(g.scalable());
+        assert_eq!(g.active_replicas(), 1);
+        assert_eq!(g.replica_bounds(), (1, 3));
+        assert!(g.grow().unwrap());
+        assert!(g.grow().unwrap());
+        assert!(!g.grow().unwrap(), "at max: grow is a no-op");
+        assert_eq!(g.active_replicas(), 3);
+        assert_eq!(metrics.model(0).replicas.load(std::sync::atomic::Ordering::Relaxed), 3);
+        // the scaled group reserves ids 0..3; dispatches spread over
+        // all three active slots
+        let (group, _rx) = group_for_model(0, 6);
+        let mut replicas_hit: Vec<usize> =
+            g.dispatch(group).iter().map(|r| r.replica).collect();
+        replicas_hit.sort_unstable();
+        replicas_hit.dedup();
+        assert_eq!(replicas_hit, vec![0, 1, 2]);
+        // the fixed group's id sits beyond the reserved span
+        let (group, _rx) = group_for_model(1, 1);
+        assert_eq!(pool.dispatch(group)[0].replica, 3);
+        // shrink back to min; dispatches keep working throughout
+        assert!(g.shrink());
+        assert!(g.shrink());
+        assert!(!g.shrink(), "at min: shrink is a no-op");
+        assert_eq!(g.active_replicas(), 1);
+        let (group, _rx) = group_for_model(0, 4);
+        let responses = g.dispatch(group);
+        assert!(responses.iter().all(|r| r.error.is_none() && r.replica == 0));
+        assert_eq!(metrics.model(0).scale_ups.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(
+            metrics.model(0).scale_downs.load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
+    }
+
+    #[test]
+    fn fixed_group_never_scales() {
+        let (pool, _metrics) = pool_of(2, 0);
+        let g = pool.group(0).unwrap();
+        assert!(!g.scalable());
+        assert!(!g.grow().unwrap(), "no factory: grow is a no-op");
+        assert!(!g.shrink(), "min == len: shrink is a no-op");
+        assert_eq!(g.active_replicas(), 2);
     }
 }

@@ -23,12 +23,62 @@ use crate::model::Geometry;
 use crate::sim::HwConfig;
 use std::sync::Arc;
 
+/// Builds one more identical replica of a model on demand — what the
+/// autoscaler invokes to grow a group (a `FunctionalEngine` spawner
+/// captures the shared `Arc<SyntheticModel>` weight bundle, so a grow
+/// costs one Workspace arena, never a weight copy; DESIGN.md §9).
+pub type ReplicaFactory = Arc<dyn Fn() -> Result<Arc<dyn EngineReplica>, String> + Send + Sync>;
+
 /// One model's serving group, ready for the router: the tenant-facing
-/// name, its (identical) replicas, and its fair-share weight.
+/// name, its (identical) initial replicas, its fair-share weight, the
+/// `min..=max` replica range the autoscaler may move within, the
+/// latency SLO the backlog is judged against, and the factory that
+/// spawns additional replicas (absent => the group is fixed-size).
 pub struct ModelGroup {
     pub model: String,
     pub replicas: Vec<Arc<dyn EngineReplica>>,
     pub weight: u64,
+    /// Fewest replicas the autoscaler may drain the group down to.
+    pub min_replicas: usize,
+    /// Most replicas the autoscaler may grow the group to (also the
+    /// group's reserved global-replica-id span and executor width).
+    pub max_replicas: usize,
+    /// Target end-to-end latency class in milliseconds; `None` opts the
+    /// group out of autoscaling.
+    pub slo_ms: Option<f64>,
+    pub factory: Option<ReplicaFactory>,
+}
+
+impl ModelGroup {
+    /// A fixed-size group: `min == max == replicas.len()`, no SLO, no
+    /// factory — the pre-autoscaler shape (DESIGN.md §8).
+    pub fn fixed(
+        model: impl Into<String>,
+        replicas: Vec<Arc<dyn EngineReplica>>,
+        weight: u64,
+    ) -> ModelGroup {
+        let n = replicas.len();
+        ModelGroup {
+            model: model.into(),
+            replicas,
+            weight,
+            min_replicas: n,
+            max_replicas: n,
+            slo_ms: None,
+            factory: None,
+        }
+    }
+
+    /// Whether the autoscaler has any room to act on this group —
+    /// must match the runtime-side gate
+    /// (`coordinator::pool::GroupRuntime::scalable`): a range, a
+    /// factory, AND an SLO class (a group without a latency target is
+    /// never scaled, whatever its backlog).
+    pub fn scalable(&self) -> bool {
+        self.max_replicas > self.min_replicas
+            && self.factory.is_some()
+            && self.slo_ms.is_some()
+    }
 }
 
 struct Entry {
@@ -37,6 +87,10 @@ struct Entry {
     geometry: Option<Geometry>,
     weight: u64,
     replicas: Vec<Arc<dyn EngineReplica>>,
+    min_replicas: usize,
+    max_replicas: usize,
+    slo_ms: Option<f64>,
+    factory: Option<ReplicaFactory>,
 }
 
 /// Registry of resident models, built once at startup and converted
@@ -72,7 +126,10 @@ impl ModelRegistry {
     /// preset under `name`, with fair-share `weight`.  The hardware
     /// instance is sized to the preset ([`HwConfig::sized_to`]); the
     /// weight bundle is generated once from `seed` and shared across
-    /// the group's replicas.
+    /// the group's replicas.  The group is fixed-size (`min == max ==
+    /// replicas`, no SLO); use
+    /// [`register_scaled`](ModelRegistry::register_scaled) for an
+    /// autoscaled range.
     pub fn register(
         &mut self,
         name: &str,
@@ -81,10 +138,40 @@ impl ModelRegistry {
         weight: u64,
         seed: u64,
     ) -> Result<&mut Self, String> {
+        self.register_scaled(name, preset, replicas, replicas, weight, None, seed)
+    }
+
+    /// Register an autoscaled synthetic group: it starts at
+    /// `min_replicas` and the router's autoscaler moves it within
+    /// `min_replicas..=max_replicas` as the backlog-vs-SLO ratio
+    /// demands (`slo_ms` is the model's target end-to-end latency
+    /// class; `None` keeps the group at `min_replicas` even when `max`
+    /// is larger).  Every spawned replica shares the one
+    /// `SyntheticModel` bundle built here.
+    #[allow(clippy::too_many_arguments)]
+    pub fn register_scaled(
+        &mut self,
+        name: &str,
+        preset: &str,
+        min_replicas: usize,
+        max_replicas: usize,
+        weight: u64,
+        slo_ms: Option<f64>,
+        seed: u64,
+    ) -> Result<&mut Self, String> {
         let geo = Geometry::preset(preset).ok_or_else(|| {
             format!("unknown preset {preset:?} (expected one of {:?})", Geometry::PRESET_NAMES)
         })?;
-        self.register_with_hw(name, preset, replicas, weight, seed, HwConfig::sized_to(&geo))
+        self.register_scaled_with_hw(
+            name,
+            preset,
+            min_replicas,
+            max_replicas,
+            weight,
+            slo_ms,
+            seed,
+            HwConfig::sized_to(&geo),
+        )
     }
 
     /// [`register`](ModelRegistry::register) with an explicit hardware
@@ -98,25 +185,58 @@ impl ModelRegistry {
         seed: u64,
         hw: HwConfig,
     ) -> Result<&mut Self, String> {
-        self.check(name, replicas, weight)?;
+        self.register_scaled_with_hw(name, preset, replicas, replicas, weight, None, seed, hw)
+    }
+
+    /// [`register_scaled`](ModelRegistry::register_scaled) with an
+    /// explicit hardware configuration.
+    #[allow(clippy::too_many_arguments)]
+    pub fn register_scaled_with_hw(
+        &mut self,
+        name: &str,
+        preset: &str,
+        min_replicas: usize,
+        max_replicas: usize,
+        weight: u64,
+        slo_ms: Option<f64>,
+        seed: u64,
+        hw: HwConfig,
+    ) -> Result<&mut Self, String> {
+        self.check(name, min_replicas, weight)?;
+        check_range(name, min_replicas, max_replicas, slo_ms)?;
         let geo = Geometry::preset(preset).ok_or_else(|| {
             format!("unknown preset {preset:?} (expected one of {:?})", Geometry::PRESET_NAMES)
         })?;
         hw.validate(&geo)?;
-        let group = FunctionalEngine::replica_group(preset, seed, hw, replicas)?;
+        let model = Arc::new(super::engine::SyntheticModel::build(preset, seed)?);
+        let replicas: Vec<Arc<dyn EngineReplica>> = (0..min_replicas)
+            .map(|_| {
+                Arc::new(FunctionalEngine::from_model(Arc::clone(&model), hw))
+                    as Arc<dyn EngineReplica>
+            })
+            .collect();
+        let factory: ReplicaFactory = Arc::new(move || {
+            Ok(Arc::new(FunctionalEngine::from_model(Arc::clone(&model), hw))
+                as Arc<dyn EngineReplica>)
+        });
         self.entries.push(Entry {
             name: name.to_string(),
             preset: Some(preset.to_string()),
             geometry: Some(geo),
             weight,
-            replicas: group,
+            replicas,
+            min_replicas,
+            max_replicas,
+            slo_ms,
+            factory: Some(factory),
         });
         Ok(self)
     }
 
     /// Register a custom replica group (mock engines, or a single-model
     /// PJRT group).  All replicas must serve the same model; the
-    /// registry has no preset geometry for such a group.
+    /// registry has no preset geometry for such a group, and without a
+    /// factory it stays fixed-size.
     pub fn register_group(
         &mut self,
         name: &str,
@@ -124,12 +244,48 @@ impl ModelRegistry {
         weight: u64,
     ) -> Result<&mut Self, String> {
         self.check(name, replicas.len(), weight)?;
+        let n = replicas.len();
         self.entries.push(Entry {
             name: name.to_string(),
             preset: None,
             geometry: None,
             weight,
             replicas,
+            min_replicas: n,
+            max_replicas: n,
+            slo_ms: None,
+            factory: None,
+        });
+        Ok(self)
+    }
+
+    /// Register an autoscaled custom group: `min_replicas` instances
+    /// are built from `factory` up front and the autoscaler may grow
+    /// the group to `max_replicas` under backlog (tests use this with
+    /// deterministic mock engines).
+    pub fn register_group_scaled(
+        &mut self,
+        name: &str,
+        min_replicas: usize,
+        max_replicas: usize,
+        weight: u64,
+        slo_ms: Option<f64>,
+        factory: ReplicaFactory,
+    ) -> Result<&mut Self, String> {
+        self.check(name, min_replicas, weight)?;
+        check_range(name, min_replicas, max_replicas, slo_ms)?;
+        let replicas: Vec<Arc<dyn EngineReplica>> =
+            (0..min_replicas).map(|_| factory()).collect::<Result<_, _>>()?;
+        self.entries.push(Entry {
+            name: name.to_string(),
+            preset: None,
+            geometry: None,
+            weight,
+            replicas,
+            min_replicas,
+            max_replicas,
+            slo_ms,
+            factory: Some(factory),
         });
         Ok(self)
     }
@@ -175,13 +331,54 @@ impl ModelRegistry {
             .and_then(|e| e.replicas.iter().map(|r| r.seq_len()).min())
     }
 
+    /// Replica range of `name` (`min..=max`).
+    pub fn replica_range(&self, name: &str) -> Option<(usize, usize)> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| (e.min_replicas, e.max_replicas))
+    }
+
+    /// Latency SLO of `name` in milliseconds, if configured.
+    pub fn slo_ms(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|e| e.name == name).and_then(|e| e.slo_ms)
+    }
+
     /// Consume the registry into router-ready model groups.
     pub fn into_groups(self) -> Vec<ModelGroup> {
         self.entries
             .into_iter()
-            .map(|e| ModelGroup { model: e.name, replicas: e.replicas, weight: e.weight })
+            .map(|e| ModelGroup {
+                model: e.name,
+                replicas: e.replicas,
+                weight: e.weight,
+                min_replicas: e.min_replicas,
+                max_replicas: e.max_replicas,
+                slo_ms: e.slo_ms,
+                factory: e.factory,
+            })
             .collect()
     }
+}
+
+/// Shared validation of an autoscale range.
+fn check_range(
+    name: &str,
+    min_replicas: usize,
+    max_replicas: usize,
+    slo_ms: Option<f64>,
+) -> Result<(), String> {
+    if max_replicas < min_replicas {
+        return Err(format!(
+            "model {name:?}: max replicas {max_replicas} below min {min_replicas}"
+        ));
+    }
+    if let Some(slo) = slo_ms {
+        if !(slo.is_finite() && slo > 0.0) {
+            return Err(format!("model {name:?}: SLO must be a positive latency, got {slo}"));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -215,6 +412,44 @@ mod tests {
         assert!(reg.register("z", "tiny", 1, 0, 7).is_err(), "zero weight");
         assert!(reg.register("", "tiny", 1, 1, 7).is_err(), "empty id");
         assert!(reg.register_group("g", vec![], 1).is_err(), "empty custom group");
+        assert!(
+            reg.register_scaled("r", "tiny", 3, 2, 1, Some(5.0), 7).is_err(),
+            "max below min"
+        );
+        assert!(
+            reg.register_scaled("r", "tiny", 1, 2, 1, Some(-1.0), 7).is_err(),
+            "negative SLO"
+        );
+        assert!(
+            reg.register_scaled("r", "tiny", 1, 2, 1, Some(f64::NAN), 7).is_err(),
+            "NaN SLO"
+        );
         assert_eq!(reg.len(), 1, "failed registrations leave no residue");
+    }
+
+    #[test]
+    fn scaled_registration_starts_at_min_and_carries_the_range() {
+        let mut reg = ModelRegistry::new();
+        reg.register_scaled("tiny", "tiny", 1, 4, 2, Some(12.5), 7).unwrap();
+        assert_eq!(reg.replica_range("tiny"), Some((1, 4)));
+        assert_eq!(reg.slo_ms("tiny"), Some(12.5));
+        assert_eq!(reg.replica_range("fixed"), None);
+        let groups = reg.into_groups();
+        let g = &groups[0];
+        assert_eq!(g.replicas.len(), 1, "the group starts at min replicas");
+        assert!(g.scalable());
+        // the factory spawns more identical replicas on demand
+        let extra = g.factory.as_ref().unwrap()().unwrap();
+        assert_eq!(extra.seq_len(), g.replicas[0].seq_len());
+        assert_eq!(extra.min_seq_len(), g.replicas[0].min_seq_len());
+    }
+
+    #[test]
+    fn fixed_groups_are_not_scalable() {
+        let mut reg = ModelRegistry::new();
+        reg.register("tiny", "tiny", 2, 1, 7).unwrap();
+        assert_eq!(reg.replica_range("tiny"), Some((2, 2)));
+        assert_eq!(reg.slo_ms("tiny"), None);
+        assert!(!reg.into_groups().remove(0).scalable());
     }
 }

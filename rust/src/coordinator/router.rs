@@ -1,17 +1,29 @@
-//! Request router: the front half of the parallel serving pipeline
-//! (DESIGN.md §2, §8).
+//! Request router: the front half of the concurrent serving pipeline
+//! (DESIGN.md §2, §8, §9).
 //!
 //! `submit` / `submit_to` enqueue requests into the dynamic [`Batcher`]
-//! (keyed by `(model, padded length)`; DESIGN.md §6, §8); a single
-//! dispatcher thread waits for the size-or-deadline policy to release a
-//! model-homogeneous dispatch group — chosen across models by the
-//! batcher's weighted-fair ledger — and hands it to the
-//! [`ReplicaPool`], which fans the group out across the owning model's
-//! replicas on the `util` thread pool.  The dispatcher blocks until the
-//! group completes (the pool's join), then takes the next group — so
-//! groups are pipelined back to back while requests inside a group run
-//! concurrently.
+//! (keyed by `(model, padded length)`; DESIGN.md §6, §8).  Every model
+//! group runs its *own* dispatcher thread: each waits for the
+//! size-or-deadline policy to release one of its model's dispatch
+//! groups (`Batcher::take_batch_for`, which charges the fairness
+//! ledger at pop time and tracks the group as in flight), hands it to
+//! its [`GroupRuntime`](super::pool::GroupRuntime), blocks on that
+//! group's private barrier, and reports completion — so a heavy
+//! model's group mid-flight never gates a cheap model's next dispatch
+//! (the PR 4 single-dispatcher serialization this revision removes).
+//! Within one group, groups still pipeline back to back while requests
+//! inside a group run concurrently across the group's replicas.  A
+//! one-group configuration degenerates to exactly the old serial
+//! pipeline (asserted bit-equivalent in tests).
+//!
+//! Alongside the dispatchers, one autoscaler thread ticks the
+//! SLO-aware control loop (`coordinator::autoscale`) over every
+//! scalable group: backlog-vs-SLO crossing the hysteresis thresholds
+//! grows the group toward `max_replicas` (factory spawn against the
+//! shared `Arc` weight bundle) or drains it back toward
+//! `min_replicas`.
 
+use super::autoscale::{tick_group, AutoscalePolicy, GroupScaleState};
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::EngineReplica;
 use super::metrics::Metrics;
@@ -73,7 +85,12 @@ struct Endpoint {
 pub struct Router {
     shared: Arc<Shared>,
     pub metrics: Arc<Metrics>,
-    dispatcher: Option<JoinHandle<()>>,
+    /// one dispatcher per model group, in model-index order
+    dispatchers: Vec<JoinHandle<()>>,
+    autoscaler: Option<JoinHandle<()>>,
+    /// kept alive for introspection (active replica counts in tests);
+    /// the dispatchers hold their own Arcs
+    pool: Arc<ReplicaPool>,
     next_id: AtomicU64,
     policy: BatchPolicy,
     endpoints: Vec<Endpoint>,
@@ -88,21 +105,29 @@ impl Router {
         policy: BatchPolicy,
         metrics: Arc<Metrics>,
     ) -> Router {
-        Router::start_multi(
-            vec![ModelGroup { model: "default".into(), replicas, weight: 1 }],
-            policy,
-            metrics,
-        )
+        Router::start_multi(vec![ModelGroup::fixed("default", replicas, 1)], policy, metrics)
     }
 
-    /// Start the multi-tenant serving pipeline: one named replica group
-    /// per model (typically [`super::ModelRegistry::into_groups`]), a
-    /// shared batcher keyed by `(model, padded length)` with the
-    /// groups' fair-share weights, and one dispatcher thread over one
-    /// pool of all replicas.
+    /// Start the multi-tenant serving pipeline with the default
+    /// autoscaler policy: one named replica group per model (typically
+    /// [`super::ModelRegistry::into_groups`]), a shared batcher keyed
+    /// by `(model, padded length)` with the groups' fair-share
+    /// weights, one dispatcher thread *per group*, and the SLO
+    /// autoscaler over every scalable group.
     pub fn start_multi(
         groups: Vec<ModelGroup>,
         policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+    ) -> Router {
+        Router::start_multi_with(groups, policy, AutoscalePolicy::default(), metrics)
+    }
+
+    /// [`start_multi`](Router::start_multi) with explicit autoscaler
+    /// tuning (tests pin fast ticks, benches pin the control cadence).
+    pub fn start_multi_with(
+        groups: Vec<ModelGroup>,
+        policy: BatchPolicy,
+        autoscale: AutoscalePolicy,
         metrics: Arc<Metrics>,
     ) -> Router {
         assert!(!groups.is_empty(), "router needs at least one model group");
@@ -134,20 +159,43 @@ impl Router {
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
-        let pool = ReplicaPool::new_multi(groups, Arc::clone(&metrics));
-        let sh = Arc::clone(&shared);
-        let dispatcher = std::thread::Builder::new()
-            .name("swifttron-dispatch".into())
-            .spawn(move || dispatch_loop(sh, pool))
-            .expect("spawn dispatcher");
+        let pool = Arc::new(ReplicaPool::new_multi(groups, Arc::clone(&metrics)));
+        let dispatchers = (0..pool.group_count())
+            .map(|g| {
+                let sh = Arc::clone(&shared);
+                let rt = Arc::clone(pool.group(g).expect("group exists"));
+                std::thread::Builder::new()
+                    .name(format!("swifttron-dispatch-{}", rt.model()))
+                    .spawn(move || dispatch_group_loop(sh, rt))
+                    .expect("spawn dispatcher")
+            })
+            .collect();
+        let autoscaler = {
+            let sh = Arc::clone(&shared);
+            let pool = Arc::clone(&pool);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("swifttron-autoscale".into())
+                .spawn(move || autoscale_loop(sh, pool, metrics, autoscale))
+                .expect("spawn autoscaler")
+        };
         Router {
             shared,
             metrics,
-            dispatcher: Some(dispatcher),
+            dispatchers,
+            autoscaler: Some(autoscaler),
+            pool,
             next_id: AtomicU64::new(0),
             policy,
             endpoints,
         }
+    }
+
+    /// Active replicas currently serving `model` (autoscaler gauge read
+    /// straight off the group runtime).
+    pub fn active_replicas(&self, model: &str) -> Option<usize> {
+        let idx = self.endpoints.iter().position(|e| e.name == model)?;
+        self.pool.group(idx).map(|g| g.active_replicas())
     }
 
     /// Registered model ids, in model-index order.
@@ -219,7 +267,11 @@ impl Router {
         if len >= ep.min_len.max(1) && len <= ep.max_len {
             self.metrics.record_tokens(model, len, padded.min(ep.max_len));
         }
-        self.shared.available.notify_one();
+        // notify_all, not notify_one: every model group parks on this
+        // condvar, and a single wakeup could land on another model's
+        // dispatcher, leaving the submitted request to wait out the
+        // owner's full park timeout.
+        self.shared.available.notify_all();
         id
     }
 
@@ -227,46 +279,101 @@ impl Router {
         self.shared.batcher.lock().unwrap().len()
     }
 
-    /// Drain the queue and stop the pipeline (joins the dispatcher,
-    /// which in turn joins the replica pool's threads on drop).
+    /// Drain the queue and stop the pipeline: every per-group
+    /// dispatcher finishes its model's backlog and is joined (each
+    /// group runtime's executor threads join on drop), then the
+    /// autoscaler.  No submitted request is lost — anything queued
+    /// before this call is dispatched and replied to (property-tested
+    /// in `rust/tests/prop_invariants.rs`).
     pub fn shutdown(mut self) {
-        // The flag must flip while holding the mutex the dispatcher's
-        // condvar predicate is checked under, or a store between the
-        // predicate check and wait_timeout loses the wakeup and the
-        // drain stalls for up to max_wait.
+        // The flag must flip while holding the mutex the dispatchers'
+        // condvar predicate is checked under, or a store between a
+        // predicate check and wait_timeout loses the wakeup and that
+        // group's drain stalls for up to max_wait.
         {
             let _b = self.shared.batcher.lock().unwrap();
             self.shared.shutdown.store(true, Ordering::SeqCst);
         }
         self.shared.available.notify_all();
-        if let Some(d) = self.dispatcher.take() {
+        for d in self.dispatchers.drain(..) {
             let _ = d.join();
+        }
+        if let Some(a) = self.autoscaler.take() {
+            let _ = a.join();
         }
     }
 }
 
-fn dispatch_loop(sh: Arc<Shared>, pool: ReplicaPool) {
+/// One model group's dispatcher: pop own-model groups from the shared
+/// batcher (charging fairness at pop time), run each on the group's
+/// private runtime barrier, report completion.  On shutdown it drains
+/// its model's remaining backlog before exiting, so no queued request
+/// is ever dropped.
+fn dispatch_group_loop(sh: Arc<Shared>, rt: Arc<super::pool::GroupRuntime>) {
+    let g = rt.model_index();
     loop {
         let group = {
             let mut b = sh.batcher.lock().unwrap();
             loop {
                 let shutting = sh.shutdown.load(Ordering::SeqCst);
-                if b.is_empty() && shutting {
+                let queued = b.queued_for(g);
+                if queued == 0 && shutting {
                     return;
                 }
-                if b.ready(Instant::now()) || (shutting && !b.is_empty()) {
-                    break b.take_batch();
+                if b.ready_for(g, Instant::now()) || (shutting && queued > 0) {
+                    break b.take_batch_for(g);
                 }
-                // park_duration never panics, whatever the queue did
-                // between the predicate check and here (drained by a
-                // racing shutdown flush, refilled by a submit): empty
-                // queues park the bounded default, expired deadlines
-                // park zero.
-                let timeout = b.park_duration(Instant::now());
+                // park_duration_for never panics, whatever the queue
+                // did between the predicate check and here: an empty
+                // model queue parks the bounded default, expired
+                // deadlines park zero.
+                let timeout = b.park_duration_for(g, Instant::now());
                 let (guard, _) = sh.available.wait_timeout(b, timeout).unwrap();
                 b = guard;
             }
         };
-        pool.dispatch(group);
+        let n = group.len();
+        rt.dispatch(group);
+        // Completion report closes the pop's in-flight window: the
+        // fairness epoch may reset and the autoscaler's backlog signal
+        // drops only once the group has actually drained.
+        sh.batcher.lock().unwrap().complete(g, n);
+    }
+}
+
+/// The SLO autoscaler control loop: every `policy.interval`, sample
+/// each scalable group's backlog (queued + in flight, under one short
+/// batcher lock) and apply the hysteresis decision
+/// (`coordinator::autoscale`).  Exits when the router shuts down.
+fn autoscale_loop(
+    sh: Arc<Shared>,
+    pool: Arc<ReplicaPool>,
+    metrics: Arc<Metrics>,
+    policy: AutoscalePolicy,
+) {
+    let scalable: Vec<_> = pool.groups().iter().filter(|g| g.scalable()).cloned().collect();
+    if scalable.is_empty() {
+        // Nothing to manage (the common fixed-size configuration):
+        // exit instead of waking every interval for the router's whole
+        // lifetime.
+        return;
+    }
+    let mut states: Vec<GroupScaleState> =
+        scalable.iter().map(|_| GroupScaleState::new()).collect();
+    while !sh.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(policy.interval);
+        let backlog: Vec<usize> = {
+            let b = sh.batcher.lock().unwrap();
+            scalable
+                .iter()
+                .map(|rt| {
+                    let g = rt.model_index();
+                    b.queued_for(g) + b.in_flight_for(g)
+                })
+                .collect()
+        };
+        for (i, rt) in scalable.iter().enumerate() {
+            tick_group(rt, &mut states[i], backlog[i], &metrics, &policy);
+        }
     }
 }

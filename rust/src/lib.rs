@@ -21,15 +21,17 @@
 //!   functional replicas instead.
 //! * [`model`] — geometry, weights, and scale metadata shared by all of the
 //!   above (read from the artifact manifest).
-//! * [`coordinator`] — the multi-tenant parallel serving pipeline
-//!   (DESIGN.md §2, §6, §8): a model registry (named geometry presets
-//!   with per-model replica groups and fair-share weights) in front of
-//!   a request router + dynamic batcher (dispatch groups keyed by
-//!   `(model, padded length)`, weighted-fair across models, padding
-//!   waste metered per model) feeding a pool of named replica groups on
-//!   the in-repo thread pool, with per-replica and per-model
-//!   virtual-time (simulated cycle) accounting next to wall-clock
-//!   throughput.
+//! * [`coordinator`] — the multi-tenant concurrent serving pipeline
+//!   (DESIGN.md §2, §6, §8, §9): a model registry (named geometry
+//!   presets with per-model replica groups, fair-share weights,
+//!   `min..=max` replica ranges and SLO classes) in front of a request
+//!   router + dynamic batcher (dispatch groups keyed by `(model,
+//!   padded length)`, weighted-fair across models, padding waste
+//!   metered per model) feeding per-model group runtimes — one
+//!   dispatcher thread and one private executor per group, replica
+//!   counts moved by an SLO-aware backlog autoscaler — with
+//!   per-replica and per-model virtual-time (simulated cycle) and
+//!   latency accounting next to wall-clock throughput.
 //! * [`util`] — in-repo substrates (RNG, JSON, CLI, thread pool, property
 //!   testing, stats): the offline crate set has no tokio/clap/serde/etc.
 

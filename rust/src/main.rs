@@ -49,8 +49,10 @@ fn usage() -> String {
      \x20 infer    --tokens 1,2,3,...      one tiny-task inference via PJRT\n\
      \x20 serve    --addr 127.0.0.1:7077   TCP serving front-end\n\
      \x20          [--replicas N --max-batch B --engine pjrt|functional]\n\
-     \x20          [--models name=preset[:replicas[:weight]],...]   multi-tenant\n\
-     \x20          (request lines may carry a model prefix: \"tiny:3,17,42\")\n\
+     \x20          [--models name=preset[:min-max[:weight[:slo_ms]]],...]  multi-tenant\n\
+     \x20          (replicas as N pins the group; MIN-MAX + slo_ms enables the\n\
+     \x20           SLO autoscaler; request lines may carry a model prefix:\n\
+     \x20           \"tiny:3,17,42\")\n\
      \x20 report                           full paper reproduction summary\n"
         .into()
 }
@@ -163,24 +165,58 @@ fn cmd_infer(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Parse one `--models` entry: `name=preset[:replicas[:weight]]`.
-fn parse_model_spec(part: &str) -> Result<(String, String, usize, u64), String> {
-    let bad = || format!("bad model spec {part:?} (want name=preset[:replicas[:weight]])");
+/// One parsed `--models` entry.
+struct ModelSpec {
+    name: String,
+    preset: String,
+    min_replicas: usize,
+    max_replicas: usize,
+    weight: u64,
+    slo_ms: Option<f64>,
+}
+
+/// Parse one `--models` entry: `name=preset[:min-max[:weight[:slo_ms]]]`.
+/// The replica field accepts a plain `N` (fixed group, the PR 4 form)
+/// or a `MIN-MAX` range the SLO autoscaler moves within; `slo_ms` is
+/// the model's target latency class in milliseconds.
+fn parse_model_spec(part: &str) -> Result<ModelSpec, String> {
+    let bad =
+        || format!("bad model spec {part:?} (want name=preset[:min-max[:weight[:slo_ms]]])");
     let (name, rest) = part.split_once('=').ok_or_else(bad)?;
     let mut it = rest.split(':');
     let preset = it.next().ok_or_else(bad)?.trim().to_string();
-    let replicas = match it.next() {
-        Some(s) => s.trim().parse::<usize>().map_err(|_| bad())?,
-        None => 1,
+    let (min_replicas, max_replicas) = match it.next() {
+        Some(s) => match s.trim().split_once('-') {
+            Some((lo, hi)) => (
+                lo.trim().parse::<usize>().map_err(|_| bad())?,
+                hi.trim().parse::<usize>().map_err(|_| bad())?,
+            ),
+            None => {
+                let n = s.trim().parse::<usize>().map_err(|_| bad())?;
+                (n, n)
+            }
+        },
+        None => (1, 1),
     };
     let weight = match it.next() {
         Some(s) => s.trim().parse::<u64>().map_err(|_| bad())?,
         None => 1,
     };
+    let slo_ms = match it.next() {
+        Some(s) => Some(s.trim().parse::<f64>().map_err(|_| bad())?),
+        None => None,
+    };
     if it.next().is_some() {
         return Err(bad());
     }
-    Ok((name.trim().to_string(), preset, replicas, weight))
+    Ok(ModelSpec {
+        name: name.trim().to_string(),
+        preset,
+        min_replicas,
+        max_replicas,
+        weight,
+        slo_ms,
+    })
 }
 
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
@@ -192,7 +228,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         .opt(
             "models",
             "",
-            "multi-tenant spec name=preset[:replicas[:weight]],... (functional backend)",
+            "multi-tenant spec name=preset[:min-max[:weight[:slo_ms]]],... (functional backend)",
         )
         .parse(rest)?;
     let metrics = Arc::new(Metrics::new());
@@ -211,8 +247,16 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         }
         let mut reg = ModelRegistry::new();
         for part in p.get("models").split(',') {
-            let (name, preset, replicas, weight) = parse_model_spec(part.trim())?;
-            reg.register(&name, &preset, replicas, weight, 7)?;
+            let spec = parse_model_spec(part.trim())?;
+            reg.register_scaled(
+                &spec.name,
+                &spec.preset,
+                spec.min_replicas,
+                spec.max_replicas,
+                spec.weight,
+                spec.slo_ms,
+                7,
+            )?;
         }
         let router = Arc::new(Router::start_multi(reg.into_groups(), policy, metrics));
         return swifttron::coordinator::server::serve(router, p.get("addr"));
@@ -247,4 +291,34 @@ fn cmd_report(_rest: &[String]) -> Result<(), String> {
     cmd_synth(&[])?;
     println!();
     cmd_compare(&[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_model_spec;
+
+    #[test]
+    fn model_spec_parses_fixed_and_ranged_forms() {
+        // bare preset: one pinned replica, weight 1, no SLO
+        let s = parse_model_spec("tiny=tiny").unwrap();
+        assert_eq!((s.min_replicas, s.max_replicas, s.weight, s.slo_ms), (1, 1, 1, None));
+        // the PR 4 fixed form still parses
+        let s = parse_model_spec("a=roberta_base:3:2").unwrap();
+        assert_eq!(s.preset, "roberta_base");
+        assert_eq!((s.min_replicas, s.max_replicas, s.weight, s.slo_ms), (3, 3, 2, None));
+        // the autoscaled form: min-max range + SLO class
+        let s = parse_model_spec(" big = roberta_base : 1-4 : 2 : 25.5 ").unwrap();
+        assert_eq!(s.name, "big");
+        assert_eq!((s.min_replicas, s.max_replicas, s.weight), (1, 4, 2));
+        assert_eq!(s.slo_ms, Some(25.5));
+    }
+
+    #[test]
+    fn model_spec_rejects_malformed_entries() {
+        assert!(parse_model_spec("noequals").is_err());
+        assert!(parse_model_spec("a=p:x").is_err(), "non-numeric replicas");
+        assert!(parse_model_spec("a=p:1-x").is_err(), "non-numeric max");
+        assert!(parse_model_spec("a=p:1:2:bad").is_err(), "non-numeric slo");
+        assert!(parse_model_spec("a=p:1:2:3:4").is_err(), "trailing field");
+    }
 }

@@ -1,0 +1,360 @@
+//! Concurrent per-group dispatch + SLO-aware autoscaling integration
+//! tests (ISSUE 5, DESIGN.md §9): the acceptance claims — an
+//! autoscaled group grows to `max` under saturating backlog and drains
+//! back to `min` when load stops with zero request loss, a cheap
+//! model's tail latency decouples from a heavy model's groups versus
+//! the serial single-dispatcher baseline, and the one-group
+//! configuration of the per-group pipeline stays bit-equivalent to the
+//! serial dispatch path.
+//!
+//! Mock engines with pinned service times keep every claim
+//! deterministic-by-construction (generous factors absorb scheduler
+//! noise); the real-preset traffic runs in `multi_model.rs` and the
+//! `serving_scaling` bench's concurrency leg.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use swifttron::coordinator::{
+    AutoscalePolicy, BatchPolicy, Batcher, EngineReplica, FunctionalEngine, Metrics,
+    ModelRegistry, Prediction, ReplicaFactory, ReplicaPool, Request, RequestError, Router,
+};
+use swifttron::sim::HwConfig;
+
+/// Deterministic mock replica: fixed service time, label = first token.
+struct TimedReplica {
+    delay: Duration,
+}
+
+impl EngineReplica for TimedReplica {
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
+        if tokens.is_empty() {
+            return Err(RequestError::BadLength { got: 0, min: 1, max: 1 << 20 });
+        }
+        std::thread::sleep(self.delay);
+        Ok(Prediction {
+            label: tokens[0] as usize % 2,
+            logits: vec![tokens[0] as i64, tokens.len() as i64],
+            accel_cycles: 100,
+            accel_ms: 0.001,
+        })
+    }
+
+    fn seq_len(&self) -> usize {
+        1 << 20
+    }
+
+    fn min_seq_len(&self) -> usize {
+        1
+    }
+}
+
+fn timed_factory(delay_ms: u64, spawned: Arc<AtomicUsize>) -> ReplicaFactory {
+    Arc::new(move || {
+        spawned.fetch_add(1, Ordering::SeqCst);
+        Ok(Arc::new(TimedReplica { delay: Duration::from_millis(delay_ms) })
+            as Arc<dyn EngineReplica>)
+    })
+}
+
+fn fast_autoscale() -> AutoscalePolicy {
+    AutoscalePolicy {
+        interval: Duration::from_millis(2),
+        grow_ratio: 1.0,
+        shrink_ratio: 0.25,
+        hold_ticks: 1,
+        default_service_ms: 1.0,
+    }
+}
+
+/// Poll `f` until it holds or `timeout` elapses; returns whether it
+/// held.
+fn eventually(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    f()
+}
+
+#[test]
+fn autoscaler_grows_to_max_under_backlog_and_drains_to_min_without_loss() {
+    // The ISSUE 5 acceptance claim: saturating backlog against a 10 ms
+    // SLO on 3 ms-per-request replicas grows the group 1 -> 4; once
+    // the flood is fully served the idle backlog drains it 4 -> 1; no
+    // request is lost or errored anywhere in between.
+    const REQUESTS: usize = 240;
+    let spawned = Arc::new(AtomicUsize::new(0));
+    let mut reg = ModelRegistry::new();
+    reg.register_group_scaled(
+        "slow",
+        1,
+        4,
+        1,
+        Some(10.0),
+        timed_factory(3, Arc::clone(&spawned)),
+    )
+    .unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let policy =
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500), bucket_width: 0 };
+    let router =
+        Router::start_multi_with(reg.into_groups(), policy, fast_autoscale(), Arc::clone(&metrics));
+    assert_eq!(router.active_replicas("slow"), Some(1), "group starts at min");
+
+    let receivers: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            let (tx, rx) = channel();
+            router.submit_to("slow", vec![i as i32 % 50, 1, 2], tx);
+            rx
+        })
+        .collect();
+
+    assert!(
+        eventually(Duration::from_secs(10), || router.active_replicas("slow") == Some(4)),
+        "backlogged group never grew to max (at {:?})",
+        router.active_replicas("slow")
+    );
+    // every request answered exactly once, none errored, none lost —
+    // scaling actions mid-flight must not drop work
+    for (i, rx) in receivers.iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+    }
+    // load stopped: the idle backlog drains the group back to min
+    assert!(
+        eventually(Duration::from_secs(10), || router.active_replicas("slow") == Some(1)),
+        "idle group never drained to min (at {:?})",
+        router.active_replicas("slow")
+    );
+    router.shutdown();
+
+    let stats = metrics.model(0);
+    assert_eq!(stats.completed.load(Ordering::SeqCst), REQUESTS as u64);
+    assert_eq!(stats.errors.load(Ordering::SeqCst), 0);
+    assert_eq!(stats.backlog.load(Ordering::SeqCst), 0, "backlog gauge settled");
+    assert!(
+        stats.scale_ups.load(Ordering::SeqCst) >= 3,
+        "grew at least min..max"
+    );
+    assert!(stats.scale_downs.load(Ordering::SeqCst) >= 3, "drained back down");
+    assert!(
+        spawned.load(Ordering::SeqCst) >= 4,
+        "factory spawned the grown replicas (plus the initial one)"
+    );
+    // the per-model latency ledger saw every completion
+    assert_eq!(stats.e2e_s.lock().unwrap().len(), REQUESTS);
+}
+
+#[test]
+fn groups_without_slo_never_scale() {
+    let spawned = Arc::new(AtomicUsize::new(0));
+    let mut reg = ModelRegistry::new();
+    // max > min but no SLO: the autoscaler must leave the group alone
+    reg.register_group_scaled("fixed", 1, 4, 1, None, timed_factory(1, Arc::clone(&spawned)))
+        .unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let policy =
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(500), bucket_width: 0 };
+    let router =
+        Router::start_multi_with(reg.into_groups(), policy, fast_autoscale(), Arc::clone(&metrics));
+    let receivers: Vec<_> = (0..64)
+        .map(|i| {
+            let (tx, rx) = channel();
+            router.submit_to("fixed", vec![i as i32 % 50], tx);
+            rx
+        })
+        .collect();
+    for rx in receivers {
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().error.is_none());
+    }
+    assert_eq!(router.active_replicas("fixed"), Some(1));
+    router.shutdown();
+    assert_eq!(metrics.model(0).scale_ups.load(Ordering::SeqCst), 0);
+    assert_eq!(spawned.load(Ordering::SeqCst), 1, "only the initial replica was built");
+}
+
+#[test]
+fn cheap_model_p99_decouples_from_heavy_groups() {
+    // The tentpole claim at test scale: heavy (20 ms/request) and tiny
+    // (1 ms/request) groups with disjoint replicas, saturating mixed
+    // traffic submitted up front.  The serial single-dispatcher
+    // baseline interleaves tiny groups behind heavy group barriers, so
+    // tiny's p99 inherits heavy's service time; the per-group pipeline
+    // runs tiny's dispatches concurrently and its p99 collapses.  The
+    // acceptance bound is >= 2x; the construction yields far more.
+    const HEAVY: usize = 12; // 3 groups x 4 x 20 ms = 240 ms of heavy work
+    const TINY: usize = 48; // 12 groups x 4 x 1 ms
+    let policy =
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200), bucket_width: 0 };
+
+    let build_groups = || {
+        let mut reg = ModelRegistry::new();
+        reg.register_group(
+            "heavy",
+            vec![Arc::new(TimedReplica { delay: Duration::from_millis(20) })
+                as Arc<dyn EngineReplica>],
+            1,
+        )
+        .unwrap();
+        reg.register_group(
+            "tiny",
+            vec![Arc::new(TimedReplica { delay: Duration::from_millis(1) })
+                as Arc<dyn EngineReplica>],
+            1,
+        )
+        .unwrap();
+        reg.into_groups()
+    };
+
+    // -- serial baseline: one dispatcher over both models ------------
+    let serial_metrics = Arc::new(Metrics::new());
+    serial_metrics.ensure_models(&[("heavy", 1), ("tiny", 1)]);
+    let pool = ReplicaPool::new_multi(build_groups(), Arc::clone(&serial_metrics));
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    batcher.set_model_weights(&[1, 1]);
+    let mut receivers = Vec::new();
+    let mut id = 0u64;
+    for i in 0..TINY {
+        // interleave so both models stay backlogged from the start
+        if i < HEAVY {
+            let (tx, rx) = channel();
+            id += 1;
+            batcher.push_keyed(
+                Request {
+                    id,
+                    model: 0,
+                    tokens: vec![1; 4],
+                    padded_len: 4,
+                    submitted: Instant::now(),
+                    reply: tx,
+                },
+                0,
+                4,
+            );
+            receivers.push(rx);
+        }
+        let (tx, rx) = channel();
+        id += 1;
+        batcher.push_keyed(
+            Request {
+                id,
+                model: 1,
+                tokens: vec![1; 1],
+                padded_len: 1,
+                submitted: Instant::now(),
+                reply: tx,
+            },
+            1,
+            1,
+        );
+        receivers.push(rx);
+    }
+    while !batcher.is_empty() {
+        let group = batcher.take_batch();
+        assert!(!group.is_empty());
+        pool.dispatch(group);
+    }
+    drop(receivers);
+    let (_, serial_tiny_p99) = serial_metrics.model(1).e2e_percentiles_ms();
+
+    // -- concurrent per-group pipeline over identical traffic --------
+    let conc_metrics = Arc::new(Metrics::new());
+    let router = Router::start_multi(build_groups(), policy, Arc::clone(&conc_metrics));
+    let mut receivers = Vec::new();
+    for i in 0..TINY {
+        if i < HEAVY {
+            let (tx, rx) = channel();
+            router.submit_to("heavy", vec![1; 4], tx);
+            receivers.push(rx);
+        }
+        let (tx, rx) = channel();
+        router.submit_to("tiny", vec![1; 1], tx);
+        receivers.push(rx);
+    }
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    router.shutdown();
+    let (_, conc_tiny_p99) = conc_metrics.model(1).e2e_percentiles_ms();
+
+    assert!(
+        serial_tiny_p99 >= 2.0 * conc_tiny_p99,
+        "tiny p99 serial {serial_tiny_p99:.3} ms vs concurrent {conc_tiny_p99:.3} ms — \
+         expected >= 2x improvement"
+    );
+    // the heavy model was NOT starved to achieve it: all its requests
+    // completed in both runs
+    assert_eq!(
+        conc_metrics.model(0).completed.load(Ordering::SeqCst),
+        HEAVY as u64
+    );
+}
+
+#[test]
+fn one_group_pipeline_is_bit_equivalent_to_serial_dispatch() {
+    // The degenerate configuration the tentpole preserves: with one
+    // model group, the per-group pipeline must produce byte-identical
+    // predictions to driving the batcher + pool serially by hand.
+    let preset = "tiny";
+    let seed = 7;
+    let hw = HwConfig::sized_to(&swifttron::model::Geometry::preset(preset).unwrap());
+    let make_replicas = || {
+        FunctionalEngine::replica_group(preset, seed, hw, 2).unwrap()
+    };
+    let lens: Vec<usize> = (0..24).map(|i| 1 + (i * 5) % 32).collect();
+    let tokens_of = |len: usize| -> Vec<i32> { (0..len).map(|t| (t * 7 % 50) as i32).collect() };
+
+    // serial: hand-driven batcher + pool
+    let serial_metrics = Arc::new(Metrics::new());
+    let pool = ReplicaPool::new(make_replicas(), Arc::clone(&serial_metrics));
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::ZERO, bucket_width: 8 };
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    let mut serial_rx = Vec::new();
+    for (i, &len) in lens.iter().enumerate() {
+        let (tx, rx) = channel();
+        batcher.push_keyed(
+            Request {
+                id: i as u64,
+                model: 0,
+                tokens: tokens_of(len),
+                padded_len: policy.padded_len(len),
+                submitted: Instant::now(),
+                reply: tx,
+            },
+            0,
+            len,
+        );
+        serial_rx.push(rx);
+    }
+    while !batcher.is_empty() {
+        pool.dispatch(batcher.take_batch());
+    }
+    let serial: Vec<_> = serial_rx.iter().map(|rx| rx.recv().unwrap()).collect();
+
+    // concurrent pipeline, one group == one dispatcher
+    let conc_metrics = Arc::new(Metrics::new());
+    let router = Router::start(make_replicas(), policy, conc_metrics);
+    let conc_rx: Vec<_> = lens
+        .iter()
+        .map(|&len| {
+            let (tx, rx) = channel();
+            router.submit(tokens_of(len), tx);
+            rx
+        })
+        .collect();
+    let concurrent: Vec<_> =
+        conc_rx.iter().map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap()).collect();
+    router.shutdown();
+
+    for (s, c) in serial.iter().zip(&concurrent) {
+        assert!(s.error.is_none() && c.error.is_none());
+        assert_eq!(s.label, c.label, "labels diverged between pipelines");
+        assert_eq!(s.logits, c.logits, "logits diverged between pipelines");
+    }
+}

@@ -115,8 +115,8 @@ fn mixed_preset_traffic_shares_converge_to_weights() {
     // fixed number of groups each model's share of served padded
     // tokens must sit within 10% of its weight share.  The loop drives
     // the real batcher + registry replica groups + pool + metrics —
-    // only the dispatcher thread is bypassed so the measurement window
-    // is deterministic.
+    // only the dispatcher threads are bypassed so the measurement
+    // window is deterministic.
     let weights: [u64; 3] = [2, 1, 1];
     let mut reg = ModelRegistry::new();
     reg.register("tiny", "tiny", 1, weights[0], 7).unwrap();

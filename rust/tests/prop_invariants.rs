@@ -1,8 +1,9 @@
 //! Property-based tests (in-repo `util::prop` framework) on coordinator
 //! and datapath invariants: batching (no loss, FIFO, bounds), the
 //! multi-model weighted-fair scheduler (homogeneous groups, expiry
-//! priority, share convergence; DESIGN.md §8), and the
-//! integer-arithmetic laws the hardware relies on.
+//! priority, share convergence; DESIGN.md §8), the concurrent
+//! per-group pipeline's shutdown no-loss property (DESIGN.md §9), and
+//! the integer-arithmetic laws the hardware relies on.
 
 use std::time::Duration;
 use swifttron::coordinator::batcher::{BatchPolicy, Batcher};
@@ -211,6 +212,113 @@ fn prop_served_token_shares_converge_to_configured_weights() {
                 let target = ws[m] as f64 / total_w as f64;
                 (share - target).abs() <= 0.1 * target + 1e-9
             })
+        },
+    );
+}
+
+#[test]
+fn prop_concurrent_router_shutdown_loses_nothing() {
+    // The ISSUE 5 no-loss property extended to the concurrent
+    // pipeline: random multi-group configurations under racing
+    // producers, shut down while groups are mid-flight — every
+    // submitted request must receive exactly one response (the
+    // per-group dispatchers drain their own backlogs before joining).
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+    use swifttron::coordinator::{
+        EngineReplica, Metrics, ModelRegistry, Prediction, RequestError, Router,
+    };
+
+    struct Jittery {
+        delay_us: u64,
+    }
+    impl EngineReplica for Jittery {
+        fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
+            std::thread::sleep(Duration::from_micros(self.delay_us));
+            Ok(Prediction {
+                label: tokens.len() % 2,
+                logits: vec![tokens.len() as i64],
+                accel_cycles: 1,
+                accel_ms: 0.001,
+            })
+        }
+        fn seq_len(&self) -> usize {
+            64
+        }
+        fn min_seq_len(&self) -> usize {
+            1
+        }
+    }
+
+    check(
+        34,
+        8,
+        |r| {
+            let models = 1 + r.below(3) as i64; // 1..=3 groups
+            let requests = r.below(120) as i64;
+            (models, requests)
+        },
+        |&(models, requests)| {
+            let models = 1 + ((models.unsigned_abs() as usize).max(1) - 1) % 3;
+            let requests = (requests.unsigned_abs() as usize) % 120;
+            let mut reg = ModelRegistry::new();
+            for m in 0..models {
+                let replicas: Vec<Arc<dyn EngineReplica>> = (0..1 + m % 2)
+                    .map(|_| {
+                        Arc::new(Jittery { delay_us: 200 * (m as u64 + 1) })
+                            as Arc<dyn EngineReplica>
+                    })
+                    .collect();
+                reg.register_group(&format!("m{m}"), replicas, 1 + m as u64).unwrap();
+            }
+            let names: Vec<String> = (0..models).map(|m| format!("m{m}")).collect();
+            let policy = BatchPolicy {
+                max_batch: 3,
+                max_wait: Duration::from_micros(300),
+                bucket_width: 8,
+            };
+            let router = Arc::new(Router::start_multi(
+                reg.into_groups(),
+                policy,
+                Arc::new(Metrics::new()),
+            ));
+            // two racing producers, then shutdown with groups mid-flight
+            let mut handles = Vec::new();
+            let (coll_tx, coll_rx) = channel();
+            for p in 0..2usize {
+                let router = Arc::clone(&router);
+                let names = names.clone();
+                let coll_tx = coll_tx.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..requests / 2 {
+                        let model = &names[(p + i) % names.len()];
+                        let len = 1 + (i * 7 + p) % 20;
+                        let (tx, rx) = channel();
+                        router.submit_to(model, vec![1; len], tx);
+                        coll_tx.send(rx).unwrap();
+                    }
+                }));
+            }
+            drop(coll_tx);
+            for h in handles {
+                h.join().unwrap();
+            }
+            let receivers: Vec<_> = coll_rx.iter().collect();
+            let submitted = receivers.len();
+            // shutdown races the in-flight groups: the drain must not
+            // drop any of them
+            match Arc::try_unwrap(router) {
+                Ok(r) => r.shutdown(),
+                Err(_) => return false, // producers joined; cannot happen
+            }
+            let mut answered = 0usize;
+            for rx in receivers {
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(resp) if resp.error.is_none() => answered += 1,
+                    _ => return false, // lost or errored request
+                }
+            }
+            answered == submitted
         },
     );
 }
