@@ -27,10 +27,10 @@ done
 echo "  total: $((SECONDS-suite_start))s"
 
 # Timing-sensitive suites (the autoscaler control loop, per-model
-# latency/p99 assertions) re-run under --release, where debug-build
-# slowness cannot eat the timing margins.
+# latency/p99 assertions, the chaos recovery legs) re-run under
+# --release, where debug-build slowness cannot eat the timing margins.
 echo "-- release leg: timing-sensitive autoscaler/latency tests --"
-for t in autoscale prop_invariants; do
+for t in autoscale chaos prop_invariants; do
   t_start=$SECONDS
   cargo test -q --release --test "$t"
   row="  $t (release): $((SECONDS-t_start))s"
@@ -45,6 +45,18 @@ echo "-- serving bench smoke leg --"
 t_start=$SECONDS
 cargo bench --bench serving_scaling -- --smoke
 row="  serving_scaling --smoke: $((SECONDS-t_start))s"
+timing_rows+=("$row")
+echo "$row"
+
+# Open-loop workload smoke leg: replays seeded arrival traces with the
+# chaos legs (panic / straggler / 50x spike), merges the `openloop` key
+# into BENCH_serving.json, and exits non-zero if the run drifts from the
+# committed BENCH_smoke.json schema or regresses a leg past its bound
+# (rebaseline with `-- --smoke --update` after an intentional change).
+echo "-- open-loop workload smoke leg --"
+t_start=$SECONDS
+cargo bench --bench serving_openloop -- --smoke
+row="  serving_openloop --smoke: $((SECONDS-t_start))s"
 timing_rows+=("$row")
 echo "$row"
 

@@ -1,0 +1,530 @@
+//! Open-loop serving bench (EXPERIMENTS.md §Workload, DESIGN.md §10):
+//! latency under *offered* load — seeded arrival traces replayed against
+//! the serving pipeline at their recorded timestamps, whether or not
+//! earlier requests have completed — plus the three chaos legs: a
+//! replica that panics mid-batch, a 10x straggler replica, and a tenant
+//! whose rate suddenly 50x's.
+//!
+//! Run: `cargo bench --bench serving_openloop` — or with `-- --smoke`
+//! for the CI-sized subset.  All legs are seeded and deterministic in
+//! the *arrival streams*; latencies carry host scheduling noise, which
+//! the smoke bounds absorb (see below).
+//!
+//! Results merge under the `openloop` key of `BENCH_serving.json`
+//! (sibling legs from serving_scaling are preserved).  `--smoke`
+//! additionally checks the run against the committed `BENCH_smoke.json`
+//! snapshot and exits non-zero on schema drift or a leg regressing past
+//! its bound (latency keys: 2x committed + 5 ms; recovery: committed +
+//! 0.25 s; throughput keys: half of committed).  After an intentional
+//! perf change, rebaseline with
+//! `cargo bench --bench serving_openloop -- --smoke --update`.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use swifttron::coordinator::{
+    AutoscalePolicy, BatchPolicy, EngineReplica, Metrics, ModelRegistry, ReplicaFactory, Router,
+};
+use swifttron::util::bench::{merge_bench_json, Table};
+use swifttron::util::json::{obj, Json};
+use swifttron::workload::{replay, ArrivalProcess, ChaosReplica, DelayReplica, RateSpike, Trace};
+
+/// Mock service time per request; one replica serves 1000/SERVICE_MS
+/// requests per second.
+const SERVICE_MS: u64 = 2;
+/// Per-replica service rate µ (req/s) implied by [`SERVICE_MS`].
+const MU: f64 = 1000.0 / SERVICE_MS as f64;
+/// Post-submission drain budget; a leg that cannot drain within this is
+/// a lost-reply bug, not a slow run.
+const DRAIN: Duration = Duration::from_secs(30);
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(500), bucket_width: 0 }
+}
+
+fn fast_autoscale() -> AutoscalePolicy {
+    AutoscalePolicy {
+        interval: Duration::from_millis(2),
+        grow_ratio: 1.0,
+        shrink_ratio: 0.25,
+        hold_ticks: 1,
+        default_service_ms: 1.0,
+    }
+}
+
+/// Router with `tenants` single-replica fixed groups named `tenant{i}`.
+fn fixed_router(tenants: usize, metrics: &Arc<Metrics>) -> Router {
+    let mut reg = ModelRegistry::new();
+    for i in 0..tenants {
+        let name = format!("tenant{i}");
+        reg.register_group(
+            &name,
+            vec![Arc::new(DelayReplica::from_ms(SERVICE_MS)) as Arc<dyn EngineReplica>],
+            1,
+        )
+        .unwrap();
+    }
+    Router::start_multi(reg.into_groups(), policy(), Arc::clone(metrics))
+}
+
+/// Latency-under-offered-load curve: two tenants, each offered
+/// `rho x µ` req/s of Poisson traffic against its own single replica.
+fn offered_load_leg(rhos: &[f64], horizon_s: f64) -> Json {
+    let mut table =
+        Table::new(&["rho", "offered/tenant", "sent", "t0 p50", "t0 p99", "t1 p50", "t1 p99"]);
+    let mut rows = Vec::new();
+    for (pi, &rho) in rhos.iter().enumerate() {
+        let offered = rho * MU;
+        let metrics = Arc::new(Metrics::new());
+        let router = fixed_router(2, &metrics);
+        let traces: Vec<Trace> = (0..2usize)
+            .map(|m| {
+                Trace::from_process(
+                    &ArrivalProcess::Poisson { rate: offered },
+                    1000 + (pi * 2 + m) as u64,
+                    horizon_s,
+                    m,
+                    (1, 16),
+                )
+            })
+            .collect();
+        let summary = replay(&router, &Trace::merge(&traces), 1.0, DRAIN);
+        assert_eq!(summary.lost, 0, "open-loop run lost replies at rho {rho}");
+        assert_eq!(summary.errors, 0, "open-loop run errored at rho {rho}");
+        let percentiles: Vec<(f64, f64)> =
+            (0..2).map(|m| metrics.model(m).e2e_percentiles_ms()).collect();
+        let tenants: Vec<Json> = (0..2usize)
+            .map(|m| {
+                let (p50, p99) = percentiles[m];
+                obj([
+                    ("model", format!("tenant{m}").into()),
+                    (
+                        "completed",
+                        (metrics.model(m).completed.load(Ordering::SeqCst) as i64).into(),
+                    ),
+                    ("p50_ms", p50.into()),
+                    ("p99_ms", p99.into()),
+                ])
+            })
+            .collect();
+        router.shutdown();
+        table.row(&[
+            format!("{rho:.1}"),
+            format!("{offered:.0}/s"),
+            summary.sent.to_string(),
+            format!("{:.2}ms", percentiles[0].0),
+            format!("{:.2}ms", percentiles[0].1),
+            format!("{:.2}ms", percentiles[1].0),
+            format!("{:.2}ms", percentiles[1].1),
+        ]);
+        rows.push(obj([
+            ("rho", rho.into()),
+            ("offered_rps", offered.into()),
+            ("sent", summary.sent.into()),
+            ("lost", summary.lost.into()),
+            ("wall_s", summary.wall_s.into()),
+            ("tenants", Json::Arr(tenants)),
+        ]));
+    }
+    table.print("offered-load curve: 2 tenants, Poisson arrivals, 1 replica each");
+    println!(
+        "\nopen-loop: arrivals are paced by the recorded trace, never by\n\
+         completions, so queueing under offered load is visible — p99 grows\n\
+         with rho where a closed-loop driver would flatline at capacity."
+    );
+    Json::Arr(rows)
+}
+
+/// Same mean rate, bursty vs smooth: MMPP-2 arrivals against Poisson.
+fn burst_leg(horizon_s: f64) -> Json {
+    let mean = 100.0;
+    let run = |process: &ArrivalProcess, seed: u64| {
+        let metrics = Arc::new(Metrics::new());
+        let router = fixed_router(1, &metrics);
+        let summary =
+            replay(&router, &Trace::from_process(process, seed, horizon_s, 0, (1, 16)), 1.0, DRAIN);
+        assert_eq!(summary.lost, 0, "burst leg lost replies");
+        assert_eq!(summary.errors, 0);
+        let (_, p99) = metrics.model(0).e2e_percentiles_ms();
+        router.shutdown();
+        (p99, summary.sent)
+    };
+    let (poisson_p99, poisson_sent) = run(&ArrivalProcess::Poisson { rate: mean }, 7);
+    let mmpp = ArrivalProcess::Mmpp2 { rates: [180.0, 20.0], mean_dwell_s: [0.1, 0.1] };
+    assert!((mmpp.mean_rate() - mean).abs() < 1e-9, "legs must offer the same mean rate");
+    let (mmpp_p99, mmpp_sent) = run(&mmpp, 8);
+    println!(
+        "\nburst leg: p99 {poisson_p99:.2}ms Poisson vs {mmpp_p99:.2}ms MMPP-2 at the same\n\
+         mean rate ({mean:.0} req/s) — burstiness, not volume, drives the tail."
+    );
+    obj([
+        ("mean_rate_rps", mean.into()),
+        ("poisson_sent", poisson_sent.into()),
+        ("poisson_p99_ms", poisson_p99.into()),
+        ("mmpp_sent", mmpp_sent.into()),
+        ("mmpp_p99_ms", mmpp_p99.into()),
+    ])
+}
+
+/// Sample `(elapsed_s, active_replicas, backlog)` for model 0 every
+/// millisecond until `stop` flips.
+fn monitor(router: &Router, metrics: &Metrics, stop: &AtomicBool) -> Vec<(f64, usize, u64)> {
+    let t0 = Instant::now();
+    let mut samples = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        samples.push((
+            t0.elapsed().as_secs_f64(),
+            router.active_replicas("tenant0").unwrap_or(0),
+            metrics.model(0).backlog.load(Ordering::SeqCst),
+        ));
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    samples
+}
+
+/// Replica panic mid-run: the faulted slot is retired, the request is
+/// retried on the peer, and the autoscaler's floor repair respawns the
+/// group back to its floor — with zero request loss.
+fn chaos_panic_leg(horizon_s: f64) -> Json {
+    let floor = 2usize;
+    let built = Arc::new(AtomicUsize::new(0));
+    let factory: ReplicaFactory = {
+        let built = Arc::clone(&built);
+        Arc::new(move || {
+            let n = built.fetch_add(1, Ordering::SeqCst);
+            let inner: Arc<dyn EngineReplica> = Arc::new(DelayReplica::from_ms(SERVICE_MS));
+            Ok(if n == 0 {
+                // the group's first replica panics on its 11th request
+                Arc::new(ChaosReplica::panic_at(inner, 10)) as Arc<dyn EngineReplica>
+            } else {
+                inner
+            })
+        })
+    };
+    let mut reg = ModelRegistry::new();
+    reg.register_group_scaled("tenant0", floor, 3, 1, Some(50.0), factory).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::start_multi_with(
+        reg.into_groups(),
+        policy(),
+        fast_autoscale(),
+        Arc::clone(&metrics),
+    );
+    let trace =
+        Trace::from_process(&ArrivalProcess::Poisson { rate: 300.0 }, 17, horizon_s, 0, (1, 16));
+    let stop = AtomicBool::new(false);
+    let (summary, timeline) = std::thread::scope(|s| {
+        let mon = s.spawn(|| monitor(&router, &metrics, &stop));
+        let summary = replay(&router, &trace, 1.0, DRAIN);
+        // sample a beat past the drain so the post-fault regrow is seen
+        std::thread::sleep(Duration::from_millis(100));
+        stop.store(true, Ordering::SeqCst);
+        (summary, mon.join().unwrap())
+    });
+    assert_eq!(summary.lost, 0, "chaos panic leg lost replies");
+    assert_eq!(summary.errors, 0, "the panicked request must be retried, not errored");
+    // recovery: first dip below the floor to the first sample back at it
+    let dip = timeline.iter().position(|&(_, active, _)| active < floor);
+    let recovery_s = dip
+        .and_then(|d| {
+            timeline[d..]
+                .iter()
+                .find(|&&(_, active, _)| active >= floor)
+                .map(|&(t, _, _)| t - timeline[d].0)
+        })
+        .unwrap_or(0.0);
+    let m = metrics.model(0);
+    let faults = m.replica_faults.load(Ordering::SeqCst);
+    let retried = m.retries.load(Ordering::SeqCst);
+    let scale_ups = m.scale_ups.load(Ordering::SeqCst);
+    assert_eq!(faults, 1, "exactly the injected panic");
+    assert_eq!(retried, 1, "the panicked request was retried");
+    assert!(scale_ups >= 1, "floor repair must regrow the retired slot");
+    assert!(
+        router.active_replicas("tenant0") >= Some(floor),
+        "group must end back at its floor, at {:?}",
+        router.active_replicas("tenant0")
+    );
+    router.shutdown();
+    println!(
+        "\nchaos panic leg: {} requests, fault retired the replica, retry kept\n\
+         loss at 0, floor repair regrew within {recovery_s:.3}s (dip {}observed\n\
+         by the 1ms sampler)",
+        summary.sent,
+        if dip.is_some() { "" } else { "not " }
+    );
+    obj([
+        ("sent", summary.sent.into()),
+        ("lost", summary.lost.into()),
+        ("faults", (faults as i64).into()),
+        ("retried", (retried as i64).into()),
+        ("scale_ups", (scale_ups as i64).into()),
+        ("recovery_s", recovery_s.into()),
+        ("dip_observed", dip.is_some().into()),
+    ])
+}
+
+/// A replica running 10x slow next to a clean peer: correctness holds
+/// (zero loss, zero faults), only the latency tail moves.
+fn chaos_straggler_leg(horizon_s: f64) -> Json {
+    let trace =
+        Trace::from_process(&ArrivalProcess::Poisson { rate: 50.0 }, 23, horizon_s, 0, (1, 16));
+    let run = |straggle: bool| {
+        let metrics = Arc::new(Metrics::new());
+        let mk = || Arc::new(DelayReplica::from_ms(SERVICE_MS)) as Arc<dyn EngineReplica>;
+        let second = if straggle {
+            Arc::new(ChaosReplica::straggler(mk(), 10.0)) as Arc<dyn EngineReplica>
+        } else {
+            mk()
+        };
+        let mut reg = ModelRegistry::new();
+        reg.register_group("tenant0", vec![mk(), second], 1).unwrap();
+        let router = Router::start_multi(reg.into_groups(), policy(), Arc::clone(&metrics));
+        let summary = replay(&router, &trace, 1.0, DRAIN);
+        assert_eq!(summary.lost, 0, "straggler leg lost replies (straggle={straggle})");
+        assert_eq!(summary.errors, 0);
+        assert_eq!(metrics.model(0).replica_faults.load(Ordering::SeqCst), 0, "slow != faulted");
+        let (_, p99) = metrics.model(0).e2e_percentiles_ms();
+        router.shutdown();
+        p99
+    };
+    let clean_p99 = run(false);
+    let straggler_p99 = run(true);
+    println!(
+        "\nstraggler leg: p99 {clean_p99:.2}ms clean vs {straggler_p99:.2}ms with one\n\
+         replica at 10x exec time, same {}-request trace, zero loss in both runs",
+        trace.len()
+    );
+    obj([
+        ("sent", trace.len().into()),
+        ("clean_p99_ms", clean_p99.into()),
+        ("straggler_p99_ms", straggler_p99.into()),
+        ("inflation", (straggler_p99 / clean_p99).into()),
+    ])
+}
+
+/// A tenant that suddenly 50x's its rate: the autoscaler rides the
+/// spike up and the backlog drains back to zero after it ends.
+fn chaos_spike_leg(horizon_s: f64) -> Json {
+    let base = 50.0;
+    let factor = 50.0;
+    let spike = RateSpike { from_s: 0.3 * horizon_s, until_s: 0.55 * horizon_s, factor };
+    let arrivals = ArrivalProcess::Poisson { rate: base }.sample_spiked(29, horizon_s, &spike);
+    let trace = Trace::from_arrivals(&arrivals, 0, 31, (1, 16));
+    let factory: ReplicaFactory =
+        Arc::new(|| Ok(Arc::new(DelayReplica::from_ms(SERVICE_MS)) as Arc<dyn EngineReplica>));
+    let mut reg = ModelRegistry::new();
+    reg.register_group_scaled("tenant0", 1, 4, 1, Some(25.0), factory).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::start_multi_with(
+        reg.into_groups(),
+        policy(),
+        fast_autoscale(),
+        Arc::clone(&metrics),
+    );
+    let stop = AtomicBool::new(false);
+    let (summary, timeline) = std::thread::scope(|s| {
+        let mon = s.spawn(|| monitor(&router, &metrics, &stop));
+        let summary = replay(&router, &trace, 1.0, DRAIN);
+        std::thread::sleep(Duration::from_millis(100));
+        stop.store(true, Ordering::SeqCst);
+        (summary, mon.join().unwrap())
+    });
+    assert_eq!(summary.lost, 0, "spike leg lost replies");
+    assert_eq!(summary.errors, 0);
+    // recovery: spike end (monitor clock ≈ trace clock at time_scale 1)
+    // to the first backlog-free sample after it
+    let recovery_s = timeline
+        .iter()
+        .find(|&&(t, _, backlog)| t >= spike.until_s && backlog == 0)
+        .map(|&(t, _, _)| t - spike.until_s)
+        .unwrap_or(f64::NAN);
+    assert!(recovery_s.is_finite(), "backlog never drained after the spike");
+    let max_replicas = timeline.iter().map(|&(_, active, _)| active).max().unwrap_or(1);
+    let peak_backlog = timeline.iter().map(|&(_, _, b)| b).max().unwrap_or(0);
+    let scale_ups = metrics.model(0).scale_ups.load(Ordering::SeqCst);
+    assert!(scale_ups >= 1, "a 50x spike against 1 replica must trigger a grow");
+    router.shutdown();
+    println!(
+        "\nspike leg: {base:.0} req/s base, {factor:.0}x window\n\
+         [{:.2}s, {:.2}s): replicas peaked at {max_replicas}, backlog peaked at\n\
+         {peak_backlog} and drained {recovery_s:.3}s after the spike ended; zero loss",
+        spike.from_s, spike.until_s
+    );
+    obj([
+        ("base_rps", base.into()),
+        ("spike_factor", factor.into()),
+        ("sent", summary.sent.into()),
+        ("lost", summary.lost.into()),
+        ("max_replicas", max_replicas.into()),
+        ("peak_backlog", (peak_backlog as i64).into()),
+        ("scale_ups", (scale_ups as i64).into()),
+        ("recovery_s", recovery_s.into()),
+    ])
+}
+
+// --- committed-snapshot checking (the `--smoke` contract) -------------
+
+/// Bound for one numeric leaf, keyed by its field name.  Latency and
+/// recovery keys get direction-aware regression bounds; counts, factors
+/// and seeds are schema-only (their values are run-shaped, not a perf
+/// trajectory).
+fn leaf_bound(path: &str, key: &str, committed: f64, fresh: f64) -> Option<String> {
+    let fail = |bound: String| {
+        Some(format!("{path}: fresh {fresh:.4} vs committed {committed:.4} — {bound}"))
+    };
+    if key == "lost" {
+        if fresh != 0.0 {
+            return fail("lost replies must be 0".into());
+        }
+    } else if key == "recovery_s" {
+        if fresh > committed + 0.25 {
+            return fail(format!("regressed past committed + 0.25s ({:.4})", committed + 0.25));
+        }
+    } else if key.ends_with("wall_s") {
+        if fresh > committed + 1.0 {
+            return fail(format!("regressed past committed + 1.0s ({:.4})", committed + 1.0));
+        }
+    } else if key.ends_with("_ms") {
+        if fresh > 2.0 * committed + 5.0 {
+            return fail(format!("regressed past 2x committed + 5ms ({:.4})", 2.0 * committed + 5.0));
+        }
+    } else if key.ends_with("_rps") {
+        if committed >= 10.0 && fresh < committed / 2.0 {
+            return fail(format!("fell below half of committed ({:.4})", committed / 2.0));
+        }
+    }
+    None
+}
+
+/// Recursive schema + regression check of a fresh smoke run against the
+/// committed snapshot.  Key paths must match exactly in both directions;
+/// numeric leaves are judged by [`leaf_bound`], strings must be equal
+/// (schema versions, tenant names), booleans are type-checked only.
+fn check_node(path: &str, key: &str, committed: &Json, fresh: &Json, errs: &mut Vec<String>) {
+    match (committed, fresh) {
+        (Json::Obj(c), Json::Obj(f)) => {
+            for k in c.keys().filter(|k| !f.contains_key(*k)) {
+                errs.push(format!("{path}.{k}: in committed snapshot, missing from fresh run"));
+            }
+            for k in f.keys().filter(|k| !c.contains_key(*k)) {
+                errs.push(format!("{path}.{k}: new in fresh run, not in committed snapshot"));
+            }
+            for (k, cv) in c {
+                if let Some(fv) = f.get(k) {
+                    check_node(&format!("{path}.{k}"), k, cv, fv, errs);
+                }
+            }
+        }
+        (Json::Arr(c), Json::Arr(f)) => {
+            if c.len() != f.len() {
+                errs.push(format!("{path}: {} committed rows vs {} fresh", c.len(), f.len()));
+                return;
+            }
+            for (i, (cv, fv)) in c.iter().zip(f).enumerate() {
+                check_node(&format!("{path}[{i}]"), key, cv, fv, errs);
+            }
+        }
+        (Json::Num(c), Json::Num(f)) => {
+            if let Some(e) = leaf_bound(path, key, *c, *f) {
+                errs.push(e);
+            }
+        }
+        (Json::Str(c), Json::Str(f)) => {
+            if c != f {
+                errs.push(format!("{path}: {c:?} committed vs {f:?} fresh"));
+            }
+        }
+        (Json::Bool(_), Json::Bool(_)) | (Json::Null, Json::Null) => {}
+        (c, f) => {
+            errs.push(format!("{path}: type changed ({c} committed vs {f} fresh)"));
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let update = args.iter().any(|a| a == "--update");
+    println!(
+        "serving-openloop{}: seeded arrival traces replayed open-loop \
+         (mock replicas, {SERVICE_MS}ms service time, µ = {MU:.0} req/s each)",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    // smoke keeps every leg but shortens the horizons; the arrival
+    // streams stay fully seeded either way
+    let (rhos, horizon_s, panic_horizon_s, spike_horizon_s): (&[f64], f64, f64, f64) = if smoke {
+        (&[0.2, 0.5], 0.8, 0.5, 1.0)
+    } else {
+        (&[0.2, 0.5, 0.8], 2.0, 1.0, 1.5)
+    };
+
+    let offered_load = offered_load_leg(rhos, horizon_s);
+    let burst = burst_leg(horizon_s);
+    let chaos_panic = chaos_panic_leg(panic_horizon_s);
+    let chaos_straggler = chaos_straggler_leg(horizon_s);
+    let chaos_spike = chaos_spike_leg(spike_horizon_s);
+
+    let legs = [
+        ("offered_load", offered_load),
+        ("burst", burst),
+        ("chaos_panic", chaos_panic),
+        ("chaos_straggler", chaos_straggler),
+        ("chaos_spike", chaos_spike),
+    ];
+
+    let mut openloop: Vec<(&'static str, Json)> = vec![
+        ("schema", "swifttron-openloop-bench-v1".into()),
+        ("smoke", smoke.into()),
+    ];
+    openloop.extend(legs.iter().map(|(k, v)| (*k, v.clone())));
+    let path = "BENCH_serving.json";
+    match merge_bench_json(path, [("openloop", obj(openloop))]) {
+        Ok(()) => println!("\nwrote {path} (openloop key; sibling legs preserved)"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    if !smoke {
+        return;
+    }
+
+    // --- committed smoke snapshot: bootstrap, rebaseline, or verify ---
+    let mut snapshot: Vec<(&'static str, Json)> =
+        vec![("schema", "swifttron-openloop-smoke-v1".into())];
+    snapshot.extend(legs);
+    let snapshot = obj(snapshot);
+    let snap_path = "BENCH_smoke.json";
+    let committed = std::fs::read_to_string(snap_path)
+        .ok()
+        .and_then(|s| Json::parse(s.trim()).ok());
+    match committed {
+        Some(committed) if !update => {
+            let mut errs = Vec::new();
+            check_node("smoke", "", &committed, &snapshot, &mut errs);
+            if errs.is_empty() {
+                println!("{snap_path}: schema matches, no leg regressed past its bound");
+            } else {
+                eprintln!("\n{snap_path}: smoke snapshot check FAILED:");
+                for e in &errs {
+                    eprintln!("  {e}");
+                }
+                eprintln!(
+                    "if this change is intentional, rebaseline with\n  \
+                     cargo bench --bench serving_openloop -- --smoke --update"
+                );
+                std::process::exit(1);
+            }
+        }
+        _ => match std::fs::write(snap_path, format!("{snapshot}\n")) {
+            Ok(()) => println!(
+                "{snap_path}: snapshot {} — commit it",
+                if update { "rebaselined" } else { "bootstrapped" }
+            ),
+            Err(e) => {
+                eprintln!("failed to write {snap_path}: {e}");
+                std::process::exit(1);
+            }
+        },
+    }
+}

@@ -36,7 +36,7 @@ use swifttron::sim::functional::{
     layer_forward_ws, layer_forward_ws_unfused, synthetic_consts, LayerWeights, Workspace,
 };
 use swifttron::sim::HwConfig;
-use swifttron::util::bench::{fmt_time, Bench, Table};
+use swifttron::util::bench::{fmt_time, merge_bench_json, Bench, Table};
 use swifttron::util::json::{obj, Json};
 use swifttron::util::rng::Rng;
 use swifttron::util::threadpool::default_parallelism;
@@ -629,9 +629,10 @@ fn main() {
     println!();
     legs.push(("concurrency", concurrency_leg(smoke)));
 
-    let json = obj(legs);
+    // merge, don't overwrite: the `openloop` key written by the
+    // serving_openloop bench lives in the same file
     let path = "BENCH_serving.json";
-    match std::fs::write(path, format!("{json}\n")) {
+    match merge_bench_json(path, legs) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }

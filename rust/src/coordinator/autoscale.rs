@@ -27,6 +27,13 @@
 //! and back within a few control intervals.  The decision function
 //! [`decide`] is pure and unit-tested; the loop in
 //! `coordinator::router` merely samples the signals and applies it.
+//!
+//! Floor repair (DESIGN.md §10): a group observed *below* its `min` —
+//! possible only because the pool retires a panicked replica's slot on
+//! the spot — is regrown immediately, bypassing both the cooldown and
+//! the SLO gate; losing a replica is a fault to heal, not a load signal
+//! to damp.  Any group with a factory gets this, including fixed-size
+//! `min == max` groups the policy half of the loop never touches.
 
 use super::metrics::Metrics;
 use super::pool::GroupRuntime;
@@ -124,6 +131,26 @@ pub fn tick_group(
     metrics: &Metrics,
     policy: &AutoscalePolicy,
 ) -> ScaleDecision {
+    // Floor repair outranks both the cooldown and the SLO gate: a group
+    // below its `min` lost a replica to a fault (panic retirement),
+    // which is a capacity hole to fix now, not a load signal to damp.
+    // Applies to any group with a factory — `scalable()` (max > min and
+    // an SLO class) is not required to get back to the floor.
+    let (min, _) = rt.replica_bounds();
+    if rt.active_replicas() < min && rt.can_respawn() {
+        match rt.grow() {
+            Ok(true) => {
+                state.cooldown = policy.hold_ticks;
+                return ScaleDecision::Grow;
+            }
+            Ok(false) => {}
+            Err(e) => {
+                eprintln!("autoscaler: model {:?} floor repair failed: {e}", rt.model());
+                state.cooldown = policy.hold_ticks;
+                return ScaleDecision::Hold;
+            }
+        }
+    }
     if state.cooldown > 0 {
         state.cooldown -= 1;
         return ScaleDecision::Hold;

@@ -87,6 +87,13 @@ pub struct ModelStats {
     pub scale_ups: AtomicU64,
     /// replica drain-then-retire events applied by the autoscaler
     pub scale_downs: AtomicU64,
+    /// replica panics observed while serving this model (each retires
+    /// the faulted slot when the group can respawn — the chaos legs'
+    /// fault gauge)
+    pub replica_faults: AtomicU64,
+    /// requests re-served on another replica after their first replica
+    /// panicked (the zero-loss recovery path)
+    pub retries: AtomicU64,
 }
 
 impl ModelStats {
@@ -346,6 +353,17 @@ impl Metrics {
         self.model(model).replicas.store(n as u64, Ordering::Relaxed);
     }
 
+    /// Count one replica panic against model `i` (the faulted slot's
+    /// retirement shows up in the replica gauge, not here).
+    pub fn record_fault(&self, model: usize) {
+        self.model(model).replica_faults.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one post-panic retry for model `i`.
+    pub fn record_retry(&self, model: usize) {
+        self.model(model).retries.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Count one applied autoscaler action for model `i`.
     pub fn record_scale(&self, model: usize, up: bool) {
         let m = self.model(model);
@@ -397,7 +415,7 @@ impl Metrics {
                     "\n  model {} (w={}): requests={} completed={} errors={} waste={:.1}% \
                      served tokens={} share={:.1}% (weight {:.1}%) virtual={:.3}ms \
                      backlog={} replicas={} e2e p50={p50_ms:.3}ms p99={p99_ms:.3}ms \
-                     scale +{}/-{}",
+                     scale +{}/-{} faults={} retried={}",
                     l.name,
                     l.weight,
                     l.stats.requests.load(Ordering::Relaxed),
@@ -412,6 +430,8 @@ impl Metrics {
                     l.stats.replicas.load(Ordering::Relaxed),
                     l.stats.scale_ups.load(Ordering::Relaxed),
                     l.stats.scale_downs.load(Ordering::Relaxed),
+                    l.stats.replica_faults.load(Ordering::Relaxed),
+                    l.stats.retries.load(Ordering::Relaxed),
                 ));
             }
         }

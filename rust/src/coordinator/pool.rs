@@ -39,6 +39,13 @@
 //! replicas once its dispatch-group size reaches the group's active
 //! replica count (the operating regime is `max_batch >= replicas`;
 //! DESIGN.md §2, EXPERIMENTS.md §Scaling).
+//!
+//! Fault recovery (DESIGN.md §10): a replica that panics mid-batch is
+//! caught at the job boundary, its slot is retired when the group has a
+//! factory to respawn from (taking the group below `min` until the
+//! autoscaler's floor repair regrows it), and the request it carried is
+//! retried exactly once on another active replica — a request is
+//! answered with a result or a typed error, never lost.
 
 use super::engine::{EngineReplica, RequestError};
 use super::metrics::Metrics;
@@ -220,17 +227,107 @@ impl GroupRuntime {
                     share
                         .into_iter()
                         .map(|(i, req)| {
-                            (i, serve_one(replica_id, &model, replica.as_ref(), &metrics, req))
+                            let out = serve_one(
+                                replica_id,
+                                &model,
+                                replica.as_ref(),
+                                &metrics,
+                                req,
+                                PanicMode::Capture,
+                            );
+                            (i, slot, out)
                         })
                         .collect::<Vec<_>>()
                 }
             })
             .collect();
-        let mut indexed: Vec<(usize, Response)> =
-            self.pool.run_batch(jobs).into_iter().flatten().collect();
+        let mut indexed: Vec<(usize, Response)> = Vec::with_capacity(total);
+        let mut panicked: Vec<(usize, usize, Request)> = Vec::new();
+        for (i, slot, outcome) in self.pool.run_batch(jobs).into_iter().flatten() {
+            match outcome {
+                ServeOutcome::Replied(resp) => indexed.push((i, resp)),
+                ServeOutcome::Panicked(req) => panicked.push((i, slot, req)),
+            }
+        }
+        // Rare path, after the barrier: requests whose replica panicked
+        // are recovered serially on the dispatcher thread.
+        for (i, slot, req) in panicked {
+            indexed.push((i, self.recover(slot, req)));
+        }
         indexed.sort_unstable_by_key(|&(i, _)| i);
         assert_eq!(indexed.len(), total, "every request yields exactly one response");
         indexed.into_iter().map(|(_, resp)| resp).collect()
+    }
+
+    /// Whether a faulted replica can be replaced (the autoscaler's
+    /// floor repair needs a factory — full [`scalable`](Self::scalable)
+    /// is not required).
+    pub fn can_respawn(&self) -> bool {
+        self.factory.is_some()
+    }
+
+    /// Retire a faulted replica's slot immediately.  Unlike
+    /// [`shrink`](Self::shrink) this may take the group below `min` —
+    /// the autoscaler's floor repair regrows it — and it is *not*
+    /// counted as a scale-down: it is a fault, not a policy decision.
+    fn retire_slot(&self, slot: usize) {
+        let mut slots = self.slots.lock().unwrap();
+        if slots[slot].is_none() {
+            return; // a concurrent dispatch already retired it
+        }
+        slots[slot] = None;
+        let active = slots.iter().flatten().count();
+        drop(slots);
+        self.metrics.set_model_replicas(self.gidx, active);
+    }
+
+    /// Recovery for a request whose replica panicked mid-batch: the
+    /// faulted slot is retired (when the group can respawn a
+    /// replacement), and the request is retried exactly once on another
+    /// active replica.  With no other replica left it gets a typed
+    /// error — either way it is answered, never lost.
+    fn recover(&self, slot: usize, req: Request) -> Response {
+        if self.can_respawn() {
+            self.retire_slot(slot);
+        }
+        let retry = {
+            let slots = self.slots.lock().unwrap();
+            let active: Vec<(usize, Arc<dyn EngineReplica>)> = slots
+                .iter()
+                .enumerate()
+                .filter(|&(s, _)| s != slot)
+                .filter_map(|(s, r)| r.as_ref().map(|r| (s, Arc::clone(r))))
+                .collect();
+            if active.is_empty() {
+                None
+            } else {
+                let pick = self.next_start.fetch_add(1, Ordering::Relaxed) % active.len();
+                active.into_iter().nth(pick)
+            }
+        };
+        match retry {
+            Some((retry_slot, replica)) => {
+                self.metrics.record_retry(self.gidx);
+                match serve_one(
+                    self.base + retry_slot,
+                    &self.model,
+                    replica.as_ref(),
+                    &self.metrics,
+                    req,
+                    PanicMode::TypedError,
+                ) {
+                    ServeOutcome::Replied(resp) => resp,
+                    ServeOutcome::Panicked(_) => unreachable!("TypedError mode never captures"),
+                }
+            }
+            None => fail_request(
+                self.base + slot,
+                &self.model,
+                &self.metrics,
+                req,
+                "replica panicked while serving request; no active replica left to retry",
+            ),
+        }
     }
 }
 
@@ -318,6 +415,25 @@ impl ReplicaPool {
     }
 }
 
+/// How [`serve_one`] reacts to a panicking replica.
+#[derive(Clone, Copy)]
+enum PanicMode {
+    /// Hand the un-replied request back to the dispatch barrier, which
+    /// retires the faulted slot and retries once on another replica.
+    Capture,
+    /// Reply with a typed [`RequestError::Backend`] (the retry path is
+    /// exhausted — a second fault must not retry forever).
+    TypedError,
+}
+
+/// Result of [`serve_one`]: either the request was answered (reply sent
+/// on its channel), or the replica panicked under [`PanicMode::Capture`]
+/// and the request comes back untouched for recovery.
+enum ServeOutcome {
+    Replied(Response),
+    Panicked(Request),
+}
+
 /// Serve one request on one replica: predict, account (aggregate,
 /// per-replica, and per-model virtual time + latency), reply.
 fn serve_one(
@@ -326,16 +442,33 @@ fn serve_one(
     engine: &dyn EngineReplica,
     metrics: &Metrics,
     req: Request,
-) -> Response {
+    mode: PanicMode,
+) -> ServeOutcome {
     let queued = req.submitted.elapsed().as_secs_f64();
     let t0 = Instant::now();
-    // A panicking replica must cost one request, not the dispatcher
-    // thread: run_batch treats a panicked job as fatal, which would
-    // kill the group's dispatcher and hang every later submit.
-    let result = catch_unwind(AssertUnwindSafe(|| engine.predict(&req.tokens)))
-        .unwrap_or_else(|_| {
-            Err(RequestError::Backend("replica panicked while serving request".into()))
-        });
+    // A panicking replica must cost one request (at most one retry),
+    // never the dispatcher thread: run_batch treats a panicked job as
+    // fatal, which would kill the group's dispatcher and hang every
+    // later submit.
+    let result = match catch_unwind(AssertUnwindSafe(|| engine.predict(&req.tokens))) {
+        Ok(r) => r,
+        Err(_) => {
+            metrics.record_replica(replica_id, t0.elapsed().as_secs_f64(), 0, 0.0, true);
+            metrics.record_fault(req.model);
+            match mode {
+                PanicMode::Capture => return ServeOutcome::Panicked(req),
+                PanicMode::TypedError => {
+                    return ServeOutcome::Replied(fail_request(
+                        replica_id,
+                        model_name,
+                        metrics,
+                        req,
+                        "replica panicked while serving request",
+                    ))
+                }
+            }
+        }
+    };
     let resp = match result {
         Ok(pred) => {
             let exec = t0.elapsed().as_secs_f64();
@@ -379,6 +512,32 @@ fn serve_one(
                 error: Some(e.to_string()),
             }
         }
+    };
+    let _ = req.reply.send(resp.clone());
+    ServeOutcome::Replied(resp)
+}
+
+/// Account and answer a request that could not be served at all (its
+/// replica panicked and no retry path is left): typed error on the
+/// reply channel, error bumped on the aggregate and per-model ledgers.
+fn fail_request(
+    replica_id: usize,
+    model_name: &str,
+    metrics: &Metrics,
+    req: Request,
+    msg: &str,
+) -> Response {
+    metrics.record_error();
+    metrics.record_model_served(req.model, 0, 0, 0, 0.0, 0.0, 0.0, true);
+    let resp = Response {
+        id: req.id,
+        model: model_name.to_string(),
+        replica: replica_id,
+        label: usize::MAX,
+        logits: Vec::new(),
+        accel_ms: 0.0,
+        e2e_s: req.submitted.elapsed().as_secs_f64(),
+        error: Some(RequestError::Backend(msg.into()).to_string()),
     };
     let _ = req.reply.send(resp.clone());
     resp

@@ -342,20 +342,28 @@ fn dispatch_group_loop(sh: Arc<Shared>, rt: Arc<super::pool::GroupRuntime>) {
 }
 
 /// The SLO autoscaler control loop: every `policy.interval`, sample
-/// each scalable group's backlog (queued + in flight, under one short
+/// each managed group's backlog (queued + in flight, under one short
 /// batcher lock) and apply the hysteresis decision
-/// (`coordinator::autoscale`).  Exits when the router shuts down.
+/// (`coordinator::autoscale`).  Managed means scalable *or* merely
+/// respawnable (a factory but no SLO / headroom): the latter never
+/// scale with load but still get floor repair after a fault retires a
+/// replica.  Exits when the router shuts down.
 fn autoscale_loop(
     sh: Arc<Shared>,
     pool: Arc<ReplicaPool>,
     metrics: Arc<Metrics>,
     policy: AutoscalePolicy,
 ) {
-    let scalable: Vec<_> = pool.groups().iter().filter(|g| g.scalable()).cloned().collect();
+    let scalable: Vec<_> = pool
+        .groups()
+        .iter()
+        .filter(|g| g.scalable() || g.can_respawn())
+        .cloned()
+        .collect();
     if scalable.is_empty() {
-        // Nothing to manage (the common fixed-size configuration):
-        // exit instead of waking every interval for the router's whole
-        // lifetime.
+        // Nothing to manage (the common fixed-size, factory-less
+        // configuration): exit instead of waking every interval for
+        // the router's whole lifetime.
         return;
     }
     let mut states: Vec<GroupScaleState> =

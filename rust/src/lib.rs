@@ -32,6 +32,11 @@
 //!   counts moved by an SLO-aware backlog autoscaler — with
 //!   per-replica and per-model virtual-time (simulated cycle) and
 //!   latency accounting next to wall-clock throughput.
+//! * [`workload`] — the open-loop measurement substrate (DESIGN.md §10):
+//!   seeded arrival processes (Poisson / bursty MMPP / diurnal ramp),
+//!   recorded-trace replay, fault-injecting chaos replicas, and the
+//!   driver that paces traces against the coordinator under offered
+//!   load instead of closed-loop send-wait-send.
 //! * [`util`] — in-repo substrates (RNG, JSON, CLI, thread pool, property
 //!   testing, stats): the offline crate set has no tokio/clap/serde/etc.
 
@@ -43,3 +48,4 @@ pub mod runtime;
 pub mod sim;
 pub mod synthesis;
 pub mod util;
+pub mod workload;

@@ -4,7 +4,9 @@
 //! [`Bench`] for warmup + timed repetitions and prints aligned tables —
 //! one bench target per paper table/figure (DESIGN.md §4).
 
+use super::json::Json;
 use super::stats::Series;
+use std::path::Path;
 use std::time::Instant;
 
 /// Prevent the optimizer from deleting a computed value.
@@ -60,6 +62,30 @@ impl Bench {
         );
         s
     }
+}
+
+/// Merge top-level keys into the JSON object at `path`
+/// (read-modify-write): sibling bench binaries writing the same file
+/// keep each other's legs instead of clobbering the whole object.  A
+/// missing or unparsable file starts from an empty object.
+pub fn merge_bench_json<P: AsRef<Path>>(
+    path: P,
+    updates: impl IntoIterator<Item = (&'static str, Json)>,
+) -> Result<(), String> {
+    let path = path.as_ref();
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(src) => match Json::parse(&src) {
+            Ok(Json::Obj(m)) => m,
+            _ => Default::default(),
+        },
+        Err(_) => Default::default(),
+    };
+    for (k, v) in updates {
+        root.insert(k.to_string(), v);
+    }
+    let json = Json::Obj(root);
+    std::fs::write(path, format!("{json}\n"))
+        .map_err(|e| format!("write {}: {e}", path.display()))
 }
 
 pub fn fmt_time(secs: f64) -> String {
@@ -132,6 +158,20 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" us"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn merge_bench_json_preserves_sibling_keys() {
+        let path = std::env::temp_dir()
+            .join(format!("swifttron_merge_bench_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        merge_bench_json(&path, [("a", Json::from(1i64))]).unwrap();
+        merge_bench_json(&path, [("b", Json::from("x"))]).unwrap();
+        merge_bench_json(&path, [("a", Json::from(2i64))]).unwrap();
+        let v = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(v["a"].as_i64(), Some(2), "re-run overwrites its own key");
+        assert_eq!(v["b"].as_str(), Some("x"), "sibling key survives the re-run");
     }
 
     #[test]

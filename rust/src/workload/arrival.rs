@@ -1,0 +1,216 @@
+//! Open-loop arrival processes for the workload harness.
+//!
+//! Closed-loop drivers (send, wait, send) let the service rate throttle
+//! the arrival rate, which structurally hides queueing — exactly the
+//! behavior the autoscaler and per-model dispatchers exist to manage.
+//! These generators produce *offered* load: a list of arrival
+//! timestamps fixed before the run starts, independent of how fast the
+//! system drains them.  All three processes are seeded and
+//! deterministic: the same `(process, seed, horizon)` triple yields the
+//! same `Vec<f64>` bit-for-bit, which the property suite and the
+//! committed bench snapshot rely on.
+
+use crate::util::rng::Rng;
+
+/// One completed sojourn of the MMPP's modulating chain, exposed so the
+/// property suite can check empirical dwell times against the
+/// generator's means.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dwell {
+    /// which of the two modulating states (0 or 1)
+    pub state: usize,
+    /// how long the chain stayed there, seconds
+    pub dwell_s: f64,
+}
+
+/// A tenant whose rate multiplies by `factor` inside `[from_s, until_s)`
+/// — the "suddenly 50×" chaos leg.  Extra arrivals are an independent
+/// Poisson stream at `(factor - 1) · mean_rate` superposed on the base
+/// process (exact for Poisson by the superposition theorem, a mean-rate
+/// approximation for the modulated processes).
+#[derive(Clone, Copy, Debug)]
+pub struct RateSpike {
+    pub from_s: f64,
+    pub until_s: f64,
+    pub factor: f64,
+}
+
+/// Seeded open-loop arrival process over a finite horizon.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant rate (requests/second):
+    /// inter-arrival gaps are iid Exponential(rate).
+    Poisson { rate: f64 },
+    /// 2-state Markov-modulated Poisson process: the chain dwells in
+    /// state `i` for Exponential(1/mean_dwell_s[i]) seconds emitting
+    /// Poisson arrivals at `rates[i]`, then flips.  With a high-rate
+    /// and a low-rate state this is the standard bursty-traffic model.
+    /// A state's rate may be 0.0 (pure ON/OFF traffic).
+    Mmpp2 { rates: [f64; 2], mean_dwell_s: [f64; 2] },
+    /// Sinusoidal diurnal ramp between `base` and `peak` requests/s
+    /// with the given period: λ(t) = base + (peak-base)·(1-cos(2πt/T))/2,
+    /// so t=0 is the trough and t=T/2 the peak.  Sampled by thinning
+    /// a Poisson(peak) stream.
+    Diurnal { base: f64, peak: f64, period_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Long-run mean arrival rate in requests/second (time-stationary
+    /// average for the modulated processes).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Mmpp2 { rates, mean_dwell_s } => {
+                let total = mean_dwell_s[0] + mean_dwell_s[1];
+                (rates[0] * mean_dwell_s[0] + rates[1] * mean_dwell_s[1]) / total
+            }
+            ArrivalProcess::Diurnal { base, peak, .. } => base + (peak - base) / 2.0,
+        }
+    }
+
+    /// Sorted arrival times in `[0, horizon_s)`, deterministic in
+    /// `(self, seed, horizon_s)`.
+    pub fn sample(&self, seed: u64, horizon_s: f64) -> Vec<f64> {
+        self.sample_with_dwells(seed, horizon_s).0
+    }
+
+    /// As [`sample`](Self::sample), also returning the modulating
+    /// chain's completed dwells (empty for Poisson and Diurnal).  Only
+    /// sojourns that finished before the horizon are reported, so the
+    /// truncated final one does not bias the empirical means.
+    pub fn sample_with_dwells(&self, seed: u64, horizon_s: f64) -> (Vec<f64>, Vec<Dwell>) {
+        assert!(horizon_s > 0.0, "horizon must be positive");
+        let mut rng = Rng::new(seed);
+        let mut arrivals = Vec::new();
+        let mut dwells = Vec::new();
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                assert!(rate > 0.0, "Poisson rate must be positive");
+                let mut t = 0.0;
+                loop {
+                    t += rng.exponential(rate);
+                    if t >= horizon_s {
+                        break;
+                    }
+                    arrivals.push(t);
+                }
+            }
+            ArrivalProcess::Mmpp2 { rates, mean_dwell_s } => {
+                assert!(rates[0] >= 0.0 && rates[1] >= 0.0, "MMPP rates must be non-negative");
+                assert!(rates[0] > 0.0 || rates[1] > 0.0, "MMPP needs one emitting state");
+                assert!(
+                    mean_dwell_s[0] > 0.0 && mean_dwell_s[1] > 0.0,
+                    "MMPP dwell means must be positive"
+                );
+                let mut t = 0.0;
+                let mut state = 0usize;
+                let mut dwell_start = 0.0;
+                let mut dwell_end = rng.exponential(1.0 / mean_dwell_s[state]);
+                loop {
+                    // Candidate next arrival inside the current state;
+                    // by memorylessness, discarding a candidate that
+                    // falls past the state switch and resampling at the
+                    // new state's rate is distribution-exact.
+                    let gap = if rates[state] > 0.0 {
+                        rng.exponential(rates[state])
+                    } else {
+                        f64::INFINITY
+                    };
+                    if t + gap < dwell_end {
+                        t += gap;
+                        if t >= horizon_s {
+                            break;
+                        }
+                        arrivals.push(t);
+                    } else {
+                        t = dwell_end;
+                        if t >= horizon_s {
+                            break;
+                        }
+                        dwells.push(Dwell { state, dwell_s: t - dwell_start });
+                        state ^= 1;
+                        dwell_start = t;
+                        dwell_end = t + rng.exponential(1.0 / mean_dwell_s[state]);
+                    }
+                }
+            }
+            ArrivalProcess::Diurnal { base, peak, period_s } => {
+                assert!(base >= 0.0 && peak > 0.0 && peak >= base, "need peak >= base >= 0");
+                assert!(period_s > 0.0, "period must be positive");
+                let mut t = 0.0;
+                loop {
+                    t += rng.exponential(peak);
+                    if t >= horizon_s {
+                        break;
+                    }
+                    let lam = base
+                        + (peak - base) * 0.5 * (1.0 - (std::f64::consts::TAU * t / period_s).cos());
+                    if rng.f64() < lam / peak {
+                        arrivals.push(t);
+                    }
+                }
+            }
+        }
+        (arrivals, dwells)
+    }
+
+    /// Sample with a tenant rate spike superposed (see [`RateSpike`]).
+    /// The extra stream uses an independent RNG derived from `seed`, so
+    /// the base arrivals are identical with and without the spike.
+    pub fn sample_spiked(&self, seed: u64, horizon_s: f64, spike: &RateSpike) -> Vec<f64> {
+        assert!(spike.factor >= 1.0, "spike factor must be >= 1");
+        assert!(spike.from_s <= spike.until_s, "spike window is inverted");
+        let mut out = self.sample(seed, horizon_s);
+        let end = spike.until_s.min(horizon_s);
+        if spike.factor > 1.0 && spike.from_s < end {
+            let extra_rate = (spike.factor - 1.0) * self.mean_rate();
+            if extra_rate > 0.0 {
+                let mut rng = Rng::new(seed ^ 0x5B1C_E5EE_D5B1_CE5E);
+                let mut t = spike.from_s.max(0.0);
+                loop {
+                    t += rng.exponential(extra_rate);
+                    if t >= end {
+                        break;
+                    }
+                    out.push(t);
+                }
+                out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_sorted_and_in_horizon() {
+        let arrivals = ArrivalProcess::Poisson { rate: 100.0 }.sample(7, 5.0);
+        assert!(!arrivals.is_empty());
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
+        assert!(arrivals.iter().all(|&t| (0.0..5.0).contains(&t)));
+    }
+
+    #[test]
+    fn mmpp_mean_rate_is_dwell_weighted() {
+        let p = ArrivalProcess::Mmpp2 { rates: [300.0, 20.0], mean_dwell_s: [0.5, 0.125] };
+        let want = (300.0 * 0.5 + 20.0 * 0.125) / 0.625;
+        assert!((p.mean_rate() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spike_only_adds_inside_window() {
+        let p = ArrivalProcess::Poisson { rate: 50.0 };
+        let base = p.sample(3, 2.0);
+        let spiked =
+            p.sample_spiked(3, 2.0, &RateSpike { from_s: 0.5, until_s: 1.0, factor: 10.0 });
+        assert!(spiked.len() > base.len());
+        let extra = spiked.len() - base.len();
+        let in_window =
+            spiked.iter().filter(|&&t| (0.5..1.0).contains(&t)).count()
+                - base.iter().filter(|&&t| (0.5..1.0).contains(&t)).count();
+        assert_eq!(extra, in_window, "all extra arrivals land inside the spike window");
+    }
+}

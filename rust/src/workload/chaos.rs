@@ -1,0 +1,142 @@
+//! Fault-injecting engine replicas for chaos legs: a replica that
+//! panics mid-batch and a straggler running at a multiple of its inner
+//! exec time, plus the deterministic delay mock both the chaos tests
+//! and the open-loop bench drive them with.
+//!
+//! These wrap any [`EngineReplica`], so the faults exercise the real
+//! recovery path in `coordinator::pool` (panic capture → slot
+//! retirement → retry) and `coordinator::autoscale` (floor repair)
+//! rather than a parallel mock of it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{EngineReplica, Prediction, RequestError};
+
+/// Deterministic mock replica: sleeps a fixed service time, then
+/// returns a prediction derived from the first token.  Rejects empty
+/// requests so error paths stay testable.
+pub struct DelayReplica {
+    delay: Duration,
+}
+
+impl DelayReplica {
+    pub fn new(delay: Duration) -> Self {
+        DelayReplica { delay }
+    }
+
+    pub fn from_ms(ms: u64) -> Self {
+        DelayReplica::new(Duration::from_millis(ms))
+    }
+}
+
+impl EngineReplica for DelayReplica {
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
+        if tokens.is_empty() {
+            return Err(RequestError::BadLength { got: 0, min: 1, max: self.seq_len() });
+        }
+        std::thread::sleep(self.delay);
+        Ok(Prediction {
+            label: (tokens[0].unsigned_abs() as usize) % 2,
+            logits: vec![tokens[0] as i64, tokens.len() as i64],
+            accel_cycles: 100,
+            accel_ms: 0.001,
+        })
+    }
+
+    fn seq_len(&self) -> usize {
+        1 << 20
+    }
+
+    fn min_seq_len(&self) -> usize {
+        1
+    }
+}
+
+enum FaultMode {
+    /// Panic on the n-th request served (0-based), serve cleanly
+    /// otherwise — one fault, then permanently healthy, so a zero-loss
+    /// run proves recovery rather than avoidance.
+    PanicAt(usize),
+    /// Multiply exec time by sleeping `(factor - 1) ×` the inner
+    /// replica's measured latency after each successful call.
+    Straggle(f64),
+}
+
+/// An [`EngineReplica`] wrapper that injects one fault mode around an
+/// inner replica.
+pub struct ChaosReplica {
+    inner: Arc<dyn EngineReplica>,
+    mode: FaultMode,
+    served: AtomicUsize,
+}
+
+impl ChaosReplica {
+    /// Panics on the `request`-th call (0-based), serves normally
+    /// before and after.
+    pub fn panic_at(inner: Arc<dyn EngineReplica>, request: usize) -> Self {
+        ChaosReplica { inner, mode: FaultMode::PanicAt(request), served: AtomicUsize::new(0) }
+    }
+
+    /// Runs every request at `factor ×` the inner replica's exec time.
+    pub fn straggler(inner: Arc<dyn EngineReplica>, factor: f64) -> Self {
+        assert!(factor >= 1.0, "straggler factor must be >= 1");
+        ChaosReplica { inner, mode: FaultMode::Straggle(factor), served: AtomicUsize::new(0) }
+    }
+}
+
+impl EngineReplica for ChaosReplica {
+    fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
+        let n = self.served.fetch_add(1, Ordering::SeqCst);
+        match self.mode {
+            FaultMode::PanicAt(at) if n == at => {
+                panic!("chaos: injected replica panic on request {n}")
+            }
+            FaultMode::PanicAt(_) => self.inner.predict(tokens),
+            FaultMode::Straggle(factor) => {
+                let t0 = Instant::now();
+                let out = self.inner.predict(tokens);
+                let extra = t0.elapsed().as_secs_f64() * (factor - 1.0);
+                if extra > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(extra));
+                }
+                out
+            }
+        }
+    }
+
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn min_seq_len(&self) -> usize {
+        self.inner.min_seq_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_at_fires_exactly_once() {
+        let r = ChaosReplica::panic_at(Arc::new(DelayReplica::from_ms(0)), 1);
+        assert!(r.predict(&[1, 2]).is_ok());
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = r.predict(&[1, 2]);
+        }));
+        assert!(panicked.is_err(), "second request panics");
+        assert!(r.predict(&[1, 2]).is_ok(), "healthy again after the fault");
+    }
+
+    #[test]
+    fn straggler_multiplies_exec_time() {
+        let inner = Arc::new(DelayReplica::from_ms(5));
+        let straggler = ChaosReplica::straggler(Arc::clone(&inner) as Arc<dyn EngineReplica>, 4.0);
+        let t0 = Instant::now();
+        straggler.predict(&[1]).unwrap();
+        // 5ms inner × 4 = 20ms; allow generous scheduler noise downward
+        assert!(t0.elapsed() >= Duration::from_millis(14), "took {:?}", t0.elapsed());
+    }
+}

@@ -1,0 +1,142 @@
+//! Open-loop trace driver: submits a recorded arrival stream against a
+//! [`Router`] at its recorded wall-clock offsets, whether or not
+//! earlier requests have completed — the arrival process never waits on
+//! the service process, so queueing under offered load is visible
+//! (closed-loop drivers structurally hide it).
+//!
+//! Recording and replay are two views of the same [`Trace`]: a live run
+//! driven by [`run_process`] records the `(t_arrival, model, len)`
+//! stream it submits, and [`replay`] of that recording reproduces the
+//! submission sequence bit-identically (same timestamps, same models,
+//! same token vectors — the tokens are a pure function of the recorded
+//! length).
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use super::arrival::ArrivalProcess;
+use super::trace::Trace;
+use crate::coordinator::Router;
+
+/// Outcome of one open-loop run.
+#[derive(Clone, Debug)]
+pub struct ReplaySummary {
+    /// requests submitted (== the trace length)
+    pub sent: usize,
+    /// replies with no error
+    pub completed: usize,
+    /// replies carrying a typed error
+    pub errors: usize,
+    /// requests whose reply never arrived before the drain timeout —
+    /// the zero-loss chaos legs assert this is 0
+    pub lost: usize,
+    /// wall time from first submission to last reply (or timeout)
+    pub wall_s: f64,
+    /// the exact stream this run submitted; replaying it reproduces
+    /// the run's submissions bit-identically
+    pub recorded: Trace,
+}
+
+impl ReplaySummary {
+    /// Offered arrival rate over the recorded stream's span.
+    pub fn offered_rps(&self) -> f64 {
+        let span = self.recorded.duration_s();
+        if span > 0.0 {
+            self.sent as f64 / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Successful replies per wall-clock second.
+    pub fn achieved_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Deterministic token vector for a recorded request length: replaying
+/// a trace re-submits byte-identical payloads.
+pub fn tokens_for(len: u16) -> Vec<i32> {
+    (0..len.max(1) as i32).map(|t| t % 50).collect()
+}
+
+/// Replay `trace` open-loop against `router`.  Each event's submission
+/// is paced to its recorded offset scaled by `time_scale` (1.0 = real
+/// time, 0.5 = twice as fast); trace model indices map to the router's
+/// model list in order.  Blocks until every reply has arrived or
+/// `drain_timeout` has elapsed past the last submission; missing
+/// replies are counted as `lost`, never silently dropped.
+pub fn replay(
+    router: &Router,
+    trace: &Trace,
+    time_scale: f64,
+    drain_timeout: Duration,
+) -> ReplaySummary {
+    assert!(time_scale > 0.0, "time_scale must be positive");
+    let names: Vec<String> = router.model_names().iter().map(|s| s.to_string()).collect();
+    let (tx, rx) = channel();
+    let mut recorded = Trace::new();
+    let t0 = Instant::now();
+    for ev in trace.events() {
+        let target = Duration::from_secs_f64(ev.t_ns as f64 / 1e9 * time_scale);
+        let now = t0.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let name = names
+            .get(ev.model as usize)
+            .unwrap_or_else(|| panic!("trace model {} not registered on router", ev.model));
+        recorded.push_event(*ev);
+        router.submit_to(name, tokens_for(ev.len), tx.clone());
+    }
+    drop(tx);
+    let sent = trace.len();
+    let mut completed = 0usize;
+    let mut errors = 0usize;
+    let deadline = Instant::now() + drain_timeout;
+    while completed + errors < sent {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        match rx.recv_timeout(left) {
+            Ok(resp) => {
+                if resp.error.is_none() {
+                    completed += 1;
+                } else {
+                    errors += 1;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    ReplaySummary {
+        sent,
+        completed,
+        errors,
+        lost: sent - completed - errors,
+        wall_s: t0.elapsed().as_secs_f64(),
+        recorded,
+    }
+}
+
+/// Drive an arrival process live for one tenant, recording the stream
+/// it submits.  `replay(&summary.recorded, ...)` reproduces this run's
+/// submissions bit-identically — that recording can also be
+/// [`Trace::save`]d and reloaded byte-exactly.
+pub fn run_process(
+    router: &Router,
+    process: &ArrivalProcess,
+    seed: u64,
+    horizon_s: f64,
+    model: usize,
+    len_range: (usize, usize),
+    drain_timeout: Duration,
+) -> ReplaySummary {
+    let trace = Trace::from_process(process, seed, horizon_s, model, len_range);
+    replay(router, &trace, 1.0, drain_timeout)
+}

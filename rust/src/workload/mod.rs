@@ -1,0 +1,28 @@
+//! Open-loop workload harness (DESIGN.md §10): seeded arrival
+//! processes, recorded-trace replay, fault-injecting replicas, and the
+//! driver that paces a trace against the coordinator under *offered*
+//! (not closed-loop) load.
+//!
+//! * [`arrival`] — Poisson, bursty 2-state MMPP, and diurnal-ramp
+//!   arrival generators plus tenant rate spikes, all deterministic in
+//!   their seed.
+//! * [`trace`] — the compact `(t_arrival, model, len)` record format:
+//!   record a live run once, replay it bit-identically.
+//! * [`chaos`] — [`EngineReplica`](crate::coordinator::EngineReplica)
+//!   wrappers that panic mid-batch or straggle at a multiple of exec
+//!   time, exercising the pool's retire-and-retry recovery path and
+//!   the autoscaler's floor repair.
+//! * [`driver`] — open-loop replay over a
+//!   [`Router`](crate::coordinator::Router): arrivals are paced by the
+//!   trace, not by completions, so latency-under-offered-load and
+//!   recovery-after-fault are measurable.
+
+pub mod arrival;
+pub mod chaos;
+pub mod driver;
+pub mod trace;
+
+pub use arrival::{ArrivalProcess, Dwell, RateSpike};
+pub use chaos::{ChaosReplica, DelayReplica};
+pub use driver::{replay, run_process, tokens_for, ReplaySummary};
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,213 @@
+//! Compact recorded-trace format: a run's `(t_arrival, model, len)`
+//! stream as fixed-width little-endian records behind an 8-byte magic,
+//! so a live run can be recorded once and replayed bit-identically.
+//!
+//! On-disk layout (everything little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"SWTRACE1"
+//! 8       4     u32    record count
+//! 12      12·n  records: u64 t_ns | u16 model | u16 len
+//! ```
+//!
+//! Timestamps are integer nanoseconds from run start — no floats on
+//! disk, so `save(load(x)) == x` byte-for-byte, which the property
+//! suite asserts.
+
+use std::path::Path;
+
+use super::arrival::ArrivalProcess;
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"SWTRACE1";
+const RECORD_BYTES: usize = 12;
+
+/// One recorded arrival: nanoseconds from run start, model group
+/// index, and request token length.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub t_ns: u64,
+    pub model: u16,
+    pub len: u16,
+}
+
+/// An ordered arrival stream, recordable to and replayable from disk.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace::default()
+    }
+
+    /// Record one arrival at `t_s` seconds from run start.
+    pub fn push(&mut self, t_s: f64, model: usize, len: usize) {
+        assert!(t_s >= 0.0, "arrival time must be non-negative");
+        assert!(model <= u16::MAX as usize, "model index overflows the trace format");
+        assert!(len <= u16::MAX as usize, "request length overflows the trace format");
+        self.events.push(TraceEvent {
+            t_ns: (t_s * 1e9).round() as u64,
+            model: model as u16,
+            len: len as u16,
+        });
+    }
+
+    pub fn push_event(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Timestamp of the last event, seconds (0 for an empty trace).
+    pub fn duration_s(&self) -> f64 {
+        self.events.last().map_or(0.0, |e| e.t_ns as f64 / 1e9)
+    }
+
+    /// Record an arrival process for one tenant: arrival times from the
+    /// process, request lengths uniform in `len_range` (inclusive) from
+    /// an independent RNG derived from `seed`.
+    pub fn from_process(
+        process: &ArrivalProcess,
+        seed: u64,
+        horizon_s: f64,
+        model: usize,
+        len_range: (usize, usize),
+    ) -> Trace {
+        Trace::from_arrivals(&process.sample(seed, horizon_s), model, seed, len_range)
+    }
+
+    /// Record a pre-sampled arrival-time stream for one tenant.
+    pub fn from_arrivals(
+        arrivals: &[f64],
+        model: usize,
+        seed: u64,
+        len_range: (usize, usize),
+    ) -> Trace {
+        let (lo, hi) = len_range;
+        assert!(lo >= 1 && lo <= hi, "need 1 <= lo <= hi for request lengths");
+        let mut rng = Rng::new(seed ^ 0x1E4A_11E4_0F5E_ED00);
+        let mut trace = Trace::new();
+        for &t in arrivals {
+            let len = rng.range_i64(lo as i64, hi as i64) as usize;
+            trace.push(t, model, len);
+        }
+        trace
+    }
+
+    /// Interleave per-tenant traces into one run, ordered by time
+    /// (ties broken by model index so merges are deterministic).
+    pub fn merge(traces: &[Trace]) -> Trace {
+        let mut events: Vec<TraceEvent> =
+            traces.iter().flat_map(|t| t.events.iter().copied()).collect();
+        events.sort_by_key(|e| (e.t_ns, e.model));
+        Trace { events }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(MAGIC.len() + 4 + self.events.len() * RECORD_BYTES);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.events.len() as u32).to_le_bytes());
+        for ev in &self.events {
+            out.extend_from_slice(&ev.t_ns.to_le_bytes());
+            out.extend_from_slice(&ev.model.to_le_bytes());
+            out.extend_from_slice(&ev.len.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Trace, String> {
+        if bytes.len() < MAGIC.len() + 4 {
+            return Err(format!("trace truncated: {} bytes", bytes.len()));
+        }
+        if &bytes[..MAGIC.len()] != MAGIC {
+            return Err("bad trace magic (not a SWTRACE1 file)".into());
+        }
+        let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let body = &bytes[12..];
+        if body.len() != count * RECORD_BYTES {
+            return Err(format!(
+                "trace body is {} bytes, header promises {} records ({} bytes)",
+                body.len(),
+                count,
+                count * RECORD_BYTES
+            ));
+        }
+        let mut events = Vec::with_capacity(count);
+        for rec in body.chunks_exact(RECORD_BYTES) {
+            events.push(TraceEvent {
+                t_ns: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+                model: u16::from_le_bytes(rec[8..10].try_into().unwrap()),
+                len: u16::from_le_bytes(rec[10..12].try_into().unwrap()),
+            });
+        }
+        Ok(Trace { events })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<Trace, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        Trace::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_round_trip_exactly() {
+        let mut t = Trace::new();
+        t.push(0.001, 0, 12);
+        t.push(0.25, 1, 64);
+        t.push(3.5, 0, 1);
+        let bytes = t.to_bytes();
+        let back = Trace::from_bytes(&bytes).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_bytes(), bytes, "re-serialization is byte-identical");
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_are_typed_errors() {
+        assert!(Trace::from_bytes(b"nope").is_err());
+        let mut bytes = Trace::new().to_bytes();
+        bytes[0] = b'X';
+        assert!(Trace::from_bytes(&bytes).is_err());
+        let mut t = Trace::new();
+        t.push(1.0, 0, 8);
+        let mut bytes = t.to_bytes();
+        bytes.pop();
+        assert!(Trace::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn merge_orders_by_time_then_model() {
+        let mut a = Trace::new();
+        a.push(0.2, 0, 8);
+        a.push(0.4, 0, 8);
+        let mut b = Trace::new();
+        b.push(0.1, 1, 8);
+        b.push(0.2, 1, 8);
+        let m = Trace::merge(&[a, b]);
+        let order: Vec<(u64, u16)> = m.events().iter().map(|e| (e.t_ns, e.model)).collect();
+        assert_eq!(
+            order,
+            vec![(100_000_000, 1), (200_000_000, 0), (200_000_000, 1), (400_000_000, 0)]
+        );
+    }
+}

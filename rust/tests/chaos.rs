@@ -1,0 +1,221 @@
+//! Chaos regression tests (ISSUE 6): a replica that panics mid-batch
+//! loses zero requests — the request is retried on another replica or
+//! answered with a typed error — the faulted slot is retired when the
+//! group can respawn, and the autoscaler's floor repair brings the
+//! group's replica gauge back to its floor.  Mock engines with pinned
+//! service times keep every leg deterministic under a fixed seed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use swifttron::coordinator::{
+    AutoscalePolicy, BatchPolicy, EngineReplica, Metrics, ModelGroup, ModelRegistry,
+    ReplicaFactory, ReplicaPool, Request, Response, Router,
+};
+use swifttron::workload::{ChaosReplica, DelayReplica};
+
+fn fast_autoscale() -> AutoscalePolicy {
+    AutoscalePolicy {
+        interval: Duration::from_millis(2),
+        grow_ratio: 1.0,
+        shrink_ratio: 0.25,
+        hold_ticks: 1,
+        default_service_ms: 1.0,
+    }
+}
+
+/// Poll `f` until it holds or `timeout` elapses; returns whether it
+/// held.
+fn eventually(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    f()
+}
+
+/// A dispatch group of `n` requests for model 0 (tokens are non-empty
+/// so the mocks serve them).
+fn group_of(n: usize) -> (Vec<Request>, Vec<Receiver<Response>>) {
+    let mut group = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        let (tx, rx) = channel();
+        group.push(Request {
+            id,
+            model: 0,
+            tokens: vec![id as i32 % 50, 1, 2],
+            padded_len: 3,
+            submitted: Instant::now(),
+            reply: tx,
+        });
+        receivers.push(rx);
+    }
+    (group, receivers)
+}
+
+#[test]
+fn panicked_request_is_retried_on_a_peer_replica() {
+    // Two fixed replicas, the first panics on its first request.  The
+    // captured request must be re-served by the peer: zero errors, one
+    // fault, one retry, and — with no factory — no slot retirement.
+    let metrics = Arc::new(Metrics::new());
+    let replicas: Vec<Arc<dyn EngineReplica>> = vec![
+        Arc::new(ChaosReplica::panic_at(Arc::new(DelayReplica::from_ms(0)), 0)),
+        Arc::new(DelayReplica::from_ms(0)),
+    ];
+    let pool =
+        ReplicaPool::new_multi(vec![ModelGroup::fixed("m", replicas, 1)], Arc::clone(&metrics));
+    let (group, receivers) = group_of(6);
+    let responses = pool.dispatch(group);
+    assert_eq!(responses.len(), 6, "every request yields exactly one response");
+    for (i, resp) in responses.iter().enumerate() {
+        assert!(resp.error.is_none(), "request {i} errored: {:?}", resp.error);
+    }
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).expect("reply channel served");
+        assert!(resp.error.is_none());
+    }
+    let m = metrics.model(0);
+    assert_eq!(m.replica_faults.load(Ordering::SeqCst), 1, "one injected panic observed");
+    assert_eq!(m.retries.load(Ordering::SeqCst), 1, "the panicked request was retried");
+    assert_eq!(m.completed.load(Ordering::SeqCst), 6);
+    assert_eq!(m.errors.load(Ordering::SeqCst), 0);
+    assert_eq!(metrics.errors.load(Ordering::SeqCst), 0);
+    assert_eq!(
+        pool.group(0).unwrap().active_replicas(),
+        2,
+        "no factory: the faulted replica stays in its slot"
+    );
+}
+
+#[test]
+fn panic_with_no_peer_is_a_typed_error_not_a_loss() {
+    // One replica, no factory, panics on its second request: the
+    // request gets a typed backend error on its reply channel; nothing
+    // hangs and the pool serves the next dispatch.
+    let metrics = Arc::new(Metrics::new());
+    let replicas: Vec<Arc<dyn EngineReplica>> =
+        vec![Arc::new(ChaosReplica::panic_at(Arc::new(DelayReplica::from_ms(0)), 1))];
+    let pool =
+        ReplicaPool::new_multi(vec![ModelGroup::fixed("m", replicas, 1)], Arc::clone(&metrics));
+    let (group, receivers) = group_of(3);
+    let responses = pool.dispatch(group);
+    assert!(responses[0].error.is_none());
+    assert!(
+        responses[1].error.as_deref().unwrap_or("").contains("panicked"),
+        "the un-retryable request carries a typed error: {:?}",
+        responses[1].error
+    );
+    assert!(responses[2].error.is_none());
+    for rx in receivers {
+        rx.recv_timeout(Duration::from_secs(5)).expect("every request was answered");
+    }
+    let m = metrics.model(0);
+    assert_eq!(m.replica_faults.load(Ordering::SeqCst), 1);
+    assert_eq!(m.retries.load(Ordering::SeqCst), 0, "no peer to retry on");
+    assert_eq!(m.errors.load(Ordering::SeqCst), 1);
+    let (group, _rx) = group_of(2);
+    assert!(pool.dispatch(group).iter().all(|r| r.error.is_none()), "pool survives");
+}
+
+#[test]
+fn faulted_group_recovers_to_its_floor_with_zero_loss() {
+    // The flagship chaos leg: a scaled group (min 2) whose first
+    // replica panics mid-run.  The slot is retired, the request is
+    // retried on the peer, the autoscaler's floor repair respawns the
+    // group back to its floor, and not one of the flood's requests is
+    // lost or errored.
+    const REQUESTS: usize = 40;
+    let spawned = Arc::new(AtomicUsize::new(0));
+    let factory: ReplicaFactory = {
+        let spawned = Arc::clone(&spawned);
+        Arc::new(move || {
+            let n = spawned.fetch_add(1, Ordering::SeqCst);
+            let inner: Arc<dyn EngineReplica> = Arc::new(DelayReplica::from_ms(2));
+            Ok(if n == 0 {
+                // the group's first replica panics on its 6th request
+                Arc::new(ChaosReplica::panic_at(inner, 5)) as Arc<dyn EngineReplica>
+            } else {
+                inner
+            })
+        })
+    };
+    let mut reg = ModelRegistry::new();
+    reg.register_group_scaled("m", 2, 3, 1, Some(50.0), factory).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let policy =
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(500), bucket_width: 0 };
+    let router =
+        Router::start_multi_with(reg.into_groups(), policy, fast_autoscale(), Arc::clone(&metrics));
+    assert_eq!(router.active_replicas("m"), Some(2), "group starts at its floor");
+
+    let receivers: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            let (tx, rx) = channel();
+            router.submit_to("m", vec![i as i32 % 50, 1], tx);
+            rx
+        })
+        .collect();
+    for (i, rx) in receivers.iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response lost");
+        assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+    }
+    assert!(
+        eventually(Duration::from_secs(10), || router.active_replicas("m") >= Some(2)),
+        "floor repair never restored the replica floor (at {:?})",
+        router.active_replicas("m")
+    );
+    router.shutdown();
+
+    let m = metrics.model(0);
+    assert_eq!(m.completed.load(Ordering::SeqCst), REQUESTS as u64);
+    assert_eq!(m.errors.load(Ordering::SeqCst), 0, "zero loss: the panicked request retried");
+    assert_eq!(m.backlog.load(Ordering::SeqCst), 0, "backlog gauge settled");
+    assert_eq!(m.replica_faults.load(Ordering::SeqCst), 1, "exactly the injected fault");
+    assert_eq!(m.retries.load(Ordering::SeqCst), 1);
+    assert!(
+        spawned.load(Ordering::SeqCst) >= 3,
+        "initial floor (2) plus the floor-repair respawn, saw {}",
+        spawned.load(Ordering::SeqCst)
+    );
+}
+
+#[test]
+fn straggler_replica_slows_the_group_but_never_errors() {
+    // A 10x straggler next to a clean replica: correctness is
+    // untouched (no errors, no faults), only latency moves.  16
+    // requests split 8/8: the clean pair finishes in ~16 ms, the
+    // straggler's share alone costs ~160 ms.
+    let run = |straggle: bool| -> (f64, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let mk = || Arc::new(DelayReplica::from_ms(2)) as Arc<dyn EngineReplica>;
+        let second: Arc<dyn EngineReplica> = if straggle {
+            Arc::new(ChaosReplica::straggler(mk(), 10.0))
+        } else {
+            mk()
+        };
+        let pool = ReplicaPool::new_multi(
+            vec![ModelGroup::fixed("m", vec![mk(), second], 1)],
+            Arc::clone(&metrics),
+        );
+        let (group, _receivers) = group_of(16);
+        let t0 = Instant::now();
+        let responses = pool.dispatch(group);
+        assert!(responses.iter().all(|r| r.error.is_none()));
+        (t0.elapsed().as_secs_f64(), metrics)
+    };
+    let (clean_s, _) = run(false);
+    let (straggler_s, metrics) = run(true);
+    let m = metrics.model(0);
+    assert_eq!(m.replica_faults.load(Ordering::SeqCst), 0, "slow is not faulted");
+    assert_eq!(m.errors.load(Ordering::SeqCst), 0);
+    assert!(
+        straggler_s > 3.0 * clean_s,
+        "straggler {straggler_s:.3}s vs clean {clean_s:.3}s — expected a visible tail"
+    );
+}
