@@ -27,10 +27,11 @@ done
 echo "  total: $((SECONDS-suite_start))s"
 
 # Timing-sensitive suites (the autoscaler control loop, per-model
-# latency/p99 assertions, the chaos recovery legs) re-run under
-# --release, where debug-build slowness cannot eat the timing margins.
+# latency/p99 assertions, the chaos recovery legs, the wire-protocol
+# loopback suite with its SLO shedding leg) re-run under --release,
+# where debug-build slowness cannot eat the timing margins.
 echo "-- release leg: timing-sensitive autoscaler/latency tests --"
-for t in autoscale chaos prop_invariants; do
+for t in autoscale chaos prop_invariants wire_protocol; do
   t_start=$SECONDS
   cargo test -q --release --test "$t"
   row="  $t (release): $((SECONDS-t_start))s"
@@ -49,10 +50,12 @@ timing_rows+=("$row")
 echo "$row"
 
 # Open-loop workload smoke leg: replays seeded arrival traces with the
-# chaos legs (panic / straggler / 50x spike), merges the `openloop` key
-# into BENCH_serving.json, and exits non-zero if the run drifts from the
-# committed BENCH_smoke.json schema or regresses a leg past its bound
-# (rebaseline with `-- --smoke --update` after an intentional change).
+# chaos legs (panic / straggler / 50x spike) and floods both socket
+# front doors (legacy text vs SWWIRE1 mux), merges the `openloop` and
+# `wire` keys into BENCH_serving.json, and exits non-zero if the run
+# drifts from the committed BENCH_smoke.json schema or regresses a leg
+# past its bound (rebaseline with `-- --smoke --update` after an
+# intentional change).
 echo "-- open-loop workload smoke leg --"
 t_start=$SECONDS
 cargo bench --bench serving_openloop -- --smoke

@@ -10,24 +10,83 @@
 //! the *arrival streams*; latencies carry host scheduling noise, which
 //! the smoke bounds absorb (see below).
 //!
-//! Results merge under the `openloop` key of `BENCH_serving.json`
-//! (sibling legs from serving_scaling are preserved).  `--smoke`
-//! additionally checks the run against the committed `BENCH_smoke.json`
-//! snapshot and exits non-zero on schema drift or a leg regressing past
-//! its bound (latency keys: 2x committed + 5 ms; recovery: committed +
-//! 0.25 s; throughput keys: half of committed).  After an intentional
-//! perf change, rebaseline with
-//! `cargo bench --bench serving_openloop -- --smoke --update`.
+//! The socket-ingest leg (EXPERIMENTS.md §Wire, DESIGN.md §11) floods
+//! the two front doors over real loopback connections — the legacy
+//! thread-per-connection text server vs the `SWWIRE1` non-blocking
+//! binary multiplexer — and reports req/s, p99, and (via this binary's
+//! counting `#[global_allocator]`) heap allocations per request on
+//! each protocol's decode path.
+//!
+//! Results merge under the `openloop` and `wire` keys of
+//! `BENCH_serving.json` (sibling legs from serving_scaling are
+//! preserved).  `--smoke` additionally checks the run against the
+//! committed `BENCH_smoke.json` snapshot and exits non-zero on schema
+//! drift or a leg regressing past its bound (latency keys: 2x
+//! committed + 5 ms; recovery: committed + 0.25 s; throughput keys:
+//! half of committed).  After an intentional perf change, rebaseline
+//! with `cargo bench --bench serving_openloop -- --smoke --update`.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+use swifttron::coordinator::server::{parse_tokens, TextServer};
 use swifttron::coordinator::{
     AutoscalePolicy, BatchPolicy, EngineReplica, Metrics, ModelRegistry, ReplicaFactory, Router,
 };
 use swifttron::util::bench::{merge_bench_json, Table};
 use swifttron::util::json::{obj, Json};
+use swifttron::wire::{encode, DecodeEvent, FrameDecoder, MuxConfig, MuxServer, RingBuf, WireClient};
 use swifttron::workload::{replay, ArrivalProcess, ChaosReplica, DelayReplica, RateSpike, Trace};
+
+// Counting allocator (same idiom as rust/tests/workspace_alloc.rs —
+// one global allocator per binary, so the bench carries its own copy):
+// per-thread event counts make the single-threaded decode microbench
+// immune to allocation traffic on the flood worker threads.
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn bump() {
+        // try_with: never panic inside the allocator (TLS teardown)
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        CountingAlloc::bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// Mock service time per request; one replica serves 1000/SERVICE_MS
 /// requests per second.
@@ -363,6 +422,224 @@ fn chaos_spike_leg(horizon_s: f64) -> Json {
     ])
 }
 
+// --- socket-ingest leg: text front door vs SWWIRE1 mux ----------------
+
+/// Requests measured by the single-threaded allocation microbench.
+const MICRO_REQS: usize = 4096;
+
+/// Flood the legacy text server: every worker owns `share` live
+/// connections and drives them in lockstep rounds (one request per
+/// connection per round, so concurrency == open connections, never
+/// unbounded pipelining).  Returns the wall seconds including connect.
+fn flood_text(addr: SocketAddr, conns: usize, per_conn: usize, workers: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let share = conns / workers + usize::from(w < conns % workers);
+                s.spawn(move || {
+                    let mut socks: Vec<(BufReader<TcpStream>, TcpStream)> = (0..share)
+                        .map(|_| {
+                            let stream = TcpStream::connect(addr).unwrap();
+                            stream.set_nodelay(true).ok();
+                            (BufReader::new(stream.try_clone().unwrap()), stream)
+                        })
+                        .collect();
+                    let mut line = String::new();
+                    for _ in 0..per_conn {
+                        for (_, wr) in socks.iter_mut() {
+                            writeln!(wr, "tenant0:1,2,3,4").unwrap();
+                        }
+                        for (rd, _) in socks.iter_mut() {
+                            line.clear();
+                            rd.read_line(&mut line).unwrap();
+                            assert!(line.contains("\"label\""), "text flood reply: {line}");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+/// Same flood shape over the binary protocol against the mux.
+fn flood_binary(addr: SocketAddr, conns: usize, per_conn: usize, workers: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let share = conns / workers + usize::from(w < conns % workers);
+                s.spawn(move || {
+                    let mut clients: Vec<WireClient> =
+                        (0..share).map(|_| WireClient::connect(addr).unwrap()).collect();
+                    for round in 0..per_conn {
+                        for c in clients.iter_mut() {
+                            c.queue(round as u64, "tenant0", &[1, 2, 3, 4]);
+                            c.flush().unwrap();
+                        }
+                        for c in clients.iter_mut() {
+                            let f = c.recv().unwrap();
+                            assert!(f.is_ok(), "binary flood reply: {f:?}");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+/// Heap allocations per request on each protocol's decode path,
+/// measured single-threaded under the counting allocator: the mux's
+/// ring -> pull -> tokens -> encoded-reply loop (zero after warm-up,
+/// the DESIGN.md §11 contract) vs the text path's owned line +
+/// `parse_tokens` + formatted JSON reply.  Returns `(text, binary)`.
+fn alloc_microbench() -> (f64, f64) {
+    let tokens: Vec<i32> = (0..16).collect();
+    let mut frame = Vec::new();
+    encode::encode_request(&mut frame, 1, "tenant0", &tokens);
+    let mut ring = RingBuf::new(4096);
+    let mut dec = FrameDecoder::default();
+    let mut scratch: Vec<i32> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
+    let logits = [1i64, 2, 3, 4];
+    let mut run_binary = |n: usize| {
+        let mut decoded = 0usize;
+        while decoded < n {
+            assert_eq!(ring.fill_from(&frame), frame.len(), "ring drained every iteration");
+            loop {
+                let (c, ev) = dec.pull(ring.readable());
+                if let Some(DecodeEvent::Request(r)) = ev {
+                    r.read_tokens_into(&mut scratch);
+                    out.clear();
+                    encode::encode_ok(&mut out, r.id, 0, 1, &logits, 0.5, 100.0);
+                    decoded += 1;
+                }
+                if c == 0 {
+                    break;
+                }
+                ring.consume(c);
+            }
+        }
+    };
+    run_binary(64); // warm-up sizes scratch and out
+    let before = thread_allocs();
+    run_binary(MICRO_REQS);
+    let binary = (thread_allocs() - before) as f64 / MICRO_REQS as f64;
+
+    let mut line = String::from("tenant0:");
+    for (i, t) in tokens.iter().enumerate() {
+        if i > 0 {
+            line.push(',');
+        }
+        line.push_str(&t.to_string());
+    }
+    let run_text = |n: usize| {
+        for _ in 0..n {
+            // BufRead::lines hands the handler an owned String per line
+            let owned = line.to_string();
+            let (model, toks) = parse_tokens(owned.trim()).unwrap();
+            let reply = format!(
+                "{{\"model\":{:?},\"tokens\":{}}}",
+                model.as_deref().unwrap_or(""),
+                toks.len()
+            );
+            std::hint::black_box(reply);
+        }
+    };
+    run_text(64);
+    let before = thread_allocs();
+    run_text(MICRO_REQS);
+    let text = (thread_allocs() - before) as f64 / MICRO_REQS as f64;
+    (text, binary)
+}
+
+/// Ingest-bound front-door comparison: `conns` live loopback
+/// connections x `per_conn` requests each, against instant replicas —
+/// the service time is ~0, so the wall clock measures the front door
+/// itself.  Zero accepted-request loss is asserted on both protocols.
+fn wire_leg(conns: usize, per_conn: usize) -> Json {
+    let workers = conns.min(8);
+    let total = conns * per_conn;
+    let run = |binary: bool| -> (f64, f64) {
+        let metrics = Arc::new(Metrics::new());
+        let mut reg = ModelRegistry::new();
+        let mk = || Arc::new(DelayReplica::from_ms(0)) as Arc<dyn EngineReplica>;
+        reg.register_group("tenant0", vec![mk(), mk()], 1).unwrap();
+        let router =
+            Arc::new(Router::start_multi(reg.into_groups(), policy(), Arc::clone(&metrics)));
+        let wall = if binary {
+            let cfg = MuxConfig { max_conns: conns + 64, ..MuxConfig::default() };
+            let server = MuxServer::start(Arc::clone(&router), "127.0.0.1:0", cfg).unwrap();
+            let wall = flood_binary(server.local_addr(), conns, per_conn, workers);
+            server.shutdown();
+            wall
+        } else {
+            let server = TextServer::start(Arc::clone(&router), "127.0.0.1:0", conns + 64).unwrap();
+            let wall = flood_text(server.local_addr(), conns, per_conn, workers);
+            server.stop();
+            wall
+        };
+        let completed = metrics.model(0).completed.load(Ordering::SeqCst) as usize;
+        assert_eq!(completed, total, "front door lost accepted requests (binary={binary})");
+        let (_, p99) = metrics.model(0).e2e_percentiles_ms();
+        if let Ok(r) = Arc::try_unwrap(router) {
+            r.shutdown();
+        }
+        (total as f64 / wall, p99)
+    };
+    let (text_rps, text_p99) = run(false);
+    let (binary_rps, binary_p99) = run(true);
+    let speedup = binary_rps / text_rps;
+    let (text_allocs, binary_allocs) = alloc_microbench();
+    assert_eq!(
+        binary_allocs, 0.0,
+        "binary decode path allocated {binary_allocs}/request after warm-up"
+    );
+    if conns >= 1000 {
+        assert!(
+            speedup >= 2.0,
+            "mux must be >= 2x the text front door at {conns} connections, got {speedup:.2}x"
+        );
+    }
+    let mut table = Table::new(&["front door", "req/s", "p99", "allocs/req (decode)"]);
+    table.row(&[
+        "text (thread/conn)".into(),
+        format!("{text_rps:.0}"),
+        format!("{text_p99:.2}ms"),
+        format!("{text_allocs:.1}"),
+    ]);
+    table.row(&[
+        "SWWIRE1 mux".into(),
+        format!("{binary_rps:.0}"),
+        format!("{binary_p99:.2}ms"),
+        format!("{binary_allocs:.1}"),
+    ]);
+    table.print(&format!(
+        "socket ingest: {conns} loopback connections x {per_conn} req each, instant replicas"
+    ));
+    println!("\nwire leg: binary mux at {speedup:.2}x the text front door's throughput");
+    obj([
+        ("conns", (conns as i64).into()),
+        ("per_conn", (per_conn as i64).into()),
+        ("requests", (total as i64).into()),
+        ("text_rps", text_rps.into()),
+        ("binary_rps", binary_rps.into()),
+        ("speedup", speedup.into()),
+        ("text_p99_ms", text_p99.into()),
+        ("binary_p99_ms", binary_p99.into()),
+        ("text_allocs_per_req", text_allocs.into()),
+        ("binary_allocs_per_req", binary_allocs.into()),
+    ])
+}
+
 // --- committed-snapshot checking (the `--smoke` contract) -------------
 
 /// Bound for one numeric leaf, keyed by its field name.  Latency and
@@ -460,11 +737,16 @@ fn main() {
         (&[0.2, 0.5, 0.8], 2.0, 1.0, 1.5)
     };
 
+    // the wire leg floods real loopback sockets; smoke keeps the same
+    // round shape at a CI-sized connection count
+    let (wire_conns, wire_per_conn) = if smoke { (128, 8) } else { (1000, 8) };
+
     let offered_load = offered_load_leg(rhos, horizon_s);
     let burst = burst_leg(horizon_s);
     let chaos_panic = chaos_panic_leg(panic_horizon_s);
     let chaos_straggler = chaos_straggler_leg(horizon_s);
     let chaos_spike = chaos_spike_leg(spike_horizon_s);
+    let wire = wire_leg(wire_conns, wire_per_conn);
 
     let legs = [
         ("offered_load", offered_load),
@@ -480,8 +762,8 @@ fn main() {
     ];
     openloop.extend(legs.iter().map(|(k, v)| (*k, v.clone())));
     let path = "BENCH_serving.json";
-    match merge_bench_json(path, [("openloop", obj(openloop))]) {
-        Ok(()) => println!("\nwrote {path} (openloop key; sibling legs preserved)"),
+    match merge_bench_json(path, [("openloop", obj(openloop)), ("wire", wire.clone())]) {
+        Ok(()) => println!("\nwrote {path} (openloop + wire keys; sibling legs preserved)"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 
@@ -493,6 +775,7 @@ fn main() {
     let mut snapshot: Vec<(&'static str, Json)> =
         vec![("schema", "swifttron-openloop-smoke-v1".into())];
     snapshot.extend(legs);
+    snapshot.push(("wire", wire));
     let snapshot = obj(snapshot);
     let snap_path = "BENCH_smoke.json";
     let committed = std::fs::read_to_string(snap_path)

@@ -94,6 +94,11 @@ pub struct ModelStats {
     /// requests re-served on another replica after their first replica
     /// panicked (the zero-loss recovery path)
     pub retries: AtomicU64,
+    /// requests rejected at admission with a typed `Overloaded`
+    /// response because the model's predicted queueing delay exceeded
+    /// its SLO (DESIGN.md §11) — shed requests never enter the queue,
+    /// so they appear here and nowhere else
+    pub shed: AtomicU64,
 }
 
 impl ModelStats {
@@ -167,6 +172,12 @@ pub struct Metrics {
     replicas: Mutex<Vec<Arc<ReplicaStats>>>,
     /// per-model ledgers, registered by the router at startup
     models: Mutex<Vec<ModelLedger>>,
+    /// connections currently open at the front door (gauge)
+    pub conns_open: AtomicU64,
+    /// connections accepted since startup
+    pub conns_accepted: AtomicU64,
+    /// connections refused at the cap with a typed `busy` rejection
+    pub conns_rejected: AtomicU64,
 }
 
 impl Metrics {
@@ -364,6 +375,33 @@ impl Metrics {
         self.model(model).retries.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one admission-control rejection (typed `Overloaded`
+    /// response) against model `i`.  Shed requests bypass the queue
+    /// entirely: no request/backlog/latency accounting, only this.
+    pub fn record_shed(&self, model: usize) {
+        self.model(model).shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one accepted front-door connection (raises the open
+    /// gauge; [`Metrics::record_conn_closed`] settles it).
+    pub fn record_conn_opened(&self) {
+        self.conns_open.fetch_add(1, Ordering::Relaxed);
+        self.conns_accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Settle the open-connection gauge (saturating, never wraps).
+    pub fn record_conn_closed(&self) {
+        let _ = self.conns_open.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            v.checked_sub(1)
+        });
+    }
+
+    /// Count one connection refused at the cap with a typed `busy`
+    /// rejection.
+    pub fn record_conn_rejected(&self) {
+        self.conns_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Count one applied autoscaler action for model `i`.
     pub fn record_scale(&self, model: usize, up: bool) {
         let m = self.model(model);
@@ -393,6 +431,12 @@ impl Metrics {
             self.padded_tokens.load(Ordering::Relaxed),
             100.0 * self.padding_waste(),
         );
+        out.push_str(&format!(
+            "\n  conns open={} accepted={} rejected={}",
+            self.conns_open.load(Ordering::Relaxed),
+            self.conns_accepted.load(Ordering::Relaxed),
+            self.conns_rejected.load(Ordering::Relaxed),
+        ));
         {
             let models = self.models.lock().unwrap();
             let total_w: u64 = models.iter().map(|l| l.weight).sum();
@@ -415,7 +459,7 @@ impl Metrics {
                     "\n  model {} (w={}): requests={} completed={} errors={} waste={:.1}% \
                      served tokens={} share={:.1}% (weight {:.1}%) virtual={:.3}ms \
                      backlog={} replicas={} e2e p50={p50_ms:.3}ms p99={p99_ms:.3}ms \
-                     scale +{}/-{} faults={} retried={}",
+                     scale +{}/-{} faults={} retried={} shed={}",
                     l.name,
                     l.weight,
                     l.stats.requests.load(Ordering::Relaxed),
@@ -432,6 +476,7 @@ impl Metrics {
                     l.stats.scale_downs.load(Ordering::Relaxed),
                     l.stats.replica_faults.load(Ordering::Relaxed),
                     l.stats.retries.load(Ordering::Relaxed),
+                    l.stats.shed.load(Ordering::Relaxed),
                 ));
             }
         }
@@ -588,6 +633,26 @@ mod tests {
         assert_eq!(m.model(0).scale_ups.load(Ordering::Relaxed), 2);
         assert_eq!(m.model(0).scale_downs.load(Ordering::Relaxed), 1);
         assert!(m.report().contains("scale +2/-1"), "{}", m.report());
+    }
+
+    #[test]
+    fn shed_and_connection_counters_surface_in_report() {
+        let m = Metrics::new();
+        m.ensure_models(&[("a", 1)]);
+        m.record_shed(0);
+        m.record_shed(0);
+        m.record_conn_opened();
+        m.record_conn_opened();
+        m.record_conn_rejected();
+        m.record_conn_closed();
+        assert_eq!(m.model(0).shed.load(Ordering::Relaxed), 2);
+        let report = m.report();
+        assert!(report.contains("shed=2"), "{report}");
+        assert!(report.contains("conns open=1 accepted=2 rejected=1"), "{report}");
+        // close never wraps below zero
+        m.record_conn_closed();
+        m.record_conn_closed();
+        assert_eq!(m.conns_open.load(Ordering::Relaxed), 0);
     }
 
     #[test]

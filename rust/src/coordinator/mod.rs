@@ -1,8 +1,11 @@
 //! Layer-3 coordinator: the deployable serving system around the
 //! accelerator model (DESIGN.md §2, §8, §9).
 //!
-//! Request flow: `server` (TCP, optional `model:` prefix) ->
-//! `router::submit_to` -> `batcher` (size-or-deadline dispatch groups
+//! Request flow: a front door — the non-blocking binary multiplexer
+//! ([`crate::wire::mux`], with SLO admission control and text
+//! auto-detection) or the legacy thread-per-connection text `server`
+//! (bounded accept, optional `model:` prefix) ->
+//! `router::submit_to`/`submit_index` -> `batcher` (size-or-deadline dispatch groups
 //! keyed by `(model, padded length)`, weighted-fair across models) ->
 //! one dispatcher thread *per model group* popping its own model's
 //! groups concurrently -> that group's
@@ -29,11 +32,14 @@
 //!   control loop.
 //! * [`router`] — request intake, the per-group dispatcher threads,
 //!   the autoscaler thread, shutdown.
-//! * [`server`] — a line-protocol TCP front-end.
+//! * [`server`] — the legacy line-protocol TCP front-end (bounded
+//!   accept path with a typed `busy` rejection; the scalable binary
+//!   front door lives in [`crate::wire`]).
 //! * [`metrics`] — wall-clock latency/throughput plus per-replica and
 //!   per-model virtual-time (simulated accelerator cycle) accounting,
 //!   token shares, per-model padding waste, per-model p50/p99 latency,
-//!   backlog and replica gauges.
+//!   backlog and replica gauges, per-model shed counters and
+//!   front-door connection gauges.
 
 pub mod autoscale;
 pub mod batcher;

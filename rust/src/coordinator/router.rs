@@ -203,6 +203,49 @@ impl Router {
         self.endpoints.iter().map(|e| e.name.as_str()).collect()
     }
 
+    /// Index of `model` in model-index order.  The wire multiplexer
+    /// resolves a frame's model id once, then sheds or submits by
+    /// index (DESIGN.md §11).
+    pub fn model_index(&self, model: &str) -> Option<usize> {
+        self.endpoints.iter().position(|e| e.name == model)
+    }
+
+    /// SLO class of model index `model` (`None` = no SLO: the model
+    /// neither autoscales nor sheds).
+    pub fn slo_ms(&self, model: usize) -> Option<f64> {
+        self.pool.group(model).and_then(|g| g.slo_ms())
+    }
+
+    /// Predicted queueing delay for model index `model` in
+    /// milliseconds: `backlog · mean_exec_ms / active_replicas` — the
+    /// same demand signal the autoscaler's `decide()` integrates
+    /// (`coordinator::autoscale`), read lock-free off the model's
+    /// metrics gauges (`default_service_ms` stands in for
+    /// `mean_exec_ms` before the first completion).
+    pub fn predicted_delay_ms(&self, model: usize, default_service_ms: f64) -> f64 {
+        let m = self.metrics.model(model);
+        let backlog = m.backlog.load(Ordering::Relaxed) as f64;
+        let active = m.replicas.load(Ordering::Relaxed).max(1) as f64;
+        backlog * m.mean_exec_ms(default_service_ms) / active
+    }
+
+    /// SLO-derived admission control (DESIGN.md §11): if model index
+    /// `model` has an SLO and its predicted queueing delay exceeds
+    /// `shed_ratio · slo_ms`, returns `Some((predicted_ms, slo_ms))`
+    /// — the caller should answer the request with a typed
+    /// `Overloaded` rejection instead of queueing it.  `None` means
+    /// admit (always, for models without an SLO).
+    pub fn overload_delay_ms(
+        &self,
+        model: usize,
+        shed_ratio: f64,
+        default_service_ms: f64,
+    ) -> Option<(f64, f64)> {
+        let slo = self.slo_ms(model)?;
+        let predicted = self.predicted_delay_ms(model, default_service_ms);
+        (predicted > shed_ratio * slo).then_some((predicted, slo))
+    }
+
     /// Submit a request to the first (default) model; the response
     /// arrives on `reply`.
     pub fn submit(&self, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
@@ -213,7 +256,7 @@ impl Router {
     /// answered immediately with an error response (and counted as an
     /// error) instead of entering the queue.
     pub fn submit_to(&self, model: &str, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
-        match self.endpoints.iter().position(|e| e.name == model) {
+        match self.model_index(model) {
             Some(idx) => self.submit_idx(idx, tokens, reply),
             None => {
                 let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
@@ -235,6 +278,19 @@ impl Router {
                 id
             }
         }
+    }
+
+    /// Submit to a model by index (resolved once via
+    /// [`model_index`](Router::model_index)) — the wire multiplexer's
+    /// entry point, skipping the per-frame name comparison of
+    /// [`submit_to`](Router::submit_to).
+    ///
+    /// # Panics
+    /// If `model` is out of range (the caller resolved it against this
+    /// router, so a bad index is a logic error, not traffic).
+    pub fn submit_index(&self, model: usize, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
+        assert!(model < self.endpoints.len(), "model index {model} out of range");
+        self.submit_idx(model, tokens, reply)
     }
 
     /// Submit to model index `model`.  The token count is the request's

@@ -1,35 +1,146 @@
-//! TCP front-end: newline-delimited requests of comma-separated token
-//! ids, optionally prefixed with a model id (`roberta_base:3,17,42`);
-//! responses are single JSON lines carrying the serving model.  One
-//! thread per connection (connections are few; the router pool does the
-//! real work).
+//! Legacy TCP text front-end: newline-delimited requests of
+//! comma-separated token ids, optionally prefixed with a model id
+//! (`roberta_base:3,17,42`); responses are single JSON lines carrying
+//! the serving model.  One thread per connection, buffered writes, and
+//! a bounded accept path: past `max_conns` concurrent connections a
+//! new client gets one typed `{"error":"busy",...}` line and is
+//! closed, instead of an unbounded `thread::spawn`.
+//!
+//! This is the compatibility path.  The scalable front door is the
+//! non-blocking binary multiplexer in [`crate::wire::mux`] (DESIGN.md
+//! §11), which also speaks this text protocol behind auto-detection.
 
 use super::router::{Response, Router};
 use crate::util::json::{obj, Json};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
 
-/// Serve until the listener errors or the process exits.
+/// Default cap on concurrent text connections (each one is a thread).
+pub const DEFAULT_MAX_CONNS: usize = 1024;
+
+/// Serve until the listener errors or the process exits, with the
+/// default connection cap.
 pub fn serve(router: Arc<Router>, addr: &str) -> Result<(), String> {
+    serve_with(router, addr, DEFAULT_MAX_CONNS)
+}
+
+/// [`serve`] with an explicit cap on concurrent connections.
+pub fn serve_with(router: Arc<Router>, addr: &str, max_conns: usize) -> Result<(), String> {
     let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
     eprintln!("swifttron serving on {addr} (models: {:?})", router.model_names());
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
+    accept_loop(router, listener, max_conns, None);
+    Ok(())
+}
+
+/// A text server running on its own accept thread — the stoppable form
+/// tests and benches use (bind port 0, read the real address, `stop`
+/// when done).  Connection handler threads exit when their client
+/// disconnects.
+pub struct TextServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TextServer {
+    pub fn start(router: Arc<Router>, addr: &str, max_conns: usize) -> Result<TextServer, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let accept = std::thread::Builder::new()
+            .name("swifttron-text-accept".into())
+            .spawn(move || accept_loop(router, listener, max_conns, Some(flag)))
+            .map_err(|e| e.to_string())?;
+        Ok(TextServer { addr, shutdown, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread.  Live connections
+    /// keep their handler threads until the clients hang up.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+impl Drop for TextServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+/// Accept connections until `shutdown` flips (or forever without one).
+/// The listener runs non-blocking so the loop can observe the flag;
+/// past the cap a client gets one typed busy line and is closed.
+fn accept_loop(
+    router: Arc<Router>,
+    listener: TcpListener,
+    max_conns: usize,
+    shutdown: Option<Arc<AtomicBool>>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let open = Arc::new(AtomicUsize::new(0));
+    loop {
+        if shutdown.as_ref().is_some_and(|f| f.load(Ordering::SeqCst)) {
+            return;
+        }
+        match listener.accept() {
+            Ok((s, _)) => {
+                if open.load(Ordering::SeqCst) >= max_conns {
+                    router.metrics.record_conn_rejected();
+                    let _ = reject_busy(s, max_conns);
+                    continue;
+                }
+                open.fetch_add(1, Ordering::SeqCst);
+                router.metrics.record_conn_opened();
                 let r = Arc::clone(&router);
+                let open = Arc::clone(&open);
                 std::thread::spawn(move || {
-                    let _ = handle(r, s);
+                    let _ = handle(Arc::clone(&r), s);
+                    open.fetch_sub(1, Ordering::SeqCst);
+                    r.metrics.record_conn_closed();
                 });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
             }
             Err(e) => eprintln!("accept error: {e}"),
         }
     }
-    Ok(())
 }
 
-fn response_json(resp: &Response) -> String {
+/// One typed rejection line, then close.
+fn reject_busy(stream: TcpStream, max_conns: usize) -> std::io::Result<()> {
+    let mut w = BufWriter::new(stream);
+    writeln!(
+        w,
+        "{}",
+        obj([
+            ("error", Json::from("busy")),
+            ("max_conns", Json::from(max_conns as i64)),
+        ])
+    )?;
+    w.flush()
+}
+
+/// One response line (shared with the multiplexer's text mode).
+pub(crate) fn response_json(resp: &Response) -> String {
     let mut fields = vec![
         ("id", Json::from(resp.id as i64)),
         ("model", Json::from(resp.model.as_str())),
@@ -45,8 +156,11 @@ fn response_json(resp: &Response) -> String {
 }
 
 fn handle(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
+    // the listener is non-blocking; this connection's reads must block
+    stream.set_nonblocking(false)?;
+    // Buffered writer: one response is assembled in memory and flushed
+    // as a single write, instead of a syscall per formatted fragment.
+    let mut writer = BufWriter::new(stream.try_clone()?);
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = line?;
@@ -71,8 +185,9 @@ fn handle(router: Arc<Router>, stream: TcpStream) -> std::io::Result<()> {
             }
             Err(e) => writeln!(writer, "{}", obj([("error", Json::from(e.as_str()))]))?,
         }
+        // the client blocks on this line: flush explicitly
+        writer.flush()?;
     }
-    eprintln!("connection {peer} closed");
     Ok(())
 }
 

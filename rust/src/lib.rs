@@ -37,6 +37,13 @@
 //!   recorded-trace replay, fault-injecting chaos replicas, and the
 //!   driver that paces traces against the coordinator under offered
 //!   load instead of closed-loop send-wait-send.
+//! * [`wire`] — the `SWWIRE1` binary wire protocol and non-blocking
+//!   connection multiplexer (DESIGN.md §11): zero-copy pull decoding
+//!   out of fixed per-connection ring buffers, length-prefixed
+//!   request/response frames, thousands of connections per I/O thread
+//!   with bounded buffers and backpressure, out-of-order completion,
+//!   and SLO-derived load shedding (typed `Overloaded` rejections),
+//!   with the legacy text protocol behind first-bytes auto-detection.
 //! * [`util`] — in-repo substrates (RNG, JSON, CLI, thread pool, property
 //!   testing, stats): the offline crate set has no tokio/clap/serde/etc.
 
@@ -48,4 +55,5 @@ pub mod runtime;
 pub mod sim;
 pub mod synthesis;
 pub mod util;
+pub mod wire;
 pub mod workload;

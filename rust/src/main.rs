@@ -11,6 +11,7 @@ use swifttron::runtime::Engine;
 use swifttron::sim::{simulate_encoder, HwConfig};
 use swifttron::synthesis::synthesis_report;
 use swifttron::util::cli::Args;
+use swifttron::wire::MuxConfig;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -53,6 +54,10 @@ fn usage() -> String {
      \x20          (replicas as N pins the group; MIN-MAX + slo_ms enables the\n\
      \x20           SLO autoscaler; request lines may carry a model prefix:\n\
      \x20           \"tiny:3,17,42\")\n\
+     \x20          [--front mux|threads --max-conns N]  front door + connection cap\n\
+     \x20          (mux = non-blocking SWWIRE1 binary multiplexer with text\n\
+     \x20           auto-detection and SLO load shedding; threads = legacy\n\
+     \x20           thread-per-connection text server)\n\
      \x20 report                           full paper reproduction summary\n"
         .into()
 }
@@ -230,7 +235,11 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
             "",
             "multi-tenant spec name=preset[:min-max[:weight[:slo_ms]]],... (functional backend)",
         )
+        .opt("front", "threads", "front door: mux (SWWIRE1 binary multiplexer) | threads")
+        .opt("max-conns", "1024", "concurrent-connection cap (typed busy rejection past it)")
         .parse(rest)?;
+    let front = p.get("front").to_string();
+    let max_conns = p.get_usize("max-conns")?;
     let metrics = Arc::new(Metrics::new());
     let policy = BatchPolicy { max_batch: p.get_usize("max-batch")?, ..Default::default() };
 
@@ -259,7 +268,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
             )?;
         }
         let router = Arc::new(Router::start_multi(reg.into_groups(), policy, metrics));
-        return swifttron::coordinator::server::serve(router, p.get("addr"));
+        return front_serve(router, p.get("addr"), &front, max_conns);
     }
 
     let replicas = p.get_usize("replicas")?;
@@ -284,7 +293,27 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         other => return Err(format!("unknown engine {other:?} (expected pjrt | functional)")),
     };
     let router = Arc::new(Router::start(engines, policy, metrics));
-    swifttron::coordinator::server::serve(router, p.get("addr"))
+    front_serve(router, p.get("addr"), &front, max_conns)
+}
+
+/// Hand the router to the selected front door (DESIGN.md §11): the
+/// non-blocking binary multiplexer (which auto-detects legacy text
+/// clients) or the legacy thread-per-connection text server.
+fn front_serve(
+    router: Arc<Router>,
+    addr: &str,
+    front: &str,
+    max_conns: usize,
+) -> Result<(), String> {
+    match front {
+        "mux" => swifttron::wire::mux::serve_mux(
+            router,
+            addr,
+            MuxConfig { max_conns, ..MuxConfig::default() },
+        ),
+        "threads" => swifttron::coordinator::server::serve_with(router, addr, max_conns),
+        other => Err(format!("unknown front {other:?} (expected mux | threads)")),
+    }
 }
 
 fn cmd_report(_rest: &[String]) -> Result<(), String> {

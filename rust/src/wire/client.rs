@@ -1,0 +1,89 @@
+//! Blocking `SWWIRE1` client — the test / bench / socket-replay side
+//! of the protocol, where per-frame allocation is fine (DESIGN.md
+//! §11).  Supports pipelining: queue any number of request frames,
+//! flush once, then pull responses (which may arrive out of request
+//! order — match on [`ResponseFrame::id`]).
+
+use super::encode::{decode_response, encode_request};
+use super::frame::{ResponseFrame, PREAMBLE};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+pub struct WireClient {
+    stream: TcpStream,
+    wbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+    /// parsed-prefix cursor into `rbuf`
+    rpos: usize,
+}
+
+impl WireClient {
+    /// Connect and send the binary preamble.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<WireClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.write_all(&PREAMBLE)?;
+        Ok(WireClient { stream, wbuf: Vec::new(), rbuf: Vec::new(), rpos: 0 })
+    }
+
+    /// Bound how long [`recv`](WireClient::recv) blocks for the next
+    /// response byte (`None` = forever).
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(timeout)
+    }
+
+    /// Queue one request frame locally (pipelining) — nothing is sent
+    /// until [`flush`](WireClient::flush).
+    pub fn queue(&mut self, id: u64, model: &str, tokens: &[i32]) {
+        encode_request(&mut self.wbuf, id, model, tokens);
+    }
+
+    /// Write all queued frames to the socket.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        if !self.wbuf.is_empty() {
+            self.stream.write_all(&self.wbuf)?;
+            self.wbuf.clear();
+        }
+        Ok(())
+    }
+
+    /// Queue + flush one request.
+    pub fn send(&mut self, id: u64, model: &str, tokens: &[i32]) -> std::io::Result<()> {
+        self.queue(id, model, tokens);
+        self.flush()
+    }
+
+    /// Send raw bytes as-is (tests inject malformed / oversized /
+    /// truncated frames with this).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(bytes)
+    }
+
+    /// Block until one response frame arrives (or the read times out /
+    /// the server closes, both reported as `Err`).
+    pub fn recv(&mut self) -> Result<ResponseFrame, String> {
+        loop {
+            if let Some((n, frame)) = decode_response(&self.rbuf[self.rpos..])? {
+                self.rpos += n;
+                if self.rpos == self.rbuf.len() {
+                    self.rbuf.clear();
+                    self.rpos = 0;
+                }
+                return Ok(frame);
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err("server closed the connection".into()),
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("read: {e}")),
+            }
+        }
+    }
+
+    /// Collect exactly `n` responses, in arrival order.
+    pub fn recv_n(&mut self, n: usize) -> Result<Vec<ResponseFrame>, String> {
+        (0..n).map(|_| self.recv()).collect()
+    }
+}

@@ -1,0 +1,436 @@
+//! Zero-copy pull decoding of `SWWIRE1` frames out of fixed buffers
+//! (DESIGN.md §11).
+//!
+//! [`RingBuf`] is a fixed-capacity compacting read buffer: the socket
+//! reads into [`RingBuf::write_space`], the decoder parses
+//! [`RingBuf::readable`] in place, and [`RingBuf::consume`] retires
+//! parsed bytes.  Compaction (one `copy_within`) happens only when the
+//! write cursor hits the end with consumed bytes at the front, so a
+//! request is parsed from a single contiguous slice — which is what
+//! lets [`FrameDecoder::pull`] hand out borrowed
+//! [`RequestView`]s with no per-request heap allocation (the
+//! picojson-rs `SliceParser` idiom; proved by the counting-allocator
+//! test in `rust/tests/workspace_alloc.rs`).
+//!
+//! Malformed frames are skipped whole-frame via the length prefix and
+//! reported as typed [`DecodeEvent::Malformed`] — the connection
+//! survives.  A frame whose header names a length beyond
+//! [`MAX_FRAME`](super::frame::MAX_FRAME) (or the decoder's configured
+//! ceiling) is reported once as [`DecodeEvent::Oversized`] and its
+//! body is then discarded incrementally as it streams in, so even a
+//! frame larger than the ring itself cannot wedge or tear down the
+//! connection.
+
+use super::frame::{RequestView, HEADER_BYTES, KIND_REQUEST, MAX_FRAME, REQUEST_FIXED};
+
+/// Fixed-capacity compacting read buffer backing one connection.
+pub struct RingBuf {
+    buf: Box<[u8]>,
+    head: usize,
+    tail: usize,
+}
+
+impl RingBuf {
+    pub fn new(capacity: usize) -> RingBuf {
+        assert!(capacity >= HEADER_BYTES + REQUEST_FIXED, "ring too small for any frame");
+        RingBuf { buf: vec![0u8; capacity].into_boxed_slice(), head: 0, tail: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Unparsed bytes, contiguous.
+    pub fn readable(&self) -> &[u8] {
+        &self.buf[self.head..self.tail]
+    }
+
+    pub fn len(&self) -> usize {
+        self.tail - self.head
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head == self.tail
+    }
+
+    /// Retire `n` parsed bytes from the front of [`readable`](RingBuf::readable).
+    pub fn consume(&mut self, n: usize) {
+        debug_assert!(n <= self.len());
+        self.head += n;
+        if self.head == self.tail {
+            self.head = 0;
+            self.tail = 0;
+        }
+    }
+
+    /// Writable tail slice for the next socket read (empty when the
+    /// ring is full of unparsed bytes — backpressure).  Compacts
+    /// first, with one `copy_within`, if consumed front space is all
+    /// that's left.
+    pub fn write_space(&mut self) -> &mut [u8] {
+        if self.tail == self.buf.len() && self.head > 0 {
+            self.buf.copy_within(self.head..self.tail, 0);
+            self.tail -= self.head;
+            self.head = 0;
+        }
+        &mut self.buf[self.tail..]
+    }
+
+    /// Commit `n` bytes just written into [`write_space`](RingBuf::write_space).
+    pub fn commit(&mut self, n: usize) {
+        debug_assert!(self.tail + n <= self.buf.len());
+        self.tail += n;
+    }
+
+    /// Copy `src` in (as a socket read would); returns bytes taken.
+    /// Test/driver convenience — the mux reads directly into
+    /// [`write_space`](RingBuf::write_space).
+    pub fn fill_from(&mut self, src: &[u8]) -> usize {
+        let space = self.write_space();
+        let n = src.len().min(space.len());
+        space[..n].copy_from_slice(&src[..n]);
+        self.commit(n);
+        n
+    }
+}
+
+/// One pull step's outcome.  `Request` borrows the input buffer —
+/// process it before consuming.
+#[derive(Debug)]
+pub enum DecodeEvent<'a> {
+    /// A well-formed request frame, parsed in place.
+    Request(RequestView<'a>),
+    /// A structurally invalid frame; `id` is the frame id when the
+    /// payload was long enough to carry one, else 0.  The frame was
+    /// skipped whole; the stream stays aligned.
+    Malformed { id: u64, reason: &'static str },
+    /// A frame longer than the decoder's ceiling; its body is being
+    /// discarded incrementally.  `id` is best-effort (0 unless the
+    /// payload head had already arrived).
+    Oversized { id: u64, len: u32 },
+}
+
+/// Pull decoder over one connection's frame stream.  Holds only
+/// fixed-size cursor state — the bytes live in the caller's buffer.
+pub struct FrameDecoder {
+    max_frame: usize,
+    /// oversized-frame bytes still to discard
+    discard: u64,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> FrameDecoder {
+        FrameDecoder::new(MAX_FRAME)
+    }
+}
+
+impl FrameDecoder {
+    /// `max_frame` caps the accepted `len` field; it is clamped to
+    /// [`MAX_FRAME`] and must leave room for a minimal request.
+    pub fn new(max_frame: usize) -> FrameDecoder {
+        FrameDecoder { max_frame: max_frame.clamp(REQUEST_FIXED, MAX_FRAME), discard: 0 }
+    }
+
+    /// Decode the next frame out of `buf` (a connection's unparsed
+    /// prefix).  Returns `(consumed, event)`: the caller must retire
+    /// `consumed` bytes after processing the event.  `(0, None)`
+    /// means "need more bytes"; `(n, None)` with `n > 0` means
+    /// oversized-body bytes were discarded and the caller should call
+    /// again.
+    pub fn pull<'a>(&mut self, buf: &'a [u8]) -> (usize, Option<DecodeEvent<'a>>) {
+        if self.discard > 0 {
+            let n = (self.discard).min(buf.len() as u64) as usize;
+            self.discard -= n as u64;
+            return (n, None);
+        }
+        if buf.len() < HEADER_BYTES {
+            return (0, None);
+        }
+        let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        if len > self.max_frame {
+            // Reject now (prompt typed reply) and stream the body into
+            // the void; id is readable only if kind+id already arrived.
+            let id = best_effort_id(&buf[HEADER_BYTES..]);
+            let have = buf.len() - HEADER_BYTES;
+            let eaten = have.min(len);
+            self.discard = (len - eaten) as u64;
+            return (HEADER_BYTES + eaten, Some(DecodeEvent::Oversized { id, len: len as u32 }));
+        }
+        if buf.len() < HEADER_BYTES + len {
+            return (0, None);
+        }
+        let body = &buf[HEADER_BYTES..HEADER_BYTES + len];
+        (HEADER_BYTES + len, Some(parse_request_body(body)))
+    }
+}
+
+fn best_effort_id(body: &[u8]) -> u64 {
+    if body.len() >= 9 {
+        u64::from_le_bytes(body[1..9].try_into().unwrap())
+    } else {
+        0
+    }
+}
+
+/// Validate and slice one request payload.  Every length must be
+/// internally consistent — a frame that lies about its own layout is
+/// `Malformed`, never a panic or an over-read.
+fn parse_request_body(body: &[u8]) -> DecodeEvent<'_> {
+    let id = best_effort_id(body);
+    if body.len() < REQUEST_FIXED {
+        return DecodeEvent::Malformed { id, reason: "frame shorter than request header" };
+    }
+    if body[0] != KIND_REQUEST {
+        return DecodeEvent::Malformed { id, reason: "unexpected frame kind" };
+    }
+    let model_len = body[9] as usize;
+    let ntok_at = 10 + model_len;
+    if body.len() < ntok_at + 2 {
+        return DecodeEvent::Malformed { id, reason: "model id overruns frame" };
+    }
+    let model = match std::str::from_utf8(&body[10..ntok_at]) {
+        Ok(m) => m,
+        Err(_) => return DecodeEvent::Malformed { id, reason: "model id is not utf-8" },
+    };
+    let n_tokens = u16::from_le_bytes([body[ntok_at], body[ntok_at + 1]]) as usize;
+    let tokens = &body[ntok_at + 2..];
+    if tokens.len() != 4 * n_tokens {
+        return DecodeEvent::Malformed { id, reason: "token count disagrees with frame length" };
+    }
+    DecodeEvent::Request(RequestView::new(id, model, tokens))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode;
+    use super::super::frame::ResponseFrame;
+    use super::*;
+
+    fn frame_bytes(id: u64, model: &str, tokens: &[i32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode::encode_request(&mut out, id, model, tokens);
+        out
+    }
+
+    #[test]
+    fn round_trip_single_frame() {
+        let bytes = frame_bytes(7, "tiny", &[3, -17, 42]);
+        let mut dec = FrameDecoder::default();
+        let (n, ev) = dec.pull(&bytes);
+        assert_eq!(n, bytes.len());
+        match ev {
+            Some(DecodeEvent::Request(r)) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.model, "tiny");
+                assert_eq!(r.tokens().collect::<Vec<_>>(), vec![3, -17, 42]);
+                assert_eq!(r.token_count(), 3);
+            }
+            other => panic!("expected request, got {other:?}"),
+        }
+        // stream exhausted
+        assert!(matches!(dec.pull(&bytes[n..]), (0, None)));
+    }
+
+    #[test]
+    fn empty_model_and_empty_tokens_are_well_formed() {
+        let bytes = frame_bytes(1, "", &[]);
+        let mut dec = FrameDecoder::default();
+        let (n, ev) = dec.pull(&bytes);
+        assert_eq!(n, bytes.len());
+        match ev {
+            Some(DecodeEvent::Request(r)) => {
+                assert_eq!(r.model, "");
+                assert_eq!(r.token_count(), 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_frames_wait_for_more_bytes() {
+        let bytes = frame_bytes(9, "deit_s", &[1, 2, 3, 4]);
+        let mut dec = FrameDecoder::default();
+        for cut in 0..bytes.len() {
+            assert!(matches!(dec.pull(&bytes[..cut]), (0, None)), "cut={cut}");
+        }
+        assert!(matches!(dec.pull(&bytes), (_, Some(DecodeEvent::Request(_)))));
+    }
+
+    #[test]
+    fn pipelined_frames_decode_back_to_back() {
+        let mut stream = Vec::new();
+        for id in 0..5u64 {
+            stream.extend_from_slice(&frame_bytes(id, "m", &[id as i32]));
+        }
+        let mut dec = FrameDecoder::default();
+        let mut at = 0;
+        let mut ids = Vec::new();
+        loop {
+            let (n, ev) = dec.pull(&stream[at..]);
+            match ev {
+                Some(DecodeEvent::Request(r)) => ids.push(r.id),
+                Some(other) => panic!("{other:?}"),
+                None if n == 0 => break,
+                None => {}
+            }
+            at += n;
+        }
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert_eq!(at, stream.len());
+    }
+
+    #[test]
+    fn malformed_frames_are_skipped_without_desync() {
+        // token count lies about the payload length
+        let mut bad = frame_bytes(3, "x", &[1, 2]);
+        // corrupt n_tokens (last 8 payload bytes are the two tokens;
+        // the two bytes before them are n_tokens)
+        let ntok_at = bad.len() - 8 - 2;
+        bad[ntok_at] = 99;
+        let good = frame_bytes(4, "x", &[5]);
+        let mut stream = bad.clone();
+        stream.extend_from_slice(&good);
+        let mut dec = FrameDecoder::default();
+        let (n1, ev1) = dec.pull(&stream);
+        assert_eq!(n1, bad.len(), "whole bad frame skipped");
+        match ev1 {
+            Some(DecodeEvent::Malformed { id, .. }) => assert_eq!(id, 3),
+            other => panic!("{other:?}"),
+        }
+        let (_, ev2) = dec.pull(&stream[n1..]);
+        assert!(
+            matches!(ev2, Some(DecodeEvent::Request(r)) if r.id == 4),
+            "stream realigned after malformed frame"
+        );
+    }
+
+    #[test]
+    fn wrong_kind_and_bad_utf8_are_malformed() {
+        let mut wrong_kind = frame_bytes(1, "", &[]);
+        wrong_kind[HEADER_BYTES] = 9;
+        let mut dec = FrameDecoder::default();
+        assert!(matches!(dec.pull(&wrong_kind), (_, Some(DecodeEvent::Malformed { .. }))));
+
+        let mut bad_utf8 = frame_bytes(2, "ab", &[]);
+        bad_utf8[HEADER_BYTES + 10] = 0xff;
+        assert!(matches!(
+            dec.pull(&bad_utf8),
+            (_, Some(DecodeEvent::Malformed { reason: "model id is not utf-8", .. }))
+        ));
+    }
+
+    #[test]
+    fn oversized_frame_streams_to_the_void_then_realigns() {
+        let mut dec = FrameDecoder::new(64);
+        // header claiming 1000 bytes, body trickling in
+        let mut stream = 1000u32.to_le_bytes().to_vec();
+        stream.extend_from_slice(&[KIND_REQUEST]);
+        stream.extend_from_slice(&77u64.to_le_bytes());
+        let (n, ev) = dec.pull(&stream);
+        assert_eq!(n, stream.len(), "header + available body consumed");
+        match ev {
+            Some(DecodeEvent::Oversized { id, len }) => {
+                assert_eq!(id, 77);
+                assert_eq!(len, 1000);
+            }
+            other => panic!("{other:?}"),
+        }
+        // 1000 - 9 bytes still owed; feed them in two chunks, then a
+        // good frame — no event until the body is gone, then realigned
+        let owed = 1000 - 9;
+        let chunk = vec![0u8; owed - 10];
+        let (n, ev) = dec.pull(&chunk);
+        assert_eq!(n, chunk.len());
+        assert!(ev.is_none());
+        let mut rest = vec![0u8; 10];
+        rest.extend_from_slice(&frame_bytes(5, "ok", &[1]));
+        let (n, ev) = dec.pull(&rest);
+        assert_eq!(n, 10);
+        assert!(ev.is_none());
+        let (_, ev) = dec.pull(&rest[n..]);
+        assert!(matches!(ev, Some(DecodeEvent::Request(r)) if r.id == 5));
+    }
+
+    #[test]
+    fn ring_buffer_compacts_and_backpressures() {
+        let mut ring = RingBuf::new(32);
+        assert_eq!(ring.capacity(), 32);
+        assert_eq!(ring.fill_from(&[1; 32]), 32);
+        assert!(ring.write_space().is_empty(), "full ring takes nothing");
+        assert_eq!(ring.fill_from(&[2; 8]), 0);
+        ring.consume(30);
+        assert_eq!(ring.readable(), &[1, 1]);
+        // compaction moves the 2-byte tail to the front, freeing 30
+        assert_eq!(ring.fill_from(&[3; 40]), 30);
+        assert_eq!(ring.len(), 32);
+        assert_eq!(&ring.readable()[..2], &[1, 1]);
+        assert_eq!(ring.readable()[2], 3);
+        ring.consume(32);
+        assert!(ring.is_empty());
+        assert_eq!(ring.write_space().len(), 32, "empty ring resets cursors");
+    }
+
+    #[test]
+    fn decoder_over_ring_handles_frames_split_across_reads() {
+        let mut stream = Vec::new();
+        for id in 0..40u64 {
+            stream.extend_from_slice(&frame_bytes(id, "tiny", &[1, 2, 3, 4, 5, 6, 7]));
+        }
+        let mut ring = RingBuf::new(64); // smaller than 2 frames
+        let mut dec = FrameDecoder::default();
+        let mut fed = 0;
+        let mut ids = Vec::new();
+        while fed < stream.len() || !ring.is_empty() {
+            fed += ring.fill_from(&stream[fed..]);
+            loop {
+                let (n, ev) = dec.pull(ring.readable());
+                if let Some(DecodeEvent::Request(r)) = ev {
+                    ids.push(r.id);
+                } else if let Some(other) = ev {
+                    panic!("{other:?}");
+                }
+                if n == 0 {
+                    break;
+                }
+                ring.consume(n);
+            }
+        }
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn client_decode_response_round_trips_every_kind() {
+        let mut buf = Vec::new();
+        encode::encode_ok(&mut buf, 11, 2, 4, &[9, -9, 3], 0.25, 1234.5);
+        encode::encode_error(&mut buf, 12, "bad length");
+        encode::encode_overloaded(&mut buf, 13, 88.5, 40.0);
+        encode::encode_busy(&mut buf, 256);
+        let mut at = 0;
+        let mut frames = Vec::new();
+        while at < buf.len() {
+            let (n, f) = encode::decode_response(&buf[at..]).unwrap().unwrap();
+            frames.push(f);
+            at += n;
+        }
+        assert_eq!(frames.len(), 4);
+        match &frames[0] {
+            ResponseFrame::Ok { id, replica, label, logits, accel_ms, e2e_us } => {
+                assert_eq!((*id, *replica, *label), (11, 2, 4));
+                assert_eq!(logits, &vec![9, -9, 3]);
+                assert!((accel_ms - 0.25).abs() < 1e-12 && (e2e_us - 1234.5).abs() < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            frames[1],
+            ResponseFrame::Error { id: 12, message: "bad length".into() }
+        );
+        assert_eq!(
+            frames[2],
+            ResponseFrame::Overloaded { id: 13, predicted_ms: 88.5, slo_ms: 40.0 }
+        );
+        assert_eq!(frames[3], ResponseFrame::Busy { limit: 256 });
+        // truncated stream: needs more bytes, not an error
+        assert!(encode::decode_response(&buf[..3]).unwrap().is_none());
+    }
+}

@@ -1,0 +1,270 @@
+//! `SWWIRE1` frame encoding into reusable buffers, plus the client's
+//! owned response decoder (DESIGN.md §11).
+//!
+//! Every `encode_*` appends one complete frame to `out` — the mux
+//! keeps one `Vec<u8>` write buffer per connection and reuses its
+//! capacity, so the steady-state encode path allocates only when a
+//! response outgrows every previous one.
+
+use super::frame::{
+    ResponseFrame, HEADER_BYTES, KIND_BUSY, KIND_ERROR, KIND_OK, KIND_OVERLOADED, KIND_REQUEST,
+    MAX_FRAME,
+};
+use crate::coordinator::Response;
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Reserve a length prefix, run `body`, then patch the prefix with the
+/// bytes the body appended.
+fn framed(out: &mut Vec<u8>, body: impl FnOnce(&mut Vec<u8>)) {
+    let at = out.len();
+    put_u32(out, 0);
+    body(out);
+    let len = out.len() - at - HEADER_BYTES;
+    debug_assert!(len <= MAX_FRAME);
+    out[at..at + HEADER_BYTES].copy_from_slice(&(len as u32).to_le_bytes());
+}
+
+/// Append one request frame.  `model` empty targets the default model.
+pub fn encode_request(out: &mut Vec<u8>, id: u64, model: &str, tokens: &[i32]) {
+    assert!(model.len() <= u8::MAX as usize, "model id too long for the wire");
+    assert!(tokens.len() <= u16::MAX as usize, "token count too long for the wire");
+    framed(out, |out| {
+        out.push(KIND_REQUEST);
+        put_u64(out, id);
+        out.push(model.len() as u8);
+        out.extend_from_slice(model.as_bytes());
+        put_u16(out, tokens.len() as u16);
+        for &t in tokens {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+    });
+}
+
+/// Append one `Ok` response frame.
+pub fn encode_ok(
+    out: &mut Vec<u8>,
+    id: u64,
+    replica: u32,
+    label: u16,
+    logits: &[i64],
+    accel_ms: f64,
+    e2e_us: f64,
+) {
+    framed(out, |out| {
+        out.push(KIND_OK);
+        put_u64(out, id);
+        put_u32(out, replica);
+        put_u16(out, label);
+        put_f64(out, accel_ms);
+        put_f64(out, e2e_us);
+        put_u16(out, logits.len().min(u16::MAX as usize) as u16);
+        for &l in logits.iter().take(u16::MAX as usize) {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+    });
+}
+
+/// Append one typed `Error` response frame.
+pub fn encode_error(out: &mut Vec<u8>, id: u64, message: &str) {
+    let msg = &message.as_bytes()[..message.len().min(u16::MAX as usize)];
+    framed(out, |out| {
+        out.push(KIND_ERROR);
+        put_u64(out, id);
+        put_u16(out, msg.len() as u16);
+        out.extend_from_slice(msg);
+    });
+}
+
+/// Append one `Overloaded` admission-rejection frame: the predicted
+/// queueing delay that crossed `slo_ms` (DESIGN.md §11 shed rule).
+pub fn encode_overloaded(out: &mut Vec<u8>, id: u64, predicted_ms: f64, slo_ms: f64) {
+    framed(out, |out| {
+        out.push(KIND_OVERLOADED);
+        put_u64(out, id);
+        put_f64(out, predicted_ms);
+        put_f64(out, slo_ms);
+    });
+}
+
+/// Append one `Busy` connection-cap rejection frame (the server closes
+/// the connection right after).
+pub fn encode_busy(out: &mut Vec<u8>, limit: u32) {
+    framed(out, |out| {
+        out.push(KIND_BUSY);
+        put_u64(out, 0);
+        put_u32(out, limit);
+    });
+}
+
+/// Encode a router [`Response`] as the frame answering client frame
+/// `id` (the router's own response id is transport-internal).
+pub fn encode_response(out: &mut Vec<u8>, id: u64, resp: &Response) {
+    match &resp.error {
+        Some(e) => encode_error(out, id, e),
+        None => encode_ok(
+            out,
+            id,
+            resp.replica.min(u32::MAX as usize) as u32,
+            resp.label.min(u16::MAX as usize) as u16,
+            &resp.logits,
+            resp.accel_ms,
+            resp.e2e_s * 1e6,
+        ),
+    }
+}
+
+fn take<'a>(buf: &mut &'a [u8], n: usize) -> Result<&'a [u8], String> {
+    if buf.len() < n {
+        return Err("response frame truncated".into());
+    }
+    let (head, rest) = buf.split_at(n);
+    *buf = rest;
+    Ok(head)
+}
+
+fn take_u64(buf: &mut &[u8]) -> Result<u64, String> {
+    Ok(u64::from_le_bytes(take(buf, 8)?.try_into().unwrap()))
+}
+
+fn take_u32(buf: &mut &[u8]) -> Result<u32, String> {
+    Ok(u32::from_le_bytes(take(buf, 4)?.try_into().unwrap()))
+}
+
+fn take_u16(buf: &mut &[u8]) -> Result<u16, String> {
+    Ok(u16::from_le_bytes(take(buf, 2)?.try_into().unwrap()))
+}
+
+fn take_f64(buf: &mut &[u8]) -> Result<f64, String> {
+    Ok(f64::from_le_bytes(take(buf, 8)?.try_into().unwrap()))
+}
+
+/// Decode one response frame off the front of `buf` (client side;
+/// owned, allocation is fine here).  `Ok(None)` means more bytes are
+/// needed; `Ok(Some((consumed, frame)))` yields one frame.
+pub fn decode_response(buf: &[u8]) -> Result<Option<(usize, ResponseFrame)>, String> {
+    if buf.len() < HEADER_BYTES {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..HEADER_BYTES].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(format!("response frame len {len} exceeds maximum {MAX_FRAME}"));
+    }
+    if buf.len() < HEADER_BYTES + len {
+        return Ok(None);
+    }
+    let mut body = &buf[HEADER_BYTES..HEADER_BYTES + len];
+    let b = &mut body;
+    let kind = take(b, 1)?[0];
+    let frame = match kind {
+        KIND_OK => {
+            let id = take_u64(b)?;
+            let replica = take_u32(b)?;
+            let label = take_u16(b)?;
+            let accel_ms = take_f64(b)?;
+            let e2e_us = take_f64(b)?;
+            let n = take_u16(b)? as usize;
+            let raw = take(b, 8 * n)?;
+            let logits =
+                raw.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect();
+            ResponseFrame::Ok { id, replica, label, logits, accel_ms, e2e_us }
+        }
+        KIND_ERROR => {
+            let id = take_u64(b)?;
+            let n = take_u16(b)? as usize;
+            let message = String::from_utf8_lossy(take(b, n)?).into_owned();
+            ResponseFrame::Error { id, message }
+        }
+        KIND_OVERLOADED => {
+            let id = take_u64(b)?;
+            let predicted_ms = take_f64(b)?;
+            let slo_ms = take_f64(b)?;
+            ResponseFrame::Overloaded { id, predicted_ms, slo_ms }
+        }
+        KIND_BUSY => {
+            let _id = take_u64(b)?;
+            let limit = take_u32(b)?;
+            ResponseFrame::Busy { limit }
+        }
+        k => return Err(format!("unknown response frame kind {k}")),
+    };
+    Ok(Some((HEADER_BYTES + len, frame)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_response_picks_ok_or_error_kind() {
+        let ok = Response {
+            id: 900,
+            model: "tiny".into(),
+            replica: 3,
+            label: 1,
+            logits: vec![4, 5],
+            accel_ms: 0.5,
+            e2e_s: 0.002,
+            error: None,
+        };
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 42, &ok);
+        let (_, frame) = decode_response(&buf).unwrap().unwrap();
+        match frame {
+            ResponseFrame::Ok { id, replica, label, logits, e2e_us, .. } => {
+                assert_eq!(id, 42, "wire id is the client frame id, not the router id");
+                assert_eq!((replica, label), (3, 1));
+                assert_eq!(logits, vec![4, 5]);
+                assert!((e2e_us - 2000.0).abs() < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let err = Response { error: Some("boom".into()), logits: vec![], ..ok };
+        buf.clear();
+        encode_response(&mut buf, 43, &err);
+        let (_, frame) = decode_response(&buf).unwrap().unwrap();
+        assert_eq!(frame, ResponseFrame::Error { id: 43, message: "boom".into() });
+    }
+
+    #[test]
+    fn reused_buffer_appends_frames_without_clearing() {
+        let mut buf = Vec::new();
+        encode_busy(&mut buf, 10);
+        let first = buf.len();
+        encode_overloaded(&mut buf, 1, 2.0, 1.0);
+        let (n, f) = decode_response(&buf).unwrap().unwrap();
+        assert_eq!(n, first);
+        assert_eq!(f, ResponseFrame::Busy { limit: 10 });
+        let (_, f2) = decode_response(&buf[n..]).unwrap().unwrap();
+        assert!(f2.is_overloaded());
+    }
+
+    #[test]
+    fn long_error_messages_are_truncated_not_rejected() {
+        let mut buf = Vec::new();
+        let long = "x".repeat(80_000);
+        encode_error(&mut buf, 1, &long);
+        let (_, f) = decode_response(&buf).unwrap().unwrap();
+        match f {
+            ResponseFrame::Error { message, .. } => {
+                assert_eq!(message.len(), u16::MAX as usize)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

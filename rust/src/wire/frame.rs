@@ -1,0 +1,124 @@
+//! `SWWIRE1` byte layout (DESIGN.md §11).
+//!
+//! A binary connection opens with the 8-byte preamble [`PREAMBLE`];
+//! everything after it is a stream of frames:
+//!
+//! ```text
+//! u32  len        # bytes that follow this field (little-endian)
+//! u8   kind       # KIND_*
+//! ...  payload    # kind-specific, all integers little-endian
+//! ```
+//!
+//! Request (`kind = 1`, client → server):
+//!
+//! ```text
+//! u64  id          # client-chosen frame id, echoed on the response
+//! u8   model_len   # 0 = default model (index 0)
+//! [u8] model       # utf-8 model id, model_len bytes
+//! u16  n_tokens
+//! [i32] tokens     # n_tokens little-endian i32s
+//! ```
+//!
+//! Responses (server → client) echo the request's frame id:
+//! `Ok` (`kind = 2`) carries replica / label / logits / timing,
+//! `Error` (`kind = 3`) a typed message, `Overloaded` (`kind = 4`) the
+//! predicted queueing delay and the SLO it crossed (admission
+//! rejection — resubmit later), and `Busy` (`kind = 5`, id 0) the
+//! connection cap that refused the whole connection.
+
+/// Connection preamble a binary client sends first.  The legacy text
+/// protocol is detected by the first byte that diverges from this
+/// sequence — text lines start with a printable token digit or model
+/// character, never `0x00`-terminated magic.
+pub const PREAMBLE: [u8; 8] = *b"SWWIRE1\0";
+
+/// Frame length prefix size (the `u32 len` field).
+pub const HEADER_BYTES: usize = 4;
+
+/// Request frame payload kind.
+pub const KIND_REQUEST: u8 = 1;
+/// Successful response payload kind.
+pub const KIND_OK: u8 = 2;
+/// Typed error response payload kind.
+pub const KIND_ERROR: u8 = 3;
+/// SLO admission rejection payload kind.
+pub const KIND_OVERLOADED: u8 = 4;
+/// Connection-cap rejection payload kind (sent once, then close).
+pub const KIND_BUSY: u8 = 5;
+
+/// Fixed request payload bytes around the variable model / token
+/// sections: kind + id + model_len + n_tokens.
+pub const REQUEST_FIXED: usize = 1 + 8 + 1 + 2;
+
+/// Hard ceiling on a frame's `len` field, independent of (and above)
+/// any per-connection buffer bound.  A 64 KiB ring fits ~16k-token
+/// requests; 1 MiB is far past any serveable sequence.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// A request parsed *in place* out of a connection's read buffer: the
+/// model id and token bytes borrow the buffer, nothing is copied or
+/// allocated (the zero-copy half of the decode hot path).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestView<'a> {
+    /// client-chosen frame id (echoed on the response)
+    pub id: u64,
+    /// model id; empty targets the default model (index 0)
+    pub model: &'a str,
+    /// raw little-endian token bytes, length `4 · n_tokens`
+    tokens: &'a [u8],
+}
+
+impl<'a> RequestView<'a> {
+    pub(crate) fn new(id: u64, model: &'a str, tokens: &'a [u8]) -> RequestView<'a> {
+        debug_assert_eq!(tokens.len() % 4, 0);
+        RequestView { id, model, tokens }
+    }
+
+    pub fn token_count(&self) -> usize {
+        self.tokens.len() / 4
+    }
+
+    /// Decode tokens on the fly, no allocation.
+    pub fn tokens(&self) -> impl Iterator<Item = i32> + 'a {
+        self.tokens.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+    }
+
+    /// Append the decoded tokens to `out` (clears it first).  With a
+    /// warm `out` capacity this allocates nothing.
+    pub fn read_tokens_into(&self, out: &mut Vec<i32>) {
+        out.clear();
+        out.extend(self.tokens());
+    }
+}
+
+/// A decoded response frame, owned — the *client* side of the
+/// protocol (tests, socket replay, benches), where per-frame
+/// allocation is fine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseFrame {
+    Ok { id: u64, replica: u32, label: u16, logits: Vec<i64>, accel_ms: f64, e2e_us: f64 },
+    Error { id: u64, message: String },
+    Overloaded { id: u64, predicted_ms: f64, slo_ms: f64 },
+    Busy { limit: u32 },
+}
+
+impl ResponseFrame {
+    /// The request frame id this response answers (0 for `Busy`,
+    /// which rejects the connection, not a frame).
+    pub fn id(&self) -> u64 {
+        match self {
+            ResponseFrame::Ok { id, .. }
+            | ResponseFrame::Error { id, .. }
+            | ResponseFrame::Overloaded { id, .. } => *id,
+            ResponseFrame::Busy { .. } => 0,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, ResponseFrame::Ok { .. })
+    }
+
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, ResponseFrame::Overloaded { .. })
+    }
+}

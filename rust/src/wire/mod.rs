@@ -1,0 +1,48 @@
+//! `SWWIRE1` — the length-prefixed binary wire protocol and the
+//! non-blocking connection multiplexer behind `swifttron serve`
+//! (DESIGN.md §11).
+//!
+//! The legacy front door (`coordinator::server`) speaks
+//! newline-delimited text: one thread per connection, one `String`
+//! allocation per request line, one blocking `recv` per response.
+//! That was fine for a demo client and is hopeless for thousands of
+//! connections.  This module replaces it with:
+//!
+//! * [`frame`] — the byte layout: an 8-byte connection preamble
+//!   (`b"SWWIRE1\0"`) followed by little-endian length-prefixed
+//!   frames.  Request frames carry id / model id / token slice;
+//!   response frames carry id / label / logits / timing, plus typed
+//!   `Error`, `Overloaded` (SLO admission rejection) and `Busy`
+//!   (connection-cap rejection) kinds.
+//! * [`decode`] — a zero-copy pull decoder in the idiom of
+//!   picojson-rs's `SliceParser`: requests are parsed *in place* out
+//!   of a fixed per-connection ring buffer ([`decode::RingBuf`]),
+//!   yielding borrowed [`frame::RequestView`]s.  After warm-up the
+//!   decode hot path performs **zero heap allocations per request**
+//!   (proved by the counting-allocator harness in
+//!   `rust/tests/workspace_alloc.rs`).
+//! * [`encode`] — the mirror image: responses are serialized into a
+//!   reusable per-connection output buffer, no intermediate strings.
+//! * [`mux`] — the non-blocking multiplexer: N connections per I/O
+//!   thread over `set_nonblocking` sockets in a level-triggered loop
+//!   (std only, no new dependencies), bounded per-connection
+//!   read/write buffers, out-of-order completion keyed by frame id,
+//!   backpressure into the batcher when a write buffer fills, and
+//!   SLO-derived admission control (predicted queueing delay
+//!   `backlog · mean_exec_ms / active_replicas` vs the group's
+//!   `slo_ms` — the same signal the autoscaler trusts).  The legacy
+//!   text protocol survives behind auto-detection on a connection's
+//!   first bytes.
+//! * [`client`] — a small blocking client used by tests, the workload
+//!   driver's socket replay, and the ingest benches.
+
+pub mod client;
+pub mod decode;
+pub mod encode;
+pub mod frame;
+pub mod mux;
+
+pub use client::WireClient;
+pub use decode::{DecodeEvent, FrameDecoder, RingBuf};
+pub use frame::{RequestView, ResponseFrame, PREAMBLE};
+pub use mux::{MuxConfig, MuxServer};

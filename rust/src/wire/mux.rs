@@ -1,0 +1,639 @@
+//! Non-blocking connection multiplexer over the `SWWIRE1` protocol
+//! (DESIGN.md §11).
+//!
+//! One accept thread feeds connections round-robin to `io_threads`
+//! event-loop threads; each loop owns its connections outright (slab
+//! of slots, no cross-thread connection state) and runs level-
+//! triggered over `set_nonblocking` sockets — std only, no new
+//! dependencies:
+//!
+//! ```text
+//! tick per connection:
+//!   flush  write buffer -> socket     (stop on WouldBlock)
+//!   read   socket -> ring buffer      (stop on WouldBlock / ring full)
+//!   parse  ring buffer:
+//!     Detect  compare first bytes against the SWWIRE1 preamble
+//!             (mismatch => legacy text mode; nothing consumed)
+//!     Binary  zero-copy pull decode; per request:
+//!               admission check -> Overloaded frame   (shed)
+//!               else Router::submit_index, pending[router_id] = frame
+//!     Text    split lines, parse_tokens, same admission/submit path
+//!   ...but only while the write buffer is under its bound —
+//!   a slow reader stops being parsed, its ring fills, the kernel
+//!   window closes: backpressure instead of unbounded buffering.
+//! park on the response channel when nothing progressed.
+//! ```
+//!
+//! Responses arrive on a per-io-thread mpsc channel (each submit
+//! clones the thread's sender) and complete **out of order**: the
+//! pending map routes a router response id back to `(connection,
+//! client frame id)`, so a fast model's replies overtake a slow
+//! model's on the same connection — no head-of-line blocking and no
+//! thread parked per in-flight request.
+//!
+//! Admission control: a frame for a model whose predicted queueing
+//! delay `backlog · mean_exec_ms / active_replicas` (the autoscaler's
+//! own signal, [`Router::overload_delay_ms`]) exceeds
+//! `shed_ratio · slo_ms` is answered immediately with a typed
+//! `Overloaded` frame (JSON error line in text mode) and never enters
+//! the queue.  Models without an SLO are never shed.
+
+use super::decode::{DecodeEvent, FrameDecoder, RingBuf};
+use super::encode;
+use super::frame::PREAMBLE;
+use crate::coordinator::server::{parse_tokens, response_json};
+use crate::coordinator::{Response, Router};
+use crate::util::json::{obj, Json};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct MuxConfig {
+    /// event-loop threads; connections are dealt round-robin
+    pub io_threads: usize,
+    /// global cap on open connections (typed `Busy` rejection past it)
+    pub max_conns: usize,
+    /// per-connection ring buffer (also bounds the largest admissible
+    /// frame)
+    pub read_buf: usize,
+    /// per-connection write-buffer bound: past it the connection stops
+    /// being parsed until the client drains responses (backpressure)
+    pub write_buf: usize,
+    /// shed when predicted delay exceeds `shed_ratio · slo_ms`
+    pub shed_ratio: f64,
+    /// service-time estimate before a model's first completion
+    /// (mirrors `AutoscalePolicy::default_service_ms`)
+    pub default_service_ms: f64,
+    /// idle park on the response channel when a tick makes no progress
+    pub park: Duration,
+}
+
+impl Default for MuxConfig {
+    fn default() -> MuxConfig {
+        MuxConfig {
+            io_threads: 2,
+            max_conns: 4096,
+            read_buf: 64 * 1024,
+            write_buf: 256 * 1024,
+            shed_ratio: 1.0,
+            default_service_ms: 1.0,
+            park: Duration::from_millis(1),
+        }
+    }
+}
+
+/// The running multiplexer: accept thread + io threads.  Dropping it
+/// stops the threads too ([`shutdown`](MuxServer::shutdown) is the
+/// explicit form).
+pub struct MuxServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    io: Vec<JoinHandle<()>>,
+}
+
+impl MuxServer {
+    /// Bind `addr` (port 0 for ephemeral) and start serving `router`.
+    pub fn start(router: Arc<Router>, addr: &str, cfg: MuxConfig) -> Result<MuxServer, String> {
+        let cfg = MuxConfig {
+            io_threads: cfg.io_threads.max(1),
+            max_conns: cfg.max_conns.max(1),
+            read_buf: cfg.read_buf.max(256),
+            write_buf: cfg.write_buf.max(1024),
+            ..cfg
+        };
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        listener.set_nonblocking(true).map_err(|e| e.to_string())?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut intakes = Vec::new();
+        let mut io = Vec::new();
+        for i in 0..cfg.io_threads {
+            let (tx, rx) = channel::<TcpStream>();
+            intakes.push(tx);
+            let router = Arc::clone(&router);
+            let cfg = cfg.clone();
+            let flag = Arc::clone(&shutdown);
+            io.push(
+                std::thread::Builder::new()
+                    .name(format!("swifttron-mux-io-{i}"))
+                    .spawn(move || io_loop(router, cfg, rx, flag))
+                    .map_err(|e| e.to_string())?,
+            );
+        }
+        let flag = Arc::clone(&shutdown);
+        let cfg_accept = cfg.clone();
+        let accept = std::thread::Builder::new()
+            .name("swifttron-mux-accept".into())
+            .spawn(move || accept_loop(router, listener, intakes, cfg_accept, flag))
+            .map_err(|e| e.to_string())?;
+        Ok(MuxServer { addr, shutdown, accept: Some(accept), io })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, let the io threads flush every pending response
+    /// (bounded grace), then join everything.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for MuxServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for t in self.io.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Bind and serve forever (the `swifttron serve --front mux` path).
+pub fn serve_mux(router: Arc<Router>, addr: &str, cfg: MuxConfig) -> Result<(), String> {
+    let server = MuxServer::start(Arc::clone(&router), addr, cfg)?;
+    eprintln!(
+        "swifttron mux serving on {} (models: {:?})",
+        server.local_addr(),
+        router.model_names()
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+/// Accept connections and deal them round-robin to the io threads.
+/// Past the cap a client is answered with both rejection dialects
+/// (protocol unknown at accept time): one binary `Busy` frame plus one
+/// `{"error":"busy"}` text line, then close.
+fn accept_loop(
+    router: Arc<Router>,
+    listener: TcpListener,
+    intakes: Vec<Sender<TcpStream>>,
+    cfg: MuxConfig,
+    shutdown: Arc<AtomicBool>,
+) {
+    let metrics = Arc::clone(&router.metrics);
+    let mut next = 0usize;
+    let mut busy = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                if metrics.conns_open.load(Ordering::SeqCst) >= cfg.max_conns as u64 {
+                    metrics.record_conn_rejected();
+                    busy.clear();
+                    encode::encode_busy(&mut busy, cfg.max_conns as u32);
+                    busy.extend_from_slice(
+                        obj([("error", Json::from("busy"))]).to_string().as_bytes(),
+                    );
+                    busy.push(b'\n');
+                    let _ = s.write_all(&busy);
+                    continue;
+                }
+                metrics.record_conn_opened();
+                if intakes[next % intakes.len()].send(s).is_err() {
+                    return; // io thread gone: shutting down
+                }
+                next += 1;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(cfg.park);
+            }
+            Err(e) => eprintln!("mux accept error: {e}"),
+        }
+    }
+}
+
+/// What protocol a connection speaks; decided by its first bytes.
+enum Mode {
+    /// not enough bytes yet to tell
+    Detect,
+    Binary,
+    Text,
+}
+
+struct Conn {
+    stream: TcpStream,
+    mode: Mode,
+    rbuf: RingBuf,
+    dec: FrameDecoder,
+    /// response bytes not yet accepted by the kernel; `wpos` is the
+    /// flushed prefix
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// requests submitted to the router, response not yet buffered
+    pending: usize,
+    read_closed: bool,
+    /// hard error: reap without waiting for pending
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, cfg: &MuxConfig) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true).ok();
+        Ok(Conn {
+            stream,
+            mode: Mode::Detect,
+            rbuf: RingBuf::new(cfg.read_buf),
+            dec: FrameDecoder::new(cfg.read_buf.saturating_sub(super::frame::HEADER_BYTES)),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: 0,
+            read_closed: false,
+            dead: false,
+        })
+    }
+
+    fn unflushed(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Push buffered response bytes into the socket until it would
+    /// block.  Returns true if any byte moved.
+    fn flush(&mut self) -> bool {
+        let mut progressed = false;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() && self.wpos > 0 {
+            // fully drained: recycle the buffer's capacity
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        progressed
+    }
+
+    /// Pull socket bytes into the ring until it would block or the
+    /// ring is full (parse-side backpressure).  Returns true if any
+    /// byte arrived.
+    fn fill(&mut self) -> bool {
+        if self.read_closed || self.dead {
+            return false;
+        }
+        let mut progressed = false;
+        loop {
+            let space = self.rbuf.write_space();
+            if space.is_empty() {
+                break;
+            }
+            match self.stream.read(space) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.commit(n);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    /// Done and safe to drop: everything parsed was answered and
+    /// flushed, and no more bytes will come.
+    fn finished(&self) -> bool {
+        self.dead || (self.read_closed && self.pending == 0 && self.unflushed() == 0)
+    }
+}
+
+/// Where a router response must be delivered: connection slot (with
+/// its generation, against slot reuse), the client's frame id, and
+/// the dialect to encode with.
+struct PendingReply {
+    slot: usize,
+    gen: u64,
+    frame_id: u64,
+    text: bool,
+}
+
+/// One parsed request headed for admission: the model resolved to its
+/// index, or the unknown name (the cold path that produces the typed
+/// unknown-model error via `submit_to`).
+type ResolvedModel = Result<usize, String>;
+
+struct IoThread {
+    router: Arc<Router>,
+    cfg: MuxConfig,
+    slots: Vec<Option<Conn>>,
+    gens: Vec<u64>,
+    pending: HashMap<u64, PendingReply>,
+    resp_tx: Sender<Response>,
+}
+
+impl IoThread {
+    /// Admission + submit for one parsed request; appends the typed
+    /// rejection or registers the pending reply.  Shared by the binary
+    /// and text paths.
+    fn admit(
+        &mut self,
+        slot: usize,
+        frame_id: u64,
+        text: bool,
+        model: ResolvedModel,
+        tokens: Vec<i32>,
+    ) {
+        let id = match model {
+            Ok(idx) => {
+                if let Some((predicted, slo)) = self.router.overload_delay_ms(
+                    idx,
+                    self.cfg.shed_ratio,
+                    self.cfg.default_service_ms,
+                ) {
+                    self.router.metrics.record_shed(idx);
+                    let name = if text {
+                        self.router.metrics.model_name(idx).unwrap_or_default()
+                    } else {
+                        String::new()
+                    };
+                    let conn = self.slots[slot].as_mut().expect("admit on live slot");
+                    if text {
+                        let line = obj([
+                            ("error", Json::from("overloaded")),
+                            ("model", Json::from(name.as_str())),
+                            ("predicted_ms", Json::from(predicted)),
+                            ("slo_ms", Json::from(slo)),
+                        ]);
+                        conn.wbuf.extend_from_slice(line.to_string().as_bytes());
+                        conn.wbuf.push(b'\n');
+                    } else {
+                        encode::encode_overloaded(&mut conn.wbuf, frame_id, predicted, slo);
+                    }
+                    return;
+                }
+                self.router.submit_index(idx, tokens, self.resp_tx.clone())
+            }
+            // unknown model: submit_to answers with the typed
+            // unknown-model error through the same reply channel
+            Err(name) => self.router.submit_to(&name, tokens, self.resp_tx.clone()),
+        };
+        let conn = self.slots[slot].as_mut().expect("admit on live slot");
+        conn.pending += 1;
+        self.pending.insert(id, PendingReply { slot, gen: self.gens[slot], frame_id, text });
+    }
+
+    /// Deliver one router response into its connection's write buffer
+    /// (dropped if the connection died first).
+    fn route(&mut self, resp: Response) {
+        let Some(p) = self.pending.remove(&resp.id) else { return };
+        if self.gens[p.slot] != p.gen {
+            return; // slot was reused; the original connection is gone
+        }
+        let Some(conn) = self.slots[p.slot].as_mut() else { return };
+        conn.pending -= 1;
+        if p.text {
+            conn.wbuf.extend_from_slice(response_json(&resp).as_bytes());
+            conn.wbuf.push(b'\n');
+        } else {
+            encode::encode_response(&mut conn.wbuf, p.frame_id, &resp);
+        }
+    }
+
+    /// Parse as much of one connection's ring as the write-buffer
+    /// bound allows.  Returns true on progress.
+    fn parse(&mut self, slot: usize) -> bool {
+        let mut progressed = false;
+        loop {
+            let conn = self.slots[slot].as_mut().expect("parse on live slot");
+            if conn.dead || conn.unflushed() > self.cfg.write_buf {
+                break; // backpressure: stop consuming, ring will fill
+            }
+            match conn.mode {
+                Mode::Detect => {
+                    let data = conn.rbuf.readable();
+                    let n = data.len().min(PREAMBLE.len());
+                    if data[..n] != PREAMBLE[..n] {
+                        conn.mode = Mode::Text; // nothing consumed
+                    } else if n == PREAMBLE.len() {
+                        conn.rbuf.consume(n);
+                        conn.mode = Mode::Binary;
+                    } else if conn.read_closed {
+                        conn.dead = true; // EOF inside the preamble
+                        break;
+                    } else {
+                        break; // need more bytes to tell
+                    }
+                    progressed = true;
+                }
+                Mode::Binary => {
+                    // Decode one frame; the event borrows the ring, so
+                    // the request's model index is resolved and its
+                    // tokens copied out before the bytes are retired.
+                    let (consumed, parsed) = {
+                        let (consumed, ev) = conn.dec.pull(conn.rbuf.readable());
+                        let parsed = match ev {
+                            Some(DecodeEvent::Request(r)) => {
+                                let model: ResolvedModel = if r.model.is_empty() {
+                                    Ok(0)
+                                } else {
+                                    self.router
+                                        .model_index(r.model)
+                                        .ok_or_else(|| r.model.to_string())
+                                };
+                                let mut tokens = Vec::with_capacity(r.token_count());
+                                tokens.extend(r.tokens());
+                                Some((r.id, model, tokens))
+                            }
+                            Some(DecodeEvent::Malformed { id, reason }) => {
+                                encode::encode_error(&mut conn.wbuf, id, reason);
+                                None
+                            }
+                            Some(DecodeEvent::Oversized { id, len }) => {
+                                let cap = conn.rbuf.capacity();
+                                encode::encode_error(
+                                    &mut conn.wbuf,
+                                    id,
+                                    &format!("frame of {len} bytes exceeds the {cap} byte limit"),
+                                );
+                                None
+                            }
+                            None => None,
+                        };
+                        (consumed, parsed)
+                    };
+                    if consumed == 0 && parsed.is_none() {
+                        if conn.read_closed && !conn.rbuf.is_empty() {
+                            conn.dead = true; // EOF mid-frame: truncated
+                        }
+                        break;
+                    }
+                    conn.rbuf.consume(consumed);
+                    progressed = true;
+                    if let Some((frame_id, model, tokens)) = parsed {
+                        self.admit(slot, frame_id, false, model, tokens);
+                    }
+                }
+                Mode::Text => {
+                    let data = conn.rbuf.readable();
+                    let len = data.len();
+                    let at_capacity = len == conn.rbuf.capacity();
+                    let eol = data.iter().position(|&b| b == b'\n');
+                    let line = eol.map(|i| String::from_utf8_lossy(&data[..i]).trim().to_string());
+                    match line {
+                        None => {
+                            if at_capacity {
+                                // a line longer than the whole ring:
+                                // answer once, then hang up (the legacy
+                                // server buffers without bound here)
+                                let msg =
+                                    obj([("error", Json::from("line too long"))]).to_string();
+                                conn.wbuf.extend_from_slice(msg.as_bytes());
+                                conn.wbuf.push(b'\n');
+                                conn.read_closed = true;
+                                conn.rbuf.consume(len);
+                                progressed = true;
+                            } else if conn.read_closed && len > 0 {
+                                conn.rbuf.consume(len); // unterminated tail
+                                progressed = true;
+                            }
+                            break;
+                        }
+                        Some(line) => {
+                            conn.rbuf.consume(eol.unwrap() + 1);
+                            progressed = true;
+                            if line.is_empty() {
+                                continue;
+                            }
+                            if line == "quit" {
+                                conn.read_closed = true;
+                                break;
+                            }
+                            match parse_tokens(&line) {
+                                Ok((model, tokens)) => {
+                                    let model: ResolvedModel = match model {
+                                        None => Ok(0),
+                                        Some(name) => {
+                                            self.router.model_index(&name).ok_or(name)
+                                        }
+                                    };
+                                    self.admit(slot, 0, true, model, tokens);
+                                }
+                                Err(e) => {
+                                    let msg =
+                                        obj([("error", Json::from(e.as_str()))]).to_string();
+                                    conn.wbuf.extend_from_slice(msg.as_bytes());
+                                    conn.wbuf.push(b'\n');
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        progressed
+    }
+}
+
+fn io_loop(
+    router: Arc<Router>,
+    cfg: MuxConfig,
+    intake: Receiver<TcpStream>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let metrics = Arc::clone(&router.metrics);
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let mut io = IoThread {
+        router,
+        cfg,
+        slots: Vec::new(),
+        gens: Vec::new(),
+        pending: HashMap::new(),
+        resp_tx,
+    };
+    let mut draining_since: Option<Instant> = None;
+    loop {
+        let mut progressed = false;
+        // adopt newly accepted connections
+        while let Ok(stream) = intake.try_recv() {
+            match Conn::new(stream, &io.cfg) {
+                Ok(conn) => {
+                    progressed = true;
+                    match io.slots.iter().position(|s| s.is_none()) {
+                        Some(i) => io.slots[i] = Some(conn),
+                        None => {
+                            io.slots.push(Some(conn));
+                            io.gens.push(0);
+                        }
+                    }
+                }
+                Err(_) => metrics.record_conn_closed(),
+            }
+        }
+        // drain completed responses into their write buffers
+        while let Ok(resp) = resp_rx.try_recv() {
+            io.route(resp);
+            progressed = true;
+        }
+        // tick every connection: flush, read, parse
+        for slot in 0..io.slots.len() {
+            if io.slots[slot].is_none() {
+                continue;
+            }
+            {
+                let conn = io.slots[slot].as_mut().unwrap();
+                progressed |= conn.flush();
+                progressed |= conn.fill();
+            }
+            progressed |= io.parse(slot);
+            let conn = io.slots[slot].as_mut().unwrap();
+            if conn.finished() {
+                // orphan its pending entries via the generation bump
+                io.gens[slot] = io.gens[slot].wrapping_add(1);
+                io.slots[slot] = None;
+                metrics.record_conn_closed();
+                progressed = true;
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            let draining = !io.pending.is_empty()
+                || io.slots.iter().flatten().any(|c| c.unflushed() > 0);
+            let since = draining_since.get_or_insert_with(Instant::now);
+            if !draining || since.elapsed() > Duration::from_secs(5) {
+                break; // drained (or grace expired): drop everything
+            }
+        }
+        if !progressed {
+            // level-triggered park: wake on the next response or after
+            // `park` to re-poll the sockets
+            match resp_rx.recv_timeout(io.cfg.park) {
+                Ok(resp) => io.route(resp),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {}
+            }
+        }
+    }
+    for _ in io.slots.iter().flatten() {
+        metrics.record_conn_closed();
+    }
+}

@@ -11,12 +11,16 @@
 //! same token vectors — the tokens are a pure function of the recorded
 //! length).
 
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use super::arrival::ArrivalProcess;
 use super::trace::Trace;
 use crate::coordinator::Router;
+use crate::wire::encode::{decode_response, encode_request};
+use crate::wire::frame::{ResponseFrame, PREAMBLE};
 
 /// Outcome of one open-loop run.
 #[derive(Clone, Debug)]
@@ -27,6 +31,10 @@ pub struct ReplaySummary {
     pub completed: usize,
     /// replies carrying a typed error
     pub errors: usize,
+    /// typed `Overloaded` admission rejections from the wire front
+    /// door (DESIGN.md §11) — only [`replay_wire`] observes these;
+    /// in-process [`replay`] bypasses admission control and never sheds
+    pub shed: usize,
     /// requests whose reply never arrived before the drain timeout —
     /// the zero-loss chaos legs assert this is 0
     pub lost: usize,
@@ -118,10 +126,122 @@ pub fn replay(
         sent,
         completed,
         errors,
+        shed: 0,
         lost: sent - completed - errors,
         wall_s: t0.elapsed().as_secs_f64(),
         recorded,
     }
+}
+
+/// Replay `trace` open-loop over a real socket speaking the `SWWIRE1`
+/// binary protocol (DESIGN.md §11) — the full-stack variant of
+/// [`replay`]: the same pacing and drain contract, but requests cross
+/// the wire front door, so admission-control rejections surface as
+/// [`ReplaySummary::shed`] instead of never happening.  Trace model
+/// indices map through `names` (the server router's
+/// [`model_names`](Router::model_names), in order); responses are
+/// drained concurrently with submission, so a long trace cannot
+/// deadlock on a full socket buffer.
+pub fn replay_wire<A: ToSocketAddrs>(
+    addr: A,
+    trace: &Trace,
+    names: &[String],
+    time_scale: f64,
+    drain_timeout: Duration,
+) -> Result<ReplaySummary, String> {
+    assert!(time_scale > 0.0, "time_scale must be positive");
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
+    stream.set_nodelay(true).ok();
+    stream.write_all(&PREAMBLE).map_err(|e| format!("send preamble: {e}"))?;
+    let reader = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+    let sent = trace.len();
+    let t0 = Instant::now();
+    let deadline =
+        t0 + Duration::from_secs_f64(trace.duration_s() * time_scale) + drain_timeout;
+    let mut recorded = Trace::new();
+    let mut wbuf = Vec::new();
+    let (completed, errors, shed) = std::thread::scope(|s| {
+        let drain = s.spawn(move || count_wire_responses(reader, sent, deadline));
+        for (i, ev) in trace.events().iter().enumerate() {
+            let target = Duration::from_secs_f64(ev.t_ns as f64 / 1e9 * time_scale);
+            let now = t0.elapsed();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let name = names
+                .get(ev.model as usize)
+                .unwrap_or_else(|| panic!("trace model {} not in `names`", ev.model));
+            recorded.push_event(*ev);
+            wbuf.clear();
+            encode_request(&mut wbuf, i as u64, name, &tokens_for(ev.len));
+            if stream.write_all(&wbuf).is_err() {
+                break; // the reader side reports what actually landed
+            }
+        }
+        drain.join().expect("wire response reader panicked")
+    });
+    Ok(ReplaySummary {
+        sent,
+        completed,
+        errors,
+        shed,
+        lost: sent - completed - errors - shed,
+        wall_s: t0.elapsed().as_secs_f64(),
+        recorded,
+    })
+}
+
+/// Count `(completed, errors, shed)` response frames until `expected`
+/// have arrived, the server closes, or `deadline` passes.
+fn count_wire_responses(
+    mut stream: TcpStream,
+    expected: usize,
+    deadline: Instant,
+) -> (usize, usize, usize) {
+    let (mut completed, mut errors, mut shed) = (0usize, 0usize, 0usize);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut pos = 0usize;
+    let mut chunk = [0u8; 16 * 1024];
+    while completed + errors + shed < expected {
+        match decode_response(&buf[pos..]) {
+            Ok(Some((n, frame))) => {
+                pos += n;
+                match frame {
+                    ResponseFrame::Ok { .. } => completed += 1,
+                    ResponseFrame::Overloaded { .. } => shed += 1,
+                    ResponseFrame::Error { .. } | ResponseFrame::Busy { .. } => errors += 1,
+                }
+                continue;
+            }
+            Ok(None) => {
+                if pos > 0 && pos == buf.len() {
+                    buf.clear();
+                    pos = 0;
+                }
+            }
+            Err(_) => break, // protocol corruption: stop counting
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        if stream.set_read_timeout(Some(left.min(Duration::from_millis(100)))).is_err() {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // server closed
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => break,
+        }
+    }
+    (completed, errors, shed)
 }
 
 /// Drive an arrival process live for one tenant, recording the stream

@@ -15,7 +15,11 @@
 //! * [`driver`] — open-loop replay over a
 //!   [`Router`](crate::coordinator::Router): arrivals are paced by the
 //!   trace, not by completions, so latency-under-offered-load and
-//!   recovery-after-fault are measurable.
+//!   recovery-after-fault are measurable.  [`replay_wire`] is the
+//!   full-stack variant: the same trace paced over a real socket
+//!   through the `SWWIRE1` front door (DESIGN.md §11), where
+//!   admission-control rejections surface as
+//!   [`ReplaySummary::shed`].
 
 pub mod arrival;
 pub mod chaos;
@@ -24,5 +28,5 @@ pub mod trace;
 
 pub use arrival::{ArrivalProcess, Dwell, RateSpike};
 pub use chaos::{ChaosReplica, DelayReplica};
-pub use driver::{replay, run_process, tokens_for, ReplaySummary};
+pub use driver::{replay, replay_wire, run_process, tokens_for, ReplaySummary};
 pub use trace::{Trace, TraceEvent};

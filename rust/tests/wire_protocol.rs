@@ -1,0 +1,365 @@
+//! Loopback integration suite for the `SWWIRE1` binary wire protocol
+//! and the non-blocking connection multiplexer (DESIGN.md §11):
+//! pipelining with out-of-order completion, malformed / oversized /
+//! truncated frames answered without connection teardown, text-vs-
+//! binary auto-detection on one port, connection caps on both front
+//! doors, SLO load shedding under a tenant flood with zero loss of
+//! accepted requests, and the socket-level trace replay driver.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use swifttron::coordinator::server::TextServer;
+use swifttron::coordinator::{
+    BatchPolicy, EngineReplica, Metrics, ModelRegistry, ReplicaFactory, Router,
+};
+use swifttron::wire::{encode, MuxConfig, MuxServer, ResponseFrame, WireClient};
+use swifttron::workload::{replay_wire, ArrivalProcess, DelayReplica, Trace};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200), bucket_width: 0 }
+}
+
+/// Router of fixed single-replica groups: `(name, service_ms)` each.
+fn router_with(models: &[(&str, u64)]) -> (Arc<Router>, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::new());
+    let mut reg = ModelRegistry::new();
+    for (name, ms) in models {
+        reg.register_group(
+            name,
+            vec![Arc::new(DelayReplica::from_ms(*ms)) as Arc<dyn EngineReplica>],
+            1,
+        )
+        .unwrap();
+    }
+    let router = Arc::new(Router::start_multi(reg.into_groups(), policy(), Arc::clone(&metrics)));
+    (router, metrics)
+}
+
+/// Best-effort router shutdown once every server clone is gone.
+fn stop(router: Arc<Router>) {
+    if let Ok(r) = Arc::try_unwrap(router) {
+        r.shutdown();
+    }
+}
+
+fn eventually(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cond()
+}
+
+#[test]
+fn binary_round_trip_pipelines_and_completes_out_of_order() {
+    let (router, _metrics) = router_with(&[("fast", 0), ("slow", 40)]);
+    let server =
+        MuxServer::start(Arc::clone(&router), "127.0.0.1:0", MuxConfig::default()).unwrap();
+    let mut c = WireClient::connect(server.local_addr()).unwrap();
+    c.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    // one slow request queued FIRST, then a burst of fast ones — all
+    // flushed as a single pipelined write
+    c.queue(100, "slow", &[1, 2, 3]);
+    for id in 0..8u64 {
+        c.queue(id, "fast", &[1, 2]);
+    }
+    c.flush().unwrap();
+    let frames = c.recv_n(9).unwrap();
+    // no head-of-line blocking: the slow model's reply arrives last
+    assert_eq!(frames.last().unwrap().id(), 100, "slow reply should be overtaken: {frames:?}");
+    let mut ids: Vec<u64> = frames.iter().map(ResponseFrame::id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4, 5, 6, 7, 100]);
+    for f in &frames {
+        assert!(f.is_ok(), "{f:?}");
+        if let ResponseFrame::Ok { logits, .. } = f {
+            assert!(!logits.is_empty(), "ok frame must carry logits");
+        }
+    }
+    server.shutdown();
+    stop(router);
+}
+
+#[test]
+fn malformed_and_oversized_frames_get_typed_errors_without_teardown() {
+    let (router, _metrics) = router_with(&[("tiny", 0)]);
+    let cfg = MuxConfig { read_buf: 4096, ..MuxConfig::default() };
+    let server = MuxServer::start(Arc::clone(&router), "127.0.0.1:0", cfg).unwrap();
+    let mut c = WireClient::connect(server.local_addr()).unwrap();
+    c.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+
+    // malformed: a token count that disagrees with the frame length
+    let mut bad = Vec::new();
+    encode::encode_request(&mut bad, 7, "tiny", &[1, 2]);
+    let ntok_at = bad.len() - 8 - 2; // two i32 tokens, u16 count before them
+    bad[ntok_at] = 99;
+    c.send_raw(&bad).unwrap();
+    match c.recv().unwrap() {
+        ResponseFrame::Error { id, message } => {
+            assert_eq!(id, 7, "frame id echoed on the typed error");
+            assert!(message.contains("token count"), "{message}");
+        }
+        other => panic!("expected typed error, got {other:?}"),
+    }
+
+    // oversized: a header claiming more than the ring admits; the
+    // typed error arrives immediately, before the body has streamed
+    let claimed = 1_000_000u32;
+    let mut over = Vec::new();
+    over.extend_from_slice(&claimed.to_le_bytes());
+    over.push(1); // KIND_REQUEST
+    over.extend_from_slice(&9u64.to_le_bytes());
+    c.send_raw(&over).unwrap();
+    match c.recv().unwrap() {
+        ResponseFrame::Error { id, message } => {
+            assert_eq!(id, 9);
+            assert!(message.contains("exceeds"), "{message}");
+        }
+        other => panic!("expected oversized rejection, got {other:?}"),
+    }
+    // now deliver the claimed body: it streams to the void
+    let junk = vec![0u8; claimed as usize - 9];
+    c.send_raw(&junk).unwrap();
+
+    // the connection survived both: a good request still round-trips
+    c.send(11, "tiny", &[1, 2, 3]).unwrap();
+    match c.recv().unwrap() {
+        ResponseFrame::Ok { id, .. } => assert_eq!(id, 11),
+        other => panic!("connection should have realigned, got {other:?}"),
+    }
+    server.shutdown();
+    stop(router);
+}
+
+#[test]
+fn truncated_connection_is_reaped_without_poisoning_the_server() {
+    let (router, metrics) = router_with(&[("tiny", 0)]);
+    let server =
+        MuxServer::start(Arc::clone(&router), "127.0.0.1:0", MuxConfig::default()).unwrap();
+    {
+        let mut c = WireClient::connect(server.local_addr()).unwrap();
+        let mut partial = Vec::new();
+        encode::encode_request(&mut partial, 1, "tiny", &[1, 2, 3]);
+        c.send_raw(&partial[..partial.len() - 2]).unwrap();
+    } // dropped: EOF lands mid-frame
+    let m = Arc::clone(&metrics);
+    assert!(
+        eventually(Duration::from_secs(10), move || m.conns_open.load(Ordering::SeqCst) == 0),
+        "truncated connection was never reaped (gauge {})",
+        metrics.conns_open.load(Ordering::SeqCst)
+    );
+    // and a fresh connection is served normally
+    let mut c = WireClient::connect(server.local_addr()).unwrap();
+    c.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    c.send(2, "tiny", &[4]).unwrap();
+    assert!(c.recv().unwrap().is_ok());
+    server.shutdown();
+    stop(router);
+}
+
+#[test]
+fn mux_speaks_legacy_text_behind_auto_detection() {
+    let (router, _metrics) = router_with(&[("tiny", 0)]);
+    let server =
+        MuxServer::start(Arc::clone(&router), "127.0.0.1:0", MuxConfig::default()).unwrap();
+
+    // a plain text client on the same port: first bytes diverge from
+    // the preamble, so the connection flips to the legacy line protocol
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    writeln!(w, "tiny:1,2,3").unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"label\""), "{line}");
+    assert!(line.contains("\"model\":\"tiny\""), "{line}");
+    // bad token lines get the same typed text error the legacy server sends
+    line.clear();
+    writeln!(w, "1,x,3").unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"error\""), "{line}");
+
+    // a line sharing the preamble's first bytes must still be text:
+    // detection never consumes bytes before the protocol is resolved
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    writeln!(w, "SW:1,2").unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("unknown model"), "SW-prefixed text line mangled: {line}");
+
+    // and a binary client still works concurrently on the same port
+    let mut c = WireClient::connect(server.local_addr()).unwrap();
+    c.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    c.send(5, "", &[9, 9]).unwrap();
+    assert!(c.recv().unwrap().is_ok());
+
+    server.shutdown();
+    stop(router);
+}
+
+#[test]
+fn mux_rejects_past_its_connection_cap_in_both_dialects() {
+    let (router, metrics) = router_with(&[("tiny", 0)]);
+    let cfg = MuxConfig { max_conns: 1, ..MuxConfig::default() };
+    let server = MuxServer::start(Arc::clone(&router), "127.0.0.1:0", cfg).unwrap();
+    // the only slot; accepted (and counted) before the probe arrives
+    let held = WireClient::connect(server.local_addr()).unwrap();
+    // the probe sends nothing: at accept time the protocol is unknown,
+    // so the rejection carries both dialects, then the server closes
+    let mut probe = TcpStream::connect(server.local_addr()).unwrap();
+    probe.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let mut bytes = Vec::new();
+    probe.read_to_end(&mut bytes).unwrap();
+    let (n, frame) = encode::decode_response(&bytes).unwrap().expect("busy frame first");
+    assert_eq!(frame, ResponseFrame::Busy { limit: 1 });
+    let rest = String::from_utf8_lossy(&bytes[n..]);
+    assert!(rest.contains("\"error\":\"busy\""), "text dialect missing: {rest:?}");
+    assert!(metrics.conns_rejected.load(Ordering::SeqCst) >= 1);
+    drop(held);
+    server.shutdown();
+    stop(router);
+}
+
+#[test]
+fn text_server_rejects_past_its_connection_cap() {
+    let (router, metrics) = router_with(&[("tiny", 0)]);
+    let server = TextServer::start(Arc::clone(&router), "127.0.0.1:0", 2).unwrap();
+    let addr = server.local_addr();
+    // two held connections fill the cap (accepted in connect order)
+    let mut held: Vec<TcpStream> = (0..2).map(|_| TcpStream::connect(addr).unwrap()).collect();
+    let probe = TcpStream::connect(addr).unwrap();
+    probe.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let mut line = String::new();
+    BufReader::new(probe).read_line(&mut line).unwrap();
+    assert!(line.contains("\"error\":\"busy\""), "{line}");
+    assert!(line.contains("\"max_conns\":2"), "{line}");
+    assert!(metrics.conns_rejected.load(Ordering::SeqCst) >= 1);
+
+    // freeing a slot re-opens the door (the handler exits on EOF, so
+    // the gauge decays asynchronously — retry until admitted)
+    drop(held.pop());
+    let admitted = eventually(Duration::from_secs(10), || {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+        let mut w = s.try_clone().unwrap();
+        let mut r = BufReader::new(s);
+        writeln!(w, "1,2,3").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        line.contains("\"label\"")
+    });
+    assert!(admitted, "slot never freed after a client hung up");
+    drop(held);
+    server.stop();
+    stop(router);
+}
+
+#[test]
+fn overloaded_tenant_is_shed_while_in_slo_tenant_keeps_serving() {
+    let flood_total = 400usize;
+    let metrics = Arc::new(Metrics::new());
+    let mut reg = ModelRegistry::new();
+    // "flood": one 5 ms replica behind a 25 ms SLO — predicted delay
+    // crosses the SLO as soon as ~5 requests queue up
+    let flood_factory: ReplicaFactory =
+        Arc::new(|| Ok(Arc::new(DelayReplica::from_ms(5)) as Arc<dyn EngineReplica>));
+    reg.register_group_scaled("flood", 1, 1, 1, Some(25.0), flood_factory).unwrap();
+    // "steady": instant replica behind a huge SLO — never shed
+    let steady_factory: ReplicaFactory =
+        Arc::new(|| Ok(Arc::new(DelayReplica::from_ms(0)) as Arc<dyn EngineReplica>));
+    reg.register_group_scaled("steady", 1, 1, 1, Some(10_000.0), steady_factory).unwrap();
+    let router = Arc::new(Router::start_multi(reg.into_groups(), policy(), Arc::clone(&metrics)));
+    let cfg = MuxConfig { shed_ratio: 1.0, default_service_ms: 5.0, ..MuxConfig::default() };
+    let server = MuxServer::start(Arc::clone(&router), "127.0.0.1:0", cfg).unwrap();
+
+    let mut flood = WireClient::connect(server.local_addr()).unwrap();
+    flood.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    // warm up the mean-exec estimate with sequential round trips
+    for id in 0..4u64 {
+        flood.send(id, "flood", &[1, 2]).unwrap();
+        assert!(flood.recv().unwrap().is_ok());
+    }
+    // now the flood: one pipelined burst far past the replica's SLO
+    for id in 0..flood_total as u64 {
+        flood.queue(1000 + id, "flood", &[1, 2]);
+    }
+    flood.flush().unwrap();
+
+    // while the flood drains/sheds, the steady tenant keeps serving
+    let mut steady = WireClient::connect(server.local_addr()).unwrap();
+    steady.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    for id in 0..30u64 {
+        steady.send(id, "steady", &[3, 4, 5]).unwrap();
+        let f = steady.recv().unwrap();
+        assert!(f.is_ok(), "in-SLO tenant must never be shed: {f:?}");
+    }
+
+    // every accepted flood frame is answered: Ok or a typed Overloaded
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for f in flood.recv_n(flood_total).unwrap() {
+        match f {
+            ResponseFrame::Ok { .. } => ok += 1,
+            ResponseFrame::Overloaded { id, predicted_ms, slo_ms } => {
+                assert!(id >= 1000, "shed echoes the frame id: {id}");
+                assert!(predicted_ms > slo_ms, "sheds only past the SLO");
+                assert!((slo_ms - 25.0).abs() < 1e-9);
+                shed += 1;
+            }
+            other => panic!("flood frame answered with {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, flood_total, "zero loss: every frame answered exactly once");
+    assert!(shed > 0, "a 400-deep burst against a 25ms SLO must shed");
+    assert!(ok > 0, "admission control must still admit up to the SLO");
+    let flood_stats = metrics.model(0);
+    assert_eq!(flood_stats.shed.load(Ordering::SeqCst), shed as u64, "shed counter drifted");
+    assert_eq!(
+        metrics.model(1).shed.load(Ordering::SeqCst),
+        0,
+        "steady tenant must not be shed"
+    );
+    // shed requests bypass the queue entirely: request accounting only
+    // covers the admitted ones, which all completed
+    assert_eq!(flood_stats.backlog.load(Ordering::SeqCst), 0, "admitted flood drained");
+    let (_, steady_p99) = metrics.model(1).e2e_percentiles_ms();
+    assert!(
+        steady_p99 < 1_000.0,
+        "in-SLO tenant p99 {steady_p99:.1}ms collapsed under the flood"
+    );
+    server.shutdown();
+    stop(router);
+}
+
+#[test]
+fn replay_wire_drives_a_trace_over_the_socket() {
+    let (router, _metrics) = router_with(&[("tiny", 1)]);
+    let server =
+        MuxServer::start(Arc::clone(&router), "127.0.0.1:0", MuxConfig::default()).unwrap();
+    let trace =
+        Trace::from_process(&ArrivalProcess::Poisson { rate: 200.0 }, 11, 0.3, 0, (1, 8));
+    assert!(!trace.is_empty());
+    let names = vec!["tiny".to_string()];
+    let s = replay_wire(server.local_addr(), &trace, &names, 1.0, Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(s.sent, trace.len());
+    assert_eq!(s.completed, s.sent, "every reply must come back over the socket");
+    assert_eq!(s.errors, 0);
+    assert_eq!(s.shed, 0, "no queue past the SLO: nothing sheds");
+    assert_eq!(s.lost, 0);
+    assert_eq!(s.recorded.len(), trace.len(), "the replay records what it sent");
+    server.shutdown();
+    stop(router);
+}

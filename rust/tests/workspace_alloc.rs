@@ -1,14 +1,15 @@
-//! Counting-allocator proof of the zero-allocation hot path
-//! (DESIGN.md §6): after Workspace warm-up, `layer_forward_ws` and
-//! `encoder_forward_ws` never touch the heap — the whole per-request
-//! working set lives in the resident arena.
+//! Counting-allocator proofs of the zero-allocation hot paths: after
+//! Workspace warm-up, `layer_forward_ws` and `encoder_forward_ws`
+//! never touch the heap (DESIGN.md §6) — and after ring/scratch
+//! warm-up, the `SWWIRE1` wire decode-and-encode loop doesn't either
+//! (DESIGN.md §11).
 //!
 //! This test binary installs its own `#[global_allocator]`, so it must
 //! stay a dedicated integration-test target (one allocator per binary).
 //! Allocation events are counted per-thread to stay immune to anything
 //! the test harness does on other threads.  Setup (weight stacks,
-//! activation streams) comes from the shared fixture layer in
-//! `tests/common` — fixtures run before the measured window.
+//! activation streams, encoded frame streams) comes before the
+//! measured window.
 
 mod common;
 
@@ -18,6 +19,7 @@ use std::cell::Cell;
 use swifttron::model::Geometry;
 use swifttron::sim::functional::{encoder_forward_ws, layer_forward_ws, Workspace};
 use swifttron::util::rng::Rng;
+use swifttron::wire::{encode, DecodeEvent, FrameDecoder, RingBuf};
 
 thread_local! {
     static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
@@ -108,4 +110,83 @@ fn forward_pass_is_allocation_free_after_warmup() {
         delta, 0,
         "hot path allocated {delta} times after Workspace warm-up"
     );
+}
+
+#[test]
+fn wire_decode_and_encode_are_allocation_free_after_warmup() {
+    // setup (allocates freely): a pipelined stream of request frames
+    // of mixed model-name and token lengths
+    let tokens: Vec<i32> = (0..48).collect();
+    let mut stream = Vec::new();
+    for id in 0..64u64 {
+        let model = if id % 3 == 0 { "" } else { "deit_small" };
+        stream.extend_from_slice(
+            &encode_request_bytes(id, model, &tokens[..(id as usize % tokens.len()).max(1)]),
+        );
+    }
+
+    let mut ring = RingBuf::new(256); // smaller than the stream: exercises compaction
+    let mut dec = FrameDecoder::default();
+    let mut scratch: Vec<i32> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
+    let logits = [7i64, -7, 9, -9];
+
+    // warm-up pass sizes the scratch token buffer and the output frame
+    // buffer to the largest request/response in the stream
+    run_wire_loop(&stream, &mut ring, &mut dec, &mut scratch, &mut out, &logits);
+
+    let before = thread_allocs();
+    for _ in 0..8 {
+        let n = run_wire_loop(&stream, &mut ring, &mut dec, &mut scratch, &mut out, &logits);
+        assert_eq!(n, 64, "every frame decodes on every pass");
+    }
+    let delta = thread_allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "wire decode/encode loop allocated {delta} times after warm-up"
+    );
+}
+
+fn encode_request_bytes(id: u64, model: &str, tokens: &[i32]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode::encode_request(&mut buf, id, model, tokens);
+    buf
+}
+
+/// Feed `stream` through the ring in socket-sized chunks, decode every
+/// frame in place, collect its tokens into `scratch`, and encode an
+/// `Ok` reply into `out` — the mux's per-request data path, minus the
+/// sockets.  Returns the number of request frames decoded.
+fn run_wire_loop(
+    stream: &[u8],
+    ring: &mut RingBuf,
+    dec: &mut FrameDecoder,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<u8>,
+    logits: &[i64],
+) -> usize {
+    let mut fed = 0;
+    let mut decoded = 0;
+    while fed < stream.len() || !ring.is_empty() {
+        fed += ring.fill_from(&stream[fed..]);
+        loop {
+            let (n, ev) = dec.pull(ring.readable());
+            match ev {
+                Some(DecodeEvent::Request(r)) => {
+                    r.read_tokens_into(scratch);
+                    assert_eq!(scratch.len(), r.token_count());
+                    out.clear();
+                    encode::encode_ok(out, r.id, 0, 1, logits, 0.5, 100.0);
+                    decoded += 1;
+                }
+                Some(other) => panic!("unexpected event: {other:?}"),
+                None => {}
+            }
+            if n == 0 {
+                break;
+            }
+            ring.consume(n);
+        }
+    }
+    decoded
 }
