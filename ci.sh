@@ -63,6 +63,18 @@ row="  serving_openloop --smoke: $((SECONDS-t_start))s"
 timing_rows+=("$row")
 echo "$row"
 
+# CostModel smoke leg: Table I, the design-space sweep (merged under
+# `costmodel.design_space` in BENCH_serving.json), and the determinism
+# gate — the closed-form smoke subset must match the committed
+# BENCH_costmodel_smoke.json byte for byte (rebaseline with
+# `-- --smoke --update` after an intentional cost/synthesis change).
+echo "-- costmodel design-space smoke leg --"
+t_start=$SECONDS
+cargo bench --bench table1_synthesis -- --smoke
+row="  table1_synthesis --smoke: $((SECONDS-t_start))s"
+timing_rows+=("$row")
+echo "$row"
+
 # The pjrt feature must keep compiling against the in-repo xla stub
 # (check-only: there is no real PJRT client to run against here).
 cargo check --features pjrt --all-targets

@@ -3,9 +3,11 @@
 //! parallel serving pipeline over replica count × dispatch-group size
 //! and over request sequence length, the serial-vs-tiled `i_matmul`
 //! kernel comparison, the fused-attention leg, the multi-model
-//! weights sweep, and the **concurrency leg** — mixed saturating
+//! weights sweep, the **concurrency leg** — mixed saturating
 //! `roberta_base` + `tiny` traffic through the serial single-dispatcher
-//! baseline vs the concurrent per-group pipeline (DESIGN.md §9).
+//! baseline vs the concurrent per-group pipeline (DESIGN.md §9) — and
+//! the **CostModel fairness leg**: token-charged vs cycle-charged
+//! deficit-round-robin under cross-model cost skew (DESIGN.md §12).
 //!
 //! Run: `cargo bench --bench serving_scaling` — or
 //! `cargo bench --bench serving_scaling -- --smoke` for the
@@ -35,7 +37,7 @@ use swifttron::quant::{i_matmul, i_matmul_tiled};
 use swifttron::sim::functional::{
     layer_forward_ws, layer_forward_ws_unfused, synthetic_consts, LayerWeights, Workspace,
 };
-use swifttron::sim::HwConfig;
+use swifttron::sim::{CostModel, HwConfig};
 use swifttron::util::bench::{fmt_time, merge_bench_json, Bench, Table};
 use swifttron::util::json::{obj, Json};
 use swifttron::util::rng::Rng;
@@ -209,6 +211,7 @@ fn concurrency_leg(smoke: bool) -> Json {
                     model: 1,
                     tokens: (0..heavy_len).map(|t| (t % 50) as i32).collect(),
                     padded_len: policy.padded_len(heavy_len),
+                    cost: policy.padded_len(heavy_len) as u64,
                     submitted: Instant::now(),
                     reply: tx,
                 },
@@ -227,6 +230,7 @@ fn concurrency_leg(smoke: bool) -> Json {
                 model: 0,
                 tokens: (0..len).map(|t| (t % 50) as i32).collect(),
                 padded_len: policy.padded_len(len),
+                cost: policy.padded_len(len) as u64,
                 submitted: Instant::now(),
                 reply: tx,
             },
@@ -356,6 +360,93 @@ fn concurrency_leg(smoke: bool) -> Json {
         ),
         ("tiny_p99_improvement", improvement.into()),
         ("shares_within_10pct_of_weights", shares_ok.into()),
+    ])
+}
+
+/// CostModel fairness leg (EXPERIMENTS.md §CostModel, DESIGN.md §12):
+/// token-charged vs cycle-charged deficit-round-robin under a
+/// cross-model cost skew.  Two equal-weight tenants submit requests of
+/// identical token length — 8 live tokens — but one tenant runs
+/// `roberta_base` and the other `tiny`, so the *predicted accelerator
+/// work* per request differs by two orders of magnitude.  The same
+/// backlogged arrivals go through two ledgers: one charging bucket
+/// tokens (every request costs 8 — the pre-ISSUE-8 unit) and one
+/// charging `CostModel::predict_cycles(8)`.  Served shares are measured
+/// in predicted cycles, the unit the accelerator actually spends;
+/// equal weights make the ideal split 50/50.
+fn costmodel_fairness_leg(smoke: bool) -> Json {
+    const LEN: usize = 8;
+    let heavy_geo = Geometry::preset("roberta_base").unwrap();
+    let light_geo = Geometry::preset("tiny").unwrap();
+    let cm_heavy = CostModel::build(&HwConfig::sized_to(&heavy_geo), &heavy_geo).unwrap();
+    let cm_light = CostModel::build(&HwConfig::sized_to(&light_geo), &light_geo).unwrap();
+    let (c_heavy, c_light) = (cm_heavy.predict_cycles(LEN), cm_light.predict_cycles(LEN));
+    assert!(c_heavy > c_light, "roberta_base must out-cost tiny at equal length");
+    let policy =
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+    // Measurement window: the predicted-cycle volume of `window_batches`
+    // all-heavy dispatch groups.  Both ledgers serve the same window, so
+    // the shares compare like for like; the DRR granularity bound keeps
+    // the cycle-charged share within one heavy group of 50/50, i.e.
+    // within 1/(2*window_batches) — comfortably inside the 0.1 assert
+    // even at smoke size.
+    let window_batches: u64 = if smoke { 8 } else { 24 };
+    let window = window_batches * policy.max_batch as u64 * c_heavy;
+    let n_heavy = (window_batches as usize + 4) * policy.max_batch;
+    let n_light = (window / c_light) as usize + 4 * policy.max_batch;
+
+    // Serve the window under one charge unit; items carry their true
+    // predicted cost so served work is measured identically either way.
+    let run = |charge_heavy: u64, charge_light: u64| -> f64 {
+        let mut b: Batcher<(usize, u64)> = Batcher::new(policy);
+        b.set_model_weights(&[1, 1]);
+        for _ in 0..n_heavy {
+            b.push_costed((0, c_heavy), 0, LEN, charge_heavy);
+        }
+        for _ in 0..n_light {
+            b.push_costed((1, c_light), 1, LEN, charge_light);
+        }
+        let mut served = [0u64; 2];
+        while served[0] + served[1] < window {
+            let batch = b.take_batch();
+            assert!(!batch.is_empty(), "fairness leg ran out of queued work");
+            for (m, cycles) in batch {
+                served[m] += cycles;
+            }
+        }
+        served[0] as f64 / (served[0] + served[1]) as f64
+    };
+    let token_share = run(LEN as u64, LEN as u64);
+    let cycle_share = run(c_heavy, c_light);
+    let token_err = (token_share - 0.5).abs();
+    let cycle_err = (cycle_share - 0.5).abs();
+
+    let mut table = Table::new(&["charge unit", "heavy work share", "error vs 50/50"]);
+    table.row(&["tokens".into(), format!("{:.1}%", 100.0 * token_share), format!("{token_err:.3}")]);
+    table.row(&["cycles".into(), format!("{:.1}%", 100.0 * cycle_share), format!("{cycle_err:.3}")]);
+    table.print("CostModel fairness leg: token-charged vs cycle-charged DRR (equal weights)");
+    println!(
+        "\nequal-length requests, {c_heavy} vs {c_light} predicted cycles per\n\
+         request: the token-charged ledger splits *requests* evenly and hands\n\
+         the heavy tenant {:.0}% of the accelerator; the cycle-charged ledger\n\
+         splits predicted *work* and lands within {cycle_err:.3} of 50/50.",
+        100.0 * token_share
+    );
+    assert!(
+        cycle_err < token_err,
+        "cycle-charged share error {cycle_err:.3} is not better than token-charged {token_err:.3}"
+    );
+    assert!(cycle_err <= 0.1, "cycle-charged share drifted {cycle_err:.3} from the ideal 50/50");
+
+    obj([
+        ("request_len", LEN.into()),
+        ("heavy_cycles_per_req", (c_heavy as i64).into()),
+        ("light_cycles_per_req", (c_light as i64).into()),
+        ("work_window_cycles", (window as i64).into()),
+        ("token_charged_heavy_work_share", token_share.into()),
+        ("cycle_charged_heavy_work_share", cycle_share.into()),
+        ("token_charged_error", token_err.into()),
+        ("cycle_charged_error", cycle_err.into()),
     ])
 }
 
@@ -570,6 +661,7 @@ fn main() {
                             model: m,
                             tokens: (0..len).map(|_| rng.below(60) as i32).collect(),
                             padded_len: 8,
+                            cost: 8,
                             submitted: Instant::now(),
                             reply: tx,
                         },
@@ -628,6 +720,13 @@ fn main() {
     // --- concurrency leg (DESIGN.md §9): always runs, smoke-sized in CI
     println!();
     legs.push(("concurrency", concurrency_leg(smoke)));
+
+    // --- CostModel fairness leg (DESIGN.md §12): always runs; lands
+    // under the shared `costmodel` key next to the design-space leg the
+    // table1_synthesis bench owns (merge_bench_json merges one level
+    // deep, so neither binary clobbers the other's sub-leg).
+    println!();
+    legs.push(("costmodel", obj([("fairness", costmodel_fairness_leg(smoke))])));
 
     // merge, don't overwrite: the `openloop` key written by the
     // serving_openloop bench lives in the same file

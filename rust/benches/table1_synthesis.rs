@@ -1,13 +1,170 @@
 //! Table I — synthesis summary of the complete SwiftTron architecture
 //! (paper: 143 MHz, 65 nm, 33.64 W, 273.0 mm^2 at d=768, k=12, m=256,
-//! d_ff=3072).  Regenerated from the gate-level cost model + simulator.
+//! d_ff=3072) — plus the **design-space sweep leg** (DESIGN.md §12):
+//! `synthesis::design_space::explore` over every geometry preset,
+//! reporting each space's Pareto front and budget-constrained
+//! recommendation, merged under `costmodel.design_space` in
+//! `BENCH_serving.json`.
+//!
+//! Determinism gate: the sweep is closed-form (analytical CostModel ×
+//! gate-level synthesis model), so its smoke subset must be
+//! *byte-identical* run to run.  `--smoke` compares the subset against
+//! the committed `BENCH_costmodel_smoke.json` snapshot and fails on any
+//! drift; `--update` (or a missing/uninitialized snapshot) rewrites the
+//! baseline instead — commit the file after an intentional model
+//! change.
 
+use std::collections::BTreeMap;
 use swifttron::model::Geometry;
 use swifttron::sim::HwConfig;
-use swifttron::synthesis::synthesis_report;
-use swifttron::util::bench::Table;
+use swifttron::synthesis::{explore, synthesis_report, Budget, DesignPoint, DesignSpace};
+use swifttron::util::bench::{merge_bench_json, Table};
+use swifttron::util::json::{obj, Json};
+
+const SNAPSHOT_PATH: &str = "BENCH_costmodel_smoke.json";
+const SNAPSHOT_SCHEMA: &str = "swifttron-costmodel-smoke-v1";
+/// The deterministic subset the snapshot pins: small grids, fast even
+/// in CI, but enough to catch any drift in the cost or synthesis model.
+const SMOKE_PRESETS: [&str; 2] = ["tiny", "small"];
+
+fn hw_json(hw: &HwConfig) -> Json {
+    obj([
+        ("array_rows", hw.array_rows.into()),
+        ("array_cols", hw.array_cols.into()),
+        ("parallel_heads", hw.parallel_heads.into()),
+        ("softmax_units", hw.softmax_units.into()),
+        ("layernorm_lanes", hw.layernorm_lanes.into()),
+        ("clock_ns", hw.clock_ns.into()),
+    ])
+}
+
+fn point_json(p: &DesignPoint) -> Json {
+    obj([
+        ("hw", hw_json(&p.hw)),
+        ("latency_ms", p.latency_ms.into()),
+        ("area_mm2", p.area_mm2.into()),
+        ("power_w", p.power_w.into()),
+        ("critical_path_ns", p.critical_path_ns.into()),
+    ])
+}
+
+fn space_json(ds: &DesignSpace) -> Json {
+    obj([
+        ("points", ds.points.len().into()),
+        ("skipped", ds.skipped.into()),
+        ("pareto", ds.pareto_front().len().into()),
+        (
+            "recommended",
+            match ds.recommended_point() {
+                Some(p) => point_json(p),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Sweep `presets` and return the per-preset JSON; `quiet` suppresses
+/// the table (the snapshot recomputation path — the smoke table was
+/// already printed by the main sweep).
+fn sweep(presets: &[&str], budget: Budget, quiet: bool) -> BTreeMap<String, Json> {
+    let mut table = Table::new(&[
+        "preset", "points", "pareto", "recommended", "latency", "area", "power",
+    ]);
+    let mut out = BTreeMap::new();
+    for &name in presets {
+        let ds = explore(name, budget).expect("preset resolves");
+        let (rec, lat, area, power) = match ds.recommended_point() {
+            Some(p) => (
+                format!(
+                    "{}x{} h={} sm={} @{:.0}ns",
+                    p.hw.array_rows,
+                    p.hw.array_cols,
+                    p.hw.parallel_heads,
+                    p.hw.softmax_units,
+                    p.hw.clock_ns
+                ),
+                format!("{:.4}ms", p.latency_ms),
+                format!("{:.1}mm^2", p.area_mm2),
+                format!("{:.2}W", p.power_w),
+            ),
+            None => ("<none in budget>".into(), "-".into(), "-".into(), "-".into()),
+        };
+        table.row(&[
+            name.to_string(),
+            ds.points.len().to_string(),
+            ds.pareto_front().len().to_string(),
+            rec,
+            lat,
+            area,
+            power,
+        ]);
+        out.insert(name.to_string(), space_json(&ds));
+    }
+    if !quiet {
+        table.print(&format!(
+            "design-space sweep: recommended HwConfig per preset (budget {:.0} mm^2 / {:.1} W)",
+            budget.max_area_mm2, budget.max_power_w
+        ));
+    }
+    out
+}
+
+/// The canonical snapshot payload string for the smoke subset.
+fn snapshot_payload() -> String {
+    let spaces = sweep(&SMOKE_PRESETS, Budget::default(), true);
+    let json = Json::Obj(BTreeMap::from([
+        ("schema".to_string(), SNAPSHOT_SCHEMA.into()),
+        ("presets".to_string(), Json::Obj(spaces)),
+    ]));
+    format!("{json}\n")
+}
+
+/// Compare (or initialize/update) the committed smoke snapshot.
+/// Returns false when the comparison failed.
+fn check_snapshot(update: bool) -> bool {
+    let payload = snapshot_payload();
+    let on_disk = std::fs::read_to_string(SNAPSHOT_PATH).ok();
+    let initialized = on_disk
+        .as_deref()
+        .and_then(|s| Json::parse(s.trim()).ok())
+        .is_some_and(|j| {
+            j.get("presets").is_some()
+                && j.get("schema").and_then(|s| s.as_str()) == Some(SNAPSHOT_SCHEMA)
+        });
+    if update || !initialized {
+        match std::fs::write(SNAPSHOT_PATH, &payload) {
+            Ok(()) => println!(
+                "\n{} {SNAPSHOT_PATH} — commit it to pin the baseline",
+                if update { "updated" } else { "initialized" }
+            ),
+            Err(e) => eprintln!("\nfailed to write {SNAPSHOT_PATH}: {e}"),
+        }
+        return true;
+    }
+    if on_disk.as_deref() == Some(payload.as_str()) {
+        println!("\nsmoke snapshot matches {SNAPSHOT_PATH} (deterministic sweep verified)");
+        true
+    } else {
+        eprintln!(
+            "\nsmoke snapshot MISMATCH against {SNAPSHOT_PATH}: the closed-form sweep\n\
+             changed.  If the cost/synthesis model change is intentional, re-baseline\n\
+             with `cargo bench --bench table1_synthesis -- --smoke --update` and commit\n\
+             the snapshot; otherwise this is a determinism regression.\n\
+             expected (committed):\n{}\n\
+             got (this run):\n{}",
+            on_disk.as_deref().unwrap_or("<unreadable>").trim_end(),
+            payload.trim_end()
+        );
+        false
+    }
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let update = args.iter().any(|a| a == "--update");
+
+    // --- Table I (the original leg) --------------------------------
     let cfg = HwConfig::paper();
     let geo = Geometry::preset("roberta_base").unwrap();
     let r = synthesis_report(&cfg, &geo);
@@ -27,4 +184,26 @@ fn main() {
         "\nshape check: same order of magnitude for area and power; timing met at 7 ns: {}",
         r.critical_path_ns <= 7.0
     );
+
+    // --- design-space sweep leg (DESIGN.md §12) --------------------
+    println!();
+    let presets: Vec<&str> =
+        if smoke { SMOKE_PRESETS.to_vec() } else { Geometry::PRESET_NAMES.to_vec() };
+    let spaces = sweep(&presets, Budget::default(), false);
+    println!(
+        "\neach preset's recommendation is the fastest clock-feasible candidate\n\
+         inside the default area/power budget; `swifttron tune` prints the\n\
+         full per-preset summary, including the Pareto front."
+    );
+    let path = "BENCH_serving.json";
+    let legs = [("costmodel", obj([("design_space", Json::Obj(spaces))]))];
+    match merge_bench_json(path, legs) {
+        Ok(()) => println!("\nwrote {path} (costmodel.design_space)"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    // --- determinism gate: the committed smoke snapshot ------------
+    if !check_snapshot(update) {
+        std::process::exit(1);
+    }
 }

@@ -4,12 +4,17 @@
 //! hysteresis thresholds.
 //!
 //! The demand signal per tick is the *estimated drain time* of the
-//! model's live backlog: `backlog_requests × mean_exec_ms ÷
-//! active_replicas` — queued requests still in the batcher plus popped
-//! groups in flight, times the model's own measured per-request
-//! execution wall time (a prior before the first completion), divided
-//! by the replicas currently serving.  Judged against the model's
-//! `slo_ms` latency class:
+//! model's live backlog: its predicted work in milliseconds
+//! ([`predicted_work_ms`]) divided by the replicas currently serving.
+//! Groups registered with an analytical [`CostModel`] price the
+//! backlog in predicted accelerator cycles (`backlog_cost ×
+//! ms_per_cost`), so a freshly registered heavy model scores its true
+//! work from the very first tick — before any completion lands, the
+//! model's own `ms_per_cycle` clock prior calibrates the estimate,
+//! never a shared scalar guess.  Cost-less custom groups keep the
+//! legacy `backlog_requests × mean_exec_ms` estimate (with
+//! `default_service_ms` as the pre-completion prior).  Judged against
+//! the model's `slo_ms` latency class:
 //!
 //! ```text
 //!            drain_ms > grow_ratio · slo, below max ──► GROW  (spawn replica
@@ -35,8 +40,10 @@
 //! to damp.  Any group with a factory gets this, including fixed-size
 //! `min == max` groups the policy half of the loop never touches.
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ModelStats};
 use super::pool::GroupRuntime;
+use crate::sim::CostModel;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -55,7 +62,10 @@ pub struct AutoscalePolicy {
     /// act again (cooldown half of the hysteresis).
     pub hold_ticks: u32,
     /// Service-time prior (ms per request) before a model's first
-    /// completion.
+    /// completion.  Only consulted for groups *without* a
+    /// [`CostModel`]: cost-modeled groups derive their cold-start
+    /// prior from their own hardware clock (`CostModel::ms_per_cycle`)
+    /// instead of a shared scalar guess.
     pub default_service_ms: f64,
 }
 
@@ -79,20 +89,50 @@ pub enum ScaleDecision {
     Hold,
 }
 
-/// Pure scaling decision for one group at one tick: backlog (queued +
-/// in-flight requests), active replica count and bounds, the model's
-/// per-request service estimate, and its SLO class.
-pub fn decide(
+/// Predicted milliseconds of work sitting in one model's backlog — the
+/// single demand signal behind autoscaling ([`tick_group`]), the
+/// router's queueing-delay estimate, and wire admission control.
+///
+/// With a [`CostModel`] the estimate is `backlog_cost ×
+/// ms-per-cost-unit`: the live gauge of predicted accelerator cycles
+/// submitted but not yet settled, times the measured wall-milliseconds
+/// each predicted cycle has actually cost so far
+/// ([`ModelStats::ms_per_cost`]).  Before the first completion the
+/// model's own analytical clock ([`CostModel::ms_per_cycle`]) stands
+/// in, so a heavy model is scored as heavy from its very first queued
+/// request — the cold-start blind spot of the request-count signal.
+///
+/// Without a cost model (custom engine groups) the legacy estimate
+/// remains: `backlog` requests times the model's measured mean
+/// execution time, with `fallback_ms` as the pre-completion prior.
+pub fn predicted_work_ms(
+    stats: &ModelStats,
+    cost_model: Option<&CostModel>,
     backlog: usize,
+    fallback_ms: f64,
+) -> f64 {
+    match cost_model {
+        Some(cm) => {
+            let cost = stats.backlog_cost.load(Ordering::Relaxed) as f64;
+            cost * stats.ms_per_cost().unwrap_or_else(|| cm.ms_per_cycle())
+        }
+        None => backlog as f64 * stats.mean_exec_ms(fallback_ms),
+    }
+}
+
+/// Pure scaling decision for one group at one tick: the group's
+/// predicted backlog work ([`predicted_work_ms`]), active replica
+/// count and bounds, and its SLO class.
+pub fn decide(
+    work_ms: f64,
     active: usize,
     min: usize,
     max: usize,
-    service_ms: f64,
     slo_ms: f64,
     policy: &AutoscalePolicy,
 ) -> ScaleDecision {
     let active = active.max(1);
-    let drain_ms = backlog as f64 * service_ms / active as f64;
+    let drain_ms = work_ms / active as f64;
     if drain_ms > policy.grow_ratio * slo_ms && active < max {
         ScaleDecision::Grow
     } else if drain_ms < policy.shrink_ratio * slo_ms && active > min {
@@ -158,8 +198,10 @@ pub fn tick_group(
     let Some(slo_ms) = rt.slo_ms() else { return ScaleDecision::Hold };
     let (min, max) = rt.replica_bounds();
     let active = rt.active_replicas();
-    let service_ms = metrics.model(rt.model_index()).mean_exec_ms(policy.default_service_ms);
-    let decision = decide(queued, active, min, max, service_ms, slo_ms, policy);
+    let stats = metrics.model(rt.model_index());
+    let work_ms =
+        predicted_work_ms(&stats, rt.cost_model(), queued, policy.default_service_ms);
+    let decision = decide(work_ms, active, min, max, slo_ms, policy);
     let applied = match decision {
         ScaleDecision::Grow => match rt.grow() {
             Ok(applied) => applied,
@@ -202,37 +244,83 @@ mod tests {
 
     #[test]
     fn grows_when_drain_time_exceeds_slo() {
-        // 100 queued x 2 ms / 1 replica = 200 ms drain vs 20 ms SLO
+        // 200 ms of predicted work / 1 replica vs 20 ms SLO
         let p = policy();
-        assert_eq!(decide(100, 1, 1, 4, 2.0, 20.0, &p), ScaleDecision::Grow);
+        assert_eq!(decide(200.0, 1, 1, 4, 20.0, &p), ScaleDecision::Grow);
         // at max: hold, never exceed the bound
-        assert_eq!(decide(100, 4, 1, 4, 2.0, 20.0, &p), ScaleDecision::Hold);
+        assert_eq!(decide(200.0, 4, 1, 4, 20.0, &p), ScaleDecision::Hold);
     }
 
     #[test]
     fn shrinks_only_below_the_dead_band_and_above_min() {
         let p = policy();
         // idle: 0 ms drain < 0.25 x 20 ms
-        assert_eq!(decide(0, 4, 1, 4, 2.0, 20.0, &p), ScaleDecision::Shrink);
+        assert_eq!(decide(0.0, 4, 1, 4, 20.0, &p), ScaleDecision::Shrink);
         // at min: hold
-        assert_eq!(decide(0, 1, 1, 4, 2.0, 20.0, &p), ScaleDecision::Hold);
+        assert_eq!(decide(0.0, 1, 1, 4, 20.0, &p), ScaleDecision::Hold);
         // inside the dead band (drain 10 ms, band 5..20 ms): hold —
         // a group near its SLO must not flap
-        assert_eq!(decide(20, 4, 1, 4, 2.0, 20.0, &p), ScaleDecision::Hold);
+        assert_eq!(decide(40.0, 4, 1, 4, 20.0, &p), ScaleDecision::Hold);
     }
 
     #[test]
     fn capacity_scales_the_drain_estimate() {
         let p = policy();
-        // the same backlog that overwhelms 1 replica is inside the SLO
-        // for 4: 40 x 2 / 1 = 80 ms vs 40 x 2 / 4 = 20 ms against SLO 30
-        assert_eq!(decide(40, 1, 1, 4, 2.0, 30.0, &p), ScaleDecision::Grow);
-        assert_eq!(decide(40, 4, 1, 4, 2.0, 30.0, &p), ScaleDecision::Hold);
+        // the same 80 ms of work that overwhelms 1 replica is inside
+        // the SLO for 4: 80 / 1 = 80 ms vs 80 / 4 = 20 ms against 30
+        assert_eq!(decide(80.0, 1, 1, 4, 30.0, &p), ScaleDecision::Grow);
+        assert_eq!(decide(80.0, 4, 1, 4, 30.0, &p), ScaleDecision::Hold);
     }
 
     #[test]
     fn zero_active_is_treated_as_one_not_a_division_by_zero() {
         let p = policy();
-        assert_eq!(decide(100, 0, 1, 4, 2.0, 1.0, &p), ScaleDecision::Grow);
+        assert_eq!(decide(200.0, 0, 1, 4, 1.0, &p), ScaleDecision::Grow);
+    }
+
+    #[test]
+    fn cost_modeled_backlog_scores_work_before_any_completion() {
+        use crate::model::Geometry;
+        use crate::sim::{CostModel, HwConfig};
+        let geo = Geometry::preset("roberta_base").unwrap();
+        let hw = HwConfig::sized_to(&geo);
+        let cm = CostModel::build(&hw, &geo).unwrap();
+        let metrics = Metrics::new();
+        let cycles = cm.predict_cycles(geo.m);
+        for _ in 0..8 {
+            metrics.record_request_for(0, cycles);
+        }
+        let stats = metrics.model(0);
+        // fallback prior poisoned to zero: a cost-modeled group must
+        // score its backlog off its own analytical clock, not the
+        // shared scalar guess — the legacy path sees no work at all
+        let work = predicted_work_ms(&stats, Some(&cm), 8, 0.0);
+        let expect = 8.0 * cm.predict_ms(geo.m);
+        assert!(
+            (work - expect).abs() <= 1e-9 * expect,
+            "cold-start work {work} ms != 8 requests x {expect} ms / 8"
+        );
+        assert!(work > 0.0);
+        assert_eq!(predicted_work_ms(&stats, None, 8, 0.0), 0.0);
+    }
+
+    #[test]
+    fn measured_ms_per_cost_overrides_the_analytical_prior() {
+        use crate::model::Geometry;
+        use crate::sim::{CostModel, HwConfig};
+        let geo = Geometry::preset("tiny").unwrap();
+        let hw = HwConfig::sized_to(&geo);
+        let cm = CostModel::build(&hw, &geo).unwrap();
+        let metrics = Metrics::new();
+        // two completions: 2000 cost units at 2 ms exec each
+        for _ in 0..2 {
+            metrics.record_request_for(0, 1000);
+            metrics.record_model_served(0, 8, 8, 1000, 1000, 0.001, 0.002, 0.002, false);
+        }
+        // backlog of 3000 cost units x measured 0.002 ms/cost = 6 ms
+        metrics.record_request_for(0, 3000);
+        let stats = metrics.model(0);
+        let work = predicted_work_ms(&stats, Some(&cm), 1, 99.0);
+        assert!((work - 6.0).abs() < 1e-9, "calibrated work {work} != 6 ms");
     }
 }

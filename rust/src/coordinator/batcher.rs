@@ -21,9 +21,14 @@
 //! `(model, padded_len)`, so a dispatch group is always
 //! model-homogeneous, and model selection among full buckets is
 //! *weighted-fair*: a deficit-round-robin variant over models where each
-//! dispatch charges the model its group's bucket-padded tokens and the
-//! next dispatch goes to the backlogged model with the least normalized
-//! (charge ÷ weight) service.  A flood of cheap-model traffic therefore
+//! dispatch charges the model its group's *cost* and the next dispatch
+//! goes to the backlogged model with the least normalized (charge ÷
+//! weight) service.  The cost unit is the caller's: the serving router
+//! charges `CostModel`-predicted accelerator cycles per request
+//! ([`Batcher::push_costed`], DESIGN.md §12), so a 512-token
+//! roberta_base request and a 512-token tiny request no longer count
+//! the same; cost-agnostic callers ([`Batcher::push_keyed`]) fall back
+//! to bucket-padded tokens.  A flood of cheap-model traffic therefore
 //! cannot starve a heavy model past its share — while a deadline-expired
 //! request still outranks any full bucket, whatever the weights say.
 //!
@@ -93,8 +98,10 @@ impl BatchPolicy {
     }
 }
 
-/// One queued entry: the item, its arrival time, and the bucket-padded
-/// token count its dispatch will charge to the owning model.
+/// One queued entry: the item, its arrival time, and the cost its
+/// dispatch will charge to the owning model (predicted accelerator
+/// cycles on the serving path; bucket-padded tokens for cost-agnostic
+/// callers).
 type Entry<T> = (T, Instant, u64);
 
 #[derive(Debug)]
@@ -107,11 +114,10 @@ pub struct Batcher<T> {
     queued: usize,
     /// Fair-share weight per model index (missing / unset => 1).
     weights: Vec<u64>,
-    /// Cumulative bucket-padded tokens dispatched per model — the
-    /// deficit-round-robin ledger.  The next full-bucket dispatch goes
-    /// to the backlogged model minimizing `charged / weight`.  Charged
-    /// at pop time (every pop path, expired jumps included), never at
-    /// completion time.
+    /// Cumulative cost dispatched per model — the deficit-round-robin
+    /// ledger.  The next full-bucket dispatch goes to the backlogged
+    /// model minimizing `charged / weight`.  Charged at pop time (every
+    /// pop path, expired jumps included), never at completion time.
     charged: Vec<u64>,
     /// Requests popped by [`Batcher::take_batch_for`] whose dispatch has
     /// not yet reported [`Batcher::complete`], per model.  In-flight
@@ -148,9 +154,11 @@ impl<T> Batcher<T> {
         self.weights.get(model).copied().unwrap_or(1).max(1)
     }
 
-    /// Bucket-padded tokens dispatched for `model` so far (the
-    /// weighted-fair ledger; exposed for tests and reporting).
-    pub fn charged_tokens(&self, model: usize) -> u64 {
+    /// Cost dispatched for `model` so far (the weighted-fair ledger;
+    /// exposed for tests and reporting).  Unit is whatever the pushes
+    /// charged: predicted accelerator cycles on the serving path,
+    /// bucket-padded tokens for cost-agnostic callers.
+    pub fn charged_cost(&self, model: usize) -> u64 {
         self.charged.get(model).copied().unwrap_or(0)
     }
 
@@ -158,8 +166,8 @@ impl<T> Batcher<T> {
     /// `b`: `charged[a]/w[a] < charged[b]/w[b]`, cross-multiplied so the
     /// comparison stays exact in integers.
     fn norm_less(&self, a: usize, b: usize) -> bool {
-        (self.charged_tokens(a) as u128) * self.weight(b) as u128
-            < (self.charged_tokens(b) as u128) * self.weight(a) as u128
+        (self.charged_cost(a) as u128) * self.weight(b) as u128
+            < (self.charged_cost(b) as u128) * self.weight(a) as u128
     }
 
     /// Requests popped for `model` whose dispatch has not yet completed
@@ -235,11 +243,22 @@ impl<T> Batcher<T> {
         self.push_keyed(item, 0, len)
     }
 
-    /// Enqueue a request of sequence length `len` for `model`; returns
-    /// the padded bucket boundary (== `len` when bucketing is
+    /// Enqueue a request of sequence length `len` for `model`, charged
+    /// at its bucket-padded token count (the cost-agnostic fallback);
+    /// returns the padded bucket boundary (== `len` when bucketing is
     /// disabled), which the caller can feed to the padding-waste
     /// metric.  A dispatch group never mixes models or buckets.
     pub fn push_keyed(&mut self, item: T, model: usize, len: usize) -> usize {
+        let padded = self.policy.padded_len(len);
+        self.push_costed(item, model, len, padded as u64)
+    }
+
+    /// Enqueue a request of sequence length `len` for `model`, charging
+    /// the deficit ledger an explicit `cost` at dispatch time — the
+    /// serving path passes `CostModel::predict_cycles(len)` so fairness
+    /// is measured in predicted accelerator work, not tokens
+    /// (DESIGN.md §12).  Returns the padded bucket boundary.
+    pub fn push_costed(&mut self, item: T, model: usize, len: usize, cost: u64) -> usize {
         if self.charged.len() <= model {
             self.charged.resize(model + 1, 0);
         }
@@ -248,7 +267,7 @@ impl<T> Batcher<T> {
         // now on instead of replaying the share it queued no work for.
         if !self.has_backlog(model) {
             if let Some(j) = self.min_norm_backlogged() {
-                let floor = (self.charged_tokens(j) as u128) * self.weight(model) as u128
+                let floor = (self.charged_cost(j) as u128) * self.weight(model) as u128
                     / self.weight(j) as u128;
                 let floor = floor.min(u64::MAX as u128) as u64;
                 if floor > self.charged[model] {
@@ -258,7 +277,7 @@ impl<T> Batcher<T> {
         }
         let key = (model, self.policy.bucket_key(len));
         let padded = self.policy.padded_len(len);
-        self.buckets.entry(key).or_default().push_back((item, Instant::now(), padded as u64));
+        self.buckets.entry(key).or_default().push_back((item, Instant::now(), cost));
         self.queued += 1;
         padded
     }
@@ -332,7 +351,7 @@ impl<T> Batcher<T> {
     /// weighted-fair ledger across models (ties by oldest front), then
     /// the bucket holding the oldest request; other buckets stay queued
     /// for their own group.  Every dispatch charges its model the
-    /// group's bucket-padded tokens.
+    /// group's cost as stored at push time.
     pub fn take_batch(&mut self) -> Vec<T> {
         let now = Instant::now();
         let key = match self.oldest_bucket() {
@@ -359,21 +378,24 @@ impl<T> Batcher<T> {
     /// by the regression test below).
     ///
     /// Charging: every pop path charges at pop time — the expired-jump
-    /// pop included.  An uncharged expiry dispatch would let a model
-    /// whose deadline keeps firing (short max_wait, trickle arrival)
-    /// consume service the deficit ledger never sees, drifting the
-    /// served shares off the configured weights (ISSUE 5 regression
-    /// test `expired_dispatch_still_charges_its_model`).
+    /// pop included — and charges the *stored* per-entry cost, so both
+    /// pop paths use the same unit as normal dispatches.  An uncharged
+    /// (or differently-charged) expiry dispatch would let a model whose
+    /// deadline keeps firing (short max_wait, trickle arrival) consume
+    /// service the deficit ledger never sees, drifting the served
+    /// shares off the configured weights (ISSUE 5 regression test
+    /// `expired_dispatch_still_charges_its_model`, extended to the
+    /// cycle-charged ledger in ISSUE 8).
     fn pop_bucket(&mut self, key: (usize, usize)) -> Vec<T> {
         let Some(q) = self.buckets.get_mut(&key) else {
             return Vec::new();
         };
         let n = q.len().min(self.policy.max_batch);
-        let mut tokens: u64 = 0;
+        let mut cost: u64 = 0;
         let out: Vec<T> = q
             .drain(..n)
-            .map(|(item, _, padded)| {
-                tokens += padded;
+            .map(|(item, _, c)| {
+                cost = cost.saturating_add(c);
                 item
             })
             .collect();
@@ -384,7 +406,7 @@ impl<T> Batcher<T> {
         if self.charged.len() <= key.0 {
             self.charged.resize(key.0 + 1, 0);
         }
-        self.charged[key.0] = self.charged[key.0].saturating_add(tokens);
+        self.charged[key.0] = self.charged[key.0].saturating_add(cost);
         out
     }
 
@@ -760,8 +782,8 @@ mod tests {
         }
         assert_eq!(served[0], 12, "weight-2 model takes two of every three groups");
         assert_eq!(served[1], 6);
-        assert_eq!(b.charged_tokens(0), 12 * 8);
-        assert_eq!(b.charged_tokens(1), 6 * 8);
+        assert_eq!(b.charged_cost(0), 12 * 8);
+        assert_eq!(b.charged_cost(1), 6 * 8);
     }
 
     #[test]
@@ -778,7 +800,7 @@ mod tests {
         while !b.is_empty() {
             b.take_batch();
         }
-        assert_eq!(b.charged_tokens(0), 0, "idle pool carries no fairness debt");
+        assert_eq!(b.charged_cost(0), 0, "idle pool carries no fairness debt");
         // next epoch: the late tenant and the returning one alternate
         for i in 0..8 {
             b.push_keyed((1usize, i), 1, 8);
@@ -807,13 +829,63 @@ mod tests {
         b.push_keyed("hot-a", 1, 3);
         b.push_keyed("hot-b", 1, 3); // model 1's bucket is full
         assert_eq!(b.take_batch(), vec!["expired"], "expiry outranks the full bucket");
-        assert_eq!(b.charged_tokens(0), 8, "the expired jump was charged at pop time");
+        assert_eq!(b.charged_cost(0), 8, "the expired jump was charged at pop time");
         // per-model concurrent pop
         let mut b = Batcher::new(p);
         b.set_model_weights(&[1, 1]);
         b.push_keyed("expired", 0, 5);
         assert_eq!(b.take_batch_for(0), vec!["expired"]);
-        assert_eq!(b.charged_tokens(0), 8, "take_batch_for charges expiry pops too");
+        assert_eq!(b.charged_cost(0), 8, "take_batch_for charges expiry pops too");
+        // cycle-charged ledger (ISSUE 8): when the push carries an
+        // explicit predicted-cycle cost, BOTH pop paths must charge
+        // that stored cost, not the padded token count — an expired
+        // jump billed in a different unit would corrupt the ledger.
+        let mut b = Batcher::new(p);
+        b.set_model_weights(&[1, 1]);
+        b.push_costed("expired", 0, 5, 123_456);
+        std::thread::sleep(Duration::from_millis(1));
+        b.push_costed("hot-a", 1, 3, 70);
+        b.push_costed("hot-b", 1, 3, 70);
+        b.push_costed("hot-c", 1, 3, 70); // keeps the queue busy: no epoch reset
+        assert_eq!(b.take_batch(), vec!["expired"]);
+        assert_eq!(b.charged_cost(0), 123_456, "expired jump charges the stored cost");
+        assert_eq!(b.take_batch(), vec!["hot-a", "hot-b"]);
+        assert_eq!(b.charged_cost(1), 140, "full-bucket pop charges the stored costs");
+        let mut b = Batcher::new(p);
+        b.push_costed("expired", 0, 5, 123_456);
+        b.push_costed("later", 0, 5, 1);
+        assert_eq!(b.take_batch_for(0), vec!["expired", "later"]);
+        assert_eq!(b.in_flight_for(0), 2, "in-flight backlog counts popped requests");
+        assert_eq!(b.charged_cost(0), 123_457, "take_batch_for charges the stored cost");
+        b.complete(0, 2);
+    }
+
+    #[test]
+    fn cycle_charged_ledger_drives_fair_selection() {
+        // Same token length, wildly different predicted cost: under
+        // equal weights the deficit ledger must interleave dispatches
+        // so *cost* (not request count) stays balanced — one heavy
+        // group is worth many cheap ones (DESIGN.md §12).
+        let p = BatchPolicy { max_batch: 1, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+        let mut b = Batcher::new(p);
+        b.set_model_weights(&[1, 1]);
+        for i in 0..4 {
+            b.push_costed((0usize, i), 0, 8, 1000); // heavy model
+        }
+        for i in 0..40 {
+            b.push_costed((1usize, i), 1, 8, 100); // cheap model
+        }
+        let mut served_cost = [0u64; 2];
+        for _ in 0..24 {
+            let model = b.take_batch()[0].0;
+            served_cost[model] += if model == 0 { 1000 } else { 100 };
+        }
+        // The ledger alternates 1 heavy : 10 cheap (ties break to the
+        // older heavy front), keeping served *cost* level within one
+        // heavy charge — token-charged DRR would have served the heavy
+        // model only ~1/2 of dispatches, 10x the cost share.
+        assert_eq!(served_cost[0], 3000, "heavy model dispatched by cost, not count");
+        assert_eq!(served_cost[1], 2100);
     }
 
     #[test]
@@ -850,7 +922,7 @@ mod tests {
             concurrent.complete(0, got.len());
         }
         assert!(concurrent.is_empty());
-        assert_eq!(concurrent.charged_tokens(0), serial.charged_tokens(0));
+        assert_eq!(concurrent.charged_cost(0), serial.charged_cost(0));
     }
 
     #[test]
@@ -888,18 +960,18 @@ mod tests {
         assert_eq!(popped.len(), 2);
         assert_eq!(b.in_flight_for(0), 2);
         assert!(b.is_empty(), "queue drained but the group is still executing");
-        assert_eq!(b.charged_tokens(0), 16, "charge landed at pop time, no reset yet");
+        assert_eq!(b.charged_cost(0), 16, "charge landed at pop time, no reset yet");
         // a tenant arriving while model 0's group is in flight enters
         // at model 0's service level, not at zero
         b.push_keyed((1usize, 0), 1, 8);
-        assert_eq!(b.charged_tokens(1), 16, "re-entry floor sees in-flight backlog");
+        assert_eq!(b.charged_cost(1), 16, "re-entry floor sees in-flight backlog");
         let served = b.take_batch_for(1);
         assert_eq!(served.len(), 1);
         b.complete(1, 1);
-        assert_eq!(b.charged_tokens(0), 16, "model 0 still in flight: no epoch reset");
+        assert_eq!(b.charged_cost(0), 16, "model 0 still in flight: no epoch reset");
         b.complete(0, 2);
-        assert_eq!(b.charged_tokens(0), 0, "last completion resets the idle epoch");
-        assert_eq!(b.charged_tokens(1), 0);
+        assert_eq!(b.charged_cost(0), 0, "last completion resets the idle epoch");
+        assert_eq!(b.charged_cost(1), 0);
     }
 
     #[test]
@@ -916,13 +988,13 @@ mod tests {
         for _ in 0..4 {
             assert_eq!(b.take_batch()[0].0, 0);
         }
-        assert_eq!(b.charged_tokens(0), 64);
+        assert_eq!(b.charged_cost(0), 64);
         // model 1 arrives late while model 0 is still backlogged: its
         // ledger jumps to model 0's level instead of starting at zero
         for i in 0..8 {
             b.push_keyed((1usize, i), 1, 8);
         }
-        assert_eq!(b.charged_tokens(1), 64, "idle model re-enters at the current level");
+        assert_eq!(b.charged_cost(1), 64, "idle model re-enters at the current level");
         let mut served = [0usize; 2];
         for _ in 0..8 {
             served[b.take_batch()[0].0] += 1;

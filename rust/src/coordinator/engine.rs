@@ -36,9 +36,8 @@ use crate::model::{Blob, Geometry, Manifest};
 use crate::quant::i_matmul;
 use crate::runtime::{Engine, Executable, Tensor};
 use crate::sim::functional::{encoder_forward_ws, synthetic_consts, LayerWeights, Workspace};
-use crate::sim::{simulate_encoder_m, HwConfig};
+use crate::sim::{simulate_encoder_m, CostModel, HwConfig};
 use crate::util::rng::Rng;
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
@@ -349,10 +348,11 @@ pub struct FunctionalEngine {
     /// Mutex only matters when one engine object backs several pool
     /// slots (legal, e.g. the PJRT serving test's shared Arc).
     ws: Mutex<Workspace>,
-    /// Memoized accelerator cycle totals per live length.  Worst-case
-    /// sqrt timing (the paper default) is data-independent, so one
-    /// simulation per distinct `m_eff` serves every request.
-    cycles_by_len: Mutex<BTreeMap<usize, u64>>,
+    /// Closed-form cycle accounting (`sim::cost`, DESIGN.md §12).
+    /// Worst-case sqrt timing (the paper default) is data-independent,
+    /// so the model predicts every request exactly; replicas of one
+    /// registry group share a single build behind the `Arc`.
+    cost: Arc<CostModel>,
 }
 
 impl FunctionalEngine {
@@ -362,27 +362,36 @@ impl FunctionalEngine {
         Ok(FunctionalEngine::from_model(Arc::new(SyntheticModel::build(preset, seed)?), hw))
     }
 
-    /// Build a replica over an existing (shared) model bundle.
+    /// Build a replica over an existing (shared) model bundle.  Builds
+    /// its own [`CostModel`]; panics on a configuration the simulator
+    /// cannot run (the pre-CostModel code simulated the full length
+    /// here and panicked on the same configurations).
     pub fn from_model(model: Arc<SyntheticModel>, hw: HwConfig) -> FunctionalEngine {
-        let geo = model.geo;
-        let full = simulate_encoder_m(&hw, &geo, geo.m, None).total_cycles;
+        let cost = CostModel::build(&hw, &model.geo)
+            .unwrap_or_else(|e| panic!("unsimulatable hardware configuration: {e}"));
+        FunctionalEngine::from_model_with_cost(model, hw, Arc::new(cost))
+    }
+
+    /// Build a replica over a shared model bundle *and* a shared
+    /// prebuilt [`CostModel`] — what the registry uses so N replicas of
+    /// one group pay for one build, not N.
+    pub fn from_model_with_cost(
+        model: Arc<SyntheticModel>,
+        hw: HwConfig,
+        cost: Arc<CostModel>,
+    ) -> FunctionalEngine {
         // host-execution knob (DESIGN.md §7): head-parallel fused
         // attention, selectable back to the serial loop via HwConfig —
         // numerics are bit-exact either way
-        let mut ws = Workspace::new(&geo);
+        let mut ws = Workspace::new(&model.geo);
         ws.set_attn_heads_parallel(hw.attn_heads_parallel);
-        FunctionalEngine {
-            model,
-            hw,
-            ws: Mutex::new(ws),
-            cycles_by_len: Mutex::new(BTreeMap::from([(geo.m, full)])),
-        }
+        FunctionalEngine { model, hw, ws: Mutex::new(ws), cost }
     }
 
     /// Build `n` identical replicas of one synthetic model — the
     /// weights are generated once and shared, each replica gets its own
-    /// arena.  This is what [`super::registry::ModelRegistry`] hosts
-    /// per model id.
+    /// arena, and all replicas share one [`CostModel`] build.  This is
+    /// what [`super::registry::ModelRegistry`] hosts per model id.
     pub fn replica_group(
         preset: &str,
         seed: u64,
@@ -390,10 +399,14 @@ impl FunctionalEngine {
         n: usize,
     ) -> Result<Vec<Arc<dyn EngineReplica>>, String> {
         let model = Arc::new(SyntheticModel::build(preset, seed)?);
+        let cost = Arc::new(CostModel::build(&hw, &model.geo)?);
         Ok((0..n)
             .map(|_| {
-                Arc::new(FunctionalEngine::from_model(Arc::clone(&model), hw))
-                    as Arc<dyn EngineReplica>
+                Arc::new(FunctionalEngine::from_model_with_cost(
+                    Arc::clone(&model),
+                    hw,
+                    Arc::clone(&cost),
+                )) as Arc<dyn EngineReplica>
             })
             .collect())
     }
@@ -403,19 +416,18 @@ impl FunctionalEngine {
         &self.model.geo
     }
 
+    /// The replica's cost model (shared across a registry group).
+    pub fn cost_model(&self) -> &Arc<CostModel> {
+        &self.cost
+    }
+
     /// Simulated accelerator cycles for one request of live length
     /// `m_eff` whose forward pass produced `sqrt_iters`.
     fn accel_cycles(&self, m_eff: usize, sqrt_iters: &[u32]) -> u64 {
         if self.hw.worst_case_sqrt {
-            // data-independent: memoize one simulation per length
-            *self
-                .cycles_by_len
-                .lock()
-                .unwrap()
-                .entry(m_eff)
-                .or_insert_with(|| {
-                    simulate_encoder_m(&self.hw, &self.model.geo, m_eff, None).total_cycles
-                })
+            // data-independent: the closed form is exact (validated
+            // against the simulator at build time)
+            self.cost.predict_cycles(m_eff)
         } else {
             simulate_encoder_m(&self.hw, &self.model.geo, m_eff, Some(sqrt_iters)).total_cycles
         }

@@ -71,6 +71,15 @@ pub struct ModelStats {
     /// live backlog gauge: requests submitted but not yet completed or
     /// errored (queued + in flight) — the autoscaler's demand signal
     pub backlog: AtomicU64,
+    /// live backlog in predicted cost units (`CostModel` cycles on the
+    /// serving path): the sum of the predicted costs of every request
+    /// submitted but not yet settled.  The autoscaler's *work* signal —
+    /// unlike the request-count gauge it already knows a roberta_base
+    /// backlog outweighs a tiny backlog (DESIGN.md §12)
+    pub backlog_cost: AtomicU64,
+    /// predicted cost of completed (non-error) requests — the
+    /// denominator of the measured ms-per-cost calibration
+    pub served_cost: AtomicU64,
     /// end-to-end wallclock latency per completed request (seconds) —
     /// the per-model p50/p99 ledger the SLO is judged against
     pub e2e_s: Mutex<Series>,
@@ -138,6 +147,23 @@ impl ModelStats {
             fallback_ms
         } else {
             self.exec_ns_total.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+        }
+    }
+
+    /// Measured wall milliseconds per unit of predicted cost —
+    /// `Σ exec_ms / Σ served_cost` — or `None` before the first
+    /// completion.  Multiplied by [`ModelStats::backlog_cost`] this
+    /// turns the predicted-work backlog into a wall-clock drain
+    /// estimate calibrated to the host actually serving it; callers
+    /// with a [`crate::sim::CostModel`] in hand fall back to its
+    /// virtual clock before the first sample lands (DESIGN.md §12).
+    /// O(1) off the running counters, like [`ModelStats::mean_exec_ms`].
+    pub fn ms_per_cost(&self) -> Option<f64> {
+        let cost = self.served_cost.load(Ordering::Relaxed);
+        if cost == 0 {
+            None
+        } else {
+            Some(self.exec_ns_total.load(Ordering::Relaxed) as f64 / 1e6 / cost as f64)
         }
     }
 }
@@ -261,14 +287,18 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Account one submitted request against model `i`'s ledger as well
-    /// as the aggregate counter.  Raises the model's live backlog
-    /// gauge; [`Metrics::record_model_served`] settles it.
-    pub fn record_request_for(&self, model: usize) {
+    /// Account one submitted request of predicted cost `cost` against
+    /// model `i`'s ledger as well as the aggregate counter.  Raises the
+    /// model's live backlog gauges (request count AND predicted work);
+    /// [`Metrics::record_model_served`] settles both.  The serving path
+    /// passes `CostModel::predict_cycles(len)`; cost-agnostic callers
+    /// pass the padded token count so the work gauge still moves.
+    pub fn record_request_for(&self, model: usize, cost: u64) {
         self.record_request();
         let m = self.model(model);
         m.requests.fetch_add(1, Ordering::Relaxed);
         m.backlog.fetch_add(1, Ordering::Relaxed);
+        m.backlog_cost.fetch_add(cost, Ordering::Relaxed);
     }
 
     /// Account one request's live token count and the padded count its
@@ -324,17 +354,20 @@ impl Metrics {
 
     /// Account one completed (or failed) request against model `i`'s
     /// ledger: the live and bucket-padded tokens actually served, the
-    /// virtual accelerator time they cost, and the wall-clock
-    /// end-to-end / execution latencies feeding the per-model p50/p99
-    /// ledgers.  Settles the live backlog gauge either way; errors
-    /// skip the latency series (a typed rejection is near-instant and
-    /// would deflate the tail).
+    /// predicted cost its submission charged (settling the work gauge
+    /// and — on success — calibrating ms-per-cost), the virtual
+    /// accelerator time it cost, and the wall-clock end-to-end /
+    /// execution latencies feeding the per-model p50/p99 ledgers.
+    /// Settles the live backlog gauges either way; errors skip the
+    /// latency series (a typed rejection is near-instant and would
+    /// deflate the tail).
     #[allow(clippy::too_many_arguments)]
     pub fn record_model_served(
         &self,
         model: usize,
         actual: usize,
         padded: usize,
+        cost: u64,
         cycles: u64,
         accel_ms: f64,
         e2e_s: f64,
@@ -344,6 +377,11 @@ impl Metrics {
         let m = self.model(model);
         let b = &m.backlog;
         let _ = b.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+        // saturating settle: mock-driven tests settle without a
+        // matching submit, and the gauge must never wrap
+        let _ = m.backlog_cost.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(cost))
+        });
         if error {
             m.errors.fetch_add(1, Ordering::Relaxed);
             return;
@@ -351,6 +389,7 @@ impl Metrics {
         m.completed.fetch_add(1, Ordering::Relaxed);
         m.served_tokens.fetch_add(actual as u64, Ordering::Relaxed);
         m.served_padded_tokens.fetch_add(padded as u64, Ordering::Relaxed);
+        m.served_cost.fetch_add(cost, Ordering::Relaxed);
         m.accel_cycles.fetch_add(cycles, Ordering::Relaxed);
         *m.accel_ms.lock().unwrap() += accel_ms;
         m.e2e_s.lock().unwrap().push(e2e_s);
@@ -458,7 +497,8 @@ impl Metrics {
                 out.push_str(&format!(
                     "\n  model {} (w={}): requests={} completed={} errors={} waste={:.1}% \
                      served tokens={} share={:.1}% (weight {:.1}%) virtual={:.3}ms \
-                     backlog={} replicas={} e2e p50={p50_ms:.3}ms p99={p99_ms:.3}ms \
+                     backlog={} (work={}cy) served_work={}cy replicas={} \
+                     e2e p50={p50_ms:.3}ms p99={p99_ms:.3}ms \
                      scale +{}/-{} faults={} retried={} shed={}",
                     l.name,
                     l.weight,
@@ -471,6 +511,8 @@ impl Metrics {
                     weight_pct,
                     l.stats.accel_ms(),
                     l.stats.backlog.load(Ordering::Relaxed),
+                    l.stats.backlog_cost.load(Ordering::Relaxed),
+                    l.stats.served_cost.load(Ordering::Relaxed),
                     l.stats.replicas.load(Ordering::Relaxed),
                     l.stats.scale_ups.load(Ordering::Relaxed),
                     l.stats.scale_downs.load(Ordering::Relaxed),
@@ -572,13 +614,13 @@ mod tests {
     fn model_ledgers_track_served_shares() {
         let m = Metrics::new();
         m.ensure_models(&[("a", 3), ("b", 1)]);
-        m.record_request_for(0);
-        m.record_request_for(1);
-        m.record_model_served(0, 8, 8, 100, 0.7, 0.010, 0.004, false);
-        m.record_model_served(0, 8, 8, 100, 0.7, 0.020, 0.005, false);
-        m.record_model_served(0, 8, 8, 100, 0.7, 0.030, 0.006, false);
-        m.record_model_served(1, 4, 8, 50, 0.3, 0.010, 0.002, false);
-        m.record_model_served(1, 2, 0, 0, 0.0, 0.0, 0.0, true); // error: no tokens served
+        m.record_request_for(0, 100);
+        m.record_request_for(1, 50);
+        m.record_model_served(0, 8, 8, 100, 100, 0.7, 0.010, 0.004, false);
+        m.record_model_served(0, 8, 8, 100, 100, 0.7, 0.020, 0.005, false);
+        m.record_model_served(0, 8, 8, 100, 100, 0.7, 0.030, 0.006, false);
+        m.record_model_served(1, 4, 8, 50, 50, 0.3, 0.010, 0.002, false);
+        m.record_model_served(1, 2, 0, 0, 0, 0.0, 0.0, 0.0, true); // error: no tokens served
         let a = m.model(0);
         let b = m.model(1);
         assert_eq!(a.completed.load(Ordering::Relaxed), 3);
@@ -607,18 +649,41 @@ mod tests {
     fn backlog_gauge_tracks_submitted_minus_settled() {
         let m = Metrics::new();
         m.ensure_models(&[("a", 1)]);
-        m.record_request_for(0);
-        m.record_request_for(0);
-        m.record_request_for(0);
+        m.record_request_for(0, 500);
+        m.record_request_for(0, 500);
+        m.record_request_for(0, 500);
         assert_eq!(m.model(0).backlog.load(Ordering::Relaxed), 3);
-        m.record_model_served(0, 4, 8, 10, 0.1, 0.001, 0.001, false);
-        m.record_model_served(0, 0, 0, 0, 0.0, 0.0, 0.0, true); // errors settle too
+        assert_eq!(m.model(0).backlog_cost.load(Ordering::Relaxed), 1500);
+        m.record_model_served(0, 4, 8, 500, 10, 0.1, 0.001, 0.001, false);
+        m.record_model_served(0, 0, 0, 500, 0, 0.0, 0.0, 0.0, true); // errors settle too
         assert_eq!(m.model(0).backlog.load(Ordering::Relaxed), 1);
+        assert_eq!(m.model(0).backlog_cost.load(Ordering::Relaxed), 500);
         // a settle without a matching submit saturates at zero instead
         // of wrapping (mock-driven tests bypass record_request_for)
-        m.record_model_served(0, 4, 8, 10, 0.1, 0.001, 0.001, false);
-        m.record_model_served(0, 4, 8, 10, 0.1, 0.001, 0.001, false);
+        m.record_model_served(0, 4, 8, 500, 10, 0.1, 0.001, 0.001, false);
+        m.record_model_served(0, 4, 8, 500, 10, 0.1, 0.001, 0.001, false);
         assert_eq!(m.model(0).backlog.load(Ordering::Relaxed), 0);
+        assert_eq!(m.model(0).backlog_cost.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn cost_ledger_calibrates_ms_per_cost() {
+        let m = Metrics::new();
+        m.ensure_models(&[("a", 1)]);
+        assert_eq!(m.model(0).ms_per_cost(), None, "no completions, no calibration");
+        m.record_request_for(0, 1000);
+        m.record_request_for(0, 1000);
+        // two completions at 2 ms exec each over 2000 cost units
+        m.record_model_served(0, 8, 8, 1000, 1000, 0.7, 0.003, 0.002, false);
+        m.record_model_served(0, 8, 8, 1000, 1000, 0.7, 0.003, 0.002, false);
+        let a = m.model(0);
+        assert_eq!(a.served_cost.load(Ordering::Relaxed), 2000);
+        let mpc = a.ms_per_cost().unwrap();
+        assert!((mpc - 0.002).abs() < 1e-9, "4 ms over 2000 cost = 0.002 ms/cost, got {mpc}");
+        // errors contribute neither cost nor exec time to calibration
+        m.record_model_served(0, 0, 0, 500, 0, 0.0, 0.0, 0.0, true);
+        assert_eq!(a.served_cost.load(Ordering::Relaxed), 2000);
+        assert!(m.report().contains("served_work=2000cy"), "{}", m.report());
     }
 
     #[test]
@@ -661,7 +726,7 @@ mod tests {
         m.record_replica(3, 0.001, 10, 0.0, false);
         assert_eq!(m.replica_count(), 4);
         assert_eq!(m.replica(3).requests.load(Ordering::Relaxed), 1);
-        m.record_model_served(2, 1, 8, 1, 0.0, 0.001, 0.001, false);
+        m.record_model_served(2, 1, 8, 1, 1, 0.0, 0.001, 0.001, false);
         assert_eq!(m.model_count(), 3);
         assert_eq!(m.model_name(2).as_deref(), Some("model2"));
         assert_eq!(m.model(2).completed.load(Ordering::Relaxed), 1);

@@ -23,13 +23,16 @@
 //!   geometry presets + replica groups + fair-share weights +
 //!   `min..=max` replica ranges, SLO classes, and replica factories.
 //! * [`batcher`] — dynamic batcher (size/deadline policy, model- and
-//!   length-bucketed, deficit-round-robin model selection; per-model
-//!   pop contract with in-flight accounting for concurrent poppers).
+//!   length-bucketed, deficit-round-robin model selection charged in
+//!   the caller's cost unit — predicted accelerator cycles on the
+//!   serving path; per-model pop contract with in-flight accounting
+//!   for concurrent poppers).
 //! * [`pool`] — per-model group runtimes: fan-out + per-request
 //!   re-ordering on a private per-group thread pool, replica slots the
 //!   autoscaler grows and drains.
 //! * [`autoscale`] — the SLO-aware backlog autoscaler policy and
-//!   control loop.
+//!   control loop, scoring each group's backlog in predicted work
+//!   (`sim::cost::CostModel` cycles) rather than request counts.
 //! * [`router`] — request intake, the per-group dispatcher threads,
 //!   the autoscaler thread, shutdown.
 //! * [`server`] — the legacy line-protocol TCP front-end (bounded
@@ -50,7 +53,9 @@ pub mod registry;
 pub mod router;
 pub mod server;
 
-pub use autoscale::{AutoscalePolicy, ScaleDecision};
+pub use autoscale::{
+    decide, predicted_work_ms, tick_group, AutoscalePolicy, GroupScaleState, ScaleDecision,
+};
 pub use batcher::{Batcher, BatchPolicy};
 pub use engine::{
     EngineReplica, FunctionalEngine, InferenceEngine, Prediction, RequestError, SyntheticModel,

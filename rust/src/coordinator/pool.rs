@@ -51,6 +51,7 @@ use super::engine::{EngineReplica, RequestError};
 use super::metrics::Metrics;
 use super::registry::{ModelGroup, ReplicaFactory};
 use super::router::{Request, Response};
+use crate::sim::CostModel;
 use crate::util::threadpool::ThreadPool;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -69,6 +70,11 @@ pub struct GroupRuntime {
     factory: Option<ReplicaFactory>,
     /// target latency class in milliseconds (autoscaler input)
     slo_ms: Option<f64>,
+    /// the group's analytical cost model (shared with its replicas and
+    /// the router's endpoint): the autoscaler prices this group's
+    /// backlog through it (`None` for custom groups — legacy
+    /// request-count signal)
+    cost: Option<Arc<CostModel>>,
     /// fixed-width slot table (`len == max_replicas`); `Some` slots are
     /// active.  A Mutex, not RwLock: dispatches snapshot the active set
     /// in one short lock and scaling actions are rare.
@@ -105,6 +111,7 @@ impl GroupRuntime {
             min: g.min_replicas.max(1),
             factory: g.factory,
             slo_ms: g.slo_ms,
+            cost: g.cost,
             slots: Mutex::new(slots),
             next_start: AtomicUsize::new(0),
             pool: ThreadPool::new(max),
@@ -125,6 +132,12 @@ impl GroupRuntime {
     /// Target latency class, if the group is SLO-managed.
     pub fn slo_ms(&self) -> Option<f64> {
         self.slo_ms
+    }
+
+    /// The group's analytical cost model, if it was registered with one
+    /// (the autoscaler's predicted-work signal; DESIGN.md §12).
+    pub fn cost_model(&self) -> Option<&CostModel> {
+        self.cost.as_deref()
     }
 
     /// Replicas currently serving (active slots).
@@ -479,6 +492,7 @@ fn serve_one(
                 req.model,
                 req.tokens.len(),
                 req.padded_len,
+                req.cost,
                 pred.accel_cycles,
                 pred.accel_ms,
                 e2e,
@@ -500,7 +514,7 @@ fn serve_one(
             let exec = t0.elapsed().as_secs_f64();
             metrics.record_error();
             metrics.record_replica(replica_id, exec, 0, 0.0, true);
-            metrics.record_model_served(req.model, 0, 0, 0, 0.0, 0.0, 0.0, true);
+            metrics.record_model_served(req.model, 0, 0, req.cost, 0, 0.0, 0.0, 0.0, true);
             Response {
                 id: req.id,
                 model: model_name.to_string(),
@@ -528,7 +542,7 @@ fn fail_request(
     msg: &str,
 ) -> Response {
     metrics.record_error();
-    metrics.record_model_served(req.model, 0, 0, 0, 0.0, 0.0, 0.0, true);
+    metrics.record_model_served(req.model, 0, 0, req.cost, 0, 0.0, 0.0, 0.0, true);
     let resp = Response {
         id: req.id,
         model: model_name.to_string(),
@@ -599,6 +613,7 @@ mod tests {
                 model,
                 tokens: vec![id as i32; 4],
                 padded_len: 4,
+                cost: 4,
                 submitted: Instant::now(),
                 reply: tx,
             });
@@ -798,6 +813,7 @@ mod tests {
                     max_replicas: 3,
                     slo_ms: Some(10.0),
                     factory: Some(factory),
+                    cost: None,
                 },
                 ModelGroup::fixed(
                     "fixed",

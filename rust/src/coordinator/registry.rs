@@ -20,7 +20,7 @@
 
 use super::engine::{EngineReplica, FunctionalEngine};
 use crate::model::Geometry;
-use crate::sim::HwConfig;
+use crate::sim::{CostModel, HwConfig};
 use std::sync::Arc;
 
 /// Builds one more identical replica of a model on demand — what the
@@ -47,6 +47,13 @@ pub struct ModelGroup {
     /// group out of autoscaling.
     pub slo_ms: Option<f64>,
     pub factory: Option<ReplicaFactory>,
+    /// Closed-form cost model of this group's `(geometry, hardware)`
+    /// pair, built once at registration and shared with every replica
+    /// (DESIGN.md §12).  The router charges batcher fairness and the
+    /// autoscaler/admission paths score backlog through it; custom
+    /// groups without a geometry (`None`) fall back to token-charged
+    /// accounting.
+    pub cost: Option<Arc<CostModel>>,
 }
 
 impl ModelGroup {
@@ -66,6 +73,7 @@ impl ModelGroup {
             max_replicas: n,
             slo_ms: None,
             factory: None,
+            cost: None,
         }
     }
 
@@ -91,6 +99,7 @@ struct Entry {
     max_replicas: usize,
     slo_ms: Option<f64>,
     factory: Option<ReplicaFactory>,
+    cost: Option<Arc<CostModel>>,
 }
 
 /// Registry of resident models, built once at startup and converted
@@ -208,16 +217,27 @@ impl ModelRegistry {
             format!("unknown preset {preset:?} (expected one of {:?})", Geometry::PRESET_NAMES)
         })?;
         hw.validate(&geo)?;
+        // one CostModel build per group: every initial replica, every
+        // factory-spawned replica, and the router's scheduling paths
+        // all share it (DESIGN.md §12)
+        let cost = Arc::new(CostModel::build(&hw, &geo)?);
         let model = Arc::new(super::engine::SyntheticModel::build(preset, seed)?);
         let replicas: Vec<Arc<dyn EngineReplica>> = (0..min_replicas)
             .map(|_| {
-                Arc::new(FunctionalEngine::from_model(Arc::clone(&model), hw))
-                    as Arc<dyn EngineReplica>
+                Arc::new(FunctionalEngine::from_model_with_cost(
+                    Arc::clone(&model),
+                    hw,
+                    Arc::clone(&cost),
+                )) as Arc<dyn EngineReplica>
             })
             .collect();
+        let factory_cost = Arc::clone(&cost);
         let factory: ReplicaFactory = Arc::new(move || {
-            Ok(Arc::new(FunctionalEngine::from_model(Arc::clone(&model), hw))
-                as Arc<dyn EngineReplica>)
+            Ok(Arc::new(FunctionalEngine::from_model_with_cost(
+                Arc::clone(&model),
+                hw,
+                Arc::clone(&factory_cost),
+            )) as Arc<dyn EngineReplica>)
         });
         self.entries.push(Entry {
             name: name.to_string(),
@@ -229,6 +249,7 @@ impl ModelRegistry {
             max_replicas,
             slo_ms,
             factory: Some(factory),
+            cost: Some(cost),
         });
         Ok(self)
     }
@@ -255,6 +276,7 @@ impl ModelRegistry {
             max_replicas: n,
             slo_ms: None,
             factory: None,
+            cost: None,
         });
         Ok(self)
     }
@@ -286,6 +308,7 @@ impl ModelRegistry {
             max_replicas,
             slo_ms,
             factory: Some(factory),
+            cost: None,
         });
         Ok(self)
     }
@@ -356,6 +379,7 @@ impl ModelRegistry {
                 max_replicas: e.max_replicas,
                 slo_ms: e.slo_ms,
                 factory: e.factory,
+                cost: e.cost,
             })
             .collect()
     }
@@ -442,6 +466,27 @@ mod tests {
         let extra = g.factory.as_ref().unwrap()().unwrap();
         assert_eq!(extra.seq_len(), g.replicas[0].seq_len());
         assert_eq!(extra.min_seq_len(), g.replicas[0].min_seq_len());
+    }
+
+    #[test]
+    fn preset_groups_carry_a_cost_model_custom_groups_do_not() {
+        use crate::coordinator::engine::FunctionalEngine;
+        use crate::sim::HwConfig;
+        let mut reg = ModelRegistry::new();
+        reg.register("tiny", "tiny", 1, 1, 7).unwrap();
+        let tiny_replica: Arc<dyn EngineReplica> =
+            Arc::new(FunctionalEngine::synthetic("tiny", 7, HwConfig::paper()).unwrap());
+        reg.register_group("custom", vec![tiny_replica], 1).unwrap();
+        let groups = reg.into_groups();
+        let cm = groups[0].cost.as_ref().expect("preset group builds a cost model");
+        let geo = Geometry::preset("tiny").unwrap();
+        // shared model predicts exactly what the sized-to simulator does
+        assert_eq!(
+            cm.predict_cycles(geo.m),
+            crate::sim::simulate_encoder_m(&HwConfig::sized_to(&geo), &geo, geo.m, None)
+                .total_cycles
+        );
+        assert!(groups[1].cost.is_none(), "custom groups stay token-charged");
     }
 
     #[test]

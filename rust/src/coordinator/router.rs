@@ -23,12 +23,13 @@
 //! shared `Arc` weight bundle) or drains it back toward
 //! `min_replicas`.
 
-use super::autoscale::{tick_group, AutoscalePolicy, GroupScaleState};
+use super::autoscale::{predicted_work_ms, tick_group, AutoscalePolicy, GroupScaleState};
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::EngineReplica;
 use super::metrics::Metrics;
 use super::pool::ReplicaPool;
 use super::registry::ModelGroup;
+use crate::sim::CostModel;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
@@ -45,6 +46,12 @@ pub struct Request {
     /// (== `tokens.len()` when bucketing is off); fed to the per-model
     /// served-token ledger on completion
     pub padded_len: usize,
+    /// predicted cost of this request in the router's single fairness /
+    /// admission / autoscaling currency: `CostModel` accelerator cycles
+    /// for groups with a cost model, padded bucket tokens otherwise.
+    /// Charged to the batcher's deficit ledger at pop time and settled
+    /// on the per-model work gauges at completion.
+    pub cost: u64,
     pub submitted: Instant,
     pub reply: Sender<Response>,
 }
@@ -80,6 +87,10 @@ struct Endpoint {
     weight: u64,
     min_len: usize,
     max_len: usize,
+    /// the group's analytical cost model (`sim::cost`), shared with its
+    /// replicas: prices every submit in predicted accelerator cycles.
+    /// `None` for custom groups, which fall back to padded tokens.
+    cost: Option<Arc<CostModel>>,
 }
 
 pub struct Router {
@@ -146,6 +157,7 @@ impl Router {
                 weight: g.weight.max(1),
                 min_len: g.replicas.iter().map(|r| r.min_seq_len()).max().unwrap_or(0),
                 max_len: g.replicas.iter().map(|r| r.seq_len()).min().unwrap_or(0),
+                cost: g.cost.clone(),
             })
             .collect();
         let specs: Vec<(&str, u64)> =
@@ -217,16 +229,22 @@ impl Router {
     }
 
     /// Predicted queueing delay for model index `model` in
-    /// milliseconds: `backlog · mean_exec_ms / active_replicas` — the
+    /// milliseconds: the model's predicted backlog work
+    /// ([`predicted_work_ms`]) divided by its active replicas — the
     /// same demand signal the autoscaler's `decide()` integrates
     /// (`coordinator::autoscale`), read lock-free off the model's
-    /// metrics gauges (`default_service_ms` stands in for
-    /// `mean_exec_ms` before the first completion).
+    /// metrics gauges.  Groups with a [`CostModel`] price the backlog
+    /// in predicted accelerator cycles (calibrated by measured
+    /// ms-per-cycle, with the model's analytical clock as the
+    /// cold-start prior); cost-less groups keep the legacy
+    /// `backlog · mean_exec_ms` estimate, where `default_service_ms`
+    /// stands in before the first completion.
     pub fn predicted_delay_ms(&self, model: usize, default_service_ms: f64) -> f64 {
         let m = self.metrics.model(model);
-        let backlog = m.backlog.load(Ordering::Relaxed) as f64;
         let active = m.replicas.load(Ordering::Relaxed).max(1) as f64;
-        backlog * m.mean_exec_ms(default_service_ms) / active
+        let backlog = m.backlog.load(Ordering::Relaxed) as usize;
+        let cost = self.endpoints.get(model).and_then(|e| e.cost.as_deref());
+        predicted_work_ms(&m, cost, backlog, default_service_ms) / active
     }
 
     /// SLO-derived admission control (DESIGN.md §11): if model index
@@ -300,20 +318,33 @@ impl Router {
     /// per-model metrics.
     fn submit_idx(&self, model: usize, tokens: Vec<i32>, reply: Sender<Response>) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
-        self.metrics.record_request_for(model);
         let ep = &self.endpoints[model];
         let len = tokens.len();
-        // `padded_len` is the request's scheduler charge and must equal
-        // what the batcher's deficit ledger counts (the unclamped
-        // bucket boundary), or the reported served-token shares would
-        // drift from the fairness currency actually being enforced.
+        // `padded_len` is the request's bucket boundary; `cost` is the
+        // scheduler charge.  The cost stored on the request must equal
+        // what the batcher's deficit ledger counts at pop time and what
+        // the metrics work gauges settle at completion, or the
+        // reported served-work shares would drift from the fairness
+        // currency actually being enforced.
         let padded = self.policy.padded_len(len);
+        let cost =
+            ep.cost.as_ref().map(|c| c.predict_cycles(len)).unwrap_or(padded as u64);
+        self.metrics.record_request_for(model, cost);
         {
             let mut b = self.shared.batcher.lock().unwrap();
-            b.push_keyed(
-                Request { id, model, tokens, padded_len: padded, submitted: Instant::now(), reply },
+            b.push_costed(
+                Request {
+                    id,
+                    model,
+                    tokens,
+                    padded_len: padded,
+                    cost,
+                    submitted: Instant::now(),
+                    reply,
+                },
                 model,
                 len,
+                cost,
             );
         }
         // Token accounting only for serveable requests, and never more

@@ -1,4 +1,4 @@
-//! SwiftTron CLI: simulate | synth | compare | infer | serve | report.
+//! SwiftTron CLI: simulate | synth | compare | infer | serve | tune | report.
 
 use std::process::exit;
 use std::sync::Arc;
@@ -9,7 +9,7 @@ use swifttron::coordinator::{
 use swifttron::model::{Geometry, Manifest};
 use swifttron::runtime::Engine;
 use swifttron::sim::{simulate_encoder, HwConfig};
-use swifttron::synthesis::synthesis_report;
+use swifttron::synthesis::{explore, synthesis_report, Budget};
 use swifttron::util::cli::Args;
 use swifttron::wire::MuxConfig;
 
@@ -28,6 +28,7 @@ fn main() {
         "compare" => cmd_compare(&rest),
         "infer" => cmd_infer(&rest),
         "serve" => cmd_serve(&rest),
+        "tune" => cmd_tune(&rest),
         "report" => cmd_report(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -58,6 +59,11 @@ fn usage() -> String {
      \x20          (mux = non-blocking SWWIRE1 binary multiplexer with text\n\
      \x20           auto-detection and SLO load shedding; threads = legacy\n\
      \x20           thread-per-connection text server)\n\
+     \x20 tune     [--model <preset>]       design-space autotuner: search HwConfig\n\
+     \x20          [--area MM2 --power W]   candidates under an area/power budget\n\
+     \x20          (latency from the analytical CostModel, cost from the\n\
+     \x20           synthesis layer; prints the Pareto front + recommendation;\n\
+     \x20           omit --model to sweep every preset)\n\
      \x20 report                           full paper reproduction summary\n"
         .into()
 }
@@ -314,6 +320,34 @@ fn front_serve(
         "threads" => swifttron::coordinator::server::serve_with(router, addr, max_conns),
         other => Err(format!("unknown front {other:?} (expected mux | threads)")),
     }
+}
+
+/// Design-space autotuner (DESIGN.md §12): sweep `HwConfig` candidates
+/// for one preset (or all of them) under an area/power budget and print
+/// each space's Pareto front size and recommended instance.
+fn cmd_tune(rest: &[String]) -> Result<(), String> {
+    let p = Args::new("swifttron tune", "design-space autotuner")
+        .opt("model", "", "geometry preset (default: sweep every preset)")
+        .opt("area", "300", "max area budget in mm^2")
+        .opt("power", "35", "max power budget in W")
+        .parse(rest)?;
+    let budget = Budget { max_area_mm2: p.get_f64("area")?, max_power_w: p.get_f64("power")? };
+    if budget.max_area_mm2 <= 0.0 || budget.max_power_w <= 0.0 {
+        return Err("--area and --power must be positive".into());
+    }
+    let presets: Vec<&str> = if p.get("model").is_empty() {
+        Geometry::PRESET_NAMES.to_vec()
+    } else {
+        vec![p.get("model")]
+    };
+    for (i, name) in presets.iter().enumerate() {
+        if i > 0 {
+            println!();
+        }
+        let ds = explore(name, budget)?;
+        print!("{}", ds.summary());
+    }
+    Ok(())
 }
 
 fn cmd_report(_rest: &[String]) -> Result<(), String> {

@@ -1,0 +1,301 @@
+//! Analytical cost model: O(1) predicted accelerator cycles per
+//! `(Geometry, HwConfig, m_eff)` (DESIGN.md §12).
+//!
+//! The cycle-accurate simulator ([`simulate_encoder_m`]) walks the FSM
+//! schedule block by block; every scheduling decision that wants a
+//! latency estimate used to either re-run it (per-length memo in the
+//! old `FunctionalEngine::accel_cycles`) or fall back to trailing
+//! wall-clock means (autoscaler, wire admission).  [`CostModel`] closes
+//! that gap with a *closed form* that is exact, not approximate:
+//!
+//! Every per-layer block count is piecewise-linear in the live length
+//! `m`.  The matmul tile counts `ceil(m/array_rows)`, the softmax waves
+//! `ceil(m/softmax_units)`, and the per-head tile/readout terms
+//! (`ceil(m/dh)`, `min(m, dh)`) are each constant or linear between
+//! consecutive multiples of their stride, so between two adjacent cut
+//! points drawn from multiples of `{array_rows, softmax_units, dh}` the
+//! whole non-LayerNorm layer cost is `C + S·m` with integer `C`, `S`.
+//! The only non-linear term is LayerNorm's pipelined row stream,
+//! `floor(m·row_cycles / pipeline_stages)`, which the model carries
+//! explicitly.  [`CostModel::build`] therefore anchors each segment
+//! with *two* simulator runs (its endpoints, on a 1-layer copy of the
+//! geometry), recovers the exact integer slope, verifies a midpoint per
+//! multi-point segment against the simulator, and tabulates per-layer
+//! cycles for every `m` in `1..=geo.m`.  Layer totals are purely
+//! additive (each FSM joins its predecessor), so the stack cost is
+//! `layers × per_layer(m)` — asserted by the simulator's own
+//! `layers_scale_linearly` test.
+//!
+//! Worst-case sqrt timing note: `simulate_encoder_m(.., None)` charges
+//! the LayerNorm sqrt its worst-case iteration count regardless of
+//! `worst_case_sqrt` (the flag only selects whether *live* data-
+//! dependent counts are honored), so one build predicts the `None`
+//! simulation path for any configuration.  Data-dependent timing
+//! (`worst_case_sqrt: false` with live iteration counts) remains the
+//! simulator's job.
+//!
+//! Consumers (the single source of predicted cost, ISSUE 8): the
+//! `Batcher`'s deficit-round-robin ledger charges
+//! [`CostModel::predict_cycles`] per request, the autoscaler scores
+//! backlog in predicted work (`coordinator::autoscale`), the wire mux's
+//! SLO admission estimate prices the queue per request, and the
+//! `synthesis::design_space` autotuner ranks candidate `HwConfig`s by
+//! [`CostModel::full_ms`].
+
+use super::encoder::simulate_encoder_m;
+use super::units;
+use super::HwConfig;
+use crate::model::Geometry;
+use crate::quant::layernorm::ISQRT_MAX_ITERS;
+
+/// One linear segment of the per-layer closed form: for
+/// `m in lo..=hi`, the non-LayerNorm cycles are `g_lo + slope·(m-lo)`.
+/// Kept for introspection/tests; prediction reads the dense table.
+#[derive(Clone, Copy, Debug)]
+pub struct Segment {
+    pub lo: usize,
+    pub hi: usize,
+    /// non-LayerNorm per-layer cycles at `m = lo`
+    pub g_lo: u64,
+    /// exact integer cycles per extra row within the segment
+    pub slope: u64,
+}
+
+/// Closed-form predicted accelerator cycles for one `(geometry,
+/// hardware)` pair, built once per model from a handful of anchor
+/// simulations.  `predict_cycles` is O(1) per call (a table read) and
+/// agrees with `simulate_encoder_m(hw, geo, m, None)` *exactly* at
+/// every length `1..=geo.m` — validated at build time, property-tested
+/// in `rust/tests/cost_model.rs`.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    hw: HwConfig,
+    geo: Geometry,
+    /// per-layer total cycles at `m = index + 1` (dense, exact)
+    per_layer: Vec<u64>,
+    segments: Vec<Segment>,
+    /// simulator invocations spent building + validating the model
+    anchor_sims: usize,
+}
+
+impl CostModel {
+    /// Build the model: validate the configuration, derive the segment
+    /// cut points, anchor-simulate each segment's endpoints on a
+    /// 1-layer copy of the geometry, interpolate, and verify a midpoint
+    /// per multi-point segment against the simulator.  Errs on a
+    /// configuration the simulator itself cannot run (zero softmax
+    /// units / layernorm lanes / pipeline stages) or on any residual
+    /// between the closed form and the simulator.
+    pub fn build(hw: &HwConfig, geo: &Geometry) -> Result<CostModel, String> {
+        hw.validate(geo)?;
+        if hw.softmax_units == 0 {
+            return Err("softmax_units must be positive".into());
+        }
+        if hw.layernorm_lanes == 0 {
+            return Err("layernorm_lanes must be positive".into());
+        }
+        if hw.pipeline_stages == 0 {
+            return Err("pipeline_stages must be positive".into());
+        }
+        if geo.m == 0 || geo.layers == 0 || geo.heads == 0 || geo.d == 0 {
+            return Err(format!("degenerate geometry {geo:?}"));
+        }
+        let one_layer = Geometry { layers: 1, ..*geo };
+        // Worst-case LayerNorm row cost — constant in m; the simulator
+        // charges `floor(m·rc/ps)` per LayerNorm pass (two per layer).
+        let rc = units::layernorm_row_cycles(hw, geo.d, ISQRT_MAX_ITERS);
+        let ps = hw.pipeline_stages;
+        let ln_part = |m: usize| 2 * (m as u64 * rc / ps);
+        let mut anchor_sims = 0usize;
+        let mut sim = |m: usize| -> u64 {
+            anchor_sims += 1;
+            simulate_encoder_m(hw, &one_layer, m, None).total_cycles
+        };
+
+        // Cut points: the non-LN cost is linear between consecutive
+        // multiples of the array height, the softmax unit count, and
+        // the head dimension.
+        let mut cuts = std::collections::BTreeSet::new();
+        for stride in [hw.array_rows, hw.softmax_units, geo.dh().max(1)] {
+            let mut v = stride;
+            while v < geo.m {
+                cuts.insert(v);
+                v += stride;
+            }
+        }
+        cuts.insert(geo.m);
+
+        let mut per_layer = vec![0u64; geo.m];
+        let mut segments = Vec::with_capacity(cuts.len());
+        let mut lo = 1usize;
+        for &hi in &cuts {
+            let g_lo = sim(lo) - ln_part(lo);
+            let slope = if hi > lo {
+                let g_hi = sim(hi) - ln_part(hi);
+                let span = (hi - lo) as u64;
+                let rise = g_hi
+                    .checked_sub(g_lo)
+                    .ok_or_else(|| format!("non-monotone segment {lo}..={hi}"))?;
+                if rise % span != 0 {
+                    return Err(format!(
+                        "segment {lo}..={hi} is not linear: rise {rise} over span {span}"
+                    ));
+                }
+                rise / span
+            } else {
+                0
+            };
+            for m in lo..=hi {
+                per_layer[m - 1] = g_lo + slope * (m - lo) as u64 + ln_part(m);
+            }
+            if hi - lo >= 2 {
+                let mid = lo + (hi - lo) / 2;
+                let want = sim(mid);
+                if per_layer[mid - 1] != want {
+                    return Err(format!(
+                        "closed form diverged from simulator at m={mid}: \
+                         predicted {} vs simulated {want}",
+                        per_layer[mid - 1]
+                    ));
+                }
+            }
+            segments.push(Segment { lo, hi, g_lo, slope });
+            lo = hi + 1;
+        }
+
+        Ok(CostModel { hw: *hw, geo: *geo, per_layer, segments, anchor_sims })
+    }
+
+    /// Predicted accelerator cycles for a request of `m_eff` live
+    /// tokens — O(1), exact against `simulate_encoder_m(.., None)`.
+    /// Out-of-range lengths clamp into `1..=geo.m` (the serveable
+    /// range; the engine rejects them before execution anyway).
+    pub fn predict_cycles(&self, m_eff: usize) -> u64 {
+        let m = m_eff.clamp(1, self.geo.m);
+        self.per_layer[m - 1] * self.geo.layers as u64
+    }
+
+    /// Predicted accelerator milliseconds (virtual time at the modeled
+    /// clock) for a request of `m_eff` live tokens.
+    pub fn predict_ms(&self, m_eff: usize) -> f64 {
+        self.hw.cycles_to_ms(self.predict_cycles(m_eff))
+    }
+
+    /// Predicted cycles of a full-length (`m = geo.m`) inference.
+    pub fn full_cycles(&self) -> u64 {
+        self.predict_cycles(self.geo.m)
+    }
+
+    /// Predicted milliseconds of a full-length inference.
+    pub fn full_ms(&self) -> f64 {
+        self.predict_ms(self.geo.m)
+    }
+
+    /// Virtual milliseconds of one predicted cycle — the cold-start
+    /// prior the autoscaler/admission paths use before any wall-clock
+    /// calibration sample exists.
+    pub fn ms_per_cycle(&self) -> f64 {
+        self.hw.cycles_to_ms(1)
+    }
+
+    pub fn hw(&self) -> &HwConfig {
+        &self.hw
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.geo
+    }
+
+    /// The linear segments of the per-layer closed form.
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+
+    /// Simulator invocations spent building + validating this model (2
+    /// per segment plus one midpoint check per multi-point segment —
+    /// "a handful", not one per length).
+    pub fn anchor_sims(&self) -> usize {
+        self.anchor_sims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_for_every_length_of_every_preset() {
+        for name in Geometry::PRESET_NAMES {
+            let geo = Geometry::preset(name).unwrap();
+            let hw = HwConfig::sized_to(&geo);
+            let cm = CostModel::build(&hw, &geo).unwrap();
+            for m in 1..=geo.m {
+                assert_eq!(
+                    cm.predict_cycles(m),
+                    simulate_encoder_m(&hw, &geo, m, None).total_cycles,
+                    "{name} m={m}"
+                );
+            }
+            assert!(
+                cm.anchor_sims() < geo.m,
+                "{name}: {} anchor sims is not 'a handful' for m={}",
+                cm.anchor_sims(),
+                geo.m
+            );
+        }
+    }
+
+    #[test]
+    fn paper_hw_on_roberta_base_is_exact_and_cheap_to_build() {
+        let geo = Geometry::preset("roberta_base").unwrap();
+        let hw = HwConfig::paper();
+        let cm = CostModel::build(&hw, &geo).unwrap();
+        for m in [1usize, 2, 63, 64, 65, 128, 200, 256] {
+            assert_eq!(
+                cm.predict_cycles(m),
+                simulate_encoder_m(&hw, &geo, m, None).total_cycles,
+                "m={m}"
+            );
+        }
+        // cuts at multiples of dh=64 -> 4 segments, ~3 sims each
+        assert!(cm.anchor_sims() <= 16, "{} sims", cm.anchor_sims());
+    }
+
+    #[test]
+    fn clamps_out_of_range_lengths() {
+        let geo = Geometry::preset("tiny").unwrap();
+        let cm = CostModel::build(&HwConfig::sized_to(&geo), &geo).unwrap();
+        assert_eq!(cm.predict_cycles(0), cm.predict_cycles(1));
+        assert_eq!(cm.predict_cycles(geo.m + 100), cm.full_cycles());
+        assert!(cm.full_ms() > 0.0);
+        assert!(cm.predict_ms(1) < cm.full_ms());
+    }
+
+    #[test]
+    fn rejects_unsimulatable_configs() {
+        let geo = Geometry::preset("tiny").unwrap();
+        let mut hw = HwConfig::sized_to(&geo);
+        hw.softmax_units = 0;
+        assert!(CostModel::build(&hw, &geo).is_err());
+        let mut hw = HwConfig::sized_to(&geo);
+        hw.array_rows = 0;
+        assert!(CostModel::build(&hw, &geo).is_err());
+        let mut hw = HwConfig::sized_to(&geo);
+        hw.pipeline_stages = 0;
+        assert!(CostModel::build(&hw, &geo).is_err());
+    }
+
+    #[test]
+    fn worst_case_flag_does_not_change_the_none_path() {
+        // sqrt_iters = None simulates worst-case counts either way, so
+        // one CostModel serves both flag settings.
+        let geo = Geometry::preset("small").unwrap();
+        let hw_wc = HwConfig::sized_to(&geo);
+        let hw_dd = HwConfig { worst_case_sqrt: false, ..hw_wc };
+        let a = CostModel::build(&hw_wc, &geo).unwrap();
+        let b = CostModel::build(&hw_dd, &geo).unwrap();
+        for m in 1..=geo.m {
+            assert_eq!(a.predict_cycles(m), b.predict_cycles(m), "m={m}");
+        }
+    }
+}

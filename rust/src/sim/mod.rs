@@ -22,11 +22,13 @@
 
 pub mod config;
 pub mod control;
+pub mod cost;
 pub mod encoder;
 pub mod functional;
 pub mod units;
 
 pub use config::HwConfig;
+pub use cost::CostModel;
 pub use control::{Event, FsmKind, Trace};
 pub use encoder::{
     simulate_encoder, simulate_encoder_m, simulate_layer, simulate_layer_m, LatencyReport,

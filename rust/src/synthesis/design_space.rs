@@ -1,0 +1,355 @@
+//! Design-space autotuner over the synthesis layer (DESIGN.md §12).
+//!
+//! The paper fixes one hardware instance per workload (§IV-B) but
+//! stresses that array size and head parallelism are design-time
+//! tunables (§III-D).  This module searches that space: for a workload
+//! geometry it enumerates a geometry-relative grid of [`HwConfig`]
+//! candidates, prices each one with the analytical [`CostModel`]
+//! (latency) and the gate-level synthesis model (area, power, critical
+//! path), marks the (latency, area, power) Pareto front, and
+//! recommends the fastest clock-feasible point inside an area/power
+//! [`Budget`] — default headroom around the paper's Table I instance
+//! (273 mm², 33.64 W).
+//!
+//! Candidates whose cost model cannot be built (degenerate unit counts
+//! the simulator would reject) are skipped and counted, never
+//! silently dropped.  The search is fully deterministic: a fixed grid,
+//! closed-form models, and total-order sorting on the scores — two
+//! runs produce identical points in identical order (tested below).
+//!
+//! Consumers: `swifttron tune` prints the per-preset recommendation;
+//! the `table1_synthesis` bench sweeps the space and snapshots a smoke
+//! subset; `EXPERIMENTS.md` §DesignSpace records the findings.
+
+use super::report::synthesis_report;
+use crate::model::Geometry;
+use crate::sim::{CostModel, HwConfig};
+
+/// Area/power ceiling for [`explore`]'s recommendation.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    pub max_area_mm2: f64,
+    pub max_power_w: f64,
+}
+
+impl Default for Budget {
+    /// Headroom around the paper's Table I synthesis (273 mm²,
+    /// 33.64 W at 65 nm): a recommended instance may match the paper's
+    /// accelerator but not meaningfully exceed it.
+    fn default() -> Budget {
+        Budget { max_area_mm2: 300.0, max_power_w: 35.0 }
+    }
+}
+
+/// One evaluated hardware candidate.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    pub hw: HwConfig,
+    /// full-sequence single-inference latency ([`CostModel::full_ms`])
+    pub latency_ms: f64,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    pub critical_path_ns: f64,
+    /// the slowest operator path fits in the candidate's clock period
+    pub meets_clock: bool,
+    /// on the (latency, area, power) Pareto front among clock-feasible
+    /// points
+    pub pareto: bool,
+}
+
+impl DesignPoint {
+    /// Clock-feasible and inside the budget's area/power ceiling.
+    pub fn within(&self, b: &Budget) -> bool {
+        self.meets_clock && self.area_mm2 <= b.max_area_mm2 && self.power_w <= b.max_power_w
+    }
+}
+
+/// Result of one design-space search.
+#[derive(Clone, Debug)]
+pub struct DesignSpace {
+    /// workload name (geometry preset on the CLI path)
+    pub preset: String,
+    pub geo: Geometry,
+    pub budget: Budget,
+    /// candidates skipped because their cost model would not build
+    /// (degenerate unit counts)
+    pub skipped: usize,
+    /// evaluated points, sorted by (latency, area, power)
+    pub points: Vec<DesignPoint>,
+    /// index into `points` of the fastest clock-feasible point within
+    /// the budget (`None` when nothing fits)
+    pub recommended: Option<usize>,
+}
+
+impl DesignSpace {
+    pub fn recommended_point(&self) -> Option<&DesignPoint> {
+        self.recommended.map(|i| &self.points[i])
+    }
+
+    pub fn pareto_front(&self) -> Vec<&DesignPoint> {
+        self.points.iter().filter(|p| p.pareto).collect()
+    }
+
+    /// Human-readable summary for `swifttron tune`.
+    pub fn summary(&self) -> String {
+        let g = &self.geo;
+        let mut s = format!(
+            "design space {}: d={} heads={} m={} d_ff={} layers={}\n  \
+             {} points evaluated ({} unsimulatable skipped), {} on the Pareto front\n  \
+             budget {:.0} mm^2 / {:.1} W\n",
+            self.preset,
+            g.d,
+            g.heads,
+            g.m,
+            g.d_ff,
+            g.layers,
+            self.points.len(),
+            self.skipped,
+            self.points.iter().filter(|p| p.pareto).count(),
+            self.budget.max_area_mm2,
+            self.budget.max_power_w,
+        );
+        match self.recommended_point() {
+            Some(p) => {
+                let hw = &p.hw;
+                s.push_str(&format!(
+                    "  recommended: {}x{} array, {} head units, {} softmax units, \
+                     {} ln lanes, {:.1} ns clock\n  \
+                     latency {:.4} ms | area {:.1} mm^2 | power {:.2} W | \
+                     critical path {:.2} ns\n",
+                    hw.array_rows,
+                    hw.array_cols,
+                    hw.parallel_heads,
+                    hw.softmax_units,
+                    hw.layernorm_lanes,
+                    hw.clock_ns,
+                    p.latency_ms,
+                    p.area_mm2,
+                    p.power_w,
+                    p.critical_path_ns,
+                ));
+            }
+            None => s.push_str("  no candidate meets the budget\n"),
+        }
+        s
+    }
+}
+
+/// The geometry-relative candidate grid: array rows over
+/// {m/4, m/2, m}, columns over {d/4, d/2, d}, head units over
+/// {1, heads/2, heads}, softmax units over {m/4, m}, and the paper
+/// clock against a relaxed one.  LayerNorm lanes stay at `d` (the
+/// paper's element-parallel row) and the pipeline depth at 3 — both
+/// are dictated by the timing closure story, not the workload.
+/// Degenerate steps collapse (duplicates are removed), so small
+/// geometries yield smaller grids.
+pub fn candidate_grid(geo: &Geometry) -> Vec<HwConfig> {
+    let steps3 = |full: usize| {
+        let mut v = vec![(full / 4).max(1), (full / 2).max(1), full.max(1)];
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let rows = steps3(geo.m);
+    let cols = steps3(geo.d);
+    let heads = {
+        let mut v = vec![1, (geo.heads / 2).max(1), geo.heads.max(1)];
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let softmax = {
+        let mut v = vec![(geo.m / 4).max(1), geo.m.max(1)];
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let clocks = [7.0f64, 10.0];
+    let mut out = Vec::new();
+    for &r in &rows {
+        for &c in &cols {
+            for &h in &heads {
+                for &s in &softmax {
+                    for &clk in &clocks {
+                        out.push(HwConfig {
+                            array_rows: r,
+                            array_cols: c,
+                            parallel_heads: h,
+                            softmax_units: s,
+                            layernorm_lanes: geo.d.max(1),
+                            clock_ns: clk,
+                            pipeline_stages: 3,
+                            worst_case_sqrt: true,
+                            attn_heads_parallel: true,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Search the design space of a geometry preset.
+pub fn explore(preset: &str, budget: Budget) -> Result<DesignSpace, String> {
+    let geo = Geometry::preset(preset).ok_or_else(|| {
+        format!("unknown preset {preset:?} (expected one of {:?})", Geometry::PRESET_NAMES)
+    })?;
+    Ok(explore_geometry(preset, &geo, budget))
+}
+
+/// Search the design space of an explicit geometry.
+pub fn explore_geometry(name: &str, geo: &Geometry, budget: Budget) -> DesignSpace {
+    let mut points = Vec::new();
+    let mut skipped = 0usize;
+    for hw in candidate_grid(geo) {
+        // The cost model is the latency authority (and the gate: a
+        // candidate it rejects is unsimulatable, not merely slow).
+        let cm = match CostModel::build(&hw, geo) {
+            Ok(cm) => cm,
+            Err(_) => {
+                skipped += 1;
+                continue;
+            }
+        };
+        let rep = synthesis_report(&hw, geo);
+        points.push(DesignPoint {
+            hw,
+            latency_ms: cm.full_ms(),
+            area_mm2: rep.area_mm2,
+            power_w: rep.power_w,
+            critical_path_ns: rep.critical_path_ns,
+            meets_clock: rep.critical_path_ns <= hw.clock_ns,
+            pareto: false,
+        });
+    }
+    points.sort_by(|a, b| {
+        a.latency_ms
+            .total_cmp(&b.latency_ms)
+            .then(a.area_mm2.total_cmp(&b.area_mm2))
+            .then(a.power_w.total_cmp(&b.power_w))
+    });
+    let pareto: Vec<bool> = (0..points.len())
+        .map(|i| {
+            points[i].meets_clock
+                && !points.iter().enumerate().any(|(j, q)| {
+                    j != i
+                        && q.meets_clock
+                        && q.latency_ms <= points[i].latency_ms
+                        && q.area_mm2 <= points[i].area_mm2
+                        && q.power_w <= points[i].power_w
+                        && (q.latency_ms < points[i].latency_ms
+                            || q.area_mm2 < points[i].area_mm2
+                            || q.power_w < points[i].power_w)
+                })
+        })
+        .collect();
+    for (p, f) in points.iter_mut().zip(pareto) {
+        p.pareto = f;
+    }
+    // sorted by (latency, area, power): the first in-budget point is
+    // the fastest, tie-broken toward the smaller/cooler instance
+    let recommended = points.iter().position(|p| p.within(&budget));
+    DesignSpace { preset: name.to_string(), geo: *geo, budget, skipped, points, recommended }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw_key(hw: &HwConfig) -> (usize, usize, usize, usize, usize, u64) {
+        (
+            hw.array_rows,
+            hw.array_cols,
+            hw.parallel_heads,
+            hw.softmax_units,
+            hw.layernorm_lanes,
+            hw.clock_ns.to_bits(),
+        )
+    }
+
+    #[test]
+    fn grid_is_deduplicated_and_every_candidate_validates() {
+        for name in Geometry::PRESET_NAMES {
+            let geo = Geometry::preset(name).unwrap();
+            let grid = candidate_grid(&geo);
+            assert!(grid.len() >= 8, "{name}: grid too small ({})", grid.len());
+            let mut keys: Vec<_> = grid.iter().map(hw_key).collect();
+            keys.sort_unstable();
+            let n = keys.len();
+            keys.dedup();
+            assert_eq!(keys.len(), n, "{name}: duplicate candidates");
+            for hw in &grid {
+                hw.validate(&geo).unwrap_or_else(|e| panic!("{name}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn explore_tiny_recommends_the_fastest_in_budget_point() {
+        let ds = explore("tiny", Budget::default()).unwrap();
+        assert_eq!(ds.skipped, 0, "every tiny candidate simulates");
+        assert!(!ds.points.is_empty());
+        let best = ds.recommended_point().expect("tiny fits any sane budget");
+        assert!(best.within(&ds.budget));
+        assert!(best.latency_ms > 0.0 && best.area_mm2 > 0.0 && best.power_w > 0.0);
+        for p in &ds.points {
+            if p.within(&ds.budget) {
+                assert!(
+                    p.latency_ms >= best.latency_ms,
+                    "recommended point is not the fastest in budget"
+                );
+            }
+        }
+        // the recommendation is on the front by construction
+        assert!(best.pareto, "a budget-optimal point is never dominated");
+    }
+
+    #[test]
+    fn pareto_front_is_mutually_nondominated() {
+        let ds = explore("tiny", Budget::default()).unwrap();
+        let front = ds.pareto_front();
+        assert!(!front.is_empty());
+        for a in &front {
+            for b in &front {
+                let dominates = a.latency_ms <= b.latency_ms
+                    && a.area_mm2 <= b.area_mm2
+                    && a.power_w <= b.power_w
+                    && (a.latency_ms < b.latency_ms
+                        || a.area_mm2 < b.area_mm2
+                        || a.power_w < b.power_w);
+                assert!(!dominates, "front point dominates another front point");
+            }
+        }
+    }
+
+    #[test]
+    fn explore_is_deterministic() {
+        let a = explore("small", Budget::default()).unwrap();
+        let b = explore("small", Budget::default()).unwrap();
+        assert_eq!(a.points.len(), b.points.len());
+        assert_eq!(a.recommended, b.recommended);
+        assert_eq!(a.skipped, b.skipped);
+        for (p, q) in a.points.iter().zip(&b.points) {
+            assert_eq!(hw_key(&p.hw), hw_key(&q.hw));
+            assert_eq!(p.latency_ms.to_bits(), q.latency_ms.to_bits());
+            assert_eq!(p.area_mm2.to_bits(), q.area_mm2.to_bits());
+            assert_eq!(p.power_w.to_bits(), q.power_w.to_bits());
+            assert_eq!(p.pareto, q.pareto);
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_an_error() {
+        assert!(explore("bert_xxl", Budget::default()).is_err());
+    }
+
+    #[test]
+    fn summary_names_the_recommended_instance() {
+        let ds = explore("tiny", Budget::default()).unwrap();
+        let s = ds.summary();
+        assert!(s.contains("design space tiny"), "{s}");
+        assert!(s.contains("recommended:"), "{s}");
+        assert!(s.contains("Pareto front"), "{s}");
+    }
+}

@@ -5,9 +5,13 @@
 //! builds gate-count/delay/energy models of the arithmetic operators
 //! (INT8/INT32/FP32 adders and multipliers, dividers, shifters,
 //! registers), [`components`] rolls them up into the SwiftTron blocks of
-//! Fig. 5, and [`report`] produces the paper's Table I summary and
+//! Fig. 5, [`report`] produces the paper's Table I summary and
 //! Fig. 18 breakdowns (power uses activity factors derived from the
-//! cycle-accurate simulator's busy counts).
+//! cycle-accurate simulator's busy counts), and [`design_space`]
+//! searches `HwConfig` candidates per workload — latency from the
+//! analytical `sim::cost::CostModel`, area/power/critical-path from
+//! this layer — reporting a Pareto front and a budget-constrained
+//! recommendation (`swifttron tune`).
 //!
 //! Fidelity note: gate counts come from standard implementations
 //! (carry-save MAC arrays, array multipliers, restoring dividers); they
@@ -16,11 +20,13 @@
 //! paper-vs-model side by side.
 
 pub mod components;
+pub mod design_space;
 pub mod operators;
 pub mod report;
 pub mod tech;
 
 pub use components::{component_breakdown, ComponentCost};
+pub use design_space::{candidate_grid, explore, Budget, DesignPoint, DesignSpace};
 pub use operators::{OperatorCost, Operators};
 pub use report::{synthesis_report, SynthesisReport};
 pub use tech::Tech65;

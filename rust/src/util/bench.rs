@@ -68,6 +68,13 @@ impl Bench {
 /// (read-modify-write): sibling bench binaries writing the same file
 /// keep each other's legs instead of clobbering the whole object.  A
 /// missing or unparsable file starts from an empty object.
+///
+/// When both the existing value and the update for a key are objects,
+/// the update merges *one level deep* instead of replacing the whole
+/// object — so different binaries can each own a sub-leg under a shared
+/// key (e.g. `costmodel.fairness` from `serving_scaling` and
+/// `costmodel.design_space` from `table1_synthesis`).  Deeper levels
+/// replace wholesale: a leg always owns its own payload.
 pub fn merge_bench_json<P: AsRef<Path>>(
     path: P,
     updates: impl IntoIterator<Item = (&'static str, Json)>,
@@ -81,7 +88,12 @@ pub fn merge_bench_json<P: AsRef<Path>>(
         Err(_) => Default::default(),
     };
     for (k, v) in updates {
-        root.insert(k.to_string(), v);
+        match (root.get_mut(k), v) {
+            (Some(Json::Obj(old)), Json::Obj(new)) => old.extend(new),
+            (_, v) => {
+                root.insert(k.to_string(), v);
+            }
+        }
     }
     let json = Json::Obj(root);
     std::fs::write(path, format!("{json}\n"))
@@ -172,6 +184,24 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert_eq!(v["a"].as_i64(), Some(2), "re-run overwrites its own key");
         assert_eq!(v["b"].as_str(), Some("x"), "sibling key survives the re-run");
+    }
+
+    #[test]
+    fn merge_bench_json_merges_shared_object_keys_one_level_deep() {
+        use super::super::json::obj;
+        let path = std::env::temp_dir()
+            .join(format!("swifttron_merge_nested_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        merge_bench_json(&path, [("shared", obj([("left", Json::from(1i64))]))]).unwrap();
+        merge_bench_json(&path, [("shared", obj([("right", Json::from(2i64))]))]).unwrap();
+        // a non-object update still replaces the object wholesale
+        merge_bench_json(&path, [("flat", Json::from(3i64))]).unwrap();
+        merge_bench_json(&path, [("flat", obj([("now_obj", Json::from(4i64))]))]).unwrap();
+        let v = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(v["shared"]["left"].as_i64(), Some(1), "first sub-leg survives");
+        assert_eq!(v["shared"]["right"].as_i64(), Some(2), "second sub-leg merged in");
+        assert_eq!(v["flat"]["now_obj"].as_i64(), Some(4), "non-object old value replaced");
     }
 
     #[test]

@@ -28,9 +28,9 @@
 //!   (std only, no new dependencies), bounded per-connection
 //!   read/write buffers, out-of-order completion keyed by frame id,
 //!   backpressure into the batcher when a write buffer fills, and
-//!   SLO-derived admission control (predicted queueing delay
-//!   `backlog · mean_exec_ms / active_replicas` vs the group's
-//!   `slo_ms` — the same signal the autoscaler trusts).  The legacy
+//!   SLO-derived admission control (the model's `CostModel`-priced
+//!   backlog over its active replicas vs the group's `slo_ms` — the
+//!   same predicted-work signal the autoscaler trusts).  The legacy
 //!   text protocol survives behind auto-detection on a connection's
 //!   first bytes.
 //! * [`client`] — a small blocking client used by tests, the workload

@@ -32,11 +32,13 @@
 //! thread parked per in-flight request.
 //!
 //! Admission control: a frame for a model whose predicted queueing
-//! delay `backlog · mean_exec_ms / active_replicas` (the autoscaler's
-//! own signal, [`Router::overload_delay_ms`]) exceeds
-//! `shed_ratio · slo_ms` is answered immediately with a typed
-//! `Overloaded` frame (JSON error line in text mode) and never enters
-//! the queue.  Models without an SLO are never shed.
+//! delay (the autoscaler's own predicted-work signal,
+//! [`Router::overload_delay_ms`] — the model's `CostModel`-priced
+//! backlog over its active replicas, trailing means only for cost-less
+//! custom groups) exceeds `shed_ratio · slo_ms` is answered
+//! immediately with a typed `Overloaded` frame (JSON error line in
+//! text mode) and never enters the queue.  Models without an SLO are
+//! never shed.
 
 use super::decode::{DecodeEvent, FrameDecoder, RingBuf};
 use super::encode;
@@ -67,8 +69,9 @@ pub struct MuxConfig {
     pub write_buf: usize,
     /// shed when predicted delay exceeds `shed_ratio · slo_ms`
     pub shed_ratio: f64,
-    /// service-time estimate before a model's first completion
-    /// (mirrors `AutoscalePolicy::default_service_ms`)
+    /// service-time estimate before a model's first completion —
+    /// consulted only for models without a `CostModel` (mirrors
+    /// `AutoscalePolicy::default_service_ms`)
     pub default_service_ms: f64,
     /// idle park on the response channel when a tick makes no progress
     pub park: Duration,

@@ -17,8 +17,9 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use swifttron::coordinator::{
-    AutoscalePolicy, BatchPolicy, Batcher, EngineReplica, FunctionalEngine, Metrics,
-    ModelRegistry, Prediction, ReplicaFactory, ReplicaPool, Request, RequestError, Router,
+    decide, tick_group, AutoscalePolicy, BatchPolicy, Batcher, EngineReplica, FunctionalEngine,
+    GroupScaleState, Metrics, ModelRegistry, Prediction, ReplicaFactory, ReplicaPool, Request,
+    RequestError, Router, ScaleDecision,
 };
 use swifttron::sim::HwConfig;
 
@@ -151,6 +152,46 @@ fn autoscaler_grows_to_max_under_backlog_and_drains_to_min_without_loss() {
 }
 
 #[test]
+fn cost_modeled_group_grows_before_its_first_completion() {
+    // ISSUE 8 cold-start fix: a freshly registered preset group has
+    // zero completions, so the legacy mean_exec_ms signal — poisoned
+    // here with a 0 ms service prior — sees no work at all and would
+    // hold forever.  The group's CostModel prices the queued requests
+    // from registration time, so the very first autoscaler tick must
+    // grow the group, before any completion lands.
+    let mut reg = ModelRegistry::new();
+    reg.register_scaled("heavy", "tiny", 1, 4, 1, Some(0.05), 11).unwrap();
+    let groups = reg.into_groups();
+    let cm = groups[0].cost.clone().expect("preset groups carry a cost model");
+    let metrics = Arc::new(Metrics::new());
+    metrics.ensure_models(&[("heavy", 1)]);
+    let pool = ReplicaPool::new_multi(groups, Arc::clone(&metrics));
+    let rt = pool.group(0).unwrap();
+    assert_eq!(rt.active_replicas(), 1);
+
+    // 32 full-length requests submitted, none completed yet
+    let backlog = 32usize;
+    let cost = cm.predict_cycles(32);
+    assert!(cost > 0);
+    for _ in 0..backlog {
+        metrics.record_request_for(0, cost);
+    }
+    let mut policy = fast_autoscale();
+    policy.default_service_ms = 0.0; // poison the legacy prior
+    let mut state = GroupScaleState::new();
+    let d = tick_group(rt, &mut state, backlog, &metrics, &policy);
+    assert_eq!(
+        d,
+        ScaleDecision::Grow,
+        "zero-completion group must scale up on its predicted work"
+    );
+    assert_eq!(rt.active_replicas(), 2);
+    // the request-count signal under the same poisoned prior scores
+    // zero work — exactly the blind spot the cost model closes
+    assert_eq!(decide(0.0, 1, 1, 4, 0.05, &policy), ScaleDecision::Hold);
+}
+
+#[test]
 fn groups_without_slo_never_scale() {
     let spawned = Arc::new(AtomicUsize::new(0));
     let mut reg = ModelRegistry::new();
@@ -230,6 +271,7 @@ fn cheap_model_p99_decouples_from_heavy_groups() {
                     model: 0,
                     tokens: vec![1; 4],
                     padded_len: 4,
+                    cost: 4,
                     submitted: Instant::now(),
                     reply: tx,
                 },
@@ -246,6 +288,7 @@ fn cheap_model_p99_decouples_from_heavy_groups() {
                 model: 1,
                 tokens: vec![1; 1],
                 padded_len: 1,
+                cost: 1,
                 submitted: Instant::now(),
                 reply: tx,
             },
@@ -324,6 +367,7 @@ fn one_group_pipeline_is_bit_equivalent_to_serial_dispatch() {
                 model: 0,
                 tokens: tokens_of(len),
                 padded_len: policy.padded_len(len),
+                cost: policy.padded_len(len) as u64,
                 submitted: Instant::now(),
                 reply: tx,
             },

@@ -50,6 +50,7 @@ fn group_of(n: usize) -> (Vec<Request>, Vec<Receiver<Response>>) {
             model: 0,
             tokens: vec![id as i32 % 50, 1, 2],
             padded_len: 3,
+            cost: 3,
             submitted: Instant::now(),
             reply: tx,
         });

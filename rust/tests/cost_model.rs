@@ -1,0 +1,164 @@
+//! Property suite for the analytical cost model (`sim::cost`).
+//!
+//! The in-file unit tests cover the shipped presets; these properties
+//! hammer the claim that makes `CostModel` safe to put behind every
+//! scheduling decision (DESIGN.md §12): the closed form is **exact**
+//! against `simulate_encoder_m(.., None)` at *every* length — including
+//! randomly drawn geometries and hardware shapes the presets never
+//! visit — while spending only a handful of anchor simulations to build.
+
+use swifttron::model::Geometry;
+use swifttron::sim::{simulate_encoder_m, CostModel, HwConfig};
+use swifttron::util::rng::Rng;
+
+/// Draw a random (geometry, hardware) pair the simulator accepts.
+/// Head dim divides d exactly (the geometry invariant every preset
+/// holds); everything else — array shape, unit counts, clock, pipeline
+/// depth, both scheduling flags — is drawn freely from the valid range.
+fn random_case(rng: &mut Rng) -> (Geometry, HwConfig) {
+    let dh = [8usize, 16, 32][rng.below(3) as usize];
+    let heads = 1 + rng.below(4) as usize;
+    let d = dh * heads;
+    let m = 8 + rng.below(33) as usize; // 8..=40: exhaustive check stays fast
+    let d_ff = d * if rng.bool() { 4 } else { 2 };
+    let layers = 1 + rng.below(3) as usize;
+    let geo = Geometry::new(d, heads, m, d_ff, layers);
+    let hw = HwConfig {
+        array_rows: 1 + rng.below(m as u64) as usize,
+        array_cols: 1 + rng.below(d as u64) as usize,
+        parallel_heads: 1 + rng.below(heads as u64) as usize,
+        softmax_units: 1 + rng.below(m as u64) as usize,
+        layernorm_lanes: 1 + rng.below(d as u64) as usize,
+        clock_ns: [5.0, 7.0, 10.0][rng.below(3) as usize],
+        pipeline_stages: 1 + rng.below(4),
+        worst_case_sqrt: rng.bool(),
+        attn_heads_parallel: rng.bool(),
+    };
+    (geo, hw)
+}
+
+#[test]
+fn exact_against_the_simulator_on_random_shapes() {
+    let mut rng = Rng::new(0xC057);
+    for case in 0..12 {
+        let (geo, hw) = random_case(&mut rng);
+        hw.validate(&geo).unwrap();
+        let cm = CostModel::build(&hw, &geo)
+            .unwrap_or_else(|e| panic!("case {case} {geo:?} {hw:?}: {e}"));
+        for m in 1..=geo.m {
+            assert_eq!(
+                cm.predict_cycles(m),
+                simulate_encoder_m(&hw, &geo, m, None).total_cycles,
+                "case {case} m={m} {geo:?} {hw:?}"
+            );
+        }
+        assert!(
+            cm.anchor_sims() < 4 * cm.segments().len() + 4,
+            "case {case}: {} anchor sims for {} segments",
+            cm.anchor_sims(),
+            cm.segments().len()
+        );
+    }
+}
+
+#[test]
+fn exact_at_segment_boundaries_of_the_paper_instance() {
+    // The paper configuration on its headline workload: check every
+    // segment endpoint and midpoint — the lengths where a wrong cut or
+    // slope would first show — without paying 256 full-stack sims.
+    let geo = Geometry::preset("roberta_base").unwrap();
+    let hw = HwConfig::paper();
+    let cm = CostModel::build(&hw, &geo).unwrap();
+    assert!(!cm.segments().is_empty());
+    let mut covered = 0usize;
+    for s in cm.segments() {
+        for m in [s.lo, s.lo + (s.hi - s.lo) / 2, s.hi] {
+            assert_eq!(
+                cm.predict_cycles(m),
+                simulate_encoder_m(&hw, &geo, m, None).total_cycles,
+                "m={m} in segment {}..={}",
+                s.lo,
+                s.hi
+            );
+        }
+        covered = covered.max(s.hi);
+    }
+    assert_eq!(covered, geo.m, "segments must tile 1..=geo.m");
+}
+
+#[test]
+fn rebuilds_are_bit_identical() {
+    let mut rng = Rng::new(0xDE7E_12);
+    for _ in 0..4 {
+        let (geo, hw) = random_case(&mut rng);
+        let a = CostModel::build(&hw, &geo).unwrap();
+        let b = CostModel::build(&hw, &geo).unwrap();
+        assert_eq!(a.anchor_sims(), b.anchor_sims());
+        assert_eq!(a.segments().len(), b.segments().len());
+        for (s, t) in a.segments().iter().zip(b.segments()) {
+            assert_eq!((s.lo, s.hi, s.g_lo, s.slope), (t.lo, t.hi, t.g_lo, t.slope));
+        }
+        for m in 1..=geo.m {
+            assert_eq!(a.predict_cycles(m), b.predict_cycles(m), "m={m}");
+            assert_eq!(a.predict_ms(m).to_bits(), b.predict_ms(m).to_bits(), "m={m}");
+        }
+    }
+}
+
+#[test]
+fn predictions_clamp_and_grow_monotonically() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..6 {
+        let (geo, hw) = random_case(&mut rng);
+        let cm = CostModel::build(&hw, &geo).unwrap();
+        assert_eq!(cm.predict_cycles(0), cm.predict_cycles(1), "below-range clamps to 1");
+        assert_eq!(cm.predict_cycles(geo.m + 1000), cm.full_cycles(), "above-range clamps");
+        let mut prev = 0u64;
+        for m in 1..=geo.m {
+            let c = cm.predict_cycles(m);
+            assert!(c >= prev, "cycles shrank from {prev} to {c} at m={m}");
+            assert!(c > 0);
+            prev = c;
+        }
+    }
+}
+
+#[test]
+fn layer_count_multiplies_the_per_layer_cost() {
+    // FSM stacks are purely additive (each layer joins its
+    // predecessor), so an L-layer model costs exactly L times its
+    // 1-layer twin at every length — the identity `build` exploits.
+    let mut rng = Rng::new(0x1A9E);
+    for _ in 0..4 {
+        let (geo, hw) = random_case(&mut rng);
+        let one = Geometry { layers: 1, ..geo };
+        let cm_l = CostModel::build(&hw, &geo).unwrap();
+        let cm_1 = CostModel::build(&hw, &one).unwrap();
+        for m in 1..=geo.m {
+            assert_eq!(
+                cm_l.predict_cycles(m),
+                geo.layers as u64 * cm_1.predict_cycles(m),
+                "m={m} layers={}",
+                geo.layers
+            );
+        }
+    }
+}
+
+#[test]
+fn milliseconds_are_cycles_times_the_clock() {
+    let geo = Geometry::preset("small").unwrap();
+    let hw = HwConfig::sized_to(&geo);
+    let cm = CostModel::build(&hw, &geo).unwrap();
+    for m in [1usize, 7, 32, geo.m] {
+        let want = hw.cycles_to_ms(cm.predict_cycles(m));
+        assert!((cm.predict_ms(m) - want).abs() < 1e-12, "m={m}");
+        let via_rate = cm.predict_cycles(m) as f64 * cm.ms_per_cycle();
+        assert!(
+            (cm.predict_ms(m) - via_rate).abs() <= 1e-9 * via_rate.abs(),
+            "ms_per_cycle prior disagrees with predict_ms at m={m}"
+        );
+    }
+    assert_eq!(cm.full_cycles(), cm.predict_cycles(geo.m));
+    assert!(cm.full_ms() > 0.0);
+}

@@ -114,6 +114,7 @@ fn cross_model_outputs_are_deterministic_across_pools_and_attention_modes() {
                         model: 0,
                         tokens: t.clone(),
                         padded_len: t.len(),
+                        cost: t.len() as u64,
                         submitted: Instant::now(),
                         reply: tx,
                     }

@@ -153,6 +153,7 @@ fn mixed_preset_traffic_shares_converge_to_weights() {
                     model: m,
                     tokens,
                     padded_len: 8,
+                    cost: 8,
                     submitted: Instant::now(),
                     reply: tx,
                 },
@@ -232,6 +233,7 @@ fn heavy_model_is_not_starved_by_a_flood_of_cheap_traffic() {
             model,
             tokens: vec![0; len],
             padded_len: len.div_ceil(8) * 8,
+            cost: (len.div_ceil(8) * 8) as u64,
             submitted: Instant::now(),
             reply: tx,
         };

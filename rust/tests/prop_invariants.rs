@@ -206,9 +206,9 @@ fn prop_served_token_shares_converge_to_configured_weights() {
                     return false;
                 }
             }
-            let total: u64 = (0..k).map(|m| b.charged_tokens(m)).sum();
+            let total: u64 = (0..k).map(|m| b.charged_cost(m)).sum();
             (0..k).all(|m| {
-                let share = b.charged_tokens(m) as f64 / total as f64;
+                let share = b.charged_cost(m) as f64 / total as f64;
                 let target = ws[m] as f64 / total_w as f64;
                 (share - target).abs() <= 0.1 * target + 1e-9
             })
