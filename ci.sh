@@ -39,9 +39,28 @@ for t in autoscale chaos prop_invariants wire_protocol; do
   echo "$row"
 done
 
+# Debug-assertions release re-run for the sharded dispatch path
+# (DESIGN.md §13): the ShardedBatcher / BudgetExec accounting guards
+# (`debug_assert!` on completion underflow and ledger invariants) are
+# compiled out of plain --release, so the concurrency suites re-run
+# once with them forced on at release-level timing.
+echo "-- release + debug-assertions leg: sharded queue invariants --"
+t_start=$SECONDS
+RUSTFLAGS="-C debug-assertions" cargo test -q --release --lib coordinator::batcher util::budget
+row="  lib batcher/budget (release+debug-assertions): $((SECONDS-t_start))s"
+timing_rows+=("$row")
+echo "$row"
+t_start=$SECONDS
+RUSTFLAGS="-C debug-assertions" cargo test -q --release --test prop_invariants --test chaos
+row="  prop_invariants+chaos (release+debug-assertions): $((SECONDS-t_start))s"
+timing_rows+=("$row")
+echo "$row"
+
 # Smoke-sized serving bench leg: exercises the concurrency-leg
 # acceptance assertions (tiny p99 >= 2x over the serial dispatcher,
-# shares within 10% of weights) and refreshes BENCH_serving.json.
+# shares within 10% of weights) plus the dispatch contention smoke leg
+# (many-tenant submit flood, merged under the `dispatch` key) and
+# refreshes BENCH_serving.json.
 echo "-- serving bench smoke leg --"
 t_start=$SECONDS
 cargo bench --bench serving_scaling -- --smoke

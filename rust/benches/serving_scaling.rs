@@ -7,7 +7,11 @@
 //! `roberta_base` + `tiny` traffic through the serial single-dispatcher
 //! baseline vs the concurrent per-group pipeline (DESIGN.md §9) — and
 //! the **CostModel fairness leg**: token-charged vs cycle-charged
-//! deficit-round-robin under cross-model cost skew (DESIGN.md §12).
+//! deficit-round-robin under cross-model cost skew (DESIGN.md §12) —
+//! and the **dispatch contention leg**: a many-tenant small-request
+//! flood measuring submit-side throughput over producer counts on the
+//! per-model-shard submit path (EXPERIMENTS.md §Contention, DESIGN.md
+//! §13).
 //!
 //! Run: `cargo bench --bench serving_scaling` — or
 //! `cargo bench --bench serving_scaling -- --smoke` for the
@@ -29,8 +33,8 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use swifttron::coordinator::{
-    BatchPolicy, Batcher, EngineReplica, FunctionalEngine, Metrics, ModelRegistry, ReplicaPool,
-    Request, Router,
+    BatchPolicy, Batcher, EngineReplica, FunctionalEngine, Metrics, ModelGroup, ModelRegistry,
+    ReplicaPool, Request, Router,
 };
 use swifttron::model::Geometry;
 use swifttron::quant::{i_matmul, i_matmul_tiled};
@@ -450,6 +454,106 @@ fn costmodel_fairness_leg(smoke: bool) -> Json {
     ])
 }
 
+/// Dispatch-contention leg (EXPERIMENTS.md §Contention, DESIGN.md
+/// §13): many tenants, small-request flood, producer counts 1/2/4
+/// hammering `Router::submit_to` concurrently.  The measured quantity
+/// is *submit-side* throughput — wall time of the submit loops alone,
+/// replies drained afterwards — which is exactly the path that used to
+/// serialize on the global batcher mutex and its `notify_all`: every
+/// producer, every model, one lock.  With the per-model shards a
+/// submit locks only its target model's shard, so aggregate submit
+/// throughput should hold or scale as producers are added instead of
+/// flatlining.  No hard scaling assertion: single-core CI boxes can't
+/// promise parallel speedup — the leg records the trajectory and
+/// asserts only conservation (every request answered, no errors).
+fn dispatch_contention_leg(smoke: bool) -> Json {
+    use swifttron::workload::DelayReplica;
+    let tenants = if smoke { 4usize } else { 8 };
+    let per_producer = if smoke { 2_000usize } else { 8_000 };
+    let policy =
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200), bucket_width: 8 };
+    let tenant_groups = || -> Vec<ModelGroup> {
+        (0..tenants)
+            .map(|i| {
+                let replicas: Vec<Arc<dyn EngineReplica>> =
+                    vec![Arc::new(DelayReplica::from_ms(0))];
+                ModelGroup::fixed(format!("t{i}"), replicas, 1)
+            })
+            .collect()
+    };
+
+    let mut table = Table::new(&["producers", "requests", "submit wall", "submits/s"]);
+    let mut runs = Vec::new();
+    for &producers in &[1usize, 2, 4] {
+        let metrics = Arc::new(Metrics::new());
+        let router =
+            Arc::new(Router::start_multi(tenant_groups(), policy, Arc::clone(&metrics)));
+        let total = producers * per_producer;
+        let (coll_tx, coll_rx) = channel();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let router = Arc::clone(&router);
+                let coll_tx = coll_tx.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_producer {
+                        let model = format!("t{}", (p + i) % tenants);
+                        let len = 1 + i % 6;
+                        let (tx, rx) = channel();
+                        router.submit_to(&model, vec![1; len], tx);
+                        coll_tx.send(rx).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let submit_wall = t0.elapsed().as_secs_f64();
+        drop(coll_tx);
+        let mut answered = 0usize;
+        for rx in coll_rx.iter() {
+            let resp = rx.recv().expect("response");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            answered += 1;
+        }
+        match Arc::try_unwrap(router) {
+            Ok(r) => r.shutdown(),
+            Err(_) => unreachable!("producers joined"),
+        }
+        assert_eq!(answered, total, "flood lost requests under contention");
+        let rate = total as f64 / submit_wall;
+        table.row(&[
+            producers.to_string(),
+            total.to_string(),
+            fmt_time(submit_wall),
+            format!("{rate:.0}"),
+        ]);
+        runs.push(obj([
+            ("producers", producers.into()),
+            ("requests", total.into()),
+            ("submit_wall_s", submit_wall.into()),
+            ("submits_per_s", rate.into()),
+        ]));
+    }
+    table.print(&format!(
+        "dispatch contention leg: {tenants} tenants, small-request flood, \
+         per-model shard submit path (DESIGN.md §13)"
+    ));
+    println!(
+        "\nsubmit wall times the producer loops only — the submit->pop hot\n\
+         path that previously serialized every producer on one batcher\n\
+         mutex.  Per-producer submit rate holding steady as producers are\n\
+         added is the sharding win; absolute scaling depends on host cores."
+    );
+
+    obj([
+        ("tenants", tenants.into()),
+        ("per_producer", per_producer.into()),
+        ("runs", Json::Arr(runs)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
@@ -720,6 +824,7 @@ fn main() {
     // --- concurrency leg (DESIGN.md §9): always runs, smoke-sized in CI
     println!();
     legs.push(("concurrency", concurrency_leg(smoke)));
+    legs.push(("dispatch", dispatch_contention_leg(smoke)));
 
     // --- CostModel fairness leg (DESIGN.md §12): always runs; lands
     // under the shared `costmodel` key next to the design-space leg the

@@ -123,6 +123,13 @@ pub fn predicted_work_ms(
 /// Pure scaling decision for one group at one tick: the group's
 /// predicted backlog work ([`predicted_work_ms`]), active replica
 /// count and bounds, and its SLO class.
+///
+/// `active == 0` (every slot retired by fault recovery) is clamped to
+/// 1, and a NaN work estimate — possible when the signal chain divides
+/// a zero-sample window — is treated as *infinite* drain time.  Both
+/// IEEE escapes otherwise read as "no work": every NaN comparison is
+/// false, so a group with a poisoned estimate would silently Hold at
+/// zero replicas forever instead of growing back toward its SLO.
 pub fn decide(
     work_ms: f64,
     active: usize,
@@ -132,7 +139,8 @@ pub fn decide(
     policy: &AutoscalePolicy,
 ) -> ScaleDecision {
     let active = active.max(1);
-    let drain_ms = work_ms / active as f64;
+    let raw = work_ms / active as f64;
+    let drain_ms = if raw.is_nan() { f64::INFINITY } else { raw };
     if drain_ms > policy.grow_ratio * slo_ms && active < max {
         ScaleDecision::Grow
     } else if drain_ms < policy.shrink_ratio * slo_ms && active > min {
@@ -276,6 +284,23 @@ mod tests {
     fn zero_active_is_treated_as_one_not_a_division_by_zero() {
         let p = policy();
         assert_eq!(decide(200.0, 0, 1, 4, 1.0, &p), ScaleDecision::Grow);
+        // the drain estimate must come out finite, not inf/NaN — the
+        // clamp is what keeps a fully-retired group's signal usable
+        assert!((200.0 / 0usize.max(1) as f64).is_finite());
+    }
+
+    #[test]
+    fn nan_work_estimate_grows_instead_of_silently_holding() {
+        // NaN compares false on both gates, which without the guard
+        // reads as "no work" and pins a faulted group at zero replicas
+        let p = policy();
+        assert_eq!(decide(f64::NAN, 0, 1, 4, 20.0, &p), ScaleDecision::Grow);
+        assert_eq!(decide(f64::NAN, 1, 1, 4, 20.0, &p), ScaleDecision::Grow);
+        // at max the bound still wins: never grow past it
+        assert_eq!(decide(f64::NAN, 4, 1, 4, 20.0, &p), ScaleDecision::Hold);
+        // infinite work behaves the same way (the guard maps NaN onto
+        // this already-correct path)
+        assert_eq!(decide(f64::INFINITY, 1, 1, 4, 20.0, &p), ScaleDecision::Grow);
     }
 
     #[test]

@@ -48,8 +48,17 @@
 //! The cross-model [`Batcher::take_batch`] survives as the degenerate
 //! serial (single-dispatcher) pop and is bit-equivalent to the
 //! per-model path for a one-model configuration.
+//!
+//! [`ShardedBatcher`] (DESIGN.md §13) is the concurrent serving form of
+//! the same semantics: one shard per model — its own lock, its own
+//! condvar, its own bucket queues — with the DRR ledger mirrored into
+//! per-shard atomics so a submit touches exactly one shard and reads
+//! every other model's fairness state lock-free.  `Batcher` stays as
+//! the serial reference the sharded pop is asserted bit-equivalent to.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Fallback park interval for a dispatcher polling an empty queue (no
@@ -502,6 +511,366 @@ impl<T> Batcher<T> {
             Some(d) => d.saturating_duration_since(now),
             None => DEFAULT_PARK,
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded dispatch path (DESIGN.md §13)
+// ---------------------------------------------------------------------
+
+/// Lock with poison recovery: every mutation under a shard lock is
+/// either a single statement or re-validated by the next reader, so a
+/// thread that panicked while holding the lock leaves the data
+/// structurally sound.  Taking the guard over instead of `unwrap()`ing
+/// keeps one crashed thread from cascading the panic into every other
+/// thread that touches the shard (the ISSUE 9 poisoned-lock fix).
+fn lock_recover<S>(m: &Mutex<S>) -> MutexGuard<'_, S> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// One model's private slice of the dispatch path: its bucket queues
+/// under their own lock, its own wakeup signal, and its fairness state
+/// mirrored into atomics so *other* models' submits read it without
+/// ever taking this shard's lock.
+struct Shard<T> {
+    state: Mutex<ShardState<T>>,
+    /// Signalled by pushes into THIS shard only (`notify_one`: there is
+    /// exactly one dispatcher per model) and broadcast at shutdown.
+    available: Condvar,
+    /// Cumulative dispatched cost — this model's slot in the
+    /// deficit-round-robin ledger, readable lock-free.
+    charged: AtomicU64,
+    /// Mirror of `state.queued` for lock-free backlog reads.
+    queued: AtomicUsize,
+    /// Popped-but-not-completed requests (counts as backlog).
+    in_flight: AtomicUsize,
+}
+
+struct ShardState<T> {
+    /// Per-bucket FIFO queues keyed by padded length (one model only).
+    buckets: BTreeMap<usize, VecDeque<Entry<T>>>,
+    queued: usize,
+}
+
+/// Per-model sharded batcher (DESIGN.md §13): the concurrent serving
+/// replacement for `Mutex<Batcher>` + one shared `Condvar`.
+///
+/// `submit` locks only the target model's shard and `notify_one`s only
+/// that model's dispatcher; a dispatcher pop never contends with other
+/// models.  The weighted-fair semantics of [`Batcher`] carry over
+/// unchanged — charge-at-pop (expired jumps included, at the stored
+/// per-entry cost), the idle re-entry floor, and the empty-pool epoch
+/// reset — but the DRR ledger lives in per-shard atomics reconciled at
+/// pop time instead of under a global lock: the re-entry floor reads
+/// other shards' `charged`/backlog atomics lock-free, and the epoch
+/// reset fires on the `outstanding` decrement that empties the pool.
+/// A push racing that reset lands just after it with a level ledger,
+/// which is indistinguishable from arriving into a fresh epoch.
+///
+/// Every lock acquisition recovers from poisoning, so a thread that
+/// panics while holding a shard lock degrades exactly one model — and
+/// only until the next pop — instead of panicking the whole router.
+///
+/// For a single model the pop order is bit-equivalent to the serial
+/// [`Batcher::take_batch`] (asserted in tests): the bucket choice in
+/// [`ShardedBatcher::take_batch_for`] is the same
+/// expired-oldest-outranks-full / fullest-oldest / oldest cascade.
+pub struct ShardedBatcher<T> {
+    policy: BatchPolicy,
+    shards: Vec<Shard<T>>,
+    /// Fair-share weight per model (fixed at construction).
+    weights: Vec<u64>,
+    /// Queued + in-flight across all shards; the decrement that lands
+    /// on zero performs the epoch reset.
+    outstanding: AtomicUsize,
+    stop: AtomicBool,
+}
+
+impl<T> ShardedBatcher<T> {
+    /// One shard per weight entry (index = model id); weights must be
+    /// positive, mirroring [`Batcher::set_model_weights`].
+    pub fn new(policy: BatchPolicy, weights: &[u64]) -> Self {
+        assert!(!weights.is_empty(), "a sharded batcher needs at least one model");
+        assert!(weights.iter().all(|&w| w > 0), "model weights must be positive");
+        let shards = (0..weights.len())
+            .map(|_| Shard {
+                state: Mutex::new(ShardState { buckets: BTreeMap::new(), queued: 0 }),
+                available: Condvar::new(),
+                charged: AtomicU64::new(0),
+                queued: AtomicUsize::new(0),
+                in_flight: AtomicUsize::new(0),
+            })
+            .collect();
+        ShardedBatcher {
+            policy,
+            shards,
+            weights: weights.to_vec(),
+            outstanding: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    pub fn models(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    fn weight(&self, model: usize) -> u64 {
+        self.weights.get(model).copied().unwrap_or(1).max(1)
+    }
+
+    /// Lock-free read of the model's DRR ledger slot (same unit the
+    /// pushes charged — predicted cycles on the serving path).
+    pub fn charged_cost(&self, model: usize) -> u64 {
+        self.shards.get(model).map_or(0, |s| s.charged.load(Ordering::SeqCst))
+    }
+
+    /// Lock-free read of the model's queued count.
+    pub fn queued_for(&self, model: usize) -> usize {
+        self.shards.get(model).map_or(0, |s| s.queued.load(Ordering::SeqCst))
+    }
+
+    /// Lock-free read of the model's popped-but-running count.
+    pub fn in_flight_for(&self, model: usize) -> usize {
+        self.shards.get(model).map_or(0, |s| s.in_flight.load(Ordering::SeqCst))
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.queued.load(Ordering::SeqCst)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// A model returning from idle re-enters at the backlog's current
+    /// normalized service level — the serial path's re-entry floor —
+    /// computed entirely from other shards' atomics: the submit path
+    /// never takes a second shard's lock.  The raise is `fetch_max`, so
+    /// a concurrent pop charging the same slot is never undone.
+    fn raise_reentry_floor(&self, model: usize) {
+        let mut best: Option<(u64, u64)> = None; // (charged_j, weight_j)
+        for (j, s) in self.shards.iter().enumerate() {
+            if j == model {
+                continue;
+            }
+            if s.queued.load(Ordering::SeqCst) == 0 && s.in_flight.load(Ordering::SeqCst) == 0 {
+                continue;
+            }
+            let cj = s.charged.load(Ordering::SeqCst);
+            let wj = self.weight(j);
+            best = Some(match best {
+                None => (cj, wj),
+                Some((cb, wb)) => {
+                    if (cj as u128) * wb as u128 < (cb as u128) * wj as u128 {
+                        (cj, wj)
+                    } else {
+                        (cb, wb)
+                    }
+                }
+            });
+        }
+        if let Some((cj, wj)) = best {
+            let floor = ((cj as u128) * self.weight(model) as u128 / wj as u128)
+                .min(u64::MAX as u128) as u64;
+            self.shards[model].charged.fetch_max(floor, Ordering::SeqCst);
+        }
+    }
+
+    /// Enqueue a request of sequence length `len` for `model`, charged
+    /// at its bucket-padded token count; returns the padded boundary.
+    pub fn push_keyed(&self, item: T, model: usize, len: usize) -> usize {
+        let padded = self.policy.padded_len(len);
+        self.push_costed(item, model, len, padded as u64)
+    }
+
+    /// Enqueue a request for `model` with an explicit dispatch-time
+    /// `cost` (the serving path passes `CostModel::predict_cycles`).
+    /// Locks only `model`'s shard and wakes only `model`'s dispatcher.
+    /// Returns the padded bucket boundary.
+    pub fn push_costed(&self, item: T, model: usize, len: usize, cost: u64) -> usize {
+        let shard = &self.shards[model];
+        let padded = self.policy.padded_len(len);
+        let key = self.policy.bucket_key(len);
+        let mut st = lock_recover(&shard.state);
+        if st.queued == 0 && shard.in_flight.load(Ordering::SeqCst) == 0 {
+            self.raise_reentry_floor(model);
+        }
+        st.buckets.entry(key).or_default().push_back((item, Instant::now(), cost));
+        st.queued += 1;
+        shard.queued.fetch_add(1, Ordering::SeqCst);
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        drop(st);
+        shard.available.notify_one();
+        padded
+    }
+
+    /// Whether the shard should release a group now: some bucket
+    /// reached `max_batch` or some front expired — `Batcher::ready_for`
+    /// restricted to one shard.
+    fn ready_in(&self, st: &ShardState<T>, now: Instant) -> bool {
+        st.buckets.values().any(|q| {
+            q.len() >= self.policy.max_batch
+                || q.front()
+                    .is_some_and(|&(_, t, _)| now.duration_since(t) >= self.policy.max_wait)
+        })
+    }
+
+    /// The shard bucket whose front (oldest) request arrived earliest.
+    fn oldest_in(st: &ShardState<T>) -> Option<(usize, Instant)> {
+        st.buckets
+            .iter()
+            .filter_map(|(k, q)| q.front().map(|&(_, t, _)| (*k, t)))
+            .min_by_key(|&(_, t)| t)
+    }
+
+    /// Pop one dispatch group under the shard lock, mirroring the
+    /// serial [`Batcher::take_batch_for`] bucket cascade exactly — an
+    /// expired oldest request outranks any full bucket, otherwise the
+    /// full bucket with the oldest front, otherwise the oldest bucket —
+    /// and charging the stored per-entry costs at pop time.
+    fn pop_locked(&self, model: usize, st: &mut ShardState<T>) -> Vec<T> {
+        let now = Instant::now();
+        let Some((oldest_key, t)) = Self::oldest_in(st) else {
+            return Vec::new();
+        };
+        let key = if now.duration_since(t) >= self.policy.max_wait {
+            oldest_key
+        } else {
+            st.buckets
+                .iter()
+                .filter(|(_, q)| q.len() >= self.policy.max_batch)
+                .filter_map(|(k, q)| q.front().map(|&(_, t, _)| (*k, t)))
+                .min_by_key(|&(_, t)| t)
+                .map_or(oldest_key, |(k, _)| k)
+        };
+        let Some(q) = st.buckets.get_mut(&key) else {
+            return Vec::new();
+        };
+        let n = q.len().min(self.policy.max_batch);
+        let mut cost: u64 = 0;
+        let out: Vec<T> = q
+            .drain(..n)
+            .map(|(item, _, c)| {
+                cost = cost.saturating_add(c);
+                item
+            })
+            .collect();
+        if q.is_empty() {
+            st.buckets.remove(&key);
+        }
+        st.queued -= out.len();
+        let shard = &self.shards[model];
+        // in_flight rises before queued falls, so a lock-free backlog
+        // read on another shard's submit path never sees this model
+        // transiently idle mid-pop (the floor only over-raises, never
+        // under-raises).
+        shard.in_flight.fetch_add(out.len(), Ordering::SeqCst);
+        shard.queued.fetch_sub(out.len(), Ordering::SeqCst);
+        let _ = shard
+            .charged
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| Some(c.saturating_add(cost)));
+        out
+    }
+
+    /// Non-blocking pop — the sharded counterpart of
+    /// [`Batcher::take_batch_for`].  Dispatchers use the blocking
+    /// [`ShardedBatcher::next_batch`]; this form serves tests, parity
+    /// assertions, and hand-driven drains.
+    pub fn take_batch_for(&self, model: usize) -> Vec<T> {
+        let mut st = lock_recover(&self.shards[model].state);
+        self.pop_locked(model, &mut st)
+    }
+
+    /// Blocking pop for `model`'s dispatcher: parks on the shard's own
+    /// condvar until a group is releasable (full bucket or expired
+    /// deadline), popping immediately during shutdown to drain the
+    /// remaining backlog.  Returns `None` once shut down and drained.
+    /// Other models' submits never signal this shard — the global
+    /// `notify_all` thundering herd is gone by construction.
+    pub fn next_batch(&self, model: usize) -> Option<Vec<T>> {
+        let shard = &self.shards[model];
+        let mut st = lock_recover(&shard.state);
+        loop {
+            let shutting = self.stop.load(Ordering::SeqCst);
+            if st.queued == 0 {
+                if shutting {
+                    return None;
+                }
+            } else if shutting || self.ready_in(&st, Instant::now()) {
+                let out = self.pop_locked(model, &mut st);
+                if !out.is_empty() {
+                    return Some(out);
+                }
+            }
+            let timeout = match Self::oldest_in(&st) {
+                Some((_, t)) => {
+                    (t + self.policy.max_wait).saturating_duration_since(Instant::now())
+                }
+                None => DEFAULT_PARK,
+            };
+            st = match shard.available.wait_timeout(st, timeout) {
+                Ok((g, _)) => g,
+                Err(p) => p.into_inner().0,
+            };
+        }
+    }
+
+    /// Report `n` popped requests of `model` complete.  The decrement
+    /// that empties the whole pool (nothing queued or in flight on any
+    /// shard) performs the epoch reset, zeroing every shard's ledger —
+    /// the serial `maybe_reset_epoch` contract.  A push racing the
+    /// reset lands just after it with a level ledger, which is exactly
+    /// what arriving into a fresh epoch means.
+    pub fn complete(&self, model: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let shard = &self.shards[model];
+        let _ = shard
+            .in_flight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| Some(v.saturating_sub(n)));
+        let prev = self.outstanding.fetch_sub(n, Ordering::SeqCst);
+        debug_assert!(prev >= n, "complete({model}, {n}) exceeds outstanding work ({prev})");
+        if prev == n {
+            for s in &self.shards {
+                s.charged.store(0, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Begin shutdown: the flag is stored before each shard's lock is
+    /// bounced and its condvar broadcast, so a dispatcher that read the
+    /// flag as false under its lock is either already parked (and gets
+    /// the wakeup) or will re-check after its timed park — no
+    /// lost-signal window.  Dispatchers drain their remaining backlog
+    /// and then observe `None` from [`ShardedBatcher::next_batch`].
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for shard in &self.shards {
+            let _guard = lock_recover(&shard.state);
+            shard.available.notify_all();
+        }
+    }
+
+    /// Test instrumentation for the poisoned-lock regression: panic a
+    /// closure while it holds `model`'s shard lock, leaving the mutex
+    /// poisoned exactly as a crashed dispatcher would.  Production code
+    /// has no reason to call this.
+    #[doc(hidden)]
+    pub fn poison_shard(&self, model: usize) {
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = self.shards[model].state.lock();
+            panic!("injected shard poison");
+        }));
+        assert!(poisoned.is_err());
     }
 }
 
@@ -1000,5 +1369,137 @@ mod tests {
             served[b.take_batch()[0].0] += 1;
         }
         assert_eq!(served, [4, 4], "equal weights split evenly from the re-entry point");
+    }
+
+    // -----------------------------------------------------------------
+    // ShardedBatcher (DESIGN.md §13)
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn sharded_single_model_pop_order_matches_the_serial_batcher() {
+        // The one-group configuration must stay bit-equivalent to the
+        // serial pipeline: drive the same mixed-length, mixed-expiry
+        // push sequence through both batchers and compare every popped
+        // group element for element.
+        let p = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(40), bucket_width: 8 };
+        let mut serial = Batcher::new(p);
+        let sharded = ShardedBatcher::new(p, &[1]);
+        let lens = [3usize, 9, 17, 8, 1, 25, 16, 9, 2, 30, 5, 11];
+        // interleaved pops exercise the multi-bucket cascade (full
+        // bucket vs oldest bucket) mid-stream, not just the final drain
+        let pops_at = [2usize, 3, 7, 10];
+        for (i, &len) in lens.iter().enumerate() {
+            serial.push_keyed(i, 0, len);
+            sharded.push_keyed(i, 0, len);
+            if pops_at.contains(&i) {
+                let group = serial.take_batch_for(0);
+                let sharded_group = sharded.take_batch_for(0);
+                assert_eq!(group, sharded_group, "pop after push #{i} diverged");
+            }
+        }
+        // expire the remainder and drain both sides to empty via the
+        // deadline path
+        std::thread::sleep(Duration::from_millis(60));
+        loop {
+            let group = serial.take_batch_for(0);
+            let sharded_group = sharded.take_batch_for(0);
+            assert_eq!(group, sharded_group, "drain pop diverged");
+            if group.is_empty() {
+                break;
+            }
+        }
+        assert!(sharded.is_empty());
+        assert_eq!(serial.charged_cost(0), sharded.charged_cost(0), "charges diverged");
+    }
+
+    #[test]
+    fn sharded_expired_pop_charges_the_stored_per_entry_cost() {
+        let p = BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, bucket_width: 8 };
+        let sharded = ShardedBatcher::new(p, &[1, 1]);
+        sharded.push_costed("a", 0, 4, 700);
+        sharded.push_costed("b", 0, 4, 41);
+        let group = sharded.take_batch_for(0);
+        assert_eq!(group.len(), 2);
+        assert_eq!(sharded.charged_cost(0), 741, "expiry jump charges stored costs");
+        assert_eq!(sharded.in_flight_for(0), 2);
+        assert_eq!(sharded.queued_for(0), 0);
+        sharded.complete(0, 2);
+        assert_eq!(sharded.charged_cost(0), 0, "pool drained: epoch reset");
+        assert_eq!(sharded.in_flight_for(0), 0);
+    }
+
+    #[test]
+    fn sharded_reentry_floor_and_epoch_reset_match_serial_semantics() {
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+        let sharded = ShardedBatcher::new(p, &[1, 1]);
+        sharded.push_keyed(0usize, 0, 8);
+        sharded.push_keyed(1usize, 0, 8);
+        let popped = sharded.take_batch_for(0);
+        assert_eq!(popped.len(), 2);
+        assert_eq!(sharded.charged_cost(0), 16);
+        // model 1 arrives while model 0's group is in flight: its
+        // ledger jumps to model 0's level (in-flight counts as backlog)
+        sharded.push_keyed(2usize, 1, 8);
+        assert_eq!(sharded.charged_cost(1), 16, "re-entry floor sees in-flight backlog");
+        let served = sharded.take_batch_for(1);
+        assert_eq!(served.len(), 1);
+        sharded.complete(1, 1);
+        assert_eq!(sharded.charged_cost(0), 16, "model 0 still in flight: no epoch reset");
+        sharded.complete(0, 2);
+        assert_eq!(sharded.charged_cost(0), 0, "last completion resets the idle epoch");
+        assert_eq!(sharded.charged_cost(1), 0);
+    }
+
+    #[test]
+    fn sharded_poisoned_shard_recovers_and_other_models_are_untouched() {
+        // The ISSUE 9 poisoned-lock regression in miniature: a panic
+        // while holding model 0's shard lock must not panic model 1's
+        // path, and model 0 itself must keep serving through the
+        // recovered guard.
+        let p = BatchPolicy { max_batch: 1, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+        let sharded = ShardedBatcher::new(p, &[1, 1]);
+        sharded.push_keyed("before", 0, 8);
+        sharded.poison_shard(0);
+        // other tenants keep serving
+        sharded.push_keyed("other", 1, 8);
+        assert_eq!(sharded.take_batch_for(1), vec!["other"]);
+        sharded.complete(1, 1);
+        // the poisoned shard itself recovers rather than cascading
+        sharded.push_keyed("after", 0, 8);
+        assert_eq!(sharded.take_batch_for(0), vec!["before"]);
+        assert_eq!(sharded.take_batch_for(0), vec!["after"]);
+        sharded.complete(0, 2);
+        assert!(sharded.is_empty());
+    }
+
+    #[test]
+    fn sharded_next_batch_blocks_until_work_and_drains_on_shutdown() {
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(3600), bucket_width: 8 };
+        let sharded = std::sync::Arc::new(ShardedBatcher::new(p, &[1, 1]));
+        let consumer = {
+            let sharded = std::sync::Arc::clone(&sharded);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(group) = sharded.next_batch(0) {
+                    let n = group.len();
+                    got.extend(group);
+                    sharded.complete(0, n);
+                }
+                got
+            })
+        };
+        // a full bucket releases without waiting out max_wait
+        sharded.push_keyed(10usize, 0, 8);
+        sharded.push_keyed(11usize, 0, 8);
+        // a straggler below max_batch is only released by the shutdown
+        // drain (max_wait is an hour)
+        sharded.push_keyed(12usize, 0, 8);
+        std::thread::sleep(Duration::from_millis(50));
+        sharded.shutdown();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, vec![10, 11, 12], "no request lost across blocking pops and shutdown");
+        // a dispatcher for an idle model parks and exits promptly on
+        // shutdown instead of spinning
+        assert!(sharded.next_batch(1).is_none());
     }
 }

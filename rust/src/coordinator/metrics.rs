@@ -204,6 +204,9 @@ pub struct Metrics {
     pub conns_accepted: AtomicU64,
     /// connections refused at the cap with a typed `busy` rejection
     pub conns_rejected: AtomicU64,
+    /// executor worker threads in the router's global core budget
+    /// (gauge; 0 until a pool is built — DESIGN.md §13)
+    pub core_budget: AtomicU64,
 }
 
 impl Metrics {
@@ -403,6 +406,12 @@ impl Metrics {
         self.model(model).replicas.store(n as u64, Ordering::Relaxed);
     }
 
+    /// Record the size of the global executor core budget (the replica
+    /// pool sets this once at construction; DESIGN.md §13).
+    pub fn set_core_budget(&self, n: usize) {
+        self.core_budget.store(n as u64, Ordering::Relaxed);
+    }
+
     /// Count one replica panic against model `i` (the faulted slot's
     /// retirement shows up in the replica gauge, not here).
     pub fn record_fault(&self, model: usize) {
@@ -475,6 +484,10 @@ impl Metrics {
             self.conns_open.load(Ordering::Relaxed),
             self.conns_accepted.load(Ordering::Relaxed),
             self.conns_rejected.load(Ordering::Relaxed),
+        ));
+        out.push_str(&format!(
+            "\n  cores budget={}",
+            self.core_budget.load(Ordering::Relaxed),
         ));
         {
             let models = self.models.lock().unwrap();
@@ -698,6 +711,13 @@ mod tests {
         assert_eq!(m.model(0).scale_ups.load(Ordering::Relaxed), 2);
         assert_eq!(m.model(0).scale_downs.load(Ordering::Relaxed), 1);
         assert!(m.report().contains("scale +2/-1"), "{}", m.report());
+    }
+
+    #[test]
+    fn core_budget_gauge_surfaces_in_report() {
+        let m = Metrics::new();
+        m.set_core_budget(6);
+        assert!(m.report().contains("cores budget=6"), "{}", m.report());
     }
 
     #[test]

@@ -8,12 +8,13 @@
 //! `router::submit_to`/`submit_index` -> `batcher` (size-or-deadline dispatch groups
 //! keyed by `(model, padded length)`, weighted-fair across models) ->
 //! one dispatcher thread *per model group* popping its own model's
-//! groups concurrently -> that group's
+//! shard concurrently (per-shard lock and wakeup, no global batcher
+//! mutex; DESIGN.md §13) -> that group's
 //! [`GroupRuntime`](pool::GroupRuntime) (fan-out over the group's
-//! active replicas on its private executor, results re-ordered per
-//! request) -> reply channels.  An SLO autoscaler thread
-//! ([`autoscale`]) moves each scalable group's replica count with its
-//! backlog.
+//! active replicas on the router's shared core-budget executor,
+//! results re-ordered per request) -> reply channels.  An SLO
+//! autoscaler thread ([`autoscale`]) moves each scalable group's
+//! replica count with its backlog.
 //!
 //! * [`engine`] — the [`EngineReplica`] trait and its implementations:
 //!   the PJRT-backed [`InferenceEngine`] (single-model) and the
@@ -26,10 +27,12 @@
 //!   length-bucketed, deficit-round-robin model selection charged in
 //!   the caller's cost unit — predicted accelerator cycles on the
 //!   serving path; per-model pop contract with in-flight accounting
-//!   for concurrent poppers).
+//!   for concurrent poppers), in two forms: the serial [`Batcher`]
+//!   reference and the per-model-shard [`ShardedBatcher`] the router
+//!   serves from (DESIGN.md §13).
 //! * [`pool`] — per-model group runtimes: fan-out + per-request
-//!   re-ordering on a private per-group thread pool, replica slots the
-//!   autoscaler grows and drains.
+//!   re-ordering over the router-owned global core budget
+//!   (`util::budget`), replica slots the autoscaler grows and drains.
 //! * [`autoscale`] — the SLO-aware backlog autoscaler policy and
 //!   control loop, scoring each group's backlog in predicted work
 //!   (`sim::cost::CostModel` cycles) rather than request counts.
@@ -56,7 +59,7 @@ pub mod server;
 pub use autoscale::{
     decide, predicted_work_ms, tick_group, AutoscalePolicy, GroupScaleState, ScaleDecision,
 };
-pub use batcher::{Batcher, BatchPolicy};
+pub use batcher::{Batcher, BatchPolicy, ShardedBatcher};
 pub use engine::{
     EngineReplica, FunctionalEngine, InferenceEngine, Prediction, RequestError, SyntheticModel,
 };

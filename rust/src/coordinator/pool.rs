@@ -3,14 +3,19 @@
 //! §2, §8, §9).
 //!
 //! With the concurrent per-group dispatch pipeline each model group is
-//! a [`GroupRuntime`]: it owns its replicas, its *own* fixed executor
-//! (one `util::ThreadPool` sized to the group's `max_replicas`), and a
-//! slot table the autoscaler grows and shrinks at runtime.  Ownership
-//! is the point — a group barrier only ever waits on its own model's
-//! work, so a heavy `roberta_base` group mid-flight cannot stall a
-//! `tiny` dispatch (the PR 4 pipeline's shared-pool `run_batch` barrier
-//! would have).  [`ReplicaPool`] is the thin routing facade over the
-//! group runtimes that serial drivers (benches, tests) still use.
+//! a [`GroupRuntime`]: it owns its replicas and a slot table the
+//! autoscaler grows and shrinks at runtime, and it borrows executor
+//! threads from the router-owned global core budget
+//! (`util::budget::BudgetExec`; DESIGN.md §13) — one pool of
+//! `--cores` workers shared by every group, with weighted-fair job
+//! pickup, instead of the PR 5 private pools whose total came to
+//! Σ `max_replicas`.  Group isolation still holds — a group barrier
+//! only ever waits on its own model's jobs, and the executor's DRR
+//! pick keeps a heavy `roberta_base` backlog from starving a `tiny`
+//! share of worker time (the PR 4 pipeline's shared-pool `run_batch`
+//! barrier would have serialized them).  [`ReplicaPool`] is the thin
+//! routing facade over the group runtimes that serial drivers
+//! (benches, tests) still use.
 //!
 //! Replica ids are global and *stable under scaling*: group `g`
 //! reserves the contiguous id range `base..base + max_replicas`, one id
@@ -52,7 +57,7 @@ use super::metrics::Metrics;
 use super::registry::{ModelGroup, ReplicaFactory};
 use super::router::{Request, Response};
 use crate::sim::CostModel;
-use crate::util::threadpool::ThreadPool;
+use crate::util::budget::BudgetExec;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -81,15 +86,22 @@ pub struct GroupRuntime {
     slots: Mutex<Vec<Option<Arc<dyn EngineReplica>>>>,
     /// rotating fan-out offset (advances once per dispatch)
     next_start: AtomicUsize,
-    /// private executor, one thread per slot
-    pool: ThreadPool,
+    /// the router-owned global core budget this group borrows executor
+    /// threads from (DESIGN.md §13)
+    exec: Arc<BudgetExec>,
     metrics: Arc<Metrics>,
     /// model index in the router/batcher/metrics ledgers
     gidx: usize,
 }
 
 impl GroupRuntime {
-    fn new(g: ModelGroup, gidx: usize, base: usize, metrics: Arc<Metrics>) -> GroupRuntime {
+    fn new(
+        g: ModelGroup,
+        gidx: usize,
+        base: usize,
+        metrics: Arc<Metrics>,
+        exec: Arc<BudgetExec>,
+    ) -> GroupRuntime {
         assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
         assert!(
             g.max_replicas >= g.replicas.len() && g.min_replicas <= g.replicas.len(),
@@ -114,7 +126,7 @@ impl GroupRuntime {
             cost: g.cost,
             slots: Mutex::new(slots),
             next_start: AtomicUsize::new(0),
-            pool: ThreadPool::new(max),
+            exec,
             metrics,
             gidx,
         }
@@ -221,7 +233,26 @@ impl GroupRuntime {
             .filter_map(|(slot, r)| r.as_ref().map(|r| (slot, Arc::clone(r))))
             .collect();
         let n = active.len();
-        assert!(n > 0, "model {:?} has no active replicas", self.model);
+        if n == 0 {
+            // Fault recovery can retire every slot of a respawnable
+            // group between dispatches (floor repair regrows it on the
+            // next autoscaler tick).  Answer each request with a typed
+            // error: panicking here would kill the group's dispatcher
+            // thread and hang every later submit (ISSUE 9 — a dead
+            // tenant must stay a per-tenant failure).
+            return group
+                .into_iter()
+                .map(|req| {
+                    fail_request(
+                        self.base,
+                        &self.model,
+                        &self.metrics,
+                        req,
+                        "no active replicas (all slots retired); floor repair pending",
+                    )
+                })
+                .collect();
+        }
         let start = self.next_start.fetch_add(1, Ordering::Relaxed) % n;
         let mut shares: Vec<Vec<(usize, Request)>> = (0..n).map(|_| Vec::new()).collect();
         for (i, req) in group.into_iter().enumerate() {
@@ -236,7 +267,12 @@ impl GroupRuntime {
                 let metrics = Arc::clone(&self.metrics);
                 let replica_id = self.base + slot;
                 let model = self.model.clone();
-                move || {
+                // the share's predicted cost drives the executor's
+                // weighted-fair pickup across groups
+                let cost = share
+                    .iter()
+                    .fold(0u64, |acc, (_, req)| acc.saturating_add(req.cost));
+                let job = move || {
                     share
                         .into_iter()
                         .map(|(i, req)| {
@@ -251,12 +287,13 @@ impl GroupRuntime {
                             (i, slot, out)
                         })
                         .collect::<Vec<_>>()
-                }
+                };
+                (cost, job)
             })
             .collect();
         let mut indexed: Vec<(usize, Response)> = Vec::with_capacity(total);
         let mut panicked: Vec<(usize, usize, Request)> = Vec::new();
-        for (i, slot, outcome) in self.pool.run_batch(jobs).into_iter().flatten() {
+        for (i, slot, outcome) in self.exec.run_batch(self.gidx, jobs).into_iter().flatten() {
             match outcome {
                 ServeOutcome::Replied(resp) => indexed.push((i, resp)),
                 ServeOutcome::Panicked(req) => panicked.push((i, slot, req)),
@@ -348,6 +385,8 @@ impl GroupRuntime {
 /// drivers (benches, tests) and the router's construction path.
 pub struct ReplicaPool {
     groups: Vec<Arc<GroupRuntime>>,
+    /// the global core budget every group borrows against
+    exec: Arc<BudgetExec>,
 }
 
 impl ReplicaPool {
@@ -359,10 +398,27 @@ impl ReplicaPool {
         ReplicaPool::new_multi(vec![ModelGroup::fixed("default", replicas, 1)], metrics)
     }
 
-    /// Multi-model pool: one [`GroupRuntime`] per model id, each with a
-    /// private executor sized to its `max_replicas` and a reserved
-    /// global replica-id span of the same width.
+    /// Multi-model pool with the default core budget — Σ group widths
+    /// (`max(max_replicas, replicas.len())` summed), i.e. enough
+    /// workers that no group ever queues behind another, matching the
+    /// PR 5 private-pool concurrency exactly.
     pub fn new_multi(groups: Vec<ModelGroup>, metrics: Arc<Metrics>) -> ReplicaPool {
+        ReplicaPool::new_multi_with_budget(groups, metrics, None)
+    }
+
+    /// Multi-model pool over an explicit core budget: one
+    /// [`GroupRuntime`] per model id, each with a reserved global
+    /// replica-id span of `max_replicas` width, all sharing one
+    /// [`BudgetExec`] of `cores` worker threads (`None` = Σ group
+    /// widths).  With `cores` below Σ widths many tenants oversubscribe
+    /// safely: total executor threads stay at the budget and the
+    /// weighted-fair pickup splits them by the groups' fair-share
+    /// weights (DESIGN.md §13).
+    pub fn new_multi_with_budget(
+        groups: Vec<ModelGroup>,
+        metrics: Arc<Metrics>,
+        cores: Option<usize>,
+    ) -> ReplicaPool {
         assert!(!groups.is_empty(), "replica pool needs at least one model group");
         for (i, g) in groups.iter().enumerate() {
             assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
@@ -374,6 +430,10 @@ impl ReplicaPool {
         }
         let total_ids: usize = groups.iter().map(|g| g.max_replicas.max(g.replicas.len())).sum();
         metrics.ensure_replicas(total_ids);
+        let weights: Vec<u64> = groups.iter().map(|g| g.weight.max(1)).collect();
+        let budget = cores.unwrap_or(total_ids).max(1);
+        let exec = Arc::new(BudgetExec::new(budget, &weights));
+        metrics.set_core_budget(budget);
         let mut base = 0;
         let groups = groups
             .into_iter()
@@ -381,12 +441,24 @@ impl ReplicaPool {
             .map(|(gidx, mut g)| {
                 g.max_replicas = g.max_replicas.max(g.replicas.len());
                 let width = g.max_replicas;
-                let rt = Arc::new(GroupRuntime::new(g, gidx, base, Arc::clone(&metrics)));
+                let rt = Arc::new(GroupRuntime::new(
+                    g,
+                    gidx,
+                    base,
+                    Arc::clone(&metrics),
+                    Arc::clone(&exec),
+                ));
                 base += width;
                 rt
             })
             .collect();
-        ReplicaPool { groups }
+        ReplicaPool { groups, exec }
+    }
+
+    /// Worker threads in the shared core budget — the total executor
+    /// thread count, whatever Σ `max_replicas` comes to.
+    pub fn core_budget(&self) -> usize {
+        self.exec.threads()
     }
 
     /// Active replicas across all groups.
@@ -866,5 +938,101 @@ mod tests {
         assert!(!g.grow().unwrap(), "no factory: grow is a no-op");
         assert!(!g.shrink(), "min == len: shrink is a no-op");
         assert_eq!(g.active_replicas(), 2);
+    }
+
+    #[test]
+    fn default_core_budget_is_the_sum_of_group_widths() {
+        // the budget that reproduces the PR 5 private-pool concurrency:
+        // one worker per reserved slot
+        let (pool, _metrics) = pool_of(3, 0);
+        assert_eq!(pool.core_budget(), 3);
+    }
+
+    #[test]
+    fn core_budget_caps_executor_threads_below_sum_of_maxima() {
+        let metrics = Arc::new(Metrics::new());
+        let mk = |n: usize| -> Vec<Arc<dyn EngineReplica>> {
+            (0..n)
+                .map(|_| {
+                    Arc::new(SlowReplica { delay: Duration::ZERO }) as Arc<dyn EngineReplica>
+                })
+                .collect()
+        };
+        let factory: ReplicaFactory = Arc::new(|| {
+            Ok(Arc::new(SlowReplica { delay: Duration::ZERO }) as Arc<dyn EngineReplica>)
+        });
+        let pool = ReplicaPool::new_multi_with_budget(
+            vec![
+                ModelGroup {
+                    model: "a".into(),
+                    replicas: mk(1),
+                    weight: 1,
+                    min_replicas: 1,
+                    max_replicas: 4,
+                    slo_ms: Some(10.0),
+                    factory: Some(factory),
+                    cost: None,
+                },
+                ModelGroup::fixed("b", mk(2), 1),
+            ],
+            metrics,
+            Some(2),
+        );
+        assert_eq!(pool.core_budget(), 2, "2 executor threads although Σ max_replicas = 6");
+        // both groups still serve correctly through the shared budget
+        let (group_a, _rx_a) = group_for_model(0, 4);
+        assert!(pool.dispatch(group_a).iter().all(|r| r.error.is_none()));
+        let (group_b, _rx_b) = group_for_model(1, 4);
+        assert!(pool.dispatch(group_b).iter().all(|r| r.error.is_none()));
+    }
+
+    #[test]
+    fn dispatch_with_all_slots_retired_fails_typed_not_panics() {
+        // A respawnable group whose only replica panics loses the slot
+        // to fault retirement; until floor repair regrows it, a
+        // dispatch must answer typed errors — not assert-kill the
+        // dispatcher thread (ISSUE 9).
+        struct AlwaysPanic;
+        impl EngineReplica for AlwaysPanic {
+            fn predict(&self, _tokens: &[i32]) -> Result<Prediction, RequestError> {
+                panic!("hardware fault");
+            }
+            fn seq_len(&self) -> usize {
+                4
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let factory: ReplicaFactory = Arc::new(|| Err("factory offline".into()));
+        let pool = ReplicaPool::new_multi(
+            vec![ModelGroup {
+                model: "doomed".into(),
+                replicas: vec![Arc::new(AlwaysPanic) as Arc<dyn EngineReplica>],
+                weight: 1,
+                min_replicas: 1,
+                max_replicas: 2,
+                slo_ms: Some(5.0),
+                factory: Some(factory),
+                cost: None,
+            }],
+            Arc::clone(&metrics),
+        );
+        let g = pool.group(0).unwrap();
+        // first dispatch: the panic retires the slot, the request gets
+        // the no-retry typed error
+        let (group, _rx) = group_of(1);
+        let first = g.dispatch(group);
+        assert!(first[0].error.as_deref().unwrap_or("").contains("panicked"));
+        assert_eq!(g.active_replicas(), 0);
+        // second dispatch: zero active replicas — typed errors, every
+        // request answered, dispatcher alive
+        let (group, receivers) = group_of(2);
+        let responses = g.dispatch(group);
+        assert_eq!(responses.len(), 2);
+        for resp in &responses {
+            assert!(resp.error.as_deref().unwrap_or("").contains("no active replicas"));
+        }
+        for rx in receivers {
+            assert!(rx.recv().expect("typed reply sent").error.is_some());
+        }
     }
 }

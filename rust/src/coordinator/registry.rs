@@ -37,11 +37,15 @@ pub type ReplicaFactory = Arc<dyn Fn() -> Result<Arc<dyn EngineReplica>, String>
 pub struct ModelGroup {
     pub model: String,
     pub replicas: Vec<Arc<dyn EngineReplica>>,
+    /// Fair-share weight: the group's share of every DRR-arbitrated
+    /// resource — the batcher shard ledger at pop time *and* the
+    /// router's global core-budget workers (DESIGN.md §8, §13).
     pub weight: u64,
     /// Fewest replicas the autoscaler may drain the group down to.
     pub min_replicas: usize,
     /// Most replicas the autoscaler may grow the group to (also the
-    /// group's reserved global-replica-id span and executor width).
+    /// group's reserved global-replica-id span and its contribution
+    /// to the default core budget — Σ group widths; DESIGN.md §13).
     pub max_replicas: usize,
     /// Target end-to-end latency class in milliseconds; `None` opts the
     /// group out of autoscaling.

@@ -1,20 +1,24 @@
 //! Request router: the front half of the concurrent serving pipeline
-//! (DESIGN.md §2, §8, §9).
+//! (DESIGN.md §2, §8, §9, §13).
 //!
-//! `submit` / `submit_to` enqueue requests into the dynamic [`Batcher`]
-//! (keyed by `(model, padded length)`; DESIGN.md §6, §8).  Every model
-//! group runs its *own* dispatcher thread: each waits for the
-//! size-or-deadline policy to release one of its model's dispatch
-//! groups (`Batcher::take_batch_for`, which charges the fairness
-//! ledger at pop time and tracks the group as in flight), hands it to
-//! its [`GroupRuntime`](super::pool::GroupRuntime), blocks on that
-//! group's private barrier, and reports completion — so a heavy
-//! model's group mid-flight never gates a cheap model's next dispatch
-//! (the PR 4 single-dispatcher serialization this revision removes).
-//! Within one group, groups still pipeline back to back while requests
-//! inside a group run concurrently across the group's replicas.  A
-//! one-group configuration degenerates to exactly the old serial
-//! pipeline (asserted bit-equivalent in tests).
+//! `submit` / `submit_to` enqueue requests into the per-model
+//! [`ShardedBatcher`] (buckets keyed by padded length within each
+//! model's shard; DESIGN.md §6, §8, §13): a submit locks only the
+//! target model's shard and wakes only that model's dispatcher — no
+//! global batcher mutex, no `notify_all` thundering herd.  Every model
+//! group runs its *own* dispatcher thread parked on its own shard's
+//! condvar: each waits for the size-or-deadline policy to release one
+//! of its model's dispatch groups (`ShardedBatcher::next_batch`, which
+//! charges the fairness ledger at pop time and tracks the group as in
+//! flight), hands it to its [`GroupRuntime`](super::pool::GroupRuntime),
+//! blocks on that group's barrier over the shared core budget, and
+//! reports completion — so a heavy model's group mid-flight never
+//! gates a cheap model's next dispatch, and a panicking dispatch (or a
+//! poisoned shard lock) degrades one tenant, never the router.  Within
+//! one group, groups still pipeline back to back while requests inside
+//! a group run concurrently across the group's replicas.  A one-group
+//! configuration degenerates to exactly the old serial pipeline
+//! (asserted bit-equivalent in tests).
 //!
 //! Alongside the dispatchers, one autoscaler thread ticks the
 //! SLO-aware control loop (`coordinator::autoscale`) over every
@@ -24,15 +28,16 @@
 //! `min_replicas`.
 
 use super::autoscale::{predicted_work_ms, tick_group, AutoscalePolicy, GroupScaleState};
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, ShardedBatcher};
 use super::engine::EngineReplica;
 use super::metrics::Metrics;
 use super::pool::ReplicaPool;
 use super::registry::ModelGroup;
 use crate::sim::CostModel;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -72,12 +77,6 @@ pub struct Response {
     pub error: Option<String>,
 }
 
-struct Shared {
-    batcher: Mutex<Batcher<Request>>,
-    available: Condvar,
-    shutdown: AtomicBool,
-}
-
 /// Per-model endpoint bookkeeping: the serveable length range of the
 /// model's replica group (max of `min_seq_len`, min of `seq_len`,
 /// because fan-out within the group is length-blind round-robin) plus
@@ -94,7 +93,7 @@ struct Endpoint {
 }
 
 pub struct Router {
-    shared: Arc<Shared>,
+    batcher: Arc<ShardedBatcher<Request>>,
     pub metrics: Arc<Metrics>,
     /// one dispatcher per model group, in model-index order
     dispatchers: Vec<JoinHandle<()>>,
@@ -141,6 +140,22 @@ impl Router {
         autoscale: AutoscalePolicy,
         metrics: Arc<Metrics>,
     ) -> Router {
+        Router::start_multi_cores(groups, policy, autoscale, metrics, None)
+    }
+
+    /// [`start_multi_with`](Router::start_multi_with) with an explicit
+    /// global core budget: `cores` executor worker threads shared by
+    /// every group (`--cores` on the CLI; `None` = Σ group widths, the
+    /// no-oversubscription default).  Total executor threads stay at
+    /// the budget even when Σ `max_replicas` exceeds it (DESIGN.md
+    /// §13).
+    pub fn start_multi_cores(
+        groups: Vec<ModelGroup>,
+        policy: BatchPolicy,
+        autoscale: AutoscalePolicy,
+        metrics: Arc<Metrics>,
+        cores: Option<usize>,
+    ) -> Router {
         assert!(!groups.is_empty(), "router needs at least one model group");
         for (i, g) in groups.iter().enumerate() {
             assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
@@ -164,35 +179,30 @@ impl Router {
             endpoints.iter().map(|e| (e.name.as_str(), e.weight)).collect();
         metrics.ensure_models(&specs);
         let weights: Vec<u64> = endpoints.iter().map(|e| e.weight).collect();
-        let mut batcher = Batcher::new(policy);
-        batcher.set_model_weights(&weights);
-        let shared = Arc::new(Shared {
-            batcher: Mutex::new(batcher),
-            available: Condvar::new(),
-            shutdown: AtomicBool::new(false),
-        });
-        let pool = Arc::new(ReplicaPool::new_multi(groups, Arc::clone(&metrics)));
+        let batcher = Arc::new(ShardedBatcher::new(policy, &weights));
+        let pool =
+            Arc::new(ReplicaPool::new_multi_with_budget(groups, Arc::clone(&metrics), cores));
         let dispatchers = (0..pool.group_count())
             .map(|g| {
-                let sh = Arc::clone(&shared);
+                let batcher = Arc::clone(&batcher);
                 let rt = Arc::clone(pool.group(g).expect("group exists"));
                 std::thread::Builder::new()
                     .name(format!("swifttron-dispatch-{}", rt.model()))
-                    .spawn(move || dispatch_group_loop(sh, rt))
+                    .spawn(move || dispatch_group_loop(batcher, rt))
                     .expect("spawn dispatcher")
             })
             .collect();
         let autoscaler = {
-            let sh = Arc::clone(&shared);
+            let batcher = Arc::clone(&batcher);
             let pool = Arc::clone(&pool);
             let metrics = Arc::clone(&metrics);
             std::thread::Builder::new()
                 .name("swifttron-autoscale".into())
-                .spawn(move || autoscale_loop(sh, pool, metrics, autoscale))
+                .spawn(move || autoscale_loop(batcher, pool, metrics, autoscale))
                 .expect("spawn autoscaler")
         };
         Router {
-            shared,
+            batcher,
             metrics,
             dispatchers,
             autoscaler: Some(autoscaler),
@@ -201,6 +211,12 @@ impl Router {
             policy,
             endpoints,
         }
+    }
+
+    /// Worker threads in the router's global core budget (DESIGN.md
+    /// §13).
+    pub fn core_budget(&self) -> usize {
+        self.pool.core_budget()
     }
 
     /// Active replicas currently serving `model` (autoscaler gauge read
@@ -330,23 +346,17 @@ impl Router {
         let cost =
             ep.cost.as_ref().map(|c| c.predict_cycles(len)).unwrap_or(padded as u64);
         self.metrics.record_request_for(model, cost);
-        {
-            let mut b = self.shared.batcher.lock().unwrap();
-            b.push_costed(
-                Request {
-                    id,
-                    model,
-                    tokens,
-                    padded_len: padded,
-                    cost,
-                    submitted: Instant::now(),
-                    reply,
-                },
-                model,
-                len,
-                cost,
-            );
-        }
+        // The push locks only `model`'s shard and `notify_one`s only
+        // that model's dispatcher (DESIGN.md §13): a submit never
+        // contends with another model's queue and never wakes another
+        // model's dispatcher — the global-mutex + `notify_all`
+        // thundering herd of the single-batcher pipeline is gone.
+        self.batcher.push_costed(
+            Request { id, model, tokens, padded_len: padded, cost, submitted: Instant::now(), reply },
+            model,
+            len,
+            cost,
+        );
         // Token accounting only for serveable requests, and never more
         // padding than the largest geometry the model's replicas
         // actually run — rejected requests and bucket boundaries beyond
@@ -354,16 +364,27 @@ impl Router {
         if len >= ep.min_len.max(1) && len <= ep.max_len {
             self.metrics.record_tokens(model, len, padded.min(ep.max_len));
         }
-        // notify_all, not notify_one: every model group parks on this
-        // condvar, and a single wakeup could land on another model's
-        // dispatcher, leaving the submitted request to wait out the
-        // owner's full park timeout.
-        self.shared.available.notify_all();
         id
     }
 
     pub fn queue_len(&self) -> usize {
-        self.shared.batcher.lock().unwrap().len()
+        self.batcher.len()
+    }
+
+    /// Chaos test hook: poison `model`'s shard lock exactly as a
+    /// dispatcher panicking while holding it would.  Returns whether
+    /// the model exists.  The regression in `rust/tests/chaos.rs`
+    /// drives this to pin the poisoned-lock blast radius to one tenant
+    /// (pre-§13, one poisoned global batcher mutex killed the router).
+    #[doc(hidden)]
+    pub fn poison_model_shard(&self, model: &str) -> bool {
+        match self.model_index(model) {
+            Some(idx) => {
+                self.batcher.poison_shard(idx);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Drain the queue and stop the pipeline: every per-group
@@ -373,15 +394,10 @@ impl Router {
     /// before this call is dispatched and replied to (property-tested
     /// in `rust/tests/prop_invariants.rs`).
     pub fn shutdown(mut self) {
-        // The flag must flip while holding the mutex the dispatchers'
-        // condvar predicate is checked under, or a store between a
-        // predicate check and wait_timeout loses the wakeup and that
-        // group's drain stalls for up to max_wait.
-        {
-            let _b = self.shared.batcher.lock().unwrap();
-            self.shared.shutdown.store(true, Ordering::SeqCst);
-        }
-        self.shared.available.notify_all();
+        // ShardedBatcher::shutdown stores the flag, then bounces every
+        // shard's lock and broadcasts its condvar — no dispatcher can
+        // lose the wakeup between its predicate check and its park.
+        self.batcher.shutdown();
         for d in self.dispatchers.drain(..) {
             let _ = d.join();
         }
@@ -391,52 +407,46 @@ impl Router {
     }
 }
 
-/// One model group's dispatcher: pop own-model groups from the shared
-/// batcher (charging fairness at pop time), run each on the group's
-/// private runtime barrier, report completion.  On shutdown it drains
-/// its model's remaining backlog before exiting, so no queued request
-/// is ever dropped.
-fn dispatch_group_loop(sh: Arc<Shared>, rt: Arc<super::pool::GroupRuntime>) {
+/// One model group's dispatcher: block on the model's own shard for
+/// the next dispatch group (fairness charged at pop time), run it on
+/// the group runtime's barrier over the shared core budget, report
+/// completion.  On shutdown it drains its model's remaining backlog
+/// before exiting, so no queued request is ever dropped.
+///
+/// The dispatch itself runs under `catch_unwind`: the dispatch path is
+/// engineered not to panic (replica panics are captured at the job
+/// boundary, a fully-retired group answers typed errors), but if an
+/// invariant ever breaks anyway, the panic costs this model one group
+/// — the completion report still lands, the loop keeps serving, and no
+/// other tenant's dispatcher is touched (ISSUE 9: the poisoned-lock
+/// cascade this architecture removes).
+fn dispatch_group_loop(batcher: Arc<ShardedBatcher<Request>>, rt: Arc<super::pool::GroupRuntime>) {
     let g = rt.model_index();
-    loop {
-        let group = {
-            let mut b = sh.batcher.lock().unwrap();
-            loop {
-                let shutting = sh.shutdown.load(Ordering::SeqCst);
-                let queued = b.queued_for(g);
-                if queued == 0 && shutting {
-                    return;
-                }
-                if b.ready_for(g, Instant::now()) || (shutting && queued > 0) {
-                    break b.take_batch_for(g);
-                }
-                // park_duration_for never panics, whatever the queue
-                // did between the predicate check and here: an empty
-                // model queue parks the bounded default, expired
-                // deadlines park zero.
-                let timeout = b.park_duration_for(g, Instant::now());
-                let (guard, _) = sh.available.wait_timeout(b, timeout).unwrap();
-                b = guard;
-            }
-        };
+    while let Some(group) = batcher.next_batch(g) {
         let n = group.len();
-        rt.dispatch(group);
+        if catch_unwind(AssertUnwindSafe(|| rt.dispatch(group))).is_err() {
+            eprintln!(
+                "swifttron-dispatch-{}: dispatch panicked; {n} request(s) dropped \
+                 without replies, pipeline continues",
+                rt.model()
+            );
+        }
         // Completion report closes the pop's in-flight window: the
         // fairness epoch may reset and the autoscaler's backlog signal
         // drops only once the group has actually drained.
-        sh.batcher.lock().unwrap().complete(g, n);
+        batcher.complete(g, n);
     }
 }
 
 /// The SLO autoscaler control loop: every `policy.interval`, sample
-/// each managed group's backlog (queued + in flight, under one short
-/// batcher lock) and apply the hysteresis decision
+/// each managed group's backlog (queued + in flight, read lock-free
+/// off the shard atomics) and apply the hysteresis decision
 /// (`coordinator::autoscale`).  Managed means scalable *or* merely
 /// respawnable (a factory but no SLO / headroom): the latter never
 /// scale with load but still get floor repair after a fault retires a
 /// replica.  Exits when the router shuts down.
 fn autoscale_loop(
-    sh: Arc<Shared>,
+    batcher: Arc<ShardedBatcher<Request>>,
     pool: Arc<ReplicaPool>,
     metrics: Arc<Metrics>,
     policy: AutoscalePolicy,
@@ -455,18 +465,15 @@ fn autoscale_loop(
     }
     let mut states: Vec<GroupScaleState> =
         scalable.iter().map(|_| GroupScaleState::new()).collect();
-    while !sh.shutdown.load(Ordering::SeqCst) {
+    while !batcher.is_shutting_down() {
         std::thread::sleep(policy.interval);
-        let backlog: Vec<usize> = {
-            let b = sh.batcher.lock().unwrap();
-            scalable
-                .iter()
-                .map(|rt| {
-                    let g = rt.model_index();
-                    b.queued_for(g) + b.in_flight_for(g)
-                })
-                .collect()
-        };
+        let backlog: Vec<usize> = scalable
+            .iter()
+            .map(|rt| {
+                let g = rt.model_index();
+                batcher.queued_for(g) + batcher.in_flight_for(g)
+            })
+            .collect();
         for (i, rt) in scalable.iter().enumerate() {
             tick_group(rt, &mut states[i], backlog[i], &metrics, &policy);
         }

@@ -4,7 +4,8 @@ use std::process::exit;
 use std::sync::Arc;
 use swifttron::baselines::{comparison_table, fp32_asic_report, gpu_inference_ms, GpuModel};
 use swifttron::coordinator::{
-    BatchPolicy, EngineReplica, FunctionalEngine, InferenceEngine, Metrics, ModelRegistry, Router,
+    AutoscalePolicy, BatchPolicy, EngineReplica, FunctionalEngine, InferenceEngine, Metrics,
+    ModelGroup, ModelRegistry, Router,
 };
 use swifttron::model::{Geometry, Manifest};
 use swifttron::runtime::Engine;
@@ -59,6 +60,9 @@ fn usage() -> String {
      \x20          (mux = non-blocking SWWIRE1 binary multiplexer with text\n\
      \x20           auto-detection and SLO load shedding; threads = legacy\n\
      \x20           thread-per-connection text server)\n\
+     \x20          [--cores N]  global executor core budget shared by every\n\
+     \x20          model group (default: sum of group max replicas; smaller\n\
+     \x20          values let many tenants oversubscribe safely)\n\
      \x20 tune     [--model <preset>]       design-space autotuner: search HwConfig\n\
      \x20          [--area MM2 --power W]   candidates under an area/power budget\n\
      \x20          (latency from the analytical CostModel, cost from the\n\
@@ -243,9 +247,19 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         )
         .opt("front", "threads", "front door: mux (SWWIRE1 binary multiplexer) | threads")
         .opt("max-conns", "1024", "concurrent-connection cap (typed busy rejection past it)")
+        .opt("cores", "", "global executor core budget (default: sum of group max replicas)")
         .parse(rest)?;
     let front = p.get("front").to_string();
     let max_conns = p.get_usize("max-conns")?;
+    let cores = if p.get("cores").is_empty() {
+        None
+    } else {
+        let n = p.get_usize("cores")?;
+        if n == 0 {
+            return Err("--cores must be positive".into());
+        }
+        Some(n)
+    };
     let metrics = Arc::new(Metrics::new());
     let policy = BatchPolicy { max_batch: p.get_usize("max-batch")?, ..Default::default() };
 
@@ -273,7 +287,13 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
                 7,
             )?;
         }
-        let router = Arc::new(Router::start_multi(reg.into_groups(), policy, metrics));
+        let router = Arc::new(Router::start_multi_cores(
+            reg.into_groups(),
+            policy,
+            AutoscalePolicy::default(),
+            metrics,
+            cores,
+        ));
         return front_serve(router, p.get("addr"), &front, max_conns);
     }
 
@@ -298,7 +318,13 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         }
         other => return Err(format!("unknown engine {other:?} (expected pjrt | functional)")),
     };
-    let router = Arc::new(Router::start(engines, policy, metrics));
+    let router = Arc::new(Router::start_multi_cores(
+        vec![ModelGroup::fixed("default", engines, 1)],
+        policy,
+        AutoscalePolicy::default(),
+        metrics,
+        cores,
+    ));
     front_serve(router, p.get("addr"), &front, max_conns)
 }
 

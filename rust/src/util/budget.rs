@@ -1,0 +1,366 @@
+//! Global core budget for replica execution (DESIGN.md §13).
+//!
+//! PR 5 gave every model group a private [`ThreadPool`] sized to its
+//! `max_replicas`, so total executor threads = Σ maxima — with many
+//! tenants that oversubscribes the host by the sum of worst cases even
+//! when most groups sit idle.  [`BudgetExec`] replaces the private
+//! pools with one router-owned worker pool of exactly `budget` threads
+//! that groups borrow against: each group enqueues cost-tagged jobs
+//! into its own queue, and workers pick the next job from the group
+//! with the least CostModel-charged work per unit weight (the same
+//! deficit-round-robin rule the dispatch ledger uses), so cross-model
+//! fairness is enforced at the executor too and Σ `max_replicas` can
+//! exceed the budget safely.
+//!
+//! [`ThreadPool`]: crate::util::threadpool::ThreadPool
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Poison-recovering lock (the ISSUE 9 rule for every serving-path
+/// mutex): a worker that panicked between statements leaves the queue
+/// structurally sound, so taking the guard over beats cascading the
+/// panic into every producer and worker that touches the pool next.
+fn lock_recover<S>(m: &Mutex<S>) -> MutexGuard<'_, S> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+struct ExecState {
+    /// One FIFO of `(cost, job)` per group.
+    queues: Vec<VecDeque<(u64, Job)>>,
+    /// Executor-side DRR ledger: cost charged per group at job pickup.
+    charged: Vec<u64>,
+    /// Queued + running jobs across all groups; the decrement that
+    /// lands on zero resets the ledger (idle pool carries no debt).
+    outstanding: usize,
+}
+
+struct Inner {
+    state: Mutex<ExecState>,
+    work: Condvar,
+    /// Fair-share weight per group (fixed at construction).
+    weights: Vec<u64>,
+    stop: AtomicBool,
+    panics: AtomicUsize,
+}
+
+/// Count-down latch for one [`BudgetExec::run_batch`] call.  Jobs hold
+/// a [`LatchGuard`] whose `Drop` counts down, so a panicking job still
+/// releases the waiting dispatcher instead of deadlocking it.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn count_down(&self) {
+        let mut r = lock_recover(&self.remaining);
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = lock_recover(&self.remaining);
+        while *r > 0 {
+            r = match self.done.wait(r) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+}
+
+struct LatchGuard(Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        self.0.count_down();
+    }
+}
+
+/// A fixed budget of worker threads shared by every model group, with
+/// weighted-fair job pickup across per-group queues.
+pub struct BudgetExec {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl BudgetExec {
+    /// `budget` worker threads over `weights.len()` group queues.
+    /// Weights must be positive (they are the same per-model fair-share
+    /// weights the dispatch ledger uses).
+    pub fn new(budget: usize, weights: &[u64]) -> Self {
+        assert!(budget > 0, "core budget must be positive");
+        assert!(!weights.is_empty(), "an executor needs at least one group");
+        assert!(weights.iter().all(|&w| w > 0), "group weights must be positive");
+        let inner = Arc::new(Inner {
+            state: Mutex::new(ExecState {
+                queues: (0..weights.len()).map(|_| VecDeque::new()).collect(),
+                charged: vec![0; weights.len()],
+                outstanding: 0,
+            }),
+            work: Condvar::new(),
+            weights: weights.to_vec(),
+            stop: AtomicBool::new(false),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..budget)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("swifttron-exec-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn budget worker")
+            })
+            .collect();
+        BudgetExec { inner, workers }
+    }
+
+    /// Number of worker threads — the whole core budget, regardless of
+    /// how many groups share it.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Number of group queues.
+    pub fn groups(&self) -> usize {
+        self.inner.weights.len()
+    }
+
+    /// Cost charged to `group`'s executor ledger so far this epoch.
+    pub fn charged(&self, group: usize) -> u64 {
+        lock_recover(&self.inner.state).charged.get(group).copied().unwrap_or(0)
+    }
+
+    /// Number of jobs that panicked since construction.
+    pub fn panics(&self) -> usize {
+        self.inner.panics.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue one cost-tagged job on `group`'s queue.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, group: usize, cost: u64, f: F) {
+        let mut st = lock_recover(&self.inner.state);
+        assert!(group < st.queues.len(), "unknown executor group {group}");
+        st.queues[group].push_back((cost, Box::new(f)));
+        st.outstanding += 1;
+        drop(st);
+        self.inner.work.notify_one();
+    }
+
+    /// Run a batch of cost-tagged jobs for `group`, blocking until all
+    /// have finished and returning their values in input order.  Panics
+    /// if a job panicked (mirroring `ThreadPool::run_batch`); the latch
+    /// still counts a panicked job down, so the caller is released —
+    /// never deadlocked — before the panic is re-reported.
+    pub fn run_batch<T, F>(&self, group: usize, jobs: Vec<(u64, F)>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let slots: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let latch = Arc::new(Latch { remaining: Mutex::new(n), done: Condvar::new() });
+        for (i, (cost, job)) in jobs.into_iter().enumerate() {
+            let slots = Arc::clone(&slots);
+            let guard = LatchGuard(Arc::clone(&latch));
+            self.execute(group, cost, move || {
+                let _count_down_even_on_panic = guard;
+                let v = job();
+                lock_recover(&slots)[i] = Some(v);
+            });
+        }
+        latch.wait();
+        Arc::try_unwrap(slots)
+            .unwrap_or_else(|_| panic!("batch slots still shared"))
+            .into_inner()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .into_iter()
+            .map(|o| o.expect("job panicked — see panics()"))
+            .collect()
+    }
+}
+
+/// The group whose next job should run: least charged cost per unit
+/// weight among nonempty queues (u128 cross-multiplication, no
+/// division), ties to the lowest group index.
+fn pick(st: &ExecState, weights: &[u64]) -> Option<usize> {
+    let mut best: Option<(usize, u64, u64)> = None; // (group, charged, weight)
+    for (g, q) in st.queues.iter().enumerate() {
+        if q.is_empty() {
+            continue;
+        }
+        let cg = st.charged[g];
+        let wg = weights.get(g).copied().unwrap_or(1).max(1);
+        let better = match best {
+            None => true,
+            Some((_, cb, wb)) => (cg as u128) * wb as u128 < (cb as u128) * wg as u128,
+        };
+        if better {
+            best = Some((g, cg, wg));
+        }
+    }
+    best.map(|(g, _, _)| g)
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let picked = {
+            let mut st = lock_recover(&inner.state);
+            loop {
+                if let Some(g) = pick(&st, &inner.weights) {
+                    let (cost, job) = st.queues[g].pop_front().expect("picked queue nonempty");
+                    // charge at pickup so concurrent picks see the debt
+                    // immediately; zero-cost jobs still pay one unit so
+                    // a flood of them cannot starve the ledger
+                    st.charged[g] = st.charged[g].saturating_add(cost.max(1));
+                    break Some(job);
+                }
+                // pick-before-stop ordering drains every queue before a
+                // worker exits: shutdown completes queued work
+                if inner.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                st = match inner.work.wait(st) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+        };
+        let Some(job) = picked else { return };
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            inner.panics.fetch_add(1, Ordering::SeqCst);
+        }
+        let mut st = lock_recover(&inner.state);
+        st.outstanding -= 1;
+        if st.outstanding == 0 {
+            // idle executor carries no fairness debt forward (the same
+            // epoch-reset contract as the dispatch ledger)
+            st.charged.iter_mut().for_each(|c| *c = 0);
+        }
+    }
+}
+
+impl Drop for BudgetExec {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        {
+            let _guard = lock_recover(&self.inner.state);
+            self.inner.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn thread_count_is_the_budget_not_the_group_sum() {
+        let exec = BudgetExec::new(3, &[1, 1, 1, 1, 1, 1, 1, 1]);
+        assert_eq!(exec.threads(), 3);
+        assert_eq!(exec.groups(), 8);
+    }
+
+    #[test]
+    fn runs_all_jobs_across_groups() {
+        let exec = Arc::new(BudgetExec::new(2, &[1, 1, 1]));
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..90 {
+            let c = Arc::clone(&counter);
+            exec.execute(i % 3, 1, move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // drop joins the workers, which drain every queue first
+        drop(Arc::try_unwrap(exec).unwrap_or_else(|_| panic!("exec still shared")));
+        assert_eq!(counter.load(Ordering::SeqCst), 90);
+    }
+
+    #[test]
+    fn run_batch_preserves_order() {
+        let exec = BudgetExec::new(3, &[1]);
+        let jobs: Vec<_> = (0..50).map(|i| (1u64, move || i * 2)).collect();
+        assert_eq!(exec.run_batch(0, jobs), (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_job_releases_the_latch_and_is_counted() {
+        let exec = BudgetExec::new(2, &[1]);
+        let jobs: Vec<(u64, Box<dyn FnOnce() -> usize + Send>)> = vec![
+            (1, Box::new(|| 7usize)),
+            (1, Box::new(|| panic!("boom"))),
+            (1, Box::new(|| 9usize)),
+        ];
+        let out = catch_unwind(AssertUnwindSafe(|| exec.run_batch(0, jobs)));
+        assert!(out.is_err(), "run_batch re-reports the job panic");
+        assert_eq!(exec.panics(), 1);
+        // the pool survives and keeps serving
+        assert_eq!(exec.run_batch(0, vec![(1u64, || 11usize)]), vec![11]);
+    }
+
+    #[test]
+    fn weighted_pick_splits_worker_time_by_group_weight() {
+        // One worker, two groups at weights 3:1, every job the same
+        // cost and duration: the DRR pick should interleave pickups at
+        // ~3:1, which shows up as charged-ledger proportionality while
+        // both queues stay backlogged.
+        let exec = Arc::new(BudgetExec::new(1, &[3, 1]));
+        let served = Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        // hold the single worker so both queues fill before any pick
+        {
+            let gate = Arc::clone(&gate);
+            exec.execute(0, 1, move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        for _ in 0..40 {
+            for (g, cost) in [(0usize, 10u64), (1usize, 10u64)] {
+                let served = Arc::clone(&served);
+                exec.execute(g, cost, move || {
+                    served.lock().unwrap().push(g);
+                });
+            }
+        }
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        // first 20 picks happen while both queues are still backlogged
+        let prefix = loop {
+            let s = served.lock().unwrap();
+            if s.len() >= 20 {
+                break s[..20].to_vec();
+            }
+            drop(s);
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        let g0 = prefix.iter().filter(|&&g| g == 0).count();
+        assert!(
+            (13..=17).contains(&g0),
+            "weight-3 group took {g0}/20 of a contended worker (want ~15)"
+        );
+        drop(Arc::try_unwrap(exec).unwrap_or_else(|_| panic!("exec still shared")));
+    }
+}

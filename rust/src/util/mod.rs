@@ -7,6 +7,7 @@
 //! sufficient for this system.
 
 pub mod bench;
+pub mod budget;
 pub mod cli;
 pub mod json;
 pub mod prop;

@@ -205,7 +205,12 @@ fn accept_loop(
                 }
                 metrics.record_conn_opened();
                 if intakes[next % intakes.len()].send(s).is_err() {
-                    return; // io thread gone: shutting down
+                    // io thread gone: shutting down.  The connection was
+                    // already counted open above — close it out so the
+                    // gauge drains to zero instead of leaking one count
+                    // per accept raced against shutdown.
+                    metrics.record_conn_closed();
+                    return;
                 }
                 next += 1;
             }

@@ -340,6 +340,90 @@ fn cheap_model_p99_decouples_from_heavy_groups() {
 }
 
 #[test]
+fn fully_retired_group_keeps_a_finite_drain_estimate_and_floor_repairs() {
+    // ISSUE 9 regression through the floor-repair path: fault recovery
+    // retires a group's only replica (active = 0) and the factory
+    // refuses to respawn for a while.  The drain-time signal divides
+    // by active — unclamped, a fully-retired group scored inf/NaN and
+    // the autoscaler (plus wire admission, which shares the estimate)
+    // went blind.  The estimate must stay finite at zero replicas, the
+    // dead window must fail typed, and floor repair must regrow the
+    // group once the factory recovers.
+    use swifttron::workload::{ChaosReplica, DelayReplica};
+    let builds = Arc::new(AtomicUsize::new(0));
+    let allow_respawn = Arc::new(AtomicUsize::new(0));
+    let factory: ReplicaFactory = {
+        let builds = Arc::clone(&builds);
+        let allow = Arc::clone(&allow_respawn);
+        Arc::new(move || {
+            if builds.fetch_add(1, Ordering::SeqCst) == 0 {
+                // the group's founding replica panics on its first request
+                let inner: Arc<dyn EngineReplica> = Arc::new(DelayReplica::from_ms(0));
+                Ok(Arc::new(ChaosReplica::panic_at(inner, 0)) as Arc<dyn EngineReplica>)
+            } else if allow.load(Ordering::SeqCst) == 0 {
+                Err("factory down (chaos)".to_string())
+            } else {
+                Ok(Arc::new(DelayReplica::from_ms(0)) as Arc<dyn EngineReplica>)
+            }
+        })
+    };
+    let mut reg = ModelRegistry::new();
+    reg.register_group_scaled("flappy", 1, 2, 1, Some(20.0), factory).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::start_multi_with(
+        reg.into_groups(),
+        BatchPolicy::default(),
+        fast_autoscale(),
+        Arc::clone(&metrics),
+    );
+
+    let ask = |tokens: Vec<i32>| {
+        let (tx, rx) = channel();
+        router.submit_to("flappy", tokens, tx);
+        rx.recv_timeout(Duration::from_secs(10)).expect("reply channel served")
+    };
+    // the founding replica panics; no peer => typed error + retirement
+    let first = ask(vec![1, 2]);
+    assert!(
+        first.error.as_deref().unwrap_or("").contains("panicked"),
+        "expected the backend panic error, got {:?}",
+        first.error
+    );
+    assert!(
+        eventually(Duration::from_secs(10), || router.active_replicas("flappy") == Some(0)),
+        "faulted slot never retired (at {:?})",
+        router.active_replicas("flappy")
+    );
+
+    // the dead window: estimates stay finite, requests fail typed
+    for i in 0..5 {
+        let d = router.predicted_delay_ms(0, 1.0);
+        assert!(
+            d.is_finite() && d >= 0.0,
+            "drain estimate went non-finite at zero replicas: {d}"
+        );
+        let r = ask(vec![1, 2, 3]);
+        assert!(
+            r.error.as_deref().unwrap_or("").contains("no active replicas"),
+            "request {i}: expected the typed dead-tenant error, got {:?}",
+            r.error
+        );
+    }
+
+    // factory heals: floor repair regrows the group and it serves again
+    allow_respawn.store(1, Ordering::SeqCst);
+    assert!(
+        eventually(Duration::from_secs(10), || router.active_replicas("flappy") >= Some(1)),
+        "floor repair never restored the floor after the factory recovered"
+    );
+    assert!(
+        eventually(Duration::from_secs(10), || ask(vec![4, 5]).error.is_none()),
+        "recovered group never served"
+    );
+    router.shutdown();
+}
+
+#[test]
 fn one_group_pipeline_is_bit_equivalent_to_serial_dispatch() {
     // The degenerate configuration the tentpole preserves: with one
     // model group, the per-group pipeline must produce byte-identical

@@ -1,9 +1,12 @@
-//! Chaos regression tests (ISSUE 6): a replica that panics mid-batch
-//! loses zero requests — the request is retried on another replica or
-//! answered with a typed error — the faulted slot is retired when the
-//! group can respawn, and the autoscaler's floor repair brings the
-//! group's replica gauge back to its floor.  Mock engines with pinned
-//! service times keep every leg deterministic under a fixed seed.
+//! Chaos regression tests (ISSUE 6, ISSUE 9): a replica that panics
+//! mid-batch loses zero requests — the request is retried on another
+//! replica or answered with a typed error — the faulted slot is
+//! retired when the group can respawn, and the autoscaler's floor
+//! repair brings the group's replica gauge back to its floor.  The
+//! ISSUE 9 legs pin the per-model blast radius of the sharded dispatch
+//! path: a poisoned shard lock or a fully-dead tenant degrades that
+//! one model, never the router.  Mock engines with pinned service
+//! times keep every leg deterministic under a fixed seed.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -184,6 +187,112 @@ fn faulted_group_recovers_to_its_floor_with_zero_loss() {
         "initial floor (2) plus the floor-repair respawn, saw {}",
         spawned.load(Ordering::SeqCst)
     );
+}
+
+/// One round trip through the router for `model`; panics if the reply
+/// never arrives (a hung tenant is exactly the regression these legs
+/// guard against).
+fn ask(router: &Router, model: &str) -> Response {
+    let (tx, rx) = channel();
+    router.submit_to(model, vec![1, 2, 3], tx);
+    rx.recv_timeout(Duration::from_secs(10)).expect("reply channel served")
+}
+
+#[test]
+fn poisoned_shard_lock_degrades_one_tenant_not_the_router() {
+    // ISSUE 9 regression: before the sharded batcher, a dispatcher
+    // panicking while holding the global batcher mutex poisoned it and
+    // every later `lock().unwrap()` — submit or pop, any model —
+    // panicked the whole router.  Now the poison lands on one model's
+    // shard, the shard recovers via lock-poison recovery, and no other
+    // tenant ever observes it.
+    let metrics = Arc::new(Metrics::new());
+    let mk = || vec![Arc::new(DelayReplica::from_ms(0)) as Arc<dyn EngineReplica>];
+    let groups =
+        vec![ModelGroup::fixed("a", mk(), 1), ModelGroup::fixed("b", mk(), 1)];
+    let router = Router::start_multi(groups, BatchPolicy::default(), Arc::clone(&metrics));
+    // both tenants serve before the fault
+    assert!(ask(&router, "a").error.is_none());
+    assert!(ask(&router, "b").error.is_none());
+
+    // panic while holding model a's shard lock (what a dispatcher
+    // crashing mid-pop would leave behind)
+    assert!(router.poison_model_shard("a"));
+
+    // the untouched tenant keeps serving...
+    for _ in 0..4 {
+        assert!(ask(&router, "b").error.is_none());
+    }
+    // ...and the poisoned tenant recovers instead of cascading
+    for _ in 0..4 {
+        assert!(ask(&router, "a").error.is_none());
+    }
+    router.shutdown();
+    assert_eq!(metrics.errors.load(Ordering::SeqCst), 0);
+}
+
+#[test]
+fn dead_tenant_answers_typed_errors_while_others_keep_serving() {
+    // ISSUE 9 regression for the other half of the cascade: a group
+    // whose every replica slot was retired by fault recovery used to
+    // trip `assert!(n > 0)` in the pool — a dispatcher panic.  Now the
+    // dead tenant answers typed errors and tenant b never notices.
+    let metrics = Arc::new(Metrics::new());
+    let mut reg = ModelRegistry::new();
+    // "dead": a single replica that panics on its first request, with
+    // a factory that refuses to respawn — after retirement the group
+    // is pinned at zero active replicas
+    let dead_factory: ReplicaFactory = {
+        let built = Arc::new(AtomicUsize::new(0));
+        Arc::new(move || {
+            if built.fetch_add(1, Ordering::SeqCst) == 0 {
+                let inner: Arc<dyn EngineReplica> = Arc::new(DelayReplica::from_ms(0));
+                Ok(Arc::new(ChaosReplica::panic_at(inner, 0)) as Arc<dyn EngineReplica>)
+            } else {
+                Err("spawn refused (chaos)".to_string())
+            }
+        })
+    };
+    reg.register_group_scaled("dead", 1, 1, 1, Some(50.0), dead_factory).unwrap();
+    let live_factory: ReplicaFactory =
+        Arc::new(|| Ok(Arc::new(DelayReplica::from_ms(0)) as Arc<dyn EngineReplica>));
+    reg.register_group_scaled("live", 1, 1, 1, Some(50.0), live_factory).unwrap();
+    let router = Router::start_multi_with(
+        reg.into_groups(),
+        BatchPolicy::default(),
+        fast_autoscale(),
+        Arc::clone(&metrics),
+    );
+
+    // first request to "dead" hits the panicking replica: no peer to
+    // retry on, so it carries the backend-panic error and the slot is
+    // retired on the spot
+    let first = ask(&router, "dead");
+    assert!(
+        first.error.as_deref().unwrap_or("").contains("panicked"),
+        "expected the backend panic error, got {:?}",
+        first.error
+    );
+    assert!(
+        eventually(Duration::from_secs(10), || router.active_replicas("dead") == Some(0)),
+        "faulted slot never retired (at {:?})",
+        router.active_replicas("dead")
+    );
+
+    // the dead tenant now fails typed — every request answered, none
+    // hung, no dispatcher panic — while the live tenant keeps serving
+    for i in 0..6 {
+        let r = ask(&router, "dead");
+        assert!(
+            r.error.as_deref().unwrap_or("").contains("no active replicas"),
+            "request {i}: expected the typed dead-tenant error, got {:?}",
+            r.error
+        );
+        assert!(ask(&router, "live").error.is_none(), "live tenant degraded at {i}");
+    }
+    router.shutdown();
+    let live = metrics.model(1);
+    assert_eq!(live.errors.load(Ordering::SeqCst), 0, "live tenant saw zero errors");
 }
 
 #[test]

@@ -9,11 +9,12 @@
 #![allow(dead_code)]
 
 use std::sync::Arc;
-use swifttron::coordinator::{EngineReplica, FunctionalEngine};
+use swifttron::coordinator::{EngineReplica, FunctionalEngine, ModelGroup};
 use swifttron::model::{Geometry, LayerConsts};
 use swifttron::sim::functional::{synthetic_consts, LayerWeights};
 use swifttron::sim::HwConfig;
 use swifttron::util::rng::Rng;
+use swifttron::workload::DelayReplica;
 
 /// Random small single-layer geometry for head-partitioning tests:
 /// always multi-head (heads 2..=4, dh in {4, 8, 12}) so the parallel
@@ -72,4 +73,19 @@ pub fn canonical_tokens(len: usize) -> Vec<i32> {
 pub fn functional_replicas(preset: &str, seed: u64, n: usize) -> Vec<Arc<dyn EngineReplica>> {
     FunctionalEngine::replica_group(preset, seed, HwConfig::paper(), n)
         .expect("synthetic replica group")
+}
+
+/// `n` fixed single-replica tenant groups `t0..t{n-1}` of zero-delay
+/// mock replicas, weighted `1..=n` — the many-tenant universe behind
+/// the sharded-dispatch contention legs (DESIGN.md §13): enough model
+/// shards that submit-side contention, not replica service time, is
+/// what the test or bench measures.
+pub fn tenant_groups(n: usize) -> Vec<ModelGroup> {
+    (0..n)
+        .map(|i| {
+            let replicas: Vec<Arc<dyn EngineReplica>> =
+                vec![Arc::new(DelayReplica::from_ms(0))];
+            ModelGroup::fixed(format!("t{i}"), replicas, i as u64 + 1)
+        })
+        .collect()
 }

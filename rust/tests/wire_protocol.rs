@@ -216,18 +216,34 @@ fn mux_rejects_past_its_connection_cap_in_both_dialects() {
     let server = MuxServer::start(Arc::clone(&router), "127.0.0.1:0", cfg).unwrap();
     // the only slot; accepted (and counted) before the probe arrives
     let held = WireClient::connect(server.local_addr()).unwrap();
-    // the probe sends nothing: at accept time the protocol is unknown,
-    // so the rejection carries both dialects, then the server closes
-    let mut probe = TcpStream::connect(server.local_addr()).unwrap();
-    probe.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
-    let mut bytes = Vec::new();
-    probe.read_to_end(&mut bytes).unwrap();
-    let (n, frame) = encode::decode_response(&bytes).unwrap().expect("busy frame first");
-    assert_eq!(frame, ResponseFrame::Busy { limit: 1 });
-    let rest = String::from_utf8_lossy(&bytes[n..]);
-    assert!(rest.contains("\"error\":\"busy\""), "text dialect missing: {rest:?}");
-    assert!(metrics.conns_rejected.load(Ordering::SeqCst) >= 1);
+    // three probes, each sending nothing: at accept time the protocol
+    // is unknown, so every rejection carries both dialects, then the
+    // server closes.  One connection = both payloads but exactly ONE
+    // rejected count — the shed counters must not double-charge a
+    // rejection just because it answers in two dialects.
+    for _ in 0..3 {
+        let mut probe = TcpStream::connect(server.local_addr()).unwrap();
+        probe.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+        let mut bytes = Vec::new();
+        probe.read_to_end(&mut bytes).unwrap();
+        let (n, frame) = encode::decode_response(&bytes).unwrap().expect("busy frame first");
+        assert_eq!(frame, ResponseFrame::Busy { limit: 1 });
+        let rest = String::from_utf8_lossy(&bytes[n..]);
+        assert!(rest.contains("\"error\":\"busy\""), "text dialect missing: {rest:?}");
+    }
+    assert_eq!(metrics.conns_rejected.load(Ordering::SeqCst), 3, "one count per rejected conn");
+    // the held client is the only accepted connection; rejected probes
+    // must touch neither the accepted counter nor the open gauge
+    assert_eq!(metrics.conns_accepted.load(Ordering::SeqCst), 1);
+    assert_eq!(metrics.conns_open.load(Ordering::SeqCst), 1);
     drop(held);
+    // the io thread notices the hangup and settles the gauge back to
+    // zero — an accepted conn is closed exactly once, never leaked
+    let drained = eventually(Duration::from_secs(10), || {
+        metrics.conns_open.load(Ordering::SeqCst) == 0
+    });
+    assert!(drained, "open-connection gauge never drained after hangup");
+    assert_eq!(metrics.conns_rejected.load(Ordering::SeqCst), 3, "close must not re-count");
     server.shutdown();
     stop(router);
 }
@@ -245,7 +261,11 @@ fn text_server_rejects_past_its_connection_cap() {
     BufReader::new(probe).read_line(&mut line).unwrap();
     assert!(line.contains("\"error\":\"busy\""), "{line}");
     assert!(line.contains("\"max_conns\":2"), "{line}");
-    assert!(metrics.conns_rejected.load(Ordering::SeqCst) >= 1);
+    // exactly one rejection for the one probe, and the probe must not
+    // have leaked into the accepted counter or the open gauge
+    assert_eq!(metrics.conns_rejected.load(Ordering::SeqCst), 1);
+    assert_eq!(metrics.conns_accepted.load(Ordering::SeqCst), 2);
+    assert_eq!(metrics.conns_open.load(Ordering::SeqCst), 2);
 
     // freeing a slot re-opens the door (the handler exits on EOF, so
     // the gauge decays asynchronously — retry until admitted)
