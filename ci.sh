@@ -58,8 +58,13 @@ echo "$row"
 
 # Smoke-sized serving bench leg: exercises the concurrency-leg
 # acceptance assertions (tiny p99 >= 2x over the serial dispatcher,
-# shares within 10% of weights) plus the dispatch contention smoke leg
-# (many-tenant submit flood, merged under the `dispatch` key) and
+# shares within 10% of weights), the dispatch contention smoke leg
+# (many-tenant submit flood, merged under the `dispatch` key), and the
+# INT4 cascade legs (DESIGN.md §14) — served-cycle reduction >= 25% at
+# >= 99% top-1 agreement at the default escalation margin, the pool
+# escalation-ledger invariants, and the byte-exact comparison against
+# the committed BENCH_cascade_smoke.json (rebaseline with
+# `-- --smoke --update` after an intentional numerics change) — and
 # refreshes BENCH_serving.json.
 echo "-- serving bench smoke leg --"
 t_start=$SECONDS

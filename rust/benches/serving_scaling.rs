@@ -11,7 +11,13 @@
 //! and the **dispatch contention leg**: a many-tenant small-request
 //! flood measuring submit-side throughput over producer counts on the
 //! per-model-shard submit path (EXPERIMENTS.md §Contention, DESIGN.md
-//! §13).
+//! §13) — and the **cascade leg** (EXPERIMENTS.md §Cascade, DESIGN.md
+//! §14): the INT4 front tier + margin-gated INT8 escalation study
+//! (served-cycle reduction vs top-1 agreement over the escalation
+//! threshold) plus the pool-mechanics sweep through the real cascade
+//! registration; the deterministic smoke subset is pinned by the
+//! committed `BENCH_cascade_smoke.json` (rebaseline with
+//! `-- --smoke --update` after an intentional numerics change).
 //!
 //! Run: `cargo bench --bench serving_scaling` — or
 //! `cargo bench --bench serving_scaling -- --smoke` for the
@@ -29,12 +35,14 @@
 //! latency improves >= 2x over the serial dispatcher baseline while
 //! served-token shares stay within 10% of the configured weights.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 use swifttron::coordinator::{
     BatchPolicy, Batcher, EngineReplica, FunctionalEngine, Metrics, ModelGroup, ModelRegistry,
-    ReplicaPool, Request, Router,
+    ReplicaPool, Request, Router, SyntheticModel, DEFAULT_ESCALATE_MARGIN,
 };
 use swifttron::model::Geometry;
 use swifttron::quant::{i_matmul, i_matmul_tiled};
@@ -45,7 +53,7 @@ use swifttron::sim::{CostModel, HwConfig};
 use swifttron::util::bench::{fmt_time, merge_bench_json, Bench, Table};
 use swifttron::util::json::{obj, Json};
 use swifttron::util::rng::Rng;
-use swifttron::util::threadpool::default_parallelism;
+use swifttron::util::threadpool::{default_parallelism, run_scoped, tile_ranges};
 
 const REQUESTS: usize = 96;
 
@@ -217,6 +225,7 @@ fn concurrency_leg(smoke: bool) -> Json {
                     padded_len: policy.padded_len(heavy_len),
                     cost: policy.padded_len(heavy_len) as u64,
                     submitted: Instant::now(),
+                    origin: None,
                     reply: tx,
                 },
                 1,
@@ -236,6 +245,7 @@ fn concurrency_leg(smoke: bool) -> Json {
                 padded_len: policy.padded_len(len),
                 cost: policy.padded_len(len) as u64,
                 submitted: Instant::now(),
+                origin: None,
                 reply: tx,
             },
             0,
@@ -554,8 +564,433 @@ fn dispatch_contention_leg(smoke: bool) -> Json {
     ])
 }
 
+const CASCADE_SNAPSHOT_PATH: &str = "BENCH_cascade_smoke.json";
+const CASCADE_SNAPSHOT_SCHEMA: &str = "swifttron-cascade-smoke-v1";
+/// The deterministic request count the committed snapshot pins; the
+/// full (non-smoke) run extends the same rng stream, so its first
+/// `CASCADE_SMOKE_REQUESTS` records reproduce the smoke subset
+/// byte-for-byte.
+const CASCADE_SMOKE_REQUESTS: usize = 200;
+const CASCADE_MODEL_SEED: u64 = 11;
+const CASCADE_REQUEST_SEED: u64 = 0xCA5CADE;
+/// Escalation thresholds swept by the acceptance study; must include
+/// `DEFAULT_ESCALATE_MARGIN` (the CLI default the assertions gate on).
+const CASCADE_THRESHOLDS: [i64; 6] = [0, 2000, 4000, 6000, 8000, 12000];
+
+/// One acceptance record: the INT4 tier's confidence margin and
+/// whether its label agrees with the INT8 tier on one request.
+struct CascadeRec {
+    len: usize,
+    agree: bool,
+    margin4: i64,
+}
+
+/// Top-1 logit margin — the pool's confidence gate
+/// (`coordinator::pool`), mirrored here so the offline study sweeps
+/// the exact quantity the serving path escalates on.
+fn top1_margin(logits: &[i64]) -> i64 {
+    if logits.len() < 2 {
+        return i64::MAX;
+    }
+    let (mut top, mut second) = (i64::MIN, i64::MIN);
+    for &l in logits {
+        if l > top {
+            second = top;
+            top = l;
+        } else if l > second {
+            second = l;
+        }
+    }
+    top.saturating_sub(second)
+}
+
+/// Cascade acceptance leg (EXPERIMENTS.md §Cascade, DESIGN.md §14):
+/// every request served by both the packed-INT4 tier and the INT8 tier
+/// of the same synthetic bundle (one encoder layer at `roberta_base`
+/// width — the depth the INT4 grid holds its accuracy at), then the
+/// escalation threshold swept offline over the recorded margins.
+/// Served cost is charged in `CostModel` cycles on the equal-silicon
+/// pair (`HwConfig::sized_to` vs its `int4_variant`): the cascade at a
+/// threshold serves every request on INT4 and re-serves the
+/// below-margin ones on INT8, so its cycles are `c4 + esc * c8`
+/// against the pure-INT8 baseline's `c8`.  Hard acceptance bounds at
+/// `DEFAULT_ESCALATE_MARGIN`: top-1 agreement >= 99% of the INT8
+/// labels AND served-cycle reduction >= 25%.  Returns the JSON leg and
+/// the deterministic snapshot payload for the smoke-subset gate.
+fn cascade_acceptance_leg(smoke: bool) -> (Json, String) {
+    let geo = Geometry::new(768, 12, 256, 3072, 1);
+    let n = if smoke { CASCADE_SMOKE_REQUESTS } else { 2 * CASCADE_SMOKE_REQUESTS };
+    let model = Arc::new(SyntheticModel::build_geo(&geo, CASCADE_MODEL_SEED));
+    let layers4 = Arc::new(model.quantize_int4());
+    let hw8 = HwConfig::sized_to(&geo);
+    let hw4 = hw8.int4_variant();
+    let cost8 = Arc::new(CostModel::build(&hw8, &geo).expect("INT8 cost model"));
+    let cost4 = Arc::new(CostModel::build(&hw4, &geo).expect("INT4 cost model"));
+
+    let mut rng = Rng::new(CASCADE_REQUEST_SEED);
+    let requests: Vec<Vec<i32>> = (0..n)
+        .map(|_| {
+            let len = 8 + rng.below(33) as usize;
+            (0..len).map(|_| rng.below(64) as i32).collect()
+        })
+        .collect();
+
+    // Both precisions over every request, tiled across cores.  Each
+    // tile builds its own engine pair: an engine serializes predicts
+    // on its internal Workspace mutex, so sharing one across tiles
+    // would serialize the sweep.
+    let tiles = tile_ranges(n, default_parallelism());
+    let slots: Vec<Mutex<Vec<CascadeRec>>> = tiles.iter().map(|_| Mutex::new(Vec::new())).collect();
+    let t0 = Instant::now();
+    run_scoped(
+        tiles
+            .iter()
+            .cloned()
+            .zip(&slots)
+            .map(|(range, slot)| {
+                let (model, layers4) = (&model, &layers4);
+                let (cost8, cost4) = (&cost8, &cost4);
+                let requests = &requests;
+                move || {
+                    let e8 = FunctionalEngine::from_model_with_cost(
+                        Arc::clone(model),
+                        hw8,
+                        Arc::clone(cost8),
+                    );
+                    let e4 = FunctionalEngine::from_model_int4(
+                        Arc::clone(model),
+                        Arc::clone(layers4),
+                        hw4,
+                        Arc::clone(cost4),
+                    );
+                    let mut out = Vec::with_capacity(range.len());
+                    for toks in &requests[range] {
+                        let p8 = e8.predict(toks).expect("INT8 predict");
+                        let p4 = e4.predict(toks).expect("INT4 predict");
+                        out.push(CascadeRec {
+                            len: toks.len(),
+                            agree: p4.label == p8.label,
+                            margin4: top1_margin(&p4.logits),
+                        });
+                    }
+                    *slot.lock().unwrap() = out;
+                }
+            })
+            .collect(),
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    let recs: Vec<CascadeRec> = slots.into_iter().flat_map(|s| s.into_inner().unwrap()).collect();
+
+    // (escalated, served-label agreements, cascade served cycles) at
+    // one threshold: escalated requests serve the INT8 label by
+    // construction, everything else serves the INT4 one.
+    let stats = |subset: &[CascadeRec], thr: i64| -> (u64, u64, u64) {
+        let (mut esc, mut agree, mut served) = (0u64, 0u64, 0u64);
+        for r in subset {
+            served += cost4.predict_cycles(r.len);
+            if r.margin4 < thr {
+                esc += 1;
+                agree += 1;
+                served += cost8.predict_cycles(r.len);
+            } else if r.agree {
+                agree += 1;
+            }
+        }
+        (esc, agree, served)
+    };
+    let baseline = |subset: &[CascadeRec]| -> u64 {
+        subset.iter().map(|r| cost8.predict_cycles(r.len)).sum()
+    };
+
+    let base = baseline(&recs);
+    let mut table =
+        Table::new(&["margin", "escalated", "agreement", "served Mcyc/req", "reduction"]);
+    let mut json_rows = Vec::new();
+    let mut at_default = None;
+    for &thr in &CASCADE_THRESHOLDS {
+        let (esc, agree, served) = stats(&recs, thr);
+        let rate = esc as f64 / n as f64;
+        let agreement = agree as f64 / n as f64;
+        let reduction = 1.0 - served as f64 / base as f64;
+        if thr == DEFAULT_ESCALATE_MARGIN {
+            at_default = Some((rate, agreement, reduction));
+        }
+        table.row(&[
+            thr.to_string(),
+            format!("{esc} ({:.1}%)", 100.0 * rate),
+            format!("{agreement:.4}"),
+            format!("{:.2}", served as f64 / n as f64 / 1e6),
+            format!("{:.1}%", 100.0 * reduction),
+        ]);
+        json_rows.push(obj([
+            ("margin", thr.into()),
+            ("escalated", (esc as i64).into()),
+            ("escalation_rate", rate.into()),
+            ("top1_agreement", agreement.into()),
+            ("served_cycles", (served as i64).into()),
+            ("served_cycle_reduction", reduction.into()),
+        ]));
+    }
+    table.print(&format!(
+        "cascade acceptance leg: INT4 front tier + margin-gated INT8 escalation \
+         (d=768, 12 heads, d_ff=3072, 1 layer, {n} requests, {wall:.1}s)"
+    ));
+    let (rate, agreement, reduction) =
+        at_default.expect("DEFAULT_ESCALATE_MARGIN must be in CASCADE_THRESHOLDS");
+    println!(
+        "\nbaseline {:.2} Mcycles/request pure-INT8; at the default margin\n\
+         ({DEFAULT_ESCALATE_MARGIN}) the cascade escalates {:.1}% of requests, keeps\n\
+         {:.2}% top-1 agreement with the INT8 labels, and cuts served\n\
+         accelerator cycles {:.1}% — the equal-silicon INT4 array finishes a\n\
+         request in under half the cycles, so even with every escalation\n\
+         re-served at INT8 the fleet comes out ahead.",
+        base as f64 / n as f64 / 1e6,
+        100.0 * rate,
+        100.0 * agreement,
+        100.0 * reduction
+    );
+    assert!(
+        agreement >= 0.99,
+        "cascade top-1 agreement {agreement:.4} fell below the 0.99 acceptance bound \
+         at the default margin {DEFAULT_ESCALATE_MARGIN}"
+    );
+    assert!(
+        reduction >= 0.25,
+        "cascade served-cycle reduction {reduction:.4} fell below the 0.25 acceptance \
+         bound at the default margin {DEFAULT_ESCALATE_MARGIN}"
+    );
+
+    // Deterministic smoke-subset snapshot: integer counts only, so the
+    // committed baseline is byte-stable across hosts.
+    let subset = &recs[..CASCADE_SMOKE_REQUESTS];
+    let thr_rows: Vec<Json> = CASCADE_THRESHOLDS
+        .iter()
+        .map(|&thr| {
+            let (esc, agree, served) = stats(subset, thr);
+            Json::Obj(BTreeMap::from([
+                ("margin".to_string(), thr.into()),
+                ("escalated".to_string(), (esc as i64).into()),
+                ("agree".to_string(), (agree as i64).into()),
+                ("served_cycles".to_string(), (served as i64).into()),
+            ]))
+        })
+        .collect();
+    let snapshot = format!(
+        "{}\n",
+        Json::Obj(BTreeMap::from([
+            ("schema".to_string(), CASCADE_SNAPSHOT_SCHEMA.into()),
+            ("requests".to_string(), CASCADE_SMOKE_REQUESTS.into()),
+            ("model_seed".to_string(), (CASCADE_MODEL_SEED as i64).into()),
+            ("baseline_cycles".to_string(), (baseline(subset) as i64).into()),
+            ("thresholds".to_string(), Json::Arr(thr_rows)),
+        ]))
+    );
+
+    let leg = obj([
+        ("requests", n.into()),
+        ("wall_s", wall.into()),
+        ("default_margin", DEFAULT_ESCALATE_MARGIN.into()),
+        ("escalation_rate_at_default", rate.into()),
+        ("top1_agreement_at_default", agreement.into()),
+        ("served_cycle_reduction_at_default", reduction.into()),
+        ("baseline_cycles_per_req", ((base / n as u64) as i64).into()),
+        ("sweep", Json::Arr(json_rows)),
+    ]);
+    (leg, snapshot)
+}
+
+/// Cascade pool-mechanics leg: the same gate exercised through the
+/// real `register_cascade_scaled` registration and the concurrent
+/// router.  A margin sweep over one `tiny` cascade pair checks the
+/// ledger invariants (front completions + escalations == submissions,
+/// the INT8 sibling serves exactly the escalations, every escalated
+/// completion lands in the cascade latency series) and that the
+/// escalation count is monotone in the threshold — 0 at margin 0, all
+/// requests at `i64::MAX`.  A two-tenant run then replays identical
+/// traffic through two pairs with different per-tenant margins: the
+/// looser tenant must escalate strictly more, demonstrating the knob
+/// is per-tenant, not global.
+fn cascade_mechanics_leg(smoke: bool) -> Json {
+    let n = if smoke { 32usize } else { 96 };
+    let policy =
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(500), bucket_width: 8 };
+    let gen_requests = |n: usize| -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(0xE5CA);
+        (0..n)
+            .map(|_| {
+                let len = 1 + rng.below(8) as usize;
+                (0..len).map(|_| rng.below(64) as i32).collect()
+            })
+            .collect()
+    };
+
+    // -- margin sweep: one cascade pair, identical traffic per run ---
+    let run = |margin: i64| -> u64 {
+        let mut reg = ModelRegistry::new();
+        reg.register_cascade_scaled("t", "tiny", 1, 1, 1, None, 7, margin).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let router = Router::start_multi(reg.into_groups(), policy, Arc::clone(&metrics));
+        let receivers: Vec<_> = gen_requests(n)
+            .into_iter()
+            .map(|tokens| {
+                let (tx, rx) = channel();
+                router.submit_to("t", tokens, tx);
+                rx
+            })
+            .collect();
+        for rx in receivers {
+            let resp = rx.recv().expect("response");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        router.shutdown();
+        let esc = metrics.model(0).escalated.load(Ordering::Relaxed);
+        let front = metrics.model(0).completed.load(Ordering::Relaxed);
+        let sibling = metrics.model(1).completed.load(Ordering::Relaxed);
+        assert_eq!(
+            front + esc,
+            n as u64,
+            "margin {margin}: front tier must answer or escalate every request"
+        );
+        assert_eq!(sibling, esc, "margin {margin}: the INT8 sibling serves the escalations");
+        assert_eq!(
+            metrics.cascade_e2e_s.lock().unwrap().len() as u64,
+            esc,
+            "margin {margin}: every escalated completion must land in the cascade series"
+        );
+        esc
+    };
+
+    let margins: [i64; 4] = [0, 5_000, 20_000, i64::MAX];
+    let mut table = Table::new(&["margin", "escalated", "rate"]);
+    let mut rows = Vec::new();
+    let mut escs = Vec::new();
+    for &m in &margins {
+        let esc = run(m);
+        escs.push(esc);
+        let shown = if m == i64::MAX { "MAX".to_string() } else { m.to_string() };
+        table.row(&[shown, esc.to_string(), format!("{:.1}%", 100.0 * esc as f64 / n as f64)]);
+        rows.push(obj([("margin", m.into()), ("escalated", (esc as i64).into())]));
+    }
+    assert!(escs.windows(2).all(|w| w[0] <= w[1]), "escalations must be monotone in the margin");
+    assert_eq!(escs[0], 0, "margin 0 disables the gate (strict less-than)");
+    assert_eq!(escs[margins.len() - 1], n as u64, "an unbounded margin escalates everything");
+
+    // -- per-tenant knob: two pairs, identical traffic, two margins --
+    let (lo_margin, hi_margin) = (2_000i64, 30_000i64);
+    let mut reg = ModelRegistry::new();
+    reg.register_cascade_scaled("lo", "tiny", 1, 1, 1, None, 7, lo_margin).unwrap();
+    reg.register_cascade_scaled("hi", "tiny", 1, 1, 1, None, 7, hi_margin).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    let router = Router::start_multi(reg.into_groups(), policy, Arc::clone(&metrics));
+    let mut receivers = Vec::new();
+    for tokens in gen_requests(n) {
+        for tenant in ["lo", "hi"] {
+            let (tx, rx) = channel();
+            router.submit_to(tenant, tokens.clone(), tx);
+            receivers.push(rx);
+        }
+    }
+    for rx in receivers {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    router.shutdown();
+    let esc_lo = metrics.model(0).escalated.load(Ordering::Relaxed);
+    let esc_hi = metrics.model(2).escalated.load(Ordering::Relaxed);
+    assert_eq!(metrics.model(0).escalate_margin.load(Ordering::Relaxed), lo_margin as u64);
+    assert_eq!(metrics.model(2).escalate_margin.load(Ordering::Relaxed), hi_margin as u64);
+    assert!(
+        esc_lo < esc_hi,
+        "identical traffic: the looser per-tenant margin must escalate more \
+         (lo {esc_lo}, hi {esc_hi})"
+    );
+    let report = metrics.report();
+    assert!(
+        report.contains("escalated="),
+        "Metrics::report must surface per-tenant escalation counters"
+    );
+    table.row(&[
+        format!("lo={lo_margin}"),
+        esc_lo.to_string(),
+        format!("{:.1}%", 100.0 * esc_lo as f64 / n as f64),
+    ]);
+    table.row(&[
+        format!("hi={hi_margin}"),
+        esc_hi.to_string(),
+        format!("{:.1}%", 100.0 * esc_hi as f64 / n as f64),
+    ]);
+    table.print(&format!(
+        "cascade mechanics leg: tiny cascade pair through the real router, {n} requests"
+    ));
+    println!(
+        "\nfront completions + escalations == submissions at every margin, the\n\
+         INT8 sibling serves exactly the escalations, and the per-tenant\n\
+         margins (lo/hi rows, one run) produce different escalation rates on\n\
+         identical traffic — the threshold is a per-tenant knob, not a\n\
+         global one."
+    );
+
+    obj([
+        ("requests", n.into()),
+        ("sweep", Json::Arr(rows)),
+        (
+            "tenants",
+            obj([
+                ("lo_margin", lo_margin.into()),
+                ("hi_margin", hi_margin.into()),
+                ("lo_escalated", (esc_lo as i64).into()),
+                ("hi_escalated", (esc_hi as i64).into()),
+            ]),
+        ),
+    ])
+}
+
+/// Compare (or initialize/update) the committed cascade smoke
+/// snapshot.  Returns false when the comparison failed.
+fn check_cascade_snapshot(update: bool, payload: &str) -> bool {
+    let on_disk = std::fs::read_to_string(CASCADE_SNAPSHOT_PATH).ok();
+    let initialized = on_disk
+        .as_deref()
+        .and_then(|s| Json::parse(s.trim()).ok())
+        .is_some_and(|j| {
+            j.get("thresholds").is_some()
+                && j.get("schema").and_then(|s| s.as_str()) == Some(CASCADE_SNAPSHOT_SCHEMA)
+        });
+    if update || !initialized {
+        match std::fs::write(CASCADE_SNAPSHOT_PATH, payload) {
+            Ok(()) => println!(
+                "\n{} {CASCADE_SNAPSHOT_PATH} — commit it to pin the cascade baseline",
+                if update { "updated" } else { "initialized" }
+            ),
+            Err(e) => eprintln!("\nfailed to write {CASCADE_SNAPSHOT_PATH}: {e}"),
+        }
+        return true;
+    }
+    if on_disk.as_deref() == Some(payload) {
+        println!(
+            "\ncascade smoke snapshot matches {CASCADE_SNAPSHOT_PATH} (deterministic \
+             cascade verified)"
+        );
+        true
+    } else {
+        eprintln!(
+            "\ncascade smoke snapshot MISMATCH against {CASCADE_SNAPSHOT_PATH}: the\n\
+             INT4/INT8 margin study changed.  If the kernel or consts change is\n\
+             intentional, re-baseline with\n\
+             `cargo bench --bench serving_scaling -- --smoke --update` and commit the\n\
+             snapshot; otherwise this is a numerics regression.\n\
+             expected (committed):\n{}\n\
+             got (this run):\n{}",
+            on_disk.as_deref().unwrap_or("<unreadable>").trim_end(),
+            payload.trim_end()
+        );
+        false
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let update = std::env::args().any(|a| a == "--update");
     println!(
         "serving-scaling sweep{}: {REQUESTS} closed-loop requests, tiny preset, \
          functional replicas (host parallelism {})",
@@ -767,6 +1202,7 @@ fn main() {
                             padded_len: 8,
                             cost: 8,
                             submitted: Instant::now(),
+                            origin: None,
                             reply: tx,
                         },
                         m,
@@ -833,11 +1269,26 @@ fn main() {
     println!();
     legs.push(("costmodel", obj([("fairness", costmodel_fairness_leg(smoke))])));
 
+    // --- cascade leg (DESIGN.md §14): always runs, smoke-sized in CI
+    println!();
+    let (cascade_acceptance, cascade_snapshot) = cascade_acceptance_leg(smoke);
+    println!();
+    let cascade_mechanics = cascade_mechanics_leg(smoke);
+    legs.push((
+        "cascade",
+        obj([("acceptance", cascade_acceptance), ("mechanics", cascade_mechanics)]),
+    ));
+
     // merge, don't overwrite: the `openloop` key written by the
     // serving_openloop bench lives in the same file
     let path = "BENCH_serving.json";
     match merge_bench_json(path, legs) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    // --- determinism gate: the committed cascade smoke snapshot ----
+    if !check_cascade_snapshot(update, &cascade_snapshot) {
+        std::process::exit(1);
     }
 }

@@ -35,7 +35,10 @@
 use crate::model::{Blob, Geometry, Manifest};
 use crate::quant::i_matmul;
 use crate::runtime::{Engine, Executable, Tensor};
-use crate::sim::functional::{encoder_forward_ws, synthetic_consts, LayerWeights, Workspace};
+use crate::sim::functional::{
+    encoder_forward_ws, encoder_forward_ws_int4, synthetic_consts, LayerWeights,
+    LayerWeightsInt4, Workspace,
+};
 use crate::sim::{simulate_encoder_m, CostModel, HwConfig};
 use crate::util::rng::Rng;
 use std::path::Path;
@@ -319,6 +322,20 @@ impl SyntheticModel {
         let b_head: Vec<i32> = (0..2).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
         SyntheticModel { geo: *geo, layers, emb, pos, w_head, b_head, vocab }
     }
+
+    /// Quantize this model's layer stack onto the packed INT4 grid
+    /// (DESIGN.md §14).  The embedding/positional tables and the
+    /// classifier head are host-side and stay shared with the INT8
+    /// tier; only the accelerator-resident weight matrices change
+    /// precision, so an INT4 replica group derives from the *same*
+    /// `Arc<SyntheticModel>` as its INT8 siblings — one weight bundle,
+    /// two precisions.
+    pub fn quantize_int4(&self) -> Vec<(LayerWeightsInt4, crate::model::LayerConsts)> {
+        self.layers
+            .iter()
+            .map(|(w, c)| (LayerWeightsInt4::quantize(w, &self.geo), c.clone()))
+            .collect()
+    }
 }
 
 /// Artifact-free engine replica: the bit-exact functional model
@@ -353,6 +370,11 @@ pub struct FunctionalEngine {
     /// so the model predicts every request exactly; replicas of one
     /// registry group share a single build behind the `Arc`.
     cost: Arc<CostModel>,
+    /// The packed INT4 layer stack when this replica serves the
+    /// low-precision cascade tier (DESIGN.md §14): quantized once per
+    /// group from the shared [`SyntheticModel`] and shared across the
+    /// group's replicas.  `None` => the replica runs the INT8 stack.
+    int4: Option<Arc<Vec<(LayerWeightsInt4, crate::model::LayerConsts)>>>,
 }
 
 impl FunctionalEngine {
@@ -385,7 +407,30 @@ impl FunctionalEngine {
         // numerics are bit-exact either way
         let mut ws = Workspace::new(&model.geo);
         ws.set_attn_heads_parallel(hw.attn_heads_parallel);
-        FunctionalEngine { model, hw, ws: Mutex::new(ws), cost }
+        FunctionalEngine { model, hw, ws: Mutex::new(ws), cost, int4: None }
+    }
+
+    /// Build an **INT4-tier** replica (DESIGN.md §14): same shared
+    /// model bundle and host-side embed/head path, the encoder running
+    /// the packed INT4 stack (`layers4`, quantized once per group via
+    /// [`SyntheticModel::quantize_int4`]) on the INT4 hardware instance
+    /// (`hw` is typically [`HwConfig::int4_variant`] of the group's
+    /// INT8 instance; `cost` must be built on the same `hw` so cycle
+    /// ledgers price the low-precision work correctly).
+    pub fn from_model_int4(
+        model: Arc<SyntheticModel>,
+        layers4: Arc<Vec<(LayerWeightsInt4, crate::model::LayerConsts)>>,
+        hw: HwConfig,
+        cost: Arc<CostModel>,
+    ) -> FunctionalEngine {
+        let mut e = FunctionalEngine::from_model_with_cost(model, hw, cost);
+        e.int4 = Some(layers4);
+        e
+    }
+
+    /// Whether this replica serves the packed INT4 tier.
+    pub fn is_int4(&self) -> bool {
+        self.int4.is_some()
     }
 
     /// Build `n` identical replicas of one synthetic model — the
@@ -458,15 +503,26 @@ impl EngineReplica for FunctionalEngine {
         let mut sqrt_iters = Vec::with_capacity(2 * m_eff * model.layers.len());
         {
             let mut ws = self.ws.lock().unwrap();
-            encoder_forward_ws(
-                &q_x,
-                &model.layers,
-                &model.geo,
-                m_eff,
-                &mut ws,
-                &mut q_out,
-                &mut sqrt_iters,
-            );
+            match &self.int4 {
+                Some(layers4) => encoder_forward_ws_int4(
+                    &q_x,
+                    layers4,
+                    &model.geo,
+                    m_eff,
+                    &mut ws,
+                    &mut q_out,
+                    &mut sqrt_iters,
+                ),
+                None => encoder_forward_ws(
+                    &q_x,
+                    &model.layers,
+                    &model.geo,
+                    m_eff,
+                    &mut ws,
+                    &mut q_out,
+                    &mut sqrt_iters,
+                ),
+            }
         }
         let (label, logits) = integer_head(&q_out, &model.w_head, &model.b_head, m_eff, d);
         let cycles = self.accel_cycles(m_eff, &sqrt_iters);
@@ -561,6 +617,43 @@ mod tests {
             assert_eq!(got.logits, want.logits);
             assert_eq!(got.accel_cycles, want.accel_cycles);
         }
+    }
+
+    #[test]
+    fn int4_tier_replica_is_deterministic_and_cheaper() {
+        // The cascade front tier: replicas share one weight bundle and
+        // one packed-INT4 lane set; predictions are deterministic
+        // across replicas and the low-precision pass costs fewer
+        // simulated cycles than the INT8 sibling on the same request.
+        let model = Arc::new(SyntheticModel::build("tiny", 7).unwrap());
+        let hw8 = HwConfig::paper();
+        let hw4 = hw8.int4_variant();
+        let cost8 = Arc::new(CostModel::build(&hw8, &model.geo).unwrap());
+        let cost4 = Arc::new(CostModel::build(&hw4, &model.geo).unwrap());
+        let layers4 = Arc::new(model.quantize_int4());
+        let int8 = FunctionalEngine::from_model_with_cost(Arc::clone(&model), hw8, cost8);
+        let a = FunctionalEngine::from_model_int4(
+            Arc::clone(&model),
+            Arc::clone(&layers4),
+            hw4,
+            Arc::clone(&cost4),
+        );
+        let b = FunctionalEngine::from_model_int4(model, layers4, hw4, cost4);
+        assert!(a.is_int4() && b.is_int4() && !int8.is_int4());
+        let tokens: Vec<i32> = (0..a.seq_len()).map(|i| (i % 60) as i32).collect();
+        let pa = EngineReplica::predict(&a, &tokens).unwrap();
+        let pb = EngineReplica::predict(&b, &tokens).unwrap();
+        assert_eq!(pa.label, pb.label);
+        assert_eq!(pa.logits, pb.logits, "INT4 replicas agree bit for bit");
+        assert_eq!(pa.accel_cycles, pb.accel_cycles);
+        let p8 = EngineReplica::predict(&int8, &tokens).unwrap();
+        assert_eq!(pa.logits.len(), p8.logits.len());
+        assert!(
+            pa.accel_cycles < p8.accel_cycles,
+            "INT4 pass must be cheaper than INT8 ({} vs {})",
+            pa.accel_cycles,
+            p8.accel_cycles
+        );
     }
 
     #[test]

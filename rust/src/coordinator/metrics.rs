@@ -108,6 +108,16 @@ pub struct ModelStats {
     /// its SLO (DESIGN.md §11) — shed requests never enter the queue,
     /// so they appear here and nowhere else
     pub shed: AtomicU64,
+    /// requests this tier answered below its confidence gate and handed
+    /// to its escalation sibling instead of serving (DESIGN.md §14).
+    /// Only front (INT4) tiers of a cascade pair ever move this; the
+    /// tier's cycles for the attempt still land on `served_cost` /
+    /// `accel_cycles`, so the per-precision served-cost ledgers price
+    /// the escalation surcharge honestly.
+    pub escalated: AtomicU64,
+    /// the tier's live logit-margin escalation threshold (the per-tenant
+    /// cascade knob; 0 = no gate)
+    pub escalate_margin: AtomicU64,
 }
 
 impl ModelStats {
@@ -207,6 +217,11 @@ pub struct Metrics {
     /// executor worker threads in the router's global core budget
     /// (gauge; 0 until a pool is built — DESIGN.md §13)
     pub core_budget: AtomicU64,
+    /// end-to-end wallclock latency of *escalated* requests (seconds),
+    /// measured from original submission to the INT8 tier's reply —
+    /// the cascade's two-hop tail (p50/p99 in the report; DESIGN.md
+    /// §14)
+    pub cascade_e2e_s: Mutex<Series>,
 }
 
 impl Metrics {
@@ -430,6 +445,61 @@ impl Metrics {
         self.model(model).shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Account one cascade escalation against front tier `model`
+    /// (DESIGN.md §14): the request leaves this tier's backlog gauges
+    /// (it re-enters its sibling's at re-submission) without counting
+    /// as a completion — no reply went out and no end-to-end latency
+    /// exists yet.  The INT4 attempt's real work *is* settled here:
+    /// its predicted cost joins `served_cost`, its virtual time joins
+    /// `accel_cycles`/`accel_ms`, and its wall execution time keeps the
+    /// tier's ms-per-cost calibration honest — that surcharge is
+    /// exactly what the cascade's cycles/request ledger must show.
+    pub fn record_escalated(
+        &self,
+        model: usize,
+        cost: u64,
+        cycles: u64,
+        accel_ms: f64,
+        exec_s: f64,
+    ) {
+        let m = self.model(model);
+        let _ = m.backlog.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            v.checked_sub(1)
+        });
+        let _ = m.backlog_cost.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(cost))
+        });
+        m.escalated.fetch_add(1, Ordering::Relaxed);
+        m.served_cost.fetch_add(cost, Ordering::Relaxed);
+        m.accel_cycles.fetch_add(cycles, Ordering::Relaxed);
+        *m.accel_ms.lock().unwrap() += accel_ms;
+        m.exec_ns_total.fetch_add((exec_s * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Account an escalated request re-entering the queue bound for
+    /// tier `model` (its new predicted cost at that tier's precision).
+    /// Unlike [`Metrics::record_request_for`] the aggregate request
+    /// counter stays put — the client submitted once; the cascade hop
+    /// is internal traffic.
+    pub fn record_reenqueued(&self, model: usize, cost: u64) {
+        let m = self.model(model);
+        m.requests.fetch_add(1, Ordering::Relaxed);
+        m.backlog.fetch_add(1, Ordering::Relaxed);
+        m.backlog_cost.fetch_add(cost, Ordering::Relaxed);
+    }
+
+    /// Publish front tier `model`'s live escalation threshold (the
+    /// per-tenant cascade knob surfaced in the report).
+    pub fn set_escalate_margin(&self, model: usize, margin: i64) {
+        self.model(model).escalate_margin.store(margin.max(0) as u64, Ordering::Relaxed);
+    }
+
+    /// Record the two-hop end-to-end latency of an escalated request
+    /// (original submission to INT8 reply).
+    pub fn record_cascade_e2e(&self, e2e_s: f64) {
+        self.cascade_e2e_s.lock().unwrap().push(e2e_s);
+    }
+
     /// Account one accepted front-door connection (raises the open
     /// gauge; [`Metrics::record_conn_closed`] settles it).
     pub fn record_conn_opened(&self) {
@@ -490,6 +560,12 @@ impl Metrics {
             self.core_budget.load(Ordering::Relaxed),
         ));
         {
+            let cascade = self.cascade_e2e_s.lock().unwrap();
+            if cascade.len() > 0 {
+                out.push_str(&format!("\n  cascade e2e {}", cascade.summary("s")));
+            }
+        }
+        {
             let models = self.models.lock().unwrap();
             let total_w: u64 = models.iter().map(|l| l.weight).sum();
             let total_served: u64 =
@@ -533,6 +609,19 @@ impl Metrics {
                     l.stats.retries.load(Ordering::Relaxed),
                     l.stats.shed.load(Ordering::Relaxed),
                 ));
+                let escalated = l.stats.escalated.load(Ordering::Relaxed);
+                let margin = l.stats.escalate_margin.load(Ordering::Relaxed);
+                if escalated > 0 || margin > 0 {
+                    let reqs = l.stats.requests.load(Ordering::Relaxed);
+                    let rate = if reqs > 0 {
+                        100.0 * escalated as f64 / reqs as f64
+                    } else {
+                        0.0
+                    };
+                    out.push_str(&format!(
+                        " escalated={escalated} ({rate:.1}%) margin={margin}"
+                    ));
+                }
             }
         }
         for (i, r) in self.replicas.lock().unwrap().iter().enumerate() {
@@ -738,6 +827,38 @@ mod tests {
         m.record_conn_closed();
         m.record_conn_closed();
         assert_eq!(m.conns_open.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn escalation_ledger_settles_backlog_without_counting_completion() {
+        let m = Metrics::new();
+        m.ensure_models(&[("front", 1), ("front@int8", 1)]);
+        m.set_escalate_margin(0, 6000);
+        m.record_request_for(0, 100);
+        m.record_request_for(0, 100);
+        // one request serves at the front tier, one escalates
+        m.record_model_served(0, 8, 8, 100, 100, 0.7, 0.010, 0.004, false);
+        m.record_escalated(0, 100, 100, 0.7, 0.004);
+        let front = m.model(0);
+        assert_eq!(front.backlog.load(Ordering::Relaxed), 0, "escalation settles backlog");
+        assert_eq!(front.backlog_cost.load(Ordering::Relaxed), 0);
+        assert_eq!(front.completed.load(Ordering::Relaxed), 1, "escalation is not a completion");
+        assert_eq!(front.escalated.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            front.served_cost.load(Ordering::Relaxed),
+            200,
+            "the INT4 attempt's cycles stay on the front tier's served-cost ledger"
+        );
+        assert_eq!(front.accel_cycles.load(Ordering::Relaxed), 200);
+        assert_eq!(front.e2e_s.lock().unwrap().len(), 1, "no e2e sample for the escalation");
+        // the two-hop latency lands on the cascade series at INT8 completion
+        m.record_request_for(1, 400);
+        m.record_model_served(1, 8, 8, 400, 400, 2.8, 0.025, 0.012, false);
+        m.record_cascade_e2e(0.025);
+        assert_eq!(m.cascade_e2e_s.lock().unwrap().len(), 1);
+        let report = m.report();
+        assert!(report.contains("escalated=1 (50.0%) margin=6000"), "{report}");
+        assert!(report.contains("cascade e2e"), "{report}");
     }
 
     #[test]

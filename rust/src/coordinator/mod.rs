@@ -65,5 +65,5 @@ pub use engine::{
 };
 pub use metrics::{Metrics, ModelStats, ReplicaStats};
 pub use pool::{GroupRuntime, ReplicaPool};
-pub use registry::{ModelGroup, ModelRegistry, ReplicaFactory};
+pub use registry::{ModelGroup, ModelRegistry, ReplicaFactory, DEFAULT_ESCALATE_MARGIN};
 pub use router::{Request, Response, Router};

@@ -63,6 +63,21 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Resolved cascade edge from a front (INT4) tier to its escalation
+/// target (DESIGN.md §14): responses whose top-1 logit margin falls
+/// below `margin` are not replied — the request is re-priced at the
+/// target tier's cost model and handed back for re-dispatch there.
+#[derive(Clone)]
+pub struct EscalateLink {
+    /// model index of the escalation target group
+    target: usize,
+    /// per-tenant confidence threshold on `top1 - top2` logits
+    margin: i64,
+    /// the target tier's cost model, for re-pricing the escalated
+    /// request at its precision (`None` falls back to padded length)
+    target_cost: Option<Arc<CostModel>>,
+}
+
 /// One model group's runtime: replicas, slot table, and a private
 /// executor, so the group's dispatch barrier is isolated from every
 /// other group (DESIGN.md §9).
@@ -92,6 +107,9 @@ pub struct GroupRuntime {
     metrics: Arc<Metrics>,
     /// model index in the router/batcher/metrics ledgers
     gidx: usize,
+    /// cascade edge to this group's escalation tier, if it is the
+    /// front (low-precision) tier of a cascade pair (DESIGN.md §14)
+    escalate: Option<EscalateLink>,
 }
 
 impl GroupRuntime {
@@ -101,6 +119,7 @@ impl GroupRuntime {
         base: usize,
         metrics: Arc<Metrics>,
         exec: Arc<BudgetExec>,
+        escalate: Option<EscalateLink>,
     ) -> GroupRuntime {
         assert!(!g.replicas.is_empty(), "model {:?} has no replicas", g.model);
         assert!(
@@ -117,6 +136,9 @@ impl GroupRuntime {
             slots[slot] = Some(r);
         }
         metrics.set_model_replicas(gidx, slots.iter().flatten().count());
+        if let Some(link) = &escalate {
+            metrics.set_escalate_margin(gidx, link.margin);
+        }
         GroupRuntime {
             model: g.model,
             base,
@@ -129,6 +151,7 @@ impl GroupRuntime {
             exec,
             metrics,
             gidx,
+            escalate,
         }
     }
 
@@ -160,6 +183,11 @@ impl GroupRuntime {
     /// `min..=max` replica bounds.
     pub fn replica_bounds(&self) -> (usize, usize) {
         (self.min, self.slots.lock().unwrap().len())
+    }
+
+    /// Escalation target group index, if this is a cascade front tier.
+    pub fn escalates_to(&self) -> Option<usize> {
+        self.escalate.as_ref().map(|l| l.target)
     }
 
     /// Whether the autoscaler can move this group at all.
@@ -213,10 +241,19 @@ impl GroupRuntime {
     /// re-ordered to the group's submission order.  The barrier here is
     /// the group's own executor — other model groups dispatch
     /// concurrently.
-    pub fn dispatch(&self, group: Vec<Request>) -> Vec<Response> {
+    ///
+    /// The second return value is the cascade overflow: requests whose
+    /// low-precision answer fell below the escalation margin.  They
+    /// have already been re-targeted (`model`/`cost` rewritten to the
+    /// escalation tier, `origin` recording this group) and accounted as
+    /// re-enqueued on the target's ledger; the caller must re-dispatch
+    /// them there — through the batcher on the concurrent path, or
+    /// synchronously via [`ReplicaPool::dispatch`].  Non-cascade groups
+    /// always return an empty overflow.
+    pub fn dispatch(&self, group: Vec<Request>) -> (Vec<Response>, Vec<Request>) {
         let total = group.len();
         if total == 0 {
-            return Vec::new();
+            return (Vec::new(), Vec::new());
         }
         debug_assert!(
             group.iter().all(|r| r.model == self.gidx),
@@ -240,7 +277,7 @@ impl GroupRuntime {
             // error: panicking here would kill the group's dispatcher
             // thread and hang every later submit (ISSUE 9 — a dead
             // tenant must stay a per-tenant failure).
-            return group
+            let responses = group
                 .into_iter()
                 .map(|req| {
                     fail_request(
@@ -252,6 +289,7 @@ impl GroupRuntime {
                     )
                 })
                 .collect();
+            return (responses, Vec::new());
         }
         let start = self.next_start.fetch_add(1, Ordering::Relaxed) % n;
         let mut shares: Vec<Vec<(usize, Request)>> = (0..n).map(|_| Vec::new()).collect();
@@ -267,6 +305,7 @@ impl GroupRuntime {
                 let metrics = Arc::clone(&self.metrics);
                 let replica_id = self.base + slot;
                 let model = self.model.clone();
+                let escalate = self.escalate.clone();
                 // the share's predicted cost drives the executor's
                 // weighted-fair pickup across groups
                 let cost = share
@@ -283,6 +322,7 @@ impl GroupRuntime {
                                 &metrics,
                                 req,
                                 PanicMode::Capture,
+                                escalate.as_ref(),
                             );
                             (i, slot, out)
                         })
@@ -292,21 +332,37 @@ impl GroupRuntime {
             })
             .collect();
         let mut indexed: Vec<(usize, Response)> = Vec::with_capacity(total);
+        let mut escalated: Vec<Request> = Vec::new();
         let mut panicked: Vec<(usize, usize, Request)> = Vec::new();
         for (i, slot, outcome) in self.exec.run_batch(self.gidx, jobs).into_iter().flatten() {
             match outcome {
                 ServeOutcome::Replied(resp) => indexed.push((i, resp)),
+                ServeOutcome::Escalated(req) => escalated.push(req),
                 ServeOutcome::Panicked(req) => panicked.push((i, slot, req)),
             }
         }
         // Rare path, after the barrier: requests whose replica panicked
         // are recovered serially on the dispatcher thread.
         for (i, slot, req) in panicked {
-            indexed.push((i, self.recover(slot, req)));
+            match self.recover(slot, req) {
+                ServeOutcome::Replied(resp) => indexed.push((i, resp)),
+                ServeOutcome::Escalated(req) => escalated.push(req),
+                ServeOutcome::Panicked(_) => unreachable!("recover never re-captures"),
+            }
         }
         indexed.sort_unstable_by_key(|&(i, _)| i);
-        assert_eq!(indexed.len(), total, "every request yields exactly one response");
-        indexed.into_iter().map(|(_, resp)| resp).collect()
+        assert_eq!(
+            indexed.len() + escalated.len(),
+            total,
+            "every request yields exactly one response or escalation"
+        );
+        // Escalations leave this dispatch bound for the target tier:
+        // account them on its queue ledger now, whichever path (batcher
+        // loop or serial facade) carries them there.
+        for req in &escalated {
+            self.metrics.record_reenqueued(req.model, req.cost);
+        }
+        (indexed.into_iter().map(|(_, resp)| resp).collect(), escalated)
     }
 
     /// Whether a faulted replica can be replaced (the autoscaler's
@@ -335,8 +391,9 @@ impl GroupRuntime {
     /// faulted slot is retired (when the group can respawn a
     /// replacement), and the request is retried exactly once on another
     /// active replica.  With no other replica left it gets a typed
-    /// error — either way it is answered, never lost.
-    fn recover(&self, slot: usize, req: Request) -> Response {
+    /// error — either way it is answered (or escalated), never lost.
+    /// Never returns [`ServeOutcome::Panicked`].
+    fn recover(&self, slot: usize, req: Request) -> ServeOutcome {
         if self.can_respawn() {
             self.retire_slot(slot);
         }
@@ -358,25 +415,23 @@ impl GroupRuntime {
         match retry {
             Some((retry_slot, replica)) => {
                 self.metrics.record_retry(self.gidx);
-                match serve_one(
+                serve_one(
                     self.base + retry_slot,
                     &self.model,
                     replica.as_ref(),
                     &self.metrics,
                     req,
                     PanicMode::TypedError,
-                ) {
-                    ServeOutcome::Replied(resp) => resp,
-                    ServeOutcome::Panicked(_) => unreachable!("TypedError mode never captures"),
-                }
+                    self.escalate.as_ref(),
+                )
             }
-            None => fail_request(
+            None => ServeOutcome::Replied(fail_request(
                 self.base + slot,
                 &self.model,
                 &self.metrics,
                 req,
                 "replica panicked while serving request; no active replica left to retry",
-            ),
+            )),
         }
     }
 }
@@ -434,11 +489,37 @@ impl ReplicaPool {
         let budget = cores.unwrap_or(total_ids).max(1);
         let exec = Arc::new(BudgetExec::new(budget, &weights));
         metrics.set_core_budget(budget);
+        // Resolve cascade edges by name before the groups move into
+        // their runtimes: a front tier's `escalate_to` must name
+        // another registered group, and the link carries the target's
+        // cost model for re-pricing escalated requests (DESIGN.md §14).
+        let names: Vec<String> = groups.iter().map(|g| g.model.clone()).collect();
+        let links: Vec<Option<EscalateLink>> = groups
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                g.escalate_to.as_ref().map(|target_name| {
+                    let target = names.iter().position(|n| n == target_name).unwrap_or_else(|| {
+                        panic!(
+                            "model {:?}: escalation target {target_name:?} is not registered",
+                            g.model
+                        )
+                    });
+                    assert!(target != i, "model {:?} cannot escalate to itself", g.model);
+                    EscalateLink {
+                        target,
+                        margin: g.escalate_margin,
+                        target_cost: groups[target].cost.clone(),
+                    }
+                })
+            })
+            .collect();
         let mut base = 0;
         let groups = groups
             .into_iter()
+            .zip(links)
             .enumerate()
-            .map(|(gidx, mut g)| {
+            .map(|(gidx, (mut g, link))| {
                 g.max_replicas = g.max_replicas.max(g.replicas.len());
                 let width = g.max_replicas;
                 let rt = Arc::new(GroupRuntime::new(
@@ -447,6 +528,7 @@ impl ReplicaPool {
                     base,
                     Arc::clone(&metrics),
                     Arc::clone(&exec),
+                    link,
                 ));
                 base += width;
                 rt
@@ -492,11 +574,28 @@ impl ReplicaPool {
     /// off the first request).  Serial drivers call this directly; the
     /// router's per-group dispatchers call their own
     /// [`GroupRuntime::dispatch`] concurrently.
+    ///
+    /// Cascade escalations are followed synchronously: requests the
+    /// front tier hands back re-dispatch on their target group until
+    /// every request has been answered, so serial drivers see one
+    /// response per submitted request regardless of precision tier.
+    /// (The router's concurrent path re-queues escalations through the
+    /// batcher instead.)
     pub fn dispatch(&self, group: Vec<Request>) -> Vec<Response> {
         let Some(first) = group.first() else { return Vec::new() };
         let gidx = first.model;
         assert!(gidx < self.groups.len(), "request for unknown model group {gidx}");
-        self.groups[gidx].dispatch(group)
+        let (mut responses, mut escalated) = self.groups[gidx].dispatch(group);
+        while !escalated.is_empty() {
+            // escalations from one group share its single target tier,
+            // so the overflow stays model-homogeneous
+            let gidx = escalated[0].model;
+            assert!(gidx < self.groups.len(), "escalation to unknown model group {gidx}");
+            let (more, next) = self.groups[gidx].dispatch(escalated);
+            responses.extend(more);
+            escalated = next;
+        }
+        responses
     }
 }
 
@@ -511,16 +610,45 @@ enum PanicMode {
     TypedError,
 }
 
-/// Result of [`serve_one`]: either the request was answered (reply sent
-/// on its channel), or the replica panicked under [`PanicMode::Capture`]
-/// and the request comes back untouched for recovery.
+/// Result of [`serve_one`]: the request was answered (reply sent on its
+/// channel), its low-margin answer was withheld and the request comes
+/// back re-targeted at the escalation tier, or the replica panicked
+/// under [`PanicMode::Capture`] and the request comes back untouched
+/// for recovery.
 enum ServeOutcome {
     Replied(Response),
+    Escalated(Request),
     Panicked(Request),
+}
+
+/// Top-1 logit margin: the gap between the best and second-best logit.
+/// A degenerate head (fewer than two logits) has no runner-up and never
+/// escalates.
+fn logit_margin(logits: &[i64]) -> i64 {
+    if logits.len() < 2 {
+        return i64::MAX;
+    }
+    let (mut top, mut second) = (i64::MIN, i64::MIN);
+    for &l in logits {
+        if l > top {
+            second = top;
+            top = l;
+        } else if l > second {
+            second = l;
+        }
+    }
+    top.saturating_sub(second)
 }
 
 /// Serve one request on one replica: predict, account (aggregate,
 /// per-replica, and per-model virtual time + latency), reply.
+///
+/// On a cascade front tier (`escalate` is `Some`), a successful
+/// prediction whose top-1 logit margin falls below the link's threshold
+/// is *not* replied: the attempt's cycles settle on this tier's ledger
+/// ([`Metrics::record_escalated`] — the served-cost comparison must
+/// charge the wasted INT4 pass), and the request is handed back
+/// re-targeted at the escalation tier with its cost re-priced there.
 fn serve_one(
     replica_id: usize,
     model_name: &str,
@@ -528,6 +656,7 @@ fn serve_one(
     metrics: &Metrics,
     req: Request,
     mode: PanicMode,
+    escalate: Option<&EscalateLink>,
 ) -> ServeOutcome {
     let queued = req.submitted.elapsed().as_secs_f64();
     let t0 = Instant::now();
@@ -557,6 +686,37 @@ fn serve_one(
     let resp = match result {
         Ok(pred) => {
             let exec = t0.elapsed().as_secs_f64();
+            if let Some(link) = escalate {
+                if logit_margin(&pred.logits) < link.margin {
+                    // Low-confidence answer: withhold the reply and
+                    // hand the request to the sibling precision tier.
+                    // The replica did real work — its ledger and the
+                    // front tier's escalation ledger both settle here.
+                    metrics.record_replica(
+                        replica_id,
+                        exec,
+                        pred.accel_cycles,
+                        pred.accel_ms,
+                        false,
+                    );
+                    metrics.record_escalated(
+                        req.model,
+                        req.cost,
+                        pred.accel_cycles,
+                        pred.accel_ms,
+                        exec,
+                    );
+                    let mut req = req;
+                    req.origin = Some(req.model);
+                    req.model = link.target;
+                    req.cost = link
+                        .target_cost
+                        .as_ref()
+                        .map(|c| c.predict_cycles(req.tokens.len()))
+                        .unwrap_or(req.padded_len as u64);
+                    return ServeOutcome::Escalated(req);
+                }
+            }
             let e2e = req.submitted.elapsed().as_secs_f64();
             metrics.record_completion(e2e, queued, exec, pred.accel_ms);
             metrics.record_replica(replica_id, exec, pred.accel_cycles, pred.accel_ms, false);
@@ -571,6 +731,11 @@ fn serve_one(
                 exec,
                 false,
             );
+            if req.origin.is_some() {
+                // full cascade latency: submit -> INT4 attempt ->
+                // re-queue -> INT8 answer (the report's "cascade e2e")
+                metrics.record_cascade_e2e(e2e);
+            }
             Response {
                 id: req.id,
                 model: model_name.to_string(),
@@ -687,6 +852,7 @@ mod tests {
                 padded_len: 4,
                 cost: 4,
                 submitted: Instant::now(),
+                origin: None,
                 reply: tx,
             });
             receivers.push(rx);
@@ -858,7 +1024,7 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5)); // slow group is mid-flight
         let t0 = Instant::now();
         let (group, _rx) = group_for_model(1, 4);
-        let responses = pool.group(1).unwrap().dispatch(group);
+        let (responses, _) = pool.group(1).unwrap().dispatch(group);
         let fast_wall = t0.elapsed();
         slow_thread.join().unwrap();
         assert_eq!(responses.len(), 4);
@@ -886,6 +1052,8 @@ mod tests {
                     slo_ms: Some(10.0),
                     factory: Some(factory),
                     cost: None,
+                    escalate_to: None,
+                    escalate_margin: 0,
                 },
                 ModelGroup::fixed(
                     "fixed",
@@ -908,7 +1076,7 @@ mod tests {
         // all three active slots
         let (group, _rx) = group_for_model(0, 6);
         let mut replicas_hit: Vec<usize> =
-            g.dispatch(group).iter().map(|r| r.replica).collect();
+            g.dispatch(group).0.iter().map(|r| r.replica).collect();
         replicas_hit.sort_unstable();
         replicas_hit.dedup();
         assert_eq!(replicas_hit, vec![0, 1, 2]);
@@ -921,7 +1089,7 @@ mod tests {
         assert!(!g.shrink(), "at min: shrink is a no-op");
         assert_eq!(g.active_replicas(), 1);
         let (group, _rx) = group_for_model(0, 4);
-        let responses = g.dispatch(group);
+        let (responses, _) = g.dispatch(group);
         assert!(responses.iter().all(|r| r.error.is_none() && r.replica == 0));
         assert_eq!(metrics.model(0).scale_ups.load(std::sync::atomic::Ordering::Relaxed), 2);
         assert_eq!(
@@ -972,6 +1140,8 @@ mod tests {
                     slo_ms: Some(10.0),
                     factory: Some(factory),
                     cost: None,
+                    escalate_to: None,
+                    escalate_margin: 0,
                 },
                 ModelGroup::fixed("b", mk(2), 1),
             ],
@@ -984,6 +1154,119 @@ mod tests {
         assert!(pool.dispatch(group_a).iter().all(|r| r.error.is_none()));
         let (group_b, _rx_b) = group_for_model(1, 4);
         assert!(pool.dispatch(group_b).iter().all(|r| r.error.is_none()));
+    }
+
+    #[test]
+    fn cascade_escalates_low_margin_requests_to_target_tier() {
+        use std::sync::atomic::Ordering;
+        // Margin oracle: logit gap == tokens[0], so the test chooses
+        // exactly which requests fall below the front tier's threshold.
+        struct MarginReplica {
+            cycles: u64,
+        }
+        impl EngineReplica for MarginReplica {
+            fn predict(&self, tokens: &[i32]) -> Result<Prediction, RequestError> {
+                let gap = tokens[0] as i64;
+                Ok(Prediction {
+                    label: 0,
+                    logits: vec![1000 + gap, 1000],
+                    accel_cycles: self.cycles,
+                    accel_ms: 0.001,
+                })
+            }
+            fn seq_len(&self) -> usize {
+                4
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let front: Vec<Arc<dyn EngineReplica>> = vec![Arc::new(MarginReplica { cycles: 100 })];
+        let full: Vec<Arc<dyn EngineReplica>> = vec![Arc::new(MarginReplica { cycles: 400 })];
+        let pool = ReplicaPool::new_multi(
+            vec![
+                ModelGroup {
+                    model: "front".into(),
+                    replicas: front,
+                    weight: 1,
+                    min_replicas: 1,
+                    max_replicas: 1,
+                    slo_ms: None,
+                    factory: None,
+                    cost: None,
+                    escalate_to: Some("full".into()),
+                    escalate_margin: 10,
+                },
+                ModelGroup::fixed("full", full, 1),
+            ],
+            Arc::clone(&metrics),
+        );
+        assert_eq!(pool.group(0).unwrap().escalates_to(), Some(1));
+        assert_eq!(pool.group(1).unwrap().escalates_to(), None);
+        assert_eq!(metrics.model(0).escalate_margin.load(Ordering::Relaxed), 10);
+
+        // gaps 50, 3, 40, 7: requests 1 and 3 escalate
+        let (mut group, receivers) = group_for_model(0, 4);
+        for (req, gap) in group.iter_mut().zip([50, 3, 40, 7]) {
+            req.tokens = vec![gap; 4];
+        }
+        let responses = pool.dispatch(group);
+        assert_eq!(responses.len(), 4, "every request answered through the cascade");
+        // Facade ordering: front-tier replies first (submission order),
+        // then escalated replies — route each back by id.
+        let mut by_id: Vec<&Response> = responses.iter().collect();
+        by_id.sort_unstable_by_key(|r| r.id);
+        for (id, resp) in by_id.iter().enumerate() {
+            assert!(resp.error.is_none());
+            let escalated = id == 1 || id == 3;
+            assert_eq!(resp.model, if escalated { "full" } else { "front" });
+            assert_eq!(resp.replica, if escalated { 1 } else { 0 });
+        }
+        // exactly one reply per request channel, matching the return
+        for (id, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv().expect("reply sent");
+            assert_eq!(resp.id, id as u64);
+            assert!(rx.try_recv().is_err(), "no double reply for escalated request");
+        }
+        // front ledger: 4 attempts, 2 escalated, all 4 costs settled
+        let front_stats = metrics.model(0);
+        assert_eq!(front_stats.escalated.load(Ordering::Relaxed), 2);
+        assert_eq!(front_stats.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(front_stats.served_cost.load(Ordering::Relaxed), 16);
+        assert_eq!(front_stats.accel_cycles.load(Ordering::Relaxed), 400);
+        // full tier saw exactly the two re-enqueued requests
+        let full_stats = metrics.model(1);
+        assert_eq!(full_stats.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(full_stats.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(full_stats.backlog.load(Ordering::Relaxed), 0, "re-enqueue settled");
+        assert_eq!(full_stats.accel_cycles.load(Ordering::Relaxed), 800);
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 4);
+        assert_eq!(metrics.cascade_e2e_s.lock().unwrap().len(), 2);
+        let report = metrics.report();
+        assert!(report.contains("escalated=2"), "report surfaces escalations: {report}");
+    }
+
+    #[test]
+    fn cascade_link_to_unknown_target_panics_at_construction() {
+        let result = std::panic::catch_unwind(|| {
+            let metrics = Arc::new(Metrics::new());
+            let replicas: Vec<Arc<dyn EngineReplica>> =
+                vec![Arc::new(SlowReplica { delay: Duration::ZERO })];
+            ReplicaPool::new_multi(
+                vec![ModelGroup {
+                    model: "front".into(),
+                    replicas,
+                    weight: 1,
+                    min_replicas: 1,
+                    max_replicas: 1,
+                    slo_ms: None,
+                    factory: None,
+                    cost: None,
+                    escalate_to: Some("missing".into()),
+                    escalate_margin: 10,
+                }],
+                metrics,
+            )
+        });
+        assert!(result.is_err(), "dangling escalation target must fail fast");
     }
 
     #[test]
@@ -1013,6 +1296,8 @@ mod tests {
                 slo_ms: Some(5.0),
                 factory: Some(factory),
                 cost: None,
+                escalate_to: None,
+                escalate_margin: 0,
             }],
             Arc::clone(&metrics),
         );
@@ -1020,13 +1305,13 @@ mod tests {
         // first dispatch: the panic retires the slot, the request gets
         // the no-retry typed error
         let (group, _rx) = group_of(1);
-        let first = g.dispatch(group);
+        let (first, _) = g.dispatch(group);
         assert!(first[0].error.as_deref().unwrap_or("").contains("panicked"));
         assert_eq!(g.active_replicas(), 0);
         // second dispatch: zero active replicas — typed errors, every
         // request answered, dispatcher alive
         let (group, receivers) = group_of(2);
-        let responses = g.dispatch(group);
+        let (responses, _) = g.dispatch(group);
         assert_eq!(responses.len(), 2);
         for resp in &responses {
             assert!(resp.error.as_deref().unwrap_or("").contains("no active replicas"));

@@ -29,6 +29,14 @@ use std::sync::Arc;
 /// costs one Workspace arena, never a weight copy; DESIGN.md §9).
 pub type ReplicaFactory = Arc<dyn Fn() -> Result<Arc<dyn EngineReplica>, String> + Send + Sync>;
 
+/// Default cascade escalation threshold on the top-1 logit margin
+/// `|logits[0] - logits[1]|`, tuned on the synthetic workload
+/// (EXPERIMENTS.md §Cascade): at roberta_base width the INT4 tier's
+/// label flips against INT8 concentrate below this margin, so
+/// escalating the ~2-3% of requests under it recovers ≥ 99% top-1
+/// agreement while keeping the escalation surcharge small.
+pub const DEFAULT_ESCALATE_MARGIN: i64 = 6000;
+
 /// One model's serving group, ready for the router: the tenant-facing
 /// name, its (identical) initial replicas, its fair-share weight, the
 /// `min..=max` replica range the autoscaler may move within, the
@@ -58,6 +66,16 @@ pub struct ModelGroup {
     /// groups without a geometry (`None`) fall back to token-charged
     /// accounting.
     pub cost: Option<Arc<CostModel>>,
+    /// Cascade link (DESIGN.md §14): the model id low-margin responses
+    /// from this group escalate to.  `Some` marks this group as a
+    /// front tier (typically INT4); the named group must exist in the
+    /// same registry and serve the same tokens (same shared
+    /// `SyntheticModel`).
+    pub escalate_to: Option<String>,
+    /// Top-1 logit-margin threshold below which a front-tier response
+    /// escalates instead of being served (ignored when `escalate_to`
+    /// is `None`).  Per-tenant overrides ride on the request.
+    pub escalate_margin: i64,
 }
 
 impl ModelGroup {
@@ -78,6 +96,8 @@ impl ModelGroup {
             slo_ms: None,
             factory: None,
             cost: None,
+            escalate_to: None,
+            escalate_margin: 0,
         }
     }
 
@@ -104,6 +124,8 @@ struct Entry {
     slo_ms: Option<f64>,
     factory: Option<ReplicaFactory>,
     cost: Option<Arc<CostModel>>,
+    escalate_to: Option<String>,
+    escalate_margin: i64,
 }
 
 /// Registry of resident models, built once at startup and converted
@@ -254,6 +276,157 @@ impl ModelRegistry {
             slo_ms,
             factory: Some(factory),
             cost: Some(cost),
+            escalate_to: None,
+            escalate_margin: 0,
+        });
+        Ok(self)
+    }
+
+    /// Register a *cascade pair* (DESIGN.md §14): an INT4 front tier
+    /// under `name` plus its INT8 escalation sibling under
+    /// `"{name}@int8"`, both derived from the **same** synthetic weight
+    /// bundle built once from `seed`.  The INT4 tier quantizes that
+    /// bundle onto the packed-nibble grid once
+    /// ([`SyntheticModel::quantize_int4`](super::engine::SyntheticModel::quantize_int4))
+    /// and shares the lanes across its replicas; its hardware instance
+    /// is the equal-silicon [`HwConfig::int4_variant`] of the sibling's,
+    /// so the pair's [`CostModel`]s price the same die at two
+    /// precisions.  Requests dispatch to the front tier; responses
+    /// whose top-1 logit margin falls below `escalate_margin` re-enter
+    /// the router bound for the sibling instead of being served.  Both
+    /// groups autoscale independently within `min..=max`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn register_cascade_scaled(
+        &mut self,
+        name: &str,
+        preset: &str,
+        min_replicas: usize,
+        max_replicas: usize,
+        weight: u64,
+        slo_ms: Option<f64>,
+        seed: u64,
+        escalate_margin: i64,
+    ) -> Result<&mut Self, String> {
+        let geo = Geometry::preset(preset).ok_or_else(|| {
+            format!("unknown preset {preset:?} (expected one of {:?})", Geometry::PRESET_NAMES)
+        })?;
+        self.register_cascade_scaled_with_hw(
+            name,
+            preset,
+            min_replicas,
+            max_replicas,
+            weight,
+            slo_ms,
+            seed,
+            HwConfig::sized_to(&geo),
+            escalate_margin,
+        )
+    }
+
+    /// [`register_cascade_scaled`](ModelRegistry::register_cascade_scaled)
+    /// with an explicit INT8-tier hardware configuration (the INT4 tier
+    /// always runs its [`HwConfig::int4_variant`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn register_cascade_scaled_with_hw(
+        &mut self,
+        name: &str,
+        preset: &str,
+        min_replicas: usize,
+        max_replicas: usize,
+        weight: u64,
+        slo_ms: Option<f64>,
+        seed: u64,
+        hw8: HwConfig,
+        escalate_margin: i64,
+    ) -> Result<&mut Self, String> {
+        let sibling = format!("{name}@int8");
+        self.check(name, min_replicas, weight)?;
+        self.check(&sibling, min_replicas, weight)?;
+        check_range(name, min_replicas, max_replicas, slo_ms)?;
+        if escalate_margin < 0 {
+            return Err(format!(
+                "model {name:?}: escalation margin must be non-negative, got {escalate_margin}"
+            ));
+        }
+        let geo = Geometry::preset(preset).ok_or_else(|| {
+            format!("unknown preset {preset:?} (expected one of {:?})", Geometry::PRESET_NAMES)
+        })?;
+        hw8.validate(&geo)?;
+        let hw4 = hw8.int4_variant();
+        hw4.validate(&geo)?;
+        let cost8 = Arc::new(CostModel::build(&hw8, &geo)?);
+        let cost4 = Arc::new(CostModel::build(&hw4, &geo)?);
+        let model = Arc::new(super::engine::SyntheticModel::build(preset, seed)?);
+        // quantize the shared bundle onto the nibble grid exactly once;
+        // every INT4 replica (initial and factory-spawned) borrows it
+        let lanes4 = Arc::new(model.quantize_int4());
+
+        let int4_replicas: Vec<Arc<dyn EngineReplica>> = (0..min_replicas)
+            .map(|_| {
+                Arc::new(FunctionalEngine::from_model_int4(
+                    Arc::clone(&model),
+                    Arc::clone(&lanes4),
+                    hw4,
+                    Arc::clone(&cost4),
+                )) as Arc<dyn EngineReplica>
+            })
+            .collect();
+        let f_model = Arc::clone(&model);
+        let f_lanes = Arc::clone(&lanes4);
+        let f_cost = Arc::clone(&cost4);
+        let int4_factory: ReplicaFactory = Arc::new(move || {
+            Ok(Arc::new(FunctionalEngine::from_model_int4(
+                Arc::clone(&f_model),
+                Arc::clone(&f_lanes),
+                hw4,
+                Arc::clone(&f_cost),
+            )) as Arc<dyn EngineReplica>)
+        });
+        self.entries.push(Entry {
+            name: name.to_string(),
+            preset: Some(preset.to_string()),
+            geometry: Some(geo),
+            weight,
+            replicas: int4_replicas,
+            min_replicas,
+            max_replicas,
+            slo_ms,
+            factory: Some(int4_factory),
+            cost: Some(cost4),
+            escalate_to: Some(sibling.clone()),
+            escalate_margin,
+        });
+
+        let int8_replicas: Vec<Arc<dyn EngineReplica>> = (0..min_replicas)
+            .map(|_| {
+                Arc::new(FunctionalEngine::from_model_with_cost(
+                    Arc::clone(&model),
+                    hw8,
+                    Arc::clone(&cost8),
+                )) as Arc<dyn EngineReplica>
+            })
+            .collect();
+        let f_cost8 = Arc::clone(&cost8);
+        let int8_factory: ReplicaFactory = Arc::new(move || {
+            Ok(Arc::new(FunctionalEngine::from_model_with_cost(
+                Arc::clone(&model),
+                hw8,
+                Arc::clone(&f_cost8),
+            )) as Arc<dyn EngineReplica>)
+        });
+        self.entries.push(Entry {
+            name: sibling,
+            preset: Some(preset.to_string()),
+            geometry: Some(geo),
+            weight,
+            replicas: int8_replicas,
+            min_replicas,
+            max_replicas,
+            slo_ms,
+            factory: Some(int8_factory),
+            cost: Some(cost8),
+            escalate_to: None,
+            escalate_margin: 0,
         });
         Ok(self)
     }
@@ -281,6 +454,8 @@ impl ModelRegistry {
             slo_ms: None,
             factory: None,
             cost: None,
+            escalate_to: None,
+            escalate_margin: 0,
         });
         Ok(self)
     }
@@ -313,6 +488,8 @@ impl ModelRegistry {
             slo_ms,
             factory: Some(factory),
             cost: None,
+            escalate_to: None,
+            escalate_margin: 0,
         });
         Ok(self)
     }
@@ -325,9 +502,15 @@ impl ModelRegistry {
         self.entries.is_empty()
     }
 
-    /// Registered model ids, in model-index order.
+    /// Registered model ids, deterministically ordered (sorted) — a
+    /// stable listing for operator surfaces and tests regardless of
+    /// registration order.  The *model-index* order (batcher shards,
+    /// metrics ledgers) remains registration order; consult
+    /// [`into_groups`](ModelRegistry::into_groups) for that.
     pub fn names(&self) -> Vec<&str> {
-        self.entries.iter().map(|e| e.name.as_str()).collect()
+        let mut v: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+        v.sort_unstable();
+        v
     }
 
     /// Geometry preset backing `name` (None for custom groups or
@@ -384,6 +567,8 @@ impl ModelRegistry {
                 slo_ms: e.slo_ms,
                 factory: e.factory,
                 cost: e.cost,
+                escalate_to: e.escalate_to,
+                escalate_margin: e.escalate_margin,
             })
             .collect()
     }
@@ -419,7 +604,9 @@ mod tests {
         reg.register("tiny", "tiny", 2, 2, 7).unwrap();
         reg.register("small", "small", 1, 1, 11).unwrap();
         assert_eq!(reg.len(), 2);
-        assert_eq!(reg.names(), vec!["tiny", "small"]);
+        // names() sorts for a deterministic listing (registration order
+        // was tiny, small)
+        assert_eq!(reg.names(), vec!["small", "tiny"]);
         assert_eq!(reg.geometry("tiny"), Geometry::preset("tiny"));
         assert_eq!(reg.preset("small"), Some("small"));
         assert_eq!(reg.weight("tiny"), Some(2));
@@ -491,6 +678,56 @@ mod tests {
                 .total_cycles
         );
         assert!(groups[1].cost.is_none(), "custom groups stay token-charged");
+    }
+
+    #[test]
+    fn cascade_registration_builds_linked_precision_tiers() {
+        let mut reg = ModelRegistry::new();
+        reg.register_cascade_scaled("tiny", "tiny", 1, 2, 3, Some(10.0), 7, 500).unwrap();
+        assert_eq!(reg.len(), 2, "one cascade call registers both tiers");
+        assert_eq!(reg.names(), vec!["tiny", "tiny@int8"]);
+        assert_eq!(reg.preset("tiny@int8"), Some("tiny"));
+        let geo = Geometry::preset("tiny").unwrap();
+        let groups = reg.into_groups();
+        assert_eq!(groups[0].escalate_to.as_deref(), Some("tiny@int8"));
+        assert_eq!(groups[0].escalate_margin, 500);
+        assert!(groups[1].escalate_to.is_none(), "the INT8 tier is terminal");
+        let c4 = groups[0].cost.as_ref().expect("front tier carries a cost model");
+        let c8 = groups[1].cost.as_ref().expect("sibling carries a cost model");
+        assert!(
+            c4.predict_cycles(geo.m) < c8.predict_cycles(geo.m),
+            "the INT4 tier prices the same die below INT8"
+        );
+        // both tiers serve the same request range and both factories
+        // spawn working replicas off the shared bundle
+        let toks: Vec<i32> = (0..geo.m.min(6)).map(|i| (i * 7 % 60) as i32).collect();
+        for g in &groups {
+            assert!(g.scalable());
+            let spawned = g.factory.as_ref().unwrap()().unwrap();
+            let a = g.replicas[0].predict(&toks).unwrap();
+            let b = spawned.predict(&toks).unwrap();
+            assert_eq!(a.logits, b.logits, "{}: factory replica diverged", g.model);
+        }
+    }
+
+    #[test]
+    fn cascade_registration_rejects_id_collisions_and_bad_margins() {
+        let mut reg = ModelRegistry::new();
+        reg.register("busy@int8", "tiny", 1, 1, 7).unwrap();
+        assert!(
+            reg.register_cascade_scaled("busy", "tiny", 1, 1, 1, None, 7, 0).is_err(),
+            "sibling id collision"
+        );
+        assert!(
+            reg.register_cascade_scaled("m", "tiny", 1, 1, 1, None, 7, -1).is_err(),
+            "negative margin"
+        );
+        assert_eq!(reg.len(), 1, "failed cascade registrations leave no residue");
+        reg.register_cascade_scaled("tiny", "tiny", 1, 1, 1, None, 7, 0).unwrap();
+        assert!(
+            reg.register("tiny@int8", "tiny", 1, 1, 7).is_err(),
+            "the sibling id is reserved"
+        );
     }
 
     #[test]

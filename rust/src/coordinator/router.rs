@@ -58,6 +58,12 @@ pub struct Request {
     /// on the per-model work gauges at completion.
     pub cost: u64,
     pub submitted: Instant,
+    /// cascade provenance: `Some(front_model)` once a low-precision
+    /// tier escalated this request here (DESIGN.md §14).  `model` and
+    /// `cost` have been rewritten to the escalation target; `submitted`
+    /// keeps the original submit time, so the answering tier's e2e
+    /// covers both hops (the report's "cascade e2e" series).
+    pub origin: Option<usize>,
     pub reply: Sender<Response>,
 }
 
@@ -352,7 +358,16 @@ impl Router {
         // model's dispatcher — the global-mutex + `notify_all`
         // thundering herd of the single-batcher pipeline is gone.
         self.batcher.push_costed(
-            Request { id, model, tokens, padded_len: padded, cost, submitted: Instant::now(), reply },
+            Request {
+                id,
+                model,
+                tokens,
+                padded_len: padded,
+                cost,
+                submitted: Instant::now(),
+                origin: None,
+                reply,
+            },
             model,
             len,
             cost,
@@ -424,12 +439,25 @@ fn dispatch_group_loop(batcher: Arc<ShardedBatcher<Request>>, rt: Arc<super::poo
     let g = rt.model_index();
     while let Some(group) = batcher.next_batch(g) {
         let n = group.len();
-        if catch_unwind(AssertUnwindSafe(|| rt.dispatch(group))).is_err() {
-            eprintln!(
+        match catch_unwind(AssertUnwindSafe(|| rt.dispatch(group))) {
+            Ok((_responses, escalated)) => {
+                // Cascade overflow (DESIGN.md §14): requests the margin
+                // gate withheld re-enter the queue on their escalation
+                // tier's shard — already re-targeted, re-priced, and
+                // accounted by the group runtime — and that tier's own
+                // dispatcher picks them up.  The push wakes only the
+                // target's condvar; this loop goes straight back to its
+                // own shard.
+                for req in escalated {
+                    let (target, len, cost) = (req.model, req.tokens.len(), req.cost);
+                    batcher.push_costed(req, target, len, cost);
+                }
+            }
+            Err(_) => eprintln!(
                 "swifttron-dispatch-{}: dispatch panicked; {n} request(s) dropped \
                  without replies, pipeline continues",
                 rt.model()
-            );
+            ),
         }
         // Completion report closes the pop's in-flight window: the
         // fairness epoch may reset and the autoscaler's backlog signal

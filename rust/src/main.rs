@@ -5,7 +5,7 @@ use std::sync::Arc;
 use swifttron::baselines::{comparison_table, fp32_asic_report, gpu_inference_ms, GpuModel};
 use swifttron::coordinator::{
     AutoscalePolicy, BatchPolicy, EngineReplica, FunctionalEngine, InferenceEngine, Metrics,
-    ModelGroup, ModelRegistry, Router,
+    ModelGroup, ModelRegistry, Router, DEFAULT_ESCALATE_MARGIN,
 };
 use swifttron::model::{Geometry, Manifest};
 use swifttron::runtime::Engine;
@@ -52,10 +52,13 @@ fn usage() -> String {
      \x20 infer    --tokens 1,2,3,...      one tiny-task inference via PJRT\n\
      \x20 serve    --addr 127.0.0.1:7077   TCP serving front-end\n\
      \x20          [--replicas N --max-batch B --engine pjrt|functional]\n\
-     \x20          [--models name=preset[:min-max[:weight[:slo_ms]]],...]  multi-tenant\n\
+     \x20          [--models name=preset[@int4][:min-max[:weight[:slo_ms]]],...]  multi-tenant\n\
      \x20          (replicas as N pins the group; MIN-MAX + slo_ms enables the\n\
      \x20           SLO autoscaler; request lines may carry a model prefix:\n\
-     \x20           \"tiny:3,17,42\")\n\
+     \x20           \"tiny:3,17,42\"; preset@int4 registers the tenant as a\n\
+     \x20           confidence-gated INT4/INT8 cascade pair)\n\
+     \x20          [--escalate-margin M]  cascade threshold on the top-1 logit\n\
+     \x20          gap: @int4 tenants escalate answers below it to INT8\n\
      \x20          [--front mux|threads --max-conns N]  front door + connection cap\n\
      \x20          (mux = non-blocking SWWIRE1 binary multiplexer with text\n\
      \x20           auto-detection and SLO load shedding; threads = legacy\n\
@@ -188,18 +191,31 @@ struct ModelSpec {
     max_replicas: usize,
     weight: u64,
     slo_ms: Option<f64>,
+    /// `preset@int4`: register the tenant as an INT4/INT8 cascade pair
+    /// (DESIGN.md §14) instead of a single INT8 group
+    int4: bool,
 }
 
 /// Parse one `--models` entry: `name=preset[:min-max[:weight[:slo_ms]]]`.
 /// The replica field accepts a plain `N` (fixed group, the PR 4 form)
 /// or a `MIN-MAX` range the SLO autoscaler moves within; `slo_ms` is
-/// the model's target latency class in milliseconds.
+/// the model's target latency class in milliseconds.  A `@int4` suffix
+/// on the preset (`name=preset@int4:...`) registers the tenant as a
+/// confidence-gated INT4/INT8 cascade pair.
 fn parse_model_spec(part: &str) -> Result<ModelSpec, String> {
-    let bad =
-        || format!("bad model spec {part:?} (want name=preset[:min-max[:weight[:slo_ms]]])");
+    let bad = || {
+        format!("bad model spec {part:?} (want name=preset[@int4][:min-max[:weight[:slo_ms]]])")
+    };
     let (name, rest) = part.split_once('=').ok_or_else(bad)?;
     let mut it = rest.split(':');
-    let preset = it.next().ok_or_else(bad)?.trim().to_string();
+    let mut preset = it.next().ok_or_else(bad)?.trim().to_string();
+    let int4 = match preset.strip_suffix("@int4") {
+        Some(base) => {
+            preset = base.trim().to_string();
+            true
+        }
+        None => false,
+    };
     let (min_replicas, max_replicas) = match it.next() {
         Some(s) => match s.trim().split_once('-') {
             Some((lo, hi)) => (
@@ -231,6 +247,7 @@ fn parse_model_spec(part: &str) -> Result<ModelSpec, String> {
         max_replicas,
         weight,
         slo_ms,
+        int4,
     })
 }
 
@@ -243,7 +260,15 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         .opt(
             "models",
             "",
-            "multi-tenant spec name=preset[:min-max[:weight[:slo_ms]]],... (functional backend)",
+            "multi-tenant spec name=preset[@int4][:min-max[:weight[:slo_ms]]],... \
+             (functional backend; @int4 = confidence-gated INT4/INT8 cascade pair)",
+        )
+        .opt(
+            "escalate-margin",
+            "",
+            "cascade confidence threshold on the top-1 logit gap: @int4 tenants \
+             escalate lower-margin answers to their INT8 tier (default: tuned \
+             on the synthetic workload)",
         )
         .opt("front", "threads", "front door: mux (SWWIRE1 binary multiplexer) | threads")
         .opt("max-conns", "1024", "concurrent-connection cap (typed busy rejection past it)")
@@ -274,18 +299,43 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
                     .into(),
             );
         }
+        let escalate_margin = if p.get("escalate-margin").is_empty() {
+            DEFAULT_ESCALATE_MARGIN
+        } else {
+            let m = p
+                .get("escalate-margin")
+                .parse::<i64>()
+                .map_err(|_| "--escalate-margin must be an integer".to_string())?;
+            if m < 0 {
+                return Err("--escalate-margin must be non-negative".into());
+            }
+            m
+        };
         let mut reg = ModelRegistry::new();
         for part in p.get("models").split(',') {
             let spec = parse_model_spec(part.trim())?;
-            reg.register_scaled(
-                &spec.name,
-                &spec.preset,
-                spec.min_replicas,
-                spec.max_replicas,
-                spec.weight,
-                spec.slo_ms,
-                7,
-            )?;
+            if spec.int4 {
+                reg.register_cascade_scaled(
+                    &spec.name,
+                    &spec.preset,
+                    spec.min_replicas,
+                    spec.max_replicas,
+                    spec.weight,
+                    spec.slo_ms,
+                    7,
+                    escalate_margin,
+                )?;
+            } else {
+                reg.register_scaled(
+                    &spec.name,
+                    &spec.preset,
+                    spec.min_replicas,
+                    spec.max_replicas,
+                    spec.weight,
+                    spec.slo_ms,
+                    7,
+                )?;
+            }
         }
         let router = Arc::new(Router::start_multi_cores(
             reg.into_groups(),
@@ -398,6 +448,21 @@ mod tests {
         // the autoscaled form: min-max range + SLO class
         let s = parse_model_spec(" big = roberta_base : 1-4 : 2 : 25.5 ").unwrap();
         assert_eq!(s.name, "big");
+        assert_eq!((s.min_replicas, s.max_replicas, s.weight), (1, 4, 2));
+        assert_eq!(s.slo_ms, Some(25.5));
+        assert!(!s.int4, "no @int4 suffix: plain INT8 group");
+    }
+
+    #[test]
+    fn model_spec_parses_int4_cascade_suffix() {
+        let s = parse_model_spec("t=tiny@int4").unwrap();
+        assert_eq!(s.preset, "tiny");
+        assert!(s.int4);
+        assert_eq!((s.min_replicas, s.max_replicas), (1, 1));
+        // suffix composes with the ranged + SLO form
+        let s = parse_model_spec("big=roberta_base@int4:1-4:2:25.5").unwrap();
+        assert_eq!(s.preset, "roberta_base");
+        assert!(s.int4);
         assert_eq!((s.min_replicas, s.max_replicas, s.weight), (1, 4, 2));
         assert_eq!(s.slo_ms, Some(25.5));
     }

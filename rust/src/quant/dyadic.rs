@@ -53,6 +53,25 @@ impl Dyadic {
     pub fn value(&self) -> f64 {
         self.b as f64 / (1u64 << self.c) as f64
     }
+
+    /// Multiply the dyadic by `2^p` *exactly*: shrink the shift while it
+    /// lasts, then widen the mantissa.  The INT4 weight tier uses this
+    /// to compensate its 16x-smaller accumulator scale at readout
+    /// (`quant::int4`): for any accumulator `q`,
+    /// `requantize(q, dy.scale_pow2(p)) == requantize(q << p, dy)` —
+    /// shifting the product left by `p` before an arithmetic right
+    /// shift by `c` is exactly a right shift by `c - p` (or a left
+    /// shift by `p - c`), so the two forms are bit-identical, not
+    /// approximately equal.  The widened mantissa stays far inside the
+    /// `q * b` INT64 no-overflow argument (`b < 2^16` becomes
+    /// `b < 2^(16+p)`; the paths that use this scale by `p = 4`).
+    pub fn scale_pow2(self, p: u32) -> Dyadic {
+        if self.c >= p {
+            Dyadic { b: self.b, c: self.c - p }
+        } else {
+            Dyadic { b: self.b << (p - self.c), c: 0 }
+        }
+    }
 }
 
 /// INT32 -> INT8 requantization: `clamp((q * b) >> c)` (paper Fig. 7).

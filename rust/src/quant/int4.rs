@@ -1,0 +1,416 @@
+//! INT4 x INT8 -> INT32 matrix multiplication: the packed low-precision
+//! weight tier of the cascade serving path (DESIGN.md §14).
+//!
+//! Weights are quantized to 4-bit two's-complement nibbles (`-8..=7`)
+//! at 1/16 of the INT8 weight scale — `w4 ≈ w8 / 16`, round-half-up —
+//! and packed two-per-byte along the contraction dimension `k`: byte
+//! `t*n + j` holds `w[2t][j]` in its low nibble and `w[2t+1][j]` in its
+//! high nibble (an odd `k` leaves the final high nibble zero).  The
+//! hardware reading of this layout is the one BETA-style accelerators
+//! use: one weight-SRAM word feeds *two* k-panels of the MAC array per
+//! cycle, which is exactly how the cycle model charges it
+//! (`sim::units::weight_matmul_cycles` halves the streamed `k`).
+//!
+//! Numerics follow the same conventions as the INT8 kernels
+//! (`quant::matmul`): bias folds in at readout, floor rounding
+//! everywhere downstream, INT32 accumulators (the nibble operands make
+//! the width argument *stronger*: `|x*w| <= 128*8`, so `k` up to
+//! `2^31 / 1024` is safe — guarded under `debug_assertions`).  The
+//! scale change is compensated downstream by scaling the readout
+//! dyadics by `2^4` ([`crate::quant::Dyadic::scale_pow2`]), which is
+//! bit-exact with multiplying the accumulator by 16 first.
+//!
+//! Two implementations, bit-identical by construction and asserted
+//! against each other on randomized shapes (`rust/tests/int4_kernels.rs`):
+//! * the packed kernels ([`i_matmul_int4`] and friends), which decode
+//!   nibbles inline at the MAC, and
+//! * the unpacked reference ([`i_matmul_int4_ref`]), which expands the
+//!   nibbles back to `i32` and runs the golden INT8 kernel — the oracle
+//!   every packed variant must match bit for bit.
+
+use super::dyadic::Dyadic;
+use super::matmul::{i_matmul, Epilogue};
+use super::{div_floor, i_matmul_epilogue};
+use crate::util::threadpool::{default_parallelism, tile_ranges};
+
+/// Shift that relates the INT4 and INT8 weight scales: `w8 ≈ w4 << 4`.
+/// Readout dyadics of INT4 matmuls are pre-scaled by `2^INT4_SHIFT`
+/// ([`Dyadic::scale_pow2`]); accumulators feeding a *non-linear* unit
+/// (GELU) are rescaled by `1 << INT4_SHIFT` explicitly instead.
+pub const INT4_SHIFT: u32 = 4;
+
+/// Quantize INT8-scale weights to the INT4 grid: round-half-up to the
+/// nearest multiple of 16, clamped to the nibble range `-8..=7`
+/// (`127 -> 8` would overflow the nibble, so the positive rail clamps).
+pub fn int4_from_int8(w: &[i32]) -> Vec<i32> {
+    w.iter().map(|&v| div_floor(v as i64 + 8, 16).clamp(-8, 7) as i32).collect()
+}
+
+/// Pack nibble-range weights `(k, n)` two-per-byte along `k`: byte
+/// `t*n + j` holds row `2t` (low nibble) and row `2t+1` (high nibble);
+/// an odd `k` zero-fills the final high nibble.  Panics if any value is
+/// outside `-8..=7`.
+pub fn pack_int4(w4: &[i32], k: usize, n: usize) -> Vec<u8> {
+    assert_eq!(w4.len(), k * n, "w4 shape");
+    assert!(
+        w4.iter().all(|&v| (-8..=7).contains(&v)),
+        "pack_int4 operand outside the INT4 nibble range"
+    );
+    let kp = k.div_ceil(2);
+    let mut packed = vec![0u8; kp * n];
+    for t in 0..kp {
+        for j in 0..n {
+            let lo = w4[(2 * t) * n + j] as u8 & 0x0F;
+            let hi = if 2 * t + 1 < k { (w4[(2 * t + 1) * n + j] as u8 & 0x0F) << 4 } else { 0 };
+            packed[t * n + j] = lo | hi;
+        }
+    }
+    packed
+}
+
+/// Sign-extend the low nibble of a packed byte.
+#[inline]
+fn lo_nibble(b: u8) -> i32 {
+    (((b << 4) as i8) >> 4) as i32
+}
+
+/// Sign-extend the high nibble of a packed byte.
+#[inline]
+fn hi_nibble(b: u8) -> i32 {
+    ((b as i8) >> 4) as i32
+}
+
+/// Expand a packed `(k, n)` weight tensor back to `i32` nibble values —
+/// the inverse of [`pack_int4`], used by the golden reference path.
+pub fn unpack_int4(packed: &[u8], k: usize, n: usize) -> Vec<i32> {
+    let kp = k.div_ceil(2);
+    assert_eq!(packed.len(), kp * n, "packed shape");
+    let mut w4 = vec![0i32; k * n];
+    for t in 0..kp {
+        for j in 0..n {
+            let b = packed[t * n + j];
+            w4[(2 * t) * n + j] = lo_nibble(b);
+            if 2 * t + 1 < k {
+                w4[(2 * t + 1) * n + j] = hi_nibble(b);
+            }
+        }
+    }
+    w4
+}
+
+/// Shared shape/operand checks of the packed kernels.
+#[inline]
+fn check_int4(
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: usize,
+) {
+    assert_eq!(x.len(), m * k, "x shape");
+    assert_eq!(packed.len(), k.div_ceil(2) * n, "packed w shape");
+    assert_eq!(out, m * n, "out shape");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "bias shape");
+    }
+    debug_assert!(
+        x.iter().all(|&v| (-128..=127).contains(&v)),
+        "i_matmul_int4 operand outside INT8 range"
+    );
+    // widened-accumulator argument: |x*w| <= 128*8 per MAC, so the
+    // INT32 accumulator holds contractions 16x deeper than the INT8
+    // kernel's bound before bias
+    debug_assert!(k <= (i32::MAX as usize) / (128 * 8), "contraction too deep for INT32");
+}
+
+/// One output row of the packed kernel: bias init, then the k-pair
+/// multiply-accumulate sweep decoding two weight rows per packed byte.
+/// Per-column accumulation visits `k` in ascending order, exactly like
+/// the INT8 `mac_row`, so the packed result is bit-identical to the
+/// unpacked reference by construction.
+#[inline]
+fn mac_row_int4(xrow: &[i32], packed: &[u8], bias: Option<&[i32]>, n: usize, orow: &mut [i32]) {
+    match bias {
+        Some(b) => orow.copy_from_slice(b),
+        None => orow.fill(0),
+    }
+    let k = xrow.len();
+    for t in 0..k.div_ceil(2) {
+        let x0 = xrow[2 * t];
+        // the odd-k tail byte's high nibble is packed as zero, so a
+        // zero stand-in activation keeps the sweep uniform
+        let x1 = if 2 * t + 1 < k { xrow[2 * t + 1] } else { 0 };
+        if x0 == 0 && x1 == 0 {
+            continue;
+        }
+        let wrow = &packed[t * n..(t + 1) * n];
+        // plain i32 MACs over decoded nibbles: same autovectorization
+        // story as the INT8 kernel (an i64 widening would block SIMD)
+        for (o, &b) in orow.iter_mut().zip(wrow) {
+            *o += x0 * lo_nibble(b) + x1 * hi_nibble(b);
+        }
+    }
+}
+
+/// `out[m][n] = sum_k x[m][k] * w4[k][n] (+ bias[n])` over packed INT4
+/// weights, INT32 accumulators — the packed twin of
+/// [`crate::quant::i_matmul`].
+pub fn i_matmul_int4(
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    check_int4(x, packed, bias, m, k, n, out.len());
+    for i in 0..m {
+        mac_row_int4(&x[i * k..(i + 1) * k], packed, bias, n, &mut out[i * n..(i + 1) * n]);
+    }
+}
+
+/// [`i_matmul_int4`] with `epi` fused at each finished row's readout —
+/// the packed twin of [`crate::quant::i_matmul_epilogue`].  For INT4
+/// requantize paths the caller passes the `2^4`-scaled dyadic
+/// ([`Dyadic::scale_pow2`]), which restores the INT8 accumulator scale
+/// bit-exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn i_matmul_int4_epilogue(
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [i32],
+) {
+    check_int4(x, packed, bias, m, k, n, out.len());
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        mac_row_int4(&x[i * k..(i + 1) * k], packed, bias, n, orow);
+        epi.apply(orow);
+    }
+}
+
+/// Unpacked golden reference: expand the nibbles and run the INT8
+/// kernel.  Every packed variant must match this bit for bit
+/// (`rust/tests/int4_kernels.rs`).
+pub fn i_matmul_int4_ref(
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    let w4 = unpack_int4(packed, k, n);
+    i_matmul(x, &w4, bias, m, k, n, out);
+}
+
+/// Unpacked golden reference of the fused path: expand, then run the
+/// INT8 epilogue kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn i_matmul_int4_ref_epilogue(
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [i32],
+) {
+    let w4 = unpack_int4(packed, k, n);
+    i_matmul_epilogue(x, &w4, bias, m, k, n, epi, out);
+}
+
+/// Row-tiled parallel [`i_matmul_int4`]; same tiling contract as
+/// [`crate::quant::i_matmul_tiled`] (disjoint row bands, bit-exact with
+/// the serial kernel).
+pub fn i_matmul_int4_tiled(
+    threads: usize,
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    check_int4(x, packed, bias, m, k, n, out.len());
+    let tiles = tile_ranges(m, threads);
+    if tiles.len() <= 1 {
+        return i_matmul_int4(x, packed, bias, m, k, n, out);
+    }
+    std::thread::scope(|s| {
+        let mut rem: &mut [i32] = out;
+        for t in tiles {
+            let rows = t.len();
+            let (tile_out, rest) = std::mem::take(&mut rem).split_at_mut(rows * n);
+            rem = rest;
+            let x_tile = &x[t.start * k..t.end * k];
+            s.spawn(move || i_matmul_int4(x_tile, packed, bias, rows, k, n, tile_out));
+        }
+    });
+}
+
+/// Row-tiled parallel [`i_matmul_int4_epilogue`]; the epilogue runs
+/// inside each tile as its rows finish.
+#[allow(clippy::too_many_arguments)]
+pub fn i_matmul_int4_epilogue_tiled(
+    threads: usize,
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [i32],
+) {
+    check_int4(x, packed, bias, m, k, n, out.len());
+    let tiles = tile_ranges(m, threads);
+    if tiles.len() <= 1 {
+        return i_matmul_int4_epilogue(x, packed, bias, m, k, n, epi, out);
+    }
+    std::thread::scope(|s| {
+        let mut rem: &mut [i32] = out;
+        for t in tiles {
+            let rows = t.len();
+            let (tile_out, rest) = std::mem::take(&mut rem).split_at_mut(rows * n);
+            rem = rest;
+            let x_tile = &x[t.start * k..t.end * k];
+            s.spawn(move || {
+                i_matmul_int4_epilogue(x_tile, packed, bias, rows, k, n, epi, tile_out)
+            });
+        }
+    });
+}
+
+/// Auto-dispatching [`i_matmul_int4`]: parallel at/above
+/// [`crate::quant::PAR_MIN_MACS`] multiply-accumulates, serial below —
+/// the same threshold as the INT8 `_par` entry points.
+pub fn i_matmul_int4_par(
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    if m > 1 && m.saturating_mul(k).saturating_mul(n) >= super::PAR_MIN_MACS {
+        i_matmul_int4_tiled(default_parallelism(), x, packed, bias, m, k, n, out)
+    } else {
+        i_matmul_int4(x, packed, bias, m, k, n, out)
+    }
+}
+
+/// Auto-dispatching [`i_matmul_int4_epilogue`]; see
+/// [`i_matmul_int4_par`].
+#[allow(clippy::too_many_arguments)]
+pub fn i_matmul_int4_epilogue_par(
+    x: &[i32],
+    packed: &[u8],
+    bias: Option<&[i32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [i32],
+) {
+    if m > 1 && m.saturating_mul(k).saturating_mul(n) >= super::PAR_MIN_MACS {
+        i_matmul_int4_epilogue_tiled(default_parallelism(), x, packed, bias, m, k, n, epi, out)
+    } else {
+        i_matmul_int4_epilogue(x, packed, bias, m, k, n, epi, out)
+    }
+}
+
+/// Quantize an INT8-scale bias to the INT4 accumulator scale (the
+/// accumulator sits 4 bits lower, so the bias divides by 16 with the
+/// same round-half-up the weights use).
+pub fn bias_int4(b: &[i32]) -> Vec<i32> {
+    b.iter().map(|&v| div_floor(v as i64 + 8, 16) as i32).collect()
+}
+
+/// The readout dyadic of an INT4 matmul: the INT8 dyadic scaled by
+/// `2^INT4_SHIFT`, compensating the 16x-smaller accumulator bit-exactly
+/// (see [`Dyadic::scale_pow2`]).
+pub fn int4_readout_dyadic(dy: Dyadic) -> Dyadic {
+    dy.scale_pow2(INT4_SHIFT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{requantize, rescale};
+
+    #[test]
+    fn quantization_rounds_half_up_and_clamps() {
+        // w8 = 16*w4 exactly on the grid; round-half-up between cells;
+        // +127 clamps to the nibble rail
+        assert_eq!(
+            int4_from_int8(&[0, 16, -16, 8, 7, -8, -9, 127, -128]),
+            vec![0, 1, -1, 1, 0, 0, -1, 7, -8]
+        );
+    }
+
+    #[test]
+    fn pack_unpack_round_trips_odd_and_even_k() {
+        for (k, n) in [(1usize, 3usize), (2, 3), (5, 4), (8, 1)] {
+            let w4: Vec<i32> = (0..k * n).map(|v| (v as i32 % 16) - 8).collect();
+            let packed = pack_int4(&w4, k, n);
+            assert_eq!(packed.len(), k.div_ceil(2) * n);
+            assert_eq!(unpack_int4(&packed, k, n), w4, "k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_matches_reference_on_identity() {
+        let k = 3;
+        let mut eye4 = vec![0i32; k * k];
+        for i in 0..k {
+            eye4[i * k + i] = 1;
+        }
+        let packed = pack_int4(&eye4, k, k);
+        let x: Vec<i32> = vec![5, -7, 3, 0, 2, -8, 1, 1, 1];
+        let mut out = vec![0i32; k * k];
+        i_matmul_int4(&x, &packed, None, k, k, k, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn scaled_dyadic_equals_prescaled_accumulator() {
+        // Requant(dy.scale_pow2(4)) on acc == Requant(dy) on 16*acc —
+        // the identity the whole INT4 requantize path rests on
+        let mut rng = crate::util::rng::Rng::new(0x14);
+        for _ in 0..2000 {
+            let dy = Dyadic::approx16(0.0001 + rng.f64() * 10.0);
+            let dy4 = int4_readout_dyadic(dy);
+            let acc = rng.range_i64(-(1 << 24), 1 << 24);
+            assert_eq!(requantize(acc, dy4), requantize(acc * 16, dy), "{dy:?} acc={acc}");
+            assert_eq!(rescale(acc, dy4), rescale(acc * 16, dy), "{dy:?} acc={acc}");
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "INT8 range")]
+    fn packed_kernel_rejects_out_of_range_activations_in_debug() {
+        let packed = pack_int4(&[1, 1, 1, 1], 2, 2);
+        let x = vec![300i32; 4];
+        let mut out = vec![0i32; 4];
+        i_matmul_int4(&x, &packed, None, 2, 2, 2, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "nibble range")]
+    fn pack_rejects_out_of_range_nibbles() {
+        pack_int4(&[8, 0], 1, 2);
+    }
+}

@@ -15,12 +15,19 @@
 
 pub mod dyadic;
 pub mod gelu;
+pub mod int4;
 pub mod layernorm;
 pub mod matmul;
 pub mod softmax;
 
 pub use dyadic::{requantize, requantize_signed, rescale, Dyadic};
 pub use gelu::{i_gelu, GeluConsts};
+pub use int4::{
+    bias_int4, i_matmul_int4, i_matmul_int4_epilogue, i_matmul_int4_epilogue_par,
+    i_matmul_int4_epilogue_tiled, i_matmul_int4_par, i_matmul_int4_ref,
+    i_matmul_int4_ref_epilogue, i_matmul_int4_tiled, int4_from_int8, int4_readout_dyadic,
+    pack_int4, unpack_int4, INT4_SHIFT,
+};
 pub use layernorm::{i_layernorm, i_sqrt, LayerNormConsts, LN_P};
 pub use matmul::{
     i_matmul, i_matmul_bt, i_matmul_bt_par, i_matmul_bt_tiled, i_matmul_epilogue,

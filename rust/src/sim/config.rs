@@ -36,6 +36,14 @@ pub struct HwConfig {
     /// [`parallel_heads`](HwConfig::parallel_heads)); off forces the
     /// serial head loop.
     pub attn_heads_parallel: bool,
+    /// Weight precision of the MAC array's weight port in bits: 8
+    /// (the paper's uniform INT8 datapath) or 4 (the packed cascade
+    /// tier, DESIGN.md §14).  At 4 bits one weight-SRAM word carries
+    /// two k-panels, so *weight-stationary* matmuls (the Q/K/V/output
+    /// projections and both FFN matmuls) stream their contraction in
+    /// `ceil(k/2)` cycles ([`crate::sim::units::weight_matmul_cycles`]);
+    /// activation-activation matmuls (Q.K^T, P.V) are unaffected.
+    pub weight_bits: u8,
 }
 
 impl HwConfig {
@@ -51,6 +59,7 @@ impl HwConfig {
             pipeline_stages: 3,
             worst_case_sqrt: true,
             attn_heads_parallel: true,
+            weight_bits: 8,
         }
     }
 
@@ -72,6 +81,7 @@ impl HwConfig {
             pipeline_stages: 3,
             worst_case_sqrt: true,
             attn_heads_parallel: true,
+            weight_bits: 8,
         }
     }
 
@@ -87,6 +97,23 @@ impl HwConfig {
             pipeline_stages: 3,
             worst_case_sqrt: true,
             attn_heads_parallel: true,
+            weight_bits: 8,
+        }
+    }
+
+    /// The INT4 tier of this instance on the *same silicon budget*
+    /// (DESIGN.md §14): a 4-bit multiplier takes roughly a quarter of
+    /// an 8-bit one's area, so the equal-area INT4 array instantiates
+    /// twice the rows and twice the columns, and its weight port
+    /// streams two packed k-panels per cycle (`weight_bits: 4`).
+    /// Everything else — head units, softmax/layernorm lanes, clock —
+    /// is shared infrastructure and carries over unchanged.
+    pub fn int4_variant(&self) -> HwConfig {
+        HwConfig {
+            array_rows: self.array_rows * 2,
+            array_cols: self.array_cols * 2,
+            weight_bits: 4,
+            ..*self
         }
     }
 
@@ -112,6 +139,12 @@ impl HwConfig {
         }
         if self.clock_ns <= 0.0 {
             return Err("clock period must be positive".into());
+        }
+        if self.weight_bits != 8 && self.weight_bits != 4 {
+            return Err(format!(
+                "weight_bits {} unsupported (the datapath packs 8- or 4-bit weights)",
+                self.weight_bits
+            ));
         }
         Ok(())
     }
@@ -165,6 +198,32 @@ mod tests {
         for name in Geometry::PRESET_NAMES {
             let geo = Geometry::preset(name).unwrap();
             HwConfig::sized_to(&geo).validate(&geo).unwrap();
+        }
+    }
+
+    #[test]
+    fn int4_variant_doubles_the_array_on_the_same_budget() {
+        for name in Geometry::PRESET_NAMES {
+            let geo = Geometry::preset(name).unwrap();
+            let hw8 = HwConfig::sized_to(&geo);
+            let hw4 = hw8.int4_variant();
+            hw4.validate(&geo).unwrap();
+            assert_eq!(hw4.weight_bits, 4);
+            assert_eq!(hw4.array_rows, 2 * hw8.array_rows);
+            assert_eq!(hw4.array_cols, 2 * hw8.array_cols);
+            // equal silicon: 4x the MAC sites at a quarter the area each
+            assert_eq!(hw4.mac_count(), 4 * hw8.mac_count());
+            assert_eq!(hw4.parallel_heads, hw8.parallel_heads);
+            assert_eq!(hw4.softmax_units, hw8.softmax_units);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_unsupported_weight_bits() {
+        let geo = Geometry::preset("tiny").unwrap();
+        for bits in [0u8, 1, 2, 16] {
+            let hw = HwConfig { weight_bits: bits, ..HwConfig::sized_to(&geo) };
+            assert!(hw.validate(&geo).is_err(), "weight_bits={bits} must be rejected");
         }
     }
 }

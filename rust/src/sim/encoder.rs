@@ -91,9 +91,11 @@ pub fn simulate_layer_m(
     let mhsa_done = {
         let mut fsm = Fsm::new(FsmKind::Mhsa, trace, start_cycle);
         // Q, K, V projections on the central array (requant overlapped).
-        let qkv = 3 * units::matmul_cycles(cfg, m, d, d) + units::requant_cycles(cfg);
+        // Weight-stationary: the feed phase streams packed weight
+        // panels, so `weight_bits` shapes it (DESIGN.md §14).
+        let qkv = 3 * units::weight_matmul_cycles(cfg, m, d, d) + units::requant_cycles(cfg);
         fsm.run_block("qkv_proj", qkv);
-        add(blocks, "matmul", 3 * units::matmul_cycles(cfg, m, d, d));
+        add(blocks, "matmul", 3 * units::weight_matmul_cycles(cfg, m, d, d));
         add(blocks, "requant", units::requant_cycles(cfg));
 
         // Attention heads in waves of `parallel_heads` (Fig. 9).
@@ -110,9 +112,9 @@ pub fn simulate_layer_m(
         add(blocks, "requant", waves * 2 * units::requant_cycles(cfg));
 
         // Output projection (the extra MatMul of Fig. 9) + residual align.
-        let proj = units::matmul_cycles(cfg, m, d, d) + units::residual_cycles(cfg);
+        let proj = units::weight_matmul_cycles(cfg, m, d, d) + units::residual_cycles(cfg);
         fsm.run_block("out_proj", proj);
-        add(blocks, "matmul", units::matmul_cycles(cfg, m, d, d));
+        add(blocks, "matmul", units::weight_matmul_cycles(cfg, m, d, d));
         add(blocks, "residual", units::residual_cycles(cfg));
         fsm.now
     };
@@ -132,9 +134,9 @@ pub fn simulate_layer_m(
     let ffn_done = {
         let mut fsm = Fsm::new(FsmKind::Ffn, trace, 0);
         fsm.join(ln1_done);
-        let mm1 = units::matmul_cycles(cfg, m, d, dff);
+        let mm1 = units::weight_matmul_cycles(cfg, m, d, dff);
         let gelu = units::gelu_cycles(cfg) + units::requant_cycles(cfg);
-        let mm2 = units::matmul_cycles(cfg, m, dff, d);
+        let mm2 = units::weight_matmul_cycles(cfg, m, dff, d);
         fsm.run_block("ffn_mm1", mm1);
         fsm.run_block("gelu", gelu);
         fsm.run_block("ffn_mm2", mm2 + units::residual_cycles(cfg));
@@ -287,6 +289,23 @@ mod tests {
         // the m-shaped blocks themselves scale near-linearly
         assert!(quarter.per_block["softmax"] * 3 < full.per_block["softmax"]);
         assert!(quarter.per_block["layernorm"] * 3 < full.per_block["layernorm"]);
+    }
+
+    #[test]
+    fn int4_tier_is_strictly_cheaper_per_layer() {
+        // The equal-area INT4 instance (2x2 array, halved weight feed)
+        // must beat the INT8 instance it derives from at every length —
+        // the cascade's economics depend on it (DESIGN.md §14).
+        for name in Geometry::PRESET_NAMES {
+            let geo = Geometry::preset(name).unwrap();
+            let hw8 = HwConfig::sized_to(&geo);
+            let hw4 = hw8.int4_variant();
+            for m_eff in [1usize, geo.m / 3 + 1, geo.m] {
+                let c8 = simulate_encoder_m(&hw8, &geo, m_eff, None).total_cycles;
+                let c4 = simulate_encoder_m(&hw4, &geo, m_eff, None).total_cycles;
+                assert!(c4 < c8, "{name} m_eff={m_eff}: int4 {c4} !< int8 {c8}");
+            }
+        }
     }
 
     /// Sum of Start→Done durations of one named block over the trace.

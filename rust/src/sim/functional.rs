@@ -34,9 +34,10 @@
 
 use crate::model::{Geometry, LayerConsts};
 use crate::quant::{
-    self, i_layernorm, i_matmul_bt, i_matmul_bt_par, i_matmul_epilogue, i_matmul_epilogue_par,
-    i_matmul_par, i_softmax, requantize, requantize_signed, rescale, Dyadic, Epilogue,
-    GeluConsts, LayerNormConsts, SoftmaxConsts,
+    self, bias_int4, i_layernorm, i_matmul_bt, i_matmul_bt_par, i_matmul_epilogue,
+    i_matmul_epilogue_par, i_matmul_int4_epilogue_par, i_matmul_int4_par, i_matmul_par,
+    i_softmax, int4_from_int8, int4_readout_dyadic, pack_int4, requantize, requantize_signed,
+    rescale, Dyadic, Epilogue, GeluConsts, LayerNormConsts, SoftmaxConsts, INT4_SHIFT,
 };
 use crate::util::rng::Rng;
 use crate::util::threadpool::run_scoped;
@@ -100,18 +101,93 @@ impl LayerWeights {
     }
 }
 
+/// One layer's weights on the packed INT4 grid (DESIGN.md §14): the
+/// projection and FFN weight matrices quantized to nibbles at 1/16 of
+/// the INT8 scale and packed two-per-byte along `k`
+/// ([`crate::quant::pack_int4`]), their biases on the matching
+/// accumulator scale ([`crate::quant::bias_int4`]).  LayerNorm's
+/// gamma/beta stay full-precision copies — they feed the elementwise
+/// affine, not the MAC array's weight port.  Quantized *from* a
+/// [`LayerWeights`] bundle, so an INT4 replica group derives from the
+/// same shared synthetic model as its INT8 siblings.
+#[derive(Clone, Debug)]
+pub struct LayerWeightsInt4 {
+    pub wq: Vec<u8>,
+    pub bq: Vec<i32>,
+    pub wk: Vec<u8>,
+    pub bk: Vec<i32>,
+    pub wv: Vec<u8>,
+    pub bv: Vec<i32>,
+    pub wo: Vec<u8>,
+    pub bo: Vec<i32>,
+    pub w1: Vec<u8>,
+    pub b1: Vec<i32>,
+    pub w2: Vec<u8>,
+    pub b2: Vec<i32>,
+    pub gamma1: Vec<i32>,
+    pub beta1: Vec<i32>,
+    pub gamma2: Vec<i32>,
+    pub beta2: Vec<i32>,
+}
+
+impl LayerWeightsInt4 {
+    /// Quantize an INT8 layer bundle onto the packed INT4 grid
+    /// (round-half-up to the nibble range, [`int4_from_int8`]).
+    pub fn quantize(w: &LayerWeights, geo: &Geometry) -> LayerWeightsInt4 {
+        let (d, dff) = (geo.d, geo.d_ff);
+        let pk = |w8: &[i32], k: usize, n: usize| pack_int4(&int4_from_int8(w8), k, n);
+        LayerWeightsInt4 {
+            wq: pk(&w.wq, d, d),
+            bq: bias_int4(&w.bq),
+            wk: pk(&w.wk, d, d),
+            bk: bias_int4(&w.bk),
+            wv: pk(&w.wv, d, d),
+            bv: bias_int4(&w.bv),
+            wo: pk(&w.wo, d, d),
+            bo: bias_int4(&w.bo),
+            w1: pk(&w.w1, d, dff),
+            b1: bias_int4(&w.b1),
+            w2: pk(&w.w2, dff, d),
+            b2: bias_int4(&w.b2),
+            gamma1: w.gamma1.clone(),
+            beta1: w.beta1.clone(),
+            gamma2: w.gamma2.clone(),
+            beta2: w.beta2.clone(),
+        }
+    }
+}
+
 /// A plausible integer design (dyadic scales, softmax/GELU/LayerNorm
 /// constants) for a synthetic layer of geometry `geo` — the values the
 /// AOT calibration pass would produce for weights in the
 /// [`LayerWeights::synthetic`] range.
+///
+/// The requantizers are geometry-aware and *non-saturating*: each one
+/// maps ~3σ of its accumulator distribution (σ grows as `√d` with the
+/// fan-in, as `√m` with the attention span) inside the ±127 rails, the
+/// way a calibration pass that histograms real activations would set
+/// them.  That keeps the integer datapath proportional instead of
+/// rail-clipped, which is what makes the INT4 tier's logit margins
+/// informative for cascade escalation (DESIGN.md §14): quantization
+/// noise stays a small perturbation, so INT4/INT8 label flips
+/// concentrate at small margins where the gate can catch them.
 pub fn synthetic_consts(geo: &Geometry) -> LayerConsts {
     let dy = |x: f64| Dyadic::approx16(x);
+    let rd = (geo.d as f64).sqrt();
+    // qkv/residual accumulators: std ≈ w_std·x_std·√d; target ~40 codes
+    let dy_qkv = 0.0114 / rd;
+    // context rows: Σp = 127 over an attention span that widens with m
+    let dy_ctx = (geo.m as f64 / 8.0).sqrt() / 127.0;
+    let dy_res = 0.0171 / rd;
+    // GELU epilogue: the erf plateau scales the positive branch by
+    // ~8.6e7, on an FFN accumulator of std ≈ 2932·√d
+    let dy_gelu = 40.0 / (8.59e7 * 0.58 * 2932.0 * rd);
     LayerConsts {
-        dy_q: dy(0.004), dy_k: dy(0.004), dy_v: dy(0.004),
+        dy_q: dy(dy_qkv), dy_k: dy(dy_qkv), dy_v: dy(dy_qkv),
         dy_scale: Dyadic { b: 1, c: 2 },
-        dy_ctx: dy(0.3), dy_res1: dy(0.08),
-        dy_ln1: dy(0.005), dy_gelu: Dyadic::approximate(2.0e-7, 14, 52),
-        dy_res2: dy(0.08), dy_ln2: dy(0.005),
+        dy_ctx: dy(dy_ctx), dy_res1: dy(dy_res),
+        dy_ln1: dy(0.0043), dy_gelu: Dyadic::approximate(dy_gelu, 14, 52),
+        dy_res2: dy(dy_res), dy_ln2: dy(0.0043),
         softmax: SoftmaxConsts::design(0.0009),
         gelu: GeluConsts::design(0.0004),
         ln1: LayerNormConsts { s_in: 0.02, s_gamma: 0.008, d: geo.d },
@@ -477,6 +553,179 @@ fn layer_forward_scratch(
     requant_into(ln, c.dy_ln2, q_out);
 }
 
+/// The INT4 twin of [`layer_forward_scratch`] (DESIGN.md §14): the
+/// same fused, head-parallel structure with every *weight-stationary*
+/// matmul (Q/K/V/output projections, both FFN matmuls) running the
+/// packed INT4 kernels.  The 16x-smaller accumulator scale is
+/// compensated where the accumulator leaves the array:
+/// * requantize/rescale epilogues take the `2^4`-scaled dyadic
+///   ([`int4_readout_dyadic`]) — bit-exact with multiplying the
+///   accumulator by 16 first ([`Dyadic::scale_pow2`]);
+/// * the FFN accumulator feeding the *non-linear* GELU is shifted up
+///   by [`INT4_SHIFT`] explicitly (an exact integer multiply), since a
+///   polynomial evaluation cannot absorb a scale into its output.
+/// Attention (Q·Kᵀ, Softmax, P·V) is activation-activation and runs
+/// the identical INT8 core; LayerNorm uses the full-precision
+/// gamma/beta copies.  On weights that sit exactly on the INT4 grid
+/// (every value a multiple of 16) this path is *bit-identical* to the
+/// INT8 path — the golden test below pins that; off-grid weights make
+/// it the cascade's cheap, approximate tier.
+#[allow(clippy::too_many_arguments)]
+fn layer_forward_scratch_int4(
+    q_x: &[i32],
+    w: &LayerWeightsInt4,
+    c: &LayerConsts,
+    geo: &Geometry,
+    m_eff: usize,
+    s: &mut LayerScratch,
+    q_out: &mut [i32],
+    sqrt_iters: &mut Vec<u32>,
+) {
+    let (d, dff, dh, heads) = (geo.d, geo.d_ff, geo.dh(), geo.heads);
+    let m = m_eff;
+    assert!(
+        m >= 1 && m <= s.geo.m && d == s.geo.d && dff == s.geo.d_ff && heads == s.geo.heads,
+        "m_eff {m} / geometry incompatible with workspace built for {:?}",
+        s.geo
+    );
+    assert_eq!(q_x.len(), m * d, "q_x shape");
+    assert_eq!(q_out.len(), m * d, "q_out shape");
+
+    let attn_parallel =
+        s.attn_heads_parallel && heads > 1 && 2 * m * m * dh >= s.attn_par_min_macs;
+
+    let LayerScratch {
+        acc, q8, k8, v8, ctx8, x2, ln, scores, probs, row64,
+        qh, kh, vh, ctx_h, res, g64, b64, hff, h8, ..
+    } = s;
+    let acc = &mut acc[..m * d];
+    let q8 = &mut q8[..m * d];
+    let k8 = &mut k8[..m * d];
+    let v8 = &mut v8[..m * d];
+    let ctx8 = &mut ctx8[..m * d];
+    let x2 = &mut x2[..m * d];
+    let ln = &mut ln[..m * d];
+    let scores = &mut scores[..heads * m * m];
+    let probs = &mut probs[..heads * m * m];
+    let row64 = &mut row64[..heads * m];
+    let qh = &mut qh[..heads * m * dh];
+    let kh = &mut kh[..heads * m * dh];
+    let vh = &mut vh[..heads * m * dh];
+    let ctx_h = &mut ctx_h[..heads * m * dh];
+    let res = &mut res[..m * d];
+    let g64 = &mut g64[..d];
+    let b64 = &mut b64[..d];
+    let hff = &mut hff[..m * dff];
+    let h8 = &mut h8[..m * dff];
+
+    // --- Q/K/V projections on packed INT4 weights, requantization
+    // fused at the readout through the 2^4-scaled dyadics ---
+    let (dy_q, dy_k, dy_v) = (
+        int4_readout_dyadic(c.dy_q),
+        int4_readout_dyadic(c.dy_k),
+        int4_readout_dyadic(c.dy_v),
+    );
+    i_matmul_int4_epilogue_par(q_x, &w.wq, Some(&w.bq), m, d, d, Epilogue::Requant(dy_q), q8);
+    i_matmul_int4_epilogue_par(q_x, &w.wk, Some(&w.bk), m, d, d, Epilogue::Requant(dy_k), k8);
+    i_matmul_int4_epilogue_par(q_x, &w.wv, Some(&w.bv), m, d, d, Epilogue::Requant(dy_v), v8);
+
+    // --- Attention: identical INT8 activation-activation core ---
+    if dh > 0 {
+        let (q8, k8, v8) = (&*q8, &*k8, &*v8);
+        let lanes = qh
+            .chunks_mut(m * dh)
+            .zip(kh.chunks_mut(m * dh))
+            .zip(vh.chunks_mut(m * dh))
+            .zip(ctx_h.chunks_mut(m * dh))
+            .zip(scores.chunks_mut(m * m))
+            .zip(probs.chunks_mut(m * m))
+            .zip(row64.chunks_mut(m))
+            .enumerate();
+        if attn_parallel {
+            let jobs: Vec<_> = lanes
+                .map(|(h, ((((((qh, kh), vh), ctx_h), scores), probs), row64))| {
+                    move || {
+                        attention_head_fused(
+                            h, m, d, dh, q8, k8, v8, c, false, qh, kh, vh, scores, probs,
+                            row64, ctx_h,
+                        )
+                    }
+                })
+                .collect();
+            run_scoped(jobs);
+        } else {
+            for (h, ((((((qh, kh), vh), ctx_h), scores), probs), row64)) in lanes {
+                attention_head_fused(
+                    h, m, d, dh, q8, k8, v8, c, true, qh, kh, vh, scores, probs, row64,
+                    ctx_h,
+                );
+            }
+        }
+    }
+    if heads * dh < d {
+        for r in 0..m {
+            ctx8[r * d + heads * dh..(r + 1) * d].fill(0);
+        }
+    }
+    if dh > 0 {
+        for (h, lane) in ctx_h.chunks(m * dh).enumerate() {
+            for r in 0..m {
+                ctx8[r * d + h * dh..r * d + (h + 1) * dh]
+                    .copy_from_slice(&lane[r * dh..(r + 1) * dh]);
+            }
+        }
+    }
+
+    // --- output projection (INT4) with the scaled residual rescale
+    // fused at readout, then the i64 residual add + LayerNorm 1 ---
+    let dy_res1 = int4_readout_dyadic(c.dy_res1);
+    i_matmul_int4_epilogue_par(ctx8, &w.wo, Some(&w.bo), m, d, d, Epilogue::Rescale(dy_res1), acc);
+    for ((dst, &xv), &av) in res.iter_mut().zip(q_x).zip(acc.iter()) {
+        *dst = xv as i64 + av as i64;
+    }
+    for (g, &v) in g64.iter_mut().zip(&w.gamma1) {
+        *g = v as i64;
+    }
+    for (b, &v) in b64.iter_mut().zip(&w.beta1) {
+        *b = v as i64;
+    }
+    for r in 0..m {
+        let row = &mut ln[r * d..(r + 1) * d];
+        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln1, row);
+        sqrt_iters.push(it);
+    }
+    requant_into(ln, c.dy_ln1, x2);
+
+    // --- FFN: INT4 MatMul -> (<< INT4_SHIFT) -> GELU -> Req -> INT4
+    // MatMul (scaled rescale fused).  The explicit shift restores the
+    // INT8 accumulator scale *before* the non-linear polynomial — an
+    // exact integer multiply, not an approximation ---
+    i_matmul_int4_par(x2, &w.w1, Some(&w.b1), m, d, dff, hff);
+    for (o, &v) in h8.iter_mut().zip(hff.iter()) {
+        let acc8 = (v as i64) << INT4_SHIFT;
+        *o = requantize_signed(quant::i_gelu(acc8, &c.gelu), c.dy_gelu, -1);
+    }
+    let dy_res2 = int4_readout_dyadic(c.dy_res2);
+    i_matmul_int4_epilogue_par(h8, &w.w2, Some(&w.b2), m, dff, d, Epilogue::Rescale(dy_res2), acc);
+
+    // --- residual align + LayerNorm 2 + output requant ---
+    for ((dst, &xv), &av) in res.iter_mut().zip(x2.iter()).zip(acc.iter()) {
+        *dst = xv as i64 + av as i64;
+    }
+    for (g, &v) in g64.iter_mut().zip(&w.gamma2) {
+        *g = v as i64;
+    }
+    for (b, &v) in b64.iter_mut().zip(&w.beta2) {
+        *b = v as i64;
+    }
+    for r in 0..m {
+        let row = &mut ln[r * d..(r + 1) * d];
+        let it = i_layernorm(&res[r * d..(r + 1) * d], g64, b64, &c.ln2, row);
+        sqrt_iters.push(it);
+    }
+    requant_into(ln, c.dy_ln2, q_out);
+}
+
 /// The pre-fusion reference: serial head loop, separate full-tensor
 /// requantization/rescale passes over a shared INT32 accumulator —
 /// exactly the structure this file shipped before the fused path
@@ -626,6 +875,25 @@ pub fn layer_forward_ws(
     layer_forward_scratch(q_x, w, c, geo, m_eff, &mut ws.s, q_out, sqrt_iters);
 }
 
+/// Workspace-based INT4 encoder layer (DESIGN.md §14): the packed
+/// low-precision twin of [`layer_forward_ws`], same arena, same
+/// signature shape, `w` on the INT4 grid.  Reuses the identical
+/// [`Workspace`] — the INT4 kernels write the same INT32 scratch
+/// buffers, so an engine can hold either precision behind one arena.
+#[allow(clippy::too_many_arguments)]
+pub fn layer_forward_ws_int4(
+    q_x: &[i32],
+    w: &LayerWeightsInt4,
+    c: &LayerConsts,
+    geo: &Geometry,
+    m_eff: usize,
+    ws: &mut Workspace,
+    q_out: &mut [i32],
+    sqrt_iters: &mut Vec<u32>,
+) {
+    layer_forward_scratch_int4(q_x, w, c, geo, m_eff, &mut ws.s, q_out, sqrt_iters);
+}
+
 /// The serial, unfused reference layer over a caller-owned arena: the
 /// pre-fusion structure (separate full-tensor requantization passes,
 /// sequential head loop), same signature as [`layer_forward_ws`].  The
@@ -691,6 +959,39 @@ pub fn encoder_forward_ws(
     layer_forward_scratch(q_x, w0, c0, geo, m_eff, s, cur, sqrt_iters);
     for (w, c) in &layers[1..] {
         layer_forward_scratch(cur, w, c, geo, m_eff, s, nxt, sqrt_iters);
+        std::mem::swap(&mut cur, &mut nxt);
+    }
+    out.copy_from_slice(cur);
+}
+
+/// Workspace-based INT4 full encoder stack: the packed low-precision
+/// twin of [`encoder_forward_ws`], same output/`sqrt_iters` contract
+/// (the cycle simulator consumes the identical layout, so an INT4
+/// replica's data-dependent timing path keeps working).
+#[allow(clippy::too_many_arguments)]
+pub fn encoder_forward_ws_int4(
+    q_x: &[i32],
+    layers: &[(LayerWeightsInt4, LayerConsts)],
+    geo: &Geometry,
+    m_eff: usize,
+    ws: &mut Workspace,
+    out: &mut [i32],
+    sqrt_iters: &mut Vec<u32>,
+) {
+    let n = m_eff * geo.d;
+    assert_eq!(q_x.len(), n, "q_x shape");
+    assert_eq!(out.len(), n, "out shape");
+    let Workspace { s, act0, act1 } = ws;
+    if layers.is_empty() {
+        out.copy_from_slice(q_x);
+        return;
+    }
+    let mut cur: &mut [i32] = &mut act0[..n];
+    let mut nxt: &mut [i32] = &mut act1[..n];
+    let (w0, c0) = &layers[0];
+    layer_forward_scratch_int4(q_x, w0, c0, geo, m_eff, s, cur, sqrt_iters);
+    for (w, c) in &layers[1..] {
+        layer_forward_scratch_int4(cur, w, c, geo, m_eff, s, nxt, sqrt_iters);
         std::mem::swap(&mut cur, &mut nxt);
     }
     out.copy_from_slice(cur);
@@ -870,6 +1171,136 @@ mod tests {
             let want = layer_forward(&x, &w, &c, &trunc);
             assert_eq!(out_par, want.q_out, "wrapper agreement, m_eff={m_eff}");
         }
+    }
+
+    /// Snap every weight onto the INT4 grid (multiples of 16) so the
+    /// quantization step is lossless; biases snap to the matching
+    /// 16-multiple grid the same way.
+    fn snap_to_int4_grid(w: &LayerWeights) -> LayerWeights {
+        let snap = |v: &[i32]| -> Vec<i32> {
+            v.iter()
+                .map(|&x| 16 * crate::quant::div_floor(x as i64 + 8, 16).clamp(-8, 7) as i32)
+                .collect()
+        };
+        LayerWeights {
+            wq: snap(&w.wq),
+            bq: snap(&w.bq),
+            wk: snap(&w.wk),
+            bk: snap(&w.bk),
+            wv: snap(&w.wv),
+            bv: snap(&w.bv),
+            wo: snap(&w.wo),
+            bo: snap(&w.bo),
+            w1: snap(&w.w1),
+            b1: snap(&w.b1),
+            w2: snap(&w.w2),
+            b2: snap(&w.b2),
+            gamma1: w.gamma1.clone(),
+            beta1: w.beta1.clone(),
+            gamma2: w.gamma2.clone(),
+            beta2: w.beta2.clone(),
+        }
+    }
+
+    #[test]
+    fn int4_path_bit_identical_to_int8_on_grid_aligned_weights() {
+        // On weights that sit exactly on the INT4 grid the quantizer is
+        // lossless and every accumulator is exactly 1/16 of its INT8
+        // twin — so the scale_pow2 epilogues and the pre-GELU shift
+        // must reproduce the INT8 layer *bit for bit*.  This pins the
+        // whole compensation chain (qkv requant, res1/res2 rescales,
+        // GELU shift) at once; any off-by-one in the floor-rounding
+        // conventions breaks it.
+        let geo = tiny_geo();
+        let mut rng = Rng::new(21);
+        let w8 = snap_to_int4_grid(&weights(&mut rng, &geo));
+        let w4 = LayerWeightsInt4::quantize(&w8, &geo);
+        let c = consts(&geo);
+        for m_eff in [1usize, 3, geo.m] {
+            let x = rand_w(&mut rng, m_eff * geo.d, 127);
+            let mut ws8 = Workspace::new(&geo);
+            let mut out8 = vec![0i32; m_eff * geo.d];
+            let mut it8 = Vec::new();
+            layer_forward_ws(&x, &w8, &c, &geo, m_eff, &mut ws8, &mut out8, &mut it8);
+
+            let mut ws4 = Workspace::new(&geo);
+            let mut out4 = vec![0i32; m_eff * geo.d];
+            let mut it4 = Vec::new();
+            layer_forward_ws_int4(&x, &w4, &c, &geo, m_eff, &mut ws4, &mut out4, &mut it4);
+
+            assert_eq!(out4, out8, "grid-aligned int4 vs int8, m_eff={m_eff}");
+            assert_eq!(it4, it8, "sqrt iters, m_eff={m_eff}");
+        }
+    }
+
+    #[test]
+    fn int4_serial_and_parallel_paths_agree() {
+        // The INT4 layer's head-parallel and serial execution modes are
+        // the same numerics (the attention core is shared with INT8);
+        // forcing the scoped parallel-for must change nothing.
+        let geo = tiny_geo();
+        let mut rng = Rng::new(22);
+        let w8 = weights(&mut rng, &geo);
+        let w4 = LayerWeightsInt4::quantize(&w8, &geo);
+        let c = consts(&geo);
+        let x = rand_w(&mut rng, geo.m * geo.d, 127);
+
+        let mut ws_par = Workspace::new(&geo);
+        ws_par.set_attn_par_min_macs(0);
+        let mut out_par = vec![0i32; geo.m * geo.d];
+        let mut it_par = Vec::new();
+        layer_forward_ws_int4(&x, &w4, &c, &geo, geo.m, &mut ws_par, &mut out_par, &mut it_par);
+
+        let mut ws_ser = Workspace::new(&geo);
+        ws_ser.set_attn_heads_parallel(false);
+        let mut out_ser = vec![0i32; geo.m * geo.d];
+        let mut it_ser = Vec::new();
+        layer_forward_ws_int4(&x, &w4, &c, &geo, geo.m, &mut ws_ser, &mut out_ser, &mut it_ser);
+
+        assert_eq!(out_par, out_ser);
+        assert_eq!(it_par, it_ser);
+        assert!(out_par.iter().all(|&v| (-128..=127).contains(&v)), "INT8-coded output");
+    }
+
+    #[test]
+    fn int4_encoder_stacks_and_tracks_int8_loosely() {
+        // Off-grid weights make INT4 an approximation: the output must
+        // still be INT8-coded, deterministic, and *correlated* with the
+        // INT8 stack (identical signs on a large majority of entries) —
+        // close enough for the cascade's front tier to be useful.
+        let geo = Geometry::new(16, 2, 8, 32, 2);
+        let mut rng = Rng::new(23);
+        let layers8: Vec<_> =
+            (0..2).map(|_| (weights(&mut rng, &geo), consts(&geo))).collect();
+        let layers4: Vec<_> = layers8
+            .iter()
+            .map(|(w, c)| (LayerWeightsInt4::quantize(w, &geo), c.clone()))
+            .collect();
+        let x = rand_w(&mut rng, geo.m * geo.d, 127);
+
+        let mut ws = Workspace::new(&geo);
+        let mut out4 = vec![0i32; geo.m * geo.d];
+        let mut it4 = Vec::new();
+        encoder_forward_ws_int4(&x, &layers4, &geo, geo.m, &mut ws, &mut out4, &mut it4);
+        assert_eq!(it4.len(), 2 * 2 * geo.m);
+        assert!(out4.iter().all(|&v| (-128..=127).contains(&v)));
+
+        let mut out4b = vec![0i32; geo.m * geo.d];
+        let mut it4b = Vec::new();
+        encoder_forward_ws_int4(&x, &layers4, &geo, geo.m, &mut ws, &mut out4b, &mut it4b);
+        assert_eq!(out4, out4b, "deterministic");
+
+        let (out8, _) = encoder_forward(&x, &layers8, &geo);
+        let agree = out4
+            .iter()
+            .zip(&out8)
+            .filter(|(&a, &b)| (a >= 0) == (b >= 0))
+            .count();
+        assert!(
+            agree * 2 > out8.len(),
+            "int4 output decorrelated from int8: {agree}/{} sign agreement",
+            out8.len()
+        );
     }
 
     #[test]

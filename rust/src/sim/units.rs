@@ -22,6 +22,21 @@ pub fn matmul_cycles(cfg: &HwConfig, m: usize, k: usize, n: usize) -> u64 {
     (tiles_r as u64) * (tiles_c as u64) * (k as u64 + readout)
 }
 
+/// MatMul against *resident weights* (the Q/K/V/output projections and
+/// both FFN matmuls): the weight port streams `8 / weight_bits` packed
+/// k-panels per weight-SRAM word, so the feed phase of each tile takes
+/// `ceil(k / packs)` cycles — `k` at INT8, `ceil(k/2)` at the packed
+/// INT4 tier (DESIGN.md §14).  Readout is accumulator-width-bound and
+/// unchanged.  Activation-activation matmuls (Q.K^T, P.V) never touch
+/// the weight port and keep [`matmul_cycles`].
+pub fn weight_matmul_cycles(cfg: &HwConfig, m: usize, k: usize, n: usize) -> u64 {
+    let packs = (8 / cfg.weight_bits.max(1)).max(1) as usize;
+    let tiles_r = ceil_div(m, cfg.array_rows);
+    let tiles_c = ceil_div(n, cfg.array_cols);
+    let readout = n.min(cfg.array_cols) as u64;
+    (tiles_r as u64) * (tiles_c as u64) * (ceil_div(k, packs) as u64 + readout)
+}
+
 /// Utilization of the MAC array for an (M,K)x(K,N) product: useful MACs
 /// over MACs offered during the feed phase (readout excluded).
 pub fn matmul_utilization(cfg: &HwConfig, m: usize, k: usize, n: usize) -> f64 {
@@ -103,6 +118,24 @@ mod tests {
     fn matmul_single_tile() {
         // 256x768 array, (256,768)x(768,768): one row tile, one col tile
         assert_eq!(matmul_cycles(&cfg(), 256, 768, 768), 768 + 768);
+    }
+
+    #[test]
+    fn weight_matmul_at_8_bits_is_plain_matmul() {
+        let c = cfg();
+        for (m, k, n) in [(256usize, 768usize, 768usize), (32, 768, 3072), (1, 1, 1)] {
+            assert_eq!(weight_matmul_cycles(&c, m, k, n), matmul_cycles(&c, m, k, n));
+        }
+    }
+
+    #[test]
+    fn weight_matmul_at_4_bits_halves_the_feed_phase() {
+        let c8 = cfg();
+        let c4 = HwConfig { weight_bits: 4, ..c8 };
+        // one tile, k=768, readout=768: feed halves, readout stays
+        assert_eq!(weight_matmul_cycles(&c4, 256, 768, 768), 384 + 768);
+        // odd contraction depth rounds the packed feed up
+        assert_eq!(weight_matmul_cycles(&c4, 256, 7, 768), 4 + 768);
     }
 
     #[test]

@@ -181,6 +181,7 @@ pub fn candidate_grid(geo: &Geometry) -> Vec<HwConfig> {
                             pipeline_stages: 3,
                             worst_case_sqrt: true,
                             attn_heads_parallel: true,
+                            weight_bits: 8,
                         });
                     }
                 }

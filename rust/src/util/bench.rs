@@ -70,33 +70,45 @@ impl Bench {
 /// missing or unparsable file starts from an empty object.
 ///
 /// When both the existing value and the update for a key are objects,
-/// the update merges *one level deep* instead of replacing the whole
-/// object — so different binaries can each own a sub-leg under a shared
-/// key (e.g. `costmodel.fairness` from `serving_scaling` and
-/// `costmodel.design_space` from `table1_synthesis`).  Deeper levels
-/// replace wholesale: a leg always owns its own payload.
+/// the update merges **recursively** instead of replacing the whole
+/// object — so different binaries can each own a sub-leg at any depth
+/// under a shared key (e.g. `costmodel.fairness` from `serving_scaling`
+/// and `costmodel.design_space` from `table1_synthesis`, or the
+/// cascade leg's `cascade.<margin>.<tenants>` sub-objects).  The
+/// recursion stops at the first non-object on either side: a leaf
+/// update always replaces the old value wholesale, so a leg still owns
+/// its own payload.
 pub fn merge_bench_json<P: AsRef<Path>>(
     path: P,
     updates: impl IntoIterator<Item = (&'static str, Json)>,
 ) -> Result<(), String> {
+    fn merge_value(old: &mut Json, new: Json) {
+        match (old, new) {
+            (Json::Obj(old), Json::Obj(new)) => {
+                for (k, v) in new {
+                    match old.get_mut(&k) {
+                        Some(slot) => merge_value(slot, v),
+                        None => {
+                            old.insert(k, v);
+                        }
+                    }
+                }
+            }
+            (old, new) => *old = new,
+        }
+    }
     let path = path.as_ref();
-    let mut root = match std::fs::read_to_string(path) {
+    let mut root = Json::Obj(match std::fs::read_to_string(path) {
         Ok(src) => match Json::parse(&src) {
             Ok(Json::Obj(m)) => m,
             _ => Default::default(),
         },
         Err(_) => Default::default(),
-    };
+    });
     for (k, v) in updates {
-        match (root.get_mut(k), v) {
-            (Some(Json::Obj(old)), Json::Obj(new)) => old.extend(new),
-            (_, v) => {
-                root.insert(k.to_string(), v);
-            }
-        }
+        merge_value(&mut root, Json::Obj(std::iter::once((k.to_string(), v)).collect()));
     }
-    let json = Json::Obj(root);
-    std::fs::write(path, format!("{json}\n"))
+    std::fs::write(path, format!("{root}\n"))
         .map_err(|e| format!("write {}: {e}", path.display()))
 }
 
@@ -187,7 +199,7 @@ mod tests {
     }
 
     #[test]
-    fn merge_bench_json_merges_shared_object_keys_one_level_deep() {
+    fn merge_bench_json_merges_shared_object_keys_recursively() {
         use super::super::json::obj;
         let path = std::env::temp_dir()
             .join(format!("swifttron_merge_nested_{}.json", std::process::id()));
@@ -202,6 +214,33 @@ mod tests {
         assert_eq!(v["shared"]["left"].as_i64(), Some(1), "first sub-leg survives");
         assert_eq!(v["shared"]["right"].as_i64(), Some(2), "second sub-leg merged in");
         assert_eq!(v["flat"]["now_obj"].as_i64(), Some(4), "non-object old value replaced");
+    }
+
+    #[test]
+    fn merge_bench_json_recurses_below_the_first_level() {
+        // Two binaries each own a sub-leg *two* levels down the same
+        // branch — the old one-level merge clobbered the sibling here.
+        use super::super::json::obj;
+        let path = std::env::temp_dir()
+            .join(format!("swifttron_merge_deep_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        merge_bench_json(
+            &path,
+            [("top", obj([("mid", obj([("a", Json::from(1i64))])), ("keep", Json::from(9i64))]))],
+        )
+        .unwrap();
+        merge_bench_json(&path, [("top", obj([("mid", obj([("b", Json::from(2i64))]))]))])
+            .unwrap();
+        // a leaf re-run still replaces its own deep value
+        merge_bench_json(&path, [("top", obj([("mid", obj([("a", Json::from(7i64))]))]))])
+            .unwrap();
+        // ...and a non-object leaf replaces a deep object wholesale
+        merge_bench_json(&path, [("top", obj([("keep", Json::from(10i64))]))]).unwrap();
+        let v = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(v["top"]["mid"]["a"].as_i64(), Some(7), "deep leaf re-run overwrites");
+        assert_eq!(v["top"]["mid"]["b"].as_i64(), Some(2), "deep sibling survives");
+        assert_eq!(v["top"]["keep"].as_i64(), Some(10), "first-level sibling updated");
     }
 
     #[test]

@@ -273,6 +273,7 @@ fn cheap_model_p99_decouples_from_heavy_groups() {
                     padded_len: 4,
                     cost: 4,
                     submitted: Instant::now(),
+                    origin: None,
                     reply: tx,
                 },
                 0,
@@ -290,6 +291,7 @@ fn cheap_model_p99_decouples_from_heavy_groups() {
                 padded_len: 1,
                 cost: 1,
                 submitted: Instant::now(),
+                origin: None,
                 reply: tx,
             },
             1,
@@ -453,6 +455,7 @@ fn one_group_pipeline_is_bit_equivalent_to_serial_dispatch() {
                 padded_len: policy.padded_len(len),
                 cost: policy.padded_len(len) as u64,
                 submitted: Instant::now(),
+                origin: None,
                 reply: tx,
             },
             0,

@@ -55,6 +55,7 @@ fn group_of(n: usize) -> (Vec<Request>, Vec<Receiver<Response>>) {
             padded_len: 3,
             cost: 3,
             submitted: Instant::now(),
+            origin: None,
             reply: tx,
         });
         receivers.push(rx);

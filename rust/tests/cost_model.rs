@@ -33,6 +33,7 @@ fn random_case(rng: &mut Rng) -> (Geometry, HwConfig) {
         pipeline_stages: 1 + rng.below(4),
         worst_case_sqrt: rng.bool(),
         attn_heads_parallel: rng.bool(),
+        weight_bits: if rng.bool() { 8 } else { 4 },
     };
     (geo, hw)
 }
@@ -141,6 +142,51 @@ fn layer_count_multiplies_the_per_layer_cost() {
                 "m={m} layers={}",
                 geo.layers
             );
+        }
+    }
+}
+
+#[test]
+fn int4_anchors_are_exact_against_the_simulator_at_every_length() {
+    // Per-precision anchors (DESIGN.md §14): the INT4 tier's CostModel
+    // must stay *exact* against `simulate_encoder_m` under the halved
+    // weight-feed phase and the doubled equal-area array, at every
+    // length of every preset — DRR fairness, autoscaling, and mux
+    // admission all price INT4 work through this model.
+    for name in Geometry::PRESET_NAMES {
+        let geo = Geometry::preset(name).unwrap();
+        let hw4 = HwConfig::sized_to(&geo).int4_variant();
+        let cm4 = CostModel::build(&hw4, &geo).unwrap();
+        for m in 1..=geo.m {
+            assert_eq!(
+                cm4.predict_cycles(m),
+                simulate_encoder_m(&hw4, &geo, m, None).total_cycles,
+                "{name} m={m}"
+            );
+        }
+    }
+}
+
+#[test]
+fn int4_tier_undercuts_int8_for_every_preset() {
+    // The cascade's economics: at equal silicon the INT4 instance must
+    // be strictly cheaper than the INT8 instance it derives from, for
+    // every preset, at full length and at short lengths where the
+    // cascade bench operates.
+    for name in Geometry::PRESET_NAMES {
+        let geo = Geometry::preset(name).unwrap();
+        let hw8 = HwConfig::sized_to(&geo);
+        let cm8 = CostModel::build(&hw8, &geo).unwrap();
+        let cm4 = CostModel::build(&hw8.int4_variant(), &geo).unwrap();
+        assert!(
+            cm4.full_cycles() < cm8.full_cycles(),
+            "{name}: int4 full {} !< int8 full {}",
+            cm4.full_cycles(),
+            cm8.full_cycles()
+        );
+        for m in [1usize, 8, geo.m / 2, geo.m] {
+            let (c4, c8) = (cm4.predict_cycles(m), cm8.predict_cycles(m));
+            assert!(c4 < c8, "{name} m={m}: int4 {c4} !< int8 {c8}");
         }
     }
 }

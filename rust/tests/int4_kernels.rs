@@ -1,0 +1,193 @@
+//! Property suite for the packed INT4 kernel tier (DESIGN.md §14):
+//! every packed variant must match the unpacked golden reference
+//! (`i_matmul_int4_ref`, nibbles expanded through the INT8 kernel) bit
+//! for bit — randomized shapes, odd contraction depths, zero tails,
+//! fused epilogues, and the row-tiled / auto-dispatching parallel entry
+//! points.  The INT32 accumulator-width guard is exercised under
+//! `debug_assertions`.
+
+use swifttron::quant::{
+    bias_int4, i_matmul_int4, i_matmul_int4_epilogue, i_matmul_int4_epilogue_par,
+    i_matmul_int4_epilogue_tiled, i_matmul_int4_par, i_matmul_int4_ref, i_matmul_int4_ref_epilogue,
+    i_matmul_int4_tiled, int4_from_int8, int4_readout_dyadic, pack_int4, unpack_int4, Dyadic,
+    Epilogue, INT4_SHIFT,
+};
+use swifttron::util::rng::Rng;
+
+/// Random nibble-range weights `(k, n)`, packed.
+fn random_packed(rng: &mut Rng, k: usize, n: usize) -> Vec<u8> {
+    let w4: Vec<i32> = (0..k * n).map(|_| rng.range_i64(-8, 7) as i32).collect();
+    pack_int4(&w4, k, n)
+}
+
+/// Random INT8-range activations `(m, k)`, with occasional all-zero
+/// rows and zero runs so the kernel's zero-skip fast path is covered.
+fn random_activations(rng: &mut Rng, m: usize, k: usize) -> Vec<i32> {
+    let mut x: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    for i in 0..m {
+        match rng.below(4) {
+            0 => x[i * k..(i + 1) * k].fill(0),
+            1 => {
+                let run = rng.below(k as u64 + 1) as usize;
+                x[i * k..i * k + run].fill(0);
+            }
+            _ => {}
+        }
+    }
+    x
+}
+
+#[test]
+fn packed_matches_unpacked_reference_on_randomized_shapes() {
+    let mut rng = Rng::new(0x14_4E15);
+    for trial in 0..200 {
+        let m = 1 + rng.below(9) as usize;
+        let k = 1 + rng.below(33) as usize; // odd and even depths
+        let n = 1 + rng.below(17) as usize;
+        let x = random_activations(&mut rng, m, k);
+        let packed = random_packed(&mut rng, k, n);
+        let bias: Option<Vec<i32>> = rng
+            .bool()
+            .then(|| (0..n).map(|_| rng.range_i64(-1000, 1000) as i32).collect());
+        let mut got = vec![0i32; m * n];
+        let mut want = vec![1i32; m * n]; // different init: outputs must be fully written
+        i_matmul_int4(&x, &packed, bias.as_deref(), m, k, n, &mut got);
+        i_matmul_int4_ref(&x, &packed, bias.as_deref(), m, k, n, &mut want);
+        assert_eq!(got, want, "trial {trial}: m={m} k={k} n={n} bias={}", bias.is_some());
+    }
+}
+
+#[test]
+fn odd_k_tail_high_nibble_is_zero_and_harmless() {
+    // An odd contraction depth leaves the final packed byte's high
+    // nibble zero; the kernel's zero stand-in activation for that lane
+    // must not perturb the result whatever the (ignored) activation
+    // memory beyond the row would have held.
+    let mut rng = Rng::new(0x0DD);
+    for &k in &[1usize, 3, 5, 7, 31] {
+        let n = 6;
+        let w4: Vec<i32> = (0..k * n).map(|_| rng.range_i64(-8, 7) as i32).collect();
+        let packed = pack_int4(&w4, k, n);
+        // the tail byte row holds only the low nibble
+        for j in 0..n {
+            let tail = packed[(k / 2) * n + j];
+            assert_eq!(tail >> 4, 0, "k={k}: odd-k tail high nibble must pack as zero");
+        }
+        assert_eq!(unpack_int4(&packed, k, n), w4, "k={k}: round trip");
+        let x: Vec<i32> = (0..k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let mut got = vec![0i32; n];
+        let mut want = vec![0i32; n];
+        i_matmul_int4(&x, &packed, None, 1, k, n, &mut got);
+        i_matmul_int4_ref(&x, &packed, None, 1, k, n, &mut want);
+        assert_eq!(got, want, "k={k}");
+    }
+}
+
+#[test]
+fn fused_epilogues_match_reference_and_unfused_apply() {
+    let mut rng = Rng::new(0x0E91);
+    for trial in 0..100 {
+        let m = 1 + rng.below(8) as usize;
+        let k = 1 + rng.below(25) as usize;
+        let n = 1 + rng.below(12) as usize;
+        let x = random_activations(&mut rng, m, k);
+        let packed = random_packed(&mut rng, k, n);
+        let bias: Vec<i32> = (0..n).map(|_| rng.range_i64(-500, 500) as i32).collect();
+        // the INT4 requantize path: the 2^4-scaled dyadic restores the
+        // INT8 accumulator scale
+        let dy = int4_readout_dyadic(Dyadic::approx16(0.0001 + rng.f64() * 0.1));
+        for epi in [Epilogue::Requant(dy), Epilogue::Rescale(dy)] {
+            let mut fused = vec![0i32; m * n];
+            let mut reference = vec![0i32; m * n];
+            let mut unfused = vec![0i32; m * n];
+            i_matmul_int4_epilogue(&x, &packed, Some(&bias), m, k, n, epi, &mut fused);
+            i_matmul_int4_ref_epilogue(&x, &packed, Some(&bias), m, k, n, epi, &mut reference);
+            i_matmul_int4(&x, &packed, Some(&bias), m, k, n, &mut unfused);
+            epi.apply(&mut unfused);
+            assert_eq!(fused, reference, "trial {trial}: fused packed vs fused reference");
+            assert_eq!(fused, unfused, "trial {trial}: fusion must be numerically invisible");
+        }
+    }
+}
+
+#[test]
+fn tiled_and_par_variants_are_bit_exact_with_serial() {
+    let mut rng = Rng::new(0x7115);
+    let (m, k, n) = (37, 29, 19); // awkward shapes: uneven tiles, odd k
+    let x = random_activations(&mut rng, m, k);
+    let packed = random_packed(&mut rng, k, n);
+    let bias: Vec<i32> = (0..n).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+    let mut serial = vec![0i32; m * n];
+    i_matmul_int4(&x, &packed, Some(&bias), m, k, n, &mut serial);
+    for threads in [1, 2, 3, 8, 64] {
+        let mut tiled = vec![0i32; m * n];
+        i_matmul_int4_tiled(threads, &x, &packed, Some(&bias), m, k, n, &mut tiled);
+        assert_eq!(tiled, serial, "threads={threads}");
+    }
+    let mut par = vec![0i32; m * n];
+    i_matmul_int4_par(&x, &packed, Some(&bias), m, k, n, &mut par);
+    assert_eq!(par, serial);
+    let epi = Epilogue::Requant(int4_readout_dyadic(Dyadic::approx16(0.003)));
+    let mut serial_epi = serial.clone();
+    epi.apply(&mut serial_epi);
+    for threads in [2, 5] {
+        let mut tiled = vec![0i32; m * n];
+        i_matmul_int4_epilogue_tiled(threads, &x, &packed, Some(&bias), m, k, n, epi, &mut tiled);
+        assert_eq!(tiled, serial_epi, "threads={threads}");
+    }
+    let mut par_epi = vec![0i32; m * n];
+    i_matmul_int4_epilogue_par(&x, &packed, Some(&bias), m, k, n, epi, &mut par_epi);
+    assert_eq!(par_epi, serial_epi);
+}
+
+#[test]
+fn weight_and_bias_quantization_follow_the_int8_grid() {
+    // w8 = 16*w4 on-grid, round-half-up between cells, rails clamp
+    assert_eq!(
+        int4_from_int8(&[0, 15, 16, 24, -24, -25, 127, -128]),
+        vec![0, 1, 1, 2, -1, -2, 7, -8]
+    );
+    // biases divide by 16 with the same rounding but keep full range
+    assert_eq!(bias_int4(&[0, 16, -16, 1000, -1000]), vec![0, 1, -1, 63, -62]);
+    // every quantized weight packs (nibble range is guaranteed)
+    let mut rng = Rng::new(0x9);
+    let w8: Vec<i32> = (0..64).map(|_| rng.range_i64(-127, 127) as i32).collect();
+    let w4 = int4_from_int8(&w8);
+    assert!(w4.iter().all(|&v| (-8..=7).contains(&v)));
+    let packed = pack_int4(&w4, 8, 8);
+    assert_eq!(unpack_int4(&packed, 8, 8), w4);
+}
+
+#[test]
+fn readout_dyadic_scaling_is_exact_for_representable_shifts() {
+    // dy4 = dy << 4 when dy has headroom in its shift; the fused
+    // requantize of a 16x-smaller accumulator is then bit-exact with
+    // the INT8 path (the identity the whole INT4 tier rests on)
+    let dy = Dyadic::approx16(0.0043);
+    let dy4 = int4_readout_dyadic(dy);
+    assert_eq!(dy4.b, dy.b);
+    assert_eq!(dy4.c, dy.c - INT4_SHIFT);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "contraction too deep")]
+fn accumulator_width_guard_trips_on_unsafe_depth_in_debug() {
+    // k beyond 2^31 / (128*8) could overflow the INT32 accumulator at
+    // the rails; the packed kernel refuses it under debug_assertions
+    let k = (i32::MAX as usize) / (128 * 8) + 1;
+    let x = vec![0i32; k];
+    let w4 = vec![0i32; k];
+    let packed = pack_int4(&w4, k, 1);
+    let mut out = vec![0i32; 1];
+    i_matmul_int4(&x, &packed, None, 1, k, 1, &mut out);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "INT8 range")]
+fn activation_range_guard_trips_in_debug() {
+    let packed = pack_int4(&[1, 1], 2, 1);
+    let mut out = vec![0i32; 1];
+    i_matmul_int4(&[200, -200], &packed, None, 1, 2, 1, &mut out);
+}

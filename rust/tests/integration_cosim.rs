@@ -116,6 +116,7 @@ fn cross_model_outputs_are_deterministic_across_pools_and_attention_modes() {
                         padded_len: t.len(),
                         cost: t.len() as u64,
                         submitted: Instant::now(),
+                        origin: None,
                         reply: tx,
                     }
                 })

@@ -155,6 +155,7 @@ fn mixed_preset_traffic_shares_converge_to_weights() {
                     padded_len: 8,
                     cost: 8,
                     submitted: Instant::now(),
+                    origin: None,
                     reply: tx,
                 },
                 m,
@@ -235,6 +236,7 @@ fn heavy_model_is_not_starved_by_a_flood_of_cheap_traffic() {
             padded_len: len.div_ceil(8) * 8,
             cost: (len.div_ceil(8) * 8) as u64,
             submitted: Instant::now(),
+            origin: None,
             reply: tx,
         };
         (req, rx)
